@@ -1,0 +1,73 @@
+//! Machine-study example: pure-simulator sweep over scales, algorithms,
+//! placements and compression — the knobs §2.3 discusses — without
+//! touching PJRT. Fast enough to run on every change.
+//!
+//! Run: `cargo run --release --example scaling_sweep`
+
+use booster::collectives::{bucketed_allreduce_time, Algo, CollectiveModel, Compression};
+use booster::topology::Topology;
+use booster::train::timeline::TimelineModel;
+use booster::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let topo = Topology::juwels_booster();
+    let model = CollectiveModel::new(&topo);
+
+    // A ResNet-50-sized gradient set.
+    let grads = vec![100e6f64];
+
+    println!("allreduce of 100 MB gradients on JUWELS Booster (DragonFly+):\n");
+    println!(
+        "{:>6} | {:>12} {:>12} {:>12} | {:>12} {:>12}",
+        "GPUs", "ring", "halv-doubl", "hierarch", "hier+fp16", "spread-hier"
+    );
+    for n in [8usize, 32, 128, 512, 1024] {
+        let compact = topo.first_gpus(n);
+        let spread = topo.spread_gpus(n);
+        let mut row = format!("{n:>6} |");
+        for algo in [Algo::Ring, Algo::HalvingDoubling, Algo::Hierarchical] {
+            let t = bucketed_allreduce_time(&model, &compact, &grads, 64e6, Compression::None, algo)
+                .map_err(anyhow::Error::msg)?;
+            row.push_str(&format!(" {:>10.2}ms", t * 1e3));
+        }
+        row.push_str(" |");
+        let fp16 = bucketed_allreduce_time(
+            &model,
+            &compact,
+            &grads,
+            64e6,
+            Compression::Fp16,
+            Algo::Hierarchical,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let sp = bucketed_allreduce_time(
+            &model,
+            &spread,
+            &grads,
+            64e6,
+            Compression::None,
+            Algo::Hierarchical,
+        )
+        .map_err(anyhow::Error::msg)?;
+        row.push_str(&format!(" {:>10.2}ms {:>10.2}ms", fp16 * 1e3, sp * 1e3));
+        println!("{row}");
+    }
+
+    println!("\nweak-scaling efficiency of a BERT-like training step:\n");
+    let sim = TimelineModel::amp_defaults(&topo);
+    let mut rng = Rng::seed_from(0);
+    let flops = 3.0 * 343e9 * 24.0; // fwd+bwd, batch 24 sequences
+    let grad = vec![335e6 * 4.0];
+    let tp1 = sim
+        .throughput(&topo.first_gpus(1), flops, 24, &grad, &mut rng)
+        .map_err(anyhow::Error::msg)?;
+    println!("{:>6} {:>14} {:>12}", "GPUs", "seq/s", "efficiency");
+    for n in [1usize, 8, 64, 256, 1024, 3744] {
+        let tp = sim
+            .throughput(&topo.first_gpus(n), flops, 24, &grad, &mut rng)
+            .map_err(anyhow::Error::msg)?;
+        println!("{n:>6} {tp:>14.1} {:>11.1}%", 100.0 * tp / (tp1 * n as f64));
+    }
+    println!("\n(hierarchical allreduce + DragonFly+ keep the full machine >70% efficient)");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Domain example: train the convLSTM forecaster on the advection–
+//! diffusion ERA5 analog and beat the persistence baseline (§3.2, Fig. 3).
+//!
+//! Run: `cargo run --release --example weather_forecast -- [steps]`
+
+use booster::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(150);
+    let engine = Engine::cpu().map_err(anyhow::Error::msg)?;
+    println!("training convLSTM forecaster for {steps} steps ...");
+    let trainer = booster::weather::train_forecaster(&engine, steps, 3).map_err(anyhow::Error::msg)?;
+    let eval = booster::weather::evaluate(&engine, &trainer, 8, 1234).map_err(anyhow::Error::msg)?;
+
+    println!("\nlast context frame (2-m temperature):");
+    print!("{}", booster::weather::render_field(&eval.example.0, eval.h, eval.w));
+    println!("\ntruth at max lead:");
+    print!("{}", booster::weather::render_field(&eval.example.1, eval.h, eval.w));
+    println!("\nconvLSTM forecast at max lead:");
+    print!("{}", booster::weather::render_field(&eval.example.2, eval.h, eval.w));
+
+    println!("\nRMSE by lead time (2-m temperature):");
+    println!("{:>6} {:>12} {:>12}", "lead", "convLSTM", "persistence");
+    let mut model_wins = 0;
+    for (i, (m, p)) in eval
+        .model_rmse
+        .iter()
+        .zip(&eval.persistence_rmse)
+        .enumerate()
+    {
+        println!("{:>6} {:>12.4} {:>12.4}", i + 1, m, p);
+        if m < p {
+            model_wins += 1;
+        }
+    }
+    println!(
+        "\nconvLSTM beats persistence at {model_wins}/{} lead times",
+        eval.model_rmse.len()
+    );
+    assert!(
+        model_wins * 2 >= eval.model_rmse.len(),
+        "a trained forecaster must at least match persistence on half the leads"
+    );
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT lowering: JAX/Pallas models -> HLO text + metadata for the rust
+runtime.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For every model in `model.registry()` this writes:
+
+    artifacts/<name>.init.hlo.txt
+    artifacts/<name>.grad_step.hlo.txt
+    artifacts/<name>.apply_update.hlo.txt
+    artifacts/<name>.predict.hlo.txt
+    artifacts/<name>.meta.json     (ABI: param/opt-state names+shapes,
+                                    input specs, optimizer, FLOP estimate)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models a,b | all]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(m, out_dir):
+    """Lower the four ABI functions of model `m`; returns metadata dict."""
+    p_defs = m.param_defs()
+    o_defs = m.opt_state_defs()
+    p_specs = [spec(s) for _, s in p_defs]
+    o_specs = [spec(s) for _, s in o_defs]
+    (x_shape, x_dtype) = m.x_spec()
+    (y_shape, y_dtype) = m.y_spec()
+    x_s, y_s = spec(x_shape, x_dtype), spec(y_shape, y_dtype)
+    lr_s = spec((), jnp.float32)
+    seed_s = spec((), jnp.uint32)
+
+    files = {}
+
+    def emit(fn_name, fn, arg_specs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{m.name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[fn_name] = fname
+        print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+
+    emit("init", m.init_fn(), [seed_s])
+    emit("grad_step", m.grad_step_fn(), p_specs + [x_s, y_s])
+    emit("apply_update", m.apply_update_fn(), p_specs + o_specs + p_specs + [lr_s])
+    emit("predict", m.predict_fn(), p_specs + [x_s])
+
+    def dt_name(dt):
+        return jnp.dtype(dt).name
+
+    return {
+        "name": m.name,
+        "optimizer": m.optimizer,
+        "batch": m.batch,
+        "params": [{"name": n, "shape": list(s)} for n, s in p_defs],
+        "opt_state": [{"name": n, "shape": list(s)} for n, s in o_defs],
+        "x": {"shape": list(x_shape), "dtype": dt_name(x_dtype)},
+        "y": {"shape": list(y_shape), "dtype": dt_name(y_dtype)},
+        "n_params": m.n_params(),
+        "flops_per_step": m.flops_per_step(),
+        "hlo": files,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="default",
+        help="comma list, 'all', or 'default' (all except *_paper/*_e2e "
+        "heavyweights, which lower on demand)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    reg = registry()
+    if args.models == "all":
+        names = list(reg)
+    elif args.models == "default":
+        names = [n for n in reg if not n.endswith("_paper")]
+    else:
+        names = [n.strip() for n in args.models.split(",") if n.strip()]
+        unknown = [n for n in names if n not in reg]
+        if unknown:
+            sys.exit(f"unknown models: {unknown}; available: {list(reg)}")
+
+    for name in names:
+        print(f"lowering {name} ...")
+        meta = lower_model(reg[name], args.out_dir)
+        with open(os.path.join(args.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+    print(f"wrote {len(names)} models to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

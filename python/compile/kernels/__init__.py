@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (interpret=True on CPU; see DESIGN.md §6 for the
+CUDA -> TPU hardware adaptation rationale)."""
+
+from .compress import fp16_roundtrip
+from .conv2d import conv2d
+from .convlstm import convlstm_gates
+from .matmul import linear, matmul
+from .optimizer import novograd_update, sgd_momentum
+
+__all__ = [
+    "conv2d",
+    "convlstm_gates",
+    "fp16_roundtrip",
+    "linear",
+    "matmul",
+    "novograd_update",
+    "sgd_momentum",
+]

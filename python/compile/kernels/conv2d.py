@@ -1,0 +1,41 @@
+"""L1: conv2d as im2col feeding the Pallas GEMM.
+
+cuDNN's fastest Tensor-Core path is implicit GEMM: lower the convolution to
+a matrix multiply and run it on the systolic array. We do the same for the
+MXU — patch extraction is cheap data movement handled by XLA, the FLOPs all
+flow through `matmul.matmul`, which is the Pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def im2col(x, kh, kw):
+    """Extract (kh x kw) SAME-padded patches.
+
+    x: (B, H, W, C) -> (B, H, W, kh*kw*C); patch channel order is
+    row-major over (dy, dx, c), matching a HWIO filter reshape.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(x, w):
+    """NHWC conv, stride 1, SAME padding, via im2col + Pallas GEMM.
+
+    x: (B, H, W, Cin), w: (Kh, Kw, Cin, Cout) -> (B, H, W, Cout).
+    """
+    b, h, wd, cin = x.shape
+    kh, kw, cin_w, cout = w.shape
+    assert cin == cin_w, (x.shape, w.shape)
+    patches = im2col(x, kh, kw).reshape(b * h * wd, kh * kw * cin)
+    w2 = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(patches, w2)
+    return out.reshape(b, h, wd, cout)

@@ -1,0 +1,131 @@
+"""L1: fused convLSTM gate kernel.
+
+The weather model (§3.2, Shi et al. convLSTM) spends its non-GEMM time in
+the gate nonlinearities. cuDNN fuses the RNN pointwise stage; the TPU
+translation is a single VPU pass that reads the four pre-activation gate
+tensors while they are still in VMEM and writes (h, c) without
+materializing the intermediate activations in HBM.
+
+The kernel is pure elementwise work over a flattened layout, blocked in
+1D tiles (8 x 128-multiple = VPU lane-friendly).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _gates_kernel(zi_ref, zf_ref, zg_ref, zo_ref, c_ref, h_out_ref, c_out_ref):
+    zi, zf, zg, zo = zi_ref[...], zf_ref[...], zg_ref[...], zo_ref[...]
+    c_prev = c_ref[...]
+    one = jnp.float32(1.0)
+    i = one / (one + jnp.exp(-zi))
+    f = one / (one + jnp.exp(-zf))
+    g = jnp.tanh(zg)
+    o = one / (one + jnp.exp(-zo))
+    c = f * c_prev + i * g
+    h_out_ref[...] = o * jnp.tanh(c)
+    c_out_ref[...] = c
+
+
+def _gates_bwd_kernel(
+    zi_ref, zf_ref, zg_ref, zo_ref, c_ref, dh_ref, dc_out_ref,
+    dzi_ref, dzf_ref, dzg_ref, dzo_ref, dc_prev_ref,
+):
+    """Fused backward pass: recomputes the gates from the saved
+    pre-activations (cheaper than saving six activation tensors) and emits
+    all five cotangents in one VPU pass."""
+    one = jnp.float32(1.0)
+    i = one / (one + jnp.exp(-zi_ref[...]))
+    f = one / (one + jnp.exp(-zf_ref[...]))
+    g = jnp.tanh(zg_ref[...])
+    o = one / (one + jnp.exp(-zo_ref[...]))
+    c_prev = c_ref[...]
+    c = f * c_prev + i * g
+    tc = jnp.tanh(c)
+    dh = dh_ref[...]
+    do = dh * tc
+    dc = dc_out_ref[...] + dh * o * (one - tc * tc)
+    di = dc * g
+    df = dc * c_prev
+    dg = dc * i
+    dzi_ref[...] = di * i * (one - i)
+    dzf_ref[...] = df * f * (one - f)
+    dzg_ref[...] = dg * (one - g * g)
+    dzo_ref[...] = do * o * (one - o)
+    dc_prev_ref[...] = dc * f
+
+
+@jax.custom_vjp
+def convlstm_gates(zi, zf, zg, zo, c_prev):
+    """Fused gate math; all inputs share one shape. Returns (h, c).
+
+    Differentiable via a fused Pallas backward kernel."""
+    return _gates_fwd_impl(zi, zf, zg, zo, c_prev)
+
+
+def _gates_vjp_fwd(zi, zf, zg, zo, c_prev):
+    out = _gates_fwd_impl(zi, zf, zg, zo, c_prev)
+    return out, (zi, zf, zg, zo, c_prev)
+
+
+def _gates_vjp_bwd(res, cot):
+    zi, zf, zg, zo, c_prev = res
+    dh, dc_out = cot
+    shape = zi.shape
+    n = zi.size
+    pad = (-n) % BLOCK
+    flat = []
+    for t in (zi, zf, zg, zo, c_prev, dh, dc_out):
+        t = t.astype(jnp.float32).reshape(-1)
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        flat.append(t)
+    np_ = n + pad
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    outs = pl.pallas_call(
+        _gates_bwd_kernel,
+        grid=(np_ // BLOCK,),
+        in_specs=[spec] * 7,
+        out_specs=(spec,) * 5,
+        out_shape=tuple(
+            jax.ShapeDtypeStruct((np_,), jnp.float32) for _ in range(5)
+        ),
+        interpret=True,
+    )(*flat)
+    return tuple(o[:n].reshape(shape) for o in outs)
+
+
+convlstm_gates.defvjp(_gates_vjp_fwd, _gates_vjp_bwd)
+
+
+@jax.jit
+def _gates_fwd_impl(zi, zf, zg, zo, c_prev):
+    shape = zi.shape
+    n = zi.size
+    pad = (-n) % BLOCK
+    flat = []
+    for t in (zi, zf, zg, zo, c_prev):
+        t = t.astype(jnp.float32).reshape(-1)
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        flat.append(t)
+    np_ = n + pad
+    grid = (np_ // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    h, c = pl.pallas_call(
+        _gates_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ),
+        interpret=True,
+    )(*flat)
+    return h[:n].reshape(shape), c[:n].reshape(shape)

@@ -1,0 +1,111 @@
+"""L1: MXU-tiled Pallas matmul.
+
+The paper's compute hot-spot is cuBLAS/Tensor-Core GEMM. On TPU the same
+insight — feed a systolic matmul unit from fast on-chip memory at the right
+tile shape — becomes: block the GEMM into (bm x bk) @ (bk x bn) tiles that
+live in VMEM, march k as the innermost grid dimension, and accumulate in
+the output block, which Pallas keeps resident in VMEM across the k-steps.
+
+BlockSpec expresses the HBM<->VMEM schedule CUDA expresses with
+threadblocks + shared memory. interpret=True is mandatory on CPU PJRT
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run).
+
+VMEM budget at the default tiles (f32): (128*128)*3 * 4 B = 192 KiB, far
+under the ~16 MiB/core budget; the tiles are MXU-multiple (128) so the
+systolic array would run at full occupancy on real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly tile sizes.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into o_tile.
+
+    The output block is revisited for every k (index_map ignores k), so it
+    acts as the VMEM accumulator; we zero it at k == 0.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, m0, m1):
+    s0, s1 = x.shape
+    p0, p1 = (-s0) % m0, (-s1) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """`x @ w` through the Pallas kernel; pads ragged shapes to the tile
+    grid and slices the result back. Differentiable: the VJP routes the
+    two backward GEMMs (dX = dO @ Wᵀ, dW = Xᵀ @ dO) through the same
+    Pallas kernel, so fwd and bwd share the MXU schedule.
+
+    x: (M, K), w: (K, N) -> (M, N), f32.
+    """
+    return _matmul_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, do):
+    x, w = res
+    dx = _matmul_impl(do, w.T)
+    dw = _matmul_impl(x.T, do)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_impl(x, w, *, bm=BM, bn=BN, bk=BK):
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape,
+        w.shape,
+    )
+    m, k_dim = x.shape
+    _, n = w.shape
+    # Shrink tiles for small problems (interpret-mode grids are cheap but
+    # padding waste isn't).
+    bm_, bn_, bk_ = min(bm, max(8, m)), min(bn, max(8, n)), min(bk, max(8, k_dim))
+    xp = _pad_to(x.astype(jnp.float32), bm_, bk_)
+    wp = _pad_to(w.astype(jnp.float32), bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk_
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def linear(x, w, b):
+    """Dense layer on the Pallas GEMM: x @ w + b."""
+    return matmul(x, w) + b[None, :]

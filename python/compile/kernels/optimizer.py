@@ -1,0 +1,109 @@
+"""L1: fused optimizer update kernels.
+
+The apex-style fused optimizer insight: parameter updates are pure
+streaming VPU work — one pass over (p, m, g), no reason to materialize
+intermediates. Two kernels:
+
+* `sgd_momentum` — heavy-ball SGD, used by the vision/transfer models.
+* `novograd_update` — the elementwise stage of NovoGrad (§3.3 uses
+  NovoGrad for BigEarthNet). The per-layer gradient-norm scalar is
+  computed at L2 (it is a reduction, fused by XLA) and fed to the kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _flatten_pad(ts):
+    n = ts[0].size
+    pad = (-n) % BLOCK
+    out = []
+    for t in ts:
+        t = t.astype(jnp.float32).reshape(-1)
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        out.append(t)
+    return out, n, n + pad
+
+
+def _sgd_kernel(p_ref, m_ref, g_ref, lr_ref, mu_ref, p_out_ref, m_out_ref):
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    m_new = mu * m_ref[...] + g_ref[...]
+    p_out_ref[...] = p_ref[...] - lr * m_new
+    m_out_ref[...] = m_new
+
+
+@jax.jit
+def sgd_momentum(p, m, g, lr, mu):
+    """Fused heavy-ball step. p/m/g share a shape; lr/mu are scalars.
+
+    Returns (p_new, m_new)."""
+    shape = p.shape
+    (pf, mf, gf), n, np_ = _flatten_pad([p, m, g])
+    grid = (np_ // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    # Scalars ride along as tiny (1,)-blocks mapped to every grid step.
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    lr1 = jnp.asarray(lr, jnp.float32).reshape(1)
+    mu1 = jnp.asarray(mu, jnp.float32).reshape(1)
+    p_new, m_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, sspec, sspec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ),
+        interpret=True,
+    )(pf, mf, gf, lr1, mu1)
+    return p_new[:n].reshape(shape), m_new[:n].reshape(shape)
+
+
+def _novograd_kernel(
+    p_ref, m_ref, g_ref, s_ref, p_out_ref, m_out_ref
+):
+    # s packs (lr, beta1, denom, wd) for this layer.
+    lr, beta1, denom, wd = s_ref[0], s_ref[1], s_ref[2], s_ref[3]
+    d = g_ref[...] / denom + wd * p_ref[...]
+    m_new = beta1 * m_ref[...] + d
+    p_out_ref[...] = p_ref[...] - lr * m_new
+    m_out_ref[...] = m_new
+
+
+@jax.jit
+def novograd_update(p, m, g, v_new, lr, beta1, eps, wd):
+    """Elementwise NovoGrad stage given the already-updated second-moment
+    scalar `v_new` for this layer. Returns (p_new, m_new)."""
+    shape = p.shape
+    (pf, mf, gf), n, np_ = _flatten_pad([p, m, g])
+    denom = jnp.sqrt(v_new) + eps
+    s = jnp.stack(
+        [
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(beta1, jnp.float32),
+            denom.astype(jnp.float32),
+            jnp.asarray(wd, jnp.float32),
+        ]
+    )
+    grid = (np_ // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    sspec = pl.BlockSpec((4,), lambda i: (0,))
+    p_new, m_new = pl.pallas_call(
+        _novograd_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, sspec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ),
+        interpret=True,
+    )(pf, mf, gf, s)
+    return p_new[:n].reshape(shape), m_new[:n].reshape(shape)

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+Each function here is the semantic ground truth the L1 kernels in this
+package are tested against (pytest + hypothesis sweep shapes/dtypes and
+assert_allclose). They are also used directly by `model.py` when a
+configuration cannot satisfy a kernel's tiling constraints.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain matrix multiplication with f32 accumulation."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def conv2d_ref(x, w):
+    """NHWC conv with 3x3 (or any odd k) HWIO filter, stride 1, SAME pad.
+
+    x: (B, H, W, Cin), w: (Kh, Kw, Cin, Cout) -> (B, H, W, Cout).
+    """
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def convlstm_gates_ref(zi, zf, zg, zo, c_prev):
+    """Fused convLSTM gate math (Shi et al. 2015, eq. 3, without peepholes).
+
+    Inputs are the four pre-activation gate tensors (conv outputs already
+    summed over input+hidden paths, bias included) and the previous cell
+    state; returns (h, c).
+    """
+    i = jnp.asarray(1.0, zi.dtype) / (1.0 + jnp.exp(-zi))
+    f = jnp.asarray(1.0, zf.dtype) / (1.0 + jnp.exp(-zf))
+    g = jnp.tanh(zg)
+    o = jnp.asarray(1.0, zo.dtype) / (1.0 + jnp.exp(-zo))
+    c = f * c_prev + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def sgd_momentum_ref(p, m, g, lr, mu):
+    """Heavy-ball SGD: m' = mu*m + g ; p' = p - lr*m'."""
+    m_new = mu * m + g
+    return p - lr * m_new, m_new
+
+
+def novograd_ref(p, m, g, gnorm2, v_prev, lr, beta1, beta2, eps, wd):
+    """NovoGrad (Ginsburg et al. 2020) per-layer update.
+
+    gnorm2 is ||g||^2 for this layer (computed once per tensor); v_prev the
+    layer's second-moment scalar. Returns (p', m', v').
+    """
+    v_new = jnp.where(
+        v_prev == 0.0, gnorm2, beta2 * v_prev + (1.0 - beta2) * gnorm2
+    )
+    denom = jnp.sqrt(v_new) + eps
+    d = g / denom + wd * p
+    m_new = beta1 * m + d
+    return p - lr * m_new, m_new, v_new
+
+
+def fp16_compress_ref(x):
+    """FP16 wire round-trip: what Horovod's fp16 compression does to f32
+    gradients before averaging."""
+    return x.astype(jnp.float16).astype(jnp.float32)

@@ -1,0 +1,624 @@
+"""L2: the JAX model zoo (build-time only; never on the request path).
+
+Every experiment in the paper maps to one model family here:
+
+* `CnnClassifier`  — the BiT/ResNet analog for transfer learning (§3.1:
+  Fig. 2 few-shot CIFAR transfer, Table 1 COVIDx fine-tuning).
+* `MultilabelCnn`  — the multispectral BigEarthNet classifier (§3.3),
+  trained with NovoGrad like the paper.
+* `ConvLstmForecaster` — the ERA5 weather model (§3.2, Shi et al. 2015).
+* `TransformerLm`  — the NLP/MLPerf-transformer stand-in and the
+  end-to-end training driver.
+* `RnaCnn`         — the CoCoNet-style RNA contact CNN (§3.4).
+
+All dense/conv FLOPs flow through the L1 Pallas kernels
+(`kernels.matmul`, `kernels.conv2d`, `kernels.convlstm_gates`); optimizer
+updates through the fused `kernels.sgd_momentum` / `kernels.novograd_update`.
+
+ABI (positional, mirrored by `aot.py` into `*.meta.json` — the rust
+runtime relies on this ordering):
+
+    init(seed u32[])                        -> params ++ opt_state
+    grad_step(params..., x, y)              -> grads ++ (loss,)
+    apply_update(params..., opt..., grads..., lr) -> params ++ opt
+    predict(params..., x)                   -> (out,)
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+# Optimizer hyperparameters baked at lowering time (the paper's choices:
+# SGD-momentum for vision transfer, NovoGrad for BigEarthNet following
+# Ginsburg et al. 2020).
+SGD_MOMENTUM = 0.9
+NOVOGRAD_BETA1 = 0.95
+NOVOGRAD_BETA2 = 0.98
+NOVOGRAD_EPS = 1e-8
+NOVOGRAD_WD = 1e-4
+
+
+# --------------------------------------------------------------------------
+# Shared layers
+# --------------------------------------------------------------------------
+
+
+def _he_fan_in(shape):
+    if len(shape) == 4:  # HWIO conv
+        return shape[0] * shape[1] * shape[2]
+    if len(shape) == 2:
+        return shape[0]
+    return max(1, shape[0] if shape else 1)
+
+
+def init_param(key, shape):
+    """He-normal for weights; zeros for biases/scales handled by caller."""
+    std = math.sqrt(2.0 / _he_fan_in(shape))
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def dense(x2d, w, b):
+    return K.matmul(x2d, w) + b[None, :]
+
+
+def log_softmax(z):
+    z = z - jax.lax.stop_gradient(z.max(axis=-1, keepdims=True))
+    return z - jnp.log(jnp.exp(z).sum(axis=-1, keepdims=True))
+
+
+def softmax_xent(logits, onehot):
+    return -(onehot * log_softmax(logits)).sum(axis=-1).mean()
+
+
+def bce_with_logits(logits, targets, pos_weight=1.0):
+    log_p = jax.nn.log_sigmoid(logits)
+    log_np = jax.nn.log_sigmoid(-logits)
+    per = -(pos_weight * targets * log_p + (1.0 - targets) * log_np)
+    return per.mean()
+
+
+# --------------------------------------------------------------------------
+# Model base
+# --------------------------------------------------------------------------
+
+
+class Model:
+    """Common ABI; subclasses define param_defs/init/predict/loss."""
+
+    name: str
+    optimizer: str = "sgd"  # or "novograd"
+    batch: int = 16
+
+    def param_defs(self):
+        raise NotImplementedError
+
+    def x_spec(self):
+        """(shape, dtype) of one input batch."""
+        raise NotImplementedError
+
+    def y_spec(self):
+        raise NotImplementedError
+
+    def init(self, key):
+        """List of param arrays matching param_defs order."""
+        raise NotImplementedError
+
+    def predict(self, params, x):
+        raise NotImplementedError
+
+    def loss(self, params, x, y):
+        raise NotImplementedError
+
+    def flops_per_step(self):
+        """Fwd+bwd FLOPs for one batch (2*MACs fwd, x3 for bwd)."""
+        return 3.0 * self.forward_flops()
+
+    def forward_flops(self):
+        raise NotImplementedError
+
+    # ---- derived ABI -----------------------------------------------------
+
+    def opt_state_defs(self):
+        defs = [("mom." + n, s) for n, s in self.param_defs()]
+        if self.optimizer == "novograd":
+            defs += [("v." + n, ()) for n, _ in self.param_defs()]
+        return defs
+
+    def n_params(self):
+        return sum(math.prod(s) if s else 1 for _, s in self.param_defs())
+
+    def init_fn(self):
+        """(seed) -> params ++ opt_state (zeros)."""
+        n_opt = len(self.opt_state_defs())
+
+        def f(seed):
+            key = jax.random.PRNGKey(seed)
+            params = self.init(key)
+            opt = [jnp.zeros(s, jnp.float32) for _, s in self.opt_state_defs()]
+            return tuple(params) + tuple(opt)
+
+        del n_opt
+        return f
+
+    def grad_step_fn(self):
+        """(params..., x, y) -> grads ++ (loss,)."""
+        np_ = len(self.param_defs())
+
+        def f(*args):
+            params = list(args[:np_])
+            x, y = args[np_], args[np_ + 1]
+            loss, grads = jax.value_and_grad(
+                lambda ps: self.loss(ps, x, y)
+            )(params)
+            return tuple(grads) + (loss,)
+
+        return f
+
+    def apply_update_fn(self):
+        """(params..., opt..., grads..., lr) -> params ++ opt."""
+        np_ = len(self.param_defs())
+
+        def f(*args):
+            params = list(args[:np_])
+            if self.optimizer == "sgd":
+                mom = list(args[np_ : 2 * np_])
+                grads = list(args[2 * np_ : 3 * np_])
+                lr = args[3 * np_]
+                new_p, new_m = [], []
+                for p, m, g in zip(params, mom, grads):
+                    pn, mn = K.sgd_momentum(p, m, g, lr, SGD_MOMENTUM)
+                    new_p.append(pn)
+                    new_m.append(mn)
+                return tuple(new_p) + tuple(new_m)
+            # novograd: opt = mom ++ v
+            mom = list(args[np_ : 2 * np_])
+            v = list(args[2 * np_ : 3 * np_])
+            grads = list(args[3 * np_ : 4 * np_])
+            lr = args[4 * np_]
+            new_p, new_m, new_v = [], [], []
+            for p, m, vv, g in zip(params, mom, v, grads):
+                gnorm2 = jnp.sum(g.astype(jnp.float32) ** 2)
+                v_new = jnp.where(
+                    vv == 0.0,
+                    gnorm2,
+                    NOVOGRAD_BETA2 * vv + (1.0 - NOVOGRAD_BETA2) * gnorm2,
+                )
+                pn, mn = K.novograd_update(
+                    p, m, g, v_new, lr, NOVOGRAD_BETA1, NOVOGRAD_EPS, NOVOGRAD_WD
+                )
+                new_p.append(pn)
+                new_m.append(mn)
+                new_v.append(v_new)
+            return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+        return f
+
+    def predict_fn(self):
+        np_ = len(self.param_defs())
+
+        def f(*args):
+            params = list(args[:np_])
+            x = args[np_]
+            return (self.predict(params, x),)
+
+        return f
+
+
+# --------------------------------------------------------------------------
+# CNN classifier (BiT / ResNet analog)
+# --------------------------------------------------------------------------
+
+
+class CnnClassifier(Model):
+    """Small residual CNN: stem conv + residual blocks + GAP + linear head.
+
+    Body params are shared across class-count variants so the rust transfer
+    harness can copy `stem.*`/`block*.*` literals from a pretrained
+    checkpoint and re-initialize only `head.*` — exactly the BiT transfer
+    recipe of §3.1.
+    """
+
+    def __init__(self, name, h=12, w=12, cin=3, feat=16, blocks=2,
+                 classes=10, batch=16):
+        self.name = name
+        self.h, self.w, self.cin = h, w, cin
+        self.feat, self.blocks, self.classes = feat, blocks, classes
+        self.batch = batch
+        self.optimizer = "sgd"
+
+    def param_defs(self):
+        f = self.feat
+        defs = [("stem.w", (3, 3, self.cin, f)), ("stem.b", (f,))]
+        for i in range(self.blocks):
+            defs += [
+                (f"block{i}.w1", (3, 3, f, f)),
+                (f"block{i}.b1", (f,)),
+                (f"block{i}.w2", (3, 3, f, f)),
+                (f"block{i}.b2", (f,)),
+            ]
+        defs += [("head.w", (f, self.classes)), ("head.b", (self.classes,))]
+        return defs
+
+    def x_spec(self):
+        return ((self.batch, self.h, self.w, self.cin), jnp.float32)
+
+    def y_spec(self):
+        return ((self.batch, self.classes), jnp.float32)
+
+    def init(self, key):
+        out = []
+        for n, s in self.param_defs():
+            key, sub = jax.random.split(key)
+            if n.endswith(".b"):
+                out.append(jnp.zeros(s, jnp.float32))
+            else:
+                out.append(init_param(sub, s))
+        return out
+
+    def features(self, params, x):
+        """Body only (pooled features) — reused by predict and by the
+        multilabel subclass."""
+        i = 0
+
+        def take():
+            nonlocal i
+            v = params[i]
+            i += 1
+            return v
+
+        w, b = take(), take()
+        h = jax.nn.relu(K.conv2d(x, w) + b)
+        for _ in range(self.blocks):
+            w1, b1, w2, b2 = take(), take(), take(), take()
+            z = jax.nn.relu(K.conv2d(h, w1) + b1)
+            z = K.conv2d(z, w2) + b2
+            h = jax.nn.relu(h + z)
+        return h.mean(axis=(1, 2)), take(), take()
+
+    def predict(self, params, x):
+        feats, hw, hb = self.features(params, x)
+        return dense(feats, hw, hb)
+
+    def loss(self, params, x, y):
+        return softmax_xent(self.predict(params, x), y)
+
+    def forward_flops(self):
+        f = self.feat
+        hw = self.h * self.w
+        macs = hw * 9 * self.cin * f  # stem
+        macs += self.blocks * 2 * hw * 9 * f * f
+        macs += f * self.classes
+        return 2.0 * macs * self.batch
+
+
+class MultilabelCnn(CnnClassifier):
+    """BigEarthNet analog: 12 spectral bands in, 19 sigmoid outputs,
+    NovoGrad optimizer (§3.3)."""
+
+    def __init__(self, name, h=12, w=12, cin=12, feat=16, blocks=2,
+                 classes=19, batch=16, pos_weight=2.0):
+        super().__init__(name, h, w, cin, feat, blocks, classes, batch)
+        self.optimizer = "novograd"
+        self.pos_weight = pos_weight
+
+    def loss(self, params, x, y):
+        return bce_with_logits(self.predict(params, x), y, self.pos_weight)
+
+
+# --------------------------------------------------------------------------
+# ConvLSTM weather forecaster (§3.2)
+# --------------------------------------------------------------------------
+
+
+class ConvLstmForecaster(Model):
+    """Shi et al. convLSTM encoder + autoregressive rollout.
+
+    The paper's setup: input/output tensors 12x56x92x3 (12 h of 2-m
+    temperature, cloud cover, 850 hPa temperature over Europe); 429 251
+    parameters. The default experiment config is spatially downscaled for
+    the CPU substrate (DESIGN.md §5); `weather_paper` keeps the larger
+    hidden size.
+    """
+
+    def __init__(self, name, h=14, w=23, c=3, feat=8, t_in=6, t_out=6,
+                 batch=4):
+        self.name = name
+        self.h, self.w, self.c, self.feat = h, w, c, feat
+        self.t_in, self.t_out, self.batch = t_in, t_out, batch
+        self.optimizer = "sgd"
+
+    def param_defs(self):
+        f, c = self.feat, self.c
+        return [
+            ("wx", (3, 3, c, 4 * f)),
+            ("wh", (3, 3, f, 4 * f)),
+            ("b", (4 * f,)),
+            ("out.w", (f, c)),
+            ("out.b", (c,)),
+        ]
+
+    def x_spec(self):
+        return ((self.batch, self.t_in, self.h, self.w, self.c), jnp.float32)
+
+    def y_spec(self):
+        return ((self.batch, self.t_out, self.h, self.w, self.c), jnp.float32)
+
+    def init(self, key):
+        out = []
+        for n, s in self.param_defs():
+            key, sub = jax.random.split(key)
+            out.append(jnp.zeros(s, jnp.float32) if n.endswith("b") else init_param(sub, s))
+        return out
+
+    def _cell(self, params, hc, frame):
+        wx, wh, b = params[0], params[1], params[2]
+        h_st, c_st = hc
+        z = K.conv2d(frame, wx) + K.conv2d(h_st, wh) + b
+        f = self.feat
+        zi, zf, zg, zo = (
+            z[..., :f],
+            z[..., f : 2 * f],
+            z[..., 2 * f : 3 * f],
+            z[..., 3 * f :],
+        )
+        return K.convlstm_gates(zi, zf, zg, zo, c_st)
+
+    def _emit(self, params, h_st):
+        ow, ob = params[3], params[4]
+        b, hh, ww, f = h_st.shape
+        flat = K.matmul(h_st.reshape(b * hh * ww, f), ow) + ob[None, :]
+        return flat.reshape(b, hh, ww, self.c)
+
+    def predict(self, params, x):
+        """x: (B, T_in, H, W, C) -> (B, T_out, H, W, C) rollout."""
+        b = x.shape[0]
+        h0 = jnp.zeros((b, self.h, self.w, self.feat), jnp.float32)
+        c0 = jnp.zeros_like(h0)
+
+        def enc_step(hc, frame):
+            return self._cell(params, hc, frame), None
+
+        (h_st, c_st), _ = jax.lax.scan(
+            enc_step, (h0, c0), jnp.moveaxis(x, 1, 0)
+        )
+
+        def dec_step(carry, _):
+            h_st, c_st = carry
+            frame = self._emit(params, h_st)
+            h_st, c_st = self._cell(params, (h_st, c_st), frame)
+            return (h_st, c_st), frame
+
+        (_, _), frames = jax.lax.scan(
+            dec_step, (h_st, c_st), None, length=self.t_out
+        )
+        return jnp.moveaxis(frames, 0, 1)
+
+    def loss(self, params, x, y):
+        pred = self.predict(params, x)
+        return ((pred - y) ** 2).mean()
+
+    def forward_flops(self):
+        f, c = self.feat, self.c
+        hw = self.h * self.w
+        macs_cell = hw * 9 * (c + f) * 4 * f
+        macs = (self.t_in + self.t_out) * macs_cell + self.t_out * hw * f * c
+        return 2.0 * macs * self.batch
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (MLPerf transformer / GPT-analog; e2e driver)
+# --------------------------------------------------------------------------
+
+
+class TransformerLm(Model):
+    """Pre-LN causal transformer LM. Projections and MLPs run on the Pallas
+    GEMM; the attention einsums stay in XLA (they are batched small GEMMs
+    below the MXU tile size at these configs)."""
+
+    def __init__(self, name, vocab=512, d=128, heads=4, layers=2, seq=32,
+                 batch=8):
+        assert d % heads == 0
+        self.name = name
+        self.vocab, self.d, self.heads = vocab, d, heads
+        self.layers, self.seq, self.batch = layers, seq, batch
+        self.optimizer = "sgd"
+
+    def param_defs(self):
+        d = self.d
+        defs = [("embed", (self.vocab, d)), ("pos", (self.seq, d))]
+        for i in range(self.layers):
+            defs += [
+                (f"l{i}.ln1.s", (d,)),
+                (f"l{i}.ln1.b", (d,)),
+                (f"l{i}.wqkv", (d, 3 * d)),
+                (f"l{i}.bqkv", (3 * d,)),
+                (f"l{i}.wo", (d, d)),
+                (f"l{i}.bo", (d,)),
+                (f"l{i}.ln2.s", (d,)),
+                (f"l{i}.ln2.b", (d,)),
+                (f"l{i}.w1", (d, 4 * d)),
+                (f"l{i}.b1", (4 * d,)),
+                (f"l{i}.w2", (4 * d, d)),
+                (f"l{i}.b2", (d,)),
+            ]
+        defs += [
+            ("lnf.s", (d,)),
+            ("lnf.b", (d,)),
+            ("head.w", (d, self.vocab)),
+            ("head.b", (self.vocab,)),
+        ]
+        return defs
+
+    def x_spec(self):
+        return ((self.batch, self.seq), jnp.int32)
+
+    def y_spec(self):
+        return ((self.batch, self.seq), jnp.int32)
+
+    def init(self, key):
+        out = []
+        for n, s in self.param_defs():
+            key, sub = jax.random.split(key)
+            if n.endswith(".s"):
+                out.append(jnp.ones(s, jnp.float32))
+            elif n.endswith(".b") or n.endswith(".b1") or n.endswith(".b2") \
+                    or n.endswith("bqkv") or n.endswith("bo"):
+                out.append(jnp.zeros(s, jnp.float32))
+            elif n in ("embed", "pos"):
+                out.append(0.02 * jax.random.normal(sub, s, dtype=jnp.float32))
+            else:
+                out.append(init_param(sub, s))
+        return out
+
+    @staticmethod
+    def _ln(x, s, b):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * s + b
+
+    def predict(self, params, x):
+        b, s_len = x.shape
+        d, hn = self.d, self.heads
+        dh = d // hn
+        it = iter(params)
+
+        def take():
+            return next(it)
+
+        embed, pos = take(), take()
+        h = embed[x] + pos[None, :, :]
+        mask = jnp.tril(jnp.ones((s_len, s_len), jnp.float32))
+        neg = jnp.float32(-1e9)
+        for _ in range(self.layers):
+            ln1s, ln1b = take(), take()
+            wqkv, bqkv, wo, bo = take(), take(), take(), take()
+            ln2s, ln2b = take(), take()
+            w1, b1, w2, b2 = take(), take(), take(), take()
+            z = self._ln(h, ln1s, ln1b)
+            qkv = (K.matmul(z.reshape(b * s_len, d), wqkv) + bqkv).reshape(
+                b, s_len, 3, hn, dh
+            )
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            att = jnp.einsum("bihd,bjhd->bhij", q, k) / math.sqrt(dh)
+            att = att * mask[None, None] + (1.0 - mask[None, None]) * neg
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("bhij,bjhd->bihd", att, v).reshape(b * s_len, d)
+            h = h + (K.matmul(ctx, wo) + bo).reshape(b, s_len, d)
+            z = self._ln(h, ln2s, ln2b)
+            z2 = jax.nn.gelu(K.matmul(z.reshape(b * s_len, d), w1) + b1)
+            h = h + (K.matmul(z2, w2) + b2).reshape(b, s_len, d)
+        lnfs, lnfb = take(), take()
+        hw, hb = take(), take()
+        h = self._ln(h, lnfs, lnfb)
+        return (K.matmul(h.reshape(b * s_len, d), hw) + hb).reshape(
+            b, s_len, self.vocab
+        )
+
+    def loss(self, params, x, y):
+        """Next-token CE: predict y[:, 1:] from x[:, :-1] positions."""
+        logits = self.predict(params, x)
+        logp = log_softmax(logits[:, :-1, :])
+        tgt = y[:, 1:]
+        onehot = jax.nn.one_hot(tgt, self.vocab, dtype=jnp.float32)
+        return -(onehot * logp).sum(-1).mean()
+
+    def forward_flops(self):
+        d, s = self.d, self.seq
+        per_layer = s * (3 * d * d + d * d + 8 * d * d) + 2 * s * s * d
+        macs = self.layers * per_layer + 2 * s * d * self.vocab
+        return 2.0 * macs * self.batch
+
+
+# --------------------------------------------------------------------------
+# RNA contact CNN (§3.4, CoCoNet analog)
+# --------------------------------------------------------------------------
+
+
+class RnaCnn(Model):
+    """Shallow CNN over a (L, L, F) coupling-feature map -> contact logits.
+
+    Mirrors CoCoNet (Zerihun et al. 2020): the input features are DCA
+    couplings + covariance statistics computed from the MSA; the CNN
+    re-weights them with local structural context. Logits are symmetrized.
+    """
+
+    def __init__(self, name, l=24, feat_in=2, feat=8, depth=2, batch=8,
+                 pos_weight=4.0):
+        self.name = name
+        self.l, self.feat_in, self.feat = l, feat_in, feat
+        self.depth, self.batch = depth, batch
+        self.pos_weight = pos_weight
+        self.optimizer = "sgd"
+
+    def param_defs(self):
+        f = self.feat
+        defs = [("conv0.w", (3, 3, self.feat_in, f)), ("conv0.b", (f,))]
+        for i in range(1, self.depth):
+            defs += [(f"conv{i}.w", (3, 3, f, f)), (f"conv{i}.b", (f,))]
+        defs += [("out.w", (1, 1, f, 1)), ("out.b", (1,))]
+        return defs
+
+    def x_spec(self):
+        return ((self.batch, self.l, self.l, self.feat_in), jnp.float32)
+
+    def y_spec(self):
+        return ((self.batch, self.l, self.l), jnp.float32)
+
+    def init(self, key):
+        out = []
+        for n, s in self.param_defs():
+            key, sub = jax.random.split(key)
+            out.append(jnp.zeros(s, jnp.float32) if n.endswith(".b") else init_param(sub, s))
+        return out
+
+    def predict(self, params, x):
+        h = x
+        i = 0
+        for _ in range(self.depth):
+            h = jax.nn.relu(K.conv2d(h, params[i]) + params[i + 1])
+            i += 2
+        z = (K.conv2d(h, params[i]) + params[i + 1])[..., 0]
+        return 0.5 * (z + jnp.swapaxes(z, 1, 2))
+
+    def loss(self, params, x, y):
+        return bce_with_logits(self.predict(params, x), y, self.pos_weight)
+
+    def forward_flops(self):
+        f = self.feat
+        ll = self.l * self.l
+        macs = ll * 9 * self.feat_in * f + (self.depth - 1) * ll * 9 * f * f + ll * f
+        return 2.0 * macs * self.batch
+
+
+# --------------------------------------------------------------------------
+# Registry — concrete configs lowered by aot.py
+# --------------------------------------------------------------------------
+
+
+def registry():
+    """All model variants, keyed by artifact name."""
+    models = [
+        # §3.1 transfer: shared body, three heads. `cnn_pre` is the
+        # pretraining config (generic corpus, 20 classes).
+        CnnClassifier("cnn_pre", classes=20, batch=32),
+        CnnClassifier("cnn_cifar", classes=10, batch=16),
+        CnnClassifier("cnn_covid", classes=3, batch=16),
+        # §3.3 BigEarthNet analog.
+        MultilabelCnn("bigearth", batch=16),
+        # §3.2 weather (downscaled default + paper-scale hidden size).
+        ConvLstmForecaster("weather", h=14, w=23, feat=8, t_in=6, t_out=6,
+                           batch=4),
+        ConvLstmForecaster("weather_paper", h=28, w=46, feat=32, t_in=12,
+                           t_out=12, batch=2),
+        # Transformer: small test config + the e2e training driver config.
+        TransformerLm("transformer", vocab=256, d=64, heads=4, layers=2,
+                      seq=32, batch=8),
+        TransformerLm("transformer_e2e", vocab=2048, d=256, heads=8,
+                      layers=4, seq=64, batch=8),
+        # §3.4 RNA contacts.
+        RnaCnn("rna_cnn", l=24, feat=16, depth=3, batch=8),
+    ]
+    return {m.name: m for m in models}

@@ -1,0 +1,79 @@
+"""AOT pipeline: lowering produces parseable HLO text + complete metadata."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile.aot import lower_model, to_hlo_text
+from compile.model import CnnClassifier
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    m = CnnClassifier("aot_toy", h=6, w=6, feat=4, blocks=1, classes=3, batch=4)
+    meta = lower_model(m, str(out))
+    return m, meta, out
+
+
+class TestLowering:
+    def test_all_four_functions_emitted(self, lowered):
+        m, meta, out = lowered
+        assert set(meta["hlo"]) == {"init", "grad_step", "apply_update", "predict"}
+        for f in meta["hlo"].values():
+            path = os.path.join(out, f)
+            assert os.path.exists(path)
+            text = open(path).read()
+            # HLO text sanity: module header + ENTRY computation.
+            assert text.startswith("HloModule"), f
+            assert "ENTRY" in text, f
+
+    def test_meta_is_json_round_trippable(self, lowered):
+        m, meta, out = lowered
+        text = json.dumps(meta)
+        back = json.loads(text)
+        assert back["name"] == "aot_toy"
+        assert back["optimizer"] == "sgd"
+        assert back["batch"] == 4
+        assert back["n_params"] == m.n_params()
+        assert back["flops_per_step"] > 0
+
+    def test_param_and_opt_layout(self, lowered):
+        m, meta, _ = lowered
+        names = [p["name"] for p in meta["params"]]
+        assert names[0] == "stem.w"
+        assert names[-1] == "head.b"
+        mom_names = [p["name"] for p in meta["opt_state"]]
+        assert mom_names == ["mom." + n for n in names]
+
+    def test_grad_step_entry_arity(self, lowered):
+        """The grad_step ENTRY must take n_params + 2 parameters (the rust
+        runtime relies on this positional ABI)."""
+        m, meta, out = lowered
+        text = open(os.path.join(out, meta["hlo"]["grad_step"])).read()
+        entry_body = text.split("ENTRY", 1)[1]
+        n_parameters = entry_body.count(" parameter(")
+        assert n_parameters == len(meta["params"]) + 2, entry_body[:400]
+
+    def test_hlo_text_ids_are_small(self, lowered):
+        """xla_extension 0.5.1 rejects 64-bit instruction ids; text output
+        must not embed any (the reason we use text interchange at all)."""
+        _, meta, out = lowered
+        text = open(os.path.join(out, meta["hlo"]["init"])).read()
+        assert "id=" not in text.split("ENTRY")[0]
+
+
+class TestToHloText:
+    def test_simple_function(self):
+        import jax.numpy as jnp
+
+        lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)
+        )
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text

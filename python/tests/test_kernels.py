@@ -1,0 +1,186 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including tile-ragged ones) and value scales;
+assert_allclose tolerances account for f32 accumulation-order differences.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=70)
+small_dims = st.integers(min_value=1, max_value=24)
+
+
+def rand(rng, *shape):
+    return jnp.array(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = rand(rng, m, k), rand(rng, k, n)
+        got = np.array(K.matmul(x, w))
+        want = np.array(R.matmul_ref(x, w))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_tile_multiples_exact_path(self):
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, 256, 128), rand(rng, 128, 256)
+        np.testing.assert_allclose(
+            np.array(K.matmul(x, w)), np.array(x) @ np.array(w),
+            rtol=5e-4, atol=5e-4,
+        )
+
+    def test_vjp_matches_ref(self):
+        rng = np.random.default_rng(1)
+        x, w = rand(rng, 17, 23), rand(rng, 23, 11)
+        g = jax.grad(lambda w: (K.matmul(x, w) ** 2).sum())(w)
+        gr = jax.grad(lambda w: (jnp.matmul(x, w) ** 2).sum())(w)
+        np.testing.assert_allclose(np.array(g), np.array(gr), rtol=2e-4, atol=2e-4)
+
+    def test_linear_adds_bias(self):
+        rng = np.random.default_rng(2)
+        x, w = rand(rng, 4, 8), rand(rng, 8, 3)
+        b = rand(rng, 3)
+        np.testing.assert_allclose(
+            np.array(K.linear(x, w, b)),
+            np.array(x) @ np.array(w) + np.array(b)[None, :],
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+class TestConv2d:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(3, 14),
+        w=st.integers(3, 14),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_lax_conv(self, b, h, w, cin, cout, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, b, h, w, cin)
+        f = rand(rng, 3, 3, cin, cout)
+        got = np.array(K.conv2d(x, f))
+        want = np.array(R.conv2d_ref(x, f))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_1x1_kernel(self):
+        rng = np.random.default_rng(3)
+        x = rand(rng, 2, 5, 5, 4)
+        f = rand(rng, 1, 1, 4, 2)
+        np.testing.assert_allclose(
+            np.array(K.conv2d(x, f)), np.array(R.conv2d_ref(x, f)),
+            rtol=3e-4, atol=3e-4,
+        )
+
+    def test_grad_flows(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 1, 6, 6, 2)
+        f = rand(rng, 3, 3, 2, 3)
+        g = jax.grad(lambda f: (K.conv2d(x, f) ** 2).sum())(f)
+        gr = jax.grad(lambda f: (R.conv2d_ref(x, f) ** 2).sum())(f)
+        np.testing.assert_allclose(np.array(g), np.array(gr), rtol=3e-4, atol=3e-4)
+
+
+class TestConvLstmGates:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 9),
+        w=st.integers(1, 9),
+        f=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, h, w, f, seed):
+        rng = np.random.default_rng(seed)
+        zs = [rand(rng, b, h, w, f) for _ in range(5)]
+        hk, ck = K.convlstm_gates(*zs)
+        hr, cr = R.convlstm_gates_ref(*zs)
+        np.testing.assert_allclose(np.array(hk), np.array(hr), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.array(ck), np.array(cr), rtol=1e-5, atol=1e-5)
+
+    def test_fused_bwd_matches_ref(self):
+        rng = np.random.default_rng(5)
+        zs = [rand(rng, 2, 4, 4, 3) for _ in range(5)]
+
+        def lk(*zs):
+            h, c = K.convlstm_gates(*zs)
+            return (h * 1.3).sum() + (c ** 2).sum()
+
+        def lr(*zs):
+            h, c = R.convlstm_gates_ref(*zs)
+            return (h * 1.3).sum() + (c ** 2).sum()
+
+        gk = jax.grad(lk, argnums=tuple(range(5)))(*zs)
+        gr = jax.grad(lr, argnums=tuple(range(5)))(*zs)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4, atol=2e-4)
+
+    def test_cell_state_bounded(self):
+        # Forget/input gates keep |c| bounded by |c_prev| + 1.
+        rng = np.random.default_rng(6)
+        zs = [10.0 * rand(rng, 1, 3, 3, 2) for _ in range(4)]
+        c_prev = rand(rng, 1, 3, 3, 2)
+        _, c = K.convlstm_gates(*zs, c_prev)
+        assert np.all(np.abs(np.array(c)) <= np.abs(np.array(c_prev)) + 1.0 + 1e-5)
+
+
+class TestOptimizers:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1))
+    def test_sgd_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        p, m, g = (rand(rng, n) for _ in range(3))
+        pn, mn = K.sgd_momentum(p, m, g, 0.05, 0.9)
+        pr, mr = R.sgd_momentum_ref(p, m, g, 0.05, 0.9)
+        np.testing.assert_allclose(np.array(pn), np.array(pr), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.array(mn), np.array(mr), rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1))
+    def test_novograd_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        p, m, g = (rand(rng, n) for _ in range(3))
+        gnorm2 = jnp.sum(g * g)
+        v_prev = jnp.array(0.7)
+        v_new = 0.98 * v_prev + 0.02 * gnorm2
+        pn, mn = K.novograd_update(p, m, g, v_new, 0.01, 0.95, 1e-8, 1e-4)
+        pr, mr, _ = R.novograd_ref(p, m, g, gnorm2, v_prev, 0.01, 0.95, 0.98, 1e-8, 1e-4)
+        np.testing.assert_allclose(np.array(pn), np.array(pr), rtol=1e-5, atol=1e-6)
+
+    def test_sgd_2d_shapes(self):
+        rng = np.random.default_rng(7)
+        p, m, g = (rand(rng, 13, 7) for _ in range(3))
+        pn, mn = K.sgd_momentum(p, m, g, 0.1, 0.9)
+        assert pn.shape == (13, 7) and mn.shape == (13, 7)
+
+
+class TestCompress:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 4000), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+    def test_matches_fp16_cast(self, n, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.array(scale * rng.standard_normal(n), dtype=jnp.float32)
+        got = np.array(K.fp16_roundtrip(x))
+        want = np.array(R.fp16_compress_ref(x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_quantization_error_bounded(self):
+        rng = np.random.default_rng(8)
+        x = jnp.array(rng.standard_normal(1000), dtype=jnp.float32)
+        err = np.abs(np.array(K.fp16_roundtrip(x)) - np.array(x))
+        # fp16 has ~11 bits of mantissa: rel error < 2^-10 for this range.
+        assert np.all(err <= np.abs(np.array(x)) * 2 ** -10 + 1e-7)

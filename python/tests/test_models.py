@@ -1,0 +1,172 @@
+"""L2 model correctness: ABI arity/shape contracts, learnability, and the
+optimizer paths, on down-scaled configs (fast eager execution)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CnnClassifier,
+    ConvLstmForecaster,
+    MultilabelCnn,
+    RnaCnn,
+    TransformerLm,
+    registry,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_batch(m, rng):
+    (xs, xd), (ys, yd) = m.x_spec(), m.y_spec()
+    if xd == jnp.int32:
+        x = jnp.array(rng.integers(0, m.vocab, xs), dtype=jnp.int32)
+        return x, x
+    x = jnp.array(rng.standard_normal(xs), dtype=jnp.float32)
+    if ys[-1:] and yd == jnp.float32 and len(ys) == 2:
+        # classification one-hot / multilabel
+        y = np.zeros(ys, dtype=np.float32)
+        for b in range(ys[0]):
+            y[b, rng.integers(0, ys[1])] = 1.0
+        return x, jnp.array(y)
+    y = jnp.array(rng.standard_normal(ys), dtype=jnp.float32)
+    return x, y
+
+
+TINY = [
+    CnnClassifier("t_cnn", h=6, w=6, feat=4, blocks=1, classes=3, batch=4),
+    MultilabelCnn("t_ml", h=6, w=6, cin=4, feat=4, blocks=1, classes=5, batch=4),
+    ConvLstmForecaster("t_wx", h=5, w=6, feat=4, t_in=3, t_out=3, batch=2),
+    TransformerLm("t_tf", vocab=64, d=16, heads=2, layers=1, seq=12, batch=2),
+    RnaCnn("t_rna", l=10, feat=4, depth=2, batch=2),
+]
+
+
+@pytest.fixture(params=TINY, ids=[m.name for m in TINY])
+def tiny(request):
+    return request.param
+
+
+class TestAbi:
+    def test_init_arity(self, tiny):
+        out = tiny.init_fn()(jnp.uint32(0))
+        assert len(out) == len(tiny.param_defs()) + len(tiny.opt_state_defs())
+        for arr, (n, s) in zip(out, tiny.param_defs() + tiny.opt_state_defs()):
+            assert arr.shape == tuple(s), n
+
+    def test_grad_step_arity_and_loss(self, tiny):
+        rng = np.random.default_rng(0)
+        params = list(tiny.init(jax.random.PRNGKey(0)))
+        x, y = make_batch(tiny, rng)
+        out = tiny.grad_step_fn()(*params, x, y)
+        assert len(out) == len(params) + 1
+        loss = float(out[-1])
+        assert np.isfinite(loss) and loss > 0
+        for g, p in zip(out[:-1], params):
+            assert g.shape == p.shape
+
+    def test_apply_update_roundtrip(self, tiny):
+        rng = np.random.default_rng(1)
+        full = list(tiny.init_fn()(jnp.uint32(1)))
+        np_ = len(tiny.param_defs())
+        x, y = make_batch(tiny, rng)
+        gout = tiny.grad_step_fn()(*full[:np_], x, y)
+        upd = tiny.apply_update_fn()(*full, *gout[:-1], jnp.float32(0.01))
+        assert len(upd) == len(full)
+        # Parameters must actually move.
+        moved = any(
+            not np.allclose(np.array(a), np.array(b))
+            for a, b in zip(upd[:np_], full[:np_])
+        )
+        assert moved
+
+    def test_predict_shape(self, tiny):
+        rng = np.random.default_rng(2)
+        params = list(tiny.init(jax.random.PRNGKey(2)))
+        x, _ = make_batch(tiny, rng)
+        (out,) = tiny.predict_fn()(*params, x)
+        assert out.shape[0] == tiny.batch
+
+
+class TestLearning:
+    def train(self, m, steps, lr, seed=0):
+        rng = np.random.default_rng(seed)
+        full = list(m.init_fn()(jnp.uint32(seed)))
+        np_ = len(m.param_defs())
+        grad = m.grad_step_fn()
+        upd = m.apply_update_fn()
+        x, y = make_batch(m, rng)  # overfit one fixed batch
+        losses = []
+        for _ in range(steps):
+            out = grad(*full[:np_], x, y)
+            losses.append(float(out[-1]))
+            full = list(upd(*full, *out[:-1], jnp.float32(lr)))
+        return losses
+
+    def test_cnn_overfits_one_batch(self):
+        losses = self.train(TINY[0], steps=30, lr=0.05)
+        assert losses[-1] < 0.6 * losses[0], losses
+
+    def test_multilabel_novograd_learns(self):
+        losses = self.train(TINY[1], steps=15, lr=0.05)
+        assert losses[-1] < losses[0], losses
+
+    def test_weather_mse_drops(self):
+        losses = self.train(TINY[2], steps=10, lr=0.05)
+        assert losses[-1] < losses[0], losses
+
+    def test_transformer_ce_drops(self):
+        losses = self.train(TINY[3], steps=10, lr=0.05)
+        assert losses[-1] < losses[0], losses
+
+    def test_rna_bce_drops(self):
+        losses = self.train(TINY[4], steps=10, lr=0.05)
+        assert losses[-1] < losses[0], losses
+
+
+class TestStructure:
+    def test_transfer_bodies_share_shapes(self):
+        """§3.1 transfer contract: all CnnClassifier variants share body
+        param shapes so checkpoints can be copied across heads."""
+        reg = registry()
+        pre = dict(reg["cnn_pre"].param_defs())
+        for name in ("cnn_cifar", "cnn_covid"):
+            other = dict(reg[name].param_defs())
+            for k, s in pre.items():
+                if k.startswith("head."):
+                    continue
+                assert other[k] == s, (name, k)
+
+    def test_registry_names_match(self):
+        for name, m in registry().items():
+            assert m.name == name
+
+    def test_param_counts(self):
+        reg = registry()
+        # Transformer e2e config is the big one.
+        assert reg["transformer_e2e"].n_params() > 4_000_000
+        assert reg["weather"].n_params() < 10_000
+
+    def test_rna_logits_symmetric(self):
+        m = TINY[4]
+        rng = np.random.default_rng(3)
+        params = list(m.init(jax.random.PRNGKey(3)))
+        x, _ = make_batch(m, rng)
+        (z,) = m.predict_fn()(*params, x)
+        np.testing.assert_allclose(
+            np.array(z), np.array(jnp.swapaxes(z, 1, 2)), rtol=1e-5, atol=1e-5
+        )
+
+    def test_causal_masking(self):
+        """Changing a future token must not affect past logits."""
+        m = TINY[3]
+        params = list(m.init(jax.random.PRNGKey(4)))
+        rng = np.random.default_rng(4)
+        x = jnp.array(rng.integers(0, m.vocab, (m.batch, m.seq)), dtype=jnp.int32)
+        (z1,) = m.predict_fn()(*params, x)
+        x2 = x.at[:, -1].set((x[:, -1] + 1) % m.vocab)
+        (z2,) = m.predict_fn()(*params, x2)
+        np.testing.assert_allclose(
+            np.array(z1[:, :-1]), np.array(z2[:, :-1]), rtol=1e-5, atol=1e-5
+        )

@@ -1,0 +1,71 @@
+//! Ablation bench: the §2.3 design choices — collective algorithm,
+//! Horovod fusion-buffer size, FP16 gradient compression — swept on the
+//! DragonFly+ model. `cargo bench --bench collectives_ablation`.
+
+use booster::collectives::{bucketed_allreduce_time, Algo, CollectiveModel, Compression};
+use booster::topology::Topology;
+use booster::util::table::Table;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let topo = Topology::juwels_booster();
+    let model = CollectiveModel::new(&topo);
+    let gpus = topo.first_gpus(256);
+
+    // ResNet-50-like gradient tensor sizes (conv stacks + head).
+    let tensors: Vec<f64> = (0..160)
+        .map(|i| if i % 20 == 0 { 8e6 } else { 300e3 })
+        .collect();
+    let total: f64 = tensors.iter().sum();
+
+    let mut out = String::from("Collectives ablation on 256 GPUs, ResNet-50-like gradients\n\n");
+
+    let mut t = Table::new(&["algorithm", "time", "algbw GB/s"]).with_title("algorithm choice (64 MB buckets)");
+    for algo in Algo::ALL {
+        let dt = bucketed_allreduce_time(&model, &gpus, &tensors, 64e6, Compression::None, algo)
+            .unwrap();
+        t.row(&[
+            algo.label().into(),
+            format!("{:.2} ms", dt * 1e3),
+            format!("{:.1}", total / dt / 1e9),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new(&["bucket", "time", "vs 64MB"]).with_title("fusion-buffer size (hierarchical)");
+    let base = bucketed_allreduce_time(&model, &gpus, &tensors, 64e6, Compression::None, Algo::Hierarchical)
+        .unwrap();
+    for bucket in [4e3, 64e3, 1e6, 8e6, 64e6, 512e6] {
+        let dt = bucketed_allreduce_time(&model, &gpus, &tensors, bucket, Compression::None, Algo::Hierarchical)
+            .unwrap();
+        t.row(&[
+            booster::util::fmt_bytes(bucket as u64),
+            format!("{:.2} ms", dt * 1e3),
+            format!("{:.2}x", dt / base),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new(&["model size", "fp32 time", "fp16 time", "speedup"])
+        .with_title("FP16 gradient compression (hierarchical, 64 MB buckets)");
+    for params in [1e6, 25e6, 210e6, 335e6] {
+        let grads = vec![params * 4.0];
+        let plain = bucketed_allreduce_time(&model, &gpus, &grads, 64e6, Compression::None, Algo::Hierarchical)
+            .unwrap();
+        let fp16 = bucketed_allreduce_time(&model, &gpus, &grads, 64e6, Compression::Fp16, Algo::Hierarchical)
+            .unwrap();
+        t.row(&[
+            format!("{:.0}M params", params / 1e6),
+            format!("{:.2} ms", plain * 1e3),
+            format!("{:.2} ms", fp16 * 1e3),
+            format!("{:.2}x", plain / fp16),
+        ]);
+    }
+    out.push_str(&t.render());
+    print!("{out}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/collectives_ablation.txt", &out).ok();
+    println!("\n[bench] collectives_ablation done in {:.2?}", t0.elapsed());
+}

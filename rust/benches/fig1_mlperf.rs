@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 1 (MLPerf v0.7 subset throughput + efficiency).
+//! `cargo bench --bench fig1_mlperf` — output mirrors the figure's grouped
+//! bars; CSV in results/fig1_mlperf.csv.
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_mlperf(&[]).expect("fig1 harness");
+    println!("\n[bench] fig1_mlperf regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 2 (few-shot transfer, ImageNet-21k vs -1k
+//! analog pre-training). Real PJRT training; ~2-4 min.
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_transfer(&[]).expect("fig2 harness");
+    println!("\n[bench] fig2_fewshot regenerated in {:.2?}", t0.elapsed());
+}

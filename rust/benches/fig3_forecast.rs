@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 3 (convLSTM 2-m temperature forecast example +
+//! RMSE vs persistence).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_weather(&["--forecast".to_string()]).expect("fig3 harness");
+    println!("\n[bench] fig3_forecast regenerated in {:.2?}", t0.elapsed());
+}

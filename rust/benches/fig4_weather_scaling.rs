@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 4 (convLSTM training time vs GPUs + iteration
+//! time distributions on the simulated machine).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_weather(&["--scaling".to_string()]).expect("fig4 harness");
+    println!("\n[bench] fig4_weather_scaling regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the §3.4 RNA result (CNN vs mean-field DCA contact PPV).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_rna(&[]).expect("rna harness");
+    println!("\n[bench] rna_contacts regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Regenerates the §3.3 BigEarthNet scaling numbers (epoch time 1->64
+//! nodes, efficiency, macro-F1 stability across data-parallel widths).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_rs(&["--train".to_string(), "--steps".to_string(), "120".to_string()])
+        .expect("rs harness");
+    println!("\n[bench] rs_scaling regenerated in {:.2?}", t0.elapsed());
+}

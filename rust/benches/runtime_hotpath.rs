@@ -1,0 +1,125 @@
+//! Hot-path microbenchmarks for the §Perf pass:
+//!
+//! * host allreduce (scalar vs chunked vs parallel) in GB/s;
+//! * literal <-> host conversion;
+//! * PJRT grad_step / apply_update execution latency;
+//! * network-simulator events/s.
+
+use booster::net::{simulate, Flow};
+use booster::runtime::{tensor, Engine};
+use booster::topology::Topology;
+use booster::train::allreduce;
+use booster::util::rng::Rng;
+use booster::util::table::Table;
+use std::time::Instant;
+
+fn time_it<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // One warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let mut out = String::from("L3 hot-path microbenchmarks\n\n");
+
+    // --- host allreduce -------------------------------------------------
+    let mut rng = Rng::seed_from(1);
+    let n = 16 << 20; // 16M f32 = 64 MB per replica
+    let replicas = 4;
+    let bufs: Vec<Vec<f32>> = (0..replicas)
+        .map(|_| {
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut b, 0.0, 1.0);
+            b
+        })
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let mut outbuf = vec![0.0f32; n];
+    let bytes_moved = (replicas + 1) as f64 * n as f64 * 4.0;
+
+    let mut t = Table::new(&["allreduce impl", "time/call", "effective GB/s"])
+        .with_title(format!("host allreduce: {replicas} replicas x 64 MB").as_str());
+    let dt = time_it(3, || allreduce::average_scalar(&refs, &mut outbuf));
+    t.row(&["scalar".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    let dt = time_it(5, || allreduce::average_chunked(&refs, &mut outbuf));
+    t.row(&["chunked".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    let dt = time_it(5, || allreduce::average_parallel(&refs, &mut outbuf, 0));
+    t.row(&["parallel(auto)".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    let dt = time_it(3, || {
+        allreduce::average_compressed(&refs, &mut outbuf, booster::collectives::Compression::Fp16, 0)
+    });
+    t.row(&["fp16-compressed".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // --- literal conversion ----------------------------------------------
+    let mut t = Table::new(&["conversion", "time/call", "GB/s"]).with_title("literal <-> host (16 MB)");
+    let data = vec![1.0f32; 4 << 20];
+    let shape = [4usize << 20];
+    let dt = time_it(10, || {
+        let _ = tensor::f32_literal(&shape, &data).unwrap();
+    });
+    t.row(&["host -> literal".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", 16e6 / dt / 1e9)]);
+    let lit = tensor::f32_literal(&shape, &data).unwrap();
+    let dt = time_it(10, || {
+        let _ = lit.to_vec::<f32>().unwrap();
+    });
+    t.row(&["literal -> host".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", 16e6 / dt / 1e9)]);
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // --- PJRT execution ---------------------------------------------------
+    if let Ok(engine) = Engine::cpu() {
+        if let Ok(model) = engine.load_model("cnn_covid") {
+            let state = model.init_state(&engine, 0).unwrap();
+            let nx: usize = model.meta.x.shape.iter().product();
+            let ny: usize = model.meta.y.shape.iter().product();
+            let x = tensor::f32_literal(&model.meta.x.shape, &vec![0.1; nx]).unwrap();
+            let y = tensor::f32_literal(&model.meta.y.shape, &vec![0.0; ny]).unwrap();
+            let mut t = Table::new(&["PJRT call", "time/call"]).with_title("cnn_covid executions");
+            let dt = time_it(5, || {
+                let _ = model.grad_step_run(&engine, &state, &x, &y).unwrap();
+            });
+            t.row(&["grad_step".into(), format!("{:.2} ms", dt * 1e3)]);
+            let (grads, _) = model.grad_step_run(&engine, &state, &x, &y).unwrap();
+            let mut st2 = model.init_state(&engine, 0).unwrap();
+            let dt = time_it(5, || {
+                model.apply_update_run(&engine, &mut st2, &grads, 0.01).unwrap();
+            });
+            t.row(&["apply_update".into(), format!("{:.2} ms", dt * 1e3)]);
+            let dt = time_it(5, || {
+                let _ = model.predict_run(&engine, &state, &x).unwrap();
+            });
+            t.row(&["predict".into(), format!("{:.2} ms", dt * 1e3)]);
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+    }
+
+    // --- network simulator -------------------------------------------------
+    let topo = Topology::juwels_booster();
+    let gpus = topo.first_gpus(512);
+    let flows: Vec<Flow> = (0..gpus.len())
+        .map(|i| Flow {
+            path: topo.route(gpus[i], gpus[(i + 1) % gpus.len()], i as u64),
+            bytes: 1e6,
+            start: 0.0,
+        })
+        .collect();
+    let mut t = Table::new(&["network sim", "time/round", "flows"]).with_title("fluid simulator");
+    let dt = time_it(5, || {
+        let _ = simulate(&topo, &flows).unwrap();
+    });
+    t.row(&["512-GPU ring round".into(), format!("{:.2} ms", dt * 1e3), flows.len().to_string()]);
+    out.push_str(&t.render());
+
+    print!("{out}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/runtime_hotpath.txt", &out).ok();
+    println!("\n[bench] runtime_hotpath done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Regenerates the §2.2 machine characterization (peaks per precision,
+//! Green500 metric, bisection bandwidth, HPL estimate).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_system(&[]).expect("system harness");
+    booster::report::cmd_topo(&[]).expect("topo harness");
+    println!("\n[bench] system_characterization regenerated in {:.2?}", t0.elapsed());
+}

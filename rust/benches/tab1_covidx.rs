@@ -1,0 +1,6 @@
+//! Regenerates paper Table 1 (COVIDx-analog per-class P/R/F1).
+fn main() {
+    let t0 = std::time::Instant::now();
+    booster::report::cmd_covidx(&[]).expect("table1 harness");
+    println!("\n[bench] tab1_covidx regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,80 @@
+//! Ablation bench: topology and placement — DragonFly+ global-link count,
+//! DragonFly+ vs fat tree, compact vs spread scheduling — measured by
+//! hierarchical allreduce time at scale.
+
+use booster::collectives::{Algo, CollectiveModel};
+use booster::hw::node::NodeSpec;
+use booster::topology::{TopoParams, Topology};
+use booster::util::table::Table;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let bytes = 400e6; // 100M-param fp32 gradient
+    let n = 512;
+
+    let mut out = String::from("Topology ablation: 512-GPU allreduce of 400 MB\n\n");
+
+    let mut t = Table::new(&["topology", "bisection Tbit/s", "allreduce ms"])
+        .with_title("fabric variants");
+    let mut variants: Vec<(String, Topology)> = Vec::new();
+    variants.push(("DragonFly+ (10 links/pair, paper)".into(), Topology::juwels_booster()));
+    for links in [2usize, 5, 20] {
+        let mut p = TopoParams::juwels_booster();
+        p.global_links_per_pair = links;
+        variants.push((
+            format!("DragonFly+ ({links} links/pair)"),
+            Topology::build(p, NodeSpec::juwels_booster()).unwrap(),
+        ));
+    }
+    {
+        let mut p = TopoParams::selene();
+        p.nodes = 936;
+        p.nodes_per_cell = 936;
+        p.leaves_per_cell = 24;
+        p.spines_per_cell = 24;
+        variants.push((
+            "single fat tree (936 nodes)".into(),
+            Topology::build(p, NodeSpec::juwels_booster()).unwrap(),
+        ));
+    }
+    for (name, topo) in &variants {
+        let model = CollectiveModel::new(topo);
+        let dt = model
+            .allreduce_time(&topo.first_gpus(n), bytes, Algo::Hierarchical)
+            .unwrap();
+        t.row(&[
+            name.clone(),
+            format!("{:.0}", topo.bisection_bw_bits() / 1e12),
+            format!("{:.2}", dt * 1e3),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new(&["placement", "gpus", "ring ms", "hierarchical ms"])
+        .with_title("placement policy (paper topology)");
+    let topo = Topology::juwels_booster();
+    let model = CollectiveModel::new(&topo);
+    for gpus in [64usize, 256, 512] {
+        for (label, placement) in [
+            ("compact", topo.first_gpus(gpus)),
+            ("spread", topo.spread_gpus(gpus)),
+        ] {
+            let ring = model.allreduce_time(&placement, bytes, Algo::Ring).unwrap();
+            let hier = model
+                .allreduce_time(&placement, bytes, Algo::Hierarchical)
+                .unwrap();
+            t.row(&[
+                label.into(),
+                gpus.to_string(),
+                format!("{:.2}", ring * 1e3),
+                format!("{:.2}", hier * 1e3),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    print!("{out}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/topology_ablation.txt", &out).ok();
+    println!("\n[bench] topology_ablation done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,127 @@
+//! CLI dispatch — maps subcommands to the experiment drivers.
+//!
+//! Subcommands are registered here as they are implemented; `booster help`
+//! lists them. The binary in `rust/src/main.rs` is a thin shim over
+//! [`dispatch`].
+
+use crate::util::error::Result;
+
+/// A subcommand entry: name, one-line description, runner.
+pub struct Command {
+    /// Subcommand name as typed on the CLI.
+    pub name: &'static str,
+    /// One-line description for `booster help`.
+    pub about: &'static str,
+    /// Runner; receives the args after the subcommand name.
+    pub run: fn(&[String]) -> Result<i32>,
+}
+
+/// The command registry.
+pub fn commands() -> Vec<Command> {
+    vec![
+        Command {
+            name: "system",
+            about: "print the JUWELS Booster system characterization (§2.2 numbers)",
+            run: crate::report::cmd_system,
+        },
+        Command {
+            name: "topo",
+            about: "inspect the DragonFly+ topology (routes, bisection bandwidth)",
+            run: crate::report::cmd_topo,
+        },
+        Command {
+            name: "mlperf",
+            about: "run the MLPerf v0.7-subset throughput harness (Fig. 1)",
+            run: crate::report::cmd_mlperf,
+        },
+        Command {
+            name: "train",
+            about: "data-parallel training of an AOT model on the PJRT runtime",
+            run: crate::report::cmd_train,
+        },
+        Command {
+            name: "transfer",
+            about: "large-scale pretraining transfer / few-shot experiment (Fig. 2)",
+            run: crate::report::cmd_transfer,
+        },
+        Command {
+            name: "covidx",
+            about: "COVIDx-analog fine-tuning, per-class P/R/F1 (Table 1)",
+            run: crate::report::cmd_covidx,
+        },
+        Command {
+            name: "weather",
+            about: "convLSTM weather forecasting + scaling study (Figs. 3 & 4)",
+            run: crate::report::cmd_weather,
+        },
+        Command {
+            name: "rs",
+            about: "remote-sensing multilabel classification scaling (§3.3)",
+            run: crate::report::cmd_rs,
+        },
+        Command {
+            name: "rna",
+            about: "RNA contact prediction: DCA baseline vs CNN (§3.4)",
+            run: crate::report::cmd_rna,
+        },
+        Command {
+            name: "sched",
+            about: "simulate the modular workload manager on a job trace",
+            run: crate::report::cmd_sched,
+        },
+    ]
+}
+
+/// Entry point used by the `booster` binary. Returns the process exit code.
+pub fn dispatch(args: &[String]) -> Result<i32> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(0);
+    };
+    if cmd == "help" || cmd == "--help" || cmd == "-h" {
+        print_help();
+        return Ok(0);
+    }
+    for c in commands() {
+        if c.name == cmd {
+            return (c.run)(&args[1..]);
+        }
+    }
+    eprintln!("unknown subcommand '{cmd}'\n");
+    print_help();
+    Ok(2)
+}
+
+fn print_help() {
+    println!("booster — JUWELS Booster reproduction (see DESIGN.md)\n");
+    println!("subcommands:");
+    for c in commands() {
+        println!("  {:<10} {}", c.name, c.about);
+    }
+    println!("\nrun 'booster <cmd> --help' for per-command flags");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique() {
+        let mut names: Vec<&str> = commands().iter().map(|c| c.name).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+    }
+
+    #[test]
+    fn help_paths_exit_zero() {
+        assert_eq!(dispatch(&[]).unwrap(), 0);
+        assert_eq!(dispatch(&["help".to_string()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_exit_two() {
+        assert_eq!(dispatch(&["frobnicate".to_string()]).unwrap(), 2);
+    }
+}

@@ -1,0 +1,435 @@
+//! Collective-communication algorithms and their cost on a topology.
+//!
+//! This is the NCCL/Horovod analog (§2.3): allreduce algorithms (ring,
+//! recursive halving–doubling, two-level hierarchical), Horovod-style
+//! gradient **bucketing** ("fusion buffers") and **FP16 gradient
+//! compression**. Costs come from the flow-level simulator in
+//! [`crate::net`] over the actual routes, so topology and placement effects
+//! (intra-node NVLink vs. inter-cell global links) are captured.
+//!
+//! The numeric averaging itself — what NCCL does on device — happens
+//! host-side in [`crate::train::allreduce`]; this module models the *time*.
+
+use crate::net::{simulate, Flow};
+use crate::topology::{GpuId, Topology};
+use crate::util::error::Result;
+
+/// Allreduce algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Flat ring over all GPUs (bandwidth-optimal, 2(n−1) steps).
+    Ring,
+    /// Recursive halving–doubling (latency-optimal, 2·log2 n steps).
+    HalvingDoubling,
+    /// Two-level: intra-node ring over NVLink, inter-node ring over the
+    /// fabric between node leaders, intra-node broadcast. This is NCCL's
+    /// default shape on multi-GPU nodes.
+    Hierarchical,
+}
+
+impl Algo {
+    /// All algorithms (for ablations).
+    pub const ALL: [Algo; 3] = [Algo::Ring, Algo::HalvingDoubling, Algo::Hierarchical];
+
+    /// Display name.
+    pub fn label(self) -> &'static str {
+        match self {
+            Algo::Ring => "ring",
+            Algo::HalvingDoubling => "halving-doubling",
+            Algo::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+/// Per-collective fixed software overhead (launch, protocol setup).
+/// NCCL-class launch overhead is O(10 µs) per collective.
+pub const LAUNCH_OVERHEAD: f64 = 12e-6;
+
+/// Collective cost model bound to a topology.
+#[derive(Debug)]
+pub struct CollectiveModel<'a> {
+    topo: &'a Topology,
+}
+
+impl<'a> CollectiveModel<'a> {
+    /// Bind to a topology.
+    pub fn new(topo: &'a Topology) -> CollectiveModel<'a> {
+        CollectiveModel { topo }
+    }
+
+    /// Order GPUs so ring neighbors are topologically close (by cell, then
+    /// node, then local GPU): minimizes inter-cell crossings, like NCCL's
+    /// topology-aware ring construction.
+    pub fn ring_order(&self, gpus: &[GpuId]) -> Vec<GpuId> {
+        let mut v = gpus.to_vec();
+        v.sort();
+        v
+    }
+
+    /// Time for one allreduce of `bytes` over `gpus` using `algo`.
+    pub fn allreduce_time(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        let n = gpus.len();
+        if n <= 1 || bytes <= 0.0 {
+            return Ok(LAUNCH_OVERHEAD);
+        }
+        let t = match algo {
+            Algo::Ring => self.ring_time(gpus, bytes)?,
+            Algo::HalvingDoubling => self.hd_time(gpus, bytes)?,
+            Algo::Hierarchical => self.hierarchical_time(gpus, bytes)?,
+        };
+        Ok(t + LAUNCH_OVERHEAD)
+    }
+
+    /// Ring allreduce: 2(n−1) rounds, each round every rank sends
+    /// `bytes/n` to its successor. All rounds share the same flow pattern
+    /// under the fluid model, so we simulate one round and scale.
+    fn ring_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+        let order = self.ring_order(gpus);
+        let n = order.len();
+        let chunk = bytes / n as f64;
+        let flows: Vec<Flow> = (0..n)
+            .map(|i| {
+                let src = order[i];
+                let dst = order[(i + 1) % n];
+                Flow {
+                    path: self.topo.route(src, dst, i as u64),
+                    bytes: chunk,
+                    start: 0.0,
+                }
+            })
+            .collect();
+        let round = simulate(self.topo, &flows)?.makespan;
+        Ok(round * 2.0 * (n as f64 - 1.0))
+    }
+
+    /// Recursive halving–doubling: reduce-scatter halves the payload each
+    /// round with partners at doubling distance, then allgather mirrors it.
+    /// Non-power-of-two ranks are folded in with a preliminary exchange
+    /// (we charge one extra full-size round, the standard trick's cost).
+    fn hd_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+        let order = self.ring_order(gpus);
+        let n = order.len();
+        let p2 = 1usize << (usize::BITS - 1 - n.leading_zeros() as u32) as usize;
+        let mut total = 0.0;
+        if p2 != n {
+            // Fold the excess ranks: one extra exchange of the full buffer.
+            let excess = n - p2;
+            let flows: Vec<Flow> = (0..excess)
+                .map(|i| Flow {
+                    path: self.topo.route(order[p2 + i], order[i], i as u64),
+                    bytes,
+                    start: 0.0,
+                })
+                .collect();
+            total += simulate(self.topo, &flows)?.makespan;
+        }
+        // log2(p2) reduce-scatter rounds with sizes bytes/2, bytes/4, ...
+        // then the mirror-image allgather: same cost, so 2x.
+        let rounds = p2.trailing_zeros() as usize;
+        let mut size = bytes / 2.0;
+        for r in 0..rounds {
+            let dist = 1usize << r;
+            let mut flows = Vec::with_capacity(p2);
+            for i in 0..p2 {
+                let partner = i ^ dist;
+                flows.push(Flow {
+                    path: self.topo.route(order[i], order[partner], r as u64),
+                    bytes: size,
+                    start: 0.0,
+                });
+            }
+            total += 2.0 * simulate(self.topo, &flows)?.makespan;
+            size /= 2.0;
+        }
+        Ok(total)
+    }
+
+    /// Two-level hierarchical allreduce.
+    fn hierarchical_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+        // Group GPUs by node.
+        let mut by_node: std::collections::BTreeMap<usize, Vec<GpuId>> = Default::default();
+        for &g in gpus {
+            by_node.entry(g.node).or_default().push(g);
+        }
+        let mut total = 0.0;
+
+        // Phase 1: intra-node ring reduce-scatter + allgather restricted to
+        // each node (NVLink). All nodes proceed in parallel; simulate the
+        // largest node group (they are homogeneous).
+        let max_group = by_node.values().map(|v| v.len()).max().unwrap_or(1);
+        if max_group > 1 {
+            let group = by_node
+                .values()
+                .find(|v| v.len() == max_group)
+                .unwrap()
+                .clone();
+            let chunk = bytes / max_group as f64;
+            let flows: Vec<Flow> = (0..group.len())
+                .map(|i| Flow {
+                    path: self
+                        .topo
+                        .route(group[i], group[(i + 1) % group.len()], i as u64),
+                    bytes: chunk,
+                    start: 0.0,
+                })
+                .collect();
+            let round = simulate(self.topo, &flows)?.makespan;
+            // Reduce-scatter only: (g-1) rounds; the trailing allgather
+            // merges with phase 3's broadcast.
+            total += round * (max_group as f64 - 1.0);
+        }
+
+        // Phase 2: inter-node ring allreduce among node leaders.
+        let leaders: Vec<GpuId> = by_node.values().map(|v| v[0]).collect();
+        if leaders.len() > 1 {
+            total += self.ring_time(&leaders, bytes)?;
+        }
+
+        // Phase 3: intra-node allgather/broadcast of the reduced buffer.
+        if max_group > 1 {
+            let group = by_node
+                .values()
+                .find(|v| v.len() == max_group)
+                .unwrap()
+                .clone();
+            let chunk = bytes / max_group as f64;
+            let flows: Vec<Flow> = (0..group.len())
+                .map(|i| Flow {
+                    path: self
+                        .topo
+                        .route(group[i], group[(i + 1) % group.len()], i as u64),
+                    bytes: chunk,
+                    start: 0.0,
+                })
+                .collect();
+            let round = simulate(self.topo, &flows)?.makespan;
+            total += round * (max_group as f64 - 1.0);
+        }
+        Ok(total)
+    }
+
+    /// Effective allreduce *algorithm bandwidth* (bytes/s of gradient
+    /// reduced): `bytes / time`. The standard NCCL "algbw" metric.
+    pub fn algbw(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        Ok(bytes / self.allreduce_time(gpus, bytes, algo)?)
+    }
+}
+
+/// Horovod-style fusion buckets: greedily pack tensors (bytes) into buckets
+/// of at most `bucket_bytes` (a tensor larger than the bucket gets its own).
+/// Returns per-bucket byte totals, preserving tensor order.
+pub fn fusion_buckets(tensor_bytes: &[f64], bucket_bytes: f64) -> Vec<f64> {
+    assert!(bucket_bytes > 0.0);
+    let mut buckets = Vec::new();
+    let mut acc = 0.0f64;
+    for &t in tensor_bytes {
+        if acc > 0.0 && acc + t > bucket_bytes {
+            buckets.push(acc);
+            acc = 0.0;
+        }
+        acc += t;
+        if acc >= bucket_bytes {
+            buckets.push(acc);
+            acc = 0.0;
+        }
+    }
+    if acc > 0.0 {
+        buckets.push(acc);
+    }
+    buckets
+}
+
+/// Gradient compression applied before the wire (§2.3: Horovod's built-in
+/// FP16 compression).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compression {
+    /// Send FP32 gradients as-is.
+    None,
+    /// Cast to FP16 on the wire: halves the bytes.
+    Fp16,
+}
+
+impl Compression {
+    /// Wire-size multiplier.
+    pub fn factor(self) -> f64 {
+        match self {
+            Compression::None => 1.0,
+            Compression::Fp16 => 0.5,
+        }
+    }
+}
+
+/// Time for a bucketed, optionally compressed allreduce of a gradient set.
+/// Buckets are issued back-to-back (Horovod serializes fusion buffers on
+/// its communication stream); each pays the launch overhead.
+pub fn bucketed_allreduce_time(
+    model: &CollectiveModel,
+    gpus: &[GpuId],
+    tensor_bytes: &[f64],
+    bucket_bytes: f64,
+    compression: Compression,
+    algo: Algo,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in fusion_buckets(tensor_bytes, bucket_bytes) {
+        total += model.allreduce_time(gpus, b * compression.factor(), algo)?;
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn topo() -> Topology {
+        Topology::juwels_booster()
+    }
+
+    #[test]
+    fn single_gpu_is_free() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let g = t.first_gpus(1);
+        let dt = m.allreduce_time(&g, 1e9, Algo::Ring).unwrap();
+        assert!((dt - LAUNCH_OVERHEAD).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_time_matches_analytic_intra_node() {
+        // 4 GPUs on one node, all NVLink: ring allreduce of B bytes takes
+        // 2(n-1) * (B/n) / nvlink_bw (+latency).
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let g = t.first_gpus(4);
+        let bytes = 3e9;
+        let dt = m.allreduce_time(&g, bytes, Algo::Ring).unwrap();
+        let analytic = 2.0 * 3.0 * (bytes / 4.0) / 300e9;
+        assert!(
+            (dt - analytic) < 0.1 * analytic + 1e-4,
+            "dt {dt} analytic {analytic}"
+        );
+        assert!(dt >= analytic, "sim can't beat the wire");
+    }
+
+    #[test]
+    fn ring_order_groups_by_locality() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let mut gpus = t.first_gpus(64);
+        gpus.reverse();
+        let order = m.ring_order(&gpus);
+        // Consecutive entries should mostly share a node.
+        let same_node = order
+            .windows(2)
+            .filter(|w| w[0].node == w[1].node)
+            .count();
+        assert!(same_node >= 40, "same-node adjacencies {same_node}");
+    }
+
+    #[test]
+    fn algorithms_rank_as_expected_for_large_buffers() {
+        // Large buffer, many nodes: hierarchical >= ring bandwidth
+        // (it reduces inter-node traffic per link), both beat HD's
+        // long-distance exchanges on a DragonFly+.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(64); // 16 nodes
+        let bytes = 400e6; // 100M params fp32
+        let ring = m.allreduce_time(&gpus, bytes, Algo::Ring).unwrap();
+        let hier = m.allreduce_time(&gpus, bytes, Algo::Hierarchical).unwrap();
+        let hd = m.allreduce_time(&gpus, bytes, Algo::HalvingDoubling).unwrap();
+        assert!(hier < hd, "hier {hier} hd {hd}");
+        assert!(ring < hd, "ring {ring} hd {hd}");
+    }
+
+    #[test]
+    fn latency_dominates_small_buffers() {
+        // For tiny buffers HD (log rounds) beats ring (linear rounds).
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(256);
+        let ring = m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        let hd = m.allreduce_time(&gpus, 4096.0, Algo::HalvingDoubling).unwrap();
+        assert!(hd < ring, "hd {hd} ring {ring}");
+    }
+
+    #[test]
+    fn compression_halves_large_transfer_time() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(32);
+        let tensors = [200e6];
+        let plain =
+            bucketed_allreduce_time(&m, &gpus, &tensors, 64e6, Compression::None, Algo::Ring)
+                .unwrap();
+        let fp16 =
+            bucketed_allreduce_time(&m, &gpus, &tensors, 64e6, Compression::Fp16, Algo::Ring)
+                .unwrap();
+        assert!(
+            fp16 < 0.62 * plain,
+            "fp16 {fp16} vs plain {plain} (expect ~0.5x)"
+        );
+    }
+
+    #[test]
+    fn buckets_pack_greedily() {
+        let b = fusion_buckets(&[10.0, 20.0, 50.0, 5.0, 100.0], 64.0);
+        assert_eq!(b, vec![30.0, 55.0, 100.0]);
+        let total: f64 = b.iter().sum();
+        assert_eq!(total, 185.0);
+    }
+
+    #[test]
+    fn bucket_totals_preserved_property() {
+        check::forall("bucket totals preserved", 128, |rng| {
+            let n = rng.range(1, 40);
+            let tensors: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 1e6)).collect();
+            let bucket = rng.uniform(10.0, 2e6);
+            let buckets = fusion_buckets(&tensors, bucket);
+            let sum_t: f64 = tensors.iter().sum();
+            let sum_b: f64 = buckets.iter().sum();
+            check::close(sum_t, sum_b, 1e-6 * sum_t.max(1.0), "byte totals")?;
+            // No bucket (except singleton oversize tensors) exceeds limit.
+            for w in &buckets {
+                if *w > bucket + 1e-9 {
+                    let oversize = tensors.iter().any(|&t| t > bucket && (t - w).abs() < 1e-9);
+                    check::ensure(oversize, format!("bucket {w} > {bucket}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_gpus_never_free() {
+        // Allreduce time is monotone-ish in participant count for fixed
+        // bytes on compact placement (weak check: 256 >= 8 GPUs).
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let small = m
+            .allreduce_time(&t.first_gpus(8), 100e6, Algo::Ring)
+            .unwrap();
+        let large = m
+            .allreduce_time(&t.first_gpus(256), 100e6, Algo::Ring)
+            .unwrap();
+        assert!(large > small, "large {large} small {small}");
+    }
+
+    #[test]
+    fn spread_placement_slower_than_compact() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let n = 64;
+        let compact = m
+            .allreduce_time(&t.first_gpus(n), 100e6, Algo::Ring)
+            .unwrap();
+        let spread = m
+            .allreduce_time(&t.spread_gpus(n), 100e6, Algo::Ring)
+            .unwrap();
+        assert!(
+            spread > compact,
+            "spread {spread} should exceed compact {compact}"
+        );
+    }
+}

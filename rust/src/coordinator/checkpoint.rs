@@ -1,0 +1,263 @@
+//! Checkpoint/restore of training state, and failure-injection recovery.
+//!
+//! Long JUWELS jobs checkpoint to the JUST storage cluster; the workload
+//! manager requeues failed jobs which resume from the last checkpoint.
+//! This module provides the same contract for the trainer: serialize the
+//! full `ModelState` (params + optimizer state) to a single binary file,
+//! restore it bit-exactly, and resume data-parallel training.
+//!
+//! Format (little-endian): magic "BSTCKPT1", u32 tensor count, then per
+//! tensor: u32 name length, name bytes, u32 rank, u64 dims…, f32 data…
+//! A trailing CRC-like xor checksum guards against truncation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::{tensor, ModelMeta, ModelState};
+use crate::util::error::{BoosterError, Result};
+
+const MAGIC: &[u8; 8] = b"BSTCKPT1";
+
+/// One named tensor buffer in a checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptTensor {
+    /// Tensor name (param or opt-state name from the metadata).
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// Row-major data.
+    pub data: Vec<f32>,
+}
+
+/// In-memory checkpoint.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Checkpoint {
+    /// All tensors (params then opt-state, in metadata order).
+    pub tensors: Vec<CkptTensor>,
+    /// Step counter at save time.
+    pub step: u64,
+}
+
+impl Checkpoint {
+    /// Capture a checkpoint from a model state.
+    pub fn capture(meta: &ModelMeta, state: &ModelState, step: u64) -> Result<Checkpoint> {
+        let mut tensors = Vec::new();
+        for (def, lit) in meta.params.iter().zip(&state.params) {
+            tensors.push(CkptTensor {
+                name: def.name.clone(),
+                shape: def.shape.clone(),
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| BoosterError::Xla(e.to_string()))?,
+            });
+        }
+        for (def, lit) in meta.opt_state.iter().zip(&state.opt) {
+            tensors.push(CkptTensor {
+                name: def.name.clone(),
+                shape: def.shape.clone(),
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| BoosterError::Xla(e.to_string()))?,
+            });
+        }
+        Ok(Checkpoint { tensors, step })
+    }
+
+    /// Rebuild a `ModelState` (params + opt) from this checkpoint.
+    pub fn restore(&self, meta: &ModelMeta) -> Result<ModelState> {
+        let np = meta.params.len();
+        let no = meta.opt_state.len();
+        if self.tensors.len() != np + no {
+            return Err(BoosterError::Config(format!(
+                "checkpoint has {} tensors, model wants {}",
+                self.tensors.len(),
+                np + no
+            )));
+        }
+        let mut params = Vec::with_capacity(np);
+        for (def, t) in meta.params.iter().zip(&self.tensors[..np]) {
+            if def.name != t.name || def.shape != t.shape {
+                return Err(BoosterError::Config(format!(
+                    "checkpoint mismatch at {}: {:?} vs {:?} ({})",
+                    def.name, def.shape, t.shape, t.name
+                )));
+            }
+            params.push(tensor::f32_literal(&t.shape, &t.data)?);
+        }
+        let mut opt = Vec::with_capacity(no);
+        for (def, t) in meta.opt_state.iter().zip(&self.tensors[np..]) {
+            if def.name != t.name || def.shape != t.shape {
+                return Err(BoosterError::Config(format!(
+                    "checkpoint opt mismatch at {}", def.name
+                )));
+            }
+            opt.push(tensor::f32_literal(&t.shape, &t.data)?);
+        }
+        Ok(ModelState { params, opt })
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let mut checksum = 0u64;
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                let b = v.to_bits();
+                checksum ^= (b as u64).rotate_left((b % 63) as u32);
+                w.write_all(&b.to_le_bytes())?;
+            }
+        }
+        w.write_all(&checksum.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(r: &mut impl Read) -> Result<Checkpoint> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(BoosterError::Config("not a booster checkpoint".into()));
+        }
+        let mut b8 = [0u8; 8];
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        r.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        if count > 1 << 20 {
+            return Err(BoosterError::Config("implausible tensor count".into()));
+        }
+        let mut tensors = Vec::with_capacity(count);
+        let mut checksum = 0u64;
+        for _ in 0..count {
+            r.read_exact(&mut b4)?;
+            let name_len = u32::from_le_bytes(b4) as usize;
+            if name_len > 4096 {
+                return Err(BoosterError::Config("implausible name length".into()));
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|_| BoosterError::Config("bad tensor name".into()))?;
+            r.read_exact(&mut b4)?;
+            let rank = u32::from_le_bytes(b4) as usize;
+            if rank > 16 {
+                return Err(BoosterError::Config("implausible rank".into()));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                r.read_exact(&mut b8)?;
+                shape.push(u64::from_le_bytes(b8) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                r.read_exact(&mut b4)?;
+                let bits = u32::from_le_bytes(b4);
+                checksum ^= (bits as u64).rotate_left((bits % 63) as u32);
+                data.push(f32::from_bits(bits));
+            }
+            tensors.push(CkptTensor { name, shape, data });
+        }
+        r.read_exact(&mut b8)?;
+        if u64::from_le_bytes(b8) != checksum {
+            return Err(BoosterError::Config("checkpoint checksum mismatch".into()));
+        }
+        Ok(Checkpoint { tensors, step })
+    }
+
+    /// Save to a file (atomic rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            self.write_to(&mut f)?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_ckpt() -> Checkpoint {
+        Checkpoint {
+            step: 123,
+            tensors: vec![
+                CkptTensor {
+                    name: "stem.w".into(),
+                    shape: vec![2, 3],
+                    data: vec![1.0, -2.5, 3.25, 0.0, f32::MIN_POSITIVE, 1e30],
+                },
+                CkptTensor {
+                    name: "mom.stem.w".into(),
+                    shape: vec![],
+                    data: vec![0.125],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = toy_ckpt();
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let c = toy_ckpt();
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = toy_ckpt();
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let buf = b"NOTACKPT\0\0\0\0\0\0\0\0\0\0\0\0".to_vec();
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = toy_ckpt();
+        let dir = std::env::temp_dir().join("booster_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! The machine facade — ties the subsystems into one object a user
+//! program (or the CLI) drives: topology + power + scheduler + timeline
+//! for the *simulated* machine, engine + trainer for *real* execution,
+//! plus checkpoint/restore and failure recovery (elastic training à la
+//! the workload manager requeueing a failed job).
+
+pub mod checkpoint;
+
+use crate::hw::power::PowerModel;
+use crate::sched::{Placement, Scheduler};
+use crate::topology::{GpuId, Topology};
+use crate::train::timeline::TimelineModel;
+use crate::util::error::{BoosterError, Result};
+
+/// The simulated JUWELS Booster machine.
+pub struct Machine {
+    /// Fabric + nodes.
+    pub topo: Topology,
+    /// Power/energy model.
+    pub power: PowerModel,
+    /// Workload manager.
+    pub sched: Scheduler,
+}
+
+impl Machine {
+    /// The paper's machine.
+    pub fn juwels_booster() -> Machine {
+        Machine {
+            topo: Topology::juwels_booster(),
+            power: PowerModel::juwels_booster(),
+            sched: Scheduler::juwels(Placement::CompactCells),
+        }
+    }
+
+    /// A timeline model with the standard AMP defaults bound to this
+    /// machine's topology.
+    pub fn timeline(&self) -> TimelineModel<'_> {
+        TimelineModel::amp_defaults(&self.topo)
+    }
+
+    /// Estimate job cost: (wall seconds, energy joules, node hours) for a
+    /// data-parallel training job of `steps` steps on `gpus` GPUs.
+    pub fn job_cost(
+        &self,
+        gpus: &[GpuId],
+        flops_per_gpu_step: f64,
+        grad_tensor_bytes: &[f64],
+        steps: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<JobCost> {
+        if gpus.is_empty() {
+            return Err(BoosterError::Config("job with zero GPUs".into()));
+        }
+        let model = self.timeline();
+        let times = model.run_steps(gpus, flops_per_gpu_step, grad_tensor_bytes, steps.min(200), rng)?;
+        let mean = crate::util::stats::mean(&times);
+        let wall = mean * steps as f64;
+        let nodes: std::collections::HashSet<usize> = gpus.iter().map(|g| g.node).collect();
+        let energy = self.power.job_energy(nodes.len(), wall, 0.9);
+        Ok(JobCost {
+            wall_seconds: wall,
+            energy_joules: energy,
+            node_hours: nodes.len() as f64 * wall / 3600.0,
+        })
+    }
+}
+
+/// Cost estimate for a job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobCost {
+    /// Wall-clock seconds.
+    pub wall_seconds: f64,
+    /// Energy in joules.
+    pub energy_joules: f64,
+    /// Node-hours (the unit compute-time grants are billed in).
+    pub node_hours: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn job_cost_scales_sanely() {
+        let m = Machine::juwels_booster();
+        let mut rng = Rng::seed_from(0);
+        let small = m
+            .job_cost(&m.topo.first_gpus(4), 1e12, &[4e6], 1000, &mut rng)
+            .unwrap();
+        let large = m
+            .job_cost(&m.topo.first_gpus(64), 1e12, &[4e6], 1000, &mut rng)
+            .unwrap();
+        // Same per-GPU work, same steps: similar wall, ~16x energy.
+        assert!(large.wall_seconds < 2.0 * small.wall_seconds);
+        assert!(large.energy_joules > 8.0 * small.energy_joules);
+        assert!(large.node_hours > small.node_hours);
+    }
+
+    #[test]
+    fn zero_gpu_job_rejected() {
+        let m = Machine::juwels_booster();
+        let mut rng = Rng::seed_from(0);
+        assert!(m.job_cost(&[], 1e12, &[1e6], 10, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! BigEarthNet-S2 analog: correlated multi-label multispectral patches
+//! (§3.3).
+//!
+//! Real BigEarthNet patches carry co-occurring land-cover labels ("Mixed
+//! forest" + "Marine waters") with band-dependent signatures. The
+//! generator mirrors that: 19 labels, each with a 12-band spectral
+//! signature and a spatial extent; labels co-occur through a small set of
+//! geographic *archetypes* (coastal, agricultural, forest, urban...), so
+//! the label marginals are imbalanced and correlated — what macro-F1 is
+//! sensitive to.
+
+use crate::util::rng::Rng;
+
+/// Number of labels (BigEarthNet 19-class nomenclature).
+pub const N_LABELS: usize = 19;
+/// Spectral bands (paper uses 12 Sentinel-2 bands).
+pub const N_BANDS: usize = 12;
+
+/// Generator over a fixed label/spectral world.
+#[derive(Debug, Clone)]
+pub struct MultilabelWorld {
+    /// Patch height/width.
+    pub h: usize,
+    /// Patch width.
+    pub w: usize,
+    /// Per-label spectral signature (N_LABELS × N_BANDS).
+    signatures: Vec<Vec<f32>>,
+    /// Archetypes: (label subset, prior weight).
+    archetypes: Vec<(Vec<usize>, f64)>,
+}
+
+impl MultilabelWorld {
+    /// Build a world from a seed.
+    pub fn new(h: usize, w: usize, seed: u64) -> MultilabelWorld {
+        let mut rng = Rng::seed_from(seed ^ 0xB16EA57);
+        let signatures: Vec<Vec<f32>> = (0..N_LABELS)
+            .map(|_| (0..N_BANDS).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+            .collect();
+        // 8 archetypes with 2-5 labels each, Zipf-ish priors.
+        let archetypes: Vec<(Vec<usize>, f64)> = (0..8)
+            .map(|a| {
+                let k = rng.range(2, 6);
+                let labels = rng.sample_indices(N_LABELS, k);
+                (labels, 1.0 / (1.0 + a as f64).powf(0.8))
+            })
+            .collect();
+        MultilabelWorld {
+            h,
+            w,
+            signatures,
+            archetypes,
+        }
+    }
+
+    /// Sample one patch: returns (bands flat (h*w*N_BANDS), labels bitmap).
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<f32>, Vec<bool>) {
+        let weights: Vec<f64> = self.archetypes.iter().map(|a| a.1).collect();
+        let arch = &self.archetypes[rng.categorical(&weights)];
+        let mut labels = vec![false; N_LABELS];
+        let mut active: Vec<usize> = Vec::new();
+        for &l in &arch.0 {
+            // Each archetype label present with high probability.
+            if rng.chance(0.8) {
+                labels[l] = true;
+                active.push(l);
+            }
+        }
+        // Occasional out-of-archetype label (noise in the nomenclature).
+        if rng.chance(0.15) {
+            let l = rng.range(0, N_LABELS);
+            if !labels[l] {
+                labels[l] = true;
+                active.push(l);
+            }
+        }
+        if active.is_empty() {
+            let l = arch.0[0];
+            labels[l] = true;
+            active.push(l);
+        }
+        // Spatial layout: each active label claims a random blob region.
+        let n = self.h * self.w;
+        let mut x = vec![0.0f32; n * N_BANDS];
+        for &l in &active {
+            let cy = rng.uniform(0.0, self.h as f64);
+            let cx = rng.uniform(0.0, self.w as f64);
+            let ry = rng.uniform(self.h as f64 * 0.25, self.h as f64 * 0.7);
+            let rx = rng.uniform(self.w as f64 * 0.25, self.w as f64 * 0.7);
+            for y in 0..self.h {
+                for xx in 0..self.w {
+                    let d = ((y as f64 - cy) / ry).powi(2) + ((xx as f64 - cx) / rx).powi(2);
+                    if d < 1.0 {
+                        let fade = (1.0 - d) as f32;
+                        let base = (y * self.w + xx) * N_BANDS;
+                        for b in 0..N_BANDS {
+                            x[base + b] += fade * self.signatures[l][b];
+                        }
+                    }
+                }
+            }
+        }
+        for v in x.iter_mut() {
+            *v += 0.25 * rng.normal() as f32;
+        }
+        (x, labels)
+    }
+
+    /// Build a batch: (x (B,H,W,12) flat, y (B,19) flat 0/1).
+    pub fn batch(&self, batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(batch * self.h * self.w * N_BANDS);
+        let mut y = Vec::with_capacity(batch * N_LABELS);
+        for _ in 0..batch {
+            let (xs, ls) = self.sample(rng);
+            x.extend_from_slice(&xs);
+            y.extend(ls.iter().map(|&b| b as u8 as f32));
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let w = MultilabelWorld::new(12, 12, 1);
+        let mut rng = Rng::seed_from(2);
+        let (x, y) = w.batch(4, &mut rng);
+        assert_eq!(x.len(), 4 * 12 * 12 * 12);
+        assert_eq!(y.len(), 4 * 19);
+        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn every_sample_has_a_label() {
+        let w = MultilabelWorld::new(8, 8, 3);
+        let mut rng = Rng::seed_from(4);
+        for _ in 0..200 {
+            let (_, labels) = w.sample(&mut rng);
+            assert!(labels.iter().any(|&l| l), "label-free sample");
+        }
+    }
+
+    #[test]
+    fn labels_are_correlated_and_imbalanced() {
+        let w = MultilabelWorld::new(8, 8, 5);
+        let mut rng = Rng::seed_from(6);
+        let n = 2000;
+        let mut marginals = vec![0usize; N_LABELS];
+        let mut pair_counts = std::collections::HashMap::new();
+        for _ in 0..n {
+            let (_, labels) = w.sample(&mut rng);
+            let active: Vec<usize> = (0..N_LABELS).filter(|&l| labels[l]).collect();
+            for &l in &active {
+                marginals[l] += 1;
+            }
+            for i in 0..active.len() {
+                for j in (i + 1)..active.len() {
+                    *pair_counts.entry((active[i], active[j])).or_insert(0usize) += 1;
+                }
+            }
+        }
+        // Imbalance: most vs least frequent label differ by > 3x.
+        let max = *marginals.iter().max().unwrap() as f64;
+        let min = *marginals.iter().min().unwrap() as f64;
+        assert!(max > 3.0 * (min + 1.0), "marginals {marginals:?}");
+        // Correlation: the top pair co-occurs far above independence.
+        let (&(a, b), &top) = pair_counts.iter().max_by_key(|(_, &c)| c).unwrap();
+        let expect_indep = marginals[a] as f64 * marginals[b] as f64 / n as f64;
+        assert!(
+            top as f64 > 1.5 * expect_indep,
+            "top pair {top} vs independent {expect_indep}"
+        );
+    }
+
+    #[test]
+    fn signatures_make_labels_learnable() {
+        // Mean band energy should differ between patches with and without
+        // a frequent label.
+        let w = MultilabelWorld::new(8, 8, 7);
+        let mut rng = Rng::seed_from(8);
+        let mut with: Vec<f64> = Vec::new();
+        let mut without: Vec<f64> = Vec::new();
+        // Find the most frequent label first.
+        let mut marg = vec![0usize; N_LABELS];
+        let samples: Vec<(Vec<f32>, Vec<bool>)> = (0..400).map(|_| w.sample(&mut rng)).collect();
+        for (_, l) in &samples {
+            for (i, &b) in l.iter().enumerate() {
+                if b {
+                    marg[i] += 1;
+                }
+            }
+        }
+        let top = (0..N_LABELS).max_by_key(|&i| marg[i]).unwrap();
+        let sig = &w.signatures[top];
+        for (x, l) in &samples {
+            // Projection of the patch onto the label's signature.
+            let mut proj = 0.0f64;
+            for p in 0..64 {
+                for b in 0..N_BANDS {
+                    proj += (x[p * N_BANDS + b] * sig[b]) as f64;
+                }
+            }
+            if l[top] {
+                with.push(proj);
+            } else {
+                without.push(proj);
+            }
+        }
+        let mw = crate::util::stats::mean(&with);
+        let mo = crate::util::stats::mean(&without);
+        assert!(mw > mo, "label signature not detectable: {mw} vs {mo}");
+    }
+}

@@ -1,0 +1,230 @@
+//! RNA family generator (§3.4): contact maps + coevolving MSAs.
+//!
+//! The Rfam substitution: a synthetic family is a secondary structure
+//! (nested base pairs, sampled like a stem-loop layout) plus a few
+//! tertiary contacts; sequences are sampled so paired positions co-vary
+//! (Watson–Crick + wobble complementarity with high probability) on top of
+//! iid position profiles. This induces exactly the pairwise covariance
+//! structure DCA inverts and the CNN re-weights — the mechanism both
+//! methods depend on in the paper's cited CoCoNet work.
+
+use crate::util::rng::Rng;
+
+/// Nucleotide alphabet size (A, C, G, U).
+pub const Q: usize = 4;
+
+/// One synthetic family: structure + alignment.
+#[derive(Debug, Clone)]
+pub struct RnaFamily {
+    /// Sequence length.
+    pub l: usize,
+    /// Contact map (l*l, symmetric, no diagonal).
+    pub contacts: Vec<bool>,
+    /// MSA: `m` rows of `l` nucleotides (0..Q).
+    pub msa: Vec<Vec<u8>>,
+}
+
+/// Complementary pairs (A-U, G-C, G-U wobble).
+fn complement(base: u8, rng: &mut Rng) -> u8 {
+    match base {
+        0 => 3,                                 // A -> U
+        1 => 2,                                 // C -> G
+        2 => {
+            if rng.chance(0.8) {
+                1 // G -> C
+            } else {
+                3 // G -> U wobble
+            }
+        }
+        _ => {
+            if rng.chance(0.8) {
+                0 // U -> A
+            } else {
+                2 // U -> G wobble
+            }
+        }
+    }
+}
+
+/// Sample a nested secondary structure: stems of paired positions
+/// (i, j) with j - i >= 4, plus `tertiary` long-range contacts.
+pub fn sample_structure(l: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    let mut used = vec![false; l];
+    // 2-3 stems of length 3-5.
+    let stems = rng.range(2, 4);
+    for _ in 0..stems {
+        let stem_len = rng.range(3, 6);
+        // Find an open region.
+        for _try in 0..20 {
+            let i = rng.range(0, l.saturating_sub(2 * stem_len + 4));
+            let j = i + 2 * stem_len + rng.range(3, 7);
+            if j >= l {
+                continue;
+            }
+            let ok = (0..stem_len).all(|k| !used[i + k] && !used[j - k]);
+            if ok {
+                for k in 0..stem_len {
+                    pairs.push((i + k, j - k));
+                    used[i + k] = true;
+                    used[j - k] = true;
+                }
+                break;
+            }
+        }
+    }
+    // 1-2 tertiary contacts between unpaired positions.
+    for _ in 0..rng.range(1, 3) {
+        for _try in 0..20 {
+            let i = rng.range(0, l);
+            let j = rng.range(0, l);
+            let (i, j) = (i.min(j), i.max(j));
+            if j - i >= 6 && !used[i] && !used[j] {
+                pairs.push((i, j));
+                used[i] = true;
+                used[j] = true;
+                break;
+            }
+        }
+    }
+    pairs
+}
+
+/// Sample a family: structure + an MSA of `m` coevolving sequences.
+pub fn sample_family(l: usize, m: usize, rng: &mut Rng) -> RnaFamily {
+    let pairs = sample_structure(l, rng);
+    let mut contacts = vec![false; l * l];
+    for &(i, j) in &pairs {
+        contacts[i * l + j] = true;
+        contacts[j * l + i] = true;
+    }
+    // Position profiles: each unpaired column has a preferred base.
+    let profile: Vec<(u8, f64)> = (0..l)
+        .map(|_| (rng.range(0, Q) as u8, rng.uniform(0.45, 0.8)))
+        .collect();
+    let mut msa = Vec::with_capacity(m);
+    for _ in 0..m {
+        let mut seq = vec![0u8; l];
+        for i in 0..l {
+            let (pref, conc) = profile[i];
+            seq[i] = if rng.chance(conc) {
+                pref
+            } else {
+                rng.range(0, Q) as u8
+            };
+        }
+        // Enforce complementarity on paired positions with p=0.9
+        // (co-evolution signal; 0.1 leaves mutations DCA must see through).
+        for &(i, j) in &pairs {
+            if rng.chance(0.9) {
+                seq[j] = complement(seq[i], rng);
+            }
+        }
+        msa.push(seq);
+    }
+    RnaFamily { l, contacts, msa }
+}
+
+impl RnaFamily {
+    /// Number of true contacts (i < j).
+    pub fn n_contacts(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.l {
+            for j in (i + 1)..self.l {
+                if self.contacts[i * self.l + j] {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Mutual-information feature map (l*l): a cheap covariance statistic
+    /// fed to the CNN alongside the DCA scores.
+    pub fn mi_map(&self) -> Vec<f32> {
+        let l = self.l;
+        let m = self.msa.len() as f64;
+        let mut out = vec![0.0f32; l * l];
+        for i in 0..l {
+            for j in (i + 1)..l {
+                let mut joint = [[0.0f64; Q]; Q];
+                let mut fi = [0.0f64; Q];
+                let mut fj = [0.0f64; Q];
+                for seq in &self.msa {
+                    joint[seq[i] as usize][seq[j] as usize] += 1.0;
+                    fi[seq[i] as usize] += 1.0;
+                    fj[seq[j] as usize] += 1.0;
+                }
+                let mut mi = 0.0f64;
+                for a in 0..Q {
+                    for b in 0..Q {
+                        let p = joint[a][b] / m;
+                        if p > 0.0 {
+                            mi += p * (p / ((fi[a] / m) * (fj[b] / m))).ln();
+                        }
+                    }
+                }
+                out[i * l + j] = mi as f32;
+                out[j * l + i] = mi as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_shapes() {
+        let mut rng = Rng::seed_from(0);
+        let fam = sample_family(24, 50, &mut rng);
+        assert_eq!(fam.msa.len(), 50);
+        assert_eq!(fam.msa[0].len(), 24);
+        assert!(fam.n_contacts() >= 6, "contacts {}", fam.n_contacts());
+        assert!(fam.msa.iter().flatten().all(|&b| (b as usize) < Q));
+    }
+
+    #[test]
+    fn contacts_symmetric_no_diagonal() {
+        let mut rng = Rng::seed_from(1);
+        let fam = sample_family(20, 30, &mut rng);
+        for i in 0..20 {
+            assert!(!fam.contacts[i * 20 + i]);
+            for j in 0..20 {
+                assert_eq!(fam.contacts[i * 20 + j], fam.contacts[j * 20 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn paired_columns_covary() {
+        // MI at contact pairs should dominate MI at non-contact pairs.
+        let mut rng = Rng::seed_from(2);
+        let fam = sample_family(24, 200, &mut rng);
+        let mi = fam.mi_map();
+        let mut on = Vec::new();
+        let mut off = Vec::new();
+        for i in 0..24 {
+            for j in (i + 1)..24 {
+                if fam.contacts[i * 24 + j] {
+                    on.push(mi[i * 24 + j] as f64);
+                } else {
+                    off.push(mi[i * 24 + j] as f64);
+                }
+            }
+        }
+        let mon = crate::util::stats::mean(&on);
+        let moff = crate::util::stats::mean(&off);
+        assert!(mon > 3.0 * moff, "MI contacts {mon} vs background {moff}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = sample_family(16, 20, &mut Rng::seed_from(5));
+        let b = sample_family(16, 20, &mut Rng::seed_from(5));
+        assert_eq!(a.msa, b.msa);
+        assert_eq!(a.contacts, b.contacts);
+    }
+}

@@ -1,0 +1,164 @@
+//! Token corpus generator for the transformer workloads.
+//!
+//! A sparse Markov chain with Zipf-distributed unigram fallback: every
+//! token has a handful of likely successors, so a causal LM can push the
+//! loss well below the unigram entropy — giving the end-to-end training
+//! example a real learning signal (the GPT-3/MLPerf-transformer analog).
+
+use crate::util::rng::Rng;
+
+/// Generator state.
+#[derive(Debug, Clone)]
+pub struct TextCorpus {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Per-token successor lists (sparse transitions).
+    successors: Vec<Vec<u32>>,
+    /// Zipf CDF for unigram fallback.
+    zipf_cdf: Vec<f64>,
+    /// Probability of following the chain vs unigram fallback.
+    pub coherence: f64,
+}
+
+impl TextCorpus {
+    /// Build a corpus model from a seed.
+    pub fn new(vocab: usize, seed: u64) -> TextCorpus {
+        let mut rng = Rng::seed_from(seed ^ 0x7E47);
+        let successors: Vec<Vec<u32>> = (0..vocab)
+            .map(|_| {
+                let k = rng.range(2, 6);
+                (0..k).map(|_| rng.below(vocab as u64) as u32).collect()
+            })
+            .collect();
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for k in 1..=vocab {
+            acc += 1.0 / (k as f64).powf(1.1);
+            cdf.push(acc);
+        }
+        for v in cdf.iter_mut() {
+            *v /= acc;
+        }
+        TextCorpus {
+            vocab,
+            successors,
+            zipf_cdf: cdf,
+            coherence: 0.85,
+        }
+    }
+
+    fn zipf_token(&self, rng: &mut Rng) -> u32 {
+        let u = rng.f64();
+        match self
+            .zipf_cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) | Err(i) => i.min(self.vocab - 1) as u32,
+        }
+    }
+
+    /// Sample a sequence of `len` tokens.
+    pub fn sequence(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = self.zipf_token(rng);
+        out.push(cur as i32);
+        for _ in 1..len {
+            cur = if rng.chance(self.coherence) {
+                let succ = &self.successors[cur as usize];
+                succ[rng.range(0, succ.len())]
+            } else {
+                self.zipf_token(rng)
+            };
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// Batch of token sequences, flat (B*S).
+    pub fn batch(&self, batch: usize, seq: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            out.extend(self.sequence(seq, rng));
+        }
+        out
+    }
+
+    /// Empirical bigram cross-entropy lower bound (nats/token): what a
+    /// perfect bigram model would score — the floor the transformer
+    /// should approach.
+    pub fn bigram_entropy_estimate(&self, rng: &mut Rng, samples: usize) -> f64 {
+        // H = -E[log p(next | cur)] under the true process.
+        let mut h = 0.0f64;
+        for _ in 0..samples {
+            let cur = self.zipf_token(rng) as usize;
+            let succ_len = self.successors[cur].len() as f64;
+            // Chain step probability mass.
+            let p_chain = self.coherence / succ_len;
+            // Fallback mass is spread over the Zipf; approximate with its
+            // average probability for a drawn token.
+            let t = self.zipf_token(rng) as usize;
+            let p_zipf = if t == 0 {
+                self.zipf_cdf[0]
+            } else {
+                self.zipf_cdf[t] - self.zipf_cdf[t - 1]
+            };
+            let p = if rng.chance(self.coherence) {
+                p_chain + (1.0 - self.coherence) * p_zipf
+            } else {
+                (1.0 - self.coherence) * p_zipf + p_chain * 0.0_f64.max(0.0)
+            };
+            h -= p.max(1e-12).ln();
+        }
+        h / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range() {
+        let c = TextCorpus::new(256, 0);
+        let mut rng = Rng::seed_from(1);
+        let b = c.batch(4, 32, &mut rng);
+        assert_eq!(b.len(), 128);
+        assert!(b.iter().all(|&t| t >= 0 && (t as usize) < 256));
+    }
+
+    #[test]
+    fn chain_structure_visible() {
+        // Successor pairs occur far more often than chance.
+        let c = TextCorpus::new(64, 2);
+        let mut rng = Rng::seed_from(3);
+        let seq = c.sequence(20_000, &mut rng);
+        let mut follows = 0usize;
+        for w in seq.windows(2) {
+            if c.successors[w[0] as usize].contains(&(w[1] as u32)) {
+                follows += 1;
+            }
+        }
+        let frac = follows as f64 / (seq.len() - 1) as f64;
+        assert!(frac > 0.7, "chain-following fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_marginals() {
+        let c = TextCorpus::new(128, 4);
+        let mut rng = Rng::seed_from(5);
+        let mut counts = vec![0usize; 128];
+        for _ in 0..30_000 {
+            counts[c.zipf_token(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[100]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = TextCorpus::new(64, 7);
+        let a = c.sequence(100, &mut Rng::seed_from(8));
+        let b = c.sequence(100, &mut Rng::seed_from(8));
+        assert_eq!(a, b);
+    }
+}

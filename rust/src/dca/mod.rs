@@ -1,0 +1,355 @@
+//! Mean-field Direct Coupling Analysis (§3.4's baseline).
+//!
+//! The physics-based co-evolution method the paper cites (Weigt et al.
+//! 2009; De Leonardis et al. 2015 for RNA): estimate single/pair column
+//! frequencies from the MSA with pseudocounts, build the connected
+//! correlation matrix over (position, nucleotide) pairs, invert it (the
+//! mean-field approximation of the inverse Potts problem), and score every
+//! position pair by the Frobenius norm of its coupling block with APC
+//! correction — exactly the pipeline CoCoNet's CNN re-weights.
+
+use crate::data::rna::{RnaFamily, Q};
+use crate::util::error::{BoosterError, Result};
+
+/// DCA hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DcaParams {
+    /// Pseudocount weight λ (fraction of the total count budget).
+    pub pseudocount: f64,
+}
+
+impl Default for DcaParams {
+    fn default() -> Self {
+        DcaParams { pseudocount: 0.5 }
+    }
+}
+
+/// Result: per-pair scores.
+#[derive(Debug, Clone)]
+pub struct DcaScores {
+    /// Sequence length.
+    pub l: usize,
+    /// Symmetric APC-corrected score map (l*l, zero diagonal).
+    pub scores: Vec<f64>,
+}
+
+/// Run mean-field DCA on a family's MSA.
+pub fn mean_field_dca(fam: &RnaFamily, params: DcaParams) -> Result<DcaScores> {
+    let l = fam.l;
+    let m = fam.msa.len();
+    if m < 2 {
+        return Err(BoosterError::Sim("DCA needs at least 2 sequences".into()));
+    }
+    let lam = params.pseudocount;
+    let meff = m as f64;
+    let denom = lam + meff;
+    let qm1 = Q - 1;
+
+    // Single-site frequencies with pseudocount.
+    let mut fi = vec![0.0f64; l * Q];
+    for seq in &fam.msa {
+        for (i, &a) in seq.iter().enumerate() {
+            fi[i * Q + a as usize] += 1.0;
+        }
+    }
+    for v in fi.iter_mut() {
+        *v = (lam / Q as f64 + *v) / denom;
+    }
+
+    // Pair frequencies with pseudocount.
+    let mut fij = vec![0.0f64; l * l * Q * Q];
+    for seq in &fam.msa {
+        for i in 0..l {
+            let a = seq[i] as usize;
+            for j in 0..l {
+                let b = seq[j] as usize;
+                fij[((i * l + j) * Q + a) * Q + b] += 1.0;
+            }
+        }
+    }
+    for i in 0..l {
+        for j in 0..l {
+            for a in 0..Q {
+                for b in 0..Q {
+                    let v = &mut fij[((i * l + j) * Q + a) * Q + b];
+                    if i == j {
+                        *v = if a == b { fi[i * Q + a] } else { 0.0 };
+                    } else {
+                        *v = (lam / (Q * Q) as f64 + *v) / denom;
+                    }
+                }
+            }
+        }
+    }
+
+    // Connected-correlation matrix over (i, a) with a < Q-1.
+    let n = l * qm1;
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..l {
+        for a in 0..qm1 {
+            for j in 0..l {
+                for b in 0..qm1 {
+                    let cij = fij[((i * l + j) * Q + a) * Q + b] - fi[i * Q + a] * fi[j * Q + b];
+                    c[(i * qm1 + a) * n + (j * qm1 + b)] = cij;
+                }
+            }
+        }
+    }
+
+    // Mean-field couplings: e = -C^{-1}.
+    let cinv = invert(&c, n)?;
+
+    // Frobenius norm per pair + APC.
+    let mut fn_scores = vec![0.0f64; l * l];
+    for i in 0..l {
+        for j in 0..l {
+            if i == j {
+                continue;
+            }
+            let mut s = 0.0;
+            for a in 0..qm1 {
+                for b in 0..qm1 {
+                    let e = -cinv[(i * qm1 + a) * n + (j * qm1 + b)];
+                    s += e * e;
+                }
+            }
+            fn_scores[i * l + j] = s.sqrt();
+        }
+    }
+    // Symmetrize.
+    for i in 0..l {
+        for j in (i + 1)..l {
+            let s = 0.5 * (fn_scores[i * l + j] + fn_scores[j * l + i]);
+            fn_scores[i * l + j] = s;
+            fn_scores[j * l + i] = s;
+        }
+    }
+    // APC: S'_ij = S_ij - S_i. S_.j / S_..
+    let mut row_mean = vec![0.0f64; l];
+    let mut total = 0.0f64;
+    for i in 0..l {
+        let mut s = 0.0;
+        for j in 0..l {
+            s += fn_scores[i * l + j];
+        }
+        row_mean[i] = s / (l - 1) as f64;
+        total += s;
+    }
+    let grand = total / (l * (l - 1)) as f64;
+    let mut scores = vec![0.0f64; l * l];
+    for i in 0..l {
+        for j in 0..l {
+            if i != j && grand > 0.0 {
+                scores[i * l + j] = fn_scores[i * l + j] - row_mean[i] * row_mean[j] / grand;
+            }
+        }
+    }
+    Ok(DcaScores { l, scores })
+}
+
+/// Gauss–Jordan inversion with partial pivoting (n ≲ 100 here; the
+/// mean-field correlation matrices are small and well-conditioned after
+/// pseudocounting).
+fn invert(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut m = a.to_vec();
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > best {
+                best = m[r * n + col].abs();
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return Err(BoosterError::Sim(format!(
+                "singular correlation matrix at column {col}"
+            )));
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+                inv.swap(col * n + k, piv * n + k);
+            }
+        }
+        let d = m[col * n + col];
+        for k in 0..n {
+            m[col * n + k] /= d;
+            inv[col * n + k] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[r * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in 0..n {
+                m[r * n + k] -= f * m[col * n + k];
+                inv[r * n + k] -= f * inv[col * n + k];
+            }
+        }
+    }
+    Ok(inv)
+}
+
+impl DcaScores {
+    /// Top-k predicted pairs (i < j, |i-j| >= min_sep), best first.
+    pub fn top_pairs(&self, k: usize, min_sep: usize) -> Vec<(usize, usize)> {
+        let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
+        for i in 0..self.l {
+            for j in (i + 1)..self.l {
+                if j - i >= min_sep {
+                    pairs.push((i, j, self.scores[i * self.l + j]));
+                }
+            }
+        }
+        pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        pairs.into_iter().take(k).map(|(i, j, _)| (i, j)).collect()
+    }
+
+    /// Scores as an f32 feature map for the CNN.
+    pub fn feature_map(&self) -> Vec<f32> {
+        // Standardize to zero-mean unit-std for stable CNN input.
+        let mean = crate::util::stats::mean(&self.scores);
+        let std = crate::util::stats::stddev(&self.scores).max(1e-9);
+        self.scores
+            .iter()
+            .map(|&s| ((s - mean) / std) as f32)
+            .collect()
+    }
+}
+
+/// Positive predictive value of predicted pairs against a contact map.
+pub fn ppv(pred: &[(usize, usize)], contacts: &[bool], l: usize) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .iter()
+        .filter(|&&(i, j)| contacts[i * l + j])
+        .count();
+    hits as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rna::sample_family;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn invert_identity() {
+        let n = 5;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 2.0;
+        }
+        let inv = invert(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 0.5 } else { 0.0 };
+                assert!((inv[i * n + j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn invert_roundtrip_random() {
+        let mut rng = Rng::seed_from(3);
+        let n = 12;
+        // Diagonally-dominant random matrix (invertible).
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = rng.normal() * 0.2;
+            }
+            a[i * n + i] += 3.0;
+        }
+        let inv = invert(&a, n).unwrap();
+        // a * inv ≈ I
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let a = vec![0.0f64; 9];
+        assert!(invert(&a, 3).is_err());
+    }
+
+    #[test]
+    fn dca_finds_contacts_with_deep_msa() {
+        // With plenty of sequences the mean-field inversion should place
+        // true contacts at the top (the classic DCA result).
+        let mut rng = Rng::seed_from(11);
+        let fam = sample_family(24, 400, &mut rng);
+        let scores = mean_field_dca(&fam, DcaParams::default()).unwrap();
+        let k = fam.n_contacts();
+        let pred = scores.top_pairs(k, 4);
+        let p = ppv(&pred, &fam.contacts, fam.l);
+        assert!(p > 0.6, "deep-MSA DCA PPV {p}");
+    }
+
+    #[test]
+    fn dca_degrades_with_shallow_msa() {
+        let mut rng = Rng::seed_from(13);
+        let deep = sample_family(24, 400, &mut rng.fork(0));
+        let shallow = sample_family(24, 30, &mut rng.fork(1));
+        let k = 10;
+        let p_deep = ppv(
+            &mean_field_dca(&deep, DcaParams::default())
+                .unwrap()
+                .top_pairs(k, 4),
+            &deep.contacts,
+            deep.l,
+        );
+        let p_shallow = ppv(
+            &mean_field_dca(&shallow, DcaParams::default())
+                .unwrap()
+                .top_pairs(k, 4),
+            &shallow.contacts,
+            shallow.l,
+        );
+        assert!(
+            p_deep >= p_shallow,
+            "deep {p_deep} should beat shallow {p_shallow}"
+        );
+    }
+
+    #[test]
+    fn feature_map_standardized() {
+        let mut rng = Rng::seed_from(17);
+        let fam = sample_family(16, 80, &mut rng);
+        let f = mean_field_dca(&fam, DcaParams::default())
+            .unwrap()
+            .feature_map();
+        let xs: Vec<f64> = f.iter().map(|&v| v as f64).collect();
+        assert!(crate::util::stats::mean(&xs).abs() < 0.05);
+        assert!((crate::util::stats::stddev(&xs) - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn ppv_counts_correctly() {
+        let l = 4;
+        let mut contacts = vec![false; 16];
+        contacts[1] = true; // (0,1)
+        contacts[4] = true;
+        let pred = vec![(0, 1), (2, 3)];
+        assert!((ppv(&pred, &contacts, l) - 0.5).abs() < 1e-12);
+    }
+}

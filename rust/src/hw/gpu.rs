@@ -1,0 +1,148 @@
+//! GPU compute model.
+//!
+//! An analytic device model: peak FLOP/s per precision, HBM capacity and
+//! bandwidth, TDP, and a roofline-style execution-time estimate used by the
+//! simulators. Calibrated to the NVIDIA A100-SXM4-40GB as installed in
+//! JUWELS Booster (§2.2), with the NVIDIA V100 included for sanity
+//! comparisons.
+
+use super::precision::Precision;
+
+/// Static description of a GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM bandwidth in bytes/s.
+    pub hbm_bw: f64,
+    /// Board power limit in watts.
+    pub tdp_watts: f64,
+    /// Per-GPU NVLink bandwidth to the intra-node fabric, bytes/s per
+    /// direction (A100: 12 links x 25 GB/s = 300 GB/s).
+    pub nvlink_bw: f64,
+    /// Idle power draw in watts (used by the energy model).
+    pub idle_watts: f64,
+}
+
+impl GpuSpec {
+    /// The A100-SXM4-40GB as installed in JUWELS Booster.
+    pub fn a100_40gb() -> GpuSpec {
+        GpuSpec {
+            name: "NVIDIA A100-SXM4-40GB",
+            hbm_bytes: 40 * (1u64 << 30),
+            hbm_bw: 1555e9,
+            tdp_watts: 400.0,
+            nvlink_bw: 300e9,
+            idle_watts: 55.0,
+        }
+    }
+
+    /// V100-SXM2-16GB (for cross-checks against older systems).
+    pub fn v100_16gb() -> GpuSpec {
+        GpuSpec {
+            name: "NVIDIA V100-SXM2-16GB",
+            hbm_bytes: 16 * (1u64 << 30),
+            hbm_bw: 900e9,
+            tdp_watts: 300.0,
+            nvlink_bw: 150e9,
+            idle_watts: 40.0,
+        }
+    }
+
+    /// Peak FLOP/s for a precision (§2.2 table for the A100; V100 values
+    /// from the V100 whitepaper).
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        match self.name {
+            "NVIDIA A100-SXM4-40GB" => match p {
+                Precision::Fp64 => 9.7e12,
+                Precision::Fp64Tc => 19.5e12,
+                Precision::Fp32 => 19.5e12,
+                Precision::Tf32Tc => 156e12,
+                Precision::Fp16 => 78e12,
+                Precision::Fp16Tc => 312e12,
+                Precision::Bf16Tc => 312e12,
+            },
+            _ => match p {
+                // V100: no FP64/TF32/BF16 tensor cores.
+                Precision::Fp64 | Precision::Fp64Tc => 7.8e12,
+                Precision::Fp32 | Precision::Tf32Tc => 15.7e12,
+                Precision::Fp16 => 31.4e12,
+                Precision::Fp16Tc | Precision::Bf16Tc => 125e12,
+            },
+        }
+    }
+
+    /// Peak power efficiency in FLOP/(s·W) at a precision.
+    ///
+    /// The paper: *"With respect to the FP64 Tensor Cores, an excellent
+    /// peak efficiency of 48.75 GFLOP/(s W) can be reached."*
+    pub fn peak_efficiency(&self, p: Precision) -> f64 {
+        self.peak_flops(p) / self.tdp_watts
+    }
+
+    /// Roofline execution-time estimate for a kernel that performs `flops`
+    /// floating-point operations and moves `bytes` over HBM, at a given
+    /// achievable-fraction of peak (`efficiency`, e.g. 0.5 for a
+    /// well-optimized training step).
+    ///
+    /// `time = max(flops / (peak * eff), bytes / hbm_bw)` — compute-bound
+    /// kernels sit on the first term, bandwidth-bound ones on the second.
+    pub fn kernel_time(&self, flops: f64, bytes: f64, p: Precision, efficiency: f64) -> f64 {
+        assert!(efficiency > 0.0 && efficiency <= 1.0);
+        let t_compute = flops / (self.peak_flops(p) * efficiency);
+        let t_memory = bytes / self.hbm_bw;
+        t_compute.max(t_memory)
+    }
+
+    /// Arithmetic-intensity ridge point (FLOP per byte) at a precision:
+    /// kernels below this are bandwidth-bound.
+    pub fn ridge_point(&self, p: Precision, efficiency: f64) -> f64 {
+        self.peak_flops(p) * efficiency / self.hbm_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_peaks_match_paper_table() {
+        let g = GpuSpec::a100_40gb();
+        assert_eq!(g.peak_flops(Precision::Fp64), 9.7e12);
+        assert_eq!(g.peak_flops(Precision::Fp64Tc), 19.5e12);
+        assert_eq!(g.peak_flops(Precision::Fp32), 19.5e12);
+        assert_eq!(g.peak_flops(Precision::Tf32Tc), 156e12);
+        assert_eq!(g.peak_flops(Precision::Fp16), 78e12);
+        assert_eq!(g.peak_flops(Precision::Fp16Tc), 312e12);
+    }
+
+    #[test]
+    fn fp64_tc_peak_efficiency_is_48_75() {
+        // §2.2: 19.5 TFLOP/s / 400 W = 48.75 GFLOP/(s W).
+        let g = GpuSpec::a100_40gb();
+        let eff = g.peak_efficiency(Precision::Fp64Tc);
+        assert!((eff - 48.75e9).abs() < 1e6, "eff {eff}");
+    }
+
+    #[test]
+    fn kernel_time_rooflines() {
+        let g = GpuSpec::a100_40gb();
+        // Hugely compute-heavy kernel: time is flops-limited.
+        let t = g.kernel_time(1e15, 1e6, Precision::Fp16Tc, 0.5);
+        assert!((t - 1e15 / (312e12 * 0.5)).abs() / t < 1e-12);
+        // Pure streaming kernel: time is bandwidth-limited.
+        let t = g.kernel_time(1.0, 1555e9, Precision::Fp16Tc, 0.5);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_point_ordering() {
+        let g = GpuSpec::a100_40gb();
+        assert!(
+            g.ridge_point(Precision::Fp16Tc, 1.0) > g.ridge_point(Precision::Fp64, 1.0),
+            "TC path needs more intensity to saturate"
+        );
+    }
+}

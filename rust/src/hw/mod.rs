@@ -1,0 +1,17 @@
+//! Hardware models of the JUWELS Booster building blocks (§2.2 of the
+//! paper): the NVIDIA A100 GPU (per-precision peaks, Tensor Cores, power),
+//! the 4-GPU AMD EPYC compute node, and the power/energy accounting used
+//! for the Green500-style efficiency numbers.
+//!
+//! Nothing here executes — these are calibrated analytic models composed
+//! with the network simulator to predict what needs 3744 GPUs; real
+//! numerics run through [`crate::runtime`] on CPU instead.
+
+pub mod gpu;
+pub mod node;
+pub mod power;
+pub mod precision;
+
+pub use gpu::GpuSpec;
+pub use node::NodeSpec;
+pub use precision::Precision;

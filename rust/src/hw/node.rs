@@ -1,0 +1,108 @@
+//! Compute-node model.
+//!
+//! JUWELS Booster node (§2.2): 4x A100 (NVLink/NVSwitch), 2x AMD EPYC 7402
+//! (24 cores each, SMT-2), 512 GB RAM, 4x Mellanox ConnectX-6 HDR200
+//! InfiniBand adapters (200 Gbit/s per direction each).
+
+use super::gpu::GpuSpec;
+
+/// Static description of a compute node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// GPU model installed.
+    pub gpu: GpuSpec,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// InfiniBand adapters per node.
+    pub nics_per_node: usize,
+    /// Per-NIC bandwidth, bytes/s per direction (HDR200 = 200 Gbit/s).
+    pub nic_bw: f64,
+    /// Host CPU cores (physical).
+    pub cpu_cores: usize,
+    /// Host RAM bytes.
+    pub ram_bytes: u64,
+    /// Host-side base power in watts (CPUs, DRAM, fans).
+    pub host_watts: f64,
+}
+
+impl NodeSpec {
+    /// A JUWELS Booster node.
+    pub fn juwels_booster() -> NodeSpec {
+        NodeSpec {
+            name: "JUWELS Booster node",
+            gpu: GpuSpec::a100_40gb(),
+            gpus_per_node: 4,
+            nics_per_node: 4,
+            nic_bw: 200e9 / 8.0, // 200 Gbit/s -> 25 GB/s
+            cpu_cores: 48,       // 2x 24-core EPYC 7402
+            ram_bytes: 512 * (1u64 << 30),
+            host_watts: 450.0,
+        }
+    }
+
+    /// An NVIDIA Selene node (DGX A100: 8 GPUs, 8 HDR NICs) — the
+    /// comparison machine in §2.4's MLPerf study.
+    pub fn selene() -> NodeSpec {
+        NodeSpec {
+            name: "NVIDIA Selene (DGX A100) node",
+            gpu: GpuSpec::a100_40gb(),
+            gpus_per_node: 8,
+            nics_per_node: 8,
+            nic_bw: 200e9 / 8.0,
+            cpu_cores: 128, // 2x 64-core EPYC 7742
+            ram_bytes: 1024 * (1u64 << 30),
+            host_watts: 700.0,
+        }
+    }
+
+    /// Aggregate injection bandwidth of the node into the fabric, bytes/s
+    /// per direction.
+    pub fn injection_bw(&self) -> f64 {
+        self.nics_per_node as f64 * self.nic_bw
+    }
+
+    /// Aggregate peak FLOP/s of the node at a precision.
+    pub fn peak_flops(&self, p: super::precision::Precision) -> f64 {
+        self.gpus_per_node as f64 * self.gpu.peak_flops(p)
+    }
+
+    /// Nominal all-GPUs-busy node power draw in watts.
+    pub fn busy_watts(&self) -> f64 {
+        self.host_watts + self.gpus_per_node as f64 * self.gpu.tdp_watts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::precision::Precision;
+
+    #[test]
+    fn booster_node_matches_paper() {
+        let n = NodeSpec::juwels_booster();
+        assert_eq!(n.gpus_per_node, 4);
+        assert_eq!(n.nics_per_node, 4);
+        assert_eq!(n.cpu_cores, 48);
+        // 4 NICs x 25 GB/s = 100 GB/s injection.
+        assert!((n.injection_bw() - 100e9).abs() < 1.0);
+        // 4 x 19.5 TFLOP/s FP64_TC = 78 TFLOP/s per node.
+        assert!((n.peak_flops(Precision::Fp64Tc) - 78e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn selene_has_double_density() {
+        let b = NodeSpec::juwels_booster();
+        let s = NodeSpec::selene();
+        assert_eq!(s.gpus_per_node, 2 * b.gpus_per_node);
+        assert_eq!(s.nics_per_node, 2 * b.nics_per_node);
+    }
+
+    #[test]
+    fn busy_power_is_plausible() {
+        let n = NodeSpec::juwels_booster();
+        // 4 x 400 W + host: ~2 kW class node.
+        assert!(n.busy_watts() > 1600.0 && n.busy_watts() < 2500.0);
+    }
+}

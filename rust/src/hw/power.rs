@@ -1,0 +1,111 @@
+//! Power and energy accounting.
+//!
+//! Reproduces the §2.2 efficiency statements: the FP64_TC *peak* efficiency
+//! of 48.75 GFLOP/(s·W), and the *measured* Green500 November-2020 figure
+//! of 25 GFLOP/(s·W) (HPL sustained FLOP/s over total machine power,
+//! including hosts and a PUE-like overhead for fabric/storage).
+
+use super::node::NodeSpec;
+use super::precision::Precision;
+
+/// Machine-level power/energy model.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Node description.
+    pub node: NodeSpec,
+    /// Number of nodes.
+    pub nodes: usize,
+    /// Fractional overhead for fabric, storage and cooling on top of node
+    /// power (JUWELS Booster uses warm-water cooling; the overhead here is
+    /// fabric + storage + PSU losses).
+    pub overhead: f64,
+}
+
+impl PowerModel {
+    /// JUWELS Booster: 936 nodes, ~8% infrastructure overhead.
+    pub fn juwels_booster() -> PowerModel {
+        PowerModel {
+            node: NodeSpec::juwels_booster(),
+            nodes: 936,
+            overhead: 0.08,
+        }
+    }
+
+    /// Total machine power with every GPU at a given utilization in [0,1].
+    pub fn machine_watts(&self, gpu_utilization: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&gpu_utilization));
+        let g = &self.node.gpu;
+        let gpu_w = g.idle_watts + gpu_utilization * (g.tdp_watts - g.idle_watts);
+        let node_w = self.node.host_watts + self.node.gpus_per_node as f64 * gpu_w;
+        node_w * self.nodes as f64 * (1.0 + self.overhead)
+    }
+
+    /// Sustained machine FLOP/s for an HPL-like run: FP64_TC peak scaled by
+    /// an achieved fraction (Top500 JUWELS Booster: 44.1 PFLOP/s Rmax vs
+    /// 70.98 PFLOP/s Rpeak -> ~0.62).
+    pub fn hpl_sustained(&self, achieved_fraction: f64) -> f64 {
+        self.nodes as f64 * self.node.peak_flops(Precision::Fp64Tc) * achieved_fraction
+    }
+
+    /// Green500-style metric: sustained FLOP/s per watt at full utilization.
+    pub fn green500(&self, achieved_fraction: f64) -> f64 {
+        self.hpl_sustained(achieved_fraction) / self.machine_watts(1.0)
+    }
+
+    /// Energy in joules for a job occupying `nodes` nodes for `seconds`
+    /// at `gpu_utilization`.
+    pub fn job_energy(&self, nodes: usize, seconds: f64, gpu_utilization: f64) -> f64 {
+        assert!(nodes <= self.nodes);
+        let g = &self.node.gpu;
+        let gpu_w = g.idle_watts + gpu_utilization * (g.tdp_watts - g.idle_watts);
+        let node_w = self.node.host_watts + self.node.gpus_per_node as f64 * gpu_w;
+        node_w * nodes as f64 * (1.0 + self.overhead) * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn green500_in_measured_ballpark() {
+        // §2.2: "25 GFLOP/(s W)" measured (Green500 Nov 2020, 25.0 exact:
+        // Rmax 44.12 PFLOP/s / 1764 kW). Our model should land within 15%.
+        let m = PowerModel::juwels_booster();
+        let g = m.green500(0.62);
+        assert!(
+            (g - 25e9).abs() / 25e9 < 0.15,
+            "green500 {:.2} GFLOP/sW",
+            g / 1e9
+        );
+    }
+
+    #[test]
+    fn hpl_sustained_near_top500_rmax() {
+        // Top500 Nov 2020: JUWELS Booster Rmax = 44.12 PFLOP/s.
+        let m = PowerModel::juwels_booster();
+        let rmax = m.hpl_sustained(0.62);
+        assert!(
+            (rmax - 44.12e15).abs() / 44.12e15 < 0.05,
+            "rmax {:.2} PFLOP/s",
+            rmax / 1e15
+        );
+    }
+
+    #[test]
+    fn power_scales_with_utilization() {
+        let m = PowerModel::juwels_booster();
+        assert!(m.machine_watts(1.0) > m.machine_watts(0.2));
+        // Full machine should sit in the published ~1.7-2.5 MW class.
+        let w = m.machine_watts(1.0);
+        assert!(w > 1.5e6 && w < 2.6e6, "machine watts {w}");
+    }
+
+    #[test]
+    fn job_energy_linear_in_time_and_nodes() {
+        let m = PowerModel::juwels_booster();
+        let e1 = m.job_energy(10, 100.0, 0.9);
+        assert!((m.job_energy(10, 200.0, 0.9) - 2.0 * e1).abs() < 1e-6);
+        assert!((m.job_energy(20, 100.0, 0.9) - 2.0 * e1).abs() < 1e-6);
+    }
+}

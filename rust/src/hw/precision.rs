@@ -1,0 +1,100 @@
+//! Numeric precisions and their A100 peak throughputs (§2.2).
+//!
+//! The paper: *"Within the 400 W TDP, the following peak performance is
+//! available: 9.7 TFLOP/s (FP64), 19.5 TFLOP/s FP64_TC and FP32, 78 TFLOP/s
+//! FP16, 156 TFLOP/s TF32_TC, 312 TFLOP/s FP16_TC, where TC denotes the
+//! usage of Tensor Cores."*
+
+/// Compute precision, with and without Tensor Cores (TC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE FP64 on the regular FP pipeline.
+    Fp64,
+    /// FP64 through the Tensor Cores (DMMA).
+    Fp64Tc,
+    /// IEEE FP32 on the regular pipeline.
+    Fp32,
+    /// TF32 matmuls through Tensor Cores.
+    Tf32Tc,
+    /// FP16 on the regular pipeline.
+    Fp16,
+    /// FP16 through the Tensor Cores (HMMA).
+    Fp16Tc,
+    /// BF16 through the Tensor Cores (same rate as FP16_TC on A100).
+    Bf16Tc,
+}
+
+impl Precision {
+    /// All variants, in the order the paper lists them.
+    pub const ALL: [Precision; 7] = [
+        Precision::Fp64,
+        Precision::Fp64Tc,
+        Precision::Fp32,
+        Precision::Tf32Tc,
+        Precision::Fp16,
+        Precision::Fp16Tc,
+        Precision::Bf16Tc,
+    ];
+
+    /// Bytes per element of the storage type.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Fp64 | Precision::Fp64Tc => 8,
+            Precision::Fp32 | Precision::Tf32Tc => 4,
+            Precision::Fp16 | Precision::Fp16Tc | Precision::Bf16Tc => 2,
+        }
+    }
+
+    /// Whether this path uses the Tensor Cores.
+    pub fn tensor_core(self) -> bool {
+        matches!(
+            self,
+            Precision::Fp64Tc | Precision::Tf32Tc | Precision::Fp16Tc | Precision::Bf16Tc
+        )
+    }
+
+    /// Display label matching the paper's notation.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp64 => "FP64",
+            Precision::Fp64Tc => "FP64_TC",
+            Precision::Fp32 => "FP32",
+            Precision::Tf32Tc => "TF32_TC",
+            Precision::Fp16 => "FP16",
+            Precision::Fp16Tc => "FP16_TC",
+            Precision::Bf16Tc => "BF16_TC",
+        }
+    }
+
+    /// Tensor Core tile-divisibility constraint the paper alludes to
+    /// ("Tensor Cores work most efficiently when the data dimension is
+    /// divisible by a certain number depending on the data type"): the
+    /// matrix dimension multiple for full TC utilization.
+    pub fn tc_dim_multiple(self) -> usize {
+        match self {
+            Precision::Fp64Tc => 4,
+            Precision::Tf32Tc => 4,
+            Precision::Fp16Tc | Precision::Bf16Tc => 8,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_sizes() {
+        assert_eq!(Precision::Fp64.bytes(), 8);
+        assert_eq!(Precision::Tf32Tc.bytes(), 4);
+        assert_eq!(Precision::Bf16Tc.bytes(), 2);
+    }
+
+    #[test]
+    fn tensor_core_flags() {
+        assert!(!Precision::Fp32.tensor_core());
+        assert!(Precision::Fp16Tc.tensor_core());
+        assert_eq!(Precision::Fp16Tc.tc_dim_multiple(), 8);
+    }
+}

@@ -1,0 +1,34 @@
+//! # BoosterKit
+//!
+//! A reproduction of *JUWELS Booster — A Supercomputer for Large-Scale AI
+//! Research* (Kesselheim et al., CS.DC 2021) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate contains a software twin of the JUWELS Booster machine
+//! (DragonFly+ fabric, A100 compute model, Slurm-like scheduler), a real
+//! data-parallel training stack executing AOT-compiled XLA artifacts via
+//! PJRT, and harnesses regenerating every table and figure in the paper's
+//! evaluation. See `DESIGN.md` for the full inventory.
+
+pub mod app;
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod dca;
+pub mod hw;
+pub mod mlperf;
+pub mod net;
+pub mod pipeline;
+pub mod report;
+pub mod rna;
+pub mod rs;
+pub mod runtime;
+pub mod sched;
+pub mod storage;
+pub mod topology;
+pub mod train;
+pub mod transfer;
+pub mod weather;
+pub mod util;
+
+pub use util::error::{BoosterError, Result};

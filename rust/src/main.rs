@@ -1,0 +1,15 @@
+//! `booster` CLI — leader entrypoint. Subcommands are wired up in
+//! `booster::util::cli::dispatch` so the binary stays a thin shim over the
+//! library.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match booster::app::dispatch(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,222 @@
+//! Pipeline / model parallelism simulator (§2.3).
+//!
+//! "Large deep learning models may not fit on a single computational
+//! device, requiring an extension of the purely data-parallel approach to
+//! model parallelism or pipelining ... JSC supports DeepSpeed."
+//!
+//! This module models the GPipe/1F1B microbatch schedules on the machine:
+//! per-stage compute from the A100 model, inter-stage activation
+//! transfers over the actual routes, the pipeline bubble, and a
+//! memory-capacity check that decides *when* pipelining is required at
+//! all — enabling the data-parallel vs pipeline-parallel crossover study.
+
+use crate::hw::precision::Precision;
+use crate::net::{simulate, Flow};
+use crate::topology::{GpuId, Topology};
+use crate::util::error::{BoosterError, Result};
+
+/// Microbatch schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// GPipe: all-forward then all-backward; bubble = (s-1)/(m+s-1).
+    GPipe,
+    /// 1F1B (PipeDream-flush): same bubble, lower activation memory.
+    OneFOneB,
+}
+
+/// A model to be pipelined.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelinedModel {
+    /// Total parameters.
+    pub params: f64,
+    /// Forward FLOPs per sample for the whole model.
+    pub fwd_flops_per_sample: f64,
+    /// Activation bytes crossing a stage boundary per sample.
+    pub activation_bytes_per_sample: f64,
+    /// Bytes of state per parameter (weights + grads + optimizer; Adam
+    /// mixed precision ≈ 16 B/param).
+    pub state_bytes_per_param: f64,
+}
+
+impl PipelinedModel {
+    /// GPT-3-like 175B configuration (the paper's motivating model).
+    pub fn gpt3_175b() -> PipelinedModel {
+        PipelinedModel {
+            params: 175e9,
+            fwd_flops_per_sample: 2.0 * 175e9 * 2048.0, // seq 2048
+            activation_bytes_per_sample: 2048.0 * 12288.0 * 2.0, // seq x hidden x bf16
+            state_bytes_per_param: 16.0,
+        }
+    }
+
+    /// Total state bytes.
+    pub fn state_bytes(&self) -> f64 {
+        self.params * self.state_bytes_per_param
+    }
+
+    /// Minimum pipeline stages to fit in `hbm_bytes` per GPU.
+    pub fn min_stages(&self, hbm_bytes: f64) -> usize {
+        (self.state_bytes() / hbm_bytes).ceil().max(1.0) as usize
+    }
+}
+
+/// Per-step timing of a pipelined training step.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineStep {
+    /// Total step seconds.
+    pub total: f64,
+    /// Bubble fraction (idle time share from pipeline fill/drain).
+    pub bubble_fraction: f64,
+    /// Per-microbatch stage compute seconds.
+    pub stage_time: f64,
+    /// Inter-stage transfer seconds per microbatch.
+    pub transfer_time: f64,
+}
+
+/// Simulate one training step of `model` split into `stages` consecutive
+/// stages over `gpus` (round-robin stage assignment must hold
+/// `gpus.len() == stages`), with `microbatches` of `micro_size` samples.
+pub fn step_time(
+    topo: &Topology,
+    gpus: &[GpuId],
+    model: &PipelinedModel,
+    schedule: Schedule,
+    microbatches: usize,
+    micro_size: usize,
+    efficiency: f64,
+) -> Result<PipelineStep> {
+    let s = gpus.len();
+    if s < 1 || microbatches < 1 {
+        return Err(BoosterError::Config("empty pipeline".into()));
+    }
+    // Memory check: this partitioning must actually fit.
+    let hbm = topo.node_spec.gpu.hbm_bytes as f64;
+    if model.state_bytes() / s as f64 > hbm {
+        return Err(BoosterError::Config(format!(
+            "model needs >= {} stages on {} GB GPUs",
+            model.min_stages(hbm),
+            hbm / 1e9
+        )));
+    }
+    // Per-stage fwd+bwd compute for one microbatch (uniform split).
+    let flops = 3.0 * model.fwd_flops_per_sample * micro_size as f64 / s as f64;
+    let stage_time = topo
+        .node_spec
+        .gpu
+        .kernel_time(flops, 0.0, Precision::Bf16Tc, efficiency);
+    // Inter-stage activation transfer (fwd) + gradient-of-activation (bwd).
+    let transfer_time = if s > 1 {
+        let bytes = model.activation_bytes_per_sample * micro_size as f64;
+        let flows: Vec<Flow> = (0..s - 1)
+            .map(|i| Flow {
+                path: topo.route(gpus[i], gpus[i + 1], i as u64),
+                bytes,
+                start: 0.0,
+            })
+            .collect();
+        simulate(topo, &flows)?.makespan
+    } else {
+        0.0
+    };
+    // Both schedules share the (s-1)/(m+s-1) bubble; 1F1B lowers memory,
+    // not time (flush variant).
+    let _ = schedule;
+    let m = microbatches as f64;
+    let slot = stage_time + 2.0 * transfer_time;
+    let total = (m + s as f64 - 1.0) * slot;
+    let useful = m * slot;
+    Ok(PipelineStep {
+        total,
+        bubble_fraction: 1.0 - useful / ((m + s as f64 - 1.0) * slot),
+        stage_time,
+        transfer_time,
+    })
+}
+
+/// Activation memory high-water mark per stage, in bytes — where 1F1B
+/// beats GPipe (it holds ≤ s in-flight microbatches instead of m).
+pub fn activation_memory(
+    model: &PipelinedModel,
+    schedule: Schedule,
+    stages: usize,
+    microbatches: usize,
+    micro_size: usize,
+) -> f64 {
+    let per_micro = model.activation_bytes_per_sample * micro_size as f64;
+    let in_flight = match schedule {
+        Schedule::GPipe => microbatches,
+        Schedule::OneFOneB => stages.min(microbatches),
+    };
+    per_micro * in_flight as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::juwels_booster()
+    }
+
+    #[test]
+    fn gpt3_does_not_fit_on_one_gpu() {
+        let m = PipelinedModel::gpt3_175b();
+        let hbm = 40e9;
+        assert!(m.min_stages(hbm) >= 70, "stages {}", m.min_stages(hbm));
+        let t = topo();
+        assert!(step_time(&t, &t.first_gpus(4), &m, Schedule::GPipe, 8, 1, 0.4).is_err());
+    }
+
+    #[test]
+    fn bubble_shrinks_with_microbatches() {
+        let t = topo();
+        let m = PipelinedModel {
+            params: 1e9,
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+            state_bytes_per_param: 16.0,
+        };
+        let gpus = t.first_gpus(8);
+        let few = step_time(&t, &gpus, &m, Schedule::GPipe, 2, 4, 0.4).unwrap();
+        let many = step_time(&t, &gpus, &m, Schedule::GPipe, 64, 4, 0.4).unwrap();
+        assert!(few.bubble_fraction > many.bubble_fraction);
+        assert!((few.bubble_fraction - 7.0 / 9.0).abs() < 1e-9);
+        assert!(many.bubble_fraction < 0.12);
+    }
+
+    #[test]
+    fn one_f_one_b_saves_memory_not_time() {
+        let t = topo();
+        let m = PipelinedModel {
+            params: 1e9,
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+            state_bytes_per_param: 16.0,
+        };
+        let gpus = t.first_gpus(8);
+        let a = step_time(&t, &gpus, &m, Schedule::GPipe, 32, 4, 0.4).unwrap();
+        let b = step_time(&t, &gpus, &m, Schedule::OneFOneB, 32, 4, 0.4).unwrap();
+        assert!((a.total - b.total).abs() < 1e-12);
+        let mem_gpipe = activation_memory(&m, Schedule::GPipe, 8, 32, 4);
+        let mem_1f1b = activation_memory(&m, Schedule::OneFOneB, 8, 32, 4);
+        assert!(mem_1f1b * 3.9 < mem_gpipe, "{mem_1f1b} vs {mem_gpipe}");
+    }
+
+    #[test]
+    fn cross_node_stages_pay_transfer() {
+        let t = topo();
+        let m = PipelinedModel {
+            params: 1e9,
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+            state_bytes_per_param: 16.0,
+        };
+        // 4 stages inside one node (NVLink) vs spread over 4 nodes.
+        let intra = t.first_gpus(4);
+        let inter: Vec<GpuId> = (0..4).map(|n| GpuId { node: n * 48, gpu: 0 }).collect();
+        let a = step_time(&t, &intra, &m, Schedule::GPipe, 16, 4, 0.4).unwrap();
+        let b = step_time(&t, &inter, &m, Schedule::GPipe, 16, 4, 0.4).unwrap();
+        assert!(b.transfer_time > a.transfer_time);
+        assert!(b.total > a.total);
+    }
+}

@@ -1,0 +1,23 @@
+//! Report generation — per-figure/table formatters plus CLI runners.
+//!
+//! Each `cmd_*` function backs one `booster` subcommand and regenerates one
+//! of the paper's evaluation artifacts (see DESIGN.md §4). Implementations
+//! are filled in by the experiment modules; this module owns only argument
+//! parsing and output formatting.
+
+use crate::util::error::Result;
+
+mod experiments;
+pub use experiments::*;
+
+/// Write a report both to stdout and to `results/<name>.txt` (+`.csv` if
+/// provided). Creates `results/` on demand.
+pub fn emit(name: &str, text: &str, csv: Option<&str>) -> Result<()> {
+    print!("{text}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.txt"), text)?;
+    if let Some(csv) = csv {
+        std::fs::write(format!("results/{name}.csv"), csv)?;
+    }
+    Ok(())
+}

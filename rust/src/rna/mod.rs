@@ -1,0 +1,182 @@
+//! RNA contact prediction: DCA baseline vs CNN (§3.4).
+//!
+//! The CoCoNet-style result the paper cites (Zerihun et al. 2020):
+//! a shallow CNN over DCA-derived feature maps improves contact
+//! prediction substantially (>70 % relative PPV) on shallow MSAs, because
+//! it learns the *spatial structure* of real contact maps (stems appear
+//! as anti-diagonal stripes) that the per-pair DCA score cannot see.
+//!
+//! Pipeline: sample synthetic families (shallow MSAs), run mean-field DCA
+//! per family, train the `rna_cnn` on (DCA score map, MI map) features vs
+//! true contacts, then compare PPV@k on held-out families.
+
+use crate::data::rna::{sample_family, RnaFamily};
+use crate::dca::{mean_field_dca, ppv, DcaParams, DcaScores};
+use crate::runtime::{tensor, Engine};
+use crate::train::{LrSchedule, Trainer};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Experiment configuration.
+#[derive(Debug, Clone)]
+pub struct RnaCfg {
+    /// Sequence length (must match the rna_cnn artifact: 24).
+    pub l: usize,
+    /// MSA depth — kept shallow so DCA struggles (the regime where the
+    /// CNN helps, matching Rfam's small families).
+    pub msa_depth: usize,
+    /// Training families.
+    pub n_train: usize,
+    /// Held-out families.
+    pub n_test: usize,
+    /// Training steps.
+    pub steps: usize,
+    /// Minimum |i-j| for scored pairs.
+    pub min_sep: usize,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for RnaCfg {
+    fn default() -> Self {
+        RnaCfg {
+            l: 24,
+            msa_depth: 8,
+            n_train: 160,
+            n_test: 24,
+            steps: 240,
+            min_sep: 4,
+            seed: 424242,
+        }
+    }
+}
+
+/// A prepared family: features + truth + DCA prediction quality.
+pub struct PreparedFamily {
+    /// The family.
+    pub fam: RnaFamily,
+    /// DCA scores.
+    pub dca: DcaScores,
+    /// Feature map (l*l*2): standardized DCA + standardized MI.
+    pub features: Vec<f32>,
+}
+
+/// Run DCA and build CNN features for one family.
+pub fn prepare(fam: RnaFamily) -> Result<PreparedFamily> {
+    let dca = mean_field_dca(&fam, DcaParams::default())?;
+    let dca_map = dca.feature_map();
+    let mi_raw = fam.mi_map();
+    let mi: Vec<f64> = mi_raw.iter().map(|&v| v as f64).collect();
+    let mean = crate::util::stats::mean(&mi);
+    let std = crate::util::stats::stddev(&mi).max(1e-9);
+    let l = fam.l;
+    let mut features = vec![0.0f32; l * l * 2];
+    for p in 0..l * l {
+        features[p * 2] = dca_map[p];
+        features[p * 2 + 1] = ((mi[p] - mean) / std) as f32;
+    }
+    Ok(PreparedFamily { fam, dca, features })
+}
+
+/// Sample and prepare a set of families.
+pub fn make_families(cfg: &RnaCfg, count: usize, rng: &mut Rng) -> Result<Vec<PreparedFamily>> {
+    (0..count)
+        .map(|_| prepare(sample_family(cfg.l, cfg.msa_depth, rng)))
+        .collect()
+}
+
+/// Outcome of the comparison.
+#[derive(Debug, Clone)]
+pub struct RnaOutcome {
+    /// Mean PPV@k of raw DCA on the test families.
+    pub dca_ppv: f64,
+    /// Mean PPV@k of the CNN.
+    pub cnn_ppv: f64,
+    /// Relative improvement in percent.
+    pub improvement_pct: f64,
+}
+
+/// Top-k pairs from a generic score map.
+fn top_pairs_from(scores: &[f32], l: usize, k: usize, min_sep: usize) -> Vec<(usize, usize)> {
+    let mut pairs: Vec<(usize, usize, f32)> = Vec::new();
+    for i in 0..l {
+        for j in (i + 1)..l {
+            if j - i >= min_sep {
+                pairs.push((i, j, scores[i * l + j]));
+            }
+        }
+    }
+    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    pairs.into_iter().take(k).map(|(i, j, _)| (i, j)).collect()
+}
+
+/// Run the full §3.4 experiment.
+pub fn run(engine: &Engine, cfg: &RnaCfg) -> Result<RnaOutcome> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let train = make_families(cfg, cfg.n_train, &mut rng)?;
+    let test = make_families(cfg, cfg.n_test, &mut rng)?;
+
+    // Train the CNN.
+    let model = engine.load_model("rna_cnn")?;
+    let mut trainer = Trainer::new(engine, model, 1, cfg.seed as u32)?;
+    let meta = trainer.model.meta.clone();
+    let batch = meta.batch;
+    let l = cfg.l;
+    let sched = LrSchedule::WarmupCosine {
+        peak: 0.03,
+        warmup: cfg.steps / 10 + 1,
+        total: cfg.steps,
+        floor: 0.1,
+    };
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    for step in 0..cfg.steps {
+        if step % (train.len() / batch).max(1) == 0 {
+            rng.shuffle(&mut order);
+        }
+        let mut x = Vec::with_capacity(batch * l * l * 2);
+        let mut y = Vec::with_capacity(batch * l * l);
+        for b in 0..batch {
+            let f = &train[order[(step * batch + b) % train.len()]];
+            x.extend_from_slice(&f.features);
+            y.extend(f.fam.contacts.iter().map(|&c| c as u8 as f32));
+        }
+        let xl = tensor::f32_literal(&meta.x.shape, &x)?;
+        let yl = tensor::f32_literal(&meta.y.shape, &y)?;
+        trainer.step(&[(xl, yl)], sched.at(step))?;
+    }
+
+    // Evaluate both predictors on held-out families.
+    let mut dca_sum = 0.0;
+    let mut cnn_sum = 0.0;
+    let mut idx = 0;
+    while idx < test.len() {
+        let take = batch.min(test.len() - idx);
+        let mut x = Vec::with_capacity(batch * l * l * 2);
+        for b in 0..batch {
+            let f = &test[(idx + b) % test.len()];
+            x.extend_from_slice(&f.features);
+        }
+        let xl = tensor::f32_literal(&meta.x.shape, &x)?;
+        let out = trainer.predict(&xl)?;
+        let logits = out
+            .to_vec::<f32>()
+            .map_err(|e| crate::util::error::BoosterError::Xla(e.to_string()))?;
+        for b in 0..take {
+            let f = &test[idx + b];
+            let k = f.fam.n_contacts();
+            let cnn_scores = &logits[b * l * l..(b + 1) * l * l];
+            let cnn_pred = top_pairs_from(cnn_scores, l, k, cfg.min_sep);
+            let dca_pred = f.dca.top_pairs(k, cfg.min_sep);
+            cnn_sum += ppv(&cnn_pred, &f.fam.contacts, l);
+            dca_sum += ppv(&dca_pred, &f.fam.contacts, l);
+        }
+        idx += take;
+    }
+    let dca_ppv = dca_sum / test.len() as f64;
+    let cnn_ppv = cnn_sum / test.len() as f64;
+    Ok(RnaOutcome {
+        dca_ppv,
+        cnn_ppv,
+        improvement_pct: 100.0 * (cnn_ppv - dca_ppv) / dca_ppv.max(1e-9),
+    })
+}

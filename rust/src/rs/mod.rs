@@ -1,0 +1,170 @@
+//! Multispectral remote-sensing classification experiments (§3.3).
+//!
+//! The BigEarthNet-S2 analog: train the 19-label multispectral CNN with
+//! NovoGrad, check that macro-F1 is stable across data-parallel widths
+//! (the paper: "remains stable among the experiments (0.73)" from global
+//! batch 64 to 4096), and regenerate the scaling table (2550 s/epoch on
+//! 1 node → ~50 s on 64 nodes, ≈80 % efficiency).
+
+use crate::data::multilabel::{MultilabelWorld, N_LABELS};
+use crate::runtime::{tensor, Engine};
+use crate::topology::Topology;
+use crate::train::timeline::{Jitter, TimelineModel};
+use crate::train::{LrSchedule, Trainer};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::util::stats::macro_f1_multilabel;
+
+/// Train the `bigearth` model data-parallel and return test macro-F1.
+///
+/// Every width gets the same number of *optimizer steps* (weak scaling):
+/// at the paper's scale (100 epochs over 354k patches) even the widest
+/// configuration takes thousands of steps, which a CPU-quick run cannot
+/// afford — fixing steps isolates the large-batch effect the paper's
+/// macro-F1-stability claim is about from sheer step starvation.
+pub fn train_and_eval(
+    engine: &Engine,
+    replicas: usize,
+    total_steps: usize,
+    seed: u32,
+) -> Result<f64> {
+    let steps = total_steps;
+    let model = engine.load_model("bigearth")?;
+    let mut trainer = Trainer::new(engine, model, replicas, seed)?;
+    let meta = trainer.model.meta.clone();
+    let world = MultilabelWorld::new(12, 12, 77);
+    let mut rng = Rng::seed_from(seed as u64 ^ 0xB16);
+    // Large-batch recipe (§3.3 cites Goyal et al.): scale the rate with
+    // the global batch (sqrt scaling suits NovoGrad) and keep the warmup
+    // a fixed fraction of the (shorter) schedule.
+    let sched = LrSchedule::WarmupCosine {
+        peak: 0.02 * (replicas as f32).sqrt(),
+        warmup: steps / 8 + 1,
+        total: steps,
+        floor: 0.1,
+    };
+    for step in 0..steps {
+        let mut shards = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let (x, y) = world.batch(meta.batch, &mut rng);
+            shards.push((
+                tensor::f32_literal(&meta.x.shape, &x)?,
+                tensor::f32_literal(&meta.y.shape, &y)?,
+            ));
+        }
+        trainer.step(&shards, sched.at(step))?;
+    }
+    // Evaluate on fresh data.
+    let mut rng = Rng::seed_from(991);
+    let mut labels = Vec::new();
+    let mut preds = Vec::new();
+    for _ in 0..12 {
+        let (x, y) = world.batch(meta.batch, &mut rng);
+        let xl = tensor::f32_literal(&meta.x.shape, &x)?;
+        let out = trainer.predict(&xl)?;
+        let logits = out
+            .to_vec::<f32>()
+            .map_err(|e| crate::util::error::BoosterError::Xla(e.to_string()))?;
+        for (i, &l) in logits.iter().enumerate() {
+            preds.push(l > 0.0);
+            labels.push(y[i] > 0.5);
+        }
+    }
+    Ok(macro_f1_multilabel(&labels, &preds, N_LABELS))
+}
+
+/// One row of the §3.3 scaling table.
+#[derive(Debug, Clone)]
+pub struct RsScalingRow {
+    /// Node count (4 GPUs each).
+    pub nodes: usize,
+    /// Global batch (16 per GPU like the paper).
+    pub global_batch: usize,
+    /// Simulated seconds per epoch.
+    pub epoch_seconds: f64,
+    /// Efficiency vs 1 node.
+    pub efficiency: f64,
+}
+
+/// Regenerate the scaling numbers on the simulated machine.
+///
+/// Calibration: ResNet-152 at 120x120x12 inputs ≈ 3x ResNet-50 FLOPs;
+/// 354k training patches (60 % of 590 326); the paper measures
+/// ~2550 s/epoch on one node (4 GPUs).
+pub fn scaling_table(topo: &Topology, node_counts: &[usize], seed: u64) -> Result<Vec<RsScalingRow>> {
+    let samples_per_epoch = 354_196usize;
+    let batch_per_gpu = 16usize;
+    // Per-sample fwd+bwd FLOPs calibrated so 1 node (4 GPUs) ~ 2550 s.
+    // 2550 s * 4 GPUs / 354k samples = 28.8 ms/sample/gpu-set.
+    let flops_per_sample = 60.0e9; // ResNet-152-multispectral fwd+bwd
+    let grad_bytes = vec![60.2e6 * 4.0]; // ResNet-152 params
+    let mut out = Vec::new();
+    let mut t1: Option<f64> = None;
+    for &nodes in node_counts {
+        let g = nodes * 4;
+        let mut model = TimelineModel::amp_defaults(topo);
+        // Calibrate achieved efficiency to hit the paper's single-node
+        // epoch time (the input pipeline keeps utilization modest).
+        let target_per_sample = 2550.0 * 4.0 / samples_per_epoch as f64;
+        model.efficiency = (flops_per_sample / target_per_sample) / 312e12;
+        model.jitter = Jitter {
+            sigma: 0.02,
+            stall_prob: 0.001,
+            stall_frac: 1.5,
+        };
+        let mut rng = Rng::seed_from(seed ^ nodes as u64);
+        let gpus = topo.first_gpus(g);
+        let steps = samples_per_epoch.div_ceil(batch_per_gpu * g);
+        let flops_per_gpu = flops_per_sample * batch_per_gpu as f64;
+        let iters = model.run_steps(&gpus, flops_per_gpu, &grad_bytes, 200.min(steps), &mut rng)?;
+        let epoch_seconds = crate::util::stats::mean(&iters) * steps as f64;
+        if t1.is_none() {
+            t1 = Some(epoch_seconds * nodes as f64);
+        }
+        let eff = crate::util::stats::time_efficiency(
+            epoch_seconds,
+            nodes,
+            t1.unwrap() / node_counts[0] as f64,
+            node_counts[0],
+        );
+        out.push(RsScalingRow {
+            nodes,
+            global_batch: batch_per_gpu * g,
+            epoch_seconds,
+            efficiency: eff,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_table_matches_paper_envelope() {
+        let topo = Topology::juwels_booster();
+        let rows = scaling_table(&topo, &[1, 4, 16, 64], 0).unwrap();
+        // 1 node ≈ 2550 s/epoch (±20%).
+        assert!(
+            (rows[0].epoch_seconds - 2550.0).abs() / 2550.0 < 0.2,
+            "1-node epoch {}",
+            rows[0].epoch_seconds
+        );
+        // 64 nodes: tens of seconds, ≥70% efficiency (paper: ~50 s, 80%).
+        let r64 = rows.last().unwrap();
+        assert!(
+            r64.epoch_seconds > 35.0 && r64.epoch_seconds < 80.0,
+            "64-node epoch {}",
+            r64.epoch_seconds
+        );
+        assert!(
+            r64.efficiency > 0.65 && r64.efficiency <= 1.0,
+            "64-node eff {}",
+            r64.efficiency
+        );
+        // Global batch sweeps 64 -> 4096 like the paper.
+        assert_eq!(rows[0].global_batch, 64);
+        assert_eq!(r64.global_batch, 4096);
+    }
+}

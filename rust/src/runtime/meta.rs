@@ -1,0 +1,217 @@
+//! Artifact metadata: the `*.meta.json` sidecars written by `aot.py`.
+//!
+//! The metadata is the single source of truth for the positional ABI —
+//! parameter names/shapes in order, optimizer-state layout, input specs,
+//! and the analytic FLOP estimate used by the performance model.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+
+/// One named tensor in the ABI (f32 unless stated otherwise).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDef {
+    /// Name (e.g. `block0.w1` or `mom.head.w`).
+    pub name: String,
+    /// Shape; empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorDef {
+    /// Element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Byte size at f32.
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Input (x/y) specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputDef {
+    /// Shape including the batch dimension.
+    pub shape: Vec<usize>,
+    /// Numpy dtype name ("float32" or "int32").
+    pub dtype: String,
+}
+
+/// Parsed model metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Model/artifact name.
+    pub name: String,
+    /// "sgd" or "novograd".
+    pub optimizer: String,
+    /// Batch size baked into the HLO.
+    pub batch: usize,
+    /// Parameters in positional order.
+    pub params: Vec<TensorDef>,
+    /// Optimizer state in positional order.
+    pub opt_state: Vec<TensorDef>,
+    /// Input batch spec.
+    pub x: InputDef,
+    /// Target batch spec.
+    pub y: InputDef,
+    /// Total parameter count.
+    pub n_params: usize,
+    /// Analytic fwd+bwd FLOPs for one batch.
+    pub flops_per_step: f64,
+    /// HLO file names per ABI function.
+    pub hlo: BTreeMap<String, String>,
+}
+
+fn tensor_defs(v: &Json, field: &str) -> Result<Vec<TensorDef>> {
+    let arr = v
+        .req(field)?
+        .as_arr()
+        .ok_or_else(|| BoosterError::Artifact(format!("'{field}' not an array")))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| BoosterError::Artifact("tensor name not a string".into()))?
+                .to_string();
+            let shape = t
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| BoosterError::Artifact("shape not an array".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| BoosterError::Artifact("bad shape dim".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorDef { name, shape })
+        })
+        .collect()
+}
+
+fn input_def(v: &Json, field: &str) -> Result<InputDef> {
+    let o = v.req(field)?;
+    Ok(InputDef {
+        shape: o
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| BoosterError::Artifact("input shape not array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| BoosterError::Artifact("bad input dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        dtype: o
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| BoosterError::Artifact("dtype not string".into()))?
+            .to_string(),
+    })
+}
+
+impl ModelMeta {
+    /// Parse from a meta.json file.
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        if !path.exists() {
+            return Err(BoosterError::Artifact(format!(
+                "missing metadata {} — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let v = Json::parse(text)?;
+        let hlo_obj = v.req("hlo")?;
+        let mut hlo = BTreeMap::new();
+        if let Json::Obj(m) = hlo_obj {
+            for (k, f) in m {
+                hlo.insert(
+                    k.clone(),
+                    f.as_str()
+                        .ok_or_else(|| BoosterError::Artifact("hlo entry not string".into()))?
+                        .to_string(),
+                );
+            }
+        }
+        Ok(ModelMeta {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| BoosterError::Artifact("name not string".into()))?
+                .to_string(),
+            optimizer: v
+                .req("optimizer")?
+                .as_str()
+                .ok_or_else(|| BoosterError::Artifact("optimizer not string".into()))?
+                .to_string(),
+            batch: v
+                .req("batch")?
+                .as_usize()
+                .ok_or_else(|| BoosterError::Artifact("batch not usize".into()))?,
+            params: tensor_defs(&v, "params")?,
+            opt_state: tensor_defs(&v, "opt_state")?,
+            x: input_def(&v, "x")?,
+            y: input_def(&v, "y")?,
+            n_params: v
+                .req("n_params")?
+                .as_usize()
+                .ok_or_else(|| BoosterError::Artifact("n_params not usize".into()))?,
+            flops_per_step: v
+                .req("flops_per_step")?
+                .as_f64()
+                .ok_or_else(|| BoosterError::Artifact("flops_per_step not num".into()))?,
+            hlo,
+        })
+    }
+
+    /// Gradient byte sizes per tensor (for the Horovod bucketing model).
+    pub fn grad_tensor_bytes(&self) -> Vec<f64> {
+        self.params.iter().map(|p| p.bytes() as f64).collect()
+    }
+
+    /// Total gradient bytes per step.
+    pub fn grad_bytes(&self) -> f64 {
+        self.grad_tensor_bytes().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 16, "flops_per_step": 123456.0, "name": "toy",
+      "n_params": 42, "optimizer": "sgd",
+      "params": [{"name": "w", "shape": [3, 3, 1, 4]}, {"name": "b", "shape": [4]}],
+      "opt_state": [{"name": "mom.w", "shape": [3, 3, 1, 4]}, {"name": "mom.b", "shape": [4]}],
+      "x": {"shape": [16, 8, 8, 1], "dtype": "float32"},
+      "y": {"shape": [16, 3], "dtype": "float32"},
+      "hlo": {"init": "toy.init.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elems(), 36);
+        assert_eq!(m.params[0].bytes(), 144);
+        assert_eq!(m.opt_state[1].shape, vec![4]);
+        assert_eq!(m.x.dtype, "float32");
+        assert_eq!(m.hlo["init"], "toy.init.hlo.txt");
+        assert_eq!(m.grad_bytes(), 160.0);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(ModelMeta::parse(r#"{"name": "x"}"#).is_err());
+    }
+}

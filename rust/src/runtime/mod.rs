@@ -1,0 +1,232 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from rust. Python is never on this path — the HLO text
+//! is parsed, compiled and run entirely through the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`).
+//!
+//! One [`Engine`] per process owns the PJRT client; [`LoadedModel`] holds
+//! the four compiled ABI functions of one model variant plus its metadata
+//! (positional parameter layout — see `model.py` for the ABI contract).
+
+pub mod meta;
+pub mod tensor;
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+pub use meta::{ModelMeta, TensorDef};
+pub use tensor::HostTensor;
+
+use crate::util::error::{BoosterError, Result};
+
+/// Location of the artifacts directory: `$BOOSTER_ARTIFACTS` or
+/// `./artifacts` (the Makefile default).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("BOOSTER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Cumulative execution statistics (for §Perf and the benches).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    /// Executions performed.
+    pub calls: usize,
+    /// Total wall-clock seconds inside PJRT execute.
+    pub exec_seconds: f64,
+    /// Total seconds converting host<->literal.
+    pub convert_seconds: f64,
+}
+
+/// The PJRT engine. Owns the client; not `Send` (the underlying C handles
+/// are single-threaded here) — replicas execute serially on this engine
+/// while the simulated machine provides the parallel timeline.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// Execution statistics, updated by [`Executable::run`].
+    pub stats: std::cell::RefCell<ExecStats>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            stats: Default::default(),
+        })
+    }
+
+    /// Platform name as reported by PJRT.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        if !path.exists() {
+            return Err(BoosterError::Artifact(format!(
+                "missing artifact {} — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| BoosterError::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+
+    /// Load a model bundle (meta + 4 executables) by name.
+    pub fn load_model(&self, name: &str) -> Result<LoadedModel> {
+        let dir = artifacts_dir();
+        let meta = ModelMeta::load(&dir.join(format!("{name}.meta.json")))?;
+        let get = |fn_name: &str| -> Result<Executable> {
+            let file = meta.hlo.get(fn_name).ok_or_else(|| {
+                BoosterError::Artifact(format!("{name}: meta lacks hlo entry '{fn_name}'"))
+            })?;
+            self.compile_file(&dir.join(file))
+        };
+        Ok(LoadedModel {
+            init: get("init")?,
+            grad_step: get("grad_step")?,
+            apply_update: get("apply_update")?,
+            predict: get("predict")?,
+            meta,
+        })
+    }
+}
+
+/// A compiled XLA computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs (owned or borrowed); unwraps the
+    /// top-level tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        engine: &Engine,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = self.exe.execute(inputs)?;
+        let root = result[0][0].to_literal_sync()?;
+        let outs = root.to_tuple()?;
+        let mut stats = engine.stats.borrow_mut();
+        stats.calls += 1;
+        stats.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+}
+
+/// A loaded model bundle: metadata + the four ABI functions.
+pub struct LoadedModel {
+    /// Parsed `<name>.meta.json`.
+    pub meta: ModelMeta,
+    /// `(seed) -> params ++ opt_state`.
+    pub init: Executable,
+    /// `(params…, x, y) -> grads… ++ (loss,)`.
+    pub grad_step: Executable,
+    /// `(params…, opt…, grads…, lr) -> params… ++ opt…`.
+    pub apply_update: Executable,
+    /// `(params…, x) -> (out,)`.
+    pub predict: Executable,
+}
+
+/// Full training/optimizer state for one replica, as positional literals.
+pub struct ModelState {
+    /// Parameter literals, in `meta.params` order.
+    pub params: Vec<xla::Literal>,
+    /// Optimizer-state literals, in `meta.opt_state` order.
+    pub opt: Vec<xla::Literal>,
+}
+
+impl LoadedModel {
+    /// Run `init` and split the outputs into params/opt-state.
+    pub fn init_state(&self, engine: &Engine, seed: u32) -> Result<ModelState> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = self.init.run(engine, &[seed_lit])?;
+        let np = self.meta.params.len();
+        let no = self.meta.opt_state.len();
+        if outs.len() != np + no {
+            return Err(BoosterError::Runtime(format!(
+                "{}: init returned {} outputs, expected {}",
+                self.meta.name,
+                outs.len(),
+                np + no
+            )));
+        }
+        let mut it = outs.into_iter();
+        let params: Vec<_> = (&mut it).take(np).collect();
+        let opt: Vec<_> = it.collect();
+        Ok(ModelState { params, opt })
+    }
+
+    /// Run `grad_step`; returns (grads, loss).
+    pub fn grad_step_run(
+        &self,
+        engine: &Engine,
+        state: &ModelState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<(Vec<xla::Literal>, f32)> {
+        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+        inputs.push(x);
+        inputs.push(y);
+        let mut outs = self.grad_step.run(engine, &inputs)?;
+        let loss_lit = outs.pop().ok_or_else(|| {
+            BoosterError::Runtime(format!("{}: empty grad_step output", self.meta.name))
+        })?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        Ok((outs, loss))
+    }
+
+    /// Run `apply_update` in place on `state`.
+    pub fn apply_update_run(
+        &self,
+        engine: &Engine,
+        state: &mut ModelState,
+        grads: &[xla::Literal],
+        lr: f32,
+    ) -> Result<()> {
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(state.params.iter());
+        inputs.extend(state.opt.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_lit);
+        let outs = self.apply_update.run(engine, &inputs)?;
+        let np = self.meta.params.len();
+        let no = self.meta.opt_state.len();
+        if outs.len() != np + no {
+            return Err(BoosterError::Runtime(format!(
+                "{}: apply_update returned {} outputs, expected {}",
+                self.meta.name,
+                outs.len(),
+                np + no
+            )));
+        }
+        let mut it = outs.into_iter();
+        state.params = (&mut it).take(np).collect();
+        state.opt = it.collect();
+        Ok(())
+    }
+
+    /// Run `predict`; returns the output literal.
+    pub fn predict_run(
+        &self,
+        engine: &Engine,
+        state: &ModelState,
+        x: &xla::Literal,
+    ) -> Result<xla::Literal> {
+        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+        inputs.push(x);
+        let mut outs = self.predict.run(engine, &inputs)?;
+        outs.pop().ok_or_else(|| {
+            BoosterError::Runtime(format!("{}: empty predict output", self.meta.name))
+        })
+    }
+}

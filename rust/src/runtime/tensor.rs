@@ -1,0 +1,163 @@
+//! Host tensors and literal conversion.
+//!
+//! The trainer keeps gradients and datasets host-side as flat `f32`/`i32`
+//! buffers; this module is the boundary to XLA literals. Conversions are
+//! the "convert" component of [`super::ExecStats`] and a §Perf target.
+
+use crate::util::error::{BoosterError, Result};
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    /// Shape; empty = scalar.
+    pub shape: Vec<usize>,
+    /// Row-major data, `len == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// New tensor; validates length.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(BoosterError::Runtime(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // Scalars stay rank-1[1]? No: reshape to rank-0.
+            return Ok(lit.reshape(&[])?);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from a literal (f32).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(shape, data)
+    }
+}
+
+/// Build an i32 literal (token batches) with a shape.
+///
+/// §Perf: built via `create_from_shape_and_untyped_data` (one memcpy into
+/// the target shape) instead of `vec1` + `reshape` (which materializes an
+/// intermediate literal and round-trips through XLA's reshape).
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(BoosterError::Runtime(format!(
+            "shape {shape:?} wants {n} elems, got {}",
+            data.len()
+        )));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an f32 literal directly from a slice + shape (single memcpy).
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(BoosterError::Runtime(format!(
+            "shape {shape:?} wants {n} elems, got {}",
+            data.len()
+        )));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Clone a literal by raw element copy (used where ownership is required).
+pub fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    let shape = lit.shape()?;
+    let xla::Shape::Array(arr) = shape else {
+        return Err(BoosterError::Runtime(
+            "clone_literal: non-array literal".into(),
+        ));
+    };
+    let dims: Vec<i64> = arr.dims().to_vec();
+    match arr.element_type() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>()?;
+            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        }
+        other => Err(BoosterError::Runtime(format!(
+            "clone_literal: unsupported element type {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::zeros(vec![4, 4]).data.len(), 16);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, vec![2, 2]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = HostTensor::new(vec![], vec![7.5]).unwrap();
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let lit = i32_literal(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(i32_literal(&[2, 2], &[1]).is_err());
+    }
+
+    #[test]
+    fn clone_preserves_data() {
+        let lit = f32_literal(&[3], &[1.0, 2.0, 3.0]).unwrap();
+        let c = clone_literal(&lit).unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+}

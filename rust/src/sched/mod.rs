@@ -1,0 +1,578 @@
+//! Modular workload manager (the Slurm analog, §2.1/§2.2).
+//!
+//! JUWELS is a *modular* system: the Cluster and Booster modules share a
+//! fabric and can be used together "by heterogeneous jobs, through a tight
+//! integration via the workload manager". This module simulates that
+//! manager: partitions, FIFO + conservative backfill, and topology-aware
+//! **compact-cell placement** (allocating nodes of a job into as few
+//! DragonFly+ cells as possible, which the collective model rewards).
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{BoosterError, Result};
+use crate::util::stats;
+
+/// Target partition of a job component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Partition {
+    /// The GPU booster module (936 nodes in the real machine).
+    Booster,
+    /// The CPU cluster module (2300+ nodes).
+    Cluster,
+}
+
+/// Placement policy for allocated nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Fill cells one at a time (minimizes inter-cell traffic).
+    CompactCells,
+    /// Round-robin across cells (ablation baseline).
+    Spread,
+}
+
+/// One component of a (possibly heterogeneous) job.
+#[derive(Debug, Clone)]
+pub struct JobComponent {
+    /// Which module it runs on.
+    pub partition: Partition,
+    /// Nodes requested.
+    pub nodes: usize,
+}
+
+/// A job submission.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// User-visible id.
+    pub id: usize,
+    /// Submission time (s).
+    pub submit: f64,
+    /// Requested walltime (s) — used by backfill reservations.
+    pub walltime: f64,
+    /// Actual runtime (s), ≤ walltime.
+    pub runtime: f64,
+    /// Components (one per partition used; heterogeneous jobs have two).
+    pub components: Vec<JobComponent>,
+}
+
+impl Job {
+    /// Simple single-partition job.
+    pub fn simple(id: usize, submit: f64, partition: Partition, nodes: usize, runtime: f64) -> Job {
+        Job {
+            id,
+            submit,
+            walltime: runtime * 1.2,
+            runtime,
+            components: vec![JobComponent { partition, nodes }],
+        }
+    }
+
+    /// Heterogeneous modular job spanning Cluster + Booster.
+    pub fn heterogeneous(
+        id: usize,
+        submit: f64,
+        cluster_nodes: usize,
+        booster_nodes: usize,
+        runtime: f64,
+    ) -> Job {
+        Job {
+            id,
+            submit,
+            walltime: runtime * 1.2,
+            runtime,
+            components: vec![
+                JobComponent {
+                    partition: Partition::Cluster,
+                    nodes: cluster_nodes,
+                },
+                JobComponent {
+                    partition: Partition::Booster,
+                    nodes: booster_nodes,
+                },
+            ],
+        }
+    }
+}
+
+/// Scheduling record for a finished job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    /// Job id.
+    pub id: usize,
+    /// Time the job started.
+    pub start: f64,
+    /// Time the job finished.
+    pub finish: f64,
+    /// Wait time in queue.
+    pub wait: f64,
+    /// Booster node ids allocated (empty for cluster-only jobs).
+    pub booster_nodes: Vec<usize>,
+    /// Number of distinct Booster cells touched.
+    pub cells_touched: usize,
+}
+
+/// Partition capacity description.
+#[derive(Debug, Clone)]
+pub struct PartitionSpec {
+    /// Total nodes.
+    pub nodes: usize,
+    /// Nodes per cell (1 ⇒ no cell structure).
+    pub nodes_per_cell: usize,
+}
+
+/// The workload manager simulator.
+#[derive(Debug)]
+pub struct Scheduler {
+    partitions: BTreeMap<Partition, PartitionSpec>,
+    placement: Placement,
+    /// Enable conservative backfill.
+    pub backfill: bool,
+}
+
+/// Free/busy state tracked per partition during simulation.
+struct PartState {
+    free: Vec<bool>, // per node
+    nodes_per_cell: usize,
+}
+
+impl PartState {
+    fn free_count(&self) -> usize {
+        self.free.iter().filter(|&&f| f).count()
+    }
+
+    /// Pick `n` nodes under a placement policy; returns node ids or None.
+    fn allocate(&mut self, n: usize, placement: Placement) -> Option<Vec<usize>> {
+        if self.free_count() < n {
+            return None;
+        }
+        let cells = self.free.len().div_ceil(self.nodes_per_cell);
+        let mut picked = Vec::with_capacity(n);
+        match placement {
+            Placement::CompactCells => {
+                // Rank cells by free count descending; fill greedily.
+                let mut cell_free: Vec<(usize, usize)> = (0..cells)
+                    .map(|c| {
+                        let lo = c * self.nodes_per_cell;
+                        let hi = ((c + 1) * self.nodes_per_cell).min(self.free.len());
+                        (c, (lo..hi).filter(|&i| self.free[i]).count())
+                    })
+                    .collect();
+                cell_free.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                'outer: for (c, _) in cell_free {
+                    let lo = c * self.nodes_per_cell;
+                    let hi = ((c + 1) * self.nodes_per_cell).min(self.free.len());
+                    for i in lo..hi {
+                        if self.free[i] {
+                            picked.push(i);
+                            if picked.len() == n {
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+            }
+            Placement::Spread => {
+                let mut c = 0;
+                let mut offsets = vec![0usize; cells];
+                while picked.len() < n {
+                    let lo = c * self.nodes_per_cell;
+                    let hi = ((c + 1) * self.nodes_per_cell).min(self.free.len());
+                    let mut advanced = false;
+                    while lo + offsets[c] < hi {
+                        let i = lo + offsets[c];
+                        offsets[c] += 1;
+                        if self.free[i] {
+                            picked.push(i);
+                            advanced = true;
+                            break;
+                        }
+                    }
+                    let _ = advanced;
+                    c = (c + 1) % cells;
+                }
+            }
+        }
+        for &i in &picked {
+            self.free[i] = false;
+        }
+        Some(picked)
+    }
+
+    fn release(&mut self, nodes: &[usize]) {
+        for &i in nodes {
+            debug_assert!(!self.free[i]);
+            self.free[i] = true;
+        }
+    }
+}
+
+impl Scheduler {
+    /// The JUWELS configuration: 936-node Booster (48-node cells) +
+    /// 2300-node Cluster.
+    pub fn juwels(placement: Placement) -> Scheduler {
+        let mut partitions = BTreeMap::new();
+        partitions.insert(
+            Partition::Booster,
+            PartitionSpec {
+                nodes: 936,
+                nodes_per_cell: 48,
+            },
+        );
+        partitions.insert(
+            Partition::Cluster,
+            PartitionSpec {
+                nodes: 2300,
+                nodes_per_cell: 2300,
+            },
+        );
+        Scheduler {
+            partitions,
+            placement,
+            backfill: true,
+        }
+    }
+
+    /// Custom partition set.
+    pub fn new(partitions: BTreeMap<Partition, PartitionSpec>, placement: Placement) -> Scheduler {
+        Scheduler {
+            partitions,
+            placement,
+            backfill: true,
+        }
+    }
+
+    /// Simulate a trace of jobs to completion. Jobs are queued FIFO per
+    /// submission time; conservative backfill lets a later job jump the
+    /// queue only if it fits in the current free set *and* its walltime
+    /// does not delay the reservation of the queue head.
+    pub fn run(&self, jobs: &[Job]) -> Result<Vec<JobRecord>> {
+        for j in jobs {
+            for c in &j.components {
+                let spec = self
+                    .partitions
+                    .get(&c.partition)
+                    .ok_or_else(|| BoosterError::Config(format!("job {} uses missing partition", j.id)))?;
+                if c.nodes == 0 || c.nodes > spec.nodes {
+                    return Err(BoosterError::Config(format!(
+                        "job {} requests {} nodes (partition has {})",
+                        j.id, c.nodes, spec.nodes
+                    )));
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| jobs[a].submit.partial_cmp(&jobs[b].submit).unwrap());
+
+        let mut state: BTreeMap<Partition, PartState> = self
+            .partitions
+            .iter()
+            .map(|(&p, spec)| {
+                (
+                    p,
+                    PartState {
+                        free: vec![true; spec.nodes],
+                        nodes_per_cell: spec.nodes_per_cell,
+                    },
+                )
+            })
+            .collect();
+
+        #[derive(Debug)]
+        struct Running {
+            job: usize,
+            finish: f64,
+            alloc: BTreeMap<Partition, Vec<usize>>,
+        }
+
+        let mut queue: Vec<usize> = Vec::new(); // indices into jobs, FIFO
+        let mut running: Vec<Running> = Vec::new();
+        let mut records: Vec<Option<JobRecord>> = vec![None; jobs.len()];
+        let mut now = 0.0f64;
+        let mut next_submit = 0usize;
+
+        loop {
+            // Admit submissions up to `now`.
+            while next_submit < order.len() && jobs[order[next_submit]].submit <= now + 1e-12 {
+                queue.push(order[next_submit]);
+                next_submit += 1;
+            }
+
+            // Try to start jobs: strict FIFO head first, then backfill.
+            let mut started_any = true;
+            while started_any {
+                started_any = false;
+                let mut qi = 0;
+                while qi < queue.len() {
+                    let ji = queue[qi];
+                    let job = &jobs[ji];
+                    // Head always may try; non-head only if backfill on and
+                    // it would finish before the head could possibly start
+                    // (conservative estimate: earliest running finish).
+                    if qi > 0 {
+                        if !self.backfill {
+                            break;
+                        }
+                        let head_shadow = running
+                            .iter()
+                            .map(|r| r.finish)
+                            .fold(f64::INFINITY, f64::min);
+                        if now + job.walltime > head_shadow {
+                            qi += 1;
+                            continue;
+                        }
+                    }
+                    // Check capacity in every partition before allocating.
+                    let fits = job.components.iter().all(|c| {
+                        state[&c.partition].free_count() >= c.nodes
+                    });
+                    if !fits {
+                        if qi == 0 {
+                            // Head blocked — others may backfill.
+                            qi += 1;
+                            continue;
+                        }
+                        qi += 1;
+                        continue;
+                    }
+                    // Allocate all components atomically.
+                    let mut alloc = BTreeMap::new();
+                    for c in &job.components {
+                        let nodes = state
+                            .get_mut(&c.partition)
+                            .unwrap()
+                            .allocate(c.nodes, self.placement)
+                            .expect("capacity checked above");
+                        alloc.insert(c.partition, nodes);
+                    }
+                    let booster_nodes = alloc
+                        .get(&Partition::Booster)
+                        .cloned()
+                        .unwrap_or_default();
+                    let npc = self
+                        .partitions
+                        .get(&Partition::Booster)
+                        .map(|s| s.nodes_per_cell)
+                        .unwrap_or(1);
+                    let cells_touched = {
+                        let mut cells: Vec<usize> =
+                            booster_nodes.iter().map(|&n| n / npc).collect();
+                        cells.sort_unstable();
+                        cells.dedup();
+                        cells.len()
+                    };
+                    records[ji] = Some(JobRecord {
+                        id: job.id,
+                        start: now,
+                        finish: now + job.runtime,
+                        wait: now - job.submit,
+                        booster_nodes,
+                        cells_touched,
+                    });
+                    running.push(Running {
+                        job: ji,
+                        finish: now + job.runtime,
+                        alloc,
+                    });
+                    queue.remove(qi);
+                    started_any = true;
+                    // Restart the scan: the head may now fit.
+                }
+            }
+
+            if queue.is_empty() && next_submit >= order.len() && running.is_empty() {
+                break;
+            }
+
+            // Advance time to the next event.
+            let mut next = f64::INFINITY;
+            if next_submit < order.len() {
+                next = next.min(jobs[order[next_submit]].submit);
+            }
+            for r in &running {
+                next = next.min(r.finish);
+            }
+            if !next.is_finite() {
+                return Err(BoosterError::Sim(format!(
+                    "deadlock: {} queued jobs cannot start",
+                    queue.len()
+                )));
+            }
+            now = next.max(now);
+            // Release finished jobs.
+            let mut i = 0;
+            while i < running.len() {
+                if running[i].finish <= now + 1e-12 {
+                    let r = running.swap_remove(i);
+                    for (p, nodes) in &r.alloc {
+                        state.get_mut(p).unwrap().release(nodes);
+                    }
+                    let _ = r.job;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        Ok(records.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    /// Utilization of a partition over a trace result: busy node-seconds /
+    /// (nodes × makespan).
+    pub fn utilization(
+        &self,
+        jobs: &[Job],
+        records: &[JobRecord],
+        partition: Partition,
+    ) -> f64 {
+        let cap = self.partitions[&partition].nodes as f64;
+        let makespan = records.iter().map(|r| r.finish).fold(0.0, f64::max);
+        if makespan <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = jobs
+            .iter()
+            .zip(records)
+            .map(|(j, r)| {
+                let n: usize = j
+                    .components
+                    .iter()
+                    .filter(|c| c.partition == partition)
+                    .map(|c| c.nodes)
+                    .sum();
+                n as f64 * (r.finish - r.start)
+            })
+            .sum();
+        busy / (cap * makespan)
+    }
+
+    /// Mean queue wait over a record set.
+    pub fn mean_wait(records: &[JobRecord]) -> f64 {
+        stats::mean(&records.iter().map(|r| r.wait).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::juwels(Placement::CompactCells)
+    }
+
+    #[test]
+    fn single_job_starts_immediately() {
+        let jobs = vec![Job::simple(1, 0.0, Partition::Booster, 64, 100.0)];
+        let rec = sched().run(&jobs).unwrap();
+        assert_eq!(rec[0].start, 0.0);
+        assert_eq!(rec[0].finish, 100.0);
+        assert_eq!(rec[0].booster_nodes.len(), 64);
+    }
+
+    #[test]
+    fn compact_placement_minimizes_cells() {
+        let jobs = vec![Job::simple(1, 0.0, Partition::Booster, 96, 10.0)];
+        let rec = sched().run(&jobs).unwrap();
+        // 96 nodes fit exactly in 2 cells of 48.
+        assert_eq!(rec[0].cells_touched, 2);
+    }
+
+    #[test]
+    fn spread_placement_touches_many_cells() {
+        let s = Scheduler::juwels(Placement::Spread);
+        let jobs = vec![Job::simple(1, 0.0, Partition::Booster, 96, 10.0)];
+        let rec = s.run(&jobs).unwrap();
+        assert!(rec[0].cells_touched >= 10, "cells {}", rec[0].cells_touched);
+    }
+
+    #[test]
+    fn fifo_queueing_when_full() {
+        // Two jobs that each need the whole Booster: second waits.
+        let jobs = vec![
+            Job::simple(1, 0.0, Partition::Booster, 936, 50.0),
+            Job::simple(2, 1.0, Partition::Booster, 936, 50.0),
+        ];
+        let rec = sched().run(&jobs).unwrap();
+        assert_eq!(rec[0].start, 0.0);
+        assert_eq!(rec[1].start, 50.0);
+        assert!((rec[1].wait - 49.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backfill_fills_holes() {
+        // Big head job blocked behind a long runner; a small short job
+        // backfills without delaying the head.
+        let jobs = vec![
+            Job::simple(1, 0.0, Partition::Booster, 900, 100.0),
+            Job::simple(2, 1.0, Partition::Booster, 936, 100.0), // head, blocked
+            Job::simple(3, 2.0, Partition::Booster, 30, 10.0),   // backfills
+        ];
+        let rec = sched().run(&jobs).unwrap();
+        assert_eq!(rec[1].start, 100.0);
+        assert!(rec[2].start < 100.0, "job 3 should backfill: {:?}", rec[2]);
+        // Job 3 must not delay job 2.
+        assert!(rec[2].finish <= 100.0 + 1e-9);
+    }
+
+    #[test]
+    fn no_backfill_keeps_strict_fifo() {
+        let mut s = sched();
+        s.backfill = false;
+        let jobs = vec![
+            Job::simple(1, 0.0, Partition::Booster, 900, 100.0),
+            Job::simple(2, 1.0, Partition::Booster, 936, 100.0),
+            Job::simple(3, 2.0, Partition::Booster, 30, 10.0),
+        ];
+        let rec = s.run(&jobs).unwrap();
+        assert!(rec[2].start >= rec[1].start, "{:?}", rec[2]);
+    }
+
+    #[test]
+    fn heterogeneous_job_spans_partitions() {
+        let jobs = vec![Job::heterogeneous(1, 0.0, 128, 64, 25.0)];
+        let s = sched();
+        let rec = s.run(&jobs).unwrap();
+        assert_eq!(rec[0].booster_nodes.len(), 64);
+        let util_b = s.utilization(&jobs, &rec, Partition::Booster);
+        let util_c = s.utilization(&jobs, &rec, Partition::Cluster);
+        assert!(util_b > 0.0 && util_c > 0.0);
+    }
+
+    #[test]
+    fn rejects_oversized_requests() {
+        let jobs = vec![Job::simple(1, 0.0, Partition::Booster, 1000, 1.0)];
+        assert!(sched().run(&jobs).is_err());
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let jobs: Vec<Job> = (0..20)
+            .map(|i| Job::simple(i, i as f64, Partition::Booster, 100, 50.0))
+            .collect();
+        let s = sched();
+        let rec = s.run(&jobs).unwrap();
+        let u = s.utilization(&jobs, &rec, Partition::Booster);
+        assert!(u > 0.0 && u <= 1.0 + 1e-9, "util {u}");
+    }
+
+    #[test]
+    fn nodes_never_double_allocated() {
+        // Property-style check on a busy trace: overlapping jobs must hold
+        // disjoint booster node sets.
+        let jobs: Vec<Job> = (0..40)
+            .map(|i| Job::simple(i, (i % 7) as f64, Partition::Booster, 120 + (i * 13) % 300, 20.0))
+            .collect();
+        let rec = sched().run(&jobs).unwrap();
+        for a in 0..rec.len() {
+            for b in (a + 1)..rec.len() {
+                let overlap = rec[a].start < rec[b].finish && rec[b].start < rec[a].finish;
+                if overlap {
+                    let sa: std::collections::HashSet<_> =
+                        rec[a].booster_nodes.iter().collect();
+                    assert!(
+                        rec[b].booster_nodes.iter().all(|n| !sa.contains(n)),
+                        "jobs {a} and {b} share nodes"
+                    );
+                }
+            }
+        }
+    }
+}

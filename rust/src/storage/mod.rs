@@ -1,0 +1,160 @@
+//! Storage hierarchy model (§2.2).
+//!
+//! "Dedicated network links ... provide access to a highly-parallel,
+//! flash-based file system with 1400 GB/s peak bandwidth. The storage
+//! cluster, JUST, can be reached with a peak of 400 GB/s bandwidth via
+//! gateway nodes."
+//!
+//! The model: a shared bandwidth pool per tier with fair sharing across
+//! concurrent readers plus per-request latency. It feeds the trainer's
+//! input-pipeline analysis: given a dataset's bytes/sample and a
+//! training step time, how many concurrent readers saturate each tier —
+//! the mechanism behind the data-loading stalls in Figs. 4 / §3.3.
+
+use crate::util::error::{BoosterError, Result};
+
+/// A storage tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Node-local RAM page cache (per node).
+    PageCache,
+    /// The flash-based scratch filesystem (CSCRATCH-like).
+    Flash,
+    /// The JUST storage cluster via gateways.
+    Just,
+}
+
+/// Tier characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct TierSpec {
+    /// Aggregate bandwidth, bytes/s (shared across all readers).
+    pub aggregate_bw: f64,
+    /// Per-node cap, bytes/s (e.g. the node's NICs).
+    pub per_node_bw: f64,
+    /// Per-request latency, seconds.
+    pub latency: f64,
+}
+
+/// Get the paper's numbers for a tier.
+pub fn spec(tier: Tier) -> TierSpec {
+    match tier {
+        Tier::PageCache => TierSpec {
+            aggregate_bw: f64::INFINITY,
+            per_node_bw: 200e9,
+            latency: 2e-6,
+        },
+        Tier::Flash => TierSpec {
+            aggregate_bw: 1400e9,
+            per_node_bw: 100e9, // 4x HDR200
+            latency: 150e-6,
+        },
+        Tier::Just => TierSpec {
+            aggregate_bw: 400e9,
+            per_node_bw: 100e9,
+            latency: 400e-6,
+        },
+    }
+}
+
+/// Effective per-reader bandwidth with `readers` concurrent node-readers.
+pub fn reader_bw(tier: Tier, readers: usize) -> f64 {
+    assert!(readers > 0);
+    let s = spec(tier);
+    (s.aggregate_bw / readers as f64).min(s.per_node_bw)
+}
+
+/// Seconds to read one batch of `bytes` with `readers` concurrent readers.
+pub fn batch_read_time(tier: Tier, bytes: f64, readers: usize) -> f64 {
+    let s = spec(tier);
+    s.latency + bytes / reader_bw(tier, readers)
+}
+
+/// Input-pipeline analysis for a training job.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineAnalysis {
+    /// Seconds to load one per-node batch.
+    pub load_time: f64,
+    /// The training step time it must hide under.
+    pub step_time: f64,
+    /// Whether the pipeline keeps up (with double buffering).
+    pub keeps_up: bool,
+    /// Number of readers at which this tier saturates for this workload.
+    pub saturation_readers: usize,
+}
+
+/// Analyze whether a tier can feed `nodes` nodes consuming
+/// `bytes_per_node_step` every `step_time` seconds.
+pub fn analyze(
+    tier: Tier,
+    nodes: usize,
+    bytes_per_node_step: f64,
+    step_time: f64,
+) -> Result<PipelineAnalysis> {
+    if nodes == 0 || step_time <= 0.0 {
+        return Err(BoosterError::Config("bad pipeline analysis inputs".into()));
+    }
+    let load = batch_read_time(tier, bytes_per_node_step, nodes);
+    let s = spec(tier);
+    // Demand per reader: bytes/step_time; tier saturates when
+    // readers * demand > aggregate.
+    let demand = bytes_per_node_step / step_time;
+    let sat = if s.aggregate_bw.is_infinite() {
+        usize::MAX
+    } else {
+        (s.aggregate_bw / demand).floor().max(1.0) as usize
+    };
+    Ok(PipelineAnalysis {
+        load_time: load,
+        step_time,
+        keeps_up: load <= step_time,
+        saturation_readers: sat,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_numbers_encoded() {
+        assert_eq!(spec(Tier::Flash).aggregate_bw, 1400e9);
+        assert_eq!(spec(Tier::Just).aggregate_bw, 400e9);
+    }
+
+    #[test]
+    fn sharing_reduces_reader_bw() {
+        let one = reader_bw(Tier::Just, 1);
+        let many = reader_bw(Tier::Just, 64);
+        assert!(one >= many);
+        assert!((many - 400e9 / 64.0).abs() < 1.0);
+        // A single reader is NIC-capped, not tier-capped.
+        assert_eq!(one, 100e9);
+    }
+
+    #[test]
+    fn small_jobs_keep_up_big_jobs_saturate() {
+        // ImageNet-like: 64 images x 600 KB per node-step, 0.2 s steps.
+        let bytes = 64.0 * 600e3;
+        let a = analyze(Tier::Just, 4, bytes, 0.2).unwrap();
+        assert!(a.keeps_up, "{a:?}");
+        // At 936 nodes the same per-node demand runs into the 400 GB/s
+        // gateway limit only if demand * nodes > 400e9.
+        let demand_total = 936.0 * bytes / 0.2;
+        let b = analyze(Tier::Just, 936, bytes, 0.2).unwrap();
+        assert_eq!(demand_total > 400e9, !b.keeps_up || b.saturation_readers < 936);
+    }
+
+    #[test]
+    fn flash_beats_just_at_scale() {
+        let bytes = 512.0 * 2e6; // video-like batches
+        let just = analyze(Tier::Just, 256, bytes, 0.5).unwrap();
+        let flash = analyze(Tier::Flash, 256, bytes, 0.5).unwrap();
+        assert!(flash.load_time <= just.load_time);
+        assert!(flash.saturation_readers >= just.saturation_readers);
+    }
+
+    #[test]
+    fn zero_nodes_rejected() {
+        assert!(analyze(Tier::Just, 0, 1e6, 0.1).is_err());
+    }
+}

@@ -1,0 +1,563 @@
+//! Interconnect topologies.
+//!
+//! JUWELS Booster's fabric (§2.2): Mellanox HDR200 InfiniBand arranged as a
+//! **DragonFly+** — nodes grouped into cells of 48; inside a cell a
+//! two-level full fat tree (leaf + spine switches); every pair of cells
+//! connected by 10 global links. The resulting bi-section bandwidth between
+//! the cells is 400 Tbit/s, which [`Topology::bisection_bw`] reproduces.
+//!
+//! The model is a *capacity-aggregated* fluid graph: each node's 4 NICs
+//! appear as one injection link of 4×25 GB/s, leaf↔spine capacity is sized
+//! for a non-blocking intra-cell tree, and GPUs hang off an intra-node
+//! NVSwitch vertex with per-GPU NVLink capacity. Per-hop latencies are
+//! carried on every link so small-message collectives see latency, not
+//! just bandwidth.
+
+use crate::hw::node::NodeSpec;
+use crate::util::error::{BoosterError, Result};
+
+/// Identifies one GPU in the machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId {
+    /// Global node index.
+    pub node: usize,
+    /// GPU index within the node.
+    pub gpu: usize,
+}
+
+/// Graph vertex kinds (internal ids are flattened into `usize`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vertex {
+    /// A GPU endpoint.
+    Gpu(GpuId),
+    /// The intra-node NVSwitch of a node.
+    NodeSwitch(usize),
+    /// A leaf switch: (cell, index within cell).
+    Leaf(usize, usize),
+    /// A spine switch: (cell, index within cell).
+    Spine(usize, usize),
+}
+
+/// A directed link in the fluid model.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Source vertex id.
+    pub from: usize,
+    /// Destination vertex id.
+    pub to: usize,
+    /// Capacity, bytes/s.
+    pub bw: f64,
+    /// Traversal latency, seconds.
+    pub latency: f64,
+}
+
+/// Topology family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopoKind {
+    /// DragonFly+: cells of fat trees + all-to-all global links.
+    DragonFlyPlus,
+    /// Single two-level full fat tree (the Selene comparison machine).
+    FatTree,
+}
+
+/// Structural parameters of a topology instance.
+#[derive(Debug, Clone)]
+pub struct TopoParams {
+    /// Family.
+    pub kind: TopoKind,
+    /// Total compute nodes.
+    pub nodes: usize,
+    /// Nodes per cell (DragonFly+ only; FatTree = one big cell).
+    pub nodes_per_cell: usize,
+    /// Leaf switches per cell.
+    pub leaves_per_cell: usize,
+    /// Spine switches per cell.
+    pub spines_per_cell: usize,
+    /// Global links between every pair of cells.
+    pub global_links_per_pair: usize,
+    /// Per-global-link bandwidth, bytes/s (HDR200 = 25 GB/s).
+    pub global_link_bw: f64,
+    /// Per-hop switch latency, seconds.
+    pub hop_latency: f64,
+    /// NVLink hop latency, seconds.
+    pub nvlink_latency: f64,
+}
+
+impl TopoParams {
+    /// JUWELS Booster: 936 nodes in 20 cells of 48 (last cell short),
+    /// 8 leaves + 8 spines per cell, 10 global links per cell pair.
+    pub fn juwels_booster() -> TopoParams {
+        TopoParams {
+            kind: TopoKind::DragonFlyPlus,
+            nodes: 936,
+            nodes_per_cell: 48,
+            leaves_per_cell: 8,
+            spines_per_cell: 8,
+            global_links_per_pair: 10,
+            global_link_bw: 200e9 / 8.0,
+            hop_latency: 600e-9,
+            nvlink_latency: 300e-9,
+        }
+    }
+
+    /// NVIDIA Selene-like machine: 280 DGX-A100 nodes on a fat tree.
+    pub fn selene() -> TopoParams {
+        TopoParams {
+            kind: TopoKind::FatTree,
+            nodes: 280,
+            nodes_per_cell: 280,
+            leaves_per_cell: 20,
+            spines_per_cell: 20,
+            global_links_per_pair: 0,
+            global_link_bw: 200e9 / 8.0,
+            hop_latency: 600e-9,
+            nvlink_latency: 300e-9,
+        }
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.nodes.div_ceil(self.nodes_per_cell)
+    }
+}
+
+/// A built topology: vertices, links, and structural routing.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Parameters it was built from.
+    pub params: TopoParams,
+    /// The node hardware attached to this fabric.
+    pub node_spec: NodeSpec,
+    /// All directed links; ids are indices into this vector.
+    pub links: Vec<Link>,
+    n_vertices: usize,
+    // Link id lookup tables (structural, avoids a hash map on hot paths):
+    gpu_up: Vec<Vec<usize>>,    // [node][gpu] -> link id gpu->nodesw
+    gpu_down: Vec<Vec<usize>>,  // [node][gpu] -> link id nodesw->gpu
+    node_up: Vec<usize>,        // [node] -> nodesw->leaf
+    node_down: Vec<usize>,      // [node] -> leaf->nodesw
+    leaf_spine: Vec<Vec<Vec<usize>>>, // [cell][leaf][spine] -> leaf->spine
+    spine_leaf: Vec<Vec<Vec<usize>>>, // [cell][spine][leaf] -> spine->leaf
+    // [cell_a][cell_b][k] -> global link id (directed a->b), k in 0..global_links_per_pair
+    global: Vec<Vec<Vec<usize>>>,
+}
+
+impl Topology {
+    /// Build a topology from parameters and a node spec.
+    pub fn build(params: TopoParams, node_spec: NodeSpec) -> Result<Topology> {
+        if params.nodes == 0 {
+            return Err(BoosterError::Config("topology with zero nodes".into()));
+        }
+        if params.nodes_per_cell % params.leaves_per_cell != 0 {
+            return Err(BoosterError::Config(format!(
+                "nodes_per_cell {} not divisible by leaves_per_cell {}",
+                params.nodes_per_cell, params.leaves_per_cell
+            )));
+        }
+        let cells = params.cells();
+        let g = node_spec.gpus_per_node;
+        let mut links: Vec<Link> = Vec::new();
+        let mut n_vertices = 0usize;
+        let mut alloc_vertex = || {
+            let v = n_vertices;
+            n_vertices += 1;
+            v
+        };
+
+        // Vertex ids.
+        let gpu_v: Vec<Vec<usize>> = (0..params.nodes)
+            .map(|_| (0..g).map(|_| alloc_vertex()).collect())
+            .collect();
+        let nodesw_v: Vec<usize> = (0..params.nodes).map(|_| alloc_vertex()).collect();
+        let leaf_v: Vec<Vec<usize>> = (0..cells)
+            .map(|_| (0..params.leaves_per_cell).map(|_| alloc_vertex()).collect())
+            .collect();
+        let spine_v: Vec<Vec<usize>> = (0..cells)
+            .map(|_| (0..params.spines_per_cell).map(|_| alloc_vertex()).collect())
+            .collect();
+
+        let mut add = |from: usize, to: usize, bw: f64, latency: f64| -> usize {
+            links.push(Link {
+                from,
+                to,
+                bw,
+                latency,
+            });
+            links.len() - 1
+        };
+
+        // GPU <-> NVSwitch.
+        let mut gpu_up = vec![Vec::new(); params.nodes];
+        let mut gpu_down = vec![Vec::new(); params.nodes];
+        for n in 0..params.nodes {
+            for k in 0..g {
+                gpu_up[n].push(add(
+                    gpu_v[n][k],
+                    nodesw_v[n],
+                    node_spec.gpu.nvlink_bw,
+                    params.nvlink_latency,
+                ));
+                gpu_down[n].push(add(
+                    nodesw_v[n],
+                    gpu_v[n][k],
+                    node_spec.gpu.nvlink_bw,
+                    params.nvlink_latency,
+                ));
+            }
+        }
+
+        // Node <-> leaf (aggregated NIC injection).
+        let nodes_per_leaf = params.nodes_per_cell / params.leaves_per_cell;
+        let inj = node_spec.injection_bw();
+        let mut node_up = vec![0usize; params.nodes];
+        let mut node_down = vec![0usize; params.nodes];
+        for n in 0..params.nodes {
+            let cell = n / params.nodes_per_cell;
+            let in_cell = n % params.nodes_per_cell;
+            let leaf = in_cell / nodes_per_leaf;
+            node_up[n] = add(nodesw_v[n], leaf_v[cell][leaf], inj, params.hop_latency);
+            node_down[n] = add(leaf_v[cell][leaf], nodesw_v[n], inj, params.hop_latency);
+        }
+
+        // Leaf <-> spine, full bipartite, sized for a non-blocking tree:
+        // each leaf's downstream capacity spread over the spines.
+        let leaf_spine_bw = nodes_per_leaf as f64 * inj / params.spines_per_cell as f64;
+        let mut leaf_spine = vec![
+            vec![vec![0usize; params.spines_per_cell]; params.leaves_per_cell];
+            cells
+        ];
+        let mut spine_leaf = vec![
+            vec![vec![0usize; params.leaves_per_cell]; params.spines_per_cell];
+            cells
+        ];
+        for c in 0..cells {
+            for l in 0..params.leaves_per_cell {
+                for s in 0..params.spines_per_cell {
+                    leaf_spine[c][l][s] =
+                        add(leaf_v[c][l], spine_v[c][s], leaf_spine_bw, params.hop_latency);
+                    spine_leaf[c][s][l] =
+                        add(spine_v[c][s], leaf_v[c][l], leaf_spine_bw, params.hop_latency);
+                }
+            }
+        }
+
+        // Global links between every cell pair, attached to spines
+        // round-robin (DragonFly+ only).
+        let mut global = vec![vec![Vec::new(); cells]; cells];
+        if params.kind == TopoKind::DragonFlyPlus {
+            for a in 0..cells {
+                for b in 0..cells {
+                    if a == b {
+                        continue;
+                    }
+                    for k in 0..params.global_links_per_pair {
+                        let sa = (b + k) % params.spines_per_cell;
+                        let sb = (a + k) % params.spines_per_cell;
+                        let id = add(
+                            spine_v[a][sa],
+                            spine_v[b][sb],
+                            params.global_link_bw,
+                            params.hop_latency,
+                        );
+                        global[a][b].push(id);
+                    }
+                }
+            }
+        }
+
+        Ok(Topology {
+            params,
+            node_spec,
+            links,
+            n_vertices,
+            gpu_up,
+            gpu_down,
+            node_up,
+            node_down,
+            leaf_spine,
+            spine_leaf,
+            global,
+        })
+    }
+
+    /// JUWELS Booster with its node spec.
+    pub fn juwels_booster() -> Topology {
+        Topology::build(TopoParams::juwels_booster(), NodeSpec::juwels_booster()).unwrap()
+    }
+
+    /// Selene-like comparison machine.
+    pub fn selene() -> Topology {
+        Topology::build(TopoParams::selene(), NodeSpec::selene()).unwrap()
+    }
+
+    /// Total vertices in the graph.
+    pub fn n_vertices(&self) -> usize {
+        self.n_vertices
+    }
+
+    /// Total GPUs in the machine.
+    pub fn total_gpus(&self) -> usize {
+        self.params.nodes * self.node_spec.gpus_per_node
+    }
+
+    fn cell_of(&self, node: usize) -> usize {
+        node / self.params.nodes_per_cell
+    }
+
+    fn leaf_of(&self, node: usize) -> usize {
+        let nodes_per_leaf = self.params.nodes_per_cell / self.params.leaves_per_cell;
+        (node % self.params.nodes_per_cell) / nodes_per_leaf
+    }
+
+    /// Minimal route between two GPUs as a list of directed link ids.
+    /// `salt` spreads traffic across equivalent spines / global links
+    /// deterministically (ECMP-style).
+    pub fn route(&self, src: GpuId, dst: GpuId, salt: u64) -> Vec<usize> {
+        assert!(src.node < self.params.nodes && dst.node < self.params.nodes);
+        let mut path = Vec::with_capacity(8);
+        if src == dst {
+            return path;
+        }
+        if src.node == dst.node {
+            // NVLink only.
+            path.push(self.gpu_up[src.node][src.gpu]);
+            path.push(self.gpu_down[dst.node][dst.gpu]);
+            return path;
+        }
+        path.push(self.gpu_up[src.node][src.gpu]);
+        path.push(self.node_up[src.node]);
+        let (ca, cb) = (self.cell_of(src.node), self.cell_of(dst.node));
+        let (la, lb) = (self.leaf_of(src.node), self.leaf_of(dst.node));
+        let spines = self.params.spines_per_cell;
+        if ca == cb {
+            if la != lb {
+                // leaf -> spine -> leaf within the cell.
+                let s = (salt as usize)
+                    .wrapping_add(src.node)
+                    .wrapping_add(dst.node)
+                    % spines;
+                path.push(self.leaf_spine[ca][la][s]);
+                path.push(self.spine_leaf[ca][s][lb]);
+            }
+            // Same leaf: leaf switch turns the packet around directly.
+        } else {
+            // leaf -> spine(a) -> global -> spine(b) -> leaf.
+            let nglob = self.global[ca][cb].len();
+            debug_assert!(nglob > 0, "no global links between cells {ca},{cb}");
+            let k = (salt as usize)
+                .wrapping_add(src.node)
+                .wrapping_mul(31)
+                .wrapping_add(dst.node)
+                % nglob;
+            let gl = self.global[ca][cb][k];
+            let sa = {
+                // Spine the chosen global link hangs off in cell a.
+                let v = self.links[gl].from;
+                self.spine_index(ca, v)
+            };
+            let sb = {
+                let v = self.links[gl].to;
+                self.spine_index(cb, v)
+            };
+            path.push(self.leaf_spine[ca][la][sa]);
+            path.push(gl);
+            path.push(self.spine_leaf[cb][sb][lb]);
+        }
+        path.push(self.node_down[dst.node]);
+        path.push(self.gpu_down[dst.node][dst.gpu]);
+        path
+    }
+
+    fn spine_index(&self, cell: usize, vertex: usize) -> usize {
+        // Spines were allocated contiguously per cell right after leaves;
+        // recover the index by scanning the per-cell table (cells are tiny).
+        for s in 0..self.params.spines_per_cell {
+            if self.links[self.spine_leaf[cell][s][0]].from == vertex {
+                return s;
+            }
+        }
+        panic!("vertex {vertex} is not a spine of cell {cell}");
+    }
+
+    /// Total latency along a route.
+    pub fn route_latency(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&l| self.links[l].latency).sum()
+    }
+
+    /// Bi-section bandwidth between the cells, in bits/s counting both
+    /// directions (the paper's convention: *"The resulting total bi-section
+    /// bandwidth is 400 Tbit/s between the cells"*).
+    pub fn bisection_bw_bits(&self) -> f64 {
+        match self.params.kind {
+            TopoKind::DragonFlyPlus => {
+                let cells = self.params.cells();
+                let half = cells / 2;
+                // Balanced cut: half x (cells - half) pairs, each with
+                // `global_links_per_pair` links per direction.
+                let crossing_pairs = (half * (cells - half)) as f64;
+                crossing_pairs
+                    * self.params.global_links_per_pair as f64
+                    * self.params.global_link_bw
+                    * 8.0 // bytes -> bits
+                    * 2.0 // both directions
+            }
+            TopoKind::FatTree => {
+                // Non-blocking tree: bisection = half the injection.
+                self.params.nodes as f64 * self.node_spec.injection_bw() * 8.0
+            }
+        }
+    }
+
+    /// All GPUs of the first `n` nodes — the canonical compact allocation.
+    pub fn first_gpus(&self, n_gpus: usize) -> Vec<GpuId> {
+        let g = self.node_spec.gpus_per_node;
+        assert!(n_gpus <= self.total_gpus());
+        (0..n_gpus)
+            .map(|i| GpuId {
+                node: i / g,
+                gpu: i % g,
+            })
+            .collect()
+    }
+
+    /// GPUs spread across cells round-robin — the worst-case placement used
+    /// by the scheduling ablation.
+    pub fn spread_gpus(&self, n_gpus: usize) -> Vec<GpuId> {
+        let g = self.node_spec.gpus_per_node;
+        let cells = self.params.cells();
+        assert!(n_gpus <= self.total_gpus());
+        let mut out = Vec::with_capacity(n_gpus);
+        let mut per_cell_next = vec![0usize; cells];
+        let mut cell = 0;
+        while out.len() < n_gpus {
+            let base = cell * self.params.nodes_per_cell;
+            let idx = per_cell_next[cell];
+            let node = base + idx / g;
+            if node < self.params.nodes && idx / g < self.params.nodes_per_cell {
+                out.push(GpuId {
+                    node,
+                    gpu: idx % g,
+                });
+                per_cell_next[cell] += 1;
+            }
+            cell = (cell + 1) % cells;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn booster_bisection_is_400_tbit() {
+        let t = Topology::juwels_booster();
+        let bits = t.bisection_bw_bits();
+        assert!(
+            (bits - 400e12).abs() / 400e12 < 1e-9,
+            "bisection {bits} bits/s"
+        );
+    }
+
+    #[test]
+    fn gpu_counts() {
+        let t = Topology::juwels_booster();
+        assert_eq!(t.total_gpus(), 3744);
+        assert_eq!(t.params.cells(), 20);
+    }
+
+    #[test]
+    fn intra_node_route_is_nvlink_only() {
+        let t = Topology::juwels_booster();
+        let p = t.route(GpuId { node: 5, gpu: 0 }, GpuId { node: 5, gpu: 3 }, 0);
+        assert_eq!(p.len(), 2);
+        for &l in &p {
+            assert_eq!(t.links[l].bw, t.node_spec.gpu.nvlink_bw);
+        }
+    }
+
+    #[test]
+    fn intra_cell_route_has_no_global_hop() {
+        let t = Topology::juwels_booster();
+        // Nodes 0 and 47 are both in cell 0 but on different leaves.
+        let p = t.route(GpuId { node: 0, gpu: 0 }, GpuId { node: 47, gpu: 1 }, 3);
+        // gpu-up, node-up, leaf-spine, spine-leaf, node-down, gpu-down.
+        assert_eq!(p.len(), 6);
+        for &l in &p {
+            assert!(t.links[l].bw > 24e9, "no 25GB/s global link expected");
+        }
+    }
+
+    #[test]
+    fn inter_cell_route_crosses_one_global_link() {
+        let t = Topology::juwels_booster();
+        let p = t.route(GpuId { node: 0, gpu: 0 }, GpuId { node: 500, gpu: 2 }, 7);
+        assert_eq!(p.len(), 7);
+        let globals = p
+            .iter()
+            .filter(|&&l| (t.links[l].bw - 25e9).abs() < 1e-3)
+            .count();
+        assert_eq!(globals, 1);
+    }
+
+    #[test]
+    fn same_leaf_route_skips_spine() {
+        let t = Topology::juwels_booster();
+        // Nodes 0..6 share leaf 0 of cell 0.
+        let p = t.route(GpuId { node: 0, gpu: 0 }, GpuId { node: 1, gpu: 0 }, 0);
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn salt_spreads_global_links() {
+        let t = Topology::juwels_booster();
+        let mut used = std::collections::HashSet::new();
+        for salt in 0..40u64 {
+            let p = t.route(GpuId { node: 0, gpu: 0 }, GpuId { node: 600, gpu: 0 }, salt);
+            let gl = *p
+                .iter()
+                .find(|&&l| (t.links[l].bw - 25e9).abs() < 1e-3)
+                .unwrap();
+            used.insert(gl);
+        }
+        assert!(used.len() >= 8, "only {} global links used", used.len());
+    }
+
+    #[test]
+    fn route_latency_adds_hops() {
+        let t = Topology::juwels_booster();
+        let p = t.route(GpuId { node: 0, gpu: 0 }, GpuId { node: 500, gpu: 0 }, 0);
+        let lat = t.route_latency(&p);
+        // 2 NVLink hops + 5 fabric hops.
+        let expect = 2.0 * 300e-9 + 5.0 * 600e-9;
+        assert!((lat - expect).abs() < 1e-12, "lat {lat}");
+    }
+
+    #[test]
+    fn fat_tree_has_full_bisection() {
+        let t = Topology::selene();
+        let bits = t.bisection_bw_bits();
+        // 280 nodes x 200 GB/s injection x 8.
+        assert!((bits - 280.0 * 200e9 * 8.0).abs() / bits < 1e-9);
+    }
+
+    #[test]
+    fn placements_have_right_shape() {
+        let t = Topology::juwels_booster();
+        let compact = t.first_gpus(16);
+        assert_eq!(compact.len(), 16);
+        assert!(compact.iter().all(|g| g.node < 4));
+        let spread = t.spread_gpus(16);
+        let cells: std::collections::HashSet<usize> =
+            spread.iter().map(|g| g.node / 48).collect();
+        assert!(cells.len() >= 8, "spread placement should span cells");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let mut p = TopoParams::juwels_booster();
+        p.leaves_per_cell = 7; // 48 % 7 != 0
+        assert!(Topology::build(p, NodeSpec::juwels_booster()).is_err());
+    }
+}

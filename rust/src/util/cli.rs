@@ -1,0 +1,240 @@
+//! Declarative command-line flag parsing (the offline `clap` substitute).
+//!
+//! A [`Flags`] spec declares typed options with defaults and help text;
+//! parsing produces typed getters and an auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use super::error::{BoosterError, Result};
+
+#[derive(Debug, Clone)]
+enum Value {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Value,
+}
+
+/// A flag set: declare with `bool_flag`/`int_flag`/... then [`Flags::parse`].
+#[derive(Debug, Clone, Default)]
+pub struct Flags {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, Value>,
+    /// Positional (non-flag) arguments left over after parsing.
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    /// Empty flag set.
+    pub fn new() -> Flags {
+        Flags::default()
+    }
+
+    fn add(&mut self, name: &str, help: &str, default: Value) {
+        assert!(
+            !self.specs.iter().any(|s| s.name == name),
+            "duplicate flag --{name}"
+        );
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default,
+        });
+    }
+
+    /// Declare a boolean flag (`--name` sets true; `--name=false` works too).
+    pub fn bool_flag(mut self, name: &str, default: bool, help: &str) -> Self {
+        self.add(name, help, Value::Bool(default));
+        self
+    }
+
+    /// Declare an integer flag.
+    pub fn int_flag(mut self, name: &str, default: i64, help: &str) -> Self {
+        self.add(name, help, Value::Int(default));
+        self
+    }
+
+    /// Declare a float flag.
+    pub fn float_flag(mut self, name: &str, default: f64, help: &str) -> Self {
+        self.add(name, help, Value::Float(default));
+        self
+    }
+
+    /// Declare a string flag.
+    pub fn str_flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.add(name, help, Value::Str(default.to_string()));
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self, cmd: &str) -> String {
+        let mut out = format!("usage: booster {cmd} [flags]\n\nflags:\n");
+        for s in &self.specs {
+            let d = match &s.default {
+                Value::Bool(b) => b.to_string(),
+                Value::Int(i) => i.to_string(),
+                Value::Float(f) => f.to_string(),
+                Value::Str(s) => format!("{s:?}"),
+            };
+            out.push_str(&format!("  --{:<24} {} (default: {})\n", s.name, s.help, d));
+        }
+        out
+    }
+
+    /// Parse `args` (already split, without the subcommand name).
+    /// Accepts `--name value` and `--name=value`; unknown flags error.
+    pub fn parse(mut self, args: &[String]) -> Result<Flags> {
+        for s in &self.specs {
+            self.values.insert(s.name.clone(), s.default.clone());
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| BoosterError::Config(format!("unknown flag --{name}")))?
+                    .clone();
+                let raw = match inline {
+                    Some(v) => v,
+                    None => match spec.default {
+                        // Bare boolean flag toggles true.
+                        Value::Bool(_) => "true".to_string(),
+                        _ => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    BoosterError::Config(format!("--{name} needs a value"))
+                                })?
+                        }
+                    },
+                };
+                let val = match spec.default {
+                    Value::Bool(_) => Value::Bool(raw.parse().map_err(|_| bad(&name, &raw))?),
+                    Value::Int(_) => Value::Int(raw.parse().map_err(|_| bad(&name, &raw))?),
+                    Value::Float(_) => Value::Float(raw.parse().map_err(|_| bad(&name, &raw))?),
+                    Value::Str(_) => Value::Str(raw),
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Get a boolean flag value (panics if undeclared — programmer error).
+    pub fn get_bool(&self, name: &str) -> bool {
+        match self.values.get(name) {
+            Some(Value::Bool(b)) => *b,
+            _ => panic!("flag --{name} not declared as bool"),
+        }
+    }
+
+    /// Get an integer flag value.
+    pub fn get_int(&self, name: &str) -> i64 {
+        match self.values.get(name) {
+            Some(Value::Int(i)) => *i,
+            _ => panic!("flag --{name} not declared as int"),
+        }
+    }
+
+    /// Get an integer flag as usize (errors on negative).
+    pub fn get_usize(&self, name: &str) -> usize {
+        let v = self.get_int(name);
+        assert!(v >= 0, "--{name} must be non-negative");
+        v as usize
+    }
+
+    /// Get a float flag value.
+    pub fn get_f64(&self, name: &str) -> f64 {
+        match self.values.get(name) {
+            Some(Value::Float(f)) => *f,
+            _ => panic!("flag --{name} not declared as float"),
+        }
+    }
+
+    /// Get a string flag value.
+    pub fn get_str(&self, name: &str) -> &str {
+        match self.values.get(name) {
+            Some(Value::Str(s)) => s,
+            _ => panic!("flag --{name} not declared as str"),
+        }
+    }
+}
+
+fn bad(name: &str, raw: &str) -> BoosterError {
+    BoosterError::Config(format!("invalid value {raw:?} for --{name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Flags {
+        Flags::new()
+            .bool_flag("verbose", false, "chatty")
+            .int_flag("gpus", 4, "gpu count")
+            .float_flag("lr", 0.1, "learning rate")
+            .str_flag("task", "resnet", "mlperf task")
+    }
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let f = spec().parse(&[]).unwrap();
+        assert!(!f.get_bool("verbose"));
+        assert_eq!(f.get_int("gpus"), 4);
+        assert_eq!(f.get_f64("lr"), 0.1);
+        assert_eq!(f.get_str("task"), "resnet");
+    }
+
+    #[test]
+    fn both_flag_syntaxes() {
+        let f = spec()
+            .parse(&s(&["--gpus", "256", "--lr=0.01", "--verbose", "--task=bert"]))
+            .unwrap();
+        assert!(f.get_bool("verbose"));
+        assert_eq!(f.get_int("gpus"), 256);
+        assert_eq!(f.get_f64("lr"), 0.01);
+        assert_eq!(f.get_str("task"), "bert");
+    }
+
+    #[test]
+    fn positional_collected() {
+        let f = spec().parse(&s(&["run", "--gpus", "8", "fast"])).unwrap();
+        assert_eq!(f.positional, vec!["run", "fast"]);
+    }
+
+    #[test]
+    fn unknown_and_invalid_rejected() {
+        assert!(spec().parse(&s(&["--nope"])).is_err());
+        assert!(spec().parse(&s(&["--gpus", "many"])).is_err());
+        assert!(spec().parse(&s(&["--gpus"])).is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = spec().help("mlperf");
+        assert!(h.contains("--gpus"));
+        assert!(h.contains("default: 4"));
+    }
+}

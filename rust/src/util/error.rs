@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by BoosterKit.
+#[derive(Debug, Error)]
+pub enum BoosterError {
+    /// Artifact files missing / malformed metadata.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// XLA / PJRT runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Configuration problems (bad flag, inconsistent cluster spec, ...).
+    #[error("config error: {0}")]
+    Config(String),
+    /// Simulation invariant violations.
+    #[error("simulation error: {0}")]
+    Sim(String),
+    /// JSON parse errors.
+    #[error("json error at offset {offset}: {msg}")]
+    Json {
+        /// Byte offset in the input.
+        offset: usize,
+        /// Human description.
+        msg: String,
+    },
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// Error bubbled up from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for BoosterError {
+    fn from(e: xla::Error) -> Self {
+        BoosterError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, BoosterError>;

@@ -1,0 +1,94 @@
+//! Foundation substrates.
+//!
+//! The build environment is fully offline and the vendored crate set does
+//! not include `rand`, `serde`, `clap`, `criterion` or `proptest`, so this
+//! module provides small, well-tested replacements (see DESIGN.md §3):
+//!
+//! * [`rng`] — xoshiro256** PRNG plus the distributions the simulators need.
+//! * [`stats`] — descriptive statistics, five-number summaries, linear fits.
+//! * [`json`] — a minimal JSON parser/writer for configs and artifacts.
+//! * [`table`] — ASCII table/figure rendering for paper-style reports.
+//! * [`cli`] — a declarative flag parser.
+//! * [`check`] — a shrink-free property-testing harness.
+//! * [`error`] — the crate error type.
+
+pub mod check;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count with binary units (`1.5 MiB`).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds adaptively (`1.3 ms`, `2.4 s`, `3.1 min`, `4.2 h`).
+pub fn fmt_seconds(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.1} h", secs / 3600.0)
+    }
+}
+
+/// Format a rate in FLOP/s with SI units (`19.5 TFLOP/s`).
+pub fn fmt_flops(flops: f64) -> String {
+    const UNITS: [&str; 6] = ["", "k", "M", "G", "T", "P"];
+    let mut v = flops;
+    let mut unit = 0;
+    while v >= 1000.0 && unit < UNITS.len() - 1 {
+        v /= 1000.0;
+        unit += 1;
+    }
+    format!("{v:.2} {}FLOP/s", UNITS[unit])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn seconds_formatting() {
+        assert_eq!(fmt_seconds(0.5e-9), "0.5 ns");
+        assert_eq!(fmt_seconds(2.0e-5), "20.0 us");
+        assert_eq!(fmt_seconds(0.0042), "4.20 ms");
+        assert_eq!(fmt_seconds(3.25), "3.25 s");
+        assert_eq!(fmt_seconds(600.0), "10.0 min");
+        assert_eq!(fmt_seconds(10_000.0), "2.8 h");
+    }
+
+    #[test]
+    fn flops_formatting() {
+        assert_eq!(fmt_flops(9.7e12), "9.70 TFLOP/s");
+        assert_eq!(fmt_flops(312e12), "312.00 TFLOP/s");
+    }
+}

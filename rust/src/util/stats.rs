@@ -1,0 +1,329 @@
+//! Descriptive statistics used by the benchmark harnesses and reports.
+//!
+//! Implements exactly what the paper's figures need: means/medians,
+//! percentile-based box-whisker summaries (Fig. 4 right panel), scaling
+//! efficiency (Figs. 1 & 4), and simple least-squares fits.
+
+/// Arithmetic mean; 0.0 on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance; 0.0 for fewer than two samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in `[0, 100]`. Panics on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Five-number summary + mean + whiskers, as drawn in the paper's Fig. 4
+/// box-whisker plot (whiskers at 1.5 IQR, clamped to the data range).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    /// Minimum observation.
+    pub min: f64,
+    /// Lower whisker (smallest observation ≥ Q1 − 1.5·IQR).
+    pub whisker_lo: f64,
+    /// First quartile.
+    pub q1: f64,
+    /// Median.
+    pub median: f64,
+    /// Third quartile.
+    pub q3: f64,
+    /// Upper whisker (largest observation ≤ Q3 + 1.5·IQR).
+    pub whisker_hi: f64,
+    /// Maximum observation.
+    pub max: f64,
+    /// Arithmetic mean (the star in Fig. 4).
+    pub mean: f64,
+    /// Observations outside the whiskers.
+    pub outliers: usize,
+}
+
+impl BoxStats {
+    /// Compute the summary. Panics on empty input.
+    pub fn from(xs: &[f64]) -> BoxStats {
+        assert!(!xs.is_empty(), "BoxStats of empty slice");
+        let q1 = percentile(xs, 25.0);
+        let q3 = percentile(xs, 75.0);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let whisker_lo = *sorted.iter().find(|&&x| x >= lo_fence).unwrap();
+        let whisker_hi = *sorted.iter().rev().find(|&&x| x <= hi_fence).unwrap();
+        let outliers = sorted
+            .iter()
+            .filter(|&&x| x < whisker_lo || x > whisker_hi)
+            .count();
+        BoxStats {
+            min: sorted[0],
+            whisker_lo,
+            q1,
+            median: percentile(xs, 50.0),
+            q3,
+            whisker_hi,
+            max: *sorted.last().unwrap(),
+            mean: mean(xs),
+            outliers,
+        }
+    }
+}
+
+/// Scaling efficiency as used in Figs. 1 & 4:
+/// `throughput(n) / (n / n_ref * throughput(n_ref))`.
+pub fn scaling_efficiency(
+    throughput_n: f64,
+    n: usize,
+    throughput_ref: f64,
+    n_ref: usize,
+) -> f64 {
+    assert!(n > 0 && n_ref > 0);
+    assert!(throughput_ref > 0.0);
+    throughput_n / (throughput_ref * n as f64 / n_ref as f64)
+}
+
+/// Speedup-based efficiency for *time* measurements:
+/// `t_ref * n_ref / (t_n * n)`.
+pub fn time_efficiency(t_n: f64, n: usize, t_ref: f64, n_ref: usize) -> f64 {
+    assert!(t_n > 0.0 && t_ref > 0.0);
+    (t_ref * n_ref as f64) / (t_n * n as f64)
+}
+
+/// Ordinary least squares `y = a + b x`; returns `(a, b)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+/// Geometric mean (throughput aggregation across MLPerf tasks).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Binary-classification counting for one class (one-vs-rest).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Confusion {
+    /// True positives.
+    pub tp: usize,
+    /// False positives.
+    pub fp: usize,
+    /// False negatives.
+    pub fn_: usize,
+    /// True negatives.
+    pub tn: usize,
+}
+
+impl Confusion {
+    /// Precision `tp / (tp + fp)`; 0 when undefined.
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    /// Recall `tp / (tp + fn)`; 0 when undefined.
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    /// F1 harmonic mean; 0 when undefined.
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+}
+
+/// Per-class precision/recall/F1 for single-label multiclass predictions
+/// (`labels` and `preds` hold class indices `< n_classes`). Used for
+/// Table 1 (COVIDx).
+pub fn per_class_prf(labels: &[usize], preds: &[usize], n_classes: usize) -> Vec<Confusion> {
+    assert_eq!(labels.len(), preds.len());
+    let mut out = vec![Confusion::default(); n_classes];
+    for (&y, &p) in labels.iter().zip(preds) {
+        for (c, conf) in out.iter_mut().enumerate() {
+            match (y == c, p == c) {
+                (true, true) => conf.tp += 1,
+                (false, true) => conf.fp += 1,
+                (true, false) => conf.fn_ += 1,
+                (false, false) => conf.tn += 1,
+            }
+        }
+    }
+    out
+}
+
+/// Macro-averaged F1 over binary multilabel predictions.
+/// `labels`/`preds` are `[n_samples][n_classes]` boolean matrices flattened
+/// row-major. Used for the BigEarthNet experiment (§3.3).
+pub fn macro_f1_multilabel(labels: &[bool], preds: &[bool], n_classes: usize) -> f64 {
+    assert_eq!(labels.len(), preds.len());
+    assert!(n_classes > 0 && labels.len() % n_classes == 0);
+    let mut conf = vec![Confusion::default(); n_classes];
+    for (i, (&y, &p)) in labels.iter().zip(preds).enumerate() {
+        let c = i % n_classes;
+        match (y, p) {
+            (true, true) => conf[c].tp += 1,
+            (false, true) => conf[c].fp += 1,
+            (true, false) => conf[c].fn_ += 1,
+            (false, false) => conf[c].tn += 1,
+        }
+    }
+    mean(&conf.iter().map(|c| c.f1()).collect::<Vec<_>>())
+}
+
+/// Accuracy for single-label predictions.
+pub fn accuracy(labels: &[usize], preds: &[usize]) -> f64 {
+    assert_eq!(labels.len(), preds.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    labels.iter().zip(preds).filter(|(y, p)| y == p).count() as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 25.0), 1.75);
+    }
+
+    #[test]
+    fn box_stats_with_outlier() {
+        let mut xs: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        xs.push(1000.0);
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.max, 1000.0);
+        assert!(b.whisker_hi <= 20.0);
+        assert_eq!(b.outliers, 1);
+        assert!(b.q1 < b.median && b.median < b.q3);
+    }
+
+    #[test]
+    fn efficiency_definitions_agree() {
+        // Perfect scaling: 4x GPUs, 4x throughput, quarter the time.
+        assert!((scaling_efficiency(400.0, 4, 100.0, 1) - 1.0).abs() < 1e-12);
+        assert!((time_efficiency(25.0, 4, 100.0, 1) - 1.0).abs() < 1e-12);
+        // 80% efficiency case from §3.3: 2550 s on 1 node -> 50 s on 64.
+        let eff = time_efficiency(50.0, 64, 2550.0, 1);
+        assert!((eff - 0.7969).abs() < 1e-3, "eff {eff}");
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..10).map(|x| x as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_simple() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prf_counts() {
+        // labels: 0 0 1 1 2 ; preds: 0 1 1 1 0
+        let labels = [0, 0, 1, 1, 2];
+        let preds = [0, 1, 1, 1, 0];
+        let prf = per_class_prf(&labels, &preds, 3);
+        assert!((prf[0].precision() - 0.5).abs() < 1e-12);
+        assert!((prf[0].recall() - 0.5).abs() < 1e-12);
+        assert!((prf[1].precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((prf[1].recall() - 1.0).abs() < 1e-12);
+        assert_eq!(prf[2].tp, 0);
+        assert_eq!(prf[2].f1(), 0.0);
+    }
+
+    #[test]
+    fn macro_f1_perfect_and_empty_class() {
+        // Two samples, two classes, perfect predictions with both classes
+        // represented -> macro F1 = 1.
+        let labels = [true, false, false, true];
+        let preds = [true, false, false, true];
+        assert!((macro_f1_multilabel(&labels, &preds, 2) - 1.0).abs() < 1e-12);
+        // A class that never occurs and is never predicted contributes F1=0,
+        // dragging the macro average down (matches sklearn's zero_division=0).
+        let labels = [true, false, true, false];
+        let preds = [true, false, true, false];
+        assert!((macro_f1_multilabel(&labels, &preds, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert!((accuracy(&[1, 2, 3], &[1, 2, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! ASCII tables and bar "figures" for paper-style console reports.
+//!
+//! `cargo bench` targets render each reproduced table/figure through this
+//! module so the terminal output visually mirrors the paper (e.g. the
+//! Fig. 1 grouped bars or the Fig. 4 box-whisker summaries).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    /// Left-justified.
+    Left,
+    /// Right-justified (numbers).
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a header row; numeric-looking alignment defaults to
+    /// left for the first column and right for the rest.
+    pub fn new(header: &[&str]) -> Table {
+        let aligns = header
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set a title printed above the table.
+    pub fn with_title(mut self, title: &str) -> Table {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    /// Override column alignments.
+    pub fn with_aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity mismatch: {cells:?}"
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of displayable items.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV (for `results/*.csv`).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A horizontal bar chart — the console analog of the paper's bar figures.
+#[derive(Debug, Clone)]
+pub struct BarChart {
+    title: String,
+    entries: Vec<(String, f64, String)>,
+    width: usize,
+}
+
+impl BarChart {
+    /// New chart with a title; `width` is the max bar width in characters.
+    pub fn new(title: &str, width: usize) -> BarChart {
+        BarChart {
+            title: title.to_string(),
+            entries: Vec::new(),
+            width,
+        }
+    }
+
+    /// Add a labeled bar with a trailing annotation (e.g. "93%").
+    pub fn bar(&mut self, label: &str, value: f64, annot: &str) {
+        self.entries.push((label.to_string(), value, annot.to_string()));
+    }
+
+    /// Render; bars are scaled to the max value.
+    pub fn render(&self) -> String {
+        let maxv = self
+            .entries
+            .iter()
+            .map(|e| e.1)
+            .fold(0.0_f64, f64::max)
+            .max(1e-30);
+        let lab_w = self
+            .entries
+            .iter()
+            .map(|e| e.0.chars().count())
+            .max()
+            .unwrap_or(0);
+        let mut out = format!("{}\n", self.title);
+        for (label, v, annot) in &self.entries {
+            let n = ((v / maxv) * self.width as f64).round() as usize;
+            out.push_str(&format!(
+                "  {label:<lab_w$} |{} {annot}\n",
+                "#".repeat(n),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["task", "n", "eff"]).with_title("Fig. 1");
+        t.row(&["resnet".into(), "256".into(), "93%".into()]);
+        t.row(&["bert".into(), "1024".into(), "87%".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig. 1"));
+        assert!(s.contains("| resnet |"));
+        // All lines between separators have equal width.
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let mut c = BarChart::new("tp", 10);
+        c.bar("a", 100.0, "");
+        c.bar("b", 50.0, "");
+        let s = c.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].matches('#').count(), 10);
+        assert_eq!(lines[2].matches('#').count(), 5);
+    }
+}

@@ -1,0 +1,253 @@
+//! Deep-learning weather forecasting experiments (§3.2, Figs. 3 & 4).
+//!
+//! * **Fig. 3** — train the convLSTM on the advection–diffusion ERA5
+//!   analog and produce an example 2-m temperature forecast (rendered as
+//!   an ASCII field) plus RMSE per lead time against the persistence
+//!   baseline.
+//! * **Fig. 4** — the scaling study: total training time vs GPU count and
+//!   the per-iteration time distribution (box-whisker stats), on the
+//!   simulated machine calibrated to the paper's "50 min/epoch on one
+//!   A100" and reproducing the variance blow-up beyond 32 GPUs from
+//!   data-loading stragglers.
+
+use crate::data::weather::{batch, persistence_forecast, rmse_per_lead, WeatherCfg};
+use crate::runtime::{tensor, Engine};
+use crate::topology::Topology;
+use crate::train::timeline::{Jitter, TimelineModel};
+use crate::train::{LrSchedule, Trainer};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::util::stats::BoxStats;
+
+/// Train the `weather` convLSTM; returns the trainer.
+pub fn train_forecaster(engine: &Engine, steps: usize, seed: u32) -> Result<Trainer<'_>> {
+    let model = engine.load_model("weather")?;
+    let mut trainer = Trainer::new(engine, model, 1, seed)?;
+    let meta = trainer.model.meta.clone();
+    let cfg = WeatherCfg::small();
+    let mut rng = Rng::seed_from(seed as u64 ^ 0xEA5);
+    let sched = LrSchedule::WarmupCosine {
+        peak: 0.03,
+        warmup: steps / 10 + 1,
+        total: steps,
+        floor: 0.1,
+    };
+    for step in 0..steps {
+        let (x, y) = batch(&cfg, meta.batch, &mut rng);
+        let xl = tensor::f32_literal(&meta.x.shape, &x)?;
+        let yl = tensor::f32_literal(&meta.y.shape, &y)?;
+        trainer.step(&[(xl, yl)], sched.at(step))?;
+    }
+    Ok(trainer)
+}
+
+/// Evaluation outcome: RMSE per lead time for model and persistence.
+#[derive(Debug, Clone)]
+pub struct ForecastEval {
+    /// Model RMSE at lead 1..t_out (2-m temperature channel).
+    pub model_rmse: Vec<f64>,
+    /// Persistence RMSE.
+    pub persistence_rmse: Vec<f64>,
+    /// One example: (context-last, truth-last, prediction-last) fields.
+    pub example: (Vec<f32>, Vec<f32>, Vec<f32>),
+    /// Grid dims.
+    pub h: usize,
+    /// Grid width.
+    pub w: usize,
+}
+
+/// Evaluate a trained forecaster on fresh samples.
+pub fn evaluate(engine: &Engine, trainer: &Trainer, n_batches: usize, seed: u64) -> Result<ForecastEval> {
+    let meta = &trainer.model.meta;
+    let cfg = WeatherCfg::small();
+    let mut rng = Rng::seed_from(seed);
+    let frame = cfg.h * cfg.w * 3;
+    let mut model_rmse = vec![0.0f64; cfg.t_out];
+    let mut pers_rmse = vec![0.0f64; cfg.t_out];
+    let mut example = None;
+    for _ in 0..n_batches {
+        let (x, y) = batch(&cfg, meta.batch, &mut rng);
+        let xl = tensor::f32_literal(&meta.x.shape, &x)?;
+        let out = trainer.predict(&xl)?;
+        let pred = out
+            .to_vec::<f32>()
+            .map_err(|e| crate::util::error::BoosterError::Xla(e.to_string()))?;
+        let pers = persistence_forecast(&cfg, &x, meta.batch);
+        let rm = rmse_per_lead(&cfg, &pred, &y, meta.batch, 0);
+        let rp = rmse_per_lead(&cfg, &pers, &y, meta.batch, 0);
+        for t in 0..cfg.t_out {
+            model_rmse[t] += rm[t] / n_batches as f64;
+            pers_rmse[t] += rp[t] / n_batches as f64;
+        }
+        if example.is_none() {
+            // Last context frame, last truth frame, last predicted frame
+            // (channel 0 only).
+            let ctx: Vec<f32> = (0..cfg.h * cfg.w)
+                .map(|p| x[(cfg.t_in - 1) * frame + p * 3])
+                .collect();
+            let truth: Vec<f32> = (0..cfg.h * cfg.w)
+                .map(|p| y[(cfg.t_out - 1) * frame + p * 3])
+                .collect();
+            let pr: Vec<f32> = (0..cfg.h * cfg.w)
+                .map(|p| pred[(cfg.t_out - 1) * frame + p * 3])
+                .collect();
+            example = Some((ctx, truth, pr));
+        }
+    }
+    let _ = engine;
+    Ok(ForecastEval {
+        model_rmse,
+        persistence_rmse: pers_rmse,
+        example: example.unwrap(),
+        h: cfg.h,
+        w: cfg.w,
+    })
+}
+
+/// Render a field as ASCII (the console Fig. 3).
+pub fn render_field(field: &[f32], h: usize, w: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let min = field.iter().cloned().fold(f32::INFINITY, f32::min);
+    let max = field.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (max - min).max(1e-6);
+    let mut out = String::new();
+    for y in 0..h {
+        for x in 0..w {
+            let v = (field[y * w + x] - min) / span;
+            let i = ((v * (RAMP.len() - 1) as f32).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[i] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 4 scaling study on the simulated machine.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    /// GPU count.
+    pub gpus: usize,
+    /// Total training time for the full run (seconds).
+    pub total_time: f64,
+    /// Iteration-time distribution.
+    pub iter_stats: BoxStats,
+    /// Coefficient of variation of the iteration time (std/mean) — the
+    /// quantity that blows up beyond 32 GPUs in Fig. 4.
+    pub cv: f64,
+    /// Efficiency vs 1 GPU.
+    pub efficiency: f64,
+}
+
+/// Run the Fig. 4 simulation.
+///
+/// Calibration: the paper reports ~50 min/epoch on one A100 for the
+/// convLSTM on 11 years of hourly ERA5 (≈ 96k samples) — i.e. ~31 ms per
+/// sample. We model the paper-scale convLSTM (the `weather_paper` config's
+/// FLOP profile scaled to the full 56x92 grid) and sweep the GPU counts of
+/// the figure, 10 epochs like the paper's measurement.
+pub fn fig4(topo: &Topology, gpu_counts: &[usize], seed: u64) -> Result<Vec<ScalingPoint>> {
+    // Paper-scale workload model.
+    let samples_per_epoch = 96_432usize; // 11 years of hourly ERA5
+    let epochs = 10usize;
+    let batch_per_gpu = 32usize;
+    // Per-sample fwd+bwd FLOPs for the 429k-param convLSTM at 56x92x3,
+    // 12-step context + 12-step rollout:
+    // approx 24 steps * (HW * 9 * (3+64) * 256 MACs) * 2 * 3.
+    let flops_per_sample = 24.0 * (56.0 * 92.0) * 9.0 * 67.0 * 256.0 * 2.0 * 3.0;
+    let grad_bytes = vec![429_251.0 * 4.0];
+
+    let mut out = Vec::new();
+    let mut t1 = None;
+    for &g in gpu_counts {
+        let mut model = TimelineModel::amp_defaults(topo);
+        // Single-GPU calibration to ~50 min/epoch: efficiency chosen so
+        // compute time per sample ~31 ms on one A100 (the model is small
+        // and input-pipeline heavy, hence the low achieved fraction).
+        model.efficiency = flops_per_sample / (31.1e-3) / 312e12;
+        model.jitter = Jitter {
+            sigma: 0.02,
+            // Constant per-rank stall probability; a synchronous step waits
+            // for the slowest rank, so the *chance of any stall* grows as
+            // 1-(1-q)^n — the paper's >32-GPU variance blow-up emerges from
+            // scale alone, not from a tuned knob.
+            stall_prob: 0.0025,
+            stall_frac: 1.5,
+        };
+        let mut rng = Rng::seed_from(seed ^ g as u64);
+        let gpus = topo.first_gpus(g);
+        let steps_per_epoch = samples_per_epoch.div_ceil(batch_per_gpu * g);
+        let sim_steps = 400.min(steps_per_epoch * epochs);
+        let flops_per_gpu = flops_per_sample * batch_per_gpu as f64;
+        let iter_times = model.run_steps(&gpus, flops_per_gpu, &grad_bytes, sim_steps, &mut rng)?;
+        let mean_iter = crate::util::stats::mean(&iter_times);
+        let total = mean_iter * (steps_per_epoch * epochs) as f64;
+        let stats = BoxStats::from(&iter_times);
+        let cv = crate::util::stats::stddev(&iter_times) / mean_iter;
+        if t1.is_none() {
+            t1 = Some(total * g as f64); // normalize by gpu count below
+        }
+        let eff = crate::util::stats::time_efficiency(
+            total,
+            g,
+            t1.unwrap() / gpu_counts[0] as f64,
+            gpu_counts[0],
+        );
+        out.push(ScalingPoint {
+            gpus: g,
+            total_time: total,
+            iter_stats: stats,
+            cv,
+            efficiency: eff,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_reproduces_paper_shape() {
+        let topo = Topology::juwels_booster();
+        let pts = fig4(&topo, &[1, 4, 8, 16, 32, 64], 0).unwrap();
+        // 1 GPU: ~50 min/epoch x 10 epochs = ~30000 s (within 25%).
+        let t1 = pts[0].total_time;
+        assert!(
+            (t1 - 30_000.0).abs() / 30_000.0 < 0.25,
+            "1-GPU total {t1} s"
+        );
+        // 16 GPUs: ~90% efficiency like the paper.
+        let p16 = pts.iter().find(|p| p.gpus == 16).unwrap();
+        assert!(
+            p16.efficiency > 0.82 && p16.efficiency <= 1.0,
+            "16-GPU eff {}",
+            p16.efficiency
+        );
+        // Total time strictly decreases with more GPUs.
+        for w in pts.windows(2) {
+            assert!(w[1].total_time < w[0].total_time);
+        }
+        // Iteration-time variability (CV) grows significantly beyond 32
+        // GPUs (Fig. 4 right panel): stalled steps are outliers, so the
+        // CV (not the IQR) carries the signal.
+        let p4 = pts.iter().find(|p| p.gpus == 4).unwrap();
+        let p64 = pts.iter().find(|p| p.gpus == 64).unwrap();
+        assert!(
+            p64.cv > 1.5 * p4.cv,
+            "variance must grow with scale: {} vs {}",
+            p64.cv,
+            p4.cv
+        );
+        // Outlier count also grows (the box-whisker dots in the figure).
+        assert!(p64.iter_stats.outliers >= p4.iter_stats.outliers);
+    }
+
+    #[test]
+    fn ascii_rendering_has_grid_shape() {
+        let field: Vec<f32> = (0..6 * 8).map(|i| i as f32).collect();
+        let s = render_field(&field, 6, 8);
+        assert_eq!(s.lines().count(), 6);
+        assert!(s.lines().all(|l| l.chars().count() == 8));
+    }
+}
