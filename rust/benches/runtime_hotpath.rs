@@ -3,29 +3,66 @@
 //! * host allreduce (scalar vs chunked vs parallel) in GB/s;
 //! * literal <-> host conversion;
 //! * PJRT grad_step / apply_update execution latency;
-//! * network-simulator events/s.
+//! * network-simulator events/s (event-driven engine vs reference);
+//! * pattern-level collective cost cache (repeated-allreduce sweep).
+//!
+//! Timing is median-of-reps with the min..max spread reported (the old
+//! harness took a single mean after one warmup, so one scheduler hiccup
+//! skewed a row). Alongside the human-readable table this emits
+//! `results/BENCH_hotpath.json` so the perf trajectory is trackable
+//! across PRs.
 
-use booster::net::{simulate, Flow};
+use booster::collectives::{Algo, CollectiveModel};
+use booster::net::{simulate_reference, simulate_with_scratch, Flow, SimScratch};
 use booster::runtime::{tensor, Engine};
 use booster::topology::Topology;
 use booster::train::allreduce;
+use booster::util::json::Json;
 use booster::util::rng::Rng;
+use booster::util::stats;
 use booster::util::table::Table;
 use std::time::Instant;
 
-fn time_it<F: FnMut()>(reps: usize, mut f: F) -> f64 {
-    // One warmup.
-    f();
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        f();
+/// Per-rep timing summary (seconds).
+struct Timing {
+    median: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Timing {
+    /// `"1.23 ms [1.20..1.31]"` — median with the observed spread.
+    fn ms(&self) -> String {
+        format!(
+            "{:.2} ms [{:.2}..{:.2}]",
+            self.median * 1e3,
+            self.min * 1e3,
+            self.max * 1e3
+        )
     }
-    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Run `f` once to warm up, then `reps` timed repetitions; report the
+/// median and spread instead of a single mean.
+fn time_it<F: FnMut()>(reps: usize, mut f: F) -> Timing {
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        median: stats::median(&samples),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: samples.iter().cloned().fold(0.0f64, f64::max),
+    }
 }
 
 fn main() {
     let t0 = Instant::now();
-    let mut out = String::from("L3 hot-path microbenchmarks\n\n");
+    let mut out = String::from("L3 hot-path microbenchmarks (median [min..max] of reps)\n\n");
+    let mut json: Vec<(&str, Json)> = vec![("bench", Json::Str("runtime_hotpath".into()))];
 
     // --- host allreduce -------------------------------------------------
     let mut rng = Rng::seed_from(1);
@@ -45,31 +82,34 @@ fn main() {
     let mut t = Table::new(&["allreduce impl", "time/call", "effective GB/s"])
         .with_title(format!("host allreduce: {replicas} replicas x 64 MB").as_str());
     let dt = time_it(3, || allreduce::average_scalar(&refs, &mut outbuf));
-    t.row(&["scalar".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    t.row(&["scalar".into(), dt.ms(), format!("{:.1}", bytes_moved / dt.median / 1e9)]);
     let dt = time_it(5, || allreduce::average_chunked(&refs, &mut outbuf));
-    t.row(&["chunked".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    t.row(&["chunked".into(), dt.ms(), format!("{:.1}", bytes_moved / dt.median / 1e9)]);
     let dt = time_it(5, || allreduce::average_parallel(&refs, &mut outbuf, 0));
-    t.row(&["parallel(auto)".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    let parallel_gbps = bytes_moved / dt.median / 1e9;
+    t.row(&["parallel(auto)".into(), dt.ms(), format!("{parallel_gbps:.1}")]);
     let dt = time_it(3, || {
         allreduce::average_compressed(&refs, &mut outbuf, booster::collectives::Compression::Fp16, 0)
     });
-    t.row(&["fp16-compressed".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", bytes_moved / dt / 1e9)]);
+    t.row(&["fp16-compressed".into(), dt.ms(), format!("{:.1}", bytes_moved / dt.median / 1e9)]);
     out.push_str(&t.render());
     out.push('\n');
+    json.push(("host_allreduce_parallel_gbps", Json::Num(parallel_gbps)));
 
     // --- literal conversion ----------------------------------------------
-    let mut t = Table::new(&["conversion", "time/call", "GB/s"]).with_title("literal <-> host (16 MB)");
+    let mut t =
+        Table::new(&["conversion", "time/call", "GB/s"]).with_title("literal <-> host (16 MB)");
     let data = vec![1.0f32; 4 << 20];
     let shape = [4usize << 20];
     let dt = time_it(10, || {
         let _ = tensor::f32_literal(&shape, &data).unwrap();
     });
-    t.row(&["host -> literal".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", 16e6 / dt / 1e9)]);
+    t.row(&["host -> literal".into(), dt.ms(), format!("{:.1}", 16e6 / dt.median / 1e9)]);
     let lit = tensor::f32_literal(&shape, &data).unwrap();
     let dt = time_it(10, || {
         let _ = lit.to_vec::<f32>().unwrap();
     });
-    t.row(&["literal -> host".into(), format!("{:.2} ms", dt * 1e3), format!("{:.1}", 16e6 / dt / 1e9)]);
+    t.row(&["literal -> host".into(), dt.ms(), format!("{:.1}", 16e6 / dt.median / 1e9)]);
     out.push_str(&t.render());
     out.push('\n');
 
@@ -85,23 +125,23 @@ fn main() {
             let dt = time_it(5, || {
                 let _ = model.grad_step_run(&engine, &state, &x, &y).unwrap();
             });
-            t.row(&["grad_step".into(), format!("{:.2} ms", dt * 1e3)]);
+            t.row(&["grad_step".into(), dt.ms()]);
             let (grads, _) = model.grad_step_run(&engine, &state, &x, &y).unwrap();
             let mut st2 = model.init_state(&engine, 0).unwrap();
             let dt = time_it(5, || {
                 model.apply_update_run(&engine, &mut st2, &grads, 0.01).unwrap();
             });
-            t.row(&["apply_update".into(), format!("{:.2} ms", dt * 1e3)]);
+            t.row(&["apply_update".into(), dt.ms()]);
             let dt = time_it(5, || {
                 let _ = model.predict_run(&engine, &state, &x).unwrap();
             });
-            t.row(&["predict".into(), format!("{:.2} ms", dt * 1e3)]);
+            t.row(&["predict".into(), dt.ms()]);
             out.push_str(&t.render());
             out.push('\n');
         }
     }
 
-    // --- network simulator -------------------------------------------------
+    // --- network simulator ------------------------------------------------
     let topo = Topology::juwels_booster();
     let gpus = topo.first_gpus(512);
     let flows: Vec<Flow> = (0..gpus.len())
@@ -111,15 +151,123 @@ fn main() {
             start: 0.0,
         })
         .collect();
-    let mut t = Table::new(&["network sim", "time/round", "flows"]).with_title("fluid simulator");
-    let dt = time_it(5, || {
-        let _ = simulate(&topo, &flows).unwrap();
+    let mut scratch = SimScratch::new();
+    let events = simulate_with_scratch(&topo, &flows, &mut scratch)
+        .unwrap()
+        .events;
+    let sim_t = time_it(9, || {
+        let _ = simulate_with_scratch(&topo, &flows, &mut scratch).unwrap();
     });
-    t.row(&["512-GPU ring round".into(), format!("{:.2} ms", dt * 1e3), flows.len().to_string()]);
+    let ref_t = time_it(3, || {
+        let _ = simulate_reference(&topo, &flows).unwrap();
+    });
+    let events_per_s = events as f64 / sim_t.median;
+    let ns_per_event = sim_t.median / events.max(1) as f64 * 1e9;
+    let mut t = Table::new(&["network sim", "time/round", "flows", "speedup"])
+        .with_title("fluid simulator: 512-GPU ring round");
+    t.row(&[
+        "event-driven".into(),
+        sim_t.ms(),
+        flows.len().to_string(),
+        format!("{:.1}x vs reference", ref_t.median / sim_t.median),
+    ]);
+    t.row(&["reference (rescan)".into(), ref_t.ms(), flows.len().to_string(), "1.0x".into()]);
+    t.row(&[
+        "events/s".into(),
+        format!("{:.2}M ({events} ev, {ns_per_event:.0} ns/ev)", events_per_s / 1e6),
+        String::new(),
+        String::new(),
+    ]);
     out.push_str(&t.render());
+    out.push('\n');
+    json.push((
+        "sim",
+        Json::obj(vec![
+            ("ring512_ms_median", Json::Num(sim_t.median * 1e3)),
+            ("ring512_ms_min", Json::Num(sim_t.min * 1e3)),
+            ("ring512_ms_max", Json::Num(sim_t.max * 1e3)),
+            ("reference_ms_median", Json::Num(ref_t.median * 1e3)),
+            ("speedup_vs_reference", Json::Num(ref_t.median / sim_t.median)),
+            ("events_per_round", Json::Num(events as f64)),
+            ("events_per_s", Json::Num(events_per_s)),
+            ("ns_per_event", Json::Num(ns_per_event)),
+        ]),
+    ));
+
+    // --- collective cost cache ---------------------------------------------
+    // The repeated-allreduce sweep: same 256-GPU set, 64 distinct byte
+    // sizes. Uncached, every call is a full flow simulation; cached, the
+    // pattern is probed at the span edges and everything in between is
+    // interpolation.
+    let gpus256 = topo.first_gpus(256);
+    let sizes: Vec<f64> = (0..64).map(|i| 64e6 + i as f64 * 4e6).collect();
+    let model = CollectiveModel::new(&topo);
+    let t_un = Instant::now();
+    for &b in &sizes {
+        model
+            .allreduce_time_uncached(&gpus256, b, Algo::Hierarchical)
+            .unwrap();
+    }
+    let uncached_total = t_un.elapsed().as_secs_f64();
+    // Warm the curve with the two span-edge probes (the one-time cost any
+    // sweep pays), then time the steady-state sweep: 2nd..Nth calls are
+    // O(points), no simulation.
+    model
+        .allreduce_time(&gpus256, sizes[0], Algo::Hierarchical)
+        .unwrap();
+    model
+        .allreduce_time(&gpus256, *sizes.last().unwrap(), Algo::Hierarchical)
+        .unwrap();
+    let t_ca = Instant::now();
+    for &b in &sizes {
+        model
+            .allreduce_time(&gpus256, b, Algo::Hierarchical)
+            .unwrap();
+    }
+    let cached_total = t_ca.elapsed().as_secs_f64();
+    let (hits, misses) = model.cache_stats();
+    let hit_rate = model.cache_hit_rate();
+    let algbw = model.algbw(&gpus256, 400e6, Algo::Hierarchical).unwrap();
+    let mut t = Table::new(&["allreduce sweep (64 sizes, 256 GPUs)", "total", "per call"])
+        .with_title("pattern-level cost cache");
+    t.row(&[
+        "uncached (full simulation)".into(),
+        format!("{:.2} ms", uncached_total * 1e3),
+        format!("{:.3} ms", uncached_total / sizes.len() as f64 * 1e3),
+    ]);
+    t.row(&[
+        "cached (after 2 warmup probes)".into(),
+        format!("{:.2} ms", cached_total * 1e3),
+        format!("{:.3} ms", cached_total / sizes.len() as f64 * 1e3),
+    ]);
+    t.row(&[
+        "speedup / hit rate".into(),
+        format!("{:.0}x", uncached_total / cached_total.max(1e-12)),
+        format!("{:.0}% ({hits} hits, {misses} sims)", 100.0 * hit_rate),
+    ]);
+    t.row(&[
+        "hierarchical algbw @ 400 MB".into(),
+        format!("{:.1} GB/s", algbw / 1e9),
+        String::new(),
+    ]);
+    out.push_str(&t.render());
+    json.push((
+        "cost_cache",
+        Json::obj(vec![
+            ("sweep_sizes", Json::Num(sizes.len() as f64)),
+            ("uncached_total_ms", Json::Num(uncached_total * 1e3)),
+            ("cached_total_ms", Json::Num(cached_total * 1e3)),
+            ("speedup", Json::Num(uncached_total / cached_total.max(1e-12))),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("hits", Json::Num(hits as f64)),
+            ("misses", Json::Num(misses as f64)),
+            ("allreduce_gbps_400mb", Json::Num(algbw / 1e9)),
+        ]),
+    ));
 
     print!("{out}");
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/runtime_hotpath.txt", &out).ok();
+    std::fs::write("results/BENCH_hotpath.json", Json::obj(json).to_pretty()).ok();
     println!("\n[bench] runtime_hotpath done in {:.2?}", t0.elapsed());
 }

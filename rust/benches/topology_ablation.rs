@@ -73,6 +73,18 @@ fn main() {
         }
     }
     out.push_str(&t.render());
+
+    // §Perf: the placement table reuses one model, so the ring and
+    // hierarchical runs on each placement share interned routes. Every
+    // (placement, algo) pattern here is distinct, so the cost cache only
+    // hits if a future edit repeats one — the stats line makes that
+    // visible either way.
+    let (hits, misses) = model.cache_stats();
+    let (rhits, rmisses) = model.route_stats();
+    out.push_str(&format!(
+        "\nplacement sweep cost cache: {hits} hits / {misses} simulations; \
+         route table: {rhits} hits / {rmisses} interned\n",
+    ));
     print!("{out}");
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/topology_ablation.txt", &out).ok();

@@ -9,10 +9,36 @@
 //!
 //! The numeric averaging itself — what NCCL does on device — happens
 //! host-side in [`crate::train::allreduce`]; this module models the *time*.
+//!
+//! # §Perf: pattern-level cost caching
+//!
+//! For a **fixed flow pattern** (same GPU multiset, same algorithm) the
+//! fluid model's makespan is piecewise-affine in the payload bytes: once
+//! the arrival/completion event order settles (transfer times ≫ path
+//! latencies), every round's time is `fixed_latency + bytes · s_per_byte`.
+//! [`CostCache`] exploits this: it keys on `(gpu-set fingerprint, algo)`
+//! and stores the `(bytes, seconds)` points actually simulated; after two
+//! distinct sizes, further sizes within the trusted span are answered by
+//! piecewise-linear interpolation in O(points) with **no simulation at
+//! all**. Sizes far outside the probed span (>4× beyond either end) are
+//! simulated and learned as new points, so latency-dominated and
+//! bandwidth-dominated regimes never interpolate across each other.
+//!
+//! The cache lives inside [`CollectiveModel`] next to the `&Topology` it
+//! was measured on — reusing one model across a sweep is what makes the
+//! 2nd..Nth `allreduce_time` call O(1). [`CollectiveModel::allreduce_time_uncached`]
+//! bypasses it (benches use this to measure the speedup honestly), and
+//! [`CollectiveModel::invalidate_caches`] drops every memoized route and
+//! cost point (needed only if a `Topology` could mutate, which the public
+//! API does not allow).
 
-use crate::net::{simulate, Flow};
-use crate::topology::{GpuId, Topology};
-use crate::util::error::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::net::{simulate_makespan_with_scratch, Flow, SimScratch};
+use crate::topology::{GpuId, RouteTable, Topology};
+use crate::util::error::{BoosterError, Result};
+use crate::util::rng::splitmix64;
 
 /// Allreduce algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,22 +65,189 @@ impl Algo {
             Algo::Hierarchical => "hierarchical",
         }
     }
+
+    fn cache_idx(self) -> u8 {
+        match self {
+            Algo::Ring => 0,
+            Algo::HalvingDoubling => 1,
+            Algo::Hierarchical => 2,
+        }
+    }
 }
 
 /// Per-collective fixed software overhead (launch, protocol setup).
 /// NCCL-class launch overhead is O(10 µs) per collective.
 pub const LAUNCH_OVERHEAD: f64 = 12e-6;
 
-/// Collective cost model bound to a topology.
+/// Order-insensitive fingerprint of a GPU multiset — the cache key
+/// component identifying the flow pattern's endpoints. Commutative mixing
+/// (sum + xor of per-GPU splitmix64 hashes, plus the count) makes any
+/// permutation of the same GPUs hash identically, matching the fact that
+/// every algorithm first sorts via [`CollectiveModel::ring_order`] or
+/// groups by node.
+pub fn gpu_set_fingerprint(gpus: &[GpuId]) -> u64 {
+    let mut sum = 0u64;
+    let mut xor = 0u64;
+    for g in gpus {
+        let mut s = ((g.node as u64) << 16) ^ (g.gpu as u64);
+        let h = splitmix64(&mut s);
+        sum = sum.wrapping_add(h);
+        xor ^= h;
+    }
+    let mut s = sum ^ xor.rotate_left(32) ^ (gpus.len() as u64);
+    splitmix64(&mut s)
+}
+
+const CURVE_MAX_POINTS: usize = 32;
+/// How far beyond the probed byte range interpolation is trusted.
+const CURVE_SPAN: f64 = 4.0;
+
+/// Simulated `(bytes, seconds)` samples of one flow pattern, kept sorted.
+#[derive(Debug, Clone, Default)]
+struct SizeCurve {
+    points: Vec<(f64, f64)>,
+}
+
+impl SizeCurve {
+    /// Cost at `bytes`, if the curve can answer without simulating:
+    /// an exact sample, or piecewise-linear interpolation once ≥ 2 points
+    /// exist and `bytes` lies within the trusted span of the samples.
+    fn eval(&self, bytes: f64) -> Option<f64> {
+        for &(b, t) in &self.points {
+            if (b - bytes).abs() <= 1e-12 * b.max(bytes) {
+                return Some(t);
+            }
+        }
+        if self.points.len() < 2 {
+            return None;
+        }
+        let lo = self.points[0].0;
+        let hi = self.points[self.points.len() - 1].0;
+        if bytes < lo / CURVE_SPAN || bytes > hi * CURVE_SPAN {
+            return None;
+        }
+        let mut j = 1;
+        while j + 1 < self.points.len() && self.points[j].0 < bytes {
+            j += 1;
+        }
+        let (b0, t0) = self.points[j - 1];
+        let (b1, t1) = self.points[j];
+        // Refuse to bridge a sparse segment: samples more than CURVE_SPAN²
+        // apart can straddle the latency/bandwidth regime change, where a
+        // single chord misprices the middle. Simulating instead densifies
+        // the curve there.
+        if b1 / b0.max(f64::MIN_POSITIVE) > CURVE_SPAN * CURVE_SPAN {
+            return None;
+        }
+        let slope = (t1 - t0) / (b1 - b0);
+        Some((t0 + slope * (bytes - b0)).max(0.0))
+    }
+
+    fn insert(&mut self, bytes: f64, secs: f64) {
+        if self.points.len() >= CURVE_MAX_POINTS {
+            return;
+        }
+        match self
+            .points
+            .binary_search_by(|p| p.0.partial_cmp(&bytes).unwrap())
+        {
+            Ok(_) => {}
+            Err(pos) => self.points.insert(pos, (bytes, secs)),
+        }
+    }
+}
+
+/// Pattern-level collective cost cache (see the module docs for the
+/// linearity invariant it relies on). Keyed by
+/// `(gpu-set fingerprint, algorithm)`; values are [`SizeCurve`]s of
+/// simulated samples. Hit/miss counters feed the §Perf benches.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    curves: HashMap<(u64, u8), SizeCurve>,
+    /// Calls answered without simulation.
+    pub hits: u64,
+    /// Calls that ran the full flow-level simulation.
+    pub misses: u64,
+}
+
+impl CostCache {
+    fn lookup(&mut self, fp: u64, algo: Algo, bytes: f64) -> Option<f64> {
+        let r = self
+            .curves
+            .get(&(fp, algo.cache_idx()))
+            .and_then(|c| c.eval(bytes));
+        if r.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        r
+    }
+
+    fn insert(&mut self, fp: u64, algo: Algo, bytes: f64, secs: f64) {
+        self.curves
+            .entry((fp, algo.cache_idx()))
+            .or_default()
+            .insert(bytes, secs);
+    }
+
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Drop every memoized point and reset the counters (explicit
+    /// invalidation): post-clear stats describe only post-clear lookups,
+    /// matching the route table's reset in
+    /// [`CollectiveModel::invalidate_caches`].
+    pub fn clear(&mut self) {
+        self.curves.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Reusable buffers for flow construction + the simulator arena: the
+/// dominant per-simulation allocations (one `Flow` + path `Vec` per rank,
+/// the solver's tables) are grown once and reused. Small per-call
+/// allocations remain in `ring_order` (the sorted copy) and
+/// `hierarchical_time`'s node grouping.
+#[derive(Debug, Default)]
+struct ModelScratch {
+    sim: SimScratch,
+    ring: Vec<Flow>,
+    aux: Vec<Flow>,
+}
+
+/// Collective cost model bound to a topology, carrying the memoized
+/// route table and the pattern-level cost cache.
 #[derive(Debug)]
 pub struct CollectiveModel<'a> {
     topo: &'a Topology,
+    routes: RefCell<RouteTable>,
+    cache: RefCell<CostCache>,
+    scratch: RefCell<ModelScratch>,
 }
 
 impl<'a> CollectiveModel<'a> {
     /// Bind to a topology.
     pub fn new(topo: &'a Topology) -> CollectiveModel<'a> {
-        CollectiveModel { topo }
+        CollectiveModel {
+            topo,
+            routes: RefCell::new(RouteTable::new()),
+            cache: RefCell::new(CostCache::default()),
+            scratch: RefCell::new(ModelScratch::default()),
+        }
+    }
+
+    /// The topology this model is bound to.
+    pub fn topology(&self) -> &'a Topology {
+        self.topo
     }
 
     /// Order GPUs so ring neighbors are topologically close (by cell, then
@@ -67,38 +260,153 @@ impl<'a> CollectiveModel<'a> {
     }
 
     /// Time for one allreduce of `bytes` over `gpus` using `algo`.
+    ///
+    /// Served from the [`CostCache`] when the `(gpu set, algo)` pattern has
+    /// already been probed at compatible sizes; otherwise runs the full
+    /// flow-level simulation and records the sample.
     pub fn allreduce_time(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        // Reject non-finite sizes up front: the cached path must agree with
+        // the simulator's own validation regardless of cache warmth (NaN
+        // falls through every curve comparison and would read as a hit).
+        if !bytes.is_finite() {
+            return Err(BoosterError::Sim(format!(
+                "allreduce bytes must be finite, got {bytes}"
+            )));
+        }
         let n = gpus.len();
         if n <= 1 || bytes <= 0.0 {
             return Ok(LAUNCH_OVERHEAD);
         }
-        let t = match algo {
-            Algo::Ring => self.ring_time(gpus, bytes)?,
-            Algo::HalvingDoubling => self.hd_time(gpus, bytes)?,
-            Algo::Hierarchical => self.hierarchical_time(gpus, bytes)?,
-        };
+        let fp = gpu_set_fingerprint(gpus);
+        if let Some(t) = self.cache.borrow_mut().lookup(fp, algo, bytes) {
+            return Ok(t + LAUNCH_OVERHEAD);
+        }
+        let t = self.simulate_algo(gpus, bytes, algo)?;
+        self.cache.borrow_mut().insert(fp, algo, bytes, t);
         Ok(t + LAUNCH_OVERHEAD)
+    }
+
+    /// [`CollectiveModel::allreduce_time`] with the cost cache bypassed:
+    /// always simulates. The benches use this to measure the cache's
+    /// speedup; it is also the oracle for the cache-accuracy tests.
+    pub fn allreduce_time_uncached(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        if !bytes.is_finite() {
+            return Err(BoosterError::Sim(format!(
+                "allreduce bytes must be finite, got {bytes}"
+            )));
+        }
+        let n = gpus.len();
+        if n <= 1 || bytes <= 0.0 {
+            return Ok(LAUNCH_OVERHEAD);
+        }
+        Ok(self.simulate_algo(gpus, bytes, algo)? + LAUNCH_OVERHEAD)
+    }
+
+    /// `(hits, misses)` of the cost cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.borrow();
+        (c.hits, c.misses)
+    }
+
+    /// Fraction of `allreduce_time` calls served without simulation.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.borrow().hit_rate()
+    }
+
+    /// `(hits, misses)` of the route table.
+    pub fn route_stats(&self) -> (u64, u64) {
+        let r = self.routes.borrow();
+        (r.hits, r.misses)
+    }
+
+    /// Drop all memoized routes and cost points. The caches are keyed by
+    /// data derived from `self.topo`; since `Topology` is immutable this
+    /// is never required for correctness, but sweeps that want cold-start
+    /// numbers (or long-lived processes bounding memory) can call it.
+    pub fn invalidate_caches(&self) {
+        *self.routes.borrow_mut() = RouteTable::new();
+        self.cache.borrow_mut().clear();
+    }
+
+    fn simulate_algo(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        let mut sc = self.scratch.borrow_mut();
+        let mut routes = self.routes.borrow_mut();
+        let sc = &mut *sc;
+        let routes = &mut *routes;
+        match algo {
+            Algo::Ring => self.ring_time(sc, routes, gpus, bytes),
+            Algo::HalvingDoubling => self.hd_time(sc, routes, gpus, bytes),
+            Algo::Hierarchical => self.hierarchical_time(sc, routes, gpus, bytes),
+        }
+    }
+
+    /// Grow `flows` to at least `n` reusable entries. Never shrinks: the
+    /// buffer keeps its high-water mark so alternating flow counts
+    /// (hierarchical's 4-GPU node ring vs its leader ring) don't thrash
+    /// allocations; callers slice `&flows[..n]`.
+    fn ensure_flows(flows: &mut Vec<Flow>, n: usize) {
+        while flows.len() < n {
+            flows.push(Flow::default());
+        }
+    }
+
+    /// Write the interned route + payload into a reused flow slot.
+    fn set_flow(
+        topo: &Topology,
+        routes: &mut RouteTable,
+        src: GpuId,
+        dst: GpuId,
+        salt: u64,
+        bytes: f64,
+        f: &mut Flow,
+    ) {
+        let id = routes.intern(topo, src, dst, salt);
+        f.path.clear();
+        f.path.extend_from_slice(routes.path(id));
+        f.bytes = bytes;
+        f.start = 0.0;
+    }
+
+    /// One ring round over `order` with `chunk` bytes per flow, into
+    /// `sc.ring`, simulated with the shared arena.
+    fn ring_round(
+        &self,
+        sc: &mut ModelScratch,
+        routes: &mut RouteTable,
+        order: &[GpuId],
+        chunk: f64,
+    ) -> Result<f64> {
+        let n = order.len();
+        Self::ensure_flows(&mut sc.ring, n);
+        for i in 0..n {
+            Self::set_flow(
+                self.topo,
+                routes,
+                order[i],
+                order[(i + 1) % n],
+                i as u64,
+                chunk,
+                &mut sc.ring[i],
+            );
+        }
+        let ModelScratch { sim, ring, .. } = sc;
+        Ok(simulate_makespan_with_scratch(self.topo, &ring[..n], sim)?.0)
     }
 
     /// Ring allreduce: 2(n−1) rounds, each round every rank sends
     /// `bytes/n` to its successor. All rounds share the same flow pattern
     /// under the fluid model, so we simulate one round and scale.
-    fn ring_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+    fn ring_time(
+        &self,
+        sc: &mut ModelScratch,
+        routes: &mut RouteTable,
+        gpus: &[GpuId],
+        bytes: f64,
+    ) -> Result<f64> {
         let order = self.ring_order(gpus);
         let n = order.len();
         let chunk = bytes / n as f64;
-        let flows: Vec<Flow> = (0..n)
-            .map(|i| {
-                let src = order[i];
-                let dst = order[(i + 1) % n];
-                Flow {
-                    path: self.topo.route(src, dst, i as u64),
-                    bytes: chunk,
-                    start: 0.0,
-                }
-            })
-            .collect();
-        let round = simulate(self.topo, &flows)?.makespan;
+        let round = self.ring_round(sc, routes, &order, chunk)?;
         Ok(round * 2.0 * (n as f64 - 1.0))
     }
 
@@ -106,22 +414,34 @@ impl<'a> CollectiveModel<'a> {
     /// round with partners at doubling distance, then allgather mirrors it.
     /// Non-power-of-two ranks are folded in with a preliminary exchange
     /// (we charge one extra full-size round, the standard trick's cost).
-    fn hd_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+    fn hd_time(
+        &self,
+        sc: &mut ModelScratch,
+        routes: &mut RouteTable,
+        gpus: &[GpuId],
+        bytes: f64,
+    ) -> Result<f64> {
         let order = self.ring_order(gpus);
         let n = order.len();
-        let p2 = 1usize << (usize::BITS - 1 - n.leading_zeros() as u32) as usize;
+        let p2 = 1usize << (usize::BITS - 1 - n.leading_zeros()) as usize;
         let mut total = 0.0;
         if p2 != n {
             // Fold the excess ranks: one extra exchange of the full buffer.
             let excess = n - p2;
-            let flows: Vec<Flow> = (0..excess)
-                .map(|i| Flow {
-                    path: self.topo.route(order[p2 + i], order[i], i as u64),
+            Self::ensure_flows(&mut sc.aux, excess);
+            for i in 0..excess {
+                Self::set_flow(
+                    self.topo,
+                    routes,
+                    order[p2 + i],
+                    order[i],
+                    i as u64,
                     bytes,
-                    start: 0.0,
-                })
-                .collect();
-            total += simulate(self.topo, &flows)?.makespan;
+                    &mut sc.aux[i],
+                );
+            }
+            let ModelScratch { sim, aux, .. } = sc;
+            total += simulate_makespan_with_scratch(self.topo, &aux[..excess], sim)?.0;
         }
         // log2(p2) reduce-scatter rounds with sizes bytes/2, bytes/4, ...
         // then the mirror-image allgather: same cost, so 2x.
@@ -129,23 +449,34 @@ impl<'a> CollectiveModel<'a> {
         let mut size = bytes / 2.0;
         for r in 0..rounds {
             let dist = 1usize << r;
-            let mut flows = Vec::with_capacity(p2);
+            Self::ensure_flows(&mut sc.aux, p2);
             for i in 0..p2 {
                 let partner = i ^ dist;
-                flows.push(Flow {
-                    path: self.topo.route(order[i], order[partner], r as u64),
-                    bytes: size,
-                    start: 0.0,
-                });
+                Self::set_flow(
+                    self.topo,
+                    routes,
+                    order[i],
+                    order[partner],
+                    r as u64,
+                    size,
+                    &mut sc.aux[i],
+                );
             }
-            total += 2.0 * simulate(self.topo, &flows)?.makespan;
+            let ModelScratch { sim, aux, .. } = sc;
+            total += 2.0 * simulate_makespan_with_scratch(self.topo, &aux[..p2], sim)?.0;
             size /= 2.0;
         }
         Ok(total)
     }
 
     /// Two-level hierarchical allreduce.
-    fn hierarchical_time(&self, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+    fn hierarchical_time(
+        &self,
+        sc: &mut ModelScratch,
+        routes: &mut RouteTable,
+        gpus: &[GpuId],
+        bytes: f64,
+    ) -> Result<f64> {
         // Group GPUs by node.
         let mut by_node: std::collections::BTreeMap<usize, Vec<GpuId>> = Default::default();
         for &g in gpus {
@@ -164,16 +495,7 @@ impl<'a> CollectiveModel<'a> {
                 .unwrap()
                 .clone();
             let chunk = bytes / max_group as f64;
-            let flows: Vec<Flow> = (0..group.len())
-                .map(|i| Flow {
-                    path: self
-                        .topo
-                        .route(group[i], group[(i + 1) % group.len()], i as u64),
-                    bytes: chunk,
-                    start: 0.0,
-                })
-                .collect();
-            let round = simulate(self.topo, &flows)?.makespan;
+            let round = self.ring_round(sc, routes, &group, chunk)?;
             // Reduce-scatter only: (g-1) rounds; the trailing allgather
             // merges with phase 3's broadcast.
             total += round * (max_group as f64 - 1.0);
@@ -182,7 +504,7 @@ impl<'a> CollectiveModel<'a> {
         // Phase 2: inter-node ring allreduce among node leaders.
         let leaders: Vec<GpuId> = by_node.values().map(|v| v[0]).collect();
         if leaders.len() > 1 {
-            total += self.ring_time(&leaders, bytes)?;
+            total += self.ring_time(sc, routes, &leaders, bytes)?;
         }
 
         // Phase 3: intra-node allgather/broadcast of the reduced buffer.
@@ -193,16 +515,7 @@ impl<'a> CollectiveModel<'a> {
                 .unwrap()
                 .clone();
             let chunk = bytes / max_group as f64;
-            let flows: Vec<Flow> = (0..group.len())
-                .map(|i| Flow {
-                    path: self
-                        .topo
-                        .route(group[i], group[(i + 1) % group.len()], i as u64),
-                    bytes: chunk,
-                    start: 0.0,
-                })
-                .collect();
-            let round = simulate(self.topo, &flows)?.makespan;
+            let round = self.ring_round(sc, routes, &group, chunk)?;
             total += round * (max_group as f64 - 1.0);
         }
         Ok(total)
@@ -262,6 +575,9 @@ impl Compression {
 /// Time for a bucketed, optionally compressed allreduce of a gradient set.
 /// Buckets are issued back-to-back (Horovod serializes fusion buffers on
 /// its communication stream); each pays the launch overhead.
+///
+/// Repeated bucket sizes hit the model's [`CostCache`] exactly, so large
+/// gradient sets with uniform fusion buffers simulate each size once.
 pub fn bucketed_allreduce_time(
     model: &CollectiveModel,
     gpus: &[GpuId],
@@ -273,6 +589,25 @@ pub fn bucketed_allreduce_time(
     let mut total = 0.0;
     for b in fusion_buckets(tensor_bytes, bucket_bytes) {
         total += model.allreduce_time(gpus, b * compression.factor(), algo)?;
+    }
+    Ok(total)
+}
+
+/// [`bucketed_allreduce_time`] with the cost cache bypassed: every bucket
+/// is fully simulated. Ablation tables that compare configurations at
+/// sub-percent resolution use this so row deltas reflect the model, never
+/// interpolation error.
+pub fn bucketed_allreduce_time_uncached(
+    model: &CollectiveModel,
+    gpus: &[GpuId],
+    tensor_bytes: &[f64],
+    bucket_bytes: f64,
+    compression: Compression,
+    algo: Algo,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in fusion_buckets(tensor_bytes, bucket_bytes) {
+        total += model.allreduce_time_uncached(gpus, b * compression.factor(), algo)?;
     }
     Ok(total)
 }
@@ -431,5 +766,141 @@ mod tests {
             spread > compact,
             "spread {spread} should exceed compact {compact}"
         );
+    }
+
+    // ---- cost-cache behavior -------------------------------------------
+
+    #[test]
+    fn cache_exact_repeat_is_identical_and_hits() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(32);
+        let a = m.allreduce_time(&gpus, 100e6, Algo::Ring).unwrap();
+        let b = m.allreduce_time(&gpus, 100e6, Algo::Ring).unwrap();
+        assert_eq!(a, b, "cached repeat must be bit-identical");
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn cache_matches_simulation_across_sizes() {
+        // After probing two sizes, interpolated/extrapolated answers must
+        // track the real simulation closely in the bandwidth regime.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16);
+        for algo in Algo::ALL {
+            // Warm the curve with two samples.
+            m.allreduce_time(&gpus, 1e8, algo).unwrap();
+            m.allreduce_time(&gpus, 2e8, algo).unwrap();
+            for bytes in [1.25e8, 1.5e8, 1.75e8, 3e8] {
+                let cached = m.allreduce_time(&gpus, bytes, algo).unwrap();
+                let exact = m.allreduce_time_uncached(&gpus, bytes, algo).unwrap();
+                assert!(
+                    (cached - exact).abs() <= 0.02 * exact,
+                    "{}: cached {cached} vs exact {exact} at {bytes} bytes",
+                    algo.label()
+                );
+            }
+        }
+        let (hits, _) = m.cache_stats();
+        assert!(hits >= 12, "interpolation should serve the sweep: {hits}");
+    }
+
+    #[test]
+    fn cache_refuses_wild_extrapolation() {
+        // A size far outside the probed span must be simulated (a miss),
+        // not extrapolated from the latency-dominated regime.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16);
+        m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 8192.0, Algo::Ring).unwrap();
+        let (_, misses_before) = m.cache_stats();
+        let big = m.allreduce_time(&gpus, 4e8, Algo::Ring).unwrap();
+        let (_, misses_after) = m.cache_stats();
+        assert_eq!(misses_after, misses_before + 1, "must simulate 4e8");
+        let exact = m.allreduce_time_uncached(&gpus, 4e8, Algo::Ring).unwrap();
+        assert_eq!(big, exact);
+    }
+
+    #[test]
+    fn cache_distinguishes_gpu_sets_and_algos() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let a = t.first_gpus(32);
+        let b = t.spread_gpus(32);
+        let ta = m.allreduce_time(&a, 100e6, Algo::Ring).unwrap();
+        let tb = m.allreduce_time(&b, 100e6, Algo::Ring).unwrap();
+        assert_ne!(ta, tb, "different placements must not share entries");
+        let th = m.allreduce_time(&a, 100e6, Algo::Hierarchical).unwrap();
+        assert_ne!(ta, th, "different algorithms must not share entries");
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 3);
+    }
+
+    #[test]
+    fn non_finite_bytes_rejected_regardless_of_cache_state() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16);
+        assert!(m.allreduce_time(&gpus, f64::NAN, Algo::Ring).is_err());
+        // Warm the curve, then try again: cache state must not change
+        // error semantics.
+        m.allreduce_time(&gpus, 1e8, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 2e8, Algo::Ring).unwrap();
+        assert!(m.allreduce_time(&gpus, f64::NAN, Algo::Ring).is_err());
+        assert!(m.allreduce_time(&gpus, f64::INFINITY, Algo::Ring).is_err());
+        assert!(m
+            .allreduce_time_uncached(&gpus, f64::NAN, Algo::Ring)
+            .is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_order_insensitive() {
+        let t = topo();
+        let mut gpus = t.first_gpus(16);
+        let fp1 = gpu_set_fingerprint(&gpus);
+        gpus.reverse();
+        assert_eq!(fp1, gpu_set_fingerprint(&gpus));
+        gpus.swap(0, 7);
+        assert_eq!(fp1, gpu_set_fingerprint(&gpus));
+        // Different sets differ.
+        let other = t.first_gpus(17);
+        assert_ne!(fp1, gpu_set_fingerprint(&other));
+    }
+
+    #[test]
+    fn invalidate_caches_forces_resimulation() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(8);
+        m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
+        let (hits, _) = m.cache_stats();
+        assert_eq!(hits, 1);
+        m.invalidate_caches();
+        m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
+        let (post_hits, post_misses) = m.cache_stats();
+        assert_eq!(post_hits, 0, "counters reset with the entries");
+        assert_eq!(post_misses, 1, "post-invalidation call must simulate");
+        let (rh, rm) = m.route_stats();
+        assert_eq!(rh, 0, "route table must be rebuilt too");
+        assert!(rm > 0);
+    }
+
+    #[test]
+    fn route_table_reused_across_calls() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(64);
+        m.allreduce_time_uncached(&gpus, 1e6, Algo::Ring).unwrap();
+        let (h0, m0) = m.route_stats();
+        m.allreduce_time_uncached(&gpus, 2e6, Algo::Ring).unwrap();
+        let (h1, m1) = m.route_stats();
+        assert_eq!(m1, m0, "second ring build must intern nothing new");
+        assert!(h1 > h0, "second ring build must hit the route table");
     }
 }

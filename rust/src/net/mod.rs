@@ -10,12 +10,38 @@
 //! Latency handling (α–β model): a flow's data starts moving after the sum
 //! of per-hop latencies along its route; its completion time is
 //! `start + path_latency + transfer_time_under_fair_sharing`.
+//!
+//! # §Perf: the event-driven engine
+//!
+//! [`simulate`] runs an **incremental, allocation-free** engine:
+//!
+//! * arrivals are pre-sorted once and consumed through a cursor; the
+//!   active-flow set is maintained incrementally (`swap_remove` on
+//!   completion) instead of re-scanning every flow per event;
+//! * the per-event link compaction uses **stamped** link tables
+//!   ([`SimScratch::link_stamp`]) so touching a link is O(1) with no
+//!   O(total links) table rebuild per event — per-event cost is
+//!   O(Σ active path lengths + local links²) independent of machine size;
+//! * all working memory lives in a reusable [`SimScratch`] arena, so on a
+//!   warm scratch the solver itself does **zero heap allocation**;
+//!   [`simulate`]/[`simulate_with_scratch`] still allocate the one
+//!   per-flow result vector they return, while
+//!   [`simulate_makespan_with_scratch`] skips even that for hot loops
+//!   that only need the makespan. [`simulate`] uses a thread-local
+//!   scratch; hot loops pass their own.
+//!
+//! The pre-rewrite engine is kept verbatim as [`simulate_reference`]; a
+//! randomized differential property test asserts both produce identical
+//! per-flow finish times (see `README.md` in this directory for the cost
+//! model invariants this protects).
+
+use std::cell::RefCell;
 
 use crate::topology::Topology;
 use crate::util::error::{BoosterError, Result};
 
 /// One flow to simulate.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Flow {
     /// Directed link ids along the route.
     pub path: Vec<usize>,
@@ -43,9 +69,7 @@ pub struct SimOutcome {
     pub events: usize,
 }
 
-/// Simulate a set of flows on a topology. Zero-byte or empty-path flows
-/// complete after their path latency.
-pub fn simulate(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
+fn validate(topo: &Topology, flows: &[Flow]) -> Result<()> {
     let n_links = topo.links.len();
     for f in flows {
         for &l in &f.path {
@@ -53,10 +77,307 @@ pub fn simulate(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
                 return Err(BoosterError::Sim(format!("flow references link {l}")));
             }
         }
-        if f.bytes < 0.0 || f.start < 0.0 {
+        if !f.bytes.is_finite() || !f.start.is_finite() || f.bytes < 0.0 || f.start < 0.0 {
             return Err(BoosterError::Sim("negative bytes/start".into()));
         }
     }
+    Ok(())
+}
+
+/// Reusable working memory for the event-driven engine. Create once, pass
+/// to [`simulate_with_scratch`] for every call: after warmup no call
+/// allocates. All vectors are cleared (capacity kept) per run; the stamped
+/// link tables persist across runs and reset lazily via the epoch counter.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    // Per-flow state (flow-indexed).
+    remaining: Vec<f64>,
+    ready: Vec<f64>,
+    finish: Vec<f64>,
+    rate: Vec<f64>,
+    frozen: Vec<bool>,
+    /// Flow ids sorted by ready time (arrival queue; consumed by cursor).
+    order: Vec<u32>,
+    /// Currently active flow ids.
+    active: Vec<u32>,
+    // Stamped link compaction: `link_local[l]` is valid iff
+    // `link_stamp[l] == stamp`. Avoids an O(total links) rebuild per event.
+    link_stamp: Vec<u32>,
+    link_local: Vec<u32>,
+    stamp: u32,
+    // Per-event local link tables (local-link-indexed).
+    local_links: Vec<u32>,
+    cap: Vec<f64>,
+    unfrozen: Vec<u32>,
+    csr_off: Vec<u32>,
+    csr_flow: Vec<u32>,
+    fill: Vec<u32>,
+}
+
+impl SimScratch {
+    /// Empty scratch; grows on first use and is then reused.
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
+/// Max-min fair shares for `s.active`, written into `s.rate` (flow-indexed).
+/// Same progressive-filling algorithm as the reference, but the link
+/// compaction is stamped + CSR so no per-event allocation happens.
+fn fair_shares(topo: &Topology, flows: &[Flow], s: &mut SimScratch) {
+    s.stamp = s.stamp.wrapping_add(1);
+    if s.stamp == 0 {
+        // Epoch wrapped (once per 2^32 events): hard-reset the stamps.
+        for v in s.link_stamp.iter_mut() {
+            *v = 0;
+        }
+        s.stamp = 1;
+    }
+    let stamp = s.stamp;
+
+    // Pass 1: discover the links the active flows touch; count flows/link.
+    s.local_links.clear();
+    s.cap.clear();
+    s.unfrozen.clear();
+    for &fi in &s.active {
+        for &l in &flows[fi as usize].path {
+            if s.link_stamp[l] != stamp {
+                s.link_stamp[l] = stamp;
+                s.link_local[l] = s.local_links.len() as u32;
+                s.local_links.push(l as u32);
+                s.cap.push(topo.links[l].bw);
+                s.unfrozen.push(0);
+            }
+            s.unfrozen[s.link_local[l] as usize] += 1;
+        }
+    }
+    let nl = s.local_links.len();
+
+    // Pass 2: CSR adjacency link -> active flow ids.
+    s.csr_off.clear();
+    s.csr_off.push(0);
+    let mut acc = 0u32;
+    for li in 0..nl {
+        acc += s.unfrozen[li];
+        s.csr_off.push(acc);
+    }
+    s.fill.clear();
+    s.fill.extend_from_slice(&s.csr_off[..nl]);
+    s.csr_flow.clear();
+    s.csr_flow.resize(acc as usize, 0);
+    for &fi in &s.active {
+        for &l in &flows[fi as usize].path {
+            let li = s.link_local[l] as usize;
+            let pos = s.fill[li] as usize;
+            s.csr_flow[pos] = fi;
+            s.fill[li] = pos as u32 + 1;
+        }
+    }
+
+    for &fi in &s.active {
+        s.rate[fi as usize] = 0.0;
+        s.frozen[fi as usize] = false;
+    }
+
+    // Progressive filling: repeatedly saturate the tightest link, freeze
+    // its flows at the fair share, subtract, repeat.
+    let mut n_unfrozen = s.active.len();
+    while n_unfrozen > 0 {
+        let mut best: Option<(usize, f64)> = None;
+        for li in 0..nl {
+            let u = s.unfrozen[li];
+            if u == 0 {
+                continue;
+            }
+            let share = s.cap[li] / u as f64;
+            if best.map_or(true, |(_, b)| share < b) {
+                best = Some((li, share));
+            }
+        }
+        let Some((bottleneck, share)) = best else { break };
+        let lo = s.csr_off[bottleneck] as usize;
+        let hi = s.csr_off[bottleneck + 1] as usize;
+        for idx in lo..hi {
+            let fi = s.csr_flow[idx] as usize;
+            if s.frozen[fi] {
+                continue;
+            }
+            s.frozen[fi] = true;
+            n_unfrozen -= 1;
+            s.rate[fi] = share;
+            for &l in &flows[fi].path {
+                let li = s.link_local[l] as usize;
+                s.unfrozen[li] -= 1;
+                if li != bottleneck {
+                    s.cap[li] = (s.cap[li] - share).max(0.0);
+                }
+            }
+        }
+        s.cap[bottleneck] = 0.0;
+        s.unfrozen[bottleneck] = 0;
+    }
+}
+
+/// Event-driven simulation with caller-provided scratch. Semantics are
+/// identical to [`simulate_reference`] (differentially tested); zero-byte
+/// or empty-path flows complete after their path latency.
+///
+/// The returned [`SimOutcome`] owns one per-flow result vector (the only
+/// allocation on a warm scratch). Callers that need just the makespan —
+/// the collective cost model — use [`simulate_makespan_with_scratch`],
+/// which is allocation-free in steady state.
+pub fn simulate_with_scratch(
+    topo: &Topology,
+    flows: &[Flow],
+    s: &mut SimScratch,
+) -> Result<SimOutcome> {
+    let events = run_events(topo, flows, s)?;
+    let mut out = Vec::with_capacity(flows.len());
+    let mut makespan = 0.0f64;
+    for &f in &s.finish {
+        makespan = makespan.max(f);
+        out.push(FlowResult { finish: f });
+    }
+    Ok(SimOutcome {
+        flows: out,
+        makespan,
+        events,
+    })
+}
+
+/// Makespan and event count only — no per-flow result vector, so a warm
+/// scratch makes this fully allocation-free (§Perf: the collective cost
+/// model's inner loop).
+pub fn simulate_makespan_with_scratch(
+    topo: &Topology,
+    flows: &[Flow],
+    s: &mut SimScratch,
+) -> Result<(f64, usize)> {
+    let events = run_events(topo, flows, s)?;
+    let makespan = s.finish.iter().fold(0.0f64, |a, &f| a.max(f));
+    Ok((makespan, events))
+}
+
+/// Core event loop: runs the simulation, leaving per-flow finish times in
+/// `s.finish`; returns the event count.
+fn run_events(topo: &Topology, flows: &[Flow], s: &mut SimScratch) -> Result<usize> {
+    validate(topo, flows)?;
+    let n = flows.len();
+    let n_links = topo.links.len();
+    if s.link_stamp.len() < n_links {
+        s.link_stamp.resize(n_links, 0);
+        s.link_local.resize(n_links, 0);
+    }
+
+    s.remaining.clear();
+    s.ready.clear();
+    s.finish.clear();
+    for f in flows {
+        s.remaining.push(f.bytes);
+        s.ready.push(f.start + topo.route_latency(&f.path));
+        s.finish.push(f64::NAN);
+    }
+    s.rate.clear();
+    s.rate.resize(n, 0.0);
+    s.frozen.clear();
+    s.frozen.resize(n, false);
+    s.order.clear();
+    s.order.extend(0..n as u32);
+    {
+        let ready = &s.ready;
+        s.order
+            .sort_unstable_by(|&a, &b| ready[a as usize].partial_cmp(&ready[b as usize]).unwrap());
+    }
+    s.active.clear();
+
+    let mut cursor = 0usize;
+    let mut now = 0.0f64;
+    let mut events = 0usize;
+    loop {
+        // Admit every flow that has become ready by `now`. A zero-byte
+        // flow completes at its ready time (arrivals always bound the
+        // event step below, so `now` never overshoots a pending arrival).
+        while cursor < n && s.ready[s.order[cursor] as usize] <= now + 1e-18 {
+            let i = s.order[cursor] as usize;
+            cursor += 1;
+            if s.remaining[i] <= 0.0 {
+                s.finish[i] = s.ready[i].max(now);
+            } else {
+                s.active.push(i as u32);
+            }
+        }
+        if s.active.is_empty() {
+            if cursor >= n {
+                break;
+            }
+            now = now.max(s.ready[s.order[cursor] as usize]);
+            continue;
+        }
+
+        fair_shares(topo, flows, s);
+        events += 1;
+
+        // Advance to the earliest of: a flow completing, a pending flow
+        // becoming ready (which changes the sharing).
+        let mut dt = f64::INFINITY;
+        for &fi in &s.active {
+            let r = s.rate[fi as usize];
+            if r > 0.0 {
+                dt = dt.min(s.remaining[fi as usize] / r);
+            }
+        }
+        let next_ready = if cursor < n {
+            s.ready[s.order[cursor] as usize]
+        } else {
+            f64::INFINITY
+        };
+        if next_ready.is_finite() {
+            dt = dt.min(next_ready - now);
+        }
+        if !dt.is_finite() || dt <= 0.0 {
+            return Err(BoosterError::Sim(format!(
+                "stalled at t={now}: {} active flows with zero rate",
+                s.active.len()
+            )));
+        }
+        let t_next = now + dt;
+        let mut k = 0;
+        while k < s.active.len() {
+            let fi = s.active[k] as usize;
+            s.remaining[fi] -= s.rate[fi] * dt;
+            if s.remaining[fi] <= 1e-9 {
+                s.remaining[fi] = 0.0;
+                s.finish[fi] = t_next;
+                s.active.swap_remove(k);
+            } else {
+                k += 1;
+            }
+        }
+        now = t_next;
+    }
+
+    Ok(events)
+}
+
+thread_local! {
+    static SIM_SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::new());
+}
+
+/// Simulate a set of flows on a topology. Zero-byte or empty-path flows
+/// complete after their path latency.
+///
+/// Uses the event-driven engine with a thread-local [`SimScratch`], so
+/// repeated calls are allocation-free. Hot loops that want deterministic
+/// scratch ownership can call [`simulate_with_scratch`] directly.
+pub fn simulate(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
+    SIM_SCRATCH.with(|s| simulate_with_scratch(topo, flows, &mut s.borrow_mut()))
+}
+
+/// The pre-rewrite engine: full rescan of every flow per event and a fresh
+/// per-event link table. Kept as the differential-testing oracle for
+/// [`simulate`] — do not optimize this function.
+pub fn simulate_reference(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
+    validate(topo, flows)?;
 
     // Effective start = injection + path latency; remaining = payload.
     let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes).collect();
@@ -100,7 +421,7 @@ pub fn simulate(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
         }
 
         // Max-min fair rates via progressive filling.
-        let rates = fair_rates(topo, flows, &active);
+        let rates = fair_rates_reference(topo, flows, &active);
         events += 1;
 
         // Advance to the earliest of: a flow completing, a pending flow
@@ -138,15 +459,9 @@ pub fn simulate(topo: &Topology, flows: &[Flow]) -> Result<SimOutcome> {
     })
 }
 
-/// Max-min fair rates for the `active` flows (indices into `flows`).
-/// Progressive filling: repeatedly saturate the tightest link, freeze its
-/// flows at the fair share, subtract, repeat.
-///
-/// §Perf: links are compacted into a dense local table (no hash maps on
-/// the hot path) and per-link unfrozen-flow counts are maintained
-/// incrementally, so each filling iteration is O(local links) instead of
-/// O(links × flows-per-link).
-fn fair_rates(topo: &Topology, flows: &[Flow], active: &[usize]) -> Vec<f64> {
+/// Max-min fair rates for the `active` flows (indices into `flows`) —
+/// reference implementation with per-call allocations.
+fn fair_rates_reference(topo: &Topology, flows: &[Flow], active: &[usize]) -> Vec<f64> {
     let mut rate = vec![0.0f64; active.len()];
     let mut frozen = vec![false; active.len()];
 
@@ -213,6 +528,7 @@ fn fair_rates(topo: &Topology, flows: &[Flow], active: &[usize]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::topology::GpuId;
+    use crate::util::check;
 
     fn topo() -> Topology {
         Topology::juwels_booster()
@@ -353,5 +669,124 @@ mod tests {
             start: 0.0,
         };
         assert!(simulate(&t, &[f]).is_err());
+        let f = Flow {
+            path: Vec::new(),
+            bytes: f64::NAN,
+            start: 0.0,
+        };
+        assert!(simulate(&t, &[f]).is_err());
+    }
+
+    /// Satellite: differential/property test — the event-driven engine and
+    /// the reference rescan engine must agree on per-flow finish times
+    /// within 1e-9 across randomized flow sets.
+    #[test]
+    fn event_engine_matches_reference_on_random_flows() {
+        let t = topo();
+        let mut scratch = SimScratch::new();
+        check::forall("event engine vs reference finish times", 48, |rng| {
+            let nf = rng.range(1, 24);
+            let mut flows = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                let src = GpuId {
+                    node: rng.range(0, t.params.nodes),
+                    gpu: rng.range(0, t.node_spec.gpus_per_node),
+                };
+                let mut dst = src;
+                while dst == src {
+                    dst = GpuId {
+                        node: rng.range(0, t.params.nodes),
+                        gpu: rng.range(0, t.node_spec.gpus_per_node),
+                    };
+                }
+                let bytes = if rng.chance(0.1) {
+                    0.0
+                } else {
+                    rng.uniform(1.0, 2e9)
+                };
+                let start = if rng.chance(0.5) {
+                    0.0
+                } else {
+                    rng.uniform(0.0, 0.05)
+                };
+                flows.push(Flow {
+                    path: t.route(src, dst, rng.next_u64()),
+                    bytes,
+                    start,
+                });
+            }
+            let fast = simulate_with_scratch(&t, &flows, &mut scratch)
+                .map_err(|e| format!("event engine failed: {e}"))?;
+            let slow =
+                simulate_reference(&t, &flows).map_err(|e| format!("reference failed: {e}"))?;
+            for (i, (a, b)) in fast.flows.iter().zip(&slow.flows).enumerate() {
+                check::close(
+                    a.finish,
+                    b.finish,
+                    1e-9 * (1.0 + b.finish.abs()),
+                    &format!("finish time of flow {i}"),
+                )?;
+            }
+            check::close(
+                fast.makespan,
+                slow.makespan,
+                1e-9 * (1.0 + slow.makespan.abs()),
+                "makespan",
+            )
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // The same scratch must give identical results across calls (no
+        // state leaks between runs).
+        let t = topo();
+        let flows: Vec<Flow> = (0..16)
+            .map(|k| Flow {
+                path: t.route(
+                    GpuId { node: k, gpu: 0 },
+                    GpuId {
+                        node: 200 + 3 * k,
+                        gpu: 1,
+                    },
+                    k as u64,
+                ),
+                bytes: 1e8 + k as f64 * 3e7,
+                start: 1e-4 * k as f64,
+            })
+            .collect();
+        let mut scratch = SimScratch::new();
+        let a = simulate_with_scratch(&t, &flows, &mut scratch).unwrap();
+        // Interleave an unrelated run to dirty the scratch.
+        let other = vec![flow(&t, (5, 0), (900, 3), 7e8)];
+        simulate_with_scratch(&t, &other, &mut scratch).unwrap();
+        let b = simulate_with_scratch(&t, &flows, &mut scratch).unwrap();
+        assert_eq!(a.flows, b.flows);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn engines_agree_on_ring_round() {
+        // The bench workload: a 512-GPU ring round.
+        let t = topo();
+        let gpus = t.first_gpus(512);
+        let flows: Vec<Flow> = (0..gpus.len())
+            .map(|i| Flow {
+                path: t.route(gpus[i], gpus[(i + 1) % gpus.len()], i as u64),
+                bytes: 1e6,
+                start: 0.0,
+            })
+            .collect();
+        let fast = simulate(&t, &flows).unwrap();
+        let slow = simulate_reference(&t, &flows).unwrap();
+        assert!(
+            (fast.makespan - slow.makespan).abs() <= 1e-9 * (1.0 + slow.makespan),
+            "fast {} slow {}",
+            fast.makespan,
+            slow.makespan
+        );
+        for (a, b) in fast.flows.iter().zip(&slow.flows) {
+            assert!((a.finish - b.finish).abs() <= 1e-9 * (1.0 + b.finish.abs()));
+        }
     }
 }

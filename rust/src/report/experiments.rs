@@ -563,6 +563,31 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
     t.row(&["mean cells per booster job".into(), format!("{mean_cells:.2}")]);
     let makespan = records.iter().map(|r| r.finish).fold(0.0, f64::max);
     t.row(&["trace makespan".into(), fmt_seconds(makespan)]);
+    // Price each booster job's allreduce on its actual placement. One
+    // shared CollectiveModel: nodes freed by finished jobs get re-handed
+    // to later jobs, so recurring placements are served by the pattern-
+    // level cost cache instead of fresh flow simulations (§Perf).
+    let topo = Topology::juwels_booster();
+    let model = crate::collectives::CollectiveModel::new(&topo);
+    let mut comm = Vec::new();
+    for r in &records {
+        if r.booster_nodes.is_empty() {
+            continue;
+        }
+        let gpus = crate::sched::nodes_to_gpus(&r.booster_nodes, topo.node_spec.gpus_per_node);
+        comm.push(model.allreduce_time(&gpus, 100e6, crate::collectives::Algo::Hierarchical)?);
+    }
+    if !comm.is_empty() {
+        t.row(&[
+            "mean est. 100 MB allreduce".into(),
+            fmt_seconds(crate::util::stats::mean(&comm)),
+        ]);
+        let (hits, misses) = model.cache_stats();
+        t.row(&[
+            "collective cost-cache hit rate".into(),
+            format!("{:.0}% ({hits} hits / {misses} sims)", 100.0 * model.cache_hit_rate()),
+        ]);
+    }
     out.push_str(&t.render());
     emit("sched", &out, Some(&t.to_csv()))?;
     Ok(0)

@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::topology::GpuId;
 use crate::util::error::{BoosterError, Result};
 use crate::util::stats;
 
@@ -450,6 +451,22 @@ impl Scheduler {
     }
 }
 
+/// GPUs hosted by an allocated node set — the bridge from a scheduler
+/// allocation to the collective cost model. `report::cmd_sched` prices
+/// each job's allreduce on its actual placement through one shared
+/// [`crate::collectives::CollectiveModel`], whose pattern-level cost cache
+/// makes recurring placements (freed nodes re-handed to later jobs) O(1)
+/// after first sight (§Perf).
+pub fn nodes_to_gpus(nodes: &[usize], gpus_per_node: usize) -> Vec<GpuId> {
+    let mut out = Vec::with_capacity(nodes.len() * gpus_per_node);
+    for &n in nodes {
+        for g in 0..gpus_per_node {
+            out.push(GpuId { node: n, gpu: g });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,6 +568,20 @@ mod tests {
         let rec = s.run(&jobs).unwrap();
         let u = s.utilization(&jobs, &rec, Partition::Booster);
         assert!(u > 0.0 && u <= 1.0 + 1e-9, "util {u}");
+    }
+
+    #[test]
+    fn nodes_to_gpus_expands_allocations() {
+        let gpus = nodes_to_gpus(&[3, 17], 4);
+        assert_eq!(gpus.len(), 8);
+        assert_eq!(gpus[0], GpuId { node: 3, gpu: 0 });
+        assert_eq!(gpus[3], GpuId { node: 3, gpu: 3 });
+        assert_eq!(gpus[4], GpuId { node: 17, gpu: 0 });
+        // Identical allocations fingerprint identically for the cost cache.
+        use crate::collectives::gpu_set_fingerprint;
+        let a = gpu_set_fingerprint(&nodes_to_gpus(&[0, 1, 2], 4));
+        let b = gpu_set_fingerprint(&nodes_to_gpus(&[2, 0, 1], 4));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -313,43 +313,79 @@ impl Topology {
     /// `salt` spreads traffic across equivalent spines / global links
     /// deterministically (ECMP-style).
     pub fn route(&self, src: GpuId, dst: GpuId, salt: u64) -> Vec<usize> {
-        assert!(src.node < self.params.nodes && dst.node < self.params.nodes);
         let mut path = Vec::with_capacity(8);
+        self.route_into(src, dst, salt, &mut path);
+        path
+    }
+
+    /// Append the route onto `out` without allocating (§Perf: the hot-loop
+    /// entry point — callers reuse the buffer across rounds).
+    pub fn route_into(&self, src: GpuId, dst: GpuId, salt: u64, out: &mut Vec<usize>) {
+        let sel = self.salt_selector(src, dst, salt);
+        self.route_selected(src, dst, sel, out);
+    }
+
+    /// Collapse `salt` to the ECMP selector the route actually depends on.
+    /// Routes with equal `(src, dst, selector)` are identical — this is the
+    /// normalization [`RouteTable`] keys on, so e.g. ring constructions that
+    /// salt by rank index still share cache entries whenever the selector
+    /// coincides. Must stay in sync with [`Topology::route_selected`].
+    fn salt_selector(&self, src: GpuId, dst: GpuId, salt: u64) -> u32 {
+        assert!(src.node < self.params.nodes && dst.node < self.params.nodes);
+        if src.node == dst.node {
+            return 0;
+        }
+        let (ca, cb) = (self.cell_of(src.node), self.cell_of(dst.node));
+        if ca == cb {
+            let (la, lb) = (self.leaf_of(src.node), self.leaf_of(dst.node));
+            if la == lb {
+                return 0;
+            }
+            // Spine choice inside the cell.
+            ((salt as usize)
+                .wrapping_add(src.node)
+                .wrapping_add(dst.node)
+                % self.params.spines_per_cell) as u32
+        } else {
+            // Global-link choice between the cells.
+            let nglob = self.global[ca][cb].len();
+            debug_assert!(nglob > 0, "no global links between cells {ca},{cb}");
+            ((salt as usize)
+                .wrapping_add(src.node)
+                .wrapping_mul(31)
+                .wrapping_add(dst.node)
+                % nglob) as u32
+        }
+    }
+
+    /// Build the route for a pre-collapsed selector (see
+    /// [`Topology::salt_selector`]), appending link ids onto `out`.
+    fn route_selected(&self, src: GpuId, dst: GpuId, sel: u32, out: &mut Vec<usize>) {
+        assert!(src.node < self.params.nodes && dst.node < self.params.nodes);
         if src == dst {
-            return path;
+            return;
         }
         if src.node == dst.node {
             // NVLink only.
-            path.push(self.gpu_up[src.node][src.gpu]);
-            path.push(self.gpu_down[dst.node][dst.gpu]);
-            return path;
+            out.push(self.gpu_up[src.node][src.gpu]);
+            out.push(self.gpu_down[dst.node][dst.gpu]);
+            return;
         }
-        path.push(self.gpu_up[src.node][src.gpu]);
-        path.push(self.node_up[src.node]);
+        out.push(self.gpu_up[src.node][src.gpu]);
+        out.push(self.node_up[src.node]);
         let (ca, cb) = (self.cell_of(src.node), self.cell_of(dst.node));
         let (la, lb) = (self.leaf_of(src.node), self.leaf_of(dst.node));
-        let spines = self.params.spines_per_cell;
         if ca == cb {
             if la != lb {
                 // leaf -> spine -> leaf within the cell.
-                let s = (salt as usize)
-                    .wrapping_add(src.node)
-                    .wrapping_add(dst.node)
-                    % spines;
-                path.push(self.leaf_spine[ca][la][s]);
-                path.push(self.spine_leaf[ca][s][lb]);
+                let s = sel as usize;
+                out.push(self.leaf_spine[ca][la][s]);
+                out.push(self.spine_leaf[ca][s][lb]);
             }
             // Same leaf: leaf switch turns the packet around directly.
         } else {
             // leaf -> spine(a) -> global -> spine(b) -> leaf.
-            let nglob = self.global[ca][cb].len();
-            debug_assert!(nglob > 0, "no global links between cells {ca},{cb}");
-            let k = (salt as usize)
-                .wrapping_add(src.node)
-                .wrapping_mul(31)
-                .wrapping_add(dst.node)
-                % nglob;
-            let gl = self.global[ca][cb][k];
+            let gl = self.global[ca][cb][sel as usize];
             let sa = {
                 // Spine the chosen global link hangs off in cell a.
                 let v = self.links[gl].from;
@@ -359,13 +395,12 @@ impl Topology {
                 let v = self.links[gl].to;
                 self.spine_index(cb, v)
             };
-            path.push(self.leaf_spine[ca][la][sa]);
-            path.push(gl);
-            path.push(self.spine_leaf[cb][sb][lb]);
+            out.push(self.leaf_spine[ca][la][sa]);
+            out.push(gl);
+            out.push(self.spine_leaf[cb][sb][lb]);
         }
-        path.push(self.node_down[dst.node]);
-        path.push(self.gpu_down[dst.node][dst.gpu]);
-        path
+        out.push(self.node_down[dst.node]);
+        out.push(self.gpu_down[dst.node][dst.gpu]);
     }
 
     fn spine_index(&self, cell: usize, vertex: usize) -> usize {
@@ -443,6 +478,74 @@ impl Topology {
             cell = (cell + 1) % cells;
         }
         out
+    }
+}
+
+/// Handle to a path interned in a [`RouteTable`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PathId(u32);
+
+/// Memoized routes (§Perf): [`Topology::route`] recomputes and allocates a
+/// fresh `Vec` for every `(src, dst, salt)` on every ring-round
+/// construction. A `RouteTable` interns each distinct route once in a
+/// shared arena and hands out stable [`PathId`]s; `path()` resolves an id
+/// to a borrowed slice with no copy.
+///
+/// Keys are normalized through [`Topology::salt_selector`], so any two
+/// salts that pick the same ECMP spine/global link share one entry.
+///
+/// **Invalidation:** entries describe link ids of the topology they were
+/// interned against. A table must only ever be used with the `Topology` it
+/// was filled from — bind it next to the topology reference (as
+/// [`crate::collectives::CollectiveModel`] does) and drop it with it.
+#[derive(Debug, Default)]
+pub struct RouteTable {
+    map: std::collections::HashMap<(GpuId, GpuId, u32), PathId>,
+    spans: Vec<(u32, u32)>,
+    arena: Vec<usize>,
+    /// Lookups served from the arena.
+    pub hits: u64,
+    /// Lookups that computed and interned a new route.
+    pub misses: u64,
+}
+
+impl RouteTable {
+    /// Empty table.
+    pub fn new() -> RouteTable {
+        RouteTable::default()
+    }
+
+    /// Id of the route `(src, dst, salt)`, interning it on first sight.
+    pub fn intern(&mut self, topo: &Topology, src: GpuId, dst: GpuId, salt: u64) -> PathId {
+        let sel = topo.salt_selector(src, dst, salt);
+        if let Some(&id) = self.map.get(&(src, dst, sel)) {
+            self.hits += 1;
+            return id;
+        }
+        self.misses += 1;
+        let start = self.arena.len();
+        topo.route_selected(src, dst, sel, &mut self.arena);
+        let id = PathId(self.spans.len() as u32);
+        self.spans
+            .push((start as u32, (self.arena.len() - start) as u32));
+        self.map.insert((src, dst, sel), id);
+        id
+    }
+
+    /// The link ids of an interned route.
+    pub fn path(&self, id: PathId) -> &[usize] {
+        let (start, len) = self.spans[id.0 as usize];
+        &self.arena[start as usize..(start + len) as usize]
+    }
+
+    /// Number of distinct routes interned.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when nothing has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
     }
 }
 
@@ -559,5 +662,86 @@ mod tests {
         let mut p = TopoParams::juwels_booster();
         p.leaves_per_cell = 7; // 48 % 7 != 0
         assert!(Topology::build(p, NodeSpec::juwels_booster()).is_err());
+    }
+
+    #[test]
+    fn route_into_matches_route() {
+        let t = Topology::juwels_booster();
+        let cases = [
+            ((0usize, 0usize), (0usize, 0usize), 0u64),   // self
+            ((0, 0), (0, 3), 1),                          // intra-node
+            ((0, 0), (1, 0), 2),                          // same leaf
+            ((0, 0), (47, 1), 3),                         // intra-cell
+            ((0, 0), (500, 2), 7),                        // inter-cell
+            ((935, 3), (0, 0), 123456789),                // reverse, big salt
+        ];
+        for ((sn, sg), (dn, dg), salt) in cases {
+            let src = GpuId { node: sn, gpu: sg };
+            let dst = GpuId { node: dn, gpu: dg };
+            let mut buf = vec![99usize; 3]; // dirty prefix must be kept
+            t.route_into(src, dst, salt, &mut buf);
+            assert_eq!(&buf[..3], &[99, 99, 99]);
+            assert_eq!(&buf[3..], t.route(src, dst, salt).as_slice());
+        }
+    }
+
+    #[test]
+    fn route_table_interns_and_hits() {
+        let t = Topology::juwels_booster();
+        let mut table = RouteTable::new();
+        let src = GpuId { node: 0, gpu: 0 };
+        let dst = GpuId { node: 500, gpu: 2 };
+        let a = table.intern(&t, src, dst, 7);
+        let b = table.intern(&t, src, dst, 7);
+        assert_eq!(a, b);
+        assert_eq!(table.hits, 1);
+        assert_eq!(table.misses, 1);
+        assert_eq!(table.path(a), t.route(src, dst, 7).as_slice());
+        // A different salt picking a different global link is a new entry.
+        let c = table.intern(&t, src, dst, 8);
+        assert_ne!(table.path(c), table.path(a));
+        assert_eq!(table.len(), 2);
+    }
+
+    #[test]
+    fn route_table_normalizes_equivalent_salts() {
+        let t = Topology::juwels_booster();
+        let mut table = RouteTable::new();
+        let src = GpuId { node: 0, gpu: 0 };
+        let dst = GpuId { node: 500, gpu: 0 };
+        // 10 global links between the cells: salts 10 apart collapse.
+        let a = table.intern(&t, src, dst, 3);
+        let b = table.intern(&t, src, dst, 13);
+        assert_eq!(a, b, "salts equal mod nglob must share one entry");
+        assert_eq!(table.len(), 1);
+        // Intra-node routes ignore the salt entirely.
+        let src2 = GpuId { node: 9, gpu: 0 };
+        let dst2 = GpuId { node: 9, gpu: 1 };
+        let c = table.intern(&t, src2, dst2, 0);
+        let d = table.intern(&t, src2, dst2, 999);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn route_table_random_consistency() {
+        use crate::util::check;
+        let t = Topology::juwels_booster();
+        let mut table = RouteTable::new();
+        check::forall("route table returns route()'s path", 256, |rng| {
+            let src = GpuId {
+                node: rng.range(0, 936),
+                gpu: rng.range(0, 4),
+            };
+            let dst = GpuId {
+                node: rng.range(0, 936),
+                gpu: rng.range(0, 4),
+            };
+            let salt = rng.next_u64();
+            let id = table.intern(&t, src, dst, salt);
+            check::ensure(
+                table.path(id) == t.route(src, dst, salt).as_slice(),
+                format!("path mismatch for {src:?} -> {dst:?} salt {salt}"),
+            )
+        });
     }
 }

@@ -86,10 +86,11 @@ pub fn average_parallel(buffers: &[&[f32]], out: &mut [f32], threads: usize) {
         return average_chunked(buffers, out);
     }
     let chunk = n.div_ceil(threads);
-    crossbeam_utils::thread::scope(|scope| {
+    // std::thread::scope joins all workers on exit and re-raises panics.
+    std::thread::scope(|scope| {
         for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
             let start = t * chunk;
-            scope.spawn(move |_| {
+            scope.spawn(move || {
                 let len = out_chunk.len();
                 // Reuse the blocked single-thread kernel on this range.
                 let views: Vec<&[f32]> =
@@ -97,8 +98,7 @@ pub fn average_parallel(buffers: &[&[f32]], out: &mut [f32], threads: usize) {
                 average_chunked(&views, out_chunk);
             });
         }
-    })
-    .expect("allreduce worker panicked");
+    });
 }
 
 /// FP16 wire quantization: exactly what the L1 `fp16_roundtrip` Pallas
@@ -151,13 +151,12 @@ pub fn average_compressed(
                 quantized_avg(out, 0);
             } else {
                 let chunk = n.div_ceil(threads);
-                crossbeam_utils::thread::scope(|scope| {
+                std::thread::scope(|scope| {
                     for (t, oc) in out.chunks_mut(chunk).enumerate() {
                         let qa = &quantized_avg;
-                        scope.spawn(move |_| qa(oc, t * chunk));
+                        scope.spawn(move || qa(oc, t * chunk));
                     }
-                })
-                .expect("compressed allreduce worker panicked");
+                });
             }
         }
     }

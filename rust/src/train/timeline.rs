@@ -50,10 +50,16 @@ impl Jitter {
 }
 
 /// Timeline model bound to a topology.
+///
+/// Owns a [`CollectiveModel`] so repeated step/throughput evaluations on
+/// the same placement are served by the pattern-level cost cache instead
+/// of re-running flow simulations (§Perf).
 #[derive(Debug)]
 pub struct TimelineModel<'t> {
     /// The machine.
     pub topo: &'t Topology,
+    /// Shared collective cost model (route table + cost cache inside).
+    pub collectives: CollectiveModel<'t>,
     /// Precision of the training math (paper workloads: FP16_TC AMP).
     pub precision: Precision,
     /// Achieved fraction of peak FLOP/s for the compute phase.
@@ -87,6 +93,7 @@ impl<'t> TimelineModel<'t> {
     pub fn amp_defaults(topo: &'t Topology) -> TimelineModel<'t> {
         TimelineModel {
             topo,
+            collectives: CollectiveModel::new(topo),
             precision: Precision::Fp16Tc,
             efficiency: 0.42,
             overlap: 0.7,
@@ -105,14 +112,15 @@ impl<'t> TimelineModel<'t> {
             .kernel_time(flops_per_gpu, 0.0, self.precision, self.efficiency)
     }
 
-    /// Allreduce seconds for a gradient set on a placement.
+    /// Allreduce seconds for a gradient set on a placement. Served from
+    /// the owned [`CollectiveModel`]'s cost cache when the pattern has
+    /// been simulated before.
     pub fn comm_time(&self, gpus: &[GpuId], grad_tensor_bytes: &[f64]) -> Result<f64> {
         if gpus.len() <= 1 {
             return Ok(0.0);
         }
-        let model = CollectiveModel::new(self.topo);
         bucketed_allreduce_time(
-            &model,
+            &self.collectives,
             gpus,
             grad_tensor_bytes,
             self.bucket_bytes,
@@ -284,6 +292,23 @@ mod tests {
         m.compression = Compression::Fp16;
         let fp16 = m.step_time(&gpus, 1e10, &grads, &mut rng).unwrap().total;
         assert!(fp16 < 0.7 * plain, "fp16 {fp16} plain {plain}");
+    }
+
+    #[test]
+    fn repeated_steps_hit_the_cost_cache() {
+        let t = topo();
+        let m = TimelineModel::amp_defaults(&t);
+        let mut rng = Rng::seed_from(11);
+        let gpus = t.first_gpus(32);
+        let grads = vec![50e6];
+        let a = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap();
+        let b = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap();
+        // Comm cost is deterministic (fluid model) and must come from the
+        // cache the second time.
+        assert_eq!(a.comm, b.comm);
+        let (hits, misses) = m.collectives.cache_stats();
+        assert!(hits >= 1, "second step must be served by the cache");
+        assert!(misses >= 1);
     }
 
     #[test]

@@ -1,24 +1,23 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the vendored
+//! crate set carries no proc-macro dependencies, keeping `cargo build`
+//! dependency-free and fast.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by BoosterKit.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum BoosterError {
     /// Artifact files missing / malformed metadata.
-    #[error("artifact error: {0}")]
     Artifact(String),
     /// XLA / PJRT runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Configuration problems (bad flag, inconsistent cluster spec, ...).
-    #[error("config error: {0}")]
     Config(String),
     /// Simulation invariant violations.
-    #[error("simulation error: {0}")]
     Sim(String),
     /// JSON parse errors.
-    #[error("json error at offset {offset}: {msg}")]
     Json {
         /// Byte offset in the input.
         offset: usize,
@@ -26,11 +25,40 @@ pub enum BoosterError {
         msg: String,
     },
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Error bubbled up from the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for BoosterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BoosterError::Artifact(s) => write!(f, "artifact error: {s}"),
+            BoosterError::Runtime(s) => write!(f, "runtime error: {s}"),
+            BoosterError::Config(s) => write!(f, "config error: {s}"),
+            BoosterError::Sim(s) => write!(f, "simulation error: {s}"),
+            BoosterError::Json { offset, msg } => {
+                write!(f, "json error at offset {offset}: {msg}")
+            }
+            BoosterError::Io(e) => write!(f, "io error: {e}"),
+            BoosterError::Xla(s) => write!(f, "xla error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for BoosterError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BoosterError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BoosterError {
+    fn from(e: std::io::Error) -> Self {
+        BoosterError::Io(e)
+    }
 }
 
 impl From<xla::Error> for BoosterError {
@@ -41,3 +69,33 @@ impl From<xla::Error> for BoosterError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, BoosterError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_variants() {
+        assert_eq!(
+            BoosterError::Sim("stalled".into()).to_string(),
+            "simulation error: stalled"
+        );
+        assert_eq!(
+            BoosterError::Json {
+                offset: 3,
+                msg: "bad".into()
+            }
+            .to_string(),
+            "json error at offset 3: bad"
+        );
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        use std::error::Error as _;
+        let e: BoosterError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,430 @@
+//! Vendored stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment carries no XLA/PJRT shared libraries, so this
+//! crate provides the exact API subset BoosterKit uses:
+//!
+//! * [`Literal`] is **fully functional**: an in-memory, host-side tensor
+//!   (element type + dims + raw bytes) supporting creation, reshape and
+//!   readback. Everything in the repo that only moves data through
+//!   literals (checkpointing, host allreduce, dataset sharding) works.
+//! * The **PJRT execution path is stubbed**: [`PjRtClient::cpu`] succeeds
+//!   (so CLI paths can report a platform), but compiling HLO returns a
+//!   descriptive error. Code that needs real execution is gated behind the
+//!   `pjrt` cargo feature of the `booster` crate and expects the real
+//!   bindings to be swapped in via `[patch]` or a path override.
+//!
+//! Keeping the signatures identical to the real bindings means swapping
+//! the implementation back in is a one-line Cargo change, not a refactor.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (a plain message here).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// XLA element types (subset used by the artifacts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    /// 32-bit float.
+    F32,
+    /// 64-bit float.
+    F64,
+    /// 32-bit signed int.
+    S32,
+    /// 64-bit signed int.
+    S64,
+    /// 32-bit unsigned int.
+    U32,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size_in_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::F64 | ElementType::S64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    /// The corresponding XLA element type.
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A literal's shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    /// Dense array.
+    Array(ArrayShape),
+    /// Tuple of shapes.
+    Tuple(Vec<Shape>),
+}
+
+enum LiteralRepr {
+    Array {
+        ty: ElementType,
+        dims: Vec<i64>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side XLA literal (dense array or tuple).
+pub struct Literal {
+    repr: LiteralRepr,
+}
+
+impl fmt::Debug for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.repr {
+            LiteralRepr::Array { ty, dims, data } => f
+                .debug_struct("Literal")
+                .field("ty", ty)
+                .field("dims", dims)
+                .field("bytes", &data.len())
+                .finish(),
+            LiteralRepr::Tuple(xs) => f.debug_tuple("Literal::Tuple").field(&xs.len()).finish(),
+        }
+    }
+}
+
+fn byte_view<T: NativeType>(v: &[T]) -> &[u8] {
+    // SAFETY: T is a plain scalar (`NativeType` is sealed to f32/f64/i32/
+    // i64/u32); viewing its memory as bytes is always valid.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+impl Literal {
+    /// Rank-0 literal from a scalar.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            repr: LiteralRepr::Array {
+                ty: T::TY,
+                dims: Vec::new(),
+                data: byte_view(std::slice::from_ref(&v)).to_vec(),
+            },
+        }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            repr: LiteralRepr::Array {
+                ty: T::TY,
+                dims: vec![v.len() as i64],
+                data: byte_view(v).to_vec(),
+            },
+        }
+    }
+
+    /// Build a literal from an element type, dims and raw (native-endian)
+    /// bytes — one memcpy, the fast path used by `booster`'s tensor layer.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        let want = elems * ty.size_in_bytes();
+        if want != untyped_data.len() {
+            return err(format!(
+                "create_from_shape_and_untyped_data: shape {dims:?} wants {want} bytes, got {}",
+                untyped_data.len()
+            ));
+        }
+        Ok(Literal {
+            repr: LiteralRepr::Array {
+                ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                data: untyped_data.to_vec(),
+            },
+        })
+    }
+
+    /// Number of elements (arrays only).
+    pub fn element_count(&self) -> usize {
+        match &self.repr {
+            LiteralRepr::Array { ty, data, .. } => data.len() / ty.size_in_bytes(),
+            LiteralRepr::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dims; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let LiteralRepr::Array { ty, data, .. } = &self.repr else {
+            return err("reshape: tuple literal");
+        };
+        let want: i64 = dims.iter().product();
+        let have = (data.len() / ty.size_in_bytes()) as i64;
+        if want != have {
+            return err(format!("reshape: {have} elements into dims {dims:?}"));
+        }
+        Ok(Literal {
+            repr: LiteralRepr::Array {
+                ty: *ty,
+                dims: dims.to_vec(),
+                data: data.clone(),
+            },
+        })
+    }
+
+    /// The literal's shape.
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.repr {
+            LiteralRepr::Array { ty, dims, .. } => Ok(Shape::Array(ArrayShape {
+                ty: *ty,
+                dims: dims.clone(),
+            })),
+            LiteralRepr::Tuple(xs) => Ok(Shape::Tuple(
+                xs.iter().map(|x| x.shape()).collect::<Result<_>>()?,
+            )),
+        }
+    }
+
+    /// Copy the elements out as a typed `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let LiteralRepr::Array { ty, data, .. } = &self.repr else {
+            return err("to_vec: tuple literal");
+        };
+        if *ty != T::TY {
+            return err(format!("to_vec: literal is {ty:?}, requested {:?}", T::TY));
+        }
+        let size = std::mem::size_of::<T>();
+        debug_assert_eq!(size, ty.size_in_bytes());
+        if data.len() % size != 0 {
+            return err("to_vec: truncated literal data");
+        }
+        let n = data.len() / size;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // SAFETY: `out`'s allocation is aligned for T and has room for n
+        // elements; `data` holds exactly n*size bytes of native-endian T.
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), out.as_mut_ptr() as *mut u8, data.len());
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            LiteralRepr::Tuple(xs) => Ok(xs),
+            LiteralRepr::Array { .. } => err("to_tuple: literal is not a tuple"),
+        }
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(xs: Vec<Literal>) -> Literal {
+        Literal {
+            repr: LiteralRepr::Tuple(xs),
+        }
+    }
+}
+
+impl Clone for Literal {
+    fn clone(&self) -> Literal {
+        match &self.repr {
+            LiteralRepr::Array { ty, dims, data } => Literal {
+                repr: LiteralRepr::Array {
+                    ty: *ty,
+                    dims: dims.clone(),
+                    data: data.clone(),
+                },
+            },
+            LiteralRepr::Tuple(xs) => Literal {
+                repr: LiteralRepr::Tuple(xs.clone()),
+            },
+        }
+    }
+}
+
+const STUB_MSG: &str = "xla stub: PJRT compilation/execution is unavailable in this build \
+     (vendored stand-in; provide the real `xla` crate and real artifacts, \
+     then build `booster` with `--features pjrt`)";
+
+/// Parsed HLO module proto (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        err(STUB_MSG)
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer handle (opaque in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(STUB_MSG)
+    }
+}
+
+/// A compiled executable (opaque in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs. Always errors in the stub.
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(STUB_MSG)
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Succeeds so host-only paths (literals, CLI
+    /// plumbing) keep working; compilation is where the stub stops.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    /// Compile a computation. Always errors in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(STUB_MSG)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = Literal::scalar(7.5f32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![7.5]);
+        assert_eq!(l.element_count(), 1);
+        let l = Literal::scalar(42u32);
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        let Shape::Array(a) = r.shape().unwrap() else {
+            panic!("expected array shape");
+        };
+        assert_eq!(a.dims(), &[2, 3]);
+        assert_eq!(a.element_type(), ElementType::S32);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn untyped_data_checks_length() {
+        let bytes = [0u8; 12];
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.0, 0.0, 0.0]);
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &bytes).is_err()
+        );
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let l = Literal::vec1(&[1.0f32]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_split() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn execution_path_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
