@@ -9,8 +9,8 @@
 //!   (4.9M params — the full driver configuration; slower per step).
 
 use booster::data::text::TextCorpus;
-use booster::runtime::{tensor, Engine};
-use booster::topology::Topology;
+use booster::runtime::tensor;
+use booster::scenario::ExperimentContext;
 use booster::train::timeline::TimelineModel;
 use booster::train::{LrSchedule, Trainer};
 use booster::util::rng::Rng;
@@ -22,9 +22,10 @@ fn main() -> anyhow::Result<()> {
     let model_name = args.get(1).map(|s| s.as_str()).unwrap_or("transformer");
     let replicas = 2usize;
 
-    let engine = Engine::cpu().map_err(anyhow::Error::msg)?;
+    let ctx = ExperimentContext::for_machine("juwels_booster").map_err(anyhow::Error::msg)?;
+    let engine = ctx.engine().map_err(anyhow::Error::msg)?;
     let model = engine.load_model(model_name).map_err(anyhow::Error::msg)?;
-    let mut trainer = Trainer::new(&engine, model, replicas, 7).map_err(anyhow::Error::msg)?;
+    let mut trainer = Trainer::new(engine, model, replicas, 7).map_err(anyhow::Error::msg)?;
     let meta = trainer.model.meta.clone();
     let (b, s) = (meta.x.shape[0], meta.x.shape[1]);
     let vocab = 2048.max(256); // corpus vocab >= model vocab is fine; clamp below
@@ -90,8 +91,8 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(format!("results/e2e_{}_loss.csv", meta.name), csv)?;
 
     // The same job on the simulated machine at MLPerf-transformer scale.
-    let topo = Topology::juwels_booster();
-    let sim = TimelineModel::amp_defaults(&topo);
+    let topo = &ctx.topo;
+    let sim = TimelineModel::amp_defaults(topo);
     let mut srng = Rng::seed_from(5);
     for gpus in [8usize, 64, 256] {
         let st = sim

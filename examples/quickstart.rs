@@ -7,17 +7,19 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use booster::runtime::{tensor, Engine};
-use booster::topology::Topology;
+use booster::runtime::tensor;
+use booster::scenario::ExperimentContext;
 use booster::train::timeline::TimelineModel;
 use booster::train::{LrSchedule, Trainer};
 use booster::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    // One context = machine (from the preset registry) + engine + models.
+    let ctx = ExperimentContext::for_machine("juwels_booster").map_err(anyhow::Error::msg)?;
     // L3: the PJRT engine (CPU) and a 2-replica data-parallel trainer.
-    let engine = Engine::cpu().map_err(anyhow::Error::msg)?;
+    let engine = ctx.engine().map_err(anyhow::Error::msg)?;
     let model = engine.load_model("cnn_covid").map_err(anyhow::Error::msg)?;
-    let mut trainer = Trainer::new(&engine, model, 2, 42).map_err(anyhow::Error::msg)?;
+    let mut trainer = Trainer::new(engine, model, 2, 42).map_err(anyhow::Error::msg)?;
     let meta = trainer.model.meta.clone();
     println!(
         "model {} | {} params | {} replicas | global batch {}",
@@ -53,13 +55,13 @@ fn main() -> anyhow::Result<()> {
     }
     assert!(trainer.replicas_in_sync().map_err(anyhow::Error::msg)?);
 
-    // What would this job cost on the real machine? Ask the simulator.
-    let topo = Topology::juwels_booster();
-    let model = TimelineModel::amp_defaults(&topo);
+    // What would this job cost on the real machine? Ask the simulator
+    // (AMP defaults: this example's workload is not the ctx scenario's).
+    let model = TimelineModel::amp_defaults(&ctx.topo);
     let mut rng = Rng::seed_from(0);
     let st = model
         .step_time(
-            &topo.first_gpus(64),
+            &ctx.topo.first_gpus(64),
             meta.flops_per_step,
             &meta.grad_tensor_bytes(),
             &mut rng,

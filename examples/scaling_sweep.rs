@@ -4,14 +4,15 @@
 //!
 //! Run: `cargo run --release --example scaling_sweep`
 
-use booster::collectives::{bucketed_allreduce_time, Algo, CollectiveModel, Compression};
-use booster::topology::Topology;
+use booster::collectives::{bucketed_allreduce_time, Algo, Compression};
+use booster::scenario::ExperimentContext;
 use booster::train::timeline::TimelineModel;
 use booster::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let topo = Topology::juwels_booster();
-    let model = CollectiveModel::new(&topo);
+    let ctx = ExperimentContext::for_machine("juwels_booster").map_err(anyhow::Error::msg)?;
+    let topo = &ctx.topo;
+    let model = ctx.collectives();
 
     // A ResNet-50-sized gradient set.
     let grads = vec![100e6f64];
@@ -54,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nweak-scaling efficiency of a BERT-like training step:\n");
-    let sim = TimelineModel::amp_defaults(&topo);
+    let sim = TimelineModel::amp_defaults(topo);
     let mut rng = Rng::seed_from(0);
     let flops = 3.0 * 343e9 * 24.0; // fwd+bwd, batch 24 sequences
     let grad = vec![335e6 * 4.0];

@@ -2,14 +2,15 @@
 //! Horovod fusion-buffer size, FP16 gradient compression — swept on the
 //! DragonFly+ model. `cargo bench --bench collectives_ablation`.
 
-use booster::collectives::{bucketed_allreduce_time_uncached, Algo, CollectiveModel, Compression};
-use booster::topology::Topology;
+use booster::collectives::{bucketed_allreduce_time_uncached, Algo, Compression};
+use booster::scenario::ExperimentContext;
 use booster::util::table::Table;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let topo = Topology::juwels_booster();
-    let model = CollectiveModel::new(&topo);
+    let ctx = ExperimentContext::for_machine("juwels_booster").expect("registry preset");
+    let topo = &ctx.topo;
+    let model = ctx.collectives();
     let gpus = topo.first_gpus(256);
 
     // ResNet-50-like gradient tensor sizes (conv stacks + head).

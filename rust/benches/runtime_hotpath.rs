@@ -12,10 +12,10 @@
 //! `results/BENCH_hotpath.json` so the perf trajectory is trackable
 //! across PRs.
 
-use booster::collectives::{Algo, CollectiveModel};
+use booster::collectives::Algo;
 use booster::net::{simulate_reference, simulate_with_scratch, Flow, SimScratch};
 use booster::runtime::{tensor, Engine};
-use booster::topology::Topology;
+use booster::scenario::ExperimentContext;
 use booster::train::allreduce;
 use booster::util::json::Json;
 use booster::util::rng::Rng;
@@ -142,7 +142,8 @@ fn main() {
     }
 
     // --- network simulator ------------------------------------------------
-    let topo = Topology::juwels_booster();
+    let ctx = ExperimentContext::for_machine("juwels_booster").expect("registry preset");
+    let topo = &ctx.topo;
     let gpus = topo.first_gpus(512);
     let flows: Vec<Flow> = (0..gpus.len())
         .map(|i| Flow {
@@ -152,14 +153,14 @@ fn main() {
         })
         .collect();
     let mut scratch = SimScratch::new();
-    let events = simulate_with_scratch(&topo, &flows, &mut scratch)
+    let events = simulate_with_scratch(topo, &flows, &mut scratch)
         .unwrap()
         .events;
     let sim_t = time_it(9, || {
-        let _ = simulate_with_scratch(&topo, &flows, &mut scratch).unwrap();
+        let _ = simulate_with_scratch(topo, &flows, &mut scratch).unwrap();
     });
     let ref_t = time_it(3, || {
-        let _ = simulate_reference(&topo, &flows).unwrap();
+        let _ = simulate_reference(topo, &flows).unwrap();
     });
     let events_per_s = events as f64 / sim_t.median;
     let ns_per_event = sim_t.median / events.max(1) as f64 * 1e9;
@@ -201,7 +202,7 @@ fn main() {
     // interpolation.
     let gpus256 = topo.first_gpus(256);
     let sizes: Vec<f64> = (0..64).map(|i| 64e6 + i as f64 * 4e6).collect();
-    let model = CollectiveModel::new(&topo);
+    let model = ctx.collectives();
     let t_un = Instant::now();
     for &b in &sizes {
         model

@@ -1,10 +1,10 @@
 //! Ablation bench: topology and placement — DragonFly+ global-link count,
 //! DragonFly+ vs fat tree, compact vs spread scheduling — measured by
-//! hierarchical allreduce time at scale.
+//! hierarchical allreduce time at scale. Variants are expressed as edits
+//! of the scenario preset's `MachineSpec`, not hand-built topologies.
 
 use booster::collectives::{Algo, CollectiveModel};
-use booster::hw::node::NodeSpec;
-use booster::topology::{TopoParams, Topology};
+use booster::scenario::presets;
 use booster::util::table::Table;
 
 fn main() {
@@ -14,27 +14,33 @@ fn main() {
 
     let mut out = String::from("Topology ablation: 512-GPU allreduce of 400 MB\n\n");
 
+    let base = presets::machine("juwels_booster").expect("registry preset");
     let mut t = Table::new(&["topology", "bisection Tbit/s", "allreduce ms"])
         .with_title("fabric variants");
-    let mut variants: Vec<(String, Topology)> = Vec::new();
-    variants.push(("DragonFly+ (10 links/pair, paper)".into(), Topology::juwels_booster()));
+    let mut variants = Vec::new();
+    variants.push((
+        "DragonFly+ (10 links/pair, paper)".to_string(),
+        base.build_topology().unwrap(),
+    ));
     for links in [2usize, 5, 20] {
-        let mut p = TopoParams::juwels_booster();
-        p.global_links_per_pair = links;
+        let mut m = base.clone();
+        m.topo.global_links_per_pair = links;
         variants.push((
             format!("DragonFly+ ({links} links/pair)"),
-            Topology::build(p, NodeSpec::juwels_booster()).unwrap(),
+            m.build_topology().unwrap(),
         ));
     }
     {
-        let mut p = TopoParams::selene();
-        p.nodes = 936;
-        p.nodes_per_cell = 936;
-        p.leaves_per_cell = 24;
-        p.spines_per_cell = 24;
+        // Same node hardware, one 936-node fat tree instead of cells.
+        let mut m = base.clone();
+        m.topo.kind = "fat-tree".into();
+        m.topo.nodes_per_cell = 936;
+        m.topo.leaves_per_cell = 24;
+        m.topo.spines_per_cell = 24;
+        m.topo.global_links_per_pair = 0;
         variants.push((
-            "single fat tree (936 nodes)".into(),
-            Topology::build(p, NodeSpec::juwels_booster()).unwrap(),
+            "single fat tree (936 nodes)".to_string(),
+            m.build_topology().unwrap(),
         ));
     }
     for (name, topo) in &variants {
@@ -53,7 +59,7 @@ fn main() {
 
     let mut t = Table::new(&["placement", "gpus", "ring ms", "hierarchical ms"])
         .with_title("placement policy (paper topology)");
-    let topo = Topology::juwels_booster();
+    let topo = base.build_topology().unwrap();
     let model = CollectiveModel::new(&topo);
     for gpus in [64usize, 256, 512] {
         for (label, placement) in [

@@ -69,6 +69,11 @@ pub fn commands() -> Vec<Command> {
             about: "simulate the modular workload manager on a job trace",
             run: crate::report::cmd_sched,
         },
+        Command {
+            name: "sweep",
+            about: "run a scenario grid (--param key=v1,v2) over machines/workloads/scales",
+            run: crate::report::cmd_sweep,
+        },
     ]
 }
 
@@ -123,5 +128,13 @@ mod tests {
     #[test]
     fn unknown_subcommand_exit_two() {
         assert_eq!(dispatch(&["frobnicate".to_string()]).unwrap(), 2);
+    }
+
+    #[test]
+    fn sweep_help_and_list_exit_zero() {
+        let h = dispatch(&["sweep".to_string(), "--help".to_string()]).unwrap();
+        assert_eq!(h, 0);
+        let l = dispatch(&["sweep".to_string(), "--list".to_string()]).unwrap();
+        assert_eq!(l, 0);
     }
 }

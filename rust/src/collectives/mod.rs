@@ -57,12 +57,25 @@ impl Algo {
     /// All algorithms (for ablations).
     pub const ALL: [Algo; 3] = [Algo::Ring, Algo::HalvingDoubling, Algo::Hierarchical];
 
-    /// Display name.
+    /// Display name (also the canonical scenario-spec key).
     pub fn label(self) -> &'static str {
         match self {
             Algo::Ring => "ring",
             Algo::HalvingDoubling => "halving-doubling",
             Algo::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Parse an algorithm key (case-insensitive).
+    pub fn parse(s: &str) -> Result<Algo> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "ring" => Ok(Algo::Ring),
+            "halving-doubling" | "halving_doubling" | "hd" => Ok(Algo::HalvingDoubling),
+            "hierarchical" | "hier" => Ok(Algo::Hierarchical),
+            _ => Err(BoosterError::Config(format!(
+                "unknown collective algorithm '{s}' (expected ring, halving-doubling \
+                 or hierarchical)"
+            ))),
         }
     }
 
@@ -568,6 +581,25 @@ impl Compression {
         match self {
             Compression::None => 1.0,
             Compression::Fp16 => 0.5,
+        }
+    }
+
+    /// Canonical scenario-spec key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::Fp16 => "fp16",
+        }
+    }
+
+    /// Parse a compression key (case-insensitive).
+    pub fn parse(s: &str) -> Result<Compression> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "fp32" | "off" => Ok(Compression::None),
+            "fp16" => Ok(Compression::Fp16),
+            _ => Err(BoosterError::Config(format!(
+                "unknown compression '{s}' (expected none or fp16)"
+            ))),
         }
     }
 }

@@ -7,12 +7,14 @@
 pub mod checkpoint;
 
 use crate::hw::power::PowerModel;
+use crate::scenario::MachineSpec;
 use crate::sched::{Placement, Scheduler};
 use crate::topology::{GpuId, Topology};
 use crate::train::timeline::TimelineModel;
 use crate::util::error::{BoosterError, Result};
 
-/// The simulated JUWELS Booster machine.
+/// A simulated machine (JUWELS Booster by default, any scenario
+/// [`MachineSpec`] in general).
 pub struct Machine {
     /// Fabric + nodes.
     pub topo: Topology,
@@ -23,13 +25,21 @@ pub struct Machine {
 }
 
 impl Machine {
-    /// The paper's machine.
+    /// Build the facade for any scenario machine spec. The scheduler gets
+    /// a 2300-node Cluster module alongside the Booster partition, like
+    /// the modular JUWELS installation.
+    pub fn from_spec(spec: &MachineSpec) -> Result<Machine> {
+        Ok(Machine {
+            topo: spec.build_topology()?,
+            power: spec.power_model()?,
+            sched: Scheduler::for_machine(spec, 2300, Placement::CompactCells),
+        })
+    }
+
+    /// The paper's machine, from the preset registry.
     pub fn juwels_booster() -> Machine {
-        Machine {
-            topo: Topology::juwels_booster(),
-            power: PowerModel::juwels_booster(),
-            sched: Scheduler::juwels(Placement::CompactCells),
-        }
+        let spec = crate::scenario::presets::machine("juwels_booster").expect("registry preset");
+        Machine::from_spec(&spec).expect("preset is valid")
     }
 
     /// A timeline model with the standard AMP defaults bound to this

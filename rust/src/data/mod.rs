@@ -21,11 +21,48 @@ pub mod rna;
 pub mod text;
 pub mod weather;
 
+use crate::util::error::Result;
+
 /// Deterministic shard of `n` items across `replicas`: replica `r` gets
 /// indices `r, r+replicas, ...` (Horovod's default sampler behaviour).
 pub fn shard_indices(n: usize, replicas: usize, replica: usize) -> Vec<usize> {
     assert!(replica < replicas);
     (replica..n).step_by(replicas).collect()
+}
+
+/// Build per-replica `(x, y)` literals for any model from synthetic data:
+/// token batches from the Markov corpus for int32 inputs, unit-normal
+/// features with a fixed multilabel target pattern otherwise. (Moved here
+/// from `report::experiments` — shard construction is a data concern;
+/// the old path re-exports this for compatibility.)
+pub fn make_shards(
+    meta: &crate::runtime::ModelMeta,
+    replicas: usize,
+    corpus: &text::TextCorpus,
+    rng: &mut crate::util::rng::Rng,
+) -> Result<Vec<(xla::Literal, xla::Literal)>> {
+    use crate::runtime::tensor;
+    let mut shards = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        if meta.x.dtype == "int32" {
+            let (b, s) = (meta.x.shape[0], meta.x.shape[1]);
+            let toks = corpus.batch(b, s, rng);
+            let xl = tensor::i32_literal(&meta.x.shape, &toks)?;
+            let yl = tensor::i32_literal(&meta.y.shape, &toks)?;
+            shards.push((xl, yl));
+        } else {
+            let nx: usize = meta.x.shape.iter().product();
+            let ny: usize = meta.y.shape.iter().product();
+            let mut x = vec![0.0f32; nx];
+            rng.fill_normal_f32(&mut x, 0.0, 1.0);
+            let y: Vec<f32> = (0..ny).map(|i| ((i % 7) == 0) as u8 as f32).collect();
+            shards.push((
+                tensor::f32_literal(&meta.x.shape, &x)?,
+                tensor::f32_literal(&meta.y.shape, &y)?,
+            ));
+        }
+    }
+    Ok(shards)
 }
 
 #[cfg(test)]

@@ -3,8 +3,14 @@
 //! An analytic device model: peak FLOP/s per precision, HBM capacity and
 //! bandwidth, TDP, and a roofline-style execution-time estimate used by the
 //! simulators. Calibrated to the NVIDIA A100-SXM4-40GB as installed in
-//! JUWELS Booster (§2.2), with the NVIDIA V100 included for sanity
-//! comparisons.
+//! JUWELS Booster (§2.2), with sibling devices for the machines in the
+//! scenario preset registry: the LEONARDO custom A100-64GB (arXiv
+//! 2307.16885), the Isambard-AI GH200 (arXiv 2410.11199) and the V100 for
+//! sanity comparisons.
+//!
+//! Peaks are carried as a per-precision table (indexed by
+//! [`Precision::index`]) rather than matched on the model name, so adding
+//! a device cannot silently fall back to another device's numbers.
 
 use super::precision::Precision;
 
@@ -24,10 +30,13 @@ pub struct GpuSpec {
     pub nvlink_bw: f64,
     /// Idle power draw in watts (used by the energy model).
     pub idle_watts: f64,
+    /// Peak FLOP/s per precision, indexed by [`Precision::index`]
+    /// (paper order: FP64, FP64_TC, FP32, TF32_TC, FP16, FP16_TC, BF16_TC).
+    peaks: [f64; 7],
 }
 
 impl GpuSpec {
-    /// The A100-SXM4-40GB as installed in JUWELS Booster.
+    /// The A100-SXM4-40GB as installed in JUWELS Booster (§2.2 table).
     pub fn a100_40gb() -> GpuSpec {
         GpuSpec {
             name: "NVIDIA A100-SXM4-40GB",
@@ -36,10 +45,42 @@ impl GpuSpec {
             tdp_watts: 400.0,
             nvlink_bw: 300e9,
             idle_watts: 55.0,
+            peaks: [9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12],
         }
     }
 
-    /// V100-SXM2-16GB (for cross-checks against older systems).
+    /// The custom A100-SXM-64GB HBM2e of LEONARDO's Booster module
+    /// (arXiv 2307.16885): A100 compute rates with 64 GB at ~1.6 TB/s.
+    pub fn a100_64gb() -> GpuSpec {
+        GpuSpec {
+            name: "NVIDIA A100-SXM-64GB (LEONARDO custom)",
+            hbm_bytes: 64 * (1u64 << 30),
+            hbm_bw: 1640e9,
+            tdp_watts: 450.0,
+            nvlink_bw: 300e9,
+            idle_watts: 60.0,
+            peaks: [9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12],
+        }
+    }
+
+    /// The GH200 superchip's H100-96GB HBM3 GPU as deployed in Isambard-AI
+    /// (arXiv 2410.11199). Dense (non-sparsity) peaks from the H100 SXM
+    /// datasheet; NVLink is the quad-GH200 blade's point-to-point mesh.
+    pub fn gh200_96gb() -> GpuSpec {
+        GpuSpec {
+            name: "NVIDIA GH200 (H100-96GB)",
+            hbm_bytes: 96 * (1u64 << 30),
+            hbm_bw: 4000e9,
+            tdp_watts: 700.0,
+            nvlink_bw: 200e9,
+            idle_watts: 75.0,
+            peaks: [34e12, 67e12, 67e12, 494e12, 134e12, 990e12, 990e12],
+        }
+    }
+
+    /// V100-SXM2-16GB (for cross-checks against older systems). No
+    /// FP64/TF32/BF16 tensor cores: those entries fall back to the
+    /// nearest supported pipeline, as cuBLAS does.
     pub fn v100_16gb() -> GpuSpec {
         GpuSpec {
             name: "NVIDIA V100-SXM2-16GB",
@@ -48,30 +89,29 @@ impl GpuSpec {
             tdp_watts: 300.0,
             nvlink_bw: 150e9,
             idle_watts: 40.0,
+            peaks: [7.8e12, 7.8e12, 15.7e12, 15.7e12, 31.4e12, 125e12, 125e12],
         }
     }
 
-    /// Peak FLOP/s for a precision (§2.2 table for the A100; V100 values
-    /// from the V100 whitepaper).
-    pub fn peak_flops(&self, p: Precision) -> f64 {
-        match self.name {
-            "NVIDIA A100-SXM4-40GB" => match p {
-                Precision::Fp64 => 9.7e12,
-                Precision::Fp64Tc => 19.5e12,
-                Precision::Fp32 => 19.5e12,
-                Precision::Tf32Tc => 156e12,
-                Precision::Fp16 => 78e12,
-                Precision::Fp16Tc => 312e12,
-                Precision::Bf16Tc => 312e12,
-            },
-            _ => match p {
-                // V100: no FP64/TF32/BF16 tensor cores.
-                Precision::Fp64 | Precision::Fp64Tc => 7.8e12,
-                Precision::Fp32 | Precision::Tf32Tc => 15.7e12,
-                Precision::Fp16 => 31.4e12,
-                Precision::Fp16Tc | Precision::Bf16Tc => 125e12,
-            },
+    /// Registry keys accepted by [`GpuSpec::by_name`] — the values a
+    /// scenario [`crate::scenario::MachineSpec`] may reference.
+    pub const REGISTRY: [&str; 4] = ["a100-40gb", "a100-64gb", "gh200-96gb", "v100-16gb"];
+
+    /// Look up a device by registry key (see [`GpuSpec::REGISTRY`]).
+    pub fn by_name(key: &str) -> Option<GpuSpec> {
+        match key {
+            "a100-40gb" => Some(GpuSpec::a100_40gb()),
+            "a100-64gb" => Some(GpuSpec::a100_64gb()),
+            "gh200-96gb" => Some(GpuSpec::gh200_96gb()),
+            "v100-16gb" => Some(GpuSpec::v100_16gb()),
+            _ => None,
         }
+    }
+
+    /// Peak FLOP/s for a precision (§2.2 table for the A100; siblings from
+    /// their vendor datasheets).
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        self.peaks[p.index()]
     }
 
     /// Peak power efficiency in FLOP/(s·W) at a precision.
@@ -144,5 +184,26 @@ mod tests {
             g.ridge_point(Precision::Fp16Tc, 1.0) > g.ridge_point(Precision::Fp64, 1.0),
             "TC path needs more intensity to saturate"
         );
+    }
+
+    #[test]
+    fn registry_resolves_every_key() {
+        for key in GpuSpec::REGISTRY {
+            let g = GpuSpec::by_name(key).unwrap_or_else(|| panic!("missing {key}"));
+            for p in Precision::ALL {
+                assert!(g.peak_flops(p) > 0.0, "{key} has zero {:?} peak", p);
+            }
+        }
+        assert!(GpuSpec::by_name("tpu-v4").is_none());
+    }
+
+    #[test]
+    fn gh200_outclasses_a100() {
+        let h = GpuSpec::gh200_96gb();
+        let a = GpuSpec::a100_40gb();
+        for p in Precision::ALL {
+            assert!(h.peak_flops(p) > a.peak_flops(p), "{:?}", p);
+        }
+        assert!(h.hbm_bw > 2.0 * a.hbm_bw);
     }
 }

@@ -10,7 +10,7 @@ use super::gpu::GpuSpec;
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
     /// Human-readable name.
-    pub name: &'static str,
+    pub name: String,
     /// GPU model installed.
     pub gpu: GpuSpec,
     /// GPUs per node.
@@ -28,33 +28,22 @@ pub struct NodeSpec {
 }
 
 impl NodeSpec {
-    /// A JUWELS Booster node.
+    /// A JUWELS Booster node, resolved from the scenario preset registry
+    /// (the single source of truth for machine numbers).
     pub fn juwels_booster() -> NodeSpec {
-        NodeSpec {
-            name: "JUWELS Booster node",
-            gpu: GpuSpec::a100_40gb(),
-            gpus_per_node: 4,
-            nics_per_node: 4,
-            nic_bw: 200e9 / 8.0, // 200 Gbit/s -> 25 GB/s
-            cpu_cores: 48,       // 2x 24-core EPYC 7402
-            ram_bytes: 512 * (1u64 << 30),
-            host_watts: 450.0,
-        }
+        crate::scenario::presets::machine("juwels_booster")
+            .expect("registry preset")
+            .node_spec()
+            .expect("preset is valid")
     }
 
     /// An NVIDIA Selene node (DGX A100: 8 GPUs, 8 HDR NICs) — the
-    /// comparison machine in §2.4's MLPerf study.
+    /// comparison machine in §2.4's MLPerf study, from the registry.
     pub fn selene() -> NodeSpec {
-        NodeSpec {
-            name: "NVIDIA Selene (DGX A100) node",
-            gpu: GpuSpec::a100_40gb(),
-            gpus_per_node: 8,
-            nics_per_node: 8,
-            nic_bw: 200e9 / 8.0,
-            cpu_cores: 128, // 2x 64-core EPYC 7742
-            ram_bytes: 1024 * (1u64 << 30),
-            host_watts: 700.0,
-        }
+        crate::scenario::presets::machine("selene")
+            .expect("registry preset")
+            .node_spec()
+            .expect("preset is valid")
     }
 
     /// Aggregate injection bandwidth of the node into the fabric, bytes/s

@@ -22,13 +22,13 @@ pub struct PowerModel {
 }
 
 impl PowerModel {
-    /// JUWELS Booster: 936 nodes, ~8% infrastructure overhead.
+    /// JUWELS Booster (936 nodes, ~8% infrastructure overhead), resolved
+    /// from the scenario preset registry.
     pub fn juwels_booster() -> PowerModel {
-        PowerModel {
-            node: NodeSpec::juwels_booster(),
-            nodes: 936,
-            overhead: 0.08,
-        }
+        crate::scenario::presets::machine("juwels_booster")
+            .expect("registry preset")
+            .power_model()
+            .expect("preset is valid")
     }
 
     /// Total machine power with every GPU at a given utilization in [0,1].

@@ -66,6 +66,56 @@ impl Precision {
         }
     }
 
+    /// Position in [`Precision::ALL`] — the index used by the data-driven
+    /// per-GPU peak tables in [`crate::hw::gpu::GpuSpec`].
+    pub fn index(self) -> usize {
+        match self {
+            Precision::Fp64 => 0,
+            Precision::Fp64Tc => 1,
+            Precision::Fp32 => 2,
+            Precision::Tf32Tc => 3,
+            Precision::Fp16 => 4,
+            Precision::Fp16Tc => 5,
+            Precision::Bf16Tc => 6,
+        }
+    }
+
+    /// Canonical lowercase key used in scenario specs / sweep CSVs.
+    pub fn key(self) -> &'static str {
+        match self {
+            Precision::Fp64 => "fp64",
+            Precision::Fp64Tc => "fp64_tc",
+            Precision::Fp32 => "fp32",
+            Precision::Tf32Tc => "tf32",
+            Precision::Fp16 => "fp16",
+            Precision::Fp16Tc => "fp16_tc",
+            Precision::Bf16Tc => "bf16",
+        }
+    }
+
+    /// Parse a user-facing precision name. Case-insensitive; accepts both
+    /// the paper labels (`FP16_TC`) and the short training-oriented keys
+    /// where the bare name means the Tensor Core path (`bf16` ⇒ BF16_TC,
+    /// `tf32` ⇒ TF32_TC — there is no non-TC TF32/BF16 on the A100).
+    pub fn parse(s: &str) -> crate::util::error::Result<Precision> {
+        let k = s.trim().to_ascii_lowercase();
+        Ok(match k.as_str() {
+            "fp64" => Precision::Fp64,
+            "fp64_tc" | "fp64-tc" => Precision::Fp64Tc,
+            "fp32" => Precision::Fp32,
+            "tf32" | "tf32_tc" | "tf32-tc" => Precision::Tf32Tc,
+            "fp16" => Precision::Fp16,
+            "fp16_tc" | "fp16-tc" | "amp" => Precision::Fp16Tc,
+            "bf16" | "bf16_tc" | "bf16-tc" => Precision::Bf16Tc,
+            _ => {
+                return Err(crate::util::error::BoosterError::Config(format!(
+                    "unknown precision '{s}' (expected one of fp64, fp64_tc, fp32, tf32, \
+                     fp16, fp16_tc, bf16)"
+                )))
+            }
+        })
+    }
+
     /// Tensor Core tile-divisibility constraint the paper alludes to
     /// ("Tensor Cores work most efficiently when the data dimension is
     /// divisible by a certain number depending on the data type"): the
@@ -96,5 +146,25 @@ mod tests {
         assert!(!Precision::Fp32.tensor_core());
         assert!(Precision::Fp16Tc.tensor_core());
         assert_eq!(Precision::Fp16Tc.tc_dim_multiple(), 8);
+    }
+
+    #[test]
+    fn index_matches_all_order() {
+        for (i, p) in Precision::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_keys_and_labels() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.key()).unwrap(), p);
+        }
+        // Paper labels parse too (bare FP16 is the non-TC pipeline).
+        assert_eq!(Precision::parse("FP16_TC").unwrap(), Precision::Fp16Tc);
+        assert_eq!(Precision::parse("fp16").unwrap(), Precision::Fp16);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16Tc);
+        assert_eq!(Precision::parse("tf32").unwrap(), Precision::Tf32Tc);
+        assert!(Precision::parse("int8").is_err());
     }
 }

@@ -9,6 +9,20 @@
 //! data-parallel training stack executing AOT-compiled XLA artifacts via
 //! PJRT, and harnesses regenerating every table and figure in the paper's
 //! evaluation. See `DESIGN.md` for the full inventory.
+//!
+//! # Configuring experiments: the scenario API
+//!
+//! Machines and experiments are *data*, not hardcoded constructors. The
+//! [`scenario`] module owns the typed specs
+//! ([`scenario::MachineSpec`] / [`scenario::ScenarioSpec`], both
+//! JSON-round-trippable), the preset registry (`juwels_booster`, `selene`,
+//! `leonardo`, `isambard_ai` — see [`scenario::presets`]), and the
+//! [`scenario::ExperimentContext`] every CLI driver, bench and example
+//! builds its topology/power/engine from. Grid studies run through
+//! `booster sweep --param key=v1,v2` ([`scenario::sweep`]), which prices
+//! all points of a machine through one shared, cached
+//! [`collectives::CollectiveModel`]. The schema and preset numbers are
+//! documented in `rust/src/scenario/README.md`.
 
 pub mod app;
 pub mod collectives;
@@ -23,6 +37,7 @@ pub mod report;
 pub mod rna;
 pub mod rs;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod storage;
 pub mod topology;

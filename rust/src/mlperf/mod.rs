@@ -107,12 +107,20 @@ pub enum Machine {
 }
 
 impl Machine {
-    /// Build the topology.
-    pub fn topology(self) -> Topology {
+    /// Preset-registry name of the machine.
+    pub fn preset(self) -> &'static str {
         match self {
-            Machine::Booster => Topology::juwels_booster(),
-            Machine::Selene => Topology::selene(),
+            Machine::Booster => "juwels_booster",
+            Machine::Selene => "selene",
         }
+    }
+
+    /// Build the topology from the scenario preset registry.
+    pub fn topology(self) -> Topology {
+        crate::scenario::presets::machine(self.preset())
+            .expect("registry preset")
+            .build_topology()
+            .expect("preset is valid")
     }
 
     /// Label used in the report.
@@ -160,8 +168,8 @@ pub fn measure(task: &Task, machine: Machine, topo: &Topology, n_gpus: usize, se
 /// efficiency normalized by the Selene single-node (8-GPU) rate, exactly
 /// like the paper's percent labels.
 pub fn sweep(task: &Task) -> Result<(Vec<Throughput>, Vec<Throughput>)> {
-    let booster = Topology::juwels_booster();
-    let selene = Topology::selene();
+    let booster = Machine::Booster.topology();
+    let selene = Machine::Selene.topology();
     // NVIDIA single-node reference: 8 GPUs on Selene.
     let ref_rate = measure(task, Machine::Selene, &selene, 8, 1)?;
     let mut ours = Vec::new();

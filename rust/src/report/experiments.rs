@@ -1,35 +1,50 @@
 //! CLI runners for the paper experiments (DESIGN.md §4 maps each to its
-//! figure/table). Each runner parses flags, drives the experiment module,
-//! renders the paper-style report and writes `results/<name>.{txt,csv}`.
+//! figure/table). Each runner parses flags, builds one
+//! [`ExperimentContext`] from a scenario (machine preset + workload), and
+//! drives the experiment module through it — no driver assembles its own
+//! topology/power/engine anymore. Reports land in
+//! `results/<name>.{txt,csv}`; `cmd_sweep` additionally emits
+//! `results/BENCH_sweep.json`.
 
 use crate::hw::precision::Precision;
-use crate::hw::{node::NodeSpec, power::PowerModel};
-use crate::runtime::Engine;
-use crate::topology::Topology;
+use crate::scenario::{presets, sweep, ExperimentContext, ScenarioSpec};
 use crate::util::cli::Flags;
-use crate::util::error::Result;
+use crate::util::error::{BoosterError, Result};
 use crate::util::table::{BarChart, Table};
 use crate::util::{fmt_flops, fmt_seconds};
 
+// Compatibility re-export: shard construction moved to the data layer.
+pub use crate::data::make_shards;
+
 use super::emit;
 
-/// `booster system` — §2.2 characterization numbers.
+/// `booster system` — §2.2-style characterization numbers for a machine.
 pub fn cmd_system(args: &[String]) -> Result<i32> {
-    let flags = Flags::new()
-        .bool_flag("help", false, "show help")
-        .parse(args)?;
+    let spec = Flags::new()
+        .str_flag("machine", "juwels_booster", "machine preset (sweep --list shows all)")
+        .bool_flag("help", false, "show help");
+    let flags = spec.clone().parse(args)?;
     if flags.get_bool("help") {
-        println!("{}", Flags::new().help("system"));
+        println!("{}", spec.help("system"));
         return Ok(0);
     }
-    let node = NodeSpec::juwels_booster();
-    let topo = Topology::juwels_booster();
-    let power = PowerModel::juwels_booster();
+    let ctx = ExperimentContext::for_machine(flags.get_str("machine"))?;
+    let machine = ctx.machine().name.clone();
+    let node = &ctx.topo.node_spec;
+    let topo = &ctx.topo;
+    let power = &ctx.power;
+    let is_paper_machine = machine == "juwels_booster";
+    let paper = |s: &str| {
+        if is_paper_machine {
+            s.to_string()
+        } else {
+            "—".to_string()
+        }
+    };
 
-    let mut out = String::new();
-    out.push_str("JUWELS Booster system characterization (paper §2.2)\n\n");
+    let mut out = format!("{machine} system characterization (method of paper §2.2)\n\n");
     let mut t = Table::new(&["precision", "per-GPU peak", "machine peak", "peak GFLOP/(s W)"])
-        .with_title("A100 peak performance by precision");
+        .with_title(&format!("{} peak performance by precision", node.gpu.name));
     for p in Precision::ALL {
         t.row(&[
             p.label().to_string(),
@@ -45,32 +60,35 @@ pub fn cmd_system(args: &[String]) -> Result<i32> {
     t2.row(&[
         "nodes x GPUs".into(),
         format!("{} x {}", topo.params.nodes, node.gpus_per_node),
-        "936 x 4 = 3744".into(),
+        paper("936 x 4 = 3744"),
     ]);
     t2.row(&[
         "bisection bandwidth (cells)".into(),
         format!("{:.0} Tbit/s", topo.bisection_bw_bits() / 1e12),
-        "400 Tbit/s".into(),
+        paper("400 Tbit/s"),
     ]);
     t2.row(&[
         "FP64_TC peak efficiency".into(),
-        format!("{:.2} GFLOP/(s W)", node.gpu.peak_efficiency(Precision::Fp64Tc) / 1e9),
-        "48.75 GFLOP/(s W)".into(),
+        format!(
+            "{:.2} GFLOP/(s W)",
+            node.gpu.peak_efficiency(Precision::Fp64Tc) / 1e9
+        ),
+        paper("48.75 GFLOP/(s W)"),
     ]);
     t2.row(&[
         "HPL sustained (est.)".into(),
         format!("{:.1} PFLOP/s", power.hpl_sustained(0.62) / 1e15),
-        "44.1 PFLOP/s (Top500)".into(),
+        paper("44.1 PFLOP/s (Top500)"),
     ]);
     t2.row(&[
         "Green500 metric".into(),
         format!("{:.1} GFLOP/(s W)", power.green500(0.62) / 1e9),
-        "25 GFLOP/(s W)".into(),
+        paper("25 GFLOP/(s W)"),
     ]);
     t2.row(&[
         "machine power (busy)".into(),
         format!("{:.2} MW", power.machine_watts(1.0) / 1e6),
-        "~1.8 MW".into(),
+        paper("~1.8 MW"),
     ]);
     out.push_str(&t2.render());
     emit("system", &out, Some(&t2.to_csv()))?;
@@ -80,33 +98,56 @@ pub fn cmd_system(args: &[String]) -> Result<i32> {
 /// `booster topo` — routes + bandwidth inspection.
 pub fn cmd_topo(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
-        .int_flag("src", 0, "source node")
-        .int_flag("dst", 500, "destination node")
+        .str_flag("machine", "juwels_booster", "machine preset (sweep --list shows all)")
+        .int_flag("src", 0, "source node id")
+        .int_flag("dst", 500, "destination node id (default clamps to the machine)")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
     if flags.get_bool("help") {
         println!("{}", spec.help("topo"));
         return Ok(0);
     }
-    let topo = Topology::juwels_booster();
+    let ctx = ExperimentContext::for_machine(flags.get_str("machine"))?;
+    let topo = &ctx.topo;
+    let nodes = topo.params.nodes;
+    // An explicit out-of-range node id is a user error; the *default*
+    // destination (500) is clamped so small machines still show an
+    // interesting route instead of panicking.
+    let pick = |name: &str| -> Result<usize> {
+        let raw = flags.get_int(name);
+        if raw < 0 {
+            return Err(BoosterError::Config(format!("--{name} must be non-negative")));
+        }
+        let v = raw as usize;
+        if flags.is_set(name) && v >= nodes {
+            return Err(BoosterError::Config(format!(
+                "--{name} {v} out of range: machine '{}' has node ids 0..{}",
+                ctx.machine().name,
+                nodes - 1
+            )));
+        }
+        Ok(v.min(nodes - 1))
+    };
     let src = crate::topology::GpuId {
-        node: flags.get_usize("src"),
+        node: pick("src")?,
         gpu: 0,
     };
     let dst = crate::topology::GpuId {
-        node: flags.get_usize("dst"),
+        node: pick("dst")?,
         gpu: 0,
     };
     let path = topo.route(src, dst, 0);
     let mut out = format!(
-        "DragonFly+ topology: {} nodes, {} cells, {} GPUs, {} directed links\n",
+        "{} topology ({:?}): {} nodes, {} cells, {} GPUs, {} directed links\n",
+        ctx.machine().name,
+        topo.params.kind,
         topo.params.nodes,
         topo.params.cells(),
         topo.total_gpus(),
         topo.links.len()
     );
     out.push_str(&format!(
-        "bisection bandwidth between cells: {:.0} Tbit/s (paper: 400)\n\n",
+        "bisection bandwidth between cells: {:.0} Tbit/s\n\n",
         topo.bisection_bw_bits() / 1e12
     ));
     out.push_str(&format!(
@@ -126,6 +167,87 @@ pub fn cmd_topo(args: &[String]) -> Result<i32> {
     }
     out.push_str(&t.render());
     emit("topo", &out, None)?;
+    Ok(0)
+}
+
+/// `booster sweep` — runexp-style scenario grid over machines, workloads,
+/// scales, precisions and collective settings. Emits a combined CSV plus
+/// `results/BENCH_sweep.json`.
+pub fn cmd_sweep(args: &[String]) -> Result<i32> {
+    let spec = Flags::new()
+        .str_flag("machine", "juwels_booster", "base machine preset")
+        .str_flag("workload", "bert", "base workload preset")
+        .int_flag("nodes", 16, "base job size in nodes")
+        .str_flag("precision", "fp16_tc", "base training precision")
+        .str_flag("algo", "hierarchical", "base collective algorithm")
+        .str_flag("compression", "none", "base wire compression (none|fp16)")
+        .str_flag("placement", "compact", "base placement (compact|spread)")
+        .float_flag("bucket-mb", 64.0, "base fusion-buffer size, MB")
+        .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
+        .bool_flag("list", false, "list presets and sweepable keys, then exit")
+        .bool_flag("help", false, "show help");
+    let flags = spec.clone().parse(args)?;
+    if flags.get_bool("help") {
+        println!("{}", spec.help("sweep"));
+        println!("sweepable keys: {}", sweep::SWEEPABLE_KEYS.join(", "));
+        println!("example: booster sweep --param nodes=48,96 --param precision=bf16,tf32");
+        return Ok(0);
+    }
+    if flags.get_bool("list") {
+        println!("machine presets:  {}", presets::machine_names().join(", "));
+        println!("workload presets: {}", presets::workload_names().join(", "));
+        println!("sweepable keys:   {}", sweep::SWEEPABLE_KEYS.join(", "));
+        return Ok(0);
+    }
+    let base = ScenarioSpec::builder(presets::machine(flags.get_str("machine"))?)
+        .workload(presets::workload(flags.get_str("workload"))?)
+        .nodes(flags.get_usize("nodes"))
+        .precision(flags.get_str("precision"))
+        .algo(flags.get_str("algo"))
+        .compression(flags.get_str("compression"))
+        .placement(flags.get_str("placement"))
+        .bucket_bytes(flags.get_f64("bucket-mb") * 1e6)
+        .build()?;
+    let axes = sweep::parse_params(flags.get_strs("param"))?;
+    let outcome = sweep::run(&base, &axes)?;
+
+    let mut out = format!(
+        "scenario sweep: {} point(s) over {} axis/axes (base: {})\n\n",
+        outcome.rows.len(),
+        axes.len(),
+        base.name
+    );
+    let mut t = Table::new(&[
+        "scenario", "gpus", "algo", "comp", "compute ms", "comm ms", "step ms", "samples/s",
+        "kJ/step",
+    ]);
+    for r in &outcome.rows {
+        t.row(&[
+            r.scenario.clone(),
+            r.gpus.to_string(),
+            r.algo.clone(),
+            r.compression.clone(),
+            format!("{:.3}", r.compute_ms),
+            format!("{:.3}", r.comm_ms),
+            format!("{:.3}", r.step_ms),
+            format!("{:.0}", r.samples_per_s),
+            format!("{:.2}", r.step_energy_kj),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nshared collective cost cache: {} hits / {} simulations ({:.0}% hit rate)\n",
+        outcome.cache_hits,
+        outcome.cache_misses,
+        100.0 * outcome.cache_hits as f64
+            / (outcome.cache_hits + outcome.cache_misses).max(1) as f64
+    ));
+    emit("sweep", &out, Some(&outcome.to_csv()))?;
+    std::fs::write(
+        "results/BENCH_sweep.json",
+        outcome.to_json(&axes).to_pretty(),
+    )?;
+    println!("wrote results/sweep.csv and results/BENCH_sweep.json");
     Ok(0)
 }
 
@@ -150,10 +272,7 @@ pub fn cmd_mlperf(args: &[String]) -> Result<i32> {
             continue;
         }
         let (ours, theirs) = crate::mlperf::sweep(&task)?;
-        let mut chart = BarChart::new(
-            &format!("{} [{}]", task.name, task.unit),
-            42,
-        );
+        let mut chart = BarChart::new(&format!("{} [{}]", task.name, task.unit), 42);
         for (o, s) in ours.iter().zip(&theirs) {
             chart.bar(
                 &format!("n={:<4} booster", o.n),
@@ -195,12 +314,13 @@ pub fn cmd_train(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("train"));
         return Ok(0);
     }
-    let engine = Engine::cpu()?;
+    let ctx = ExperimentContext::for_machine("juwels_booster")?;
+    let engine = ctx.engine()?;
     let name = flags.get_str("model").to_string();
     let steps = flags.get_usize("steps");
     let replicas = flags.get_usize("replicas");
     let model = engine.load_model(&name)?;
-    let mut trainer = crate::train::Trainer::new(&engine, model, replicas, 1)?;
+    let mut trainer = crate::train::Trainer::new(engine, model, replicas, 1)?;
     if flags.get_bool("fp16-allreduce") {
         trainer.compression = crate::collectives::Compression::Fp16;
     }
@@ -240,37 +360,6 @@ pub fn cmd_train(args: &[String]) -> Result<i32> {
     Ok(0)
 }
 
-/// Build per-replica (x, y) literals for any model from synthetic data.
-pub fn make_shards(
-    meta: &crate::runtime::ModelMeta,
-    replicas: usize,
-    corpus: &crate::data::text::TextCorpus,
-    rng: &mut crate::util::rng::Rng,
-) -> Result<Vec<(xla::Literal, xla::Literal)>> {
-    use crate::runtime::tensor;
-    let mut shards = Vec::with_capacity(replicas);
-    for _ in 0..replicas {
-        if meta.x.dtype == "int32" {
-            let (b, s) = (meta.x.shape[0], meta.x.shape[1]);
-            let toks = corpus.batch(b, s, rng);
-            let xl = tensor::i32_literal(&meta.x.shape, &toks)?;
-            let yl = tensor::i32_literal(&meta.y.shape, &toks)?;
-            shards.push((xl, yl));
-        } else {
-            let nx: usize = meta.x.shape.iter().product();
-            let ny: usize = meta.y.shape.iter().product();
-            let mut x = vec![0.0f32; nx];
-            rng.fill_normal_f32(&mut x, 0.0, 1.0);
-            let y: Vec<f32> = (0..ny).map(|i| ((i % 7) == 0) as u8 as f32).collect();
-            shards.push((
-                tensor::f32_literal(&meta.x.shape, &x)?,
-                tensor::f32_literal(&meta.y.shape, &y)?,
-            ));
-        }
-    }
-    Ok(shards)
-}
-
 /// `booster transfer` — Fig. 2.
 pub fn cmd_transfer(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
@@ -282,11 +371,12 @@ pub fn cmd_transfer(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("transfer"));
         return Ok(0);
     }
-    let engine = Engine::cpu()?;
+    let ctx = ExperimentContext::for_machine("juwels_booster")?;
+    let engine = ctx.engine()?;
     let mut cfg = crate::transfer::TransferCfg::default();
     cfg.pretrain_steps = flags.get_usize("pretrain-steps");
     cfg.finetune_steps = flags.get_usize("finetune-steps");
-    let series = crate::transfer::fig2(&engine, &cfg)?;
+    let series = crate::transfer::fig2(engine, &cfg)?;
     let mut out = String::from(
         "Few-shot transfer to the CIFAR-10 analog (paper Fig. 2)\n\
          accuracy vs examples-per-class; 'full' = whole training set\n\n",
@@ -324,11 +414,12 @@ pub fn cmd_covidx(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("covidx"));
         return Ok(0);
     }
-    let engine = Engine::cpu()?;
+    let ctx = ExperimentContext::for_machine("juwels_booster")?;
+    let engine = ctx.engine()?;
     let mut cfg = crate::transfer::TransferCfg::default();
     cfg.pretrain_steps = flags.get_usize("pretrain-steps");
     cfg.finetune_steps = flags.get_usize("finetune-steps") / 2;
-    let prf = crate::transfer::table1(&engine, &cfg)?;
+    let prf = crate::transfer::table1(engine, &cfg)?;
     let names = ["COVID-19", "Normal", "Pneumonia"];
     let paper = [(0.88, 0.84, 0.86), (0.96, 0.92, 0.94), (0.87, 0.93, 0.90)];
     let mut out = String::from("COVIDx-analog fine-tuning (paper Table 1)\n\n");
@@ -356,6 +447,7 @@ pub fn cmd_weather(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .bool_flag("forecast", false, "run the Fig. 3 forecast experiment")
         .bool_flag("scaling", false, "run the Fig. 4 scaling simulation")
+        .str_flag("machine", "juwels_booster", "machine preset for the scaling study")
         .int_flag("steps", 120, "training steps for the forecaster")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
@@ -365,17 +457,18 @@ pub fn cmd_weather(args: &[String]) -> Result<i32> {
     }
     let do_forecast = flags.get_bool("forecast") || !flags.get_bool("scaling");
     let do_scaling = flags.get_bool("scaling") || !flags.get_bool("forecast");
+    let ctx = ExperimentContext::for_machine(flags.get_str("machine"))?;
 
     if do_forecast {
-        let engine = Engine::cpu()?;
-        let trainer = crate::weather::train_forecaster(&engine, flags.get_usize("steps"), 5)?;
-        let eval = crate::weather::evaluate(&engine, &trainer, 6, 99)?;
+        let engine = ctx.engine()?;
+        let trainer = crate::weather::train_forecaster(engine, flags.get_usize("steps"), 5)?;
+        let eval = crate::weather::evaluate(engine, &trainer, 6, 99)?;
         let mut out = String::from(
             "convLSTM 2-m temperature forecast (paper Fig. 3 analog)\n\n",
         );
-        let (ctx, truth, pred) = &eval.example;
+        let (ctx_frame, truth, pred) = &eval.example;
         out.push_str("last context frame:\n");
-        out.push_str(&crate::weather::render_field(ctx, eval.h, eval.w));
+        out.push_str(&crate::weather::render_field(ctx_frame, eval.h, eval.w));
         out.push_str("\nground truth (last lead time):\n");
         out.push_str(&crate::weather::render_field(truth, eval.h, eval.w));
         out.push_str("\nconvLSTM forecast (last lead time):\n");
@@ -394,8 +487,7 @@ pub fn cmd_weather(args: &[String]) -> Result<i32> {
         emit("fig3_forecast", &out, Some(&t.to_csv()))?;
     }
     if do_scaling {
-        let topo = Topology::juwels_booster();
-        let pts = crate::weather::fig4(&topo, &[1, 4, 8, 16, 32, 64], 1)?;
+        let pts = crate::weather::fig4(&ctx.topo, &[1, 4, 8, 16, 32, 64], 1)?;
         let mut out = String::from(
             "convLSTM training scaling (paper Fig. 4)\n\
              total time for 10 epochs; iteration-time distribution\n\n",
@@ -428,6 +520,7 @@ pub fn cmd_weather(args: &[String]) -> Result<i32> {
 pub fn cmd_rs(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .int_flag("steps", 150, "training steps")
+        .str_flag("machine", "juwels_booster", "machine preset for the scaling table")
         .bool_flag("train", false, "run the real multilabel training")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
@@ -435,12 +528,13 @@ pub fn cmd_rs(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("rs"));
         return Ok(0);
     }
+    let ctx = ExperimentContext::for_machine(flags.get_str("machine"))?;
     let mut out = String::from("BigEarthNet-analog multilabel classification (paper §3.3)\n\n");
     if flags.get_bool("train") {
-        let engine = Engine::cpu()?;
+        let engine = ctx.engine()?;
         let mut t = Table::new(&["replicas", "global batch", "macro F1"]);
         for replicas in [1usize, 2, 4] {
-            let f1 = crate::rs::train_and_eval(&engine, replicas, flags.get_usize("steps"), 3)?;
+            let f1 = crate::rs::train_and_eval(engine, replicas, flags.get_usize("steps"), 3)?;
             t.row(&[
                 replicas.to_string(),
                 (replicas * 16).to_string(),
@@ -450,13 +544,13 @@ pub fn cmd_rs(args: &[String]) -> Result<i32> {
         out.push_str(&t.render());
         out.push_str("(paper: macro F1 stable at ~0.73 across global batch 64..4096)\n\n");
     }
-    let topo = Topology::juwels_booster();
-    let rows = crate::rs::scaling_table(&topo, &[1, 4, 16, 64], 0)?;
+    let gpn = ctx.machine().gpus_per_node;
+    let rows = crate::rs::scaling_table(&ctx.topo, &[1, 4, 16, 64], 0)?;
     let mut t = Table::new(&["nodes", "GPUs", "global batch", "s/epoch", "efficiency"]);
     for r in &rows {
         t.row(&[
             r.nodes.to_string(),
-            (r.nodes * 4).to_string(),
+            (r.nodes * gpn).to_string(),
             r.global_batch.to_string(),
             format!("{:.0}", r.epoch_seconds),
             format!("{:.0}%", 100.0 * r.efficiency),
@@ -480,12 +574,13 @@ pub fn cmd_rna(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("rna"));
         return Ok(0);
     }
-    let engine = Engine::cpu()?;
+    let ctx = ExperimentContext::for_machine("juwels_booster")?;
+    let engine = ctx.engine()?;
     let mut cfg = crate::rna::RnaCfg::default();
     cfg.steps = flags.get_usize("steps");
     cfg.n_train = flags.get_usize("train-families");
     cfg.n_test = flags.get_usize("test-families");
-    let outcome = crate::rna::run(&engine, &cfg)?;
+    let outcome = crate::rna::run(engine, &cfg)?;
     let mut out = String::from("RNA contact prediction: DCA vs CNN (paper §3.4)\n\n");
     let mut t = Table::new(&["method", "mean PPV@k"]);
     t.row(&["mean-field DCA (+APC)".into(), format!("{:.3}", outcome.dca_ppv)]);
@@ -503,6 +598,7 @@ pub fn cmd_rna(args: &[String]) -> Result<i32> {
 pub fn cmd_sched(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .int_flag("jobs", 50, "number of jobs in the trace")
+        .str_flag("machine", "juwels_booster", "machine preset for the Booster partition")
         .bool_flag("spread", false, "use spread placement instead of compact")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
@@ -516,9 +612,17 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
     } else {
         Placement::CompactCells
     };
-    let sched = Scheduler::juwels(placement);
+    let ctx = ExperimentContext::for_machine(flags.get_str("machine"))?;
+    let sched = Scheduler::for_machine(ctx.machine(), 2300, placement);
     let mut rng = crate::util::rng::Rng::seed_from(12);
     let n = flags.get_usize("jobs");
+    // Job sizes scale with the machine so small presets stay feasible.
+    // For every current preset (>= 280 nodes) these bounds reduce to the
+    // historical 1..256 / 4..128 trace; the clamps only bite on machines
+    // smaller than that, where the old constants would exceed capacity.
+    let max_nodes = ctx.machine().topo.nodes.min(256).max(2);
+    let het_lo = 4.min(max_nodes - 1);
+    let het_hi = (max_nodes / 2).max(het_lo + 1);
     let jobs: Vec<Job> = (0..n)
         .map(|i| {
             if rng.chance(0.15) {
@@ -526,7 +630,7 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
                     i,
                     rng.uniform(0.0, 3600.0),
                     rng.range(8, 256),
-                    rng.range(4, 128),
+                    rng.range(het_lo, het_hi),
                     rng.uniform(300.0, 7200.0),
                 )
             } else {
@@ -534,7 +638,7 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
                     i,
                     rng.uniform(0.0, 3600.0),
                     Partition::Booster,
-                    rng.range(1, 256),
+                    rng.range(1, max_nodes),
                     rng.uniform(300.0, 7200.0),
                 )
             }
@@ -542,7 +646,8 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
         .collect();
     let records = sched.run(&jobs)?;
     let mut out = format!(
-        "modular workload manager simulation: {n} jobs, {placement:?} placement\n\n"
+        "modular workload manager simulation on {}: {n} jobs, {placement:?} placement\n\n",
+        ctx.machine().name
     );
     let mut t = Table::new(&["metric", "value"]);
     t.row(&[
@@ -564,17 +669,17 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
     let makespan = records.iter().map(|r| r.finish).fold(0.0, f64::max);
     t.row(&["trace makespan".into(), fmt_seconds(makespan)]);
     // Price each booster job's allreduce on its actual placement. One
-    // shared CollectiveModel: nodes freed by finished jobs get re-handed
-    // to later jobs, so recurring placements are served by the pattern-
-    // level cost cache instead of fresh flow simulations (§Perf).
-    let topo = Topology::juwels_booster();
-    let model = crate::collectives::CollectiveModel::new(&topo);
+    // shared CollectiveModel from the context: nodes freed by finished
+    // jobs get re-handed to later jobs, so recurring placements are
+    // served by the pattern-level cost cache instead of fresh flow
+    // simulations (§Perf).
+    let model = ctx.collectives();
     let mut comm = Vec::new();
     for r in &records {
         if r.booster_nodes.is_empty() {
             continue;
         }
-        let gpus = crate::sched::nodes_to_gpus(&r.booster_nodes, topo.node_spec.gpus_per_node);
+        let gpus = crate::sched::nodes_to_gpus(&r.booster_nodes, ctx.machine().gpus_per_node);
         comm.push(model.allreduce_time(&gpus, 100e6, crate::collectives::Algo::Hierarchical)?);
     }
     if !comm.is_empty() {

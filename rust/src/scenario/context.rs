@@ -1,0 +1,162 @@
+//! The per-experiment object graph, built once from a [`ScenarioSpec`].
+//!
+//! Every `cmd_*` driver, the benches and the examples used to assemble
+//! their own `Topology` / `PowerModel` / `Engine` by calling hardcoded
+//! `juwels_booster()` constructors. An [`ExperimentContext`] replaces
+//! that: construct it once from a spec (or a preset machine name) and it
+//! owns the topology and power model, lazily creates the PJRT engine, and
+//! hands out collective/timeline models bound to its topology.
+//!
+//! The §Perf contract threads through here: [`ExperimentContext::timeline`]
+//! returns a [`TimelineModel`] that *owns* a [`CollectiveModel`], so a
+//! driver that keeps one timeline (or one collective model from
+//! [`ExperimentContext::collectives`]) alive across evaluations gets the
+//! pattern-level [`crate::collectives::CostCache`] for free — the sweep
+//! driver in [`super::sweep`] relies on this to price whole grids with a
+//! handful of flow simulations.
+
+use std::cell::OnceCell;
+
+use crate::collectives::CollectiveModel;
+use crate::hw::power::PowerModel;
+use crate::runtime::Engine;
+use crate::scenario::presets;
+use crate::scenario::spec::{MachineSpec, ScenarioSpec};
+use crate::topology::{GpuId, Topology};
+use crate::train::timeline::TimelineModel;
+use crate::util::error::Result;
+
+/// Everything an experiment needs, resolved from one [`ScenarioSpec`].
+pub struct ExperimentContext {
+    /// The validated scenario this context was built from.
+    pub spec: ScenarioSpec,
+    /// The machine's fabric + node hardware.
+    pub topo: Topology,
+    /// The machine's power/energy model.
+    pub power: PowerModel,
+    engine: OnceCell<Engine>,
+}
+
+impl ExperimentContext {
+    /// Build the context: validates the spec, constructs topology and
+    /// power model. The engine is created on first use.
+    pub fn new(spec: ScenarioSpec) -> Result<ExperimentContext> {
+        spec.validate()?;
+        let topo = spec.machine.build_topology()?;
+        let power = spec.machine.power_model()?;
+        Ok(ExperimentContext {
+            spec,
+            topo,
+            power,
+            engine: OnceCell::new(),
+        })
+    }
+
+    /// Context for a preset machine with the default scenario
+    /// (see [`presets::default_scenario`]).
+    pub fn for_machine(name: &str) -> Result<ExperimentContext> {
+        ExperimentContext::new(presets::default_scenario(name)?)
+    }
+
+    /// The machine spec.
+    pub fn machine(&self) -> &MachineSpec {
+        &self.spec.machine
+    }
+
+    /// A fresh collective cost model bound to this context's topology.
+    /// Keep it alive across calls to share its route table and cost cache.
+    pub fn collectives(&self) -> CollectiveModel<'_> {
+        CollectiveModel::new(&self.topo)
+    }
+
+    /// A timeline model configured from the scenario (precision, achieved
+    /// efficiency, algorithm, compression, bucket size, overlap). Owns its
+    /// collective model — reuse one instance to benefit from the cache.
+    pub fn timeline(&self) -> Result<TimelineModel<'_>> {
+        TimelineModel::from_scenario(&self.spec, &self.topo)
+    }
+
+    /// The job's GPUs under the scenario's node count and placement.
+    pub fn job_gpus(&self) -> Result<Vec<GpuId>> {
+        self.spec.job_gpus(&self.topo)
+    }
+
+    /// The PJRT engine (CPU client), created on first call and shared.
+    pub fn engine(&self) -> Result<&Engine> {
+        if self.engine.get().is_none() {
+            let e = Engine::cpu()?;
+            // A second set() can only happen on re-entrancy, which the
+            // single-threaded OnceCell forbids; ignore the duplicate.
+            let _ = self.engine.set(e);
+        }
+        Ok(self.engine.get().expect("just initialized"))
+    }
+}
+
+impl std::fmt::Debug for ExperimentContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExperimentContext")
+            .field("scenario", &self.spec.name)
+            .field("machine", &self.spec.machine.name)
+            .field("nodes", &self.spec.parallelism.nodes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::ScenarioSpec;
+
+    #[test]
+    fn context_builds_for_every_preset() {
+        for name in presets::machine_names() {
+            let ctx =
+                ExperimentContext::for_machine(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(ctx.topo.params.nodes, ctx.machine().topo.nodes);
+            assert_eq!(ctx.power.nodes, ctx.machine().topo.nodes);
+            let gpus = ctx.job_gpus().unwrap();
+            assert_eq!(gpus.len(), ctx.spec.parallelism.nodes * ctx.machine().gpus_per_node);
+        }
+    }
+
+    #[test]
+    fn timeline_is_configured_from_the_spec() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(8)
+            .precision("bf16")
+            .algo("ring")
+            .compression("fp16")
+            .bucket_bytes(16e6)
+            .build()
+            .unwrap();
+        let ctx = ExperimentContext::new(spec).unwrap();
+        let tl = ctx.timeline().unwrap();
+        assert_eq!(tl.precision, crate::hw::precision::Precision::Bf16Tc);
+        assert_eq!(tl.algo, crate::collectives::Algo::Ring);
+        assert_eq!(tl.compression, crate::collectives::Compression::Fp16);
+        assert_eq!(tl.bucket_bytes, 16e6);
+    }
+
+    #[test]
+    fn shared_timeline_hits_the_cost_cache() {
+        let ctx = ExperimentContext::for_machine("selene").unwrap();
+        let tl = ctx.timeline().unwrap();
+        let gpus = ctx.job_gpus().unwrap();
+        let grads = ctx.spec.workload.grad_tensor_bytes();
+        let mut rng = crate::util::rng::Rng::seed_from(0);
+        let flops = ctx.spec.workload.flops_per_gpu_step();
+        let a = tl.step_time(&gpus, flops, &grads, &mut rng).unwrap();
+        let b = tl.step_time(&gpus, flops, &grads, &mut rng).unwrap();
+        assert_eq!(a.comm, b.comm, "fluid comm cost is deterministic");
+        let (hits, _) = tl.collectives.cache_stats();
+        assert!(hits >= 1, "second evaluation must be served by the cache");
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_at_construction() {
+        let mut spec = presets::default_scenario("juwels_booster").unwrap();
+        spec.parallelism.nodes = 100_000;
+        assert!(ExperimentContext::new(spec).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Unified scenario API — the single way experiments are configured.
+//!
+//! The paper's lasting value is its *system description*; this module
+//! turns that description into data. It has four parts:
+//!
+//! * [`spec`] — typed, JSON-round-trippable [`MachineSpec`] (node +
+//!   topology + power) and [`ScenarioSpec`] (machine + workload +
+//!   parallelism + precision) with a builder and validation;
+//! * [`presets`] — the machine/workload registry (`juwels_booster`,
+//!   `selene`, `leonardo`, `isambard_ai`), the single source of truth the
+//!   old hardcoded `*::juwels_booster()` constructors now delegate to;
+//! * [`context`] — [`ExperimentContext`], the object graph (topology,
+//!   power model, lazy engine, cached collective/timeline models) every
+//!   `cmd_*` driver and bench consumes;
+//! * [`sweep`] — runexp-style `--param a=1,2` grid expansion and the
+//!   shared-cache evaluation behind `booster sweep`.
+//!
+//! See `rust/src/scenario/README.md` for the spec schema, the preset
+//! numbers with paper citations, and how the context threads the §Perf
+//! [`crate::collectives::CostCache`] through a sweep.
+
+pub mod context;
+pub mod presets;
+pub mod spec;
+pub mod sweep;
+
+pub use context::ExperimentContext;
+pub use spec::{GpuPlacement, MachineSpec, ParallelismSpec, ScenarioSpec, TopoSpec, WorkloadSpec};

@@ -1,0 +1,270 @@
+//! Preset registry: the machines and workloads the crate knows out of the
+//! box, parameterized from the papers in PAPERS.md.
+//!
+//! This is the **single source of truth** for machine numbers — the
+//! `juwels_booster()` / `selene()` convenience constructors on
+//! [`crate::topology::TopoParams`], [`crate::hw::node::NodeSpec`] and
+//! [`crate::hw::power::PowerModel`] all delegate here, and `report/`,
+//! benches and examples go through [`machine`] / [`workload`] /
+//! [`default_scenario`] instead of hardcoding specs.
+//!
+//! Sources (see `scenario/README.md` for the full derivation):
+//! * `juwels_booster` — the source paper (arXiv 2108.11976, §2.2).
+//! * `selene` — the paper's §2.4 MLPerf comparison machine.
+//! * `leonardo` — LEONARDO's Booster module (arXiv 2307.16885).
+//! * `isambard_ai` — Isambard-AI phase 2 (arXiv 2410.11199).
+
+use crate::scenario::spec::{MachineSpec, ScenarioSpec, TopoSpec, WorkloadSpec};
+use crate::util::error::{BoosterError, Result};
+
+/// Names of every machine preset, in registry order.
+pub fn machine_names() -> Vec<&'static str> {
+    vec!["juwels_booster", "selene", "leonardo", "isambard_ai"]
+}
+
+/// Look up a machine preset by name.
+pub fn machine(name: &str) -> Result<MachineSpec> {
+    let m = match name {
+        // JUWELS Booster (arXiv 2108.11976 §2.2): 936 nodes x 4 A100-40GB,
+        // 4x HDR200 NICs, 2x 24-core EPYC 7402, 512 GiB; DragonFly+ with
+        // 20 cells of 48 (last short), 10 global links per cell pair
+        // => 400 Tbit/s bisection; Green500 Nov-2020 overhead ~8%.
+        "juwels_booster" => MachineSpec {
+            name: "juwels_booster".into(),
+            gpu: "a100-40gb".into(),
+            gpus_per_node: 4,
+            nics_per_node: 4,
+            nic_bw: 200e9 / 8.0,
+            cpu_cores: 48,
+            ram_bytes: 512 * (1u64 << 30),
+            host_watts: 450.0,
+            power_overhead: 0.08,
+            topo: TopoSpec {
+                kind: "dragonfly+".into(),
+                nodes: 936,
+                nodes_per_cell: 48,
+                leaves_per_cell: 8,
+                spines_per_cell: 8,
+                global_links_per_pair: 10,
+                global_link_bw: 200e9 / 8.0,
+                hop_latency: 600e-9,
+                nvlink_latency: 300e-9,
+            },
+        },
+        // NVIDIA Selene (paper §2.4): 280 DGX-A100 (8 GPUs, 8 HDR NICs,
+        // 2x 64-core EPYC 7742, 1 TiB) on a non-blocking fat tree.
+        "selene" => MachineSpec {
+            name: "selene".into(),
+            gpu: "a100-40gb".into(),
+            gpus_per_node: 8,
+            nics_per_node: 8,
+            nic_bw: 200e9 / 8.0,
+            cpu_cores: 128,
+            ram_bytes: 1024 * (1u64 << 30),
+            host_watts: 700.0,
+            power_overhead: 0.08,
+            topo: TopoSpec {
+                kind: "fat-tree".into(),
+                nodes: 280,
+                nodes_per_cell: 280,
+                leaves_per_cell: 20,
+                spines_per_cell: 20,
+                global_links_per_pair: 0,
+                global_link_bw: 200e9 / 8.0,
+                hop_latency: 600e-9,
+                nvlink_latency: 300e-9,
+            },
+        },
+        // LEONARDO Booster module (arXiv 2307.16885): 3456 nodes x 4
+        // custom A100-64GB, one 32-core Xeon 8358, 512 GB; NVIDIA HDR
+        // InfiniBand in a DragonFly+ (cell structure approximated as 18
+        // cells of 192 — the paper gives the family, not per-cell counts).
+        // Injection: 2x dual-port HDR100 = 4x 100 Gbit/s.
+        "leonardo" => MachineSpec {
+            name: "leonardo".into(),
+            gpu: "a100-64gb".into(),
+            gpus_per_node: 4,
+            nics_per_node: 4,
+            nic_bw: 100e9 / 8.0,
+            cpu_cores: 32,
+            ram_bytes: 512 * (1u64 << 30),
+            host_watts: 400.0,
+            power_overhead: 0.08,
+            topo: TopoSpec {
+                kind: "dragonfly+".into(),
+                nodes: 3456,
+                nodes_per_cell: 192,
+                leaves_per_cell: 16,
+                spines_per_cell: 16,
+                global_links_per_pair: 18,
+                global_link_bw: 200e9 / 8.0,
+                hop_latency: 600e-9,
+                nvlink_latency: 300e-9,
+            },
+        },
+        // Isambard-AI phase 2 (arXiv 2410.11199): 1362 nodes x 4 GH200
+        // (5448 GPUs), 4x 200 Gbit/s Slingshot-11 endpoints per node,
+        // 4x 72 Grace cores, 4x 120 GB LPDDR5X host memory; Slingshot
+        // dragonfly modeled in the DragonFly+ family (11 cells of 128,
+        // last short — group sizes approximated).
+        "isambard_ai" => MachineSpec {
+            name: "isambard_ai".into(),
+            gpu: "gh200-96gb".into(),
+            gpus_per_node: 4,
+            nics_per_node: 4,
+            nic_bw: 200e9 / 8.0,
+            cpu_cores: 288,
+            ram_bytes: 480 * (1u64 << 30),
+            host_watts: 500.0,
+            power_overhead: 0.08,
+            topo: TopoSpec {
+                kind: "dragonfly+".into(),
+                nodes: 1362,
+                nodes_per_cell: 128,
+                leaves_per_cell: 16,
+                spines_per_cell: 16,
+                global_links_per_pair: 16,
+                global_link_bw: 200e9 / 8.0,
+                hop_latency: 400e-9,
+                nvlink_latency: 300e-9,
+            },
+        },
+        _ => {
+            return Err(BoosterError::Config(format!(
+                "unknown machine preset '{name}' (known: {})",
+                machine_names().join(", ")
+            )))
+        }
+    };
+    Ok(m)
+}
+
+/// Names of every workload preset, in registry order.
+pub fn workload_names() -> Vec<&'static str> {
+    vec!["resnet50", "transformer", "bert", "convlstm"]
+}
+
+/// Look up a workload preset by name. Profiles mirror the MLPerf v0.7
+/// reference models in [`crate::mlperf::tasks`] plus the paper's §3.2
+/// convLSTM forecaster.
+pub fn workload(name: &str) -> Result<WorkloadSpec> {
+    let w = match name {
+        "resnet50" => WorkloadSpec {
+            name: "resnet50".into(),
+            fwd_flops_per_sample: 4.1e9,
+            params: 25.6e6,
+            batch_per_gpu: 208,
+            efficiency: 0.10,
+        },
+        "transformer" => WorkloadSpec {
+            name: "transformer".into(),
+            fwd_flops_per_sample: 0.42e9,
+            params: 210.0e6,
+            batch_per_gpu: 5120,
+            efficiency: 0.25,
+        },
+        "bert" => WorkloadSpec {
+            name: "bert".into(),
+            fwd_flops_per_sample: 343.0e9,
+            params: 335.0e6,
+            batch_per_gpu: 24,
+            efficiency: 0.12,
+        },
+        "convlstm" => WorkloadSpec {
+            name: "convlstm".into(),
+            fwd_flops_per_sample: 12.0e9,
+            params: 4.5e6,
+            batch_per_gpu: 16,
+            efficiency: 0.08,
+        },
+        _ => {
+            return Err(BoosterError::Config(format!(
+                "unknown workload preset '{name}' (known: {})",
+                workload_names().join(", ")
+            )))
+        }
+    };
+    Ok(w)
+}
+
+/// The workload a builder falls back to when none is given.
+pub fn default_workload() -> WorkloadSpec {
+    workload("bert").expect("bert preset exists")
+}
+
+/// A ready-to-run scenario on a preset machine: default workload,
+/// `min(16, nodes)` nodes, hierarchical allreduce, FP16_TC.
+pub fn default_scenario(machine_name: &str) -> Result<ScenarioSpec> {
+    let m = machine(machine_name)?;
+    let nodes = m.topo.nodes.min(16);
+    ScenarioSpec::builder(m).nodes(nodes).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_all_machines() {
+        let names = machine_names();
+        assert_eq!(names, vec!["juwels_booster", "selene", "leonardo", "isambard_ai"]);
+        for name in names {
+            let m = machine(name).unwrap();
+            assert_eq!(m.name, name);
+            m.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            // Every preset resolves into runtime objects.
+            m.node_spec().unwrap();
+            m.topo_params().unwrap();
+            m.power_model().unwrap();
+        }
+        assert!(machine("summit").is_err());
+    }
+
+    #[test]
+    fn preset_scale_matches_papers() {
+        assert_eq!(machine("juwels_booster").unwrap().total_gpus(), 3744);
+        assert_eq!(machine("selene").unwrap().total_gpus(), 2240);
+        assert_eq!(machine("leonardo").unwrap().total_gpus(), 13824);
+        assert_eq!(machine("isambard_ai").unwrap().total_gpus(), 5448);
+    }
+
+    #[test]
+    fn every_preset_builds_a_topology() {
+        for name in machine_names() {
+            let m = machine(name).unwrap();
+            let topo = m.build_topology().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(topo.total_gpus(), m.total_gpus());
+            assert!(topo.bisection_bw_bits() > 0.0, "{name} has no bisection");
+        }
+    }
+
+    #[test]
+    fn workload_registry_resolves() {
+        for name in workload_names() {
+            let w = workload(name).unwrap();
+            assert_eq!(w.name, name);
+            assert!(w.flops_per_gpu_step() > 0.0);
+        }
+        assert!(workload("dlrm").is_err());
+    }
+
+    #[test]
+    fn default_scenarios_validate_everywhere() {
+        for name in machine_names() {
+            let s = default_scenario(name).unwrap();
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(s.parallelism.nodes <= 16);
+        }
+    }
+
+    #[test]
+    fn sibling_machines_outscale_the_booster() {
+        // The registry's reason to exist: LEONARDO and Isambard-AI are one
+        // preset away and larger than JUWELS Booster.
+        let jb = machine("juwels_booster").unwrap();
+        for sibling in ["leonardo", "isambard_ai"] {
+            let m = machine(sibling).unwrap();
+            assert!(m.total_gpus() > jb.total_gpus(), "{sibling}");
+        }
+    }
+}

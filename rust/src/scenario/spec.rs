@@ -1,0 +1,715 @@
+//! Typed, JSON-round-trippable machine and workload specifications.
+//!
+//! A [`MachineSpec`] is the *data* form of a machine: node composition,
+//! fabric parameters and power overhead. It resolves into the crate's
+//! runtime objects (`NodeSpec`, `TopoParams`, `Topology`, `PowerModel`)
+//! through validated conversion methods, and serializes losslessly through
+//! [`crate::util::json`] so machines can be defined in files, diffed and
+//! hashed. All quantities use the crate's internal units: bytes, bytes/s,
+//! seconds, watts (the README in this directory tabulates them).
+//!
+//! A [`ScenarioSpec`] adds the workload (model profile), parallelism
+//! (nodes, placement, collective algorithm, wire format) and precision —
+//! everything an experiment needs. Build one with [`ScenarioSpec::builder`]
+//! which validates consistency before handing the spec out.
+
+use crate::collectives::{Algo, Compression};
+use crate::hw::gpu::GpuSpec;
+use crate::hw::node::NodeSpec;
+use crate::hw::power::PowerModel;
+use crate::hw::precision::Precision;
+use crate::topology::{TopoKind, TopoParams, Topology};
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+
+fn cfg(msg: String) -> BoosterError {
+    BoosterError::Config(msg)
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| cfg(format!("field '{key}' must be a number")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| cfg(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| cfg(format!("field '{key}' must be a string")))?
+        .to_string())
+}
+
+/// Fabric parameters of a machine, in spec (data) form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopoSpec {
+    /// Topology family key: `"dragonfly+"` or `"fat-tree"`.
+    pub kind: String,
+    /// Total compute nodes.
+    pub nodes: usize,
+    /// Nodes per cell (fat tree: one big cell).
+    pub nodes_per_cell: usize,
+    /// Leaf switches per cell.
+    pub leaves_per_cell: usize,
+    /// Spine switches per cell.
+    pub spines_per_cell: usize,
+    /// Global links between every pair of cells (DragonFly+ only).
+    pub global_links_per_pair: usize,
+    /// Per-global-link bandwidth, bytes/s.
+    pub global_link_bw: f64,
+    /// Per-hop switch latency, seconds.
+    pub hop_latency: f64,
+    /// NVLink hop latency, seconds.
+    pub nvlink_latency: f64,
+}
+
+impl TopoSpec {
+    /// Resolve into the topology builder's parameter struct.
+    pub fn to_params(&self) -> Result<TopoParams> {
+        Ok(TopoParams {
+            kind: TopoKind::parse(&self.kind)?,
+            nodes: self.nodes,
+            nodes_per_cell: self.nodes_per_cell,
+            leaves_per_cell: self.leaves_per_cell,
+            spines_per_cell: self.spines_per_cell,
+            global_links_per_pair: self.global_links_per_pair,
+            global_link_bw: self.global_link_bw,
+            hop_latency: self.hop_latency,
+            nvlink_latency: self.nvlink_latency,
+        })
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("nodes_per_cell", Json::Num(self.nodes_per_cell as f64)),
+            ("leaves_per_cell", Json::Num(self.leaves_per_cell as f64)),
+            ("spines_per_cell", Json::Num(self.spines_per_cell as f64)),
+            (
+                "global_links_per_pair",
+                Json::Num(self.global_links_per_pair as f64),
+            ),
+            ("global_link_bw", Json::Num(self.global_link_bw)),
+            ("hop_latency", Json::Num(self.hop_latency)),
+            ("nvlink_latency", Json::Num(self.nvlink_latency)),
+        ])
+    }
+
+    /// Deserialize.
+    pub fn from_json(j: &Json) -> Result<TopoSpec> {
+        Ok(TopoSpec {
+            kind: req_str(j, "kind")?,
+            nodes: req_usize(j, "nodes")?,
+            nodes_per_cell: req_usize(j, "nodes_per_cell")?,
+            leaves_per_cell: req_usize(j, "leaves_per_cell")?,
+            spines_per_cell: req_usize(j, "spines_per_cell")?,
+            global_links_per_pair: req_usize(j, "global_links_per_pair")?,
+            global_link_bw: req_f64(j, "global_link_bw")?,
+            hop_latency: req_f64(j, "hop_latency")?,
+            nvlink_latency: req_f64(j, "nvlink_latency")?,
+        })
+    }
+}
+
+/// Data form of a machine: node composition + fabric + power overhead.
+///
+/// The preset registry ([`crate::scenario::presets`]) holds one of these
+/// per known machine; every `*::juwels_booster()` convenience constructor
+/// in `hw/` and `topology/` now resolves through it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    /// Machine name (registry key for presets).
+    pub name: String,
+    /// GPU model key, resolved via [`GpuSpec::by_name`].
+    pub gpu: String,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// Fabric adapters per node.
+    pub nics_per_node: usize,
+    /// Per-NIC bandwidth, bytes/s per direction.
+    pub nic_bw: f64,
+    /// Host CPU cores (physical).
+    pub cpu_cores: usize,
+    /// Host RAM bytes.
+    pub ram_bytes: u64,
+    /// Host-side base power in watts (CPUs, DRAM, fans).
+    pub host_watts: f64,
+    /// Fractional machine-level overhead for fabric/storage/PSU losses.
+    pub power_overhead: f64,
+    /// Fabric parameters.
+    pub topo: TopoSpec,
+}
+
+impl MachineSpec {
+    /// Check internal consistency; every resolver below calls this first.
+    pub fn validate(&self) -> Result<()> {
+        let fail = |m: String| Err(cfg(format!("machine '{}': {m}", self.name)));
+        if self.name.is_empty() {
+            return Err(cfg("machine name must not be empty".into()));
+        }
+        if GpuSpec::by_name(&self.gpu).is_none() {
+            return fail(format!(
+                "unknown gpu '{}' (known: {})",
+                self.gpu,
+                GpuSpec::REGISTRY.join(", ")
+            ));
+        }
+        if self.gpus_per_node == 0 {
+            return fail("gpus_per_node must be > 0".into());
+        }
+        if self.nics_per_node == 0 || self.nic_bw <= 0.0 {
+            return fail("needs at least one NIC with positive bandwidth".into());
+        }
+        if !(0.0..1.0).contains(&self.power_overhead) {
+            return fail(format!("power_overhead {} outside [0,1)", self.power_overhead));
+        }
+        if self.host_watts < 0.0 {
+            return fail("host_watts must be non-negative".into());
+        }
+        let t = &self.topo;
+        let kind = TopoKind::parse(&t.kind)?;
+        if t.nodes == 0 {
+            return fail("topology with zero nodes".into());
+        }
+        if t.nodes_per_cell == 0 || t.leaves_per_cell == 0 || t.spines_per_cell == 0 {
+            return fail("cells need nodes, leaves and spines".into());
+        }
+        if t.nodes_per_cell % t.leaves_per_cell != 0 {
+            return fail(format!(
+                "nodes_per_cell {} not divisible by leaves_per_cell {}",
+                t.nodes_per_cell, t.leaves_per_cell
+            ));
+        }
+        let cells = t.nodes.div_ceil(t.nodes_per_cell);
+        if kind == TopoKind::DragonFlyPlus && cells > 1 {
+            if t.global_links_per_pair == 0 {
+                return fail("dragonfly+ with >1 cell needs global links".into());
+            }
+            if t.global_link_bw <= 0.0 {
+                return fail("global_link_bw must be positive".into());
+            }
+        }
+        if t.hop_latency < 0.0 || t.nvlink_latency < 0.0 {
+            return fail("latencies must be non-negative".into());
+        }
+        Ok(())
+    }
+
+    /// The GPU model installed in this machine.
+    pub fn gpu_spec(&self) -> Result<GpuSpec> {
+        self.validate()?;
+        Ok(GpuSpec::by_name(&self.gpu).expect("validated"))
+    }
+
+    /// Resolve the node hardware description.
+    pub fn node_spec(&self) -> Result<NodeSpec> {
+        Ok(NodeSpec {
+            name: format!("{} node", self.name),
+            gpu: self.gpu_spec()?,
+            gpus_per_node: self.gpus_per_node,
+            nics_per_node: self.nics_per_node,
+            nic_bw: self.nic_bw,
+            cpu_cores: self.cpu_cores,
+            ram_bytes: self.ram_bytes,
+            host_watts: self.host_watts,
+        })
+    }
+
+    /// Resolve the fabric parameters.
+    pub fn topo_params(&self) -> Result<TopoParams> {
+        self.validate()?;
+        self.topo.to_params()
+    }
+
+    /// Build the full topology (vertices, links, routing tables).
+    pub fn build_topology(&self) -> Result<Topology> {
+        Topology::build(self.topo_params()?, self.node_spec()?)
+    }
+
+    /// Resolve the machine-level power model.
+    pub fn power_model(&self) -> Result<PowerModel> {
+        Ok(PowerModel {
+            node: self.node_spec()?,
+            nodes: self.topo.nodes,
+            overhead: self.power_overhead,
+        })
+    }
+
+    /// Total GPUs in the machine.
+    pub fn total_gpus(&self) -> usize {
+        self.topo.nodes * self.gpus_per_node
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("gpu", Json::Str(self.gpu.clone())),
+            ("gpus_per_node", Json::Num(self.gpus_per_node as f64)),
+            ("nics_per_node", Json::Num(self.nics_per_node as f64)),
+            ("nic_bw", Json::Num(self.nic_bw)),
+            ("cpu_cores", Json::Num(self.cpu_cores as f64)),
+            ("ram_bytes", Json::Num(self.ram_bytes as f64)),
+            ("host_watts", Json::Num(self.host_watts)),
+            ("power_overhead", Json::Num(self.power_overhead)),
+            ("topo", self.topo.to_json()),
+        ])
+    }
+
+    /// Deserialize (does not validate — call [`MachineSpec::validate`]).
+    pub fn from_json(j: &Json) -> Result<MachineSpec> {
+        Ok(MachineSpec {
+            name: req_str(j, "name")?,
+            gpu: req_str(j, "gpu")?,
+            gpus_per_node: req_usize(j, "gpus_per_node")?,
+            nics_per_node: req_usize(j, "nics_per_node")?,
+            nic_bw: req_f64(j, "nic_bw")?,
+            cpu_cores: req_usize(j, "cpu_cores")?,
+            ram_bytes: req_f64(j, "ram_bytes")? as u64,
+            host_watts: req_f64(j, "host_watts")?,
+            power_overhead: req_f64(j, "power_overhead")?,
+            topo: TopoSpec::from_json(j.req("topo")?)?,
+        })
+    }
+}
+
+/// Model/workload profile: what one data-parallel replica computes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload name (registry key for presets).
+    pub name: String,
+    /// Forward FLOPs per sample; a training step costs `3x` (fwd + bwd).
+    pub fwd_flops_per_sample: f64,
+    /// Parameter count (gradient volume = 4 B/param before compression).
+    pub params: f64,
+    /// Per-GPU batch, samples per step per GPU (weak scaling).
+    pub batch_per_gpu: usize,
+    /// Achieved fraction of the precision's peak FLOP/s.
+    pub efficiency: f64,
+}
+
+impl WorkloadSpec {
+    /// Per-GPU fwd+bwd FLOPs of one step.
+    pub fn flops_per_gpu_step(&self) -> f64 {
+        3.0 * self.fwd_flops_per_sample * self.batch_per_gpu as f64
+    }
+
+    /// Gradient tensor bytes (single fused FP32 tensor).
+    pub fn grad_tensor_bytes(&self) -> Vec<f64> {
+        vec![self.params * 4.0]
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("fwd_flops_per_sample", Json::Num(self.fwd_flops_per_sample)),
+            ("params", Json::Num(self.params)),
+            ("batch_per_gpu", Json::Num(self.batch_per_gpu as f64)),
+            ("efficiency", Json::Num(self.efficiency)),
+        ])
+    }
+
+    /// Deserialize.
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        Ok(WorkloadSpec {
+            name: req_str(j, "name")?,
+            fwd_flops_per_sample: req_f64(j, "fwd_flops_per_sample")?,
+            params: req_f64(j, "params")?,
+            batch_per_gpu: req_usize(j, "batch_per_gpu")?,
+            efficiency: req_f64(j, "efficiency")?,
+        })
+    }
+}
+
+/// How the workload is spread over the machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelismSpec {
+    /// Nodes the job occupies (GPUs = nodes x machine.gpus_per_node).
+    pub nodes: usize,
+    /// Placement policy key: `"compact"` or `"spread"`.
+    pub placement: String,
+    /// Collective algorithm key (see [`Algo::parse`]).
+    pub algo: String,
+    /// Wire compression key (see [`Compression::parse`]).
+    pub compression: String,
+    /// Horovod-style fusion-buffer size in bytes.
+    pub bucket_bytes: f64,
+    /// Fraction of the allreduce overlapped with backprop.
+    pub overlap: f64,
+}
+
+impl ParallelismSpec {
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("placement", Json::Str(self.placement.clone())),
+            ("algo", Json::Str(self.algo.clone())),
+            ("compression", Json::Str(self.compression.clone())),
+            ("bucket_bytes", Json::Num(self.bucket_bytes)),
+            ("overlap", Json::Num(self.overlap)),
+        ])
+    }
+
+    /// Deserialize.
+    pub fn from_json(j: &Json) -> Result<ParallelismSpec> {
+        Ok(ParallelismSpec {
+            nodes: req_usize(j, "nodes")?,
+            placement: req_str(j, "placement")?,
+            algo: req_str(j, "algo")?,
+            compression: req_str(j, "compression")?,
+            bucket_bytes: req_f64(j, "bucket_bytes")?,
+            overlap: req_f64(j, "overlap")?,
+        })
+    }
+}
+
+/// GPU placement policy (resolved form of [`ParallelismSpec::placement`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuPlacement {
+    /// First nodes in order — cells fill one at a time.
+    Compact,
+    /// Round-robin across cells (scheduling-ablation worst case).
+    Spread,
+}
+
+impl GpuPlacement {
+    /// Parse a placement key.
+    pub fn parse(s: &str) -> Result<GpuPlacement> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "compact" | "compact-cells" => Ok(GpuPlacement::Compact),
+            "spread" => Ok(GpuPlacement::Spread),
+            _ => Err(cfg(format!(
+                "unknown placement '{s}' (expected compact or spread)"
+            ))),
+        }
+    }
+}
+
+/// A full experiment configuration: machine + workload + parallelism +
+/// precision. The single input to [`crate::scenario::ExperimentContext`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario name (used in report/CSV rows).
+    pub name: String,
+    /// The machine.
+    pub machine: MachineSpec,
+    /// The workload.
+    pub workload: WorkloadSpec,
+    /// Job shape.
+    pub parallelism: ParallelismSpec,
+    /// Training math precision key (see [`Precision::parse`]).
+    pub precision: String,
+}
+
+impl ScenarioSpec {
+    /// Start building a scenario on a machine.
+    pub fn builder(machine: MachineSpec) -> ScenarioBuilder {
+        ScenarioBuilder {
+            name: None,
+            machine,
+            workload: None,
+            nodes: 2,
+            placement: "compact".into(),
+            algo: "hierarchical".into(),
+            compression: "none".into(),
+            bucket_bytes: 64e6,
+            overlap: 0.7,
+            precision: "fp16_tc".into(),
+        }
+    }
+
+    /// Check the whole spec for consistency.
+    pub fn validate(&self) -> Result<()> {
+        self.machine.validate()?;
+        let fail = |m: String| Err(cfg(format!("scenario '{}': {m}", self.name)));
+        let w = &self.workload;
+        if w.fwd_flops_per_sample <= 0.0 || !w.fwd_flops_per_sample.is_finite() {
+            return fail("workload flops per sample must be positive".into());
+        }
+        if w.params < 0.0 || !w.params.is_finite() {
+            return fail("workload params must be non-negative".into());
+        }
+        if w.batch_per_gpu == 0 {
+            return fail("batch_per_gpu must be > 0".into());
+        }
+        if !(w.efficiency > 0.0 && w.efficiency <= 1.0) {
+            return fail(format!("efficiency {} outside (0,1]", w.efficiency));
+        }
+        let p = &self.parallelism;
+        if p.nodes == 0 {
+            return fail("parallelism.nodes must be > 0".into());
+        }
+        if p.nodes > self.machine.topo.nodes {
+            return fail(format!(
+                "parallelism.nodes {} exceeds machine '{}' ({} nodes)",
+                p.nodes, self.machine.name, self.machine.topo.nodes
+            ));
+        }
+        GpuPlacement::parse(&p.placement)?;
+        Algo::parse(&p.algo)?;
+        Compression::parse(&p.compression)?;
+        if p.bucket_bytes <= 0.0 || !p.bucket_bytes.is_finite() {
+            return fail("bucket_bytes must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&p.overlap) {
+            return fail(format!("overlap {} outside [0,1]", p.overlap));
+        }
+        Precision::parse(&self.precision)?;
+        Ok(())
+    }
+
+    /// GPUs of the job on this machine (`parallelism.nodes` nodes under
+    /// the spec's placement policy).
+    pub fn job_gpus(&self, topo: &Topology) -> Result<Vec<crate::topology::GpuId>> {
+        let n = self.parallelism.nodes * self.machine.gpus_per_node;
+        if n > topo.total_gpus() {
+            return Err(cfg(format!(
+                "scenario '{}' wants {n} GPUs but machine has {}",
+                self.name,
+                topo.total_gpus()
+            )));
+        }
+        Ok(match GpuPlacement::parse(&self.parallelism.placement)? {
+            GpuPlacement::Compact => topo.first_gpus(n),
+            GpuPlacement::Spread => topo.spread_gpus(n),
+        })
+    }
+
+    /// Resolved precision.
+    pub fn precision(&self) -> Result<Precision> {
+        Precision::parse(&self.precision)
+    }
+
+    /// Resolved collective algorithm.
+    pub fn algo(&self) -> Result<Algo> {
+        Algo::parse(&self.parallelism.algo)
+    }
+
+    /// Resolved wire compression.
+    pub fn compression(&self) -> Result<Compression> {
+        Compression::parse(&self.parallelism.compression)
+    }
+
+    /// Serialize the full scenario.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("machine", self.machine.to_json()),
+            ("workload", self.workload.to_json()),
+            ("parallelism", self.parallelism.to_json()),
+            ("precision", Json::Str(self.precision.clone())),
+        ])
+    }
+
+    /// Deserialize and validate.
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let s = ScenarioSpec {
+            name: req_str(j, "name")?,
+            machine: MachineSpec::from_json(j.req("machine")?)?,
+            workload: WorkloadSpec::from_json(j.req("workload")?)?,
+            parallelism: ParallelismSpec::from_json(j.req("parallelism")?)?,
+            precision: req_str(j, "precision")?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+/// Builder for [`ScenarioSpec`] — see [`ScenarioSpec::builder`].
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    name: Option<String>,
+    machine: MachineSpec,
+    workload: Option<WorkloadSpec>,
+    nodes: usize,
+    placement: String,
+    algo: String,
+    compression: String,
+    bucket_bytes: f64,
+    overlap: f64,
+    precision: String,
+}
+
+impl ScenarioBuilder {
+    /// Scenario name (defaults to `machine/workload/nN/precision`).
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Workload profile.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = Some(w);
+        self
+    }
+
+    /// Job size in nodes.
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    /// Placement policy key.
+    pub fn placement(mut self, p: &str) -> Self {
+        self.placement = p.to_string();
+        self
+    }
+
+    /// Collective algorithm key.
+    pub fn algo(mut self, a: &str) -> Self {
+        self.algo = a.to_string();
+        self
+    }
+
+    /// Wire compression key.
+    pub fn compression(mut self, c: &str) -> Self {
+        self.compression = c.to_string();
+        self
+    }
+
+    /// Fusion-buffer size in bytes.
+    pub fn bucket_bytes(mut self, b: f64) -> Self {
+        self.bucket_bytes = b;
+        self
+    }
+
+    /// Comm/compute overlap fraction.
+    pub fn overlap(mut self, o: f64) -> Self {
+        self.overlap = o;
+        self
+    }
+
+    /// Precision key.
+    pub fn precision(mut self, p: &str) -> Self {
+        self.precision = p.to_string();
+        self
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> Result<ScenarioSpec> {
+        let workload = self
+            .workload
+            .unwrap_or_else(crate::scenario::presets::default_workload);
+        let name = self.name.unwrap_or_else(|| {
+            format!(
+                "{}/{}/n{}/{}",
+                self.machine.name, workload.name, self.nodes, self.precision
+            )
+        });
+        let spec = ScenarioSpec {
+            name,
+            machine: self.machine,
+            workload,
+            parallelism: ParallelismSpec {
+                nodes: self.nodes,
+                placement: self.placement,
+                algo: self.algo,
+                compression: self.compression,
+                bucket_bytes: self.bucket_bytes,
+                overlap: self.overlap,
+            },
+            precision: self.precision,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    #[test]
+    fn machine_spec_json_roundtrip() {
+        for name in presets::machine_names() {
+            let m = presets::machine(name).unwrap();
+            let j = m.to_json().to_pretty();
+            let back = MachineSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(m, back, "{name} did not round-trip");
+            back.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn scenario_spec_json_roundtrip() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(12)
+            .precision("bf16")
+            .algo("ring")
+            .build()
+            .unwrap();
+        let j = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_specs() {
+        let mut m = presets::machine("juwels_booster").unwrap();
+        m.gpus_per_node = 0;
+        assert!(ScenarioSpec::builder(m).build().is_err(), "gpus_per_node=0");
+
+        let m = presets::machine("juwels_booster").unwrap();
+        assert!(ScenarioSpec::builder(m.clone()).nodes(0).build().is_err(), "zero nodes");
+        assert!(
+            ScenarioSpec::builder(m.clone()).nodes(10_000).build().is_err(),
+            "more nodes than the machine has"
+        );
+        let bad_precision = ScenarioSpec::builder(m.clone()).precision("int4").build();
+        assert!(bad_precision.is_err(), "bad precision");
+        assert!(ScenarioSpec::builder(m.clone()).algo("nccl").build().is_err(), "bad algo");
+        assert!(ScenarioSpec::builder(m).bucket_bytes(0.0).build().is_err(), "zero bucket");
+    }
+
+    #[test]
+    fn machine_validation_catches_bad_fabric() {
+        let mut m = presets::machine("juwels_booster").unwrap();
+        m.topo.leaves_per_cell = 7; // 48 % 7 != 0
+        assert!(m.validate().is_err());
+
+        let mut m = presets::machine("juwels_booster").unwrap();
+        m.gpu = "tpu-v4".into();
+        assert!(m.validate().is_err());
+
+        let mut m = presets::machine("juwels_booster").unwrap();
+        m.topo.global_links_per_pair = 0;
+        assert!(m.validate().is_err(), "multi-cell dragonfly needs links");
+    }
+
+    #[test]
+    fn default_scenario_name_is_descriptive() {
+        let spec = ScenarioSpec::builder(presets::machine("selene").unwrap())
+            .nodes(4)
+            .build()
+            .unwrap();
+        assert!(spec.name.contains("selene"), "{}", spec.name);
+        assert!(spec.name.contains("n4"), "{}", spec.name);
+    }
+
+    #[test]
+    fn job_gpus_respects_placement() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let compact = spec.job_gpus(&topo).unwrap();
+        assert_eq!(compact.len(), 16);
+        assert!(compact.iter().all(|g| g.node < 4));
+        let mut spread = spec.clone();
+        spread.parallelism.placement = "spread".into();
+        let gpus = spread.job_gpus(&topo).unwrap();
+        let cells: std::collections::HashSet<usize> = gpus.iter().map(|g| g.node / 48).collect();
+        assert!(cells.len() > 1);
+    }
+}

@@ -1,0 +1,427 @@
+//! Grid sweeps over scenario fields — the `booster sweep` driver.
+//!
+//! runexp-style parameter grids: each `--param key=v1,v2` axis multiplies
+//! the grid, the **first axis is the outermost loop** (changes least
+//! frequently), and expansion order is fully deterministic so CSV rows are
+//! stable across runs. Points sharing a machine are priced through one
+//! [`TimelineModel`] (and therefore one pattern-level
+//! [`crate::collectives::CostCache`]): a sweep that revisits a placement
+//! at new byte sizes pays interpolation, not flow simulation (§Perf).
+
+use crate::scenario::presets;
+use crate::scenario::spec::ScenarioSpec;
+use crate::train::timeline::TimelineModel;
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One sweep axis: a scenario field and the values it takes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamAxis {
+    /// Scenario field key (see [`SWEEPABLE_KEYS`]).
+    pub key: String,
+    /// Values, in CLI order.
+    pub values: Vec<String>,
+}
+
+/// Scenario fields a sweep may vary.
+pub const SWEEPABLE_KEYS: [&str; 9] = [
+    "machine",
+    "workload",
+    "nodes",
+    "precision",
+    "algo",
+    "compression",
+    "placement",
+    "bucket_mb",
+    "batch",
+];
+
+/// Group comma-split `--param` entries back into axes. The flag parser
+/// hands us `["nodes=48", "96", "precision=bf16", "tf32"]` for
+/// `--param nodes=48,96 --param precision=bf16,tf32`: an entry containing
+/// `=` opens a new axis, bare entries extend the previous one.
+pub fn parse_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
+    let mut axes: Vec<ParamAxis> = Vec::new();
+    for e in entries {
+        match e.split_once('=') {
+            Some((key, first)) => {
+                let key = key.trim().to_string();
+                if !SWEEPABLE_KEYS.contains(&key.as_str()) {
+                    return Err(BoosterError::Config(format!(
+                        "unknown sweep key '{key}' (sweepable: {})",
+                        SWEEPABLE_KEYS.join(", ")
+                    )));
+                }
+                if axes.iter().any(|a| a.key == key) {
+                    return Err(BoosterError::Config(format!("duplicate sweep key '{key}'")));
+                }
+                axes.push(ParamAxis {
+                    key,
+                    values: vec![first.trim().to_string()],
+                });
+            }
+            None => match axes.last_mut() {
+                Some(axis) => axis.values.push(e.trim().to_string()),
+                None => {
+                    return Err(BoosterError::Config(format!(
+                        "sweep value '{e}' has no key (use --param key=v1,v2)"
+                    )))
+                }
+            },
+        }
+    }
+    for a in &axes {
+        if a.values.iter().any(|v| v.is_empty()) {
+            return Err(BoosterError::Config(format!("sweep key '{}' has an empty value", a.key)));
+        }
+    }
+    Ok(axes)
+}
+
+/// Cartesian expansion of the axes. Point `i`'s assignment pairs each
+/// axis key with one value; the first axis is the outermost loop, so
+/// `[a=1,2] x [b=x,y]` yields `(1,x), (1,y), (2,x), (2,y)`.
+pub fn expand(axes: &[ParamAxis]) -> Vec<Vec<(String, String)>> {
+    let mut points: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    for axis in axes {
+        let mut next = Vec::with_capacity(points.len() * axis.values.len());
+        for p in &points {
+            for v in &axis.values {
+                let mut q = p.clone();
+                q.push((axis.key.clone(), v.clone()));
+                next.push(q);
+            }
+        }
+        points = next;
+    }
+    points
+}
+
+/// Apply one `key=value` assignment to a scenario.
+pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()> {
+    let bad_num = || BoosterError::Config(format!("sweep key '{key}': invalid value '{value}'"));
+    match key {
+        "machine" => spec.machine = presets::machine(value)?,
+        "workload" => spec.workload = presets::workload(value)?,
+        "nodes" => spec.parallelism.nodes = value.parse().map_err(|_| bad_num())?,
+        "precision" => spec.precision = value.to_string(),
+        "algo" => spec.parallelism.algo = value.to_string(),
+        "compression" => spec.parallelism.compression = value.to_string(),
+        "placement" => spec.parallelism.placement = value.to_string(),
+        "bucket_mb" => {
+            let mb: f64 = value.parse().map_err(|_| bad_num())?;
+            spec.parallelism.bucket_bytes = mb * 1e6;
+        }
+        "batch" => spec.workload.batch_per_gpu = value.parse().map_err(|_| bad_num())?,
+        _ => {
+            return Err(BoosterError::Config(format!(
+                "unknown sweep key '{key}' (sweepable: {})",
+                SWEEPABLE_KEYS.join(", ")
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    /// Auto-generated scenario name (machine/workload/nN/precision).
+    pub scenario: String,
+    /// Machine preset name.
+    pub machine: String,
+    /// Workload name.
+    pub workload: String,
+    /// Nodes occupied.
+    pub nodes: usize,
+    /// GPUs occupied.
+    pub gpus: usize,
+    /// Precision key.
+    pub precision: String,
+    /// Collective algorithm key.
+    pub algo: String,
+    /// Compression key.
+    pub compression: String,
+    /// Placement key.
+    pub placement: String,
+    /// Fusion-buffer size, MB.
+    pub bucket_mb: f64,
+    /// Slowest-rank compute time per step, ms.
+    pub compute_ms: f64,
+    /// Full allreduce time per step, ms.
+    pub comm_ms: f64,
+    /// Wall-clock step time after overlap, ms.
+    pub step_ms: f64,
+    /// Weak-scaling throughput, samples/s.
+    pub samples_per_s: f64,
+    /// Job energy per step, kJ.
+    pub step_energy_kj: f64,
+    /// The grid assignment that produced this row.
+    pub assignment: Vec<(String, String)>,
+}
+
+/// A completed sweep: rows in expansion order plus shared-cache stats.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// One row per grid point, in deterministic expansion order.
+    pub rows: Vec<SweepRow>,
+    /// Collective cost-cache hits across all machines in the sweep.
+    pub cache_hits: u64,
+    /// Flow simulations actually run.
+    pub cache_misses: u64,
+}
+
+impl SweepOutcome {
+    /// CSV with a header, one line per grid point, expansion order.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "scenario,machine,workload,nodes,gpus,precision,algo,compression,placement,\
+             bucket_mb,compute_ms,comm_ms,step_ms,samples_per_s,step_energy_kj\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
+                r.scenario,
+                r.machine,
+                r.workload,
+                r.nodes,
+                r.gpus,
+                r.precision,
+                r.algo,
+                r.compression,
+                r.placement,
+                r.bucket_mb,
+                r.compute_ms,
+                r.comm_ms,
+                r.step_ms,
+                r.samples_per_s,
+                r.step_energy_kj,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable result (`results/BENCH_sweep.json` shape).
+    pub fn to_json(&self, axes: &[ParamAxis]) -> Json {
+        let params = Json::Arr(
+            axes.iter()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("key", Json::Str(a.key.clone())),
+                        ("values", Json::Arr(a.values.iter().cloned().map(Json::Str).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let rows = Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(r.scenario.clone())),
+                        ("machine", Json::Str(r.machine.clone())),
+                        ("workload", Json::Str(r.workload.clone())),
+                        ("nodes", Json::Num(r.nodes as f64)),
+                        ("gpus", Json::Num(r.gpus as f64)),
+                        ("precision", Json::Str(r.precision.clone())),
+                        ("algo", Json::Str(r.algo.clone())),
+                        ("compression", Json::Str(r.compression.clone())),
+                        ("placement", Json::Str(r.placement.clone())),
+                        ("bucket_mb", Json::Num(r.bucket_mb)),
+                        ("compute_ms", Json::Num(r.compute_ms)),
+                        ("comm_ms", Json::Num(r.comm_ms)),
+                        ("step_ms", Json::Num(r.step_ms)),
+                        ("samples_per_s", Json::Num(r.samples_per_s)),
+                        ("step_energy_kj", Json::Num(r.step_energy_kj)),
+                    ])
+                })
+                .collect(),
+        );
+        let total = (self.cache_hits + self.cache_misses).max(1);
+        Json::obj(vec![
+            ("bench", Json::Str("sweep".into())),
+            ("params", params),
+            ("rows", rows),
+            (
+                "cost_cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.cache_hits as f64)),
+                    ("misses", Json::Num(self.cache_misses as f64)),
+                    ("hit_rate", Json::Num(self.cache_hits as f64 / total as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Expand the grid over `base` and evaluate every point. Points are
+/// grouped by machine so each machine's topology is built once and all of
+/// its points share one cached collective model; rows come back in
+/// expansion order regardless.
+pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
+    // Materialize and validate every point up front: a bad grid value
+    // fails the whole sweep before any simulation runs.
+    let assignments = expand(axes);
+    let mut points: Vec<(ScenarioSpec, Vec<(String, String)>)> =
+        Vec::with_capacity(assignments.len());
+    for asg in assignments {
+        let mut spec = base.clone();
+        for (k, v) in &asg {
+            apply_param(&mut spec, k, v)?;
+        }
+        spec.name = format!(
+            "{}/{}/n{}/{}",
+            spec.machine.name, spec.workload.name, spec.parallelism.nodes, spec.precision
+        );
+        spec.validate()?;
+        points.push((spec, asg));
+    }
+
+    // Group point indices by machine, preserving first-appearance order.
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, (spec, _)) in points.iter().enumerate() {
+        match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((spec.machine.name.clone(), vec![i])),
+        }
+    }
+
+    let mut rows: Vec<Option<SweepRow>> = (0..points.len()).map(|_| None).collect();
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    for (_, idxs) in &groups {
+        let machine = &points[idxs[0]].0.machine;
+        let topo = machine.build_topology()?;
+        let power = machine.power_model()?;
+        // One timeline (and cost cache) for every point on this machine.
+        let mut tl = TimelineModel::from_scenario(&points[idxs[0]].0, &topo)?;
+        for &i in idxs {
+            let (spec, asg) = &points[i];
+            tl.configure_from(spec)?;
+            let gpus = spec.job_gpus(&topo)?;
+            let mut rng = Rng::seed_from(7);
+            let st = tl.step_time(
+                &gpus,
+                spec.workload.flops_per_gpu_step(),
+                &spec.workload.grad_tensor_bytes(),
+                &mut rng,
+            )?;
+            let samples = gpus.len() as f64 * spec.workload.batch_per_gpu as f64;
+            rows[i] = Some(SweepRow {
+                scenario: spec.name.clone(),
+                machine: spec.machine.name.clone(),
+                workload: spec.workload.name.clone(),
+                nodes: spec.parallelism.nodes,
+                gpus: gpus.len(),
+                precision: spec.precision.clone(),
+                algo: spec.parallelism.algo.clone(),
+                compression: spec.parallelism.compression.clone(),
+                placement: spec.parallelism.placement.clone(),
+                bucket_mb: spec.parallelism.bucket_bytes / 1e6,
+                compute_ms: st.compute * 1e3,
+                comm_ms: st.comm * 1e3,
+                step_ms: st.total * 1e3,
+                samples_per_s: samples / st.total,
+                step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9) / 1e3,
+                assignment: asg.clone(),
+            });
+        }
+        let (h, m) = tl.collectives.cache_stats();
+        cache_hits += h;
+        cache_misses += m;
+    }
+
+    Ok(SweepOutcome {
+        rows: rows.into_iter().map(|r| r.expect("every point priced")).collect(),
+        cache_hits,
+        cache_misses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn params_regroup_comma_split_entries() {
+        // `--param nodes=48,96 --param precision=bf16,tf32` arrives
+        // comma-split from the flag parser.
+        let axes = parse_params(&s(&["nodes=48", "96", "precision=bf16", "tf32"])).unwrap();
+        assert_eq!(axes.len(), 2);
+        assert_eq!(axes[0].key, "nodes");
+        assert_eq!(axes[0].values, vec!["48", "96"]);
+        assert_eq!(axes[1].key, "precision");
+        assert_eq!(axes[1].values, vec!["bf16", "tf32"]);
+    }
+
+    #[test]
+    fn params_reject_garbage() {
+        assert!(parse_params(&s(&["48"])).is_err(), "value before any key");
+        assert!(parse_params(&s(&["frobnicate=1"])).is_err(), "unknown key");
+        assert!(parse_params(&s(&["nodes=1", "nodes=2"])).is_err(), "duplicate key");
+    }
+
+    #[test]
+    fn expansion_order_is_deterministic_outer_first() {
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let pts = expand(&axes);
+        let flat: Vec<(String, String)> = pts
+            .iter()
+            .map(|p| (p[0].1.clone(), p[1].1.clone()))
+            .collect();
+        // First axis is the outer loop (runexp convention).
+        assert_eq!(
+            flat,
+            vec![
+                ("1".into(), "bf16".into()),
+                ("1".into(), "tf32".into()),
+                ("2".into(), "bf16".into()),
+                ("2".into(), "tf32".into()),
+            ]
+        );
+        // Re-expansion yields the identical order.
+        assert_eq!(pts, expand(&axes));
+    }
+
+    #[test]
+    fn empty_grid_is_one_point() {
+        assert_eq!(expand(&[]).len(), 1);
+    }
+
+    #[test]
+    fn sweep_runs_end_to_end_and_shares_the_cache() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        // Rows follow expansion order.
+        assert_eq!(out.rows[0].nodes, 1);
+        assert_eq!(out.rows[0].precision, "bf16");
+        assert_eq!(out.rows[3].nodes, 2);
+        assert_eq!(out.rows[3].precision, "tf32");
+        for r in &out.rows {
+            assert!(r.step_ms > 0.0 && r.samples_per_s > 0.0, "{r:?}");
+            assert_eq!(r.gpus, r.nodes * 8, "selene packs 8 GPUs/node");
+        }
+        // bf16 and tf32 share the machine+placement: same allreduce
+        // pattern at the same sizes — the shared model must cache-hit.
+        assert!(out.cache_hits >= 1, "grid must reuse the cost cache");
+        let csv = out.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("scenario,machine,"));
+        let j = out.to_json(&axes);
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn bad_grid_value_fails_before_simulating() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "9999"])).unwrap();
+        assert!(run(&base, &axes).is_err(), "9999 nodes exceeds selene");
+    }
+}

@@ -207,24 +207,39 @@ impl PartState {
 }
 
 impl Scheduler {
-    /// The JUWELS configuration: 936-node Booster (48-node cells) +
-    /// 2300-node Cluster.
+    /// The JUWELS configuration: the preset Booster machine + the
+    /// 2300-node Cluster module.
     pub fn juwels(placement: Placement) -> Scheduler {
+        let m = crate::scenario::presets::machine("juwels_booster").expect("registry preset");
+        Scheduler::for_machine(&m, 2300, placement)
+    }
+
+    /// A modular system whose Booster partition is described by a scenario
+    /// [`crate::scenario::MachineSpec`], optionally paired with a
+    /// cell-less CPU Cluster module of `cluster_nodes` nodes (0 ⇒ no
+    /// cluster partition; heterogeneous jobs then fail validation).
+    pub fn for_machine(
+        machine: &crate::scenario::MachineSpec,
+        cluster_nodes: usize,
+        placement: Placement,
+    ) -> Scheduler {
         let mut partitions = BTreeMap::new();
         partitions.insert(
             Partition::Booster,
             PartitionSpec {
-                nodes: 936,
-                nodes_per_cell: 48,
+                nodes: machine.topo.nodes,
+                nodes_per_cell: machine.topo.nodes_per_cell,
             },
         );
-        partitions.insert(
-            Partition::Cluster,
-            PartitionSpec {
-                nodes: 2300,
-                nodes_per_cell: 2300,
-            },
-        );
+        if cluster_nodes > 0 {
+            partitions.insert(
+                Partition::Cluster,
+                PartitionSpec {
+                    nodes: cluster_nodes,
+                    nodes_per_cell: cluster_nodes,
+                },
+            );
+        }
         Scheduler {
             partitions,
             placement,
@@ -568,6 +583,20 @@ mod tests {
         let rec = s.run(&jobs).unwrap();
         let u = s.utilization(&jobs, &rec, Partition::Booster);
         assert!(u > 0.0 && u <= 1.0 + 1e-9, "util {u}");
+    }
+
+    #[test]
+    fn for_machine_sizes_partitions_from_the_spec() {
+        let m = crate::scenario::presets::machine("leonardo").unwrap();
+        let s = Scheduler::for_machine(&m, 0, Placement::CompactCells);
+        let jobs = vec![Job::simple(1, 0.0, Partition::Booster, 3456, 10.0)];
+        let rec = s.run(&jobs).unwrap();
+        assert_eq!(rec[0].booster_nodes.len(), 3456);
+        // 3456 nodes fill exactly 18 cells of 192.
+        assert_eq!(rec[0].cells_touched, 18);
+        // No cluster partition: heterogeneous jobs are rejected.
+        let het = vec![Job::heterogeneous(2, 0.0, 8, 8, 10.0)];
+        assert!(s.run(&het).is_err());
     }
 
     #[test]

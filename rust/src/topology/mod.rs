@@ -83,36 +83,43 @@ pub struct TopoParams {
     pub nvlink_latency: f64,
 }
 
-impl TopoParams {
-    /// JUWELS Booster: 936 nodes in 20 cells of 48 (last cell short),
-    /// 8 leaves + 8 spines per cell, 10 global links per cell pair.
-    pub fn juwels_booster() -> TopoParams {
-        TopoParams {
-            kind: TopoKind::DragonFlyPlus,
-            nodes: 936,
-            nodes_per_cell: 48,
-            leaves_per_cell: 8,
-            spines_per_cell: 8,
-            global_links_per_pair: 10,
-            global_link_bw: 200e9 / 8.0,
-            hop_latency: 600e-9,
-            nvlink_latency: 300e-9,
+impl TopoKind {
+    /// Canonical lowercase key used by scenario specs.
+    pub fn key(self) -> &'static str {
+        match self {
+            TopoKind::DragonFlyPlus => "dragonfly+",
+            TopoKind::FatTree => "fat-tree",
         }
     }
 
-    /// NVIDIA Selene-like machine: 280 DGX-A100 nodes on a fat tree.
-    pub fn selene() -> TopoParams {
-        TopoParams {
-            kind: TopoKind::FatTree,
-            nodes: 280,
-            nodes_per_cell: 280,
-            leaves_per_cell: 20,
-            spines_per_cell: 20,
-            global_links_per_pair: 0,
-            global_link_bw: 200e9 / 8.0,
-            hop_latency: 600e-9,
-            nvlink_latency: 300e-9,
+    /// Parse a topology-family key.
+    pub fn parse(s: &str) -> Result<TopoKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dragonfly+" | "dragonfly-plus" | "dragonflyplus" => Ok(TopoKind::DragonFlyPlus),
+            "fat-tree" | "fattree" => Ok(TopoKind::FatTree),
+            _ => Err(BoosterError::Config(format!(
+                "unknown topology kind '{s}' (expected dragonfly+ or fat-tree)"
+            ))),
         }
+    }
+}
+
+impl TopoParams {
+    /// JUWELS Booster's fabric, resolved from the scenario preset registry
+    /// (the single source of truth for machine numbers).
+    pub fn juwels_booster() -> TopoParams {
+        crate::scenario::presets::machine("juwels_booster")
+            .expect("registry preset")
+            .topo_params()
+            .expect("preset is valid")
+    }
+
+    /// The Selene-like fat tree, resolved from the preset registry.
+    pub fn selene() -> TopoParams {
+        crate::scenario::presets::machine("selene")
+            .expect("registry preset")
+            .topo_params()
+            .expect("preset is valid")
     }
 
     /// Number of cells.
@@ -280,14 +287,20 @@ impl Topology {
         })
     }
 
-    /// JUWELS Booster with its node spec.
+    /// JUWELS Booster with its node spec (preset-registry shorthand).
     pub fn juwels_booster() -> Topology {
-        Topology::build(TopoParams::juwels_booster(), NodeSpec::juwels_booster()).unwrap()
+        crate::scenario::presets::machine("juwels_booster")
+            .expect("registry preset")
+            .build_topology()
+            .expect("preset is valid")
     }
 
-    /// Selene-like comparison machine.
+    /// Selene-like comparison machine (preset-registry shorthand).
     pub fn selene() -> Topology {
-        Topology::build(TopoParams::selene(), NodeSpec::selene()).unwrap()
+        crate::scenario::presets::machine("selene")
+            .expect("registry preset")
+            .build_topology()
+            .expect("preset is valid")
     }
 
     /// Total vertices in the graph.
@@ -655,6 +668,14 @@ mod tests {
         let cells: std::collections::HashSet<usize> =
             spread.iter().map(|g| g.node / 48).collect();
         assert!(cells.len() >= 8, "spread placement should span cells");
+    }
+
+    #[test]
+    fn topo_kind_keys_roundtrip() {
+        for k in [TopoKind::DragonFlyPlus, TopoKind::FatTree] {
+            assert_eq!(TopoKind::parse(k.key()).unwrap(), k);
+        }
+        assert!(TopoKind::parse("torus").is_err());
     }
 
     #[test]

@@ -104,6 +104,34 @@ impl<'t> TimelineModel<'t> {
         }
     }
 
+    /// A timeline configured from a [`crate::scenario::ScenarioSpec`]:
+    /// precision, achieved efficiency, collective algorithm, wire
+    /// compression, bucket size and overlap all come from the spec. The
+    /// topology must be the spec machine's (the
+    /// [`crate::scenario::ExperimentContext`] guarantees this).
+    pub fn from_scenario(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<TimelineModel<'t>> {
+        let mut m = TimelineModel::amp_defaults(topo);
+        m.configure_from(spec)?;
+        Ok(m)
+    }
+
+    /// Reconfigure this timeline from a scenario without touching its
+    /// cached [`CollectiveModel`] — the sweep driver re-points one
+    /// timeline at each grid point of a machine so the cost cache
+    /// persists across the whole grid.
+    pub fn configure_from(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        self.precision = spec.precision()?;
+        self.efficiency = spec.workload.efficiency;
+        self.algo = spec.algo()?;
+        self.compression = spec.compression()?;
+        self.bucket_bytes = spec.parallelism.bucket_bytes;
+        self.overlap = spec.parallelism.overlap;
+        Ok(())
+    }
+
     /// Nominal per-rank compute seconds for `flops_per_gpu`.
     pub fn compute_time(&self, flops_per_gpu: f64) -> f64 {
         self.topo

@@ -13,6 +13,8 @@ enum Value {
     Int(i64),
     Float(f64),
     Str(String),
+    /// Comma-separated values; repeated occurrences of the flag append.
+    List(Vec<String>),
 }
 
 #[derive(Debug, Clone)]
@@ -27,6 +29,8 @@ struct Spec {
 pub struct Flags {
     specs: Vec<Spec>,
     values: BTreeMap<String, Value>,
+    /// Flags the command line set explicitly (vs. defaults).
+    explicit: std::collections::BTreeSet<String>,
     /// Positional (non-flag) arguments left over after parsing.
     pub positional: Vec<String>,
 }
@@ -73,6 +77,17 @@ impl Flags {
         self
     }
 
+    /// Declare a list flag: `--name a,b` contributes comma-separated
+    /// values, and repeating the flag appends (`--name a --name b`).
+    pub fn str_list_flag(mut self, name: &str, default: &[&str], help: &str) -> Self {
+        self.add(
+            name,
+            help,
+            Value::List(default.iter().map(|s| s.to_string()).collect()),
+        );
+        self
+    }
+
     /// Render help text.
     pub fn help(&self, cmd: &str) -> String {
         let mut out = format!("usage: booster {cmd} [flags]\n\nflags:\n");
@@ -82,6 +97,7 @@ impl Flags {
                 Value::Int(i) => i.to_string(),
                 Value::Float(f) => f.to_string(),
                 Value::Str(s) => format!("{s:?}"),
+                Value::List(xs) => format!("[{}] (repeatable)", xs.join(",")),
             };
             out.push_str(&format!("  --{:<24} {} (default: {})\n", s.name, s.help, d));
         }
@@ -128,7 +144,25 @@ impl Flags {
                     Value::Int(_) => Value::Int(raw.parse().map_err(|_| bad(&name, &raw))?),
                     Value::Float(_) => Value::Float(raw.parse().map_err(|_| bad(&name, &raw))?),
                     Value::Str(_) => Value::Str(raw),
+                    Value::List(_) => {
+                        // First explicit occurrence replaces the default;
+                        // later ones append. Each occurrence contributes
+                        // its comma-separated items.
+                        let mut items: Vec<String> =
+                            raw.split(',').map(|s| s.to_string()).collect();
+                        if self.explicit.contains(&name) {
+                            if let Some(Value::List(existing)) = self.values.get_mut(&name) {
+                                existing.append(&mut items);
+                            }
+                        } else {
+                            self.values.insert(name.clone(), Value::List(items));
+                        }
+                        self.explicit.insert(name);
+                        i += 1;
+                        continue;
+                    }
                 };
+                self.explicit.insert(name.clone());
                 self.values.insert(name, val);
             } else {
                 self.positional.push(a.clone());
@@ -176,6 +210,22 @@ impl Flags {
             _ => panic!("flag --{name} not declared as str"),
         }
     }
+
+    /// Get a list flag's accumulated values.
+    pub fn get_strs(&self, name: &str) -> &[String] {
+        match self.values.get(name) {
+            Some(Value::List(xs)) => xs,
+            _ => panic!("flag --{name} not declared as list"),
+        }
+    }
+
+    /// Whether the command line set this flag explicitly (vs. the default
+    /// applying). Lets commands distinguish "user asked for X" from
+    /// "nothing was said" — e.g. `topo` clamps its default destination
+    /// node to the machine size but rejects an explicit out-of-range one.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.explicit.contains(name)
+    }
 }
 
 fn bad(name: &str, raw: &str) -> BoosterError {
@@ -192,6 +242,7 @@ mod tests {
             .int_flag("gpus", 4, "gpu count")
             .float_flag("lr", 0.1, "learning rate")
             .str_flag("task", "resnet", "mlperf task")
+            .str_list_flag("param", &[], "sweep axis key=v1,v2")
     }
 
     fn s(args: &[&str]) -> Vec<String> {
@@ -236,5 +287,55 @@ mod tests {
         let h = spec().help("mlperf");
         assert!(h.contains("--gpus"));
         assert!(h.contains("default: 4"));
+    }
+
+    #[test]
+    fn list_flag_defaults_and_splits_commas() {
+        let f = spec().parse(&[]).unwrap();
+        assert!(f.get_strs("param").is_empty());
+        let f = spec().parse(&s(&["--param", "nodes=48,96"])).unwrap();
+        assert_eq!(f.get_strs("param"), ["nodes=48", "96"]);
+    }
+
+    #[test]
+    fn list_flag_repeats_append_and_replace_default() {
+        let d = Flags::new().str_list_flag("tag", &["base"], "tags");
+        // Default survives when unset...
+        assert_eq!(d.clone().parse(&[]).unwrap().get_strs("tag"), ["base"]);
+        // ...is replaced (not appended to) by the first occurrence...
+        let f = d
+            .clone()
+            .parse(&s(&["--tag", "a,b", "--tag=c"]))
+            .unwrap();
+        assert_eq!(f.get_strs("tag"), ["a", "b", "c"]);
+        // ...and both syntaxes participate.
+        let f = d.parse(&s(&["--tag=x", "--tag", "y"])).unwrap();
+        assert_eq!(f.get_strs("tag"), ["x", "y"]);
+    }
+
+    #[test]
+    fn list_flag_requires_a_value() {
+        assert!(spec().parse(&s(&["--param"])).is_err());
+    }
+
+    #[test]
+    fn help_renders_list_defaults() {
+        let h = Flags::new()
+            .str_list_flag("tag", &["a", "b"], "tags")
+            .help("x");
+        assert!(h.contains("--tag"), "{h}");
+        assert!(h.contains("[a,b] (repeatable)"), "{h}");
+        let h = spec().help("sweep");
+        assert!(h.contains("[] (repeatable)"), "{h}");
+    }
+
+    #[test]
+    fn is_set_tracks_explicit_flags() {
+        let f = spec().parse(&s(&["--gpus", "8"])).unwrap();
+        assert!(f.is_set("gpus"));
+        assert!(!f.is_set("lr"));
+        assert!(!f.is_set("param"));
+        let f = spec().parse(&s(&["--param", "a=1"])).unwrap();
+        assert!(f.is_set("param"));
     }
 }
