@@ -97,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     for gpus in [8usize, 64, 256] {
         let st = sim
             .step_time(
-                &topo.first_gpus(gpus),
+                &topo.first_gpus(gpus).map_err(anyhow::Error::msg)?,
                 meta.flops_per_step,
                 &meta.grad_tensor_bytes(),
                 &mut srng,

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from(0);
     let st = model
         .step_time(
-            &ctx.topo.first_gpus(64),
+            &ctx.topo.first_gpus(64).map_err(anyhow::Error::msg)?,
             meta.flops_per_step,
             &meta.grad_tensor_bytes(),
             &mut rng,

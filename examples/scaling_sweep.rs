@@ -23,8 +23,8 @@ fn main() -> anyhow::Result<()> {
         "GPUs", "ring", "halv-doubl", "hierarch", "hier+fp16", "spread-hier"
     );
     for n in [8usize, 32, 128, 512, 1024] {
-        let compact = topo.first_gpus(n);
-        let spread = topo.spread_gpus(n);
+        let compact = topo.first_gpus(n).map_err(anyhow::Error::msg)?;
+        let spread = topo.spread_gpus(n).map_err(anyhow::Error::msg)?;
         let mut row = format!("{n:>6} |");
         for algo in [Algo::Ring, Algo::HalvingDoubling, Algo::Hierarchical] {
             let t = bucketed_allreduce_time(&model, &compact, &grads, 64e6, Compression::None, algo)
@@ -60,12 +60,12 @@ fn main() -> anyhow::Result<()> {
     let flops = 3.0 * 343e9 * 24.0; // fwd+bwd, batch 24 sequences
     let grad = vec![335e6 * 4.0];
     let tp1 = sim
-        .throughput(&topo.first_gpus(1), flops, 24, &grad, &mut rng)
+        .throughput(&topo.first_gpus(1).map_err(anyhow::Error::msg)?, flops, 24, &grad, &mut rng)
         .map_err(anyhow::Error::msg)?;
     println!("{:>6} {:>14} {:>12}", "GPUs", "seq/s", "efficiency");
     for n in [1usize, 8, 64, 256, 1024, 3744] {
         let tp = sim
-            .throughput(&topo.first_gpus(n), flops, 24, &grad, &mut rng)
+            .throughput(&topo.first_gpus(n).map_err(anyhow::Error::msg)?, flops, 24, &grad, &mut rng)
             .map_err(anyhow::Error::msg)?;
         println!("{n:>6} {tp:>14.1} {:>11.1}%", 100.0 * tp / (tp1 * n as f64));
     }

@@ -11,7 +11,7 @@ fn main() {
     let ctx = ExperimentContext::for_machine("juwels_booster").expect("registry preset");
     let topo = &ctx.topo;
     let model = ctx.collectives();
-    let gpus = topo.first_gpus(256);
+    let gpus = topo.first_gpus(256).unwrap();
 
     // ResNet-50-like gradient tensor sizes (conv stacks + head).
     let tensors: Vec<f64> = (0..160)

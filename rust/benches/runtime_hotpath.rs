@@ -144,7 +144,7 @@ fn main() {
     // --- network simulator ------------------------------------------------
     let ctx = ExperimentContext::for_machine("juwels_booster").expect("registry preset");
     let topo = &ctx.topo;
-    let gpus = topo.first_gpus(512);
+    let gpus = topo.first_gpus(512).unwrap();
     let flows: Vec<Flow> = (0..gpus.len())
         .map(|i| Flow {
             path: topo.route(gpus[i], gpus[(i + 1) % gpus.len()], i as u64),
@@ -200,7 +200,7 @@ fn main() {
     // sizes. Uncached, every call is a full flow simulation; cached, the
     // pattern is probed at the span edges and everything in between is
     // interpolation.
-    let gpus256 = topo.first_gpus(256);
+    let gpus256 = topo.first_gpus(256).unwrap();
     let sizes: Vec<f64> = (0..64).map(|i| 64e6 + i as f64 * 4e6).collect();
     let model = ctx.collectives();
     let t_un = Instant::now();

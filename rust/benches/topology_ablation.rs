@@ -46,7 +46,7 @@ fn main() {
     for (name, topo) in &variants {
         let model = CollectiveModel::new(topo);
         let dt = model
-            .allreduce_time(&topo.first_gpus(n), bytes, Algo::Hierarchical)
+            .allreduce_time(&topo.first_gpus(n).unwrap(), bytes, Algo::Hierarchical)
             .unwrap();
         t.row(&[
             name.clone(),
@@ -63,8 +63,8 @@ fn main() {
     let model = CollectiveModel::new(&topo);
     for gpus in [64usize, 256, 512] {
         for (label, placement) in [
-            ("compact", topo.first_gpus(gpus)),
-            ("spread", topo.spread_gpus(gpus)),
+            ("compact", topo.first_gpus(gpus).unwrap()),
+            ("spread", topo.spread_gpus(gpus).unwrap()),
         ] {
             let ring = model.allreduce_time(&placement, bytes, Algo::Ring).unwrap();
             let hier = model

@@ -71,7 +71,8 @@ pub fn commands() -> Vec<Command> {
         },
         Command {
             name: "sweep",
-            about: "run a scenario grid (--param key=v1,v2) over machines/workloads/scales",
+            about: "run a scenario grid (--param key=v1,v2) over machines/scales/parallelism \
+                    (incl. hybrid pipeline×data: stages/microbatches/schedule)",
             run: crate::report::cmd_sweep,
         },
     ]

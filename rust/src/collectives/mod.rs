@@ -604,9 +604,26 @@ impl Compression {
     }
 }
 
+/// Wire-size fusion buckets of a gradient set: compression is applied
+/// **per tensor, before bucketing** — Horovod casts each gradient to FP16
+/// and then packs the *compressed* tensors into fusion buffers, so a
+/// 64 MB bucket holds 64 MB of wire bytes. Compressing after bucketing
+/// (the old behavior) formed buckets on uncompressed sizes, inflating the
+/// bucket count and the per-bucket latency charge ~2x under FP16. The
+/// no-compression path buckets the input slice directly.
+fn wire_buckets(tensor_bytes: &[f64], bucket_bytes: f64, compression: Compression) -> Vec<f64> {
+    if compression == Compression::None {
+        return fusion_buckets(tensor_bytes, bucket_bytes);
+    }
+    let wire: Vec<f64> = tensor_bytes.iter().map(|t| t * compression.factor()).collect();
+    fusion_buckets(&wire, bucket_bytes)
+}
+
 /// Time for a bucketed, optionally compressed allreduce of a gradient set.
-/// Buckets are issued back-to-back (Horovod serializes fusion buffers on
-/// its communication stream); each pays the launch overhead.
+/// Tensors are compressed to their wire size first, then packed into
+/// fusion buffers; buckets are issued back-to-back (Horovod serializes
+/// fusion buffers on its communication stream) and each pays the launch
+/// overhead.
 ///
 /// Repeated bucket sizes hit the model's [`CostCache`] exactly, so large
 /// gradient sets with uniform fusion buffers simulate each size once.
@@ -619,8 +636,8 @@ pub fn bucketed_allreduce_time(
     algo: Algo,
 ) -> Result<f64> {
     let mut total = 0.0;
-    for b in fusion_buckets(tensor_bytes, bucket_bytes) {
-        total += model.allreduce_time(gpus, b * compression.factor(), algo)?;
+    for b in wire_buckets(tensor_bytes, bucket_bytes, compression) {
+        total += model.allreduce_time(gpus, b, algo)?;
     }
     Ok(total)
 }
@@ -638,8 +655,8 @@ pub fn bucketed_allreduce_time_uncached(
     algo: Algo,
 ) -> Result<f64> {
     let mut total = 0.0;
-    for b in fusion_buckets(tensor_bytes, bucket_bytes) {
-        total += model.allreduce_time_uncached(gpus, b * compression.factor(), algo)?;
+    for b in wire_buckets(tensor_bytes, bucket_bytes, compression) {
+        total += model.allreduce_time_uncached(gpus, b, algo)?;
     }
     Ok(total)
 }
@@ -657,7 +674,7 @@ mod tests {
     fn single_gpu_is_free() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let g = t.first_gpus(1);
+        let g = t.first_gpus(1).unwrap();
         let dt = m.allreduce_time(&g, 1e9, Algo::Ring).unwrap();
         assert!((dt - LAUNCH_OVERHEAD).abs() < 1e-12);
     }
@@ -668,7 +685,7 @@ mod tests {
         // 2(n-1) * (B/n) / nvlink_bw (+latency).
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let g = t.first_gpus(4);
+        let g = t.first_gpus(4).unwrap();
         let bytes = 3e9;
         let dt = m.allreduce_time(&g, bytes, Algo::Ring).unwrap();
         let analytic = 2.0 * 3.0 * (bytes / 4.0) / 300e9;
@@ -683,7 +700,7 @@ mod tests {
     fn ring_order_groups_by_locality() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let mut gpus = t.first_gpus(64);
+        let mut gpus = t.first_gpus(64).unwrap();
         gpus.reverse();
         let order = m.ring_order(&gpus);
         // Consecutive entries should mostly share a node.
@@ -701,7 +718,7 @@ mod tests {
         // long-distance exchanges on a DragonFly+.
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(64); // 16 nodes
+        let gpus = t.first_gpus(64).unwrap(); // 16 nodes
         let bytes = 400e6; // 100M params fp32
         let ring = m.allreduce_time(&gpus, bytes, Algo::Ring).unwrap();
         let hier = m.allreduce_time(&gpus, bytes, Algo::Hierarchical).unwrap();
@@ -715,7 +732,7 @@ mod tests {
         // For tiny buffers HD (log rounds) beats ring (linear rounds).
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(256);
+        let gpus = t.first_gpus(256).unwrap();
         let ring = m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
         let hd = m.allreduce_time(&gpus, 4096.0, Algo::HalvingDoubling).unwrap();
         assert!(hd < ring, "hd {hd} ring {ring}");
@@ -725,7 +742,7 @@ mod tests {
     fn compression_halves_large_transfer_time() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(32);
+        let gpus = t.first_gpus(32).unwrap();
         let tensors = [200e6];
         let plain =
             bucketed_allreduce_time(&m, &gpus, &tensors, 64e6, Compression::None, Algo::Ring)
@@ -737,6 +754,43 @@ mod tests {
             fp16 < 0.62 * plain,
             "fp16 {fp16} vs plain {plain} (expect ~0.5x)"
         );
+    }
+
+    #[test]
+    fn compression_is_applied_before_bucketing() {
+        // Regression: buckets must be formed on *wire* (compressed) sizes.
+        // 400 MB of gradients in 100 x 4 MB tensors at 64 MB buckets:
+        //   uncompressed -> 7 buckets (6 x 64 MB + 16 MB)
+        //   fp16 wire    -> 100 x 2 MB -> 4 buckets (3 x 64 MB + 8 MB)
+        // The old compress-after-bucketing code produced 7 half-size
+        // buckets under fp16: wrong bucket count, ~2x the latency charge.
+        let tensors = vec![4e6; 100];
+        assert_eq!(fusion_buckets(&tensors, 64e6).len(), 7);
+        let wire: Vec<f64> = tensors.iter().map(|t| t * Compression::Fp16.factor()).collect();
+        let buckets = fusion_buckets(&wire, 64e6);
+        assert_eq!(buckets, vec![64e6, 64e6, 64e6, 8e6]);
+
+        // The priced time must be exactly the sum over those 4 wire
+        // buckets — not over 7 buckets of 32/8 MB.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(32).unwrap();
+        let fp16 = Compression::Fp16;
+        let got = bucketed_allreduce_time_uncached(&m, &gpus, &tensors, 64e6, fp16, Algo::Ring)
+            .unwrap();
+        let want = 3.0 * m.allreduce_time_uncached(&gpus, 64e6, Algo::Ring).unwrap()
+            + m.allreduce_time_uncached(&gpus, 8e6, Algo::Ring).unwrap();
+        assert!((got - want).abs() <= 1e-12 * want, "got {got} want {want}");
+        let old_buggy = 6.0 * m.allreduce_time_uncached(&gpus, 32e6, Algo::Ring).unwrap()
+            + m.allreduce_time_uncached(&gpus, 8e6, Algo::Ring).unwrap();
+        assert!(got < old_buggy, "fewer buckets must pay fewer launch overheads");
+
+        // The cached path forms the same buckets: a fresh model sees
+        // exactly two distinct sizes -> 2 misses, 2 hits.
+        let m2 = CollectiveModel::new(&t);
+        bucketed_allreduce_time(&m2, &gpus, &tensors, 64e6, fp16, Algo::Ring).unwrap();
+        let (hits, misses) = m2.cache_stats();
+        assert_eq!((hits, misses), (2, 2), "4 buckets of 2 distinct sizes");
     }
 
     #[test]
@@ -775,10 +829,10 @@ mod tests {
         let t = topo();
         let m = CollectiveModel::new(&t);
         let small = m
-            .allreduce_time(&t.first_gpus(8), 100e6, Algo::Ring)
+            .allreduce_time(&t.first_gpus(8).unwrap(), 100e6, Algo::Ring)
             .unwrap();
         let large = m
-            .allreduce_time(&t.first_gpus(256), 100e6, Algo::Ring)
+            .allreduce_time(&t.first_gpus(256).unwrap(), 100e6, Algo::Ring)
             .unwrap();
         assert!(large > small, "large {large} small {small}");
     }
@@ -789,10 +843,10 @@ mod tests {
         let m = CollectiveModel::new(&t);
         let n = 64;
         let compact = m
-            .allreduce_time(&t.first_gpus(n), 100e6, Algo::Ring)
+            .allreduce_time(&t.first_gpus(n).unwrap(), 100e6, Algo::Ring)
             .unwrap();
         let spread = m
-            .allreduce_time(&t.spread_gpus(n), 100e6, Algo::Ring)
+            .allreduce_time(&t.spread_gpus(n).unwrap(), 100e6, Algo::Ring)
             .unwrap();
         assert!(
             spread > compact,
@@ -806,7 +860,7 @@ mod tests {
     fn cache_exact_repeat_is_identical_and_hits() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(32);
+        let gpus = t.first_gpus(32).unwrap();
         let a = m.allreduce_time(&gpus, 100e6, Algo::Ring).unwrap();
         let b = m.allreduce_time(&gpus, 100e6, Algo::Ring).unwrap();
         assert_eq!(a, b, "cached repeat must be bit-identical");
@@ -821,7 +875,7 @@ mod tests {
         // track the real simulation closely in the bandwidth regime.
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(16);
+        let gpus = t.first_gpus(16).unwrap();
         for algo in Algo::ALL {
             // Warm the curve with two samples.
             m.allreduce_time(&gpus, 1e8, algo).unwrap();
@@ -846,7 +900,7 @@ mod tests {
         // not extrapolated from the latency-dominated regime.
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(16);
+        let gpus = t.first_gpus(16).unwrap();
         m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
         m.allreduce_time(&gpus, 8192.0, Algo::Ring).unwrap();
         let (_, misses_before) = m.cache_stats();
@@ -861,8 +915,8 @@ mod tests {
     fn cache_distinguishes_gpu_sets_and_algos() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let a = t.first_gpus(32);
-        let b = t.spread_gpus(32);
+        let a = t.first_gpus(32).unwrap();
+        let b = t.spread_gpus(32).unwrap();
         let ta = m.allreduce_time(&a, 100e6, Algo::Ring).unwrap();
         let tb = m.allreduce_time(&b, 100e6, Algo::Ring).unwrap();
         assert_ne!(ta, tb, "different placements must not share entries");
@@ -877,7 +931,7 @@ mod tests {
     fn non_finite_bytes_rejected_regardless_of_cache_state() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(16);
+        let gpus = t.first_gpus(16).unwrap();
         assert!(m.allreduce_time(&gpus, f64::NAN, Algo::Ring).is_err());
         // Warm the curve, then try again: cache state must not change
         // error semantics.
@@ -893,14 +947,14 @@ mod tests {
     #[test]
     fn fingerprint_is_order_insensitive() {
         let t = topo();
-        let mut gpus = t.first_gpus(16);
+        let mut gpus = t.first_gpus(16).unwrap();
         let fp1 = gpu_set_fingerprint(&gpus);
         gpus.reverse();
         assert_eq!(fp1, gpu_set_fingerprint(&gpus));
         gpus.swap(0, 7);
         assert_eq!(fp1, gpu_set_fingerprint(&gpus));
         // Different sets differ.
-        let other = t.first_gpus(17);
+        let other = t.first_gpus(17).unwrap();
         assert_ne!(fp1, gpu_set_fingerprint(&other));
     }
 
@@ -908,7 +962,7 @@ mod tests {
     fn invalidate_caches_forces_resimulation() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(8);
+        let gpus = t.first_gpus(8).unwrap();
         m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
         m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
         let (hits, _) = m.cache_stats();
@@ -927,7 +981,7 @@ mod tests {
     fn route_table_reused_across_calls() {
         let t = topo();
         let m = CollectiveModel::new(&t);
-        let gpus = t.first_gpus(64);
+        let gpus = t.first_gpus(64).unwrap();
         m.allreduce_time_uncached(&gpus, 1e6, Algo::Ring).unwrap();
         let (h0, m0) = m.route_stats();
         m.allreduce_time_uncached(&gpus, 2e6, Algo::Ring).unwrap();

@@ -66,7 +66,7 @@ impl Machine {
         let mean = crate::util::stats::mean(&times);
         let wall = mean * steps as f64;
         let nodes: std::collections::HashSet<usize> = gpus.iter().map(|g| g.node).collect();
-        let energy = self.power.job_energy(nodes.len(), wall, 0.9);
+        let energy = self.power.job_energy(nodes.len(), wall, 0.9)?;
         Ok(JobCost {
             wall_seconds: wall,
             energy_joules: energy,
@@ -96,10 +96,10 @@ mod tests {
         let m = Machine::juwels_booster();
         let mut rng = Rng::seed_from(0);
         let small = m
-            .job_cost(&m.topo.first_gpus(4), 1e12, &[4e6], 1000, &mut rng)
+            .job_cost(&m.topo.first_gpus(4).unwrap(), 1e12, &[4e6], 1000, &mut rng)
             .unwrap();
         let large = m
-            .job_cost(&m.topo.first_gpus(64), 1e12, &[4e6], 1000, &mut rng)
+            .job_cost(&m.topo.first_gpus(64).unwrap(), 1e12, &[4e6], 1000, &mut rng)
             .unwrap();
         // Same per-GPU work, same steps: similar wall, ~16x energy.
         assert!(large.wall_seconds < 2.0 * small.wall_seconds);

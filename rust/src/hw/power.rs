@@ -7,6 +7,7 @@
 
 use super::node::NodeSpec;
 use super::precision::Precision;
+use crate::util::error::{BoosterError, Result};
 
 /// Machine-level power/energy model.
 #[derive(Debug, Clone)]
@@ -31,13 +32,24 @@ impl PowerModel {
             .expect("preset is valid")
     }
 
+    /// Utilization is caller-controlled (sweep points land here): reject
+    /// out-of-range values as a config error instead of aborting.
+    fn check_utilization(gpu_utilization: f64) -> Result<()> {
+        if !(0.0..=1.0).contains(&gpu_utilization) {
+            return Err(BoosterError::Config(format!(
+                "gpu utilization {gpu_utilization} outside [0,1]"
+            )));
+        }
+        Ok(())
+    }
+
     /// Total machine power with every GPU at a given utilization in [0,1].
-    pub fn machine_watts(&self, gpu_utilization: f64) -> f64 {
-        assert!((0.0..=1.0).contains(&gpu_utilization));
+    pub fn machine_watts(&self, gpu_utilization: f64) -> Result<f64> {
+        Self::check_utilization(gpu_utilization)?;
         let g = &self.node.gpu;
         let gpu_w = g.idle_watts + gpu_utilization * (g.tdp_watts - g.idle_watts);
         let node_w = self.node.host_watts + self.node.gpus_per_node as f64 * gpu_w;
-        node_w * self.nodes as f64 * (1.0 + self.overhead)
+        Ok(node_w * self.nodes as f64 * (1.0 + self.overhead))
     }
 
     /// Sustained machine FLOP/s for an HPL-like run: FP64_TC peak scaled by
@@ -48,18 +60,29 @@ impl PowerModel {
     }
 
     /// Green500-style metric: sustained FLOP/s per watt at full utilization.
-    pub fn green500(&self, achieved_fraction: f64) -> f64 {
-        self.hpl_sustained(achieved_fraction) / self.machine_watts(1.0)
+    pub fn green500(&self, achieved_fraction: f64) -> Result<f64> {
+        Ok(self.hpl_sustained(achieved_fraction) / self.machine_watts(1.0)?)
     }
 
     /// Energy in joules for a job occupying `nodes` nodes for `seconds`
     /// at `gpu_utilization`.
-    pub fn job_energy(&self, nodes: usize, seconds: f64, gpu_utilization: f64) -> f64 {
-        assert!(nodes <= self.nodes);
+    pub fn job_energy(&self, nodes: usize, seconds: f64, gpu_utilization: f64) -> Result<f64> {
+        Self::check_utilization(gpu_utilization)?;
+        if nodes > self.nodes {
+            return Err(BoosterError::Config(format!(
+                "job wants {nodes} nodes but the machine has {}",
+                self.nodes
+            )));
+        }
+        if !(seconds >= 0.0 && seconds.is_finite()) {
+            return Err(BoosterError::Config(format!(
+                "job duration must be finite and non-negative, got {seconds}"
+            )));
+        }
         let g = &self.node.gpu;
         let gpu_w = g.idle_watts + gpu_utilization * (g.tdp_watts - g.idle_watts);
         let node_w = self.node.host_watts + self.node.gpus_per_node as f64 * gpu_w;
-        node_w * nodes as f64 * (1.0 + self.overhead) * seconds
+        Ok(node_w * nodes as f64 * (1.0 + self.overhead) * seconds)
     }
 }
 
@@ -72,7 +95,7 @@ mod tests {
         // §2.2: "25 GFLOP/(s W)" measured (Green500 Nov 2020, 25.0 exact:
         // Rmax 44.12 PFLOP/s / 1764 kW). Our model should land within 15%.
         let m = PowerModel::juwels_booster();
-        let g = m.green500(0.62);
+        let g = m.green500(0.62).unwrap();
         assert!(
             (g - 25e9).abs() / 25e9 < 0.15,
             "green500 {:.2} GFLOP/sW",
@@ -95,17 +118,29 @@ mod tests {
     #[test]
     fn power_scales_with_utilization() {
         let m = PowerModel::juwels_booster();
-        assert!(m.machine_watts(1.0) > m.machine_watts(0.2));
+        assert!(m.machine_watts(1.0).unwrap() > m.machine_watts(0.2).unwrap());
         // Full machine should sit in the published ~1.7-2.5 MW class.
-        let w = m.machine_watts(1.0);
+        let w = m.machine_watts(1.0).unwrap();
         assert!(w > 1.5e6 && w < 2.6e6, "machine watts {w}");
     }
 
     #[test]
     fn job_energy_linear_in_time_and_nodes() {
         let m = PowerModel::juwels_booster();
-        let e1 = m.job_energy(10, 100.0, 0.9);
-        assert!((m.job_energy(10, 200.0, 0.9) - 2.0 * e1).abs() < 1e-6);
-        assert!((m.job_energy(20, 100.0, 0.9) - 2.0 * e1).abs() < 1e-6);
+        let e1 = m.job_energy(10, 100.0, 0.9).unwrap();
+        assert!((m.job_energy(10, 200.0, 0.9).unwrap() - 2.0 * e1).abs() < 1e-6);
+        assert!((m.job_energy(20, 100.0, 0.9).unwrap() - 2.0 * e1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_inputs_fail_the_row_not_the_process() {
+        let m = PowerModel::juwels_booster();
+        assert!(m.machine_watts(1.5).is_err());
+        assert!(m.machine_watts(-0.1).is_err());
+        assert!(m.machine_watts(f64::NAN).is_err());
+        assert!(m.job_energy(m.nodes + 1, 10.0, 0.9).is_err());
+        assert!(m.job_energy(1, f64::INFINITY, 0.9).is_err());
+        assert!(m.job_energy(1, -1.0, 0.9).is_err());
+        assert!(m.job_energy(1, 10.0, 2.0).is_err());
     }
 }

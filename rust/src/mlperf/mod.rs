@@ -156,7 +156,7 @@ pub fn measure(task: &Task, machine: Machine, topo: &Topology, n_gpus: usize, se
     let grad_bytes = vec![task.params * 4.0];
     let mut rng = Rng::seed_from(seed);
     model.throughput(
-        &topo.first_gpus(n_gpus),
+        &topo.first_gpus(n_gpus)?,
         flops_per_gpu,
         task.batch_per_gpu,
         &grad_bytes,

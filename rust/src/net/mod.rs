@@ -769,7 +769,7 @@ mod tests {
     fn engines_agree_on_ring_round() {
         // The bench workload: a 512-GPU ring round.
         let t = topo();
-        let gpus = t.first_gpus(512);
+        let gpus = t.first_gpus(512).unwrap();
         let flows: Vec<Flow> = (0..gpus.len())
             .map(|i| Flow {
                 path: t.route(gpus[i], gpus[(i + 1) % gpus.len()], i as u64),

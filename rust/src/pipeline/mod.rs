@@ -24,6 +24,27 @@ pub enum Schedule {
     OneFOneB,
 }
 
+impl Schedule {
+    /// Canonical scenario-spec key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Schedule::GPipe => "gpipe",
+            Schedule::OneFOneB => "1f1b",
+        }
+    }
+
+    /// Parse a schedule key (case-insensitive).
+    pub fn parse(s: &str) -> Result<Schedule> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "gpipe" => Ok(Schedule::GPipe),
+            "1f1b" | "one-f-one-b" | "pipedream-flush" => Ok(Schedule::OneFOneB),
+            _ => Err(BoosterError::Config(format!(
+                "unknown pipeline schedule '{s}' (expected gpipe or 1f1b)"
+            ))),
+        }
+    }
+}
+
 /// A model to be pipelined.
 #[derive(Debug, Clone, Copy)]
 pub struct PipelinedModel {
@@ -75,7 +96,15 @@ pub struct PipelineStep {
 
 /// Simulate one training step of `model` split into `stages` consecutive
 /// stages over `gpus` (round-robin stage assignment must hold
-/// `gpus.len() == stages`), with `microbatches` of `micro_size` samples.
+/// `gpus.len() == stages`), with `microbatches` of `micro_size` samples,
+/// computing in `precision`.
+///
+/// The memory-fit check covers **state + activations**: parameter/optimizer
+/// state is sharded `1/s`, while the activation high-water mark depends on
+/// the schedule ([`activation_memory`]) — GPipe holds all `m` in-flight
+/// microbatches, 1F1B at most `s`. This is where 1F1B starts passing
+/// configurations GPipe rejects.
+#[allow(clippy::too_many_arguments)]
 pub fn step_time(
     topo: &Topology,
     gpus: &[GpuId],
@@ -84,18 +113,26 @@ pub fn step_time(
     microbatches: usize,
     micro_size: usize,
     efficiency: f64,
+    precision: Precision,
 ) -> Result<PipelineStep> {
     let s = gpus.len();
     if s < 1 || microbatches < 1 {
         return Err(BoosterError::Config("empty pipeline".into()));
     }
-    // Memory check: this partitioning must actually fit.
+    // Memory check: this partitioning must actually fit, state AND
+    // schedule-dependent activation high-water mark.
     let hbm = topo.node_spec.gpu.hbm_bytes as f64;
-    if model.state_bytes() / s as f64 > hbm {
+    let state = model.state_bytes() / s as f64;
+    let act = activation_memory(model, schedule, s, microbatches, micro_size);
+    if state + act > hbm {
         return Err(BoosterError::Config(format!(
-            "model needs >= {} stages on {} GB GPUs",
+            "pipeline does not fit: {:.1} GB state/stage + {:.1} GB activations ({}) \
+             > {:.0} GB HBM (model needs >= {} stages for state alone)",
+            state / 1e9,
+            act / 1e9,
+            schedule.key(),
+            hbm / 1e9,
             model.min_stages(hbm),
-            hbm / 1e9
         )));
     }
     // Per-stage fwd+bwd compute for one microbatch (uniform split).
@@ -103,7 +140,7 @@ pub fn step_time(
     let stage_time = topo
         .node_spec
         .gpu
-        .kernel_time(flops, 0.0, Precision::Bf16Tc, efficiency);
+        .kernel_time(flops, 0.0, precision, efficiency);
     // Inter-stage activation transfer (fwd) + gradient-of-activation (bwd).
     let transfer_time = if s > 1 {
         let bytes = model.activation_bytes_per_sample * micro_size as f64;
@@ -118,9 +155,8 @@ pub fn step_time(
     } else {
         0.0
     };
-    // Both schedules share the (s-1)/(m+s-1) bubble; 1F1B lowers memory,
-    // not time (flush variant).
-    let _ = schedule;
+    // Both schedules share the (s-1)/(m+s-1) bubble; 1F1B lowers memory
+    // (checked above), not time (flush variant).
     let m = microbatches as f64;
     let slot = stage_time + 2.0 * transfer_time;
     let total = (m + s as f64 - 1.0) * slot;
@@ -164,7 +200,38 @@ mod tests {
         let hbm = 40e9;
         assert!(m.min_stages(hbm) >= 70, "stages {}", m.min_stages(hbm));
         let t = topo();
-        assert!(step_time(&t, &t.first_gpus(4), &m, Schedule::GPipe, 8, 1, 0.4).is_err());
+        let gpus = t.first_gpus(4).unwrap();
+        let p = Precision::Bf16Tc;
+        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 8, 1, 0.4, p).is_err());
+    }
+
+    #[test]
+    fn memory_check_includes_activations_where_1f1b_beats_gpipe() {
+        // State fits easily (1 GB/stage) but activations don't under
+        // GPipe: 16 microbatches x 8 GB in flight = 128 GB per stage.
+        // 1F1B caps in-flight microbatches at the stage count (4 x 8 GB
+        // = 32 GB), which squeezes under the A100-40GB ceiling.
+        let t = topo();
+        let m = PipelinedModel {
+            params: 250e6, // 4 GB state over 4 stages
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 2e9,
+            state_bytes_per_param: 16.0,
+        };
+        let gpus = t.first_gpus(4).unwrap();
+        let p = Precision::Bf16Tc;
+        let gpipe = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p);
+        assert!(gpipe.is_err(), "GPipe must reject: activations exceed HBM");
+        let ofob = step_time(&t, &gpus, &m, Schedule::OneFOneB, 16, 4, 0.4, p);
+        ofob.expect("1F1B holds <= s microbatches and fits");
+    }
+
+    #[test]
+    fn schedule_keys_roundtrip() {
+        for s in [Schedule::GPipe, Schedule::OneFOneB] {
+            assert_eq!(Schedule::parse(s.key()).unwrap(), s);
+        }
+        assert!(Schedule::parse("interleaved").is_err());
     }
 
     #[test]
@@ -176,9 +243,10 @@ mod tests {
             activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
             state_bytes_per_param: 16.0,
         };
-        let gpus = t.first_gpus(8);
-        let few = step_time(&t, &gpus, &m, Schedule::GPipe, 2, 4, 0.4).unwrap();
-        let many = step_time(&t, &gpus, &m, Schedule::GPipe, 64, 4, 0.4).unwrap();
+        let gpus = t.first_gpus(8).unwrap();
+        let p = Precision::Bf16Tc;
+        let few = step_time(&t, &gpus, &m, Schedule::GPipe, 2, 4, 0.4, p).unwrap();
+        let many = step_time(&t, &gpus, &m, Schedule::GPipe, 64, 4, 0.4, p).unwrap();
         assert!(few.bubble_fraction > many.bubble_fraction);
         assert!((few.bubble_fraction - 7.0 / 9.0).abs() < 1e-9);
         assert!(many.bubble_fraction < 0.12);
@@ -193,9 +261,10 @@ mod tests {
             activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
             state_bytes_per_param: 16.0,
         };
-        let gpus = t.first_gpus(8);
-        let a = step_time(&t, &gpus, &m, Schedule::GPipe, 32, 4, 0.4).unwrap();
-        let b = step_time(&t, &gpus, &m, Schedule::OneFOneB, 32, 4, 0.4).unwrap();
+        let gpus = t.first_gpus(8).unwrap();
+        let p = Precision::Bf16Tc;
+        let a = step_time(&t, &gpus, &m, Schedule::GPipe, 32, 4, 0.4, p).unwrap();
+        let b = step_time(&t, &gpus, &m, Schedule::OneFOneB, 32, 4, 0.4, p).unwrap();
         assert!((a.total - b.total).abs() < 1e-12);
         let mem_gpipe = activation_memory(&m, Schedule::GPipe, 8, 32, 4);
         let mem_1f1b = activation_memory(&m, Schedule::OneFOneB, 8, 32, 4);
@@ -212,10 +281,11 @@ mod tests {
             state_bytes_per_param: 16.0,
         };
         // 4 stages inside one node (NVLink) vs spread over 4 nodes.
-        let intra = t.first_gpus(4);
+        let intra = t.first_gpus(4).unwrap();
         let inter: Vec<GpuId> = (0..4).map(|n| GpuId { node: n * 48, gpu: 0 }).collect();
-        let a = step_time(&t, &intra, &m, Schedule::GPipe, 16, 4, 0.4).unwrap();
-        let b = step_time(&t, &inter, &m, Schedule::GPipe, 16, 4, 0.4).unwrap();
+        let p = Precision::Bf16Tc;
+        let a = step_time(&t, &intra, &m, Schedule::GPipe, 16, 4, 0.4, p).unwrap();
+        let b = step_time(&t, &inter, &m, Schedule::GPipe, 16, 4, 0.4, p).unwrap();
         assert!(b.transfer_time > a.transfer_time);
         assert!(b.total > a.total);
     }

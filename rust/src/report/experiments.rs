@@ -82,12 +82,12 @@ pub fn cmd_system(args: &[String]) -> Result<i32> {
     ]);
     t2.row(&[
         "Green500 metric".into(),
-        format!("{:.1} GFLOP/(s W)", power.green500(0.62) / 1e9),
+        format!("{:.1} GFLOP/(s W)", power.green500(0.62)? / 1e9),
         paper("25 GFLOP/(s W)"),
     ]);
     t2.row(&[
         "machine power (busy)".into(),
-        format!("{:.2} MW", power.machine_watts(1.0) / 1e6),
+        format!("{:.2} MW", power.machine_watts(1.0)? / 1e6),
         paper("~1.8 MW"),
     ]);
     out.push_str(&t2.render());
@@ -171,7 +171,9 @@ pub fn cmd_topo(args: &[String]) -> Result<i32> {
 }
 
 /// `booster sweep` — runexp-style scenario grid over machines, workloads,
-/// scales, precisions and collective settings. Emits a combined CSV plus
+/// scales, precisions, collective settings and hybrid pipeline×data
+/// parallelism (`stages`, `microbatches`, `schedule`). Machine groups
+/// evaluate on parallel threads; emits a combined CSV plus
 /// `results/BENCH_sweep.json`.
 pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
@@ -183,6 +185,9 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .str_flag("compression", "none", "base wire compression (none|fp16)")
         .str_flag("placement", "compact", "base placement (compact|spread)")
         .float_flag("bucket-mb", 64.0, "base fusion-buffer size, MB")
+        .int_flag("stages", 1, "base pipeline stages per replica (1 = data parallel)")
+        .int_flag("microbatches", 1, "base microbatches per step per replica")
+        .str_flag("schedule", "gpipe", "base microbatch schedule (gpipe|1f1b)")
         .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
         .bool_flag("list", false, "list presets and sweepable keys, then exit")
         .bool_flag("help", false, "show help");
@@ -191,6 +196,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("{}", spec.help("sweep"));
         println!("sweepable keys: {}", sweep::SWEEPABLE_KEYS.join(", "));
         println!("example: booster sweep --param nodes=48,96 --param precision=bf16,tf32");
+        println!("example: booster sweep --param stages=1,2,4 --param machine=juwels_booster,leonardo");
         return Ok(0);
     }
     if flags.get_bool("list") {
@@ -207,6 +213,9 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .compression(flags.get_str("compression"))
         .placement(flags.get_str("placement"))
         .bucket_bytes(flags.get_f64("bucket-mb") * 1e6)
+        .pipeline_stages(flags.get_usize("stages"))
+        .microbatches(flags.get_usize("microbatches"))
+        .schedule(flags.get_str("schedule"))
         .build()?;
     let axes = sweep::parse_params(flags.get_strs("param"))?;
     let outcome = sweep::run(&base, &axes)?;
@@ -218,8 +227,8 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         base.name
     );
     let mut t = Table::new(&[
-        "scenario", "gpus", "algo", "comp", "compute ms", "comm ms", "step ms", "samples/s",
-        "kJ/step",
+        "scenario", "gpus", "algo", "comp", "stages", "bubble %", "compute ms", "comm ms",
+        "step ms", "samples/s", "kJ/step",
     ]);
     for r in &outcome.rows {
         t.row(&[
@@ -227,6 +236,8 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             r.gpus.to_string(),
             r.algo.clone(),
             r.compression.clone(),
+            format!("{}x{}", r.stages, r.microbatches),
+            format!("{:.1}", r.bubble_pct),
             format!("{:.3}", r.compute_ms),
             format!("{:.3}", r.comm_ms),
             format!("{:.3}", r.step_ms),
@@ -235,6 +246,15 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         ]);
     }
     out.push_str(&t.render());
+    if !outcome.infeasible.is_empty() {
+        out.push_str(&format!(
+            "\n{} infeasible point(s) skipped (memory fit):\n",
+            outcome.infeasible.len()
+        ));
+        for (scenario, reason) in &outcome.infeasible {
+            out.push_str(&format!("  {scenario}: {reason}\n"));
+        }
+    }
     out.push_str(&format!(
         "\nshared collective cost cache: {} hits / {} simulations ({:.0}% hit rate)\n",
         outcome.cache_hits,

@@ -115,7 +115,7 @@ pub fn scaling_table(topo: &Topology, node_counts: &[usize], seed: u64) -> Resul
             stall_frac: 1.5,
         };
         let mut rng = Rng::seed_from(seed ^ nodes as u64);
-        let gpus = topo.first_gpus(g);
+        let gpus = topo.first_gpus(g)?;
         let steps = samples_per_epoch.div_ceil(batch_per_gpu * g);
         let flops_per_gpu = flops_per_sample * batch_per_gpu as f64;
         let iters = model.run_steps(&gpus, flops_per_gpu, &grad_bytes, 200.min(steps), &mut rng)?;

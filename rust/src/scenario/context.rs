@@ -23,6 +23,7 @@ use crate::runtime::Engine;
 use crate::scenario::presets;
 use crate::scenario::spec::{MachineSpec, ScenarioSpec};
 use crate::topology::{GpuId, Topology};
+use crate::train::hybrid::HybridTimeline;
 use crate::train::timeline::TimelineModel;
 use crate::util::error::Result;
 
@@ -74,6 +75,14 @@ impl ExperimentContext {
     /// collective model — reuse one instance to benefit from the cache.
     pub fn timeline(&self) -> Result<TimelineModel<'_>> {
         TimelineModel::from_scenario(&self.spec, &self.topo)
+    }
+
+    /// A hybrid pipeline×data timeline configured from the scenario
+    /// (`parallelism.pipeline_stages` / `microbatches` / `schedule` on top
+    /// of the timeline settings). At one stage and one microbatch it
+    /// degenerates exactly to [`ExperimentContext::timeline`]'s step cost.
+    pub fn hybrid_timeline(&self) -> Result<HybridTimeline<'_>> {
+        HybridTimeline::from_scenario(&self.spec, &self.topo)
     }
 
     /// The job's GPUs under the scenario's node count and placement.
@@ -151,6 +160,28 @@ mod tests {
         assert_eq!(a.comm, b.comm, "fluid comm cost is deterministic");
         let (hits, _) = tl.collectives.cache_stats();
         assert!(hits >= 1, "second evaluation must be served by the cache");
+    }
+
+    #[test]
+    fn hybrid_timeline_matches_the_scenario_shape() {
+        let spec = ScenarioSpec::builder(presets::machine("leonardo").unwrap())
+            .nodes(4)
+            .pipeline_stages(4)
+            .microbatches(8)
+            .schedule("1f1b")
+            .build()
+            .unwrap();
+        let ctx = ExperimentContext::new(spec).unwrap();
+        let hy = ctx.hybrid_timeline().unwrap();
+        assert_eq!(hy.stages, 4);
+        assert_eq!(hy.microbatches, 8);
+        assert_eq!(hy.schedule, crate::pipeline::Schedule::OneFOneB);
+        let gpus = ctx.job_gpus().unwrap();
+        let mut rng = crate::util::rng::Rng::seed_from(0);
+        let batch = ctx.spec.workload.batch_per_gpu;
+        let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert_eq!(st.replicas, 4, "16 GPUs / 4 stages");
+        assert!(st.bubble_fraction > 0.0);
     }
 
     #[test]

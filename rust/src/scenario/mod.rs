@@ -13,7 +13,10 @@
 //!   power model, lazy engine, cached collective/timeline models) every
 //!   `cmd_*` driver and bench consumes;
 //! * [`sweep`] — runexp-style `--param a=1,2` grid expansion and the
-//!   shared-cache evaluation behind `booster sweep`.
+//!   shared-cache, machine-parallel evaluation behind `booster sweep`
+//!   (every point priced by the hybrid pipeline×data
+//!   [`crate::train::hybrid::HybridTimeline`], which degenerates exactly
+//!   to the data-parallel timeline at `stages=1`).
 //!
 //! See `rust/src/scenario/README.md` for the spec schema, the preset
 //! numbers with paper citations, and how the context threads the §Perf

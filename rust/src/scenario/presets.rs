@@ -141,12 +141,15 @@ pub fn machine(name: &str) -> Result<MachineSpec> {
 
 /// Names of every workload preset, in registry order.
 pub fn workload_names() -> Vec<&'static str> {
-    vec!["resnet50", "transformer", "bert", "convlstm"]
+    vec!["resnet50", "transformer", "bert", "convlstm", "gpt3_175b"]
 }
 
 /// Look up a workload preset by name. Profiles mirror the MLPerf v0.7
 /// reference models in [`crate::mlperf::tasks`] plus the paper's §3.2
-/// convLSTM forecaster.
+/// convLSTM forecaster and the §2.3 motivating GPT-3-scale model.
+/// Activation bytes are the per-sample tensor crossing a pipeline-stage
+/// boundary (feature map / seq x hidden at the cut, 2 B elements); state
+/// is Adam mixed precision, 16 B/param, throughout.
 pub fn workload(name: &str) -> Result<WorkloadSpec> {
     let w = match name {
         "resnet50" => WorkloadSpec {
@@ -155,6 +158,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             params: 25.6e6,
             batch_per_gpu: 208,
             efficiency: 0.10,
+            activation_bytes_per_sample: 1.6e6, // 28x28x1024 fmap, 2 B
+            state_bytes_per_param: 16.0,
         },
         "transformer" => WorkloadSpec {
             name: "transformer".into(),
@@ -162,6 +167,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             params: 210.0e6,
             batch_per_gpu: 5120,
             efficiency: 0.25,
+            activation_bytes_per_sample: 33.0e3 * 2.0, // ~33-token seq x 1024
+            state_bytes_per_param: 16.0,
         },
         "bert" => WorkloadSpec {
             name: "bert".into(),
@@ -169,6 +176,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             params: 335.0e6,
             batch_per_gpu: 24,
             efficiency: 0.12,
+            activation_bytes_per_sample: 512.0 * 1024.0 * 2.0, // seq x hidden
+            state_bytes_per_param: 16.0,
         },
         "convlstm" => WorkloadSpec {
             name: "convlstm".into(),
@@ -176,6 +185,21 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             params: 4.5e6,
             batch_per_gpu: 16,
             efficiency: 0.08,
+            activation_bytes_per_sample: 2.0e6, // stacked hidden fields
+            state_bytes_per_param: 16.0,
+        },
+        // The paper's §2.3 motivation for pipelining: a GPT-3-175B-class
+        // model (2.8 TB Adam state) that *cannot* run purely data-parallel
+        // on any 40-96 GB GPU — `pipeline_stages` is mandatory, enabling
+        // the data-parallel vs pipeline-parallel crossover study.
+        "gpt3_175b" => WorkloadSpec {
+            name: "gpt3_175b".into(),
+            fwd_flops_per_sample: 2.0 * 175e9 * 2048.0, // 2*params per token, seq 2048
+            params: 175e9,
+            batch_per_gpu: 1,
+            efficiency: 0.45,
+            activation_bytes_per_sample: 2048.0 * 12288.0 * 2.0, // seq x hidden, bf16
+            state_bytes_per_param: 16.0,
         },
         _ => {
             return Err(BoosterError::Config(format!(
@@ -244,8 +268,20 @@ mod tests {
             let w = workload(name).unwrap();
             assert_eq!(w.name, name);
             assert!(w.flops_per_gpu_step() > 0.0);
+            assert!(w.activation_bytes_per_sample > 0.0, "{name}");
+            assert!(w.state_bytes_per_param >= 4.0, "{name}");
         }
         assert!(workload("dlrm").is_err());
+    }
+
+    #[test]
+    fn gpt3_preset_demands_pipelining() {
+        // The §2.3 motivating model: Adam state alone needs >= 70 stages
+        // on 40 GB GPUs, so pure data parallelism can never hold it.
+        let w = workload("gpt3_175b").unwrap();
+        let m = w.pipelined_model();
+        assert!(m.min_stages(40e9) >= 70, "min stages {}", m.min_stages(40e9));
+        assert!(m.min_stages(96e9) >= 29, "even GH200 needs deep pipelines");
     }
 
     #[test]

@@ -45,6 +45,37 @@ fn req_str(j: &Json, key: &str) -> Result<String> {
         .to_string())
 }
 
+// Optional-field readers: absent keys take the default (so spec files
+// written before a field existed still load); present keys must type-check.
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| cfg(format!("field '{key}' must be a number"))),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| cfg(format!("field '{key}' must be a non-negative integer"))),
+    }
+}
+
+fn opt_str(j: &Json, key: &str, default: &str) -> Result<String> {
+    match j.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => Ok(v
+            .as_str()
+            .ok_or_else(|| cfg(format!("field '{key}' must be a string")))?
+            .to_string()),
+    }
+}
+
 /// Fabric parameters of a machine, in spec (data) form.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TopoSpec {
@@ -293,6 +324,12 @@ pub struct WorkloadSpec {
     pub batch_per_gpu: usize,
     /// Achieved fraction of the precision's peak FLOP/s.
     pub efficiency: f64,
+    /// Activation bytes crossing a pipeline-stage boundary per sample
+    /// (also the in-flight activation footprint the schedule multiplies).
+    pub activation_bytes_per_sample: f64,
+    /// Bytes of training state per parameter (weights + grads + optimizer
+    /// moments; Adam mixed precision ≈ 16 B/param).
+    pub state_bytes_per_param: f64,
 }
 
 impl WorkloadSpec {
@@ -306,6 +343,17 @@ impl WorkloadSpec {
         vec![self.params * 4.0]
     }
 
+    /// The workload's pipeline-parallel form (what
+    /// [`crate::pipeline::step_time`] prices).
+    pub fn pipelined_model(&self) -> crate::pipeline::PipelinedModel {
+        crate::pipeline::PipelinedModel {
+            params: self.params,
+            fwd_flops_per_sample: self.fwd_flops_per_sample,
+            activation_bytes_per_sample: self.activation_bytes_per_sample,
+            state_bytes_per_param: self.state_bytes_per_param,
+        }
+    }
+
     /// Serialize.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -314,10 +362,16 @@ impl WorkloadSpec {
             ("params", Json::Num(self.params)),
             ("batch_per_gpu", Json::Num(self.batch_per_gpu as f64)),
             ("efficiency", Json::Num(self.efficiency)),
+            (
+                "activation_bytes_per_sample",
+                Json::Num(self.activation_bytes_per_sample),
+            ),
+            ("state_bytes_per_param", Json::Num(self.state_bytes_per_param)),
         ])
     }
 
-    /// Deserialize.
+    /// Deserialize. The pipeline fields default (1 MB activations,
+    /// 16 B/param state) when absent so pre-hybrid spec files still load.
     pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
         Ok(WorkloadSpec {
             name: req_str(j, "name")?,
@@ -325,11 +379,15 @@ impl WorkloadSpec {
             params: req_f64(j, "params")?,
             batch_per_gpu: req_usize(j, "batch_per_gpu")?,
             efficiency: req_f64(j, "efficiency")?,
+            activation_bytes_per_sample: opt_f64(j, "activation_bytes_per_sample", 1e6)?,
+            state_bytes_per_param: opt_f64(j, "state_bytes_per_param", 16.0)?,
         })
     }
 }
 
-/// How the workload is spread over the machine.
+/// How the workload is spread over the machine: data parallelism across
+/// replicas, optionally composed with pipeline parallelism inside each
+/// replica (hybrid pipeline×data, §2.3 "model parallelism or pipelining").
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParallelismSpec {
     /// Nodes the job occupies (GPUs = nodes x machine.gpus_per_node).
@@ -344,9 +402,22 @@ pub struct ParallelismSpec {
     pub bucket_bytes: f64,
     /// Fraction of the allreduce overlapped with backprop.
     pub overlap: f64,
+    /// Pipeline stages per data-parallel replica; 1 = pure data parallel.
+    /// Must divide the job's GPU count (`nodes x gpus_per_node`).
+    pub pipeline_stages: usize,
+    /// Microbatches per step per replica (pipeline fill depth).
+    pub microbatches: usize,
+    /// Microbatch schedule key (see [`crate::pipeline::Schedule::parse`]):
+    /// `"gpipe"` or `"1f1b"`.
+    pub schedule: String,
 }
 
 impl ParallelismSpec {
+    /// Data-parallel replica count for a job of `job_gpus` GPUs.
+    pub fn replicas(&self, job_gpus: usize) -> usize {
+        job_gpus / self.pipeline_stages.max(1)
+    }
+
     /// Serialize.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -356,10 +427,15 @@ impl ParallelismSpec {
             ("compression", Json::Str(self.compression.clone())),
             ("bucket_bytes", Json::Num(self.bucket_bytes)),
             ("overlap", Json::Num(self.overlap)),
+            ("pipeline_stages", Json::Num(self.pipeline_stages as f64)),
+            ("microbatches", Json::Num(self.microbatches as f64)),
+            ("schedule", Json::Str(self.schedule.clone())),
         ])
     }
 
-    /// Deserialize.
+    /// Deserialize. The hybrid fields default to pure data parallelism
+    /// (`stages=1`, `microbatches=1`, gpipe) when absent so pre-hybrid
+    /// spec files still load.
     pub fn from_json(j: &Json) -> Result<ParallelismSpec> {
         Ok(ParallelismSpec {
             nodes: req_usize(j, "nodes")?,
@@ -368,6 +444,9 @@ impl ParallelismSpec {
             compression: req_str(j, "compression")?,
             bucket_bytes: req_f64(j, "bucket_bytes")?,
             overlap: req_f64(j, "overlap")?,
+            pipeline_stages: opt_usize(j, "pipeline_stages", 1)?,
+            microbatches: opt_usize(j, "microbatches", 1)?,
+            schedule: opt_str(j, "schedule", "gpipe")?,
         })
     }
 }
@@ -423,6 +502,9 @@ impl ScenarioSpec {
             compression: "none".into(),
             bucket_bytes: 64e6,
             overlap: 0.7,
+            pipeline_stages: 1,
+            microbatches: 1,
+            schedule: "gpipe".into(),
             precision: "fp16_tc".into(),
         }
     }
@@ -444,6 +526,12 @@ impl ScenarioSpec {
         if !(w.efficiency > 0.0 && w.efficiency <= 1.0) {
             return fail(format!("efficiency {} outside (0,1]", w.efficiency));
         }
+        if w.activation_bytes_per_sample < 0.0 || !w.activation_bytes_per_sample.is_finite() {
+            return fail("activation_bytes_per_sample must be non-negative".into());
+        }
+        if w.state_bytes_per_param < 0.0 || !w.state_bytes_per_param.is_finite() {
+            return fail("state_bytes_per_param must be non-negative".into());
+        }
         let p = &self.parallelism;
         if p.nodes == 0 {
             return fail("parallelism.nodes must be > 0".into());
@@ -463,6 +551,21 @@ impl ScenarioSpec {
         if !(0.0..=1.0).contains(&p.overlap) {
             return fail(format!("overlap {} outside [0,1]", p.overlap));
         }
+        if p.pipeline_stages == 0 {
+            return fail("pipeline_stages must be > 0".into());
+        }
+        if p.microbatches == 0 {
+            return fail("microbatches must be > 0".into());
+        }
+        let job_gpus = p.nodes * self.machine.gpus_per_node;
+        if job_gpus % p.pipeline_stages != 0 {
+            return fail(format!(
+                "pipeline_stages {} does not divide the job's {} GPUs \
+                 ({} nodes x {} GPUs/node)",
+                p.pipeline_stages, job_gpus, p.nodes, self.machine.gpus_per_node
+            ));
+        }
+        crate::pipeline::Schedule::parse(&p.schedule)?;
         Precision::parse(&self.precision)?;
         Ok(())
     }
@@ -478,10 +581,10 @@ impl ScenarioSpec {
                 topo.total_gpus()
             )));
         }
-        Ok(match GpuPlacement::parse(&self.parallelism.placement)? {
+        match GpuPlacement::parse(&self.parallelism.placement)? {
             GpuPlacement::Compact => topo.first_gpus(n),
             GpuPlacement::Spread => topo.spread_gpus(n),
-        })
+        }
     }
 
     /// Resolved precision.
@@ -497,6 +600,31 @@ impl ScenarioSpec {
     /// Resolved wire compression.
     pub fn compression(&self) -> Result<Compression> {
         Compression::parse(&self.parallelism.compression)
+    }
+
+    /// Resolved microbatch schedule.
+    pub fn schedule(&self) -> Result<crate::pipeline::Schedule> {
+        crate::pipeline::Schedule::parse(&self.parallelism.schedule)
+    }
+
+    /// Canonical auto-generated scenario name:
+    /// `machine/workload/nN/precision`, with a `/pSxM-schedule` suffix
+    /// when the scenario actually pipelines. Used by the builder default
+    /// and by the sweep driver when it renames grid points.
+    pub fn auto_name(&self) -> String {
+        let mut name = format!(
+            "{}/{}/n{}/{}",
+            self.machine.name, self.workload.name, self.parallelism.nodes, self.precision
+        );
+        if self.parallelism.pipeline_stages > 1 || self.parallelism.microbatches > 1 {
+            name.push_str(&format!(
+                "/p{}x{}-{}",
+                self.parallelism.pipeline_stages,
+                self.parallelism.microbatches,
+                self.parallelism.schedule
+            ));
+        }
+        name
     }
 
     /// Serialize the full scenario.
@@ -536,6 +664,9 @@ pub struct ScenarioBuilder {
     compression: String,
     bucket_bytes: f64,
     overlap: f64,
+    pipeline_stages: usize,
+    microbatches: usize,
+    schedule: String,
     precision: String,
 }
 
@@ -588,6 +719,24 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Pipeline stages per data-parallel replica (1 = pure data parallel).
+    pub fn pipeline_stages(mut self, s: usize) -> Self {
+        self.pipeline_stages = s;
+        self
+    }
+
+    /// Microbatches per step per replica.
+    pub fn microbatches(mut self, m: usize) -> Self {
+        self.microbatches = m;
+        self
+    }
+
+    /// Microbatch schedule key (`gpipe` or `1f1b`).
+    pub fn schedule(mut self, s: &str) -> Self {
+        self.schedule = s.to_string();
+        self
+    }
+
     /// Precision key.
     pub fn precision(mut self, p: &str) -> Self {
         self.precision = p.to_string();
@@ -599,14 +748,8 @@ impl ScenarioBuilder {
         let workload = self
             .workload
             .unwrap_or_else(crate::scenario::presets::default_workload);
-        let name = self.name.unwrap_or_else(|| {
-            format!(
-                "{}/{}/n{}/{}",
-                self.machine.name, workload.name, self.nodes, self.precision
-            )
-        });
-        let spec = ScenarioSpec {
-            name,
+        let mut spec = ScenarioSpec {
+            name: String::new(),
             machine: self.machine,
             workload,
             parallelism: ParallelismSpec {
@@ -616,9 +759,13 @@ impl ScenarioBuilder {
                 compression: self.compression,
                 bucket_bytes: self.bucket_bytes,
                 overlap: self.overlap,
+                pipeline_stages: self.pipeline_stages,
+                microbatches: self.microbatches,
+                schedule: self.schedule,
             },
             precision: self.precision,
         };
+        spec.name = self.name.unwrap_or_else(|| spec.auto_name());
         spec.validate()?;
         Ok(spec)
     }
@@ -684,6 +831,54 @@ mod tests {
         let mut m = presets::machine("juwels_booster").unwrap();
         m.topo.global_links_per_pair = 0;
         assert!(m.validate().is_err(), "multi-cell dragonfly needs links");
+    }
+
+    #[test]
+    fn hybrid_fields_roundtrip_and_validate() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .workload(presets::workload("gpt3_175b").unwrap())
+            .nodes(32)
+            .pipeline_stages(8)
+            .microbatches(16)
+            .schedule("1f1b")
+            .build()
+            .unwrap();
+        assert!(spec.name.contains("/p8x16-1f1b"), "{}", spec.name);
+        assert_eq!(spec.schedule().unwrap(), crate::pipeline::Schedule::OneFOneB);
+        assert_eq!(spec.parallelism.replicas(32 * 4), 16);
+        let j = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+
+        let m = presets::machine("juwels_booster").unwrap();
+        // 2 nodes x 4 GPUs = 8 GPUs: 3 stages does not divide.
+        assert!(
+            ScenarioSpec::builder(m.clone()).pipeline_stages(3).build().is_err(),
+            "stages must divide the job GPUs"
+        );
+        assert!(ScenarioSpec::builder(m.clone()).pipeline_stages(0).build().is_err());
+        assert!(ScenarioSpec::builder(m.clone()).microbatches(0).build().is_err());
+        assert!(
+            ScenarioSpec::builder(m).schedule("interleaved").build().is_err(),
+            "unknown schedule key"
+        );
+    }
+
+    #[test]
+    fn pre_hybrid_json_defaults_to_data_parallel() {
+        // A parallelism/workload object written before the hybrid fields
+        // existed must still load, as pure data parallelism.
+        let legacy_p = r#"{"nodes":4,"placement":"compact","algo":"ring",
+            "compression":"none","bucket_bytes":64000000,"overlap":0.7}"#;
+        let p = ParallelismSpec::from_json(&Json::parse(legacy_p).unwrap()).unwrap();
+        assert_eq!(p.pipeline_stages, 1);
+        assert_eq!(p.microbatches, 1);
+        assert_eq!(p.schedule, "gpipe");
+        let legacy_w = r#"{"name":"bert","fwd_flops_per_sample":343e9,"params":335e6,
+            "batch_per_gpu":24,"efficiency":0.12}"#;
+        let w = WorkloadSpec::from_json(&Json::parse(legacy_w).unwrap()).unwrap();
+        assert_eq!(w.state_bytes_per_param, 16.0);
+        assert!(w.activation_bytes_per_sample > 0.0);
     }
 
     #[test]

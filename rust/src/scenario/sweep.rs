@@ -4,13 +4,25 @@
 //! the grid, the **first axis is the outermost loop** (changes least
 //! frequently), and expansion order is fully deterministic so CSV rows are
 //! stable across runs. Points sharing a machine are priced through one
-//! [`TimelineModel`] (and therefore one pattern-level
+//! [`HybridTimeline`] (and therefore one pattern-level
 //! [`crate::collectives::CostCache`]): a sweep that revisits a placement
 //! at new byte sizes pays interpolation, not flow simulation (§Perf).
+//!
+//! Every point is priced by the hybrid pipeline×data model; at
+//! `stages=1, microbatches=1` (the defaults) that degenerates *exactly*
+//! to the pure data-parallel [`crate::train::timeline::TimelineModel`],
+//! so pre-hybrid sweeps produce identical numbers.
+//!
+//! **Parallel execution:** machine groups are independent (each owns its
+//! topology and collective model), so [`run`] evaluates them on scoped
+//! threads — one worker per machine in the grid — and then merges rows
+//! back into expansion order and sums the per-worker cache stats.
+//! [`run_sequential`] is the same evaluation on the caller's thread; a
+//! differential test pins byte-identical CSV between the two paths.
 
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
-use crate::train::timeline::TimelineModel;
+use crate::train::hybrid::HybridTimeline;
 use crate::util::error::{BoosterError, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -25,7 +37,7 @@ pub struct ParamAxis {
 }
 
 /// Scenario fields a sweep may vary.
-pub const SWEEPABLE_KEYS: [&str; 9] = [
+pub const SWEEPABLE_KEYS: [&str; 12] = [
     "machine",
     "workload",
     "nodes",
@@ -35,6 +47,9 @@ pub const SWEEPABLE_KEYS: [&str; 9] = [
     "placement",
     "bucket_mb",
     "batch",
+    "stages",
+    "microbatches",
+    "schedule",
 ];
 
 /// Group comma-split `--param` entries back into axes. The flag parser
@@ -114,6 +129,9 @@ pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()
             spec.parallelism.bucket_bytes = mb * 1e6;
         }
         "batch" => spec.workload.batch_per_gpu = value.parse().map_err(|_| bad_num())?,
+        "stages" => spec.parallelism.pipeline_stages = value.parse().map_err(|_| bad_num())?,
+        "microbatches" => spec.parallelism.microbatches = value.parse().map_err(|_| bad_num())?,
+        "schedule" => spec.parallelism.schedule = value.to_string(),
         _ => {
             return Err(BoosterError::Config(format!(
                 "unknown sweep key '{key}' (sweepable: {})",
@@ -147,6 +165,14 @@ pub struct SweepRow {
     pub placement: String,
     /// Fusion-buffer size, MB.
     pub bucket_mb: f64,
+    /// Pipeline stages per data-parallel replica (1 = pure data parallel).
+    pub stages: usize,
+    /// Microbatches per step per replica.
+    pub microbatches: usize,
+    /// Microbatch schedule key.
+    pub schedule: String,
+    /// Pipeline bubble fraction as a percentage (0 at stages=1, mb=1).
+    pub bubble_pct: f64,
     /// Slowest-rank compute time per step, ms.
     pub compute_ms: f64,
     /// Full allreduce time per step, ms.
@@ -164,8 +190,15 @@ pub struct SweepRow {
 /// A completed sweep: rows in expansion order plus shared-cache stats.
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
-    /// One row per grid point, in deterministic expansion order.
+    /// One row per *feasible* grid point, in deterministic expansion
+    /// order. Points that fail the evaluation-time feasibility checks
+    /// (pipeline memory fit — only detectable when pricing) land in
+    /// [`SweepOutcome::infeasible`] instead of aborting the sweep; static
+    /// spec errors still fail the whole grid up front.
     pub rows: Vec<SweepRow>,
+    /// `(scenario, reason)` for grid points that were infeasible at
+    /// evaluation time, in expansion order per machine group.
+    pub infeasible: Vec<(String, String)>,
     /// Collective cost-cache hits across all machines in the sweep.
     pub cache_hits: u64,
     /// Flow simulations actually run.
@@ -177,11 +210,12 @@ impl SweepOutcome {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "scenario,machine,workload,nodes,gpus,precision,algo,compression,placement,\
-             bucket_mb,compute_ms,comm_ms,step_ms,samples_per_s,step_energy_kj\n",
+             bucket_mb,stages,microbatches,schedule,bubble_pct,\
+             compute_ms,comm_ms,step_ms,samples_per_s,step_energy_kj\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
                 r.scenario,
                 r.machine,
                 r.workload,
@@ -192,6 +226,10 @@ impl SweepOutcome {
                 r.compression,
                 r.placement,
                 r.bucket_mb,
+                r.stages,
+                r.microbatches,
+                r.schedule,
+                r.bubble_pct,
                 r.compute_ms,
                 r.comm_ms,
                 r.step_ms,
@@ -229,6 +267,10 @@ impl SweepOutcome {
                         ("compression", Json::Str(r.compression.clone())),
                         ("placement", Json::Str(r.placement.clone())),
                         ("bucket_mb", Json::Num(r.bucket_mb)),
+                        ("stages", Json::Num(r.stages as f64)),
+                        ("microbatches", Json::Num(r.microbatches as f64)),
+                        ("schedule", Json::Str(r.schedule.clone())),
+                        ("bubble_pct", Json::Num(r.bubble_pct)),
                         ("compute_ms", Json::Num(r.compute_ms)),
                         ("comm_ms", Json::Num(r.comm_ms)),
                         ("step_ms", Json::Num(r.step_ms)),
@@ -238,11 +280,23 @@ impl SweepOutcome {
                 })
                 .collect(),
         );
+        let infeasible = Json::Arr(
+            self.infeasible
+                .iter()
+                .map(|(scenario, reason)| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(scenario.clone())),
+                        ("reason", Json::Str(reason.clone())),
+                    ])
+                })
+                .collect(),
+        );
         let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
             ("bench", Json::Str("sweep".into())),
             ("params", params),
             ("rows", rows),
+            ("infeasible", infeasible),
             (
                 "cost_cache",
                 Json::obj(vec![
@@ -255,29 +309,104 @@ impl SweepOutcome {
     }
 }
 
-/// Expand the grid over `base` and evaluate every point. Points are
-/// grouped by machine so each machine's topology is built once and all of
-/// its points share one cached collective model; rows come back in
-/// expansion order regardless.
-pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
-    // Materialize and validate every point up front: a bad grid value
-    // fails the whole sweep before any simulation runs.
+/// A grid point: the fully-applied scenario plus the assignment that
+/// produced it.
+type Point = (ScenarioSpec, Vec<(String, String)>);
+
+/// One machine group's outcome.
+struct GroupOutcome {
+    /// One entry per point in group order; `None` marks an infeasible
+    /// point (recorded in `infeasible` instead).
+    rows: Vec<Option<SweepRow>>,
+    /// `(scenario, reason)` for infeasible points, in group order.
+    infeasible: Vec<(String, String)>,
+    /// Collective cost-cache (hits, misses) of this group's model.
+    cache: (u64, u64),
+}
+
+type GroupResult = Result<GroupOutcome>;
+
+/// Evaluate one machine group's points through a single shared
+/// [`HybridTimeline`] (one topology, one collective cost cache). Returns
+/// the rows in `idxs` order plus the group's cache stats. This is the
+/// unit of work both the sequential and the threaded sweep paths share —
+/// it touches nothing outside its own machine, which is what makes the
+/// per-group threading race-free.
+///
+/// A point whose pricing fails with a `Config` error (the pipeline
+/// memory-fit check — only decidable at evaluation time) is recorded as
+/// infeasible and the group continues; any other error aborts the sweep.
+fn eval_group(points: &[Point], idxs: &[usize]) -> GroupResult {
+    let machine = &points[idxs[0]].0.machine;
+    let topo = machine.build_topology()?;
+    let power = machine.power_model()?;
+    // One hybrid timeline (and cost cache) for every point on this machine.
+    let mut hy = HybridTimeline::from_scenario(&points[idxs[0]].0, &topo)?;
+    let mut rows = Vec::with_capacity(idxs.len());
+    let mut infeasible = Vec::new();
+    for &i in idxs {
+        let (spec, asg) = &points[i];
+        hy.configure_from(spec)?;
+        let gpus = spec.job_gpus(&topo)?;
+        let mut rng = Rng::seed_from(7);
+        let st = match hy.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng) {
+            Ok(st) => st,
+            Err(BoosterError::Config(reason)) => {
+                infeasible.push((spec.name.clone(), reason));
+                rows.push(None);
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let samples = st.samples_per_step();
+        rows.push(Some(SweepRow {
+            scenario: spec.name.clone(),
+            machine: spec.machine.name.clone(),
+            workload: spec.workload.name.clone(),
+            nodes: spec.parallelism.nodes,
+            gpus: gpus.len(),
+            precision: spec.precision.clone(),
+            algo: spec.parallelism.algo.clone(),
+            compression: spec.parallelism.compression.clone(),
+            placement: spec.parallelism.placement.clone(),
+            bucket_mb: spec.parallelism.bucket_bytes / 1e6,
+            stages: spec.parallelism.pipeline_stages,
+            microbatches: spec.parallelism.microbatches,
+            schedule: spec.parallelism.schedule.clone(),
+            bubble_pct: st.bubble_fraction * 100.0,
+            compute_ms: st.compute * 1e3,
+            comm_ms: st.comm * 1e3,
+            step_ms: st.total * 1e3,
+            samples_per_s: samples / st.total,
+            step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
+            assignment: asg.clone(),
+        }));
+    }
+    Ok(GroupOutcome {
+        rows,
+        infeasible,
+        cache: hy.timeline.collectives.cache_stats(),
+    })
+}
+
+/// Materialize, validate and machine-group the grid. A bad grid value
+/// fails the whole sweep here, before any simulation runs.
+#[allow(clippy::type_complexity)]
+fn prepare(
+    base: &ScenarioSpec,
+    axes: &[ParamAxis],
+) -> Result<(Vec<Point>, Vec<(String, Vec<usize>)>)> {
     let assignments = expand(axes);
-    let mut points: Vec<(ScenarioSpec, Vec<(String, String)>)> =
-        Vec::with_capacity(assignments.len());
+    let mut points: Vec<Point> = Vec::with_capacity(assignments.len());
     for asg in assignments {
         let mut spec = base.clone();
         for (k, v) in &asg {
             apply_param(&mut spec, k, v)?;
         }
-        spec.name = format!(
-            "{}/{}/n{}/{}",
-            spec.machine.name, spec.workload.name, spec.parallelism.nodes, spec.precision
-        );
+        spec.name = spec.auto_name();
         spec.validate()?;
         points.push((spec, asg));
     }
-
     // Group point indices by machine, preserving first-appearance order.
     let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
     for (i, (spec, _)) in points.iter().enumerate() {
@@ -286,57 +415,93 @@ pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
             None => groups.push((spec.machine.name.clone(), vec![i])),
         }
     }
+    Ok((points, groups))
+}
 
-    let mut rows: Vec<Option<SweepRow>> = (0..points.len()).map(|_| None).collect();
+/// Merge per-group results back into expansion order and sum cache stats.
+fn merge(
+    n_points: usize,
+    groups: &[(String, Vec<usize>)],
+    results: Vec<GroupResult>,
+) -> Result<SweepOutcome> {
+    let mut rows: Vec<Option<SweepRow>> = (0..n_points).map(|_| None).collect();
+    let mut infeasible = Vec::new();
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
-    for (_, idxs) in &groups {
-        let machine = &points[idxs[0]].0.machine;
-        let topo = machine.build_topology()?;
-        let power = machine.power_model()?;
-        // One timeline (and cost cache) for every point on this machine.
-        let mut tl = TimelineModel::from_scenario(&points[idxs[0]].0, &topo)?;
-        for &i in idxs {
-            let (spec, asg) = &points[i];
-            tl.configure_from(spec)?;
-            let gpus = spec.job_gpus(&topo)?;
-            let mut rng = Rng::seed_from(7);
-            let st = tl.step_time(
-                &gpus,
-                spec.workload.flops_per_gpu_step(),
-                &spec.workload.grad_tensor_bytes(),
-                &mut rng,
-            )?;
-            let samples = gpus.len() as f64 * spec.workload.batch_per_gpu as f64;
-            rows[i] = Some(SweepRow {
-                scenario: spec.name.clone(),
-                machine: spec.machine.name.clone(),
-                workload: spec.workload.name.clone(),
-                nodes: spec.parallelism.nodes,
-                gpus: gpus.len(),
-                precision: spec.precision.clone(),
-                algo: spec.parallelism.algo.clone(),
-                compression: spec.parallelism.compression.clone(),
-                placement: spec.parallelism.placement.clone(),
-                bucket_mb: spec.parallelism.bucket_bytes / 1e6,
-                compute_ms: st.compute * 1e3,
-                comm_ms: st.comm * 1e3,
-                step_ms: st.total * 1e3,
-                samples_per_s: samples / st.total,
-                step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9) / 1e3,
-                assignment: asg.clone(),
-            });
+    for ((_, idxs), res) in groups.iter().zip(results) {
+        let group = res?;
+        for (&i, row) in idxs.iter().zip(group.rows) {
+            rows[i] = row;
         }
-        let (h, m) = tl.collectives.cache_stats();
-        cache_hits += h;
-        cache_misses += m;
+        infeasible.extend(group.infeasible);
+        cache_hits += group.cache.0;
+        cache_misses += group.cache.1;
     }
-
     Ok(SweepOutcome {
-        rows: rows.into_iter().map(|r| r.expect("every point priced")).collect(),
+        rows: rows.into_iter().flatten().collect(),
+        infeasible,
         cache_hits,
         cache_misses,
     })
+}
+
+/// Expand the grid over `base` and evaluate every point. Points are
+/// grouped by machine so each machine's topology is built once and all of
+/// its points share one cached collective model; machine groups evaluate
+/// **in parallel** on scoped threads (one topology + collective model per
+/// worker — they share nothing), and rows come back in deterministic
+/// expansion order with the workers' hit/miss stats summed.
+pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
+    let (points, groups) = prepare(base, axes)?;
+    if groups.len() <= 1 {
+        // Single machine: nothing to parallelize over.
+        let results = groups.iter().map(|(_, g)| eval_group(&points, g)).collect();
+        return merge(points.len(), &groups, results);
+    }
+    let results: Vec<GroupResult> = std::thread::scope(|s| {
+        let points = &points;
+        let handles: Vec<_> = groups
+            .iter()
+            .map(|(machine, idxs)| (machine, s.spawn(move || eval_group(points, idxs))))
+            .collect();
+        handles
+            .into_iter()
+            .map(|(machine, handle)| join_worker(machine, handle))
+            .collect()
+    });
+    merge(points.len(), &groups, results)
+}
+
+/// Resolve a worker's result, turning a panic into a simulation error
+/// (carrying the machine and the panic message) instead of poisoning the
+/// whole process.
+fn join_worker(
+    machine: &str,
+    handle: std::thread::ScopedJoinHandle<'_, GroupResult>,
+) -> GroupResult {
+    match handle.join() {
+        Ok(result) => result,
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic payload".into());
+            Err(BoosterError::Sim(format!(
+                "sweep worker for machine '{machine}' panicked: {what}"
+            )))
+        }
+    }
+}
+
+/// [`run`] without the per-machine threading: identical grid, identical
+/// evaluation, on the caller's thread. The parallel path must produce a
+/// byte-identical CSV (the differential test pins this); benchmarks can
+/// also use it to measure the threading speedup honestly.
+pub fn run_sequential(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
+    let (points, groups) = prepare(base, axes)?;
+    let results = groups.iter().map(|(_, g)| eval_group(&points, g)).collect();
+    merge(points.len(), &groups, results)
 }
 
 #[cfg(test)]
@@ -423,5 +588,110 @@ mod tests {
         let base = presets::default_scenario("selene").unwrap();
         let axes = parse_params(&s(&["nodes=1", "9999"])).unwrap();
         assert!(run(&base, &axes).is_err(), "9999 nodes exceeds selene");
+        let axes = parse_params(&s(&["stages=3"])).unwrap();
+        assert!(run(&base, &axes).is_err(), "3 stages does not divide the job GPUs");
+        let axes = parse_params(&s(&["schedule=interleaved"])).unwrap();
+        assert!(run(&base, &axes).is_err(), "unknown schedule key");
+    }
+
+    #[test]
+    fn hybrid_axes_sweep_stages_and_schedules() {
+        let mut base = presets::default_scenario("juwels_booster").unwrap();
+        base.parallelism.nodes = 4; // 16 GPUs
+        let axes = parse_params(&s(&["stages=1", "4", "schedule=gpipe", "1f1b"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        for r in &out.rows {
+            assert!(r.step_ms > 0.0, "{r:?}");
+            if r.stages == 1 {
+                assert_eq!(r.bubble_pct, 0.0, "no bubble in pure data parallel");
+            } else {
+                assert!(r.bubble_pct > 0.0, "multi-stage rows must report a bubble");
+                assert!(r.scenario.contains("/p4x1-"), "{}", r.scenario);
+            }
+        }
+        // Same machine+stages, different schedule: time identical (the
+        // flush-variant schedules differ in memory, not time).
+        assert_eq!(out.rows[2].step_ms, out.rows[3].step_ms);
+    }
+
+    #[test]
+    fn stages_one_rows_match_the_pure_data_parallel_model() {
+        // The acceptance contract at sweep level: a stages=1 grid row is
+        // bit-for-bit what the old TimelineModel path produced.
+        use crate::train::timeline::TimelineModel;
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["stages=1", "2", "nodes=2", "4"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        let topo = base.machine.build_topology().unwrap();
+        for r in out.rows.iter().filter(|r| r.stages == 1) {
+            let mut spec = base.clone();
+            spec.parallelism.nodes = r.nodes;
+            let tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let mut rng = Rng::seed_from(7);
+            let st = tl
+                .step_time(
+                    &gpus,
+                    spec.workload.flops_per_gpu_step(),
+                    &spec.workload.grad_tensor_bytes(),
+                    &mut rng,
+                )
+                .unwrap();
+            assert_eq!(r.step_ms, st.total * 1e3, "row {}", r.scenario);
+            assert_eq!(r.comm_ms, st.comm * 1e3, "row {}", r.scenario);
+            assert_eq!(r.compute_ms, st.compute * 1e3, "row {}", r.scenario);
+        }
+    }
+
+    #[test]
+    fn infeasible_points_skip_their_row_not_the_sweep() {
+        // The §2.3 crossover study: gpt3_175b cannot price at stages=1
+        // (memory fit, only decidable at evaluation time) but prices fine
+        // at 128 stages. The sweep must keep the feasible rows and report
+        // the skipped point instead of aborting.
+        let base = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .workload(presets::workload("gpt3_175b").unwrap())
+            .nodes(32)
+            .microbatches(8)
+            .schedule("1f1b")
+            .build()
+            .unwrap();
+        let axes = parse_params(&s(&["stages=1", "128"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 1, "only the 128-stage point is feasible");
+        assert_eq!(out.rows[0].stages, 128);
+        assert!(out.rows[0].bubble_pct > 0.0);
+        assert_eq!(out.infeasible.len(), 1);
+        assert!(out.infeasible[0].0.contains("gpt3_175b"), "{:?}", out.infeasible[0]);
+        let j = out.to_json(&axes);
+        assert_eq!(j.req("infeasible").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_are_byte_identical() {
+        // Two machines -> two worker threads on the parallel path. Rows,
+        // CSV bytes and merged cache stats must not depend on threading.
+        let base = presets::default_scenario("juwels_booster").unwrap();
+        let axes = parse_params(&s(&[
+            "machine=juwels_booster",
+            "leonardo",
+            "nodes=2",
+            "4",
+            "precision=bf16",
+            "tf32",
+        ]))
+        .unwrap();
+        let par = run(&base, &axes).unwrap();
+        let seq = run_sequential(&base, &axes).unwrap();
+        assert_eq!(par.rows.len(), 8);
+        assert_eq!(par.to_csv(), seq.to_csv(), "threading must not change the CSV");
+        assert_eq!(par.cache_hits, seq.cache_hits);
+        assert_eq!(par.cache_misses, seq.cache_misses);
+        assert!(par.cache_hits >= 1, "precision axis repeats each flow pattern");
+        // Expansion order survives the machine grouping: first axis is
+        // outermost, so rows alternate machines in blocks.
+        assert_eq!(par.rows[0].machine, "juwels_booster");
+        assert_eq!(par.rows[4].machine, "leonardo");
     }
 }

@@ -456,27 +456,48 @@ impl Topology {
         }
     }
 
+    /// Check an allocation request against the machine size. Placement
+    /// sizes are caller-controlled (sweep grid values land here), so
+    /// over-asking must fail the row, not abort the process.
+    fn check_alloc(&self, n_gpus: usize) -> Result<()> {
+        if n_gpus > self.total_gpus() {
+            return Err(BoosterError::Config(format!(
+                "placement wants {n_gpus} GPUs but the machine has {}",
+                self.total_gpus()
+            )));
+        }
+        Ok(())
+    }
+
     /// All GPUs of the first `n` nodes — the canonical compact allocation.
-    pub fn first_gpus(&self, n_gpus: usize) -> Vec<GpuId> {
+    pub fn first_gpus(&self, n_gpus: usize) -> Result<Vec<GpuId>> {
         let g = self.node_spec.gpus_per_node;
-        assert!(n_gpus <= self.total_gpus());
-        (0..n_gpus)
+        self.check_alloc(n_gpus)?;
+        Ok((0..n_gpus)
             .map(|i| GpuId {
                 node: i / g,
                 gpu: i % g,
             })
-            .collect()
+            .collect())
     }
 
     /// GPUs spread across cells round-robin — the worst-case placement used
     /// by the scheduling ablation.
-    pub fn spread_gpus(&self, n_gpus: usize) -> Vec<GpuId> {
+    ///
+    /// Cells need not be uniform (the last cell of a DragonFly+ machine is
+    /// usually short), so a cell can exhaust before the others; exhausted
+    /// cells are skipped. A full cycle over the cells that places nothing
+    /// means every cell is exhausted — with the size check above that is an
+    /// internal invariant violation, and it is reported as an error rather
+    /// than looping forever.
+    pub fn spread_gpus(&self, n_gpus: usize) -> Result<Vec<GpuId>> {
         let g = self.node_spec.gpus_per_node;
         let cells = self.params.cells();
-        assert!(n_gpus <= self.total_gpus());
+        self.check_alloc(n_gpus)?;
         let mut out = Vec::with_capacity(n_gpus);
         let mut per_cell_next = vec![0usize; cells];
         let mut cell = 0;
+        let mut skipped_in_a_row = 0usize;
         while out.len() < n_gpus {
             let base = cell * self.params.nodes_per_cell;
             let idx = per_cell_next[cell];
@@ -487,10 +508,19 @@ impl Topology {
                     gpu: idx % g,
                 });
                 per_cell_next[cell] += 1;
+                skipped_in_a_row = 0;
+            } else {
+                skipped_in_a_row += 1;
+                if skipped_in_a_row >= cells {
+                    return Err(BoosterError::Sim(format!(
+                        "spread placement exhausted all {cells} cells after {} of {n_gpus} GPUs",
+                        out.len()
+                    )));
+                }
             }
             cell = (cell + 1) % cells;
         }
-        out
+        Ok(out)
     }
 }
 
@@ -661,13 +691,37 @@ mod tests {
     #[test]
     fn placements_have_right_shape() {
         let t = Topology::juwels_booster();
-        let compact = t.first_gpus(16);
+        let compact = t.first_gpus(16).unwrap();
         assert_eq!(compact.len(), 16);
         assert!(compact.iter().all(|g| g.node < 4));
-        let spread = t.spread_gpus(16);
+        let spread = t.spread_gpus(16).unwrap();
         let cells: std::collections::HashSet<usize> =
             spread.iter().map(|g| g.node / 48).collect();
         assert!(cells.len() >= 8, "spread placement should span cells");
+    }
+
+    #[test]
+    fn oversized_placement_is_an_error_not_an_abort() {
+        let t = Topology::juwels_booster();
+        let n = t.total_gpus();
+        assert!(t.first_gpus(n + 1).is_err());
+        assert!(t.spread_gpus(n + 1).is_err());
+    }
+
+    #[test]
+    fn spread_placement_fills_the_whole_machine() {
+        // JUWELS Booster has a short last cell (936 = 19 full cells of 48
+        // plus one of 24): the exhausted-cell skip path must terminate and
+        // hand out every GPU exactly once at the machine-size boundary.
+        let t = Topology::juwels_booster();
+        let n = t.total_gpus();
+        for want in [n - 1, n] {
+            let got = t.spread_gpus(want).unwrap();
+            assert_eq!(got.len(), want);
+            let distinct: std::collections::HashSet<GpuId> = got.iter().copied().collect();
+            assert_eq!(distinct.len(), want, "duplicate GPUs in spread placement");
+            assert!(got.iter().all(|g| g.node < t.params.nodes));
+        }
     }
 
     #[test]

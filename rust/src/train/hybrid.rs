@@ -1,0 +1,483 @@
+//! Hybrid pipeline×data parallelism (§2.3).
+//!
+//! "Large deep learning models may not fit on a single computational
+//! device, requiring an extension of the purely data-parallel approach to
+//! model parallelism or pipelining ... JSC supports DeepSpeed." This
+//! module composes the two previously separate cost models:
+//!
+//! * the job's GPUs are partitioned into `replicas = gpus / stages`
+//!   **data-parallel replicas** of `stages` consecutive GPUs each
+//!   (consecutive in placement order, so a compact placement keeps a
+//!   pipeline inside a node and its NVLink domain);
+//! * each replica runs the microbatch pipeline priced by
+//!   [`crate::pipeline::step_time`] (per-stage compute, inter-stage
+//!   activation transfers, the (s−1)/(m+s−1) bubble, and the
+//!   state+activation memory-fit check);
+//! * after the local step, stage `k` of every replica allreduces its
+//!   gradient shard (`1/stages` of the gradient bytes) with stage `k` of
+//!   every other replica — priced per stage group through the shared
+//!   cached [`crate::collectives::CollectiveModel`], with the same
+//!   bucketing/compression/overlap semantics as pure data parallelism.
+//!
+//! **Degeneracy contract:** at `stages = 1, microbatches = 1` every term
+//! reduces to the corresponding [`TimelineModel`] term — same kernel-time
+//! call, same allreduce over the same GPU set, same straggler sampling and
+//! overlap formula — so `HybridTimeline::step_time` equals
+//! [`TimelineModel::step_time`] exactly (a differential test pins this).
+//! Stage groups are disjoint GPU sets whose allreduces proceed
+//! concurrently; the model charges the slowest group and ignores
+//! cross-group fabric contention (a fluid-model simplification, like
+//! treating homogeneous nodes as one representative in the hierarchical
+//! collective).
+
+use crate::collectives::bucketed_allreduce_time;
+use crate::pipeline::{self, PipelinedModel, Schedule};
+use crate::topology::{GpuId, Topology};
+use crate::train::timeline::TimelineModel;
+use crate::util::error::{BoosterError, Result};
+use crate::util::rng::Rng;
+
+/// One hybrid step's cost breakdown (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridStepTime {
+    /// Slowest-replica pipeline time, after straggler sampling.
+    pub compute: f64,
+    /// Slowest stage group's cross-replica gradient allreduce (before
+    /// overlap accounting).
+    pub comm: f64,
+    /// Wall-clock step time after overlap.
+    pub total: f64,
+    /// Pipeline bubble fraction, (s−1)/(m+s−1); 0 at one stage and one
+    /// microbatch.
+    pub bubble_fraction: f64,
+    /// Per-microbatch stage compute seconds.
+    pub stage_time: f64,
+    /// Inter-stage activation transfer seconds per microbatch.
+    pub transfer_time: f64,
+    /// Data-parallel replica count the job was split into.
+    pub replicas: usize,
+    /// Microbatches per step per replica the step was priced with.
+    pub microbatches: usize,
+    /// Samples per microbatch per replica (replica batch rounded up onto
+    /// the microbatch grid).
+    pub micro_size: usize,
+}
+
+impl HybridStepTime {
+    /// Samples the whole job processes per step.
+    pub fn samples_per_step(&self) -> f64 {
+        self.replicas as f64 * self.microbatches as f64 * self.micro_size as f64
+    }
+}
+
+/// Timeline for hybrid pipeline×data-parallel training. Owns a
+/// [`TimelineModel`] (precision, efficiency, collective settings, jitter
+/// — and the shared, cached collective model) plus the pipeline shape.
+#[derive(Debug)]
+pub struct HybridTimeline<'t> {
+    /// The data-parallel cost model this hybrid composes with; its owned
+    /// `CollectiveModel` prices every cross-replica allreduce, so keeping
+    /// one `HybridTimeline` alive across evaluations shares the cost
+    /// cache exactly like the pure data-parallel sweep path.
+    pub timeline: TimelineModel<'t>,
+    /// Pipeline stages per replica (1 = pure data parallelism).
+    pub stages: usize,
+    /// Microbatches per step per replica.
+    pub microbatches: usize,
+    /// Microbatch schedule.
+    pub schedule: Schedule,
+    /// The model being pipelined.
+    pub model: PipelinedModel,
+}
+
+impl<'t> HybridTimeline<'t> {
+    /// Build from a scenario: the timeline settings, pipeline shape and
+    /// pipelined model all come from the spec. The topology must be the
+    /// spec machine's ([`crate::scenario::ExperimentContext`] guarantees
+    /// this).
+    pub fn from_scenario(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<HybridTimeline<'t>> {
+        let timeline = TimelineModel::from_scenario(spec, topo)?;
+        let mut h = HybridTimeline {
+            timeline,
+            stages: 1,
+            microbatches: 1,
+            schedule: Schedule::GPipe,
+            model: spec.workload.pipelined_model(),
+        };
+        h.configure_pipeline(spec)?;
+        Ok(h)
+    }
+
+    /// Reconfigure from another scenario without touching the owned
+    /// collective model's caches — the sweep driver re-points one hybrid
+    /// timeline at each grid point of a machine.
+    pub fn configure_from(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        self.timeline.configure_from(spec)?;
+        self.configure_pipeline(spec)
+    }
+
+    fn configure_pipeline(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        self.stages = spec.parallelism.pipeline_stages;
+        self.microbatches = spec.parallelism.microbatches;
+        self.schedule = spec.schedule()?;
+        self.model = spec.workload.pipelined_model();
+        Ok(())
+    }
+
+    /// Partition check: replica count for a job of `n` GPUs.
+    fn replica_count(&self, n: usize) -> Result<usize> {
+        if n == 0 || self.stages == 0 || self.microbatches == 0 {
+            return Err(BoosterError::Config("empty hybrid job".into()));
+        }
+        if n % self.stages != 0 {
+            return Err(BoosterError::Config(format!(
+                "pipeline_stages {} does not divide the job's {n} GPUs",
+                self.stages
+            )));
+        }
+        Ok(n / self.stages)
+    }
+
+    /// Per-stage gradient shard on the wire, as a tensor set (the stage's
+    /// `1/stages` slice of the fused FP32 gradient).
+    fn stage_shard_bytes(&self) -> Vec<f64> {
+        vec![self.model.params * 4.0 / self.stages as f64]
+    }
+
+    /// Topological signature of a replica's stage chain: one class per
+    /// consecutive stage pair — same node / same leaf / same cell /
+    /// inter-cell. Link bandwidths and latencies are homogeneous within a
+    /// class, so two replicas with equal signatures price identically;
+    /// pricing one representative per distinct signature covers the
+    /// slowest replica exactly (a stages value that does not align with
+    /// node or cell boundaries makes *middle* replicas straddle fabric
+    /// levels the first and last do not).
+    fn replica_signature(topo: &Topology, replica: &[GpuId]) -> Vec<u8> {
+        let p = &topo.params;
+        let nodes_per_leaf = p.nodes_per_cell / p.leaves_per_cell;
+        replica
+            .windows(2)
+            .map(|w| {
+                let (a, b) = (w[0].node, w[1].node);
+                if a == b {
+                    return 0;
+                }
+                if a / p.nodes_per_cell != b / p.nodes_per_cell {
+                    return 3;
+                }
+                let la = (a % p.nodes_per_cell) / nodes_per_leaf;
+                let lb = (b % p.nodes_per_cell) / nodes_per_leaf;
+                if la == lb {
+                    1
+                } else {
+                    2
+                }
+            })
+            .collect()
+    }
+
+    /// Simulate one synchronous hybrid step over `gpus` (the job's
+    /// placement, replica-major: replica `r` owns
+    /// `gpus[r*stages..(r+1)*stages]`). `batch_per_gpu` keeps the weak
+    /// scaling convention: each replica's step processes
+    /// `batch_per_gpu * stages` samples, split over the microbatches.
+    pub fn step_time(
+        &self,
+        gpus: &[GpuId],
+        batch_per_gpu: usize,
+        rng: &mut Rng,
+    ) -> Result<HybridStepTime> {
+        let replicas = self.replica_count(gpus.len())?;
+        let micro_size = (batch_per_gpu * self.stages).div_ceil(self.microbatches).max(1);
+
+        // Per-replica pipeline step. Replicas are topologically similar
+        // but not identical (a stages value misaligned with node/cell
+        // boundaries makes some replicas straddle fabric levels others do
+        // not): price one representative per distinct replica signature
+        // and let the slowest gate the synchronous step.
+        let topo = self.timeline.topo;
+        let price = |replica: &[GpuId]| {
+            pipeline::step_time(
+                topo,
+                replica,
+                &self.model,
+                self.schedule,
+                self.microbatches,
+                micro_size,
+                self.timeline.efficiency,
+                self.timeline.precision,
+            )
+        };
+        let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
+        let mut step: Option<crate::pipeline::PipelineStep> = None;
+        let mut slowest = f64::NEG_INFINITY;
+        for r in 0..replicas {
+            let replica = &gpus[r * self.stages..(r + 1) * self.stages];
+            if !seen.insert(Self::replica_signature(topo, replica)) {
+                continue;
+            }
+            let ps = price(replica)?;
+            if ps.total > slowest {
+                slowest = ps.total;
+                step = Some(ps);
+            }
+        }
+        let step = step.expect("at least one replica");
+
+        // Straggler sampling: every GPU in the job can stall the
+        // synchronous step (same draw structure as the data-parallel
+        // timeline, so stages=1 consumes identical randomness).
+        let compute = self.timeline.slowest_rank_time(step.total, gpus.len(), rng);
+
+        // Cross-replica gradient allreduce, one disjoint group per stage;
+        // groups reduce concurrently, the slowest one is charged.
+        let mut comm = 0.0f64;
+        if replicas > 1 {
+            let shard = self.stage_shard_bytes();
+            let mut group = Vec::with_capacity(replicas);
+            for stage in 0..self.stages {
+                group.clear();
+                group.extend((0..replicas).map(|r| gpus[r * self.stages + stage]));
+                let t = bucketed_allreduce_time(
+                    &self.timeline.collectives,
+                    &group,
+                    &shard,
+                    self.timeline.bucket_bytes,
+                    self.timeline.compression,
+                    self.timeline.algo,
+                )?;
+                comm = comm.max(t);
+            }
+        }
+
+        let total = self.timeline.exposed_step(compute, comm);
+        Ok(HybridStepTime {
+            compute,
+            comm,
+            total,
+            bubble_fraction: step.bubble_fraction,
+            stage_time: step.stage_time,
+            transfer_time: step.transfer_time,
+            replicas,
+            microbatches: self.microbatches,
+            micro_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{presets, ScenarioSpec};
+    use crate::train::timeline::Jitter;
+
+    /// The acceptance contract: at stages=1, microbatches=1 the hybrid
+    /// timeline IS the data-parallel timeline, to 1e-9 relative, on every
+    /// machine the crossover study compares.
+    #[test]
+    fn degenerates_to_data_parallel_at_one_stage() {
+        for machine in ["juwels_booster", "selene", "leonardo"] {
+            let spec = presets::default_scenario(machine).unwrap();
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
+            let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+            assert_eq!(hy.stages, 1);
+            let mut rng_a = Rng::seed_from(7);
+            let mut rng_b = Rng::seed_from(7);
+            let a = tl
+                .step_time(
+                    &gpus,
+                    spec.workload.flops_per_gpu_step(),
+                    &spec.workload.grad_tensor_bytes(),
+                    &mut rng_a,
+                )
+                .unwrap();
+            let batch = spec.workload.batch_per_gpu;
+            let b = hy.step_time(&gpus, batch, &mut rng_b).unwrap();
+            let close = |x: f64, y: f64, what: &str| {
+                assert!(
+                    (x - y).abs() <= 1e-9 * y.abs().max(1e-30),
+                    "{machine} {what}: hybrid {x} vs data-parallel {y}"
+                );
+            };
+            close(b.compute, a.compute, "compute");
+            close(b.comm, a.comm, "comm");
+            close(b.total, a.total, "total");
+            assert_eq!(b.bubble_fraction, 0.0, "{machine}: no bubble at s=1,m=1");
+            assert_eq!(b.replicas, gpus.len());
+        }
+    }
+
+    /// Degeneracy must also hold under jitter: identical rng consumption.
+    #[test]
+    fn degenerate_jitter_draws_match() {
+        let spec = presets::default_scenario("juwels_booster").unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let mut tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
+        tl.jitter = Jitter::default_loader();
+        let mut hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        hy.timeline.jitter = Jitter::default_loader();
+        let mut rng_a = Rng::seed_from(42);
+        let mut rng_b = Rng::seed_from(42);
+        let a = tl
+            .step_time(
+                &gpus,
+                spec.workload.flops_per_gpu_step(),
+                &spec.workload.grad_tensor_bytes(),
+                &mut rng_a,
+            )
+            .unwrap();
+        let batch = spec.workload.batch_per_gpu;
+        let b = hy.step_time(&gpus, batch, &mut rng_b).unwrap();
+        assert!((a.compute - b.compute).abs() <= 1e-9 * a.compute);
+        assert!((a.total - b.total).abs() <= 1e-9 * a.total);
+    }
+
+    fn hybrid_spec(stages: usize, microbatches: usize) -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(8)
+            .pipeline_stages(stages)
+            .microbatches(microbatches)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn multi_stage_step_has_bubble_and_prices_comm() {
+        let spec = hybrid_spec(4, 8);
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap(); // 32 GPUs -> 8 replicas
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let batch = spec.workload.batch_per_gpu;
+        let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert_eq!(st.replicas, 8);
+        // (s-1)/(m+s-1) = 3/11.
+        assert!((st.bubble_fraction - 3.0 / 11.0).abs() < 1e-9, "{}", st.bubble_fraction);
+        assert!(st.comm > 0.0, "8 replicas must pay a cross-replica allreduce");
+        assert!(st.total > 0.0 && st.compute > 0.0);
+    }
+
+    #[test]
+    fn pure_pipeline_has_no_allreduce() {
+        // One replica (stages == job GPUs): nothing to reduce across.
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(2)
+            .pipeline_stages(8)
+            .microbatches(16)
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let batch = spec.workload.batch_per_gpu;
+        let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert_eq!(st.replicas, 1);
+        assert_eq!(st.comm, 0.0);
+        assert!(st.transfer_time > 0.0, "8 stages over 2 nodes cross the fabric");
+    }
+
+    #[test]
+    fn misaligned_stages_charge_the_straddling_middle_replica() {
+        // juwels has 4 GPUs/node; stages=3 on 24 GPUs (6 nodes) puts
+        // replica 0 (gpus 0-2) and replica 7 (node 5, gpus 1-3) entirely
+        // on one node, while replica 1 (gpus 3,4,5) straddles nodes 0-1
+        // and pays fabric transfers. The slowest (middle) replica must
+        // gate the step — a first/last sample would miss it.
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(6)
+            .pipeline_stages(3)
+            .microbatches(4)
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let batch = spec.workload.batch_per_gpu;
+        let micro = (batch * 3).div_ceil(4);
+        let price = |replica: &[GpuId]| {
+            pipeline::step_time(
+                &topo,
+                replica,
+                &hy.model,
+                hy.schedule,
+                hy.microbatches,
+                micro,
+                hy.timeline.efficiency,
+                hy.timeline.precision,
+            )
+            .unwrap()
+        };
+        let intra = price(&gpus[..3]); // replica 0: all node 0
+        let straddle = price(&gpus[3..6]); // replica 1: nodes 0-1
+        assert!(straddle.total > intra.total, "straddler must be slower");
+        let mut rng = Rng::seed_from(7);
+        let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert!(
+            st.compute >= straddle.total,
+            "step {} must be gated by the straddling replica {}",
+            st.compute,
+            straddle.total
+        );
+    }
+
+    #[test]
+    fn indivisible_partition_is_rejected() {
+        let spec = hybrid_spec(4, 8);
+        let topo = spec.machine.build_topology().unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let gpus = topo.first_gpus(30).unwrap(); // 30 % 4 != 0
+        let mut rng = Rng::seed_from(7);
+        assert!(hy.step_time(&gpus, 4, &mut rng).is_err());
+    }
+
+    #[test]
+    fn pipelining_unlocks_models_data_parallelism_cannot_hold() {
+        // gpt3_175b: stages=1 fails the memory-fit check outright; at 128
+        // stages (state ~21.9 GB/stage) the hybrid step prices fine.
+        let m = presets::machine("juwels_booster").unwrap();
+        let base = ScenarioSpec::builder(m)
+            .workload(presets::workload("gpt3_175b").unwrap())
+            .nodes(32)
+            .pipeline_stages(128)
+            .microbatches(8)
+            .schedule("1f1b")
+            .build()
+            .unwrap();
+        let topo = base.machine.build_topology().unwrap();
+        let gpus = base.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&base, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let batch = base.workload.batch_per_gpu;
+        let ok = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert!(ok.bubble_fraction > 0.0);
+
+        let mut flat = hy;
+        flat.stages = 1;
+        flat.microbatches = 1;
+        let err = flat.step_time(&gpus, batch, &mut rng);
+        assert!(err.is_err(), "175B params cannot fit a single 40 GB GPU");
+    }
+
+    #[test]
+    fn repeated_hybrid_steps_share_the_cost_cache() {
+        let spec = hybrid_spec(4, 8);
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let batch = spec.workload.batch_per_gpu;
+        let a = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        let b = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert_eq!(a.comm, b.comm, "fluid comm cost is deterministic");
+        let (hits, misses) = hy.timeline.collectives.cache_stats();
+        assert!(hits >= 1, "second step must be served by the cache");
+        assert!(misses >= 1);
+    }
+}

@@ -15,8 +15,13 @@
 //!
 //! "Effectively gives the same result as training a model on a large
 //! batch — the combination of all distributed data batches" (§2.3).
+//!
+//! The simulated-machine cost models live next door: [`timeline`] prices
+//! pure data parallelism, [`hybrid`] composes it with the microbatch
+//! pipeline from [`crate::pipeline`] (hybrid pipeline×data parallelism).
 
 pub mod allreduce;
+pub mod hybrid;
 pub mod timeline;
 
 use std::time::Instant;

@@ -140,6 +140,34 @@ impl<'t> TimelineModel<'t> {
             .kernel_time(flops_per_gpu, 0.0, self.precision, self.efficiency)
     }
 
+    /// Slowest-of-`ranks` straggler sampling around a nominal per-rank
+    /// time: each rank draws a lognormal multiplier plus an occasional
+    /// loader stall, and the synchronous step waits for the worst draw.
+    /// Shared by the data-parallel step and [`crate::train::hybrid`] so
+    /// both gate on identical noise for identical `(nominal, ranks, rng)`.
+    pub fn slowest_rank_time(&self, nominal: f64, ranks: usize, rng: &mut Rng) -> f64 {
+        let mut worst = 0.0f64;
+        for _ in 0..ranks.max(1) {
+            let mut t = nominal;
+            if self.jitter.sigma > 0.0 {
+                t *= rng.lognormal(0.0, self.jitter.sigma);
+            }
+            if self.jitter.stall_prob > 0.0 && rng.chance(self.jitter.stall_prob) {
+                t += nominal * self.jitter.stall_frac;
+            }
+            worst = worst.max(t);
+        }
+        worst
+    }
+
+    /// Wall-clock step time after overlap accounting: the overlappable
+    /// share of the communication hides under backprop, bounded by the
+    /// compute actually available (at most 80% of it).
+    pub fn exposed_step(&self, compute: f64, comm: f64) -> f64 {
+        let hidden = (comm * self.overlap).min(compute * 0.8);
+        compute + comm - hidden
+    }
+
     /// Allreduce seconds for a gradient set on a placement. Served from
     /// the owned [`CollectiveModel`]'s cost cache when the pattern has
     /// been simulated before.
@@ -170,23 +198,9 @@ impl<'t> TimelineModel<'t> {
         rng: &mut Rng,
     ) -> Result<StepTime> {
         let nominal = self.compute_time(flops_per_gpu);
-        // Slowest-of-n straggler sampling.
-        let mut compute = 0.0f64;
-        for _ in 0..gpus.len().max(1) {
-            let mut t = nominal;
-            if self.jitter.sigma > 0.0 {
-                t *= rng.lognormal(0.0, self.jitter.sigma);
-            }
-            if self.jitter.stall_prob > 0.0 && rng.chance(self.jitter.stall_prob) {
-                t += nominal * self.jitter.stall_frac;
-            }
-            compute = compute.max(t);
-        }
+        let compute = self.slowest_rank_time(nominal, gpus.len(), rng);
         let comm = self.comm_time(gpus, grad_tensor_bytes)?;
-        // Exposed communication: the overlappable share hides under
-        // backprop (bounded by the compute time actually available).
-        let hidden = (comm * self.overlap).min(compute * 0.8);
-        let total = compute + comm - hidden;
+        let total = self.exposed_step(compute, comm);
         Ok(StepTime {
             compute,
             comm,
@@ -208,19 +222,8 @@ impl<'t> TimelineModel<'t> {
         let nominal = self.compute_time(flops_per_gpu);
         let mut out = Vec::with_capacity(steps);
         for _ in 0..steps {
-            let mut compute = 0.0f64;
-            for _ in 0..gpus.len().max(1) {
-                let mut t = nominal;
-                if self.jitter.sigma > 0.0 {
-                    t *= rng.lognormal(0.0, self.jitter.sigma);
-                }
-                if self.jitter.stall_prob > 0.0 && rng.chance(self.jitter.stall_prob) {
-                    t += nominal * self.jitter.stall_frac;
-                }
-                compute = compute.max(t);
-            }
-            let hidden = (comm * self.overlap).min(compute * 0.8);
-            out.push(compute + comm - hidden);
+            let compute = self.slowest_rank_time(nominal, gpus.len(), rng);
+            out.push(self.exposed_step(compute, comm));
         }
         Ok(out)
     }
@@ -253,7 +256,7 @@ mod tests {
         let m = TimelineModel::amp_defaults(&t);
         let mut rng = Rng::seed_from(0);
         let st = m
-            .step_time(&t.first_gpus(1), 1e12, &[100e6], &mut rng)
+            .step_time(&t.first_gpus(1).unwrap(), 1e12, &[100e6], &mut rng)
             .unwrap();
         assert_eq!(st.comm, 0.0);
         assert!(st.total > 0.0);
@@ -268,13 +271,13 @@ mod tests {
         let flops = 0.8e12;
         let grads = vec![100e6]; // 25M params fp32
         let tp1 = m
-            .throughput(&t.first_gpus(1), flops, 64, &grads, &mut rng)
+            .throughput(&t.first_gpus(1).unwrap(), flops, 64, &grads, &mut rng)
             .unwrap();
         let tp64 = m
-            .throughput(&t.first_gpus(64), flops, 64, &grads, &mut rng)
+            .throughput(&t.first_gpus(64).unwrap(), flops, 64, &grads, &mut rng)
             .unwrap();
         let tp512 = m
-            .throughput(&t.first_gpus(512), flops, 64, &grads, &mut rng)
+            .throughput(&t.first_gpus(512).unwrap(), flops, 64, &grads, &mut rng)
             .unwrap();
         let eff64 = tp64 / (64.0 * tp1);
         let eff512 = tp512 / (512.0 * tp1);
@@ -291,10 +294,10 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let grads = vec![4e6];
         let t4: Vec<f64> = m
-            .run_steps(&t.first_gpus(4), 1e12, &grads, 300, &mut rng)
+            .run_steps(&t.first_gpus(4).unwrap(), 1e12, &grads, 300, &mut rng)
             .unwrap();
         let t256: Vec<f64> = m
-            .run_steps(&t.first_gpus(256), 1e12, &grads, 300, &mut rng)
+            .run_steps(&t.first_gpus(256).unwrap(), 1e12, &grads, 300, &mut rng)
             .unwrap();
         let cv = |xs: &[f64]| {
             crate::util::stats::stddev(xs) / crate::util::stats::mean(xs)
@@ -313,7 +316,7 @@ mod tests {
         let t = topo();
         let mut m = TimelineModel::amp_defaults(&t);
         let mut rng = Rng::seed_from(3);
-        let gpus = t.first_gpus(128);
+        let gpus = t.first_gpus(128).unwrap();
         // Tiny compute, huge gradients: comm-bound.
         let grads = vec![400e6];
         let plain = m.step_time(&gpus, 1e10, &grads, &mut rng).unwrap().total;
@@ -327,7 +330,7 @@ mod tests {
         let t = topo();
         let m = TimelineModel::amp_defaults(&t);
         let mut rng = Rng::seed_from(11);
-        let gpus = t.first_gpus(32);
+        let gpus = t.first_gpus(32).unwrap();
         let grads = vec![50e6];
         let a = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap();
         let b = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap();
@@ -345,7 +348,7 @@ mod tests {
         let mut m = TimelineModel::amp_defaults(&t);
         m.jitter = Jitter::none();
         let mut rng = Rng::seed_from(4);
-        let gpus = t.first_gpus(16);
+        let gpus = t.first_gpus(16).unwrap();
         let grads = vec![50e6];
         m.overlap = 0.0;
         let none = m.step_time(&gpus, 1e12, &grads, &mut rng).unwrap().total;

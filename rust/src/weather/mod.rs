@@ -177,7 +177,7 @@ pub fn fig4(topo: &Topology, gpu_counts: &[usize], seed: u64) -> Result<Vec<Scal
             stall_frac: 1.5,
         };
         let mut rng = Rng::seed_from(seed ^ g as u64);
-        let gpus = topo.first_gpus(g);
+        let gpus = topo.first_gpus(g)?;
         let steps_per_epoch = samples_per_epoch.div_ceil(batch_per_gpu * g);
         let sim_steps = 400.min(steps_per_epoch * epochs);
         let flops_per_gpu = flops_per_sample * batch_per_gpu as f64;
