@@ -70,5 +70,42 @@ fn main() -> anyhow::Result<()> {
         println!("{n:>6} {tp:>14.1} {:>11.1}%", 100.0 * tp / (tp1 * n as f64));
     }
     println!("\n(hierarchical allreduce + DragonFly+ keep the full machine >70% efficient)");
+
+    // 3D parallelism (§2.3): GPT-3 175B cannot run data-parallel at all —
+    // compare pure-pipeline against pipeline×tensor splits of the same
+    // 128 GPUs through the unified ParallelLayout-backed hybrid timeline.
+    println!("\nGPT-3 175B on 32 nodes, data x pipeline x tensor splits:\n");
+    println!(
+        "{:>10} | {:>8} {:>10} {:>10} {:>12}",
+        "d·p·t", "bubble", "tp comm", "step", "samples/s"
+    );
+    use booster::scenario::{presets, ScenarioSpec};
+    for (stages, tensor) in [(128usize, 1usize), (64, 2), (32, 4)] {
+        let machine = presets::machine("juwels_booster").map_err(anyhow::Error::msg)?;
+        let spec = ScenarioSpec::builder(machine)
+            .workload(presets::workload("gpt3_175b").map_err(anyhow::Error::msg)?)
+            .nodes(32)
+            .pipeline_stages(stages)
+            .tensor_parallel(tensor)
+            .microbatches(8)
+            .schedule("1f1b")
+            .build()
+            .map_err(anyhow::Error::msg)?;
+        let ctx3d = booster::scenario::ExperimentContext::new(spec).map_err(anyhow::Error::msg)?;
+        let hy = ctx3d.hybrid_timeline().map_err(anyhow::Error::msg)?;
+        let gpus = ctx3d.job_gpus().map_err(anyhow::Error::msg)?;
+        let mut rng = Rng::seed_from(7);
+        let batch = ctx3d.spec.workload.batch_per_gpu;
+        let st = hy.step_time(&gpus, batch, &mut rng).map_err(anyhow::Error::msg)?;
+        println!(
+            "{:>10} | {:>7.1}% {:>8.2}ms {:>8.2}ms {:>12.1}",
+            format!("{}·{}·{}", st.replicas, stages, tensor),
+            st.bubble_fraction * 100.0,
+            st.tp_comm * 1e3,
+            st.total * 1e3,
+            st.samples_per_step() / st.total,
+        );
+    }
+    println!("\n(tensor groups trade pipeline bubble for intra-node NVLink allreduces)");
     Ok(())
 }

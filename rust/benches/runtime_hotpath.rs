@@ -265,6 +265,57 @@ fn main() {
             ("allreduce_gbps_400mb", Json::Num(algbw / 1e9)),
         ]),
     ));
+    out.push('\n');
+
+    // --- shared cache under concurrency (§Sync) ---------------------------
+    // 4 workers replay the warm 64-size sweep concurrently on the SAME
+    // model — every lookup is a hit, so this measures the sharded-Mutex
+    // lock overhead the intra-machine sweep workers pay, relative to one
+    // thread doing the same 4x work.
+    let threads = 4usize;
+    let t_st = Instant::now();
+    for _ in 0..threads {
+        for &b in &sizes {
+            model.allreduce_time(&gpus256, b, Algo::Hierarchical).unwrap();
+        }
+    }
+    let st_total = t_st.elapsed().as_secs_f64();
+    let t_mt = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let model = &model;
+            let sizes = &sizes;
+            let gpus256 = &gpus256;
+            s.spawn(move || {
+                for &b in sizes {
+                    model.allreduce_time(gpus256, b, Algo::Hierarchical).unwrap();
+                }
+            });
+        }
+    });
+    let mt_total = t_mt.elapsed().as_secs_f64();
+    let mut t = Table::new(&["shared warm cache, 4x64 lookups", "total", "per lookup"])
+        .with_title("sharded cost cache across threads");
+    t.row(&[
+        "1 thread".into(),
+        format!("{:.3} ms", st_total * 1e3),
+        format!("{:.1} us", st_total / (threads * sizes.len()) as f64 * 1e6),
+    ]);
+    t.row(&[
+        format!("{threads} threads"),
+        format!("{:.3} ms", mt_total * 1e3),
+        format!("{:.1} us", mt_total / (threads * sizes.len()) as f64 * 1e6),
+    ]);
+    out.push_str(&t.render());
+    json.push((
+        "shared_cache",
+        Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("lookups", Json::Num((threads * sizes.len()) as f64)),
+            ("single_thread_ms", Json::Num(st_total * 1e3)),
+            ("multi_thread_ms", Json::Num(mt_total * 1e3)),
+        ]),
+    ));
 
     print!("{out}");
     std::fs::create_dir_all("results").ok();

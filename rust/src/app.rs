@@ -72,8 +72,14 @@ pub fn commands() -> Vec<Command> {
         Command {
             name: "sweep",
             about: "run a scenario grid (--param key=v1,v2) over machines/scales/parallelism \
-                    (incl. hybrid pipeline×data: stages/microbatches/schedule)",
+                    (incl. 3D data×pipeline×tensor: stages/tensor/microbatches/schedule)",
             run: crate::report::cmd_sweep,
+        },
+        Command {
+            name: "crossover",
+            about: "sweep stages×tensor×nodes for a pipelining-mandatory workload across all \
+                    machine presets and emit the throughput-optimal parallelism frontier (§2.3)",
+            run: crate::report::cmd_crossover,
         },
     ]
 }
@@ -137,5 +143,43 @@ mod tests {
         assert_eq!(h, 0);
         let l = dispatch(&["sweep".to_string(), "--list".to_string()]).unwrap();
         assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn crossover_help_exits_zero() {
+        let h = dispatch(&["crossover".to_string(), "--help".to_string()]).unwrap();
+        assert_eq!(h, 0);
+    }
+
+    #[test]
+    fn crossover_rejects_bad_shared_flags_up_front() {
+        // A typo'd schedule must fail loudly, not be silently absorbed
+        // into the per-shape "machine-incompatible" skip count.
+        let err = crate::report::cmd_crossover(&[
+            "--schedule".to_string(),
+            "1f1v".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("schedule"), "{err}");
+        let err = crate::report::cmd_crossover(&[
+            "--microbatches".to_string(),
+            "0".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("microbatches"), "{err}");
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_param_key_up_front() {
+        // The satellite contract end-to-end: the driver fails before any
+        // simulation, with the valid key set (incl. 'tensor') in the error.
+        let err = crate::report::cmd_sweep(&[
+            "--param".to_string(),
+            "stagez=4".to_string(),
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown sweep key 'stagez'"), "{msg}");
+        assert!(msg.contains("tensor"), "{msg}");
     }
 }

@@ -31,9 +31,35 @@
 //! [`CollectiveModel::invalidate_caches`] drops every memoized route and
 //! cost point (needed only if a `Topology` could mutate, which the public
 //! API does not allow).
+//!
+//! # §Sync: thread safety
+//!
+//! `CollectiveModel` is `Send + Sync`: multiple sweep workers share **one**
+//! model (and therefore one warm cost cache) across `std::thread::scope`
+//! threads. The interior state is
+//!
+//! * a **sharded** [`CostCache`] — curves are spread over
+//!   fingerprint-indexed `Mutex` shards, so concurrent lookups of
+//!   different patterns rarely contend;
+//! * a `Mutex<RouteTable>` held only while flows are *constructed*
+//!   (released before the simulation runs, so concurrent misses simulate
+//!   in parallel);
+//! * a pool of [`ModelScratch`] arenas — each in-flight simulation checks
+//!   one out, so the pool grows to the worker count and steady-state
+//!   allocation stays zero.
+//!
+//! Two workers that miss the same `(pattern, bytes)` concurrently both
+//! simulate it; the simulation is deterministic, so they insert the same
+//! point (the duplicate insert is a no-op) — values never race, only the
+//! hit/miss counters can. For bit-reproducible *sweeps*, the sweep driver
+//! warms the cache sequentially and then [`CollectiveModel::freeze_cache`]s
+//! it so the evaluation phase reads a constant cache regardless of worker
+//! interleaving (see `scenario::sweep`). Invalidation semantics are
+//! unchanged from the single-threaded cache (`rust/src/net/README.md`).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::net::{simulate_makespan_with_scratch, Flow, SimScratch};
 use crate::topology::{GpuId, RouteTable, Topology};
@@ -170,47 +196,94 @@ impl SizeCurve {
     }
 }
 
+/// Number of lock shards in the [`CostCache`]. A power of two so shard
+/// selection is a mask of the (already well-mixed) fingerprint.
+const COST_SHARDS: usize = 16;
+
+/// One lock shard of the cost cache: its slice of the curve map plus its
+/// own hit/miss counters (summed on read, so the hot path never touches a
+/// contended global counter).
+#[derive(Debug, Default)]
+struct CostShard {
+    curves: HashMap<(u64, u8), SizeCurve>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Lock a mutex, recovering the data from a poisoned lock: every value
+/// behind these mutexes (curves, routes, scratch) is valid after any
+/// partial mutation, and a worker panic is surfaced separately by the
+/// sweep's join logic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Pattern-level collective cost cache (see the module docs for the
 /// linearity invariant it relies on). Keyed by
 /// `(gpu-set fingerprint, algorithm)`; values are [`SizeCurve`]s of
-/// simulated samples. Hit/miss counters feed the §Perf benches.
-#[derive(Debug, Default)]
+/// simulated samples, spread over [`COST_SHARDS`] `Mutex` shards by
+/// fingerprint so concurrent workers on different patterns don't contend
+/// (§Sync). Hit/miss counters feed the §Perf benches.
+#[derive(Debug)]
 pub struct CostCache {
-    curves: HashMap<(u64, u8), SizeCurve>,
-    /// Calls answered without simulation.
-    pub hits: u64,
-    /// Calls that ran the full flow-level simulation.
-    pub misses: u64,
+    shards: Vec<Mutex<CostShard>>,
+}
+
+impl Default for CostCache {
+    fn default() -> CostCache {
+        CostCache {
+            shards: (0..COST_SHARDS).map(|_| Mutex::new(CostShard::default())).collect(),
+        }
+    }
 }
 
 impl CostCache {
-    fn lookup(&mut self, fp: u64, algo: Algo, bytes: f64) -> Option<f64> {
-        let r = self
+    fn shard(&self, fp: u64) -> &Mutex<CostShard> {
+        &self.shards[(fp as usize) & (COST_SHARDS - 1)]
+    }
+
+    fn lookup(&self, fp: u64, algo: Algo, bytes: f64) -> Option<f64> {
+        let mut s = lock(self.shard(fp));
+        let r = s
             .curves
             .get(&(fp, algo.cache_idx()))
             .and_then(|c| c.eval(bytes));
         if r.is_some() {
-            self.hits += 1;
+            s.hits += 1;
         } else {
-            self.misses += 1;
+            s.misses += 1;
         }
         r
     }
 
-    fn insert(&mut self, fp: u64, algo: Algo, bytes: f64, secs: f64) {
-        self.curves
+    fn insert(&self, fp: u64, algo: Algo, bytes: f64, secs: f64) {
+        lock(self.shard(fp))
+            .curves
             .entry((fp, algo.cache_idx()))
             .or_default()
             .insert(bytes, secs);
     }
 
+    /// `(hits, misses)` summed over the shards.
+    pub fn stats(&self) -> (u64, u64) {
+        let mut hits = 0;
+        let mut misses = 0;
+        for s in &self.shards {
+            let s = lock(s);
+            hits += s.hits;
+            misses += s.misses;
+        }
+        (hits, misses)
+    }
+
     /// Fraction of lookups served from the cache.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let (hits, misses) = self.stats();
+        let total = hits + misses;
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            hits as f64 / total as f64
         }
     }
 
@@ -218,10 +291,13 @@ impl CostCache {
     /// invalidation): post-clear stats describe only post-clear lookups,
     /// matching the route table's reset in
     /// [`CollectiveModel::invalidate_caches`].
-    pub fn clear(&mut self) {
-        self.curves.clear();
-        self.hits = 0;
-        self.misses = 0;
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut s = lock(s);
+            s.curves.clear();
+            s.hits = 0;
+            s.misses = 0;
+        }
     }
 }
 
@@ -229,7 +305,9 @@ impl CostCache {
 /// dominant per-simulation allocations (one `Flow` + path `Vec` per rank,
 /// the solver's tables) are grown once and reused. Small per-call
 /// allocations remain in `ring_order` (the sorted copy) and
-/// `hierarchical_time`'s node grouping.
+/// `hierarchical_time`'s node grouping. The model keeps a pool of these
+/// (§Sync): each in-flight simulation checks one out, so the pool holds
+/// one arena per concurrent worker.
 #[derive(Debug, Default)]
 struct ModelScratch {
     sim: SimScratch,
@@ -238,13 +316,19 @@ struct ModelScratch {
 }
 
 /// Collective cost model bound to a topology, carrying the memoized
-/// route table and the pattern-level cost cache.
+/// route table and the pattern-level cost cache. `Send + Sync` (§Sync):
+/// sweep workers share one model — and one warm cache — across scoped
+/// threads.
 #[derive(Debug)]
 pub struct CollectiveModel<'a> {
     topo: &'a Topology,
-    routes: RefCell<RouteTable>,
-    cache: RefCell<CostCache>,
-    scratch: RefCell<ModelScratch>,
+    routes: Mutex<RouteTable>,
+    cache: CostCache,
+    scratch: Mutex<Vec<ModelScratch>>,
+    /// When set, misses still simulate but are not learned: the cache is
+    /// read-only, so concurrent lookups are pure functions of the warm
+    /// state (the sweep's determinism lever — see the module docs).
+    frozen: AtomicBool,
 }
 
 impl<'a> CollectiveModel<'a> {
@@ -252,10 +336,30 @@ impl<'a> CollectiveModel<'a> {
     pub fn new(topo: &'a Topology) -> CollectiveModel<'a> {
         CollectiveModel {
             topo,
-            routes: RefCell::new(RouteTable::new()),
-            cache: RefCell::new(CostCache::default()),
-            scratch: RefCell::new(ModelScratch::default()),
+            routes: Mutex::new(RouteTable::new()),
+            cache: CostCache::default(),
+            scratch: Mutex::new(Vec::new()),
+            frozen: AtomicBool::new(false),
         }
+    }
+
+    /// Freeze (or thaw) the cost cache: while frozen, cache misses still
+    /// run the full simulation but the sample is **not** recorded, so the
+    /// cache contents — and with them every interpolated answer — stay
+    /// bit-stable no matter how concurrent callers interleave. The sweep
+    /// driver warms the cache sequentially, freezes it, and then lets
+    /// workers share it (`scenario::sweep`).
+    pub fn freeze_cache(&self, frozen: bool) {
+        self.frozen.store(frozen, Ordering::Relaxed);
+    }
+
+    /// Run `f` with a pooled scratch arena (grown to the number of
+    /// concurrent simulations, reused forever after).
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut ModelScratch) -> R) -> R {
+        let mut sc = lock(&self.scratch).pop().unwrap_or_default();
+        let r = f(&mut sc);
+        lock(&self.scratch).push(sc);
+        r
     }
 
     /// The topology this model is bound to.
@@ -291,11 +395,13 @@ impl<'a> CollectiveModel<'a> {
             return Ok(LAUNCH_OVERHEAD);
         }
         let fp = gpu_set_fingerprint(gpus);
-        if let Some(t) = self.cache.borrow_mut().lookup(fp, algo, bytes) {
+        if let Some(t) = self.cache.lookup(fp, algo, bytes) {
             return Ok(t + LAUNCH_OVERHEAD);
         }
         let t = self.simulate_algo(gpus, bytes, algo)?;
-        self.cache.borrow_mut().insert(fp, algo, bytes, t);
+        if !self.frozen.load(Ordering::Relaxed) {
+            self.cache.insert(fp, algo, bytes, t);
+        }
         Ok(t + LAUNCH_OVERHEAD)
     }
 
@@ -317,18 +423,17 @@ impl<'a> CollectiveModel<'a> {
 
     /// `(hits, misses)` of the cost cache.
     pub fn cache_stats(&self) -> (u64, u64) {
-        let c = self.cache.borrow();
-        (c.hits, c.misses)
+        self.cache.stats()
     }
 
     /// Fraction of `allreduce_time` calls served without simulation.
     pub fn cache_hit_rate(&self) -> f64 {
-        self.cache.borrow().hit_rate()
+        self.cache.hit_rate()
     }
 
     /// `(hits, misses)` of the route table.
     pub fn route_stats(&self) -> (u64, u64) {
-        let r = self.routes.borrow();
+        let r = lock(&self.routes);
         (r.hits, r.misses)
     }
 
@@ -337,20 +442,16 @@ impl<'a> CollectiveModel<'a> {
     /// is never required for correctness, but sweeps that want cold-start
     /// numbers (or long-lived processes bounding memory) can call it.
     pub fn invalidate_caches(&self) {
-        *self.routes.borrow_mut() = RouteTable::new();
-        self.cache.borrow_mut().clear();
+        *lock(&self.routes) = RouteTable::new();
+        self.cache.clear();
     }
 
     fn simulate_algo(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
-        let mut sc = self.scratch.borrow_mut();
-        let mut routes = self.routes.borrow_mut();
-        let sc = &mut *sc;
-        let routes = &mut *routes;
-        match algo {
-            Algo::Ring => self.ring_time(sc, routes, gpus, bytes),
-            Algo::HalvingDoubling => self.hd_time(sc, routes, gpus, bytes),
-            Algo::Hierarchical => self.hierarchical_time(sc, routes, gpus, bytes),
-        }
+        self.with_scratch(|sc| match algo {
+            Algo::Ring => self.ring_time(sc, gpus, bytes),
+            Algo::HalvingDoubling => self.hd_time(sc, gpus, bytes),
+            Algo::Hierarchical => self.hierarchical_time(sc, gpus, bytes),
+        })
     }
 
     /// Grow `flows` to at least `n` reusable entries. Never shrinks: the
@@ -381,26 +482,25 @@ impl<'a> CollectiveModel<'a> {
     }
 
     /// One ring round over `order` with `chunk` bytes per flow, into
-    /// `sc.ring`, simulated with the shared arena.
-    fn ring_round(
-        &self,
-        sc: &mut ModelScratch,
-        routes: &mut RouteTable,
-        order: &[GpuId],
-        chunk: f64,
-    ) -> Result<f64> {
+    /// `sc.ring`, simulated with the shared arena. The route-table lock is
+    /// held only while the flows are constructed, never across the
+    /// simulation itself (§Sync).
+    fn ring_round(&self, sc: &mut ModelScratch, order: &[GpuId], chunk: f64) -> Result<f64> {
         let n = order.len();
         Self::ensure_flows(&mut sc.ring, n);
-        for i in 0..n {
-            Self::set_flow(
-                self.topo,
-                routes,
-                order[i],
-                order[(i + 1) % n],
-                i as u64,
-                chunk,
-                &mut sc.ring[i],
-            );
+        {
+            let mut routes = lock(&self.routes);
+            for i in 0..n {
+                Self::set_flow(
+                    self.topo,
+                    &mut routes,
+                    order[i],
+                    order[(i + 1) % n],
+                    i as u64,
+                    chunk,
+                    &mut sc.ring[i],
+                );
+            }
         }
         let ModelScratch { sim, ring, .. } = sc;
         Ok(simulate_makespan_with_scratch(self.topo, &ring[..n], sim)?.0)
@@ -409,17 +509,11 @@ impl<'a> CollectiveModel<'a> {
     /// Ring allreduce: 2(n−1) rounds, each round every rank sends
     /// `bytes/n` to its successor. All rounds share the same flow pattern
     /// under the fluid model, so we simulate one round and scale.
-    fn ring_time(
-        &self,
-        sc: &mut ModelScratch,
-        routes: &mut RouteTable,
-        gpus: &[GpuId],
-        bytes: f64,
-    ) -> Result<f64> {
+    fn ring_time(&self, sc: &mut ModelScratch, gpus: &[GpuId], bytes: f64) -> Result<f64> {
         let order = self.ring_order(gpus);
         let n = order.len();
         let chunk = bytes / n as f64;
-        let round = self.ring_round(sc, routes, &order, chunk)?;
+        let round = self.ring_round(sc, &order, chunk)?;
         Ok(round * 2.0 * (n as f64 - 1.0))
     }
 
@@ -427,13 +521,7 @@ impl<'a> CollectiveModel<'a> {
     /// round with partners at doubling distance, then allgather mirrors it.
     /// Non-power-of-two ranks are folded in with a preliminary exchange
     /// (we charge one extra full-size round, the standard trick's cost).
-    fn hd_time(
-        &self,
-        sc: &mut ModelScratch,
-        routes: &mut RouteTable,
-        gpus: &[GpuId],
-        bytes: f64,
-    ) -> Result<f64> {
+    fn hd_time(&self, sc: &mut ModelScratch, gpus: &[GpuId], bytes: f64) -> Result<f64> {
         let order = self.ring_order(gpus);
         let n = order.len();
         let p2 = 1usize << (usize::BITS - 1 - n.leading_zeros()) as usize;
@@ -442,16 +530,19 @@ impl<'a> CollectiveModel<'a> {
             // Fold the excess ranks: one extra exchange of the full buffer.
             let excess = n - p2;
             Self::ensure_flows(&mut sc.aux, excess);
-            for i in 0..excess {
-                Self::set_flow(
-                    self.topo,
-                    routes,
-                    order[p2 + i],
-                    order[i],
-                    i as u64,
-                    bytes,
-                    &mut sc.aux[i],
-                );
+            {
+                let mut routes = lock(&self.routes);
+                for i in 0..excess {
+                    Self::set_flow(
+                        self.topo,
+                        &mut routes,
+                        order[p2 + i],
+                        order[i],
+                        i as u64,
+                        bytes,
+                        &mut sc.aux[i],
+                    );
+                }
             }
             let ModelScratch { sim, aux, .. } = sc;
             total += simulate_makespan_with_scratch(self.topo, &aux[..excess], sim)?.0;
@@ -463,17 +554,20 @@ impl<'a> CollectiveModel<'a> {
         for r in 0..rounds {
             let dist = 1usize << r;
             Self::ensure_flows(&mut sc.aux, p2);
-            for i in 0..p2 {
-                let partner = i ^ dist;
-                Self::set_flow(
-                    self.topo,
-                    routes,
-                    order[i],
-                    order[partner],
-                    r as u64,
-                    size,
-                    &mut sc.aux[i],
-                );
+            {
+                let mut routes = lock(&self.routes);
+                for i in 0..p2 {
+                    let partner = i ^ dist;
+                    Self::set_flow(
+                        self.topo,
+                        &mut routes,
+                        order[i],
+                        order[partner],
+                        r as u64,
+                        size,
+                        &mut sc.aux[i],
+                    );
+                }
             }
             let ModelScratch { sim, aux, .. } = sc;
             total += 2.0 * simulate_makespan_with_scratch(self.topo, &aux[..p2], sim)?.0;
@@ -483,13 +577,7 @@ impl<'a> CollectiveModel<'a> {
     }
 
     /// Two-level hierarchical allreduce.
-    fn hierarchical_time(
-        &self,
-        sc: &mut ModelScratch,
-        routes: &mut RouteTable,
-        gpus: &[GpuId],
-        bytes: f64,
-    ) -> Result<f64> {
+    fn hierarchical_time(&self, sc: &mut ModelScratch, gpus: &[GpuId], bytes: f64) -> Result<f64> {
         // Group GPUs by node.
         let mut by_node: std::collections::BTreeMap<usize, Vec<GpuId>> = Default::default();
         for &g in gpus {
@@ -508,7 +596,7 @@ impl<'a> CollectiveModel<'a> {
                 .unwrap()
                 .clone();
             let chunk = bytes / max_group as f64;
-            let round = self.ring_round(sc, routes, &group, chunk)?;
+            let round = self.ring_round(sc, &group, chunk)?;
             // Reduce-scatter only: (g-1) rounds; the trailing allgather
             // merges with phase 3's broadcast.
             total += round * (max_group as f64 - 1.0);
@@ -517,7 +605,7 @@ impl<'a> CollectiveModel<'a> {
         // Phase 2: inter-node ring allreduce among node leaders.
         let leaders: Vec<GpuId> = by_node.values().map(|v| v[0]).collect();
         if leaders.len() > 1 {
-            total += self.ring_time(sc, routes, &leaders, bytes)?;
+            total += self.ring_time(sc, &leaders, bytes)?;
         }
 
         // Phase 3: intra-node allgather/broadcast of the reduced buffer.
@@ -528,7 +616,7 @@ impl<'a> CollectiveModel<'a> {
                 .unwrap()
                 .clone();
             let chunk = bytes / max_group as f64;
-            let round = self.ring_round(sc, routes, &group, chunk)?;
+            let round = self.ring_round(sc, &group, chunk)?;
             total += round * (max_group as f64 - 1.0);
         }
         Ok(total)
@@ -975,6 +1063,87 @@ mod tests {
         let (rh, rm) = m.route_stats();
         assert_eq!(rh, 0, "route table must be rebuilt too");
         assert!(rm > 0);
+    }
+
+    // ---- §Sync: thread safety ------------------------------------------
+
+    #[test]
+    fn model_is_send_and_sync() {
+        // The acceptance contract: no RefCell left — the model crosses
+        // scoped-thread boundaries by shared reference.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<CollectiveModel<'static>>();
+        assert_send_sync::<CostCache>();
+    }
+
+    #[test]
+    fn concurrent_hammer_no_deadlock_and_hits_after_warmup() {
+        // 4 threads share one model: interleaved lookups on overlapping
+        // patterns, including sizes that force concurrent simulate+insert.
+        // Must terminate (no deadlock), and warmed patterns must be served
+        // from the cache.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let sets = [
+            t.first_gpus(8).unwrap(),
+            t.first_gpus(16).unwrap(),
+            t.spread_gpus(8).unwrap(),
+        ];
+        // Warm-up: probe the span edges of every pattern.
+        for s in &sets {
+            m.allreduce_time(s, 1e6, Algo::Ring).unwrap();
+            m.allreduce_time(s, 4e6, Algo::Ring).unwrap();
+        }
+        let warm = m.allreduce_time(&sets[0], 2e6, Algo::Ring).unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..4usize {
+                let m = &m;
+                let sets = &sets;
+                scope.spawn(move || {
+                    for i in 0..64usize {
+                        let s = &sets[(i + w) % sets.len()];
+                        // In-span sizes hit; the occasional far-out size
+                        // misses and racing threads both simulate+insert.
+                        let bytes = if i % 16 == 7 { 5e8 } else { 1e6 + (i % 4) as f64 * 1e6 };
+                        let dt = m.allreduce_time(s, bytes, Algo::Ring).unwrap();
+                        assert!(dt > 0.0 && dt.is_finite());
+                    }
+                });
+            }
+        });
+        assert!(m.cache_hit_rate() > 0.0, "warmed patterns must hit");
+        // A warmed exact size still answers identically after the storm.
+        assert_eq!(warm, m.allreduce_time(&sets[0], 2e6, Algo::Ring).unwrap());
+    }
+
+    #[test]
+    fn frozen_cache_answers_but_never_learns() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16).unwrap();
+        m.allreduce_time(&gpus, 1e8, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 2e8, Algo::Ring).unwrap();
+        m.freeze_cache(true);
+        // In-span lookup: still a hit.
+        let (h0, _) = m.cache_stats();
+        m.allreduce_time(&gpus, 1.5e8, Algo::Ring).unwrap();
+        let (h1, _) = m.cache_stats();
+        assert_eq!(h1, h0 + 1, "frozen cache still serves hits");
+        // Out-of-span: simulated but NOT learned — repeating it misses
+        // again and both answers equal the uncached oracle.
+        let a = m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        let (_, m1) = m.cache_stats();
+        let b = m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        let (_, m2) = m.cache_stats();
+        assert_eq!(m2, m1 + 1, "frozen miss must not be learned");
+        assert_eq!(a, b);
+        assert_eq!(a, m.allreduce_time_uncached(&gpus, 4096.0, Algo::Ring).unwrap());
+        // Thaw: learning resumes.
+        m.freeze_cache(false);
+        m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 4096.0, Algo::Ring).unwrap();
+        let (h2, _) = m.cache_stats();
+        assert!(h2 > h1, "thawed cache learns the new point");
     }
 
     #[test]

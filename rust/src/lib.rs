@@ -19,10 +19,14 @@
 //! `leonardo`, `isambard_ai` — see [`scenario::presets`]), and the
 //! [`scenario::ExperimentContext`] every CLI driver, bench and example
 //! builds its topology/power/engine from. Grid studies run through
-//! `booster sweep --param key=v1,v2` ([`scenario::sweep`]), which prices
-//! all points of a machine through one shared, cached
-//! [`collectives::CollectiveModel`]. The schema and preset numbers are
-//! documented in `rust/src/scenario/README.md`.
+//! `booster sweep --param key=v1,v2` ([`scenario::sweep`]) and the §2.3
+//! `booster crossover` frontier study: every point is priced by the 3D
+//! data×pipeline×tensor [`train::hybrid::HybridTimeline`] (built on
+//! [`train::layout::ParallelLayout`]) through one shared, cached,
+//! `Send + Sync` [`collectives::CollectiveModel`] — machine groups run
+//! on parallel threads and each machine's grid is sharded across
+//! workers over a pre-warmed frozen cache. The schema and preset
+//! numbers are documented in `rust/src/scenario/README.md`.
 
 pub mod app;
 pub mod collectives;

@@ -57,6 +57,14 @@ pub struct PipelinedModel {
     /// Bytes of state per parameter (weights + grads + optimizer; Adam
     /// mixed precision ≈ 16 B/param).
     pub state_bytes_per_param: f64,
+    /// Layers the model is built from — the unit tensor parallelism
+    /// allreduces over (a pipeline stage holds `layers / stages` of them).
+    pub layers: usize,
+    /// Bytes one Megatron-style tensor-group allreduce moves, per layer
+    /// per sample (the row-parallel output tensor, seq × hidden × 2 B for
+    /// transformers). A stage charges 2·(layers/stages) of these per
+    /// microbatch — forward and backward each reduce once per layer.
+    pub layer_allreduce_bytes_per_sample: f64,
 }
 
 impl PipelinedModel {
@@ -67,6 +75,8 @@ impl PipelinedModel {
             fwd_flops_per_sample: 2.0 * 175e9 * 2048.0, // seq 2048
             activation_bytes_per_sample: 2048.0 * 12288.0 * 2.0, // seq x hidden x bf16
             state_bytes_per_param: 16.0,
+            layers: 96,
+            layer_allreduce_bytes_per_sample: 2048.0 * 12288.0 * 2.0,
         }
     }
 
@@ -92,18 +102,31 @@ pub struct PipelineStep {
     pub stage_time: f64,
     /// Inter-stage transfer seconds per microbatch.
     pub transfer_time: f64,
+    /// Tensor-group allreduce seconds charged into each microbatch slot
+    /// (0 without tensor parallelism).
+    pub tensor_comm: f64,
 }
 
-/// Simulate one training step of `model` split into `stages` consecutive
-/// stages over `gpus` (round-robin stage assignment must hold
-/// `gpus.len() == stages`), with `microbatches` of `micro_size` samples,
-/// computing in `precision`.
+/// Simulate one training step of `model` split into
+/// `stages = gpus.len() / tensor` consecutive stages over `gpus`
+/// (stage-major: stage `i` owns `gpus[i·tensor..(i+1)·tensor]` as its
+/// tensor group), with `microbatches` of `micro_size` samples, computing
+/// in `precision`.
+///
+/// `tensor_comm_per_micro` is the per-microbatch tensor-group allreduce
+/// time the caller priced through its `CollectiveModel`
+/// (2·(layers/stages) allreduces of the per-layer activation volume —
+/// [`crate::train::hybrid`] computes it); it extends every microbatch
+/// slot, exactly where Megatron's intra-layer allreduces sit. Pass
+/// `tensor = 1, tensor_comm_per_micro = 0.0` for a plain pipeline — the
+/// result is bit-identical to the pre-tensor model.
 ///
 /// The memory-fit check covers **state + activations**: parameter/optimizer
-/// state is sharded `1/s`, while the activation high-water mark depends on
-/// the schedule ([`activation_memory`]) — GPipe holds all `m` in-flight
-/// microbatches, 1F1B at most `s`. This is where 1F1B starts passing
-/// configurations GPipe rejects.
+/// state is sharded `1/(s·t)` (tensor parallelism shards within the
+/// stage), the activation footprint `1/t`, while the activation
+/// high-water mark depends on the schedule ([`activation_memory`]) —
+/// GPipe holds all `m` in-flight microbatches, 1F1B at most `s`. This is
+/// where 1F1B starts passing configurations GPipe rejects.
 #[allow(clippy::too_many_arguments)]
 pub fn step_time(
     topo: &Topology,
@@ -114,20 +137,35 @@ pub fn step_time(
     micro_size: usize,
     efficiency: f64,
     precision: Precision,
+    tensor: usize,
+    tensor_comm_per_micro: f64,
 ) -> Result<PipelineStep> {
-    let s = gpus.len();
+    if tensor < 1 || gpus.len() % tensor != 0 {
+        return Err(BoosterError::Config(format!(
+            "tensor group size {tensor} does not divide the pipeline's {} GPUs",
+            gpus.len()
+        )));
+    }
+    if !(tensor_comm_per_micro >= 0.0 && tensor_comm_per_micro.is_finite()) {
+        return Err(BoosterError::Config(format!(
+            "tensor comm per microbatch must be finite and non-negative, \
+             got {tensor_comm_per_micro}"
+        )));
+    }
+    let s = gpus.len() / tensor;
     if s < 1 || microbatches < 1 {
         return Err(BoosterError::Config("empty pipeline".into()));
     }
     // Memory check: this partitioning must actually fit, state AND
     // schedule-dependent activation high-water mark.
     let hbm = topo.node_spec.gpu.hbm_bytes as f64;
-    let state = model.state_bytes() / s as f64;
-    let act = activation_memory(model, schedule, s, microbatches, micro_size);
+    let state = model.state_bytes() / (s * tensor) as f64;
+    let act = activation_memory(model, schedule, s, microbatches, micro_size, tensor);
     if state + act > hbm {
         return Err(BoosterError::Config(format!(
-            "pipeline does not fit: {:.1} GB state/stage + {:.1} GB activations ({}) \
-             > {:.0} GB HBM (model needs >= {} stages for state alone)",
+            "pipeline does not fit: {:.1} GB state/shard + {:.1} GB activations ({}) \
+             > {:.0} GB HBM over {s} stage(s) x {tensor} tensor shard(s) \
+             (model needs >= {} stage-shards for state alone)",
             state / 1e9,
             act / 1e9,
             schedule.key(),
@@ -135,18 +173,20 @@ pub fn step_time(
             model.min_stages(hbm),
         )));
     }
-    // Per-stage fwd+bwd compute for one microbatch (uniform split).
-    let flops = 3.0 * model.fwd_flops_per_sample * micro_size as f64 / s as f64;
+    // Per-GPU fwd+bwd compute for one microbatch (uniform split over the
+    // stage grid; tensor parallelism splits each layer's math t ways).
+    let flops = 3.0 * model.fwd_flops_per_sample * micro_size as f64 / (s * tensor) as f64;
     let stage_time = topo
         .node_spec
         .gpu
         .kernel_time(flops, 0.0, precision, efficiency);
-    // Inter-stage activation transfer (fwd) + gradient-of-activation (bwd).
+    // Inter-stage activation transfer (fwd) + gradient-of-activation
+    // (bwd): last GPU of stage i's tensor group to first of stage i+1's.
     let transfer_time = if s > 1 {
         let bytes = model.activation_bytes_per_sample * micro_size as f64;
         let flows: Vec<Flow> = (0..s - 1)
             .map(|i| Flow {
-                path: topo.route(gpus[i], gpus[i + 1], i as u64),
+                path: topo.route(gpus[(i + 1) * tensor - 1], gpus[(i + 1) * tensor], i as u64),
                 bytes,
                 start: 0.0,
             })
@@ -156,9 +196,10 @@ pub fn step_time(
         0.0
     };
     // Both schedules share the (s-1)/(m+s-1) bubble; 1F1B lowers memory
-    // (checked above), not time (flush variant).
+    // (checked above), not time (flush variant). The tensor-group
+    // allreduces ride inside every slot.
     let m = microbatches as f64;
-    let slot = stage_time + 2.0 * transfer_time;
+    let slot = stage_time + 2.0 * transfer_time + tensor_comm_per_micro;
     let total = (m + s as f64 - 1.0) * slot;
     let useful = m * slot;
     Ok(PipelineStep {
@@ -166,19 +207,22 @@ pub fn step_time(
         bubble_fraction: 1.0 - useful / ((m + s as f64 - 1.0) * slot),
         stage_time,
         transfer_time,
+        tensor_comm: tensor_comm_per_micro,
     })
 }
 
-/// Activation memory high-water mark per stage, in bytes — where 1F1B
+/// Activation memory high-water mark per GPU, in bytes — where 1F1B
 /// beats GPipe (it holds ≤ s in-flight microbatches instead of m).
+/// Tensor parallelism shards the footprint `1/t` across the group.
 pub fn activation_memory(
     model: &PipelinedModel,
     schedule: Schedule,
     stages: usize,
     microbatches: usize,
     micro_size: usize,
+    tensor: usize,
 ) -> f64 {
-    let per_micro = model.activation_bytes_per_sample * micro_size as f64;
+    let per_micro = model.activation_bytes_per_sample * micro_size as f64 / tensor as f64;
     let in_flight = match schedule {
         Schedule::GPipe => microbatches,
         Schedule::OneFOneB => stages.min(microbatches),
@@ -202,7 +246,7 @@ mod tests {
         let t = topo();
         let gpus = t.first_gpus(4).unwrap();
         let p = Precision::Bf16Tc;
-        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 8, 1, 0.4, p).is_err());
+        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 8, 1, 0.4, p, 1, 0.0).is_err());
     }
 
     #[test]
@@ -217,12 +261,14 @@ mod tests {
             fwd_flops_per_sample: 2e9 * 512.0,
             activation_bytes_per_sample: 2e9,
             state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 2e9,
         };
         let gpus = t.first_gpus(4).unwrap();
         let p = Precision::Bf16Tc;
-        let gpipe = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p);
+        let gpipe = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 1, 0.0);
         assert!(gpipe.is_err(), "GPipe must reject: activations exceed HBM");
-        let ofob = step_time(&t, &gpus, &m, Schedule::OneFOneB, 16, 4, 0.4, p);
+        let ofob = step_time(&t, &gpus, &m, Schedule::OneFOneB, 16, 4, 0.4, p, 1, 0.0);
         ofob.expect("1F1B holds <= s microbatches and fits");
     }
 
@@ -242,11 +288,13 @@ mod tests {
             fwd_flops_per_sample: 2e9 * 512.0,
             activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
             state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 512.0 * 4096.0 * 2.0,
         };
         let gpus = t.first_gpus(8).unwrap();
         let p = Precision::Bf16Tc;
-        let few = step_time(&t, &gpus, &m, Schedule::GPipe, 2, 4, 0.4, p).unwrap();
-        let many = step_time(&t, &gpus, &m, Schedule::GPipe, 64, 4, 0.4, p).unwrap();
+        let few = step_time(&t, &gpus, &m, Schedule::GPipe, 2, 4, 0.4, p, 1, 0.0).unwrap();
+        let many = step_time(&t, &gpus, &m, Schedule::GPipe, 64, 4, 0.4, p, 1, 0.0).unwrap();
         assert!(few.bubble_fraction > many.bubble_fraction);
         assert!((few.bubble_fraction - 7.0 / 9.0).abs() < 1e-9);
         assert!(many.bubble_fraction < 0.12);
@@ -260,14 +308,16 @@ mod tests {
             fwd_flops_per_sample: 2e9 * 512.0,
             activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
             state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 512.0 * 4096.0 * 2.0,
         };
         let gpus = t.first_gpus(8).unwrap();
         let p = Precision::Bf16Tc;
-        let a = step_time(&t, &gpus, &m, Schedule::GPipe, 32, 4, 0.4, p).unwrap();
-        let b = step_time(&t, &gpus, &m, Schedule::OneFOneB, 32, 4, 0.4, p).unwrap();
+        let a = step_time(&t, &gpus, &m, Schedule::GPipe, 32, 4, 0.4, p, 1, 0.0).unwrap();
+        let b = step_time(&t, &gpus, &m, Schedule::OneFOneB, 32, 4, 0.4, p, 1, 0.0).unwrap();
         assert!((a.total - b.total).abs() < 1e-12);
-        let mem_gpipe = activation_memory(&m, Schedule::GPipe, 8, 32, 4);
-        let mem_1f1b = activation_memory(&m, Schedule::OneFOneB, 8, 32, 4);
+        let mem_gpipe = activation_memory(&m, Schedule::GPipe, 8, 32, 4, 1);
+        let mem_1f1b = activation_memory(&m, Schedule::OneFOneB, 8, 32, 4, 1);
         assert!(mem_1f1b * 3.9 < mem_gpipe, "{mem_1f1b} vs {mem_gpipe}");
     }
 
@@ -279,14 +329,72 @@ mod tests {
             fwd_flops_per_sample: 2e9 * 512.0,
             activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
             state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 512.0 * 4096.0 * 2.0,
         };
         // 4 stages inside one node (NVLink) vs spread over 4 nodes.
         let intra = t.first_gpus(4).unwrap();
         let inter: Vec<GpuId> = (0..4).map(|n| GpuId { node: n * 48, gpu: 0 }).collect();
         let p = Precision::Bf16Tc;
-        let a = step_time(&t, &intra, &m, Schedule::GPipe, 16, 4, 0.4, p).unwrap();
-        let b = step_time(&t, &inter, &m, Schedule::GPipe, 16, 4, 0.4, p).unwrap();
+        let a = step_time(&t, &intra, &m, Schedule::GPipe, 16, 4, 0.4, p, 1, 0.0).unwrap();
+        let b = step_time(&t, &inter, &m, Schedule::GPipe, 16, 4, 0.4, p, 1, 0.0).unwrap();
         assert!(b.transfer_time > a.transfer_time);
         assert!(b.total > a.total);
+    }
+
+    #[test]
+    fn tensor_parallelism_splits_compute_and_state() {
+        // 8 GPUs as 4 stages x 2-way tensor: per-GPU compute and state
+        // halve relative to 8 plain stages... of 4 stages.
+        let t = topo();
+        let m = PipelinedModel {
+            params: 10e9, // 160 GB state: fits 8 GPUs (20 GB), not 4 (40+act)
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+            state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+        };
+        let gpus = t.first_gpus(8).unwrap();
+        let p = Precision::Bf16Tc;
+        let plain = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 1, 0.0).unwrap();
+        let tp2 = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 2, 0.0).unwrap();
+        // Same per-GPU math split (8 shards either way), but tp2 has only
+        // 4 pipeline stages -> smaller bubble, shorter step at zero comm.
+        assert!((tp2.stage_time - plain.stage_time).abs() < 1e-15);
+        assert!(tp2.bubble_fraction < plain.bubble_fraction);
+        // The 4-stage x t=1 split cannot hold the state; t=2 can.
+        assert!(
+            step_time(&t, &gpus[..4], &m, Schedule::GPipe, 16, 4, 0.4, p, 1, 0.0).is_err(),
+            "40 GB state/stage must not fit a 40 GB GPU with activations"
+        );
+        step_time(&t, &gpus[..8], &m, Schedule::GPipe, 16, 4, 0.4, p, 2, 0.0)
+            .expect("2-way tensor sharding halves the per-GPU state");
+    }
+
+    #[test]
+    fn tensor_comm_extends_every_slot() {
+        let t = topo();
+        let m = PipelinedModel {
+            params: 1e9,
+            fwd_flops_per_sample: 2e9 * 512.0,
+            activation_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+            state_bytes_per_param: 16.0,
+            layers: 8,
+            layer_allreduce_bytes_per_sample: 512.0 * 4096.0 * 2.0,
+        };
+        let gpus = t.first_gpus(8).unwrap();
+        let p = Precision::Bf16Tc;
+        let quiet = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 2, 0.0).unwrap();
+        let comm = 1e-3;
+        let loud = step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 2, comm).unwrap();
+        // (m + s - 1) slots, each extended by exactly `comm`.
+        let slots = 16.0 + 4.0 - 1.0;
+        assert!((loud.total - quiet.total - slots * comm).abs() < 1e-12);
+        assert_eq!(loud.tensor_comm, comm);
+        // Invalid tensor shapes and comm values are rejected.
+        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 3, 0.0).is_err());
+        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 2, f64::NAN).is_err());
+        assert!(step_time(&t, &gpus, &m, Schedule::GPipe, 16, 4, 0.4, p, 2, -1.0).is_err());
     }
 }

@@ -171,9 +171,11 @@ pub fn cmd_topo(args: &[String]) -> Result<i32> {
 }
 
 /// `booster sweep` — runexp-style scenario grid over machines, workloads,
-/// scales, precisions, collective settings and hybrid pipeline×data
-/// parallelism (`stages`, `microbatches`, `schedule`). Machine groups
-/// evaluate on parallel threads; emits a combined CSV plus
+/// scales, precisions, collective settings and 3D
+/// (data×pipeline×tensor) parallelism (`stages`, `tensor`,
+/// `microbatches`, `schedule`). Machine groups evaluate on parallel
+/// threads and each machine's grid is sharded across workers sharing one
+/// pre-warmed cost cache; emits a combined CSV plus
 /// `results/BENCH_sweep.json`.
 pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
@@ -186,6 +188,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .str_flag("placement", "compact", "base placement (compact|spread)")
         .float_flag("bucket-mb", 64.0, "base fusion-buffer size, MB")
         .int_flag("stages", 1, "base pipeline stages per replica (1 = data parallel)")
+        .int_flag("tensor", 1, "base tensor-parallel group size per stage (1 = none)")
         .int_flag("microbatches", 1, "base microbatches per step per replica")
         .str_flag("schedule", "gpipe", "base microbatch schedule (gpipe|1f1b)")
         .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
@@ -197,6 +200,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("sweepable keys: {}", sweep::SWEEPABLE_KEYS.join(", "));
         println!("example: booster sweep --param nodes=48,96 --param precision=bf16,tf32");
         println!("example: booster sweep --param stages=1,2,4 --param machine=juwels_booster,leonardo");
+        println!("example: booster sweep --nodes 4 --param tensor=1,2,4 --param stages=1,4");
         return Ok(0);
     }
     if flags.get_bool("list") {
@@ -205,6 +209,9 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("sweepable keys:   {}", sweep::SWEEPABLE_KEYS.join(", "));
         return Ok(0);
     }
+    // Reject unknown/duplicate --param keys before any spec resolution or
+    // simulation — a typo'd axis must not cost a half-priced grid.
+    let axes = sweep::parse_params(flags.get_strs("param"))?;
     let base = ScenarioSpec::builder(presets::machine(flags.get_str("machine"))?)
         .workload(presets::workload(flags.get_str("workload"))?)
         .nodes(flags.get_usize("nodes"))
@@ -214,10 +221,10 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .placement(flags.get_str("placement"))
         .bucket_bytes(flags.get_f64("bucket-mb") * 1e6)
         .pipeline_stages(flags.get_usize("stages"))
+        .tensor_parallel(flags.get_usize("tensor"))
         .microbatches(flags.get_usize("microbatches"))
         .schedule(flags.get_str("schedule"))
         .build()?;
-    let axes = sweep::parse_params(flags.get_strs("param"))?;
     let outcome = sweep::run(&base, &axes)?;
 
     let mut out = format!(
@@ -227,19 +234,21 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         base.name
     );
     let mut t = Table::new(&[
-        "scenario", "gpus", "algo", "comp", "stages", "bubble %", "compute ms", "comm ms",
-        "step ms", "samples/s", "kJ/step",
+        "scenario", "gpus", "algo", "comp", "d·p·t x mb", "bubble %", "compute ms", "comm ms",
+        "tp ms", "step ms", "samples/s", "kJ/step",
     ]);
     for r in &outcome.rows {
+        let replicas = r.gpus / (r.stages * r.tensor).max(1);
         t.row(&[
             r.scenario.clone(),
             r.gpus.to_string(),
             r.algo.clone(),
             r.compression.clone(),
-            format!("{}x{}", r.stages, r.microbatches),
+            format!("{}·{}·{} x{}", replicas, r.stages, r.tensor, r.microbatches),
             format!("{:.1}", r.bubble_pct),
             format!("{:.3}", r.compute_ms),
             format!("{:.3}", r.comm_ms),
+            format!("{:.3}", r.tp_comm_ms),
             format!("{:.3}", r.step_ms),
             format!("{:.0}", r.samples_per_s),
             format!("{:.2}", r.step_energy_kj),
@@ -262,12 +271,174 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         100.0 * outcome.cache_hits as f64
             / (outcome.cache_hits + outcome.cache_misses).max(1) as f64
     ));
+    for g in &outcome.groups {
+        out.push_str(&format!(
+            "  {}: {} point(s) on {} worker(s), {} hits / {} sims\n",
+            g.machine, g.points, g.workers, g.hits, g.misses
+        ));
+    }
     emit("sweep", &out, Some(&outcome.to_csv()))?;
     std::fs::write(
         "results/BENCH_sweep.json",
         outcome.to_json(&axes).to_pretty(),
     )?;
     println!("wrote results/sweep.csv and results/BENCH_sweep.json");
+    Ok(0)
+}
+
+/// `booster crossover` — the §2.3 study the pipeline module advertises:
+/// sweep `stages × tensor × nodes` for a pipelining-mandatory workload
+/// (default `gpt3_175b`) across every machine preset and emit the
+/// throughput-optimal parallelism frontier. Parallelism shapes that a
+/// machine cannot host (divisibility, tensor-per-node) are skipped
+/// silently; shapes that fail the memory fit at pricing time are
+/// reported as infeasible. Writes `results/crossover.{txt,csv}`.
+pub fn cmd_crossover(args: &[String]) -> Result<i32> {
+    let spec = Flags::new()
+        .str_flag("workload", "gpt3_175b", "workload preset to cross over")
+        .str_flag("nodes", "32,64,128", "comma-separated node counts")
+        .str_flag("stages", "32,64,128", "comma-separated pipeline stage counts")
+        .str_flag("tensor", "1,2,4", "comma-separated tensor group sizes")
+        .int_flag("microbatches", 8, "microbatches per step per replica")
+        .str_flag("schedule", "1f1b", "microbatch schedule (gpipe|1f1b)")
+        .bool_flag("help", false, "show help");
+    let spec_flags = spec.clone().parse(args)?;
+    if spec_flags.get_bool("help") {
+        println!("{}", spec.help("crossover"));
+        println!("machines: {}", presets::machine_names().join(", "));
+        return Ok(0);
+    }
+    let parse_list = |name: &str| -> Result<Vec<usize>> {
+        spec_flags
+            .get_str(name)
+            .split(',')
+            .map(|v| {
+                v.trim().parse().map_err(|_| {
+                    BoosterError::Config(format!("--{name}: invalid value '{}'", v.trim()))
+                })
+            })
+            .collect()
+    };
+    let nodes_list = parse_list("nodes")?;
+    let stages_list = parse_list("stages")?;
+    let tensor_list = parse_list("tensor")?;
+    let workload = presets::workload(spec_flags.get_str("workload"))?;
+    // Shape-independent flags are validated up front so a typo'd
+    // --schedule or a zero --microbatches fails loudly here instead of
+    // being silently counted below as "machine-incompatible".
+    crate::pipeline::Schedule::parse(spec_flags.get_str("schedule"))?;
+    if spec_flags.get_usize("microbatches") == 0 {
+        return Err(BoosterError::Config("--microbatches must be > 0".into()));
+    }
+    if nodes_list.contains(&0) || stages_list.contains(&0) || tensor_list.contains(&0) {
+        return Err(BoosterError::Config(
+            "--nodes/--stages/--tensor values must be > 0".into(),
+        ));
+    }
+
+    // Build the grid by hand: a crossover deliberately mixes shapes that
+    // only some machines can host (stages x tensor must divide the job,
+    // tensor must divide the node, nodes must fit the machine), so
+    // per-combination build errors — which after the up-front checks can
+    // only be those shape incompatibilities — are skipped, not fatal.
+    let mut points: Vec<sweep::Point> = Vec::new();
+    let mut skipped_static = 0usize;
+    for machine_name in presets::machine_names() {
+        for &nodes in &nodes_list {
+            for &stages in &stages_list {
+                for &tensor in &tensor_list {
+                    let built = ScenarioSpec::builder(presets::machine(machine_name)?)
+                        .workload(workload.clone())
+                        .nodes(nodes)
+                        .pipeline_stages(stages)
+                        .tensor_parallel(tensor)
+                        .microbatches(spec_flags.get_usize("microbatches"))
+                        .schedule(spec_flags.get_str("schedule"))
+                        .build();
+                    match built {
+                        Ok(s) => {
+                            let asg = vec![
+                                ("machine".to_string(), machine_name.to_string()),
+                                ("nodes".to_string(), nodes.to_string()),
+                                ("stages".to_string(), stages.to_string()),
+                                ("tensor".to_string(), tensor.to_string()),
+                            ];
+                            points.push((s, asg));
+                        }
+                        Err(_) => skipped_static += 1,
+                    }
+                }
+            }
+        }
+    }
+    if points.is_empty() {
+        return Err(BoosterError::Config(
+            "crossover grid has no machine-compatible parallelism shape".into(),
+        ));
+    }
+    let outcome = sweep::run_points(&points, 0)?;
+    let frontier = sweep::throughput_frontier(&outcome.rows);
+
+    let mut out = format!(
+        "data-parallel vs 3D-parallel crossover: {} ({} shapes priced, \
+         {} machine-incompatible skipped, {} memory-infeasible)\n\n",
+        workload.name,
+        outcome.rows.len(),
+        skipped_static,
+        outcome.infeasible.len()
+    );
+    let mut t = Table::new(&[
+        "machine", "nodes", "gpus", "d·p·t", "mb", "bubble %", "tp ms", "step ms", "samples/s",
+    ])
+    .with_title("throughput-optimal parallelism frontier (best shape per machine x scale)");
+    let mut csv = String::from(
+        "machine,nodes,gpus,replicas,stages,tensor,microbatches,schedule,bubble_pct,\
+         tp_comm_ms,step_ms,samples_per_s\n",
+    );
+    for &i in &frontier {
+        let r = &outcome.rows[i];
+        let replicas = r.gpus / (r.stages * r.tensor).max(1);
+        t.row(&[
+            r.machine.clone(),
+            r.nodes.to_string(),
+            r.gpus.to_string(),
+            format!("{}·{}·{}", replicas, r.stages, r.tensor),
+            r.microbatches.to_string(),
+            format!("{:.1}", r.bubble_pct),
+            format!("{:.3}", r.tp_comm_ms),
+            format!("{:.3}", r.step_ms),
+            format!("{:.0}", r.samples_per_s),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.1}\n",
+            r.machine,
+            r.nodes,
+            r.gpus,
+            replicas,
+            r.stages,
+            r.tensor,
+            r.microbatches,
+            r.schedule,
+            r.bubble_pct,
+            r.tp_comm_ms,
+            r.step_ms,
+            r.samples_per_s,
+        ));
+    }
+    out.push_str(&t.render());
+    if !outcome.infeasible.is_empty() {
+        out.push_str(&format!(
+            "\n{} shape(s) were memory-infeasible at pricing time (first: {})\n",
+            outcome.infeasible.len(),
+            outcome.infeasible[0].0
+        ));
+    }
+    out.push_str(&format!(
+        "\nshared collective cost cache: {} hits / {} simulations\n",
+        outcome.cache_hits, outcome.cache_misses
+    ));
+    emit("crossover", &out, Some(&csv))?;
+    println!("wrote results/crossover.txt and results/crossover.csv");
     Ok(0)
 }
 

@@ -77,10 +77,11 @@ impl ExperimentContext {
         TimelineModel::from_scenario(&self.spec, &self.topo)
     }
 
-    /// A hybrid pipeline×data timeline configured from the scenario
-    /// (`parallelism.pipeline_stages` / `microbatches` / `schedule` on top
-    /// of the timeline settings). At one stage and one microbatch it
-    /// degenerates exactly to [`ExperimentContext::timeline`]'s step cost.
+    /// A hybrid data×pipeline×tensor timeline configured from the
+    /// scenario (`parallelism.pipeline_stages` / `tensor_parallel` /
+    /// `microbatches` / `schedule` on top of the timeline settings). At
+    /// one stage, one tensor shard and one microbatch it degenerates
+    /// exactly to [`ExperimentContext::timeline`]'s step cost.
     pub fn hybrid_timeline(&self) -> Result<HybridTimeline<'_>> {
         HybridTimeline::from_scenario(&self.spec, &self.topo)
     }

@@ -13,10 +13,11 @@
 //!   power model, lazy engine, cached collective/timeline models) every
 //!   `cmd_*` driver and bench consumes;
 //! * [`sweep`] — runexp-style `--param a=1,2` grid expansion and the
-//!   shared-cache, machine-parallel evaluation behind `booster sweep`
-//!   (every point priced by the hybrid pipeline×data
+//!   shared-cache, machine-parallel *and* intra-machine-sharded
+//!   evaluation behind `booster sweep` and `booster crossover` (every
+//!   point priced by the 3D data×pipeline×tensor
 //!   [`crate::train::hybrid::HybridTimeline`], which degenerates exactly
-//!   to the data-parallel timeline at `stages=1`).
+//!   to the data-parallel timeline at `stages=1, tensor=1`).
 //!
 //! See `rust/src/scenario/README.md` for the spec schema, the preset
 //! numbers with paper citations, and how the context threads the §Perf

@@ -149,7 +149,10 @@ pub fn workload_names() -> Vec<&'static str> {
 /// convLSTM forecaster and the §2.3 motivating GPT-3-scale model.
 /// Activation bytes are the per-sample tensor crossing a pipeline-stage
 /// boundary (feature map / seq x hidden at the cut, 2 B elements); state
-/// is Adam mixed precision, 16 B/param, throughout.
+/// is Adam mixed precision, 16 B/param, throughout. `layers` and the
+/// per-layer tensor-allreduce volume feed the Megatron-style tensor
+/// dimension: each stage charges 2·(layers/stages) tensor-group
+/// allreduces of that volume per microbatch.
 pub fn workload(name: &str) -> Result<WorkloadSpec> {
     let w = match name {
         "resnet50" => WorkloadSpec {
@@ -160,6 +163,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             efficiency: 0.10,
             activation_bytes_per_sample: 1.6e6, // 28x28x1024 fmap, 2 B
             state_bytes_per_param: 16.0,
+            layers: 53, // conv + fc layers of ResNet-50
+            layer_allreduce_bytes_per_sample: 1.6e6,
         },
         "transformer" => WorkloadSpec {
             name: "transformer".into(),
@@ -169,6 +174,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             efficiency: 0.25,
             activation_bytes_per_sample: 33.0e3 * 2.0, // ~33-token seq x 1024
             state_bytes_per_param: 16.0,
+            layers: 6, // big-transformer encoder/decoder blocks
+            layer_allreduce_bytes_per_sample: 33.0e3 * 2.0,
         },
         "bert" => WorkloadSpec {
             name: "bert".into(),
@@ -178,6 +185,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             efficiency: 0.12,
             activation_bytes_per_sample: 512.0 * 1024.0 * 2.0, // seq x hidden
             state_bytes_per_param: 16.0,
+            layers: 24, // BERT-large transformer blocks
+            layer_allreduce_bytes_per_sample: 512.0 * 1024.0 * 2.0,
         },
         "convlstm" => WorkloadSpec {
             name: "convlstm".into(),
@@ -187,6 +196,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             efficiency: 0.08,
             activation_bytes_per_sample: 2.0e6, // stacked hidden fields
             state_bytes_per_param: 16.0,
+            layers: 4, // stacked convLSTM cells
+            layer_allreduce_bytes_per_sample: 2.0e6,
         },
         // The paper's §2.3 motivation for pipelining: a GPT-3-175B-class
         // model (2.8 TB Adam state) that *cannot* run purely data-parallel
@@ -200,6 +211,8 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             efficiency: 0.45,
             activation_bytes_per_sample: 2048.0 * 12288.0 * 2.0, // seq x hidden, bf16
             state_bytes_per_param: 16.0,
+            layers: 96, // GPT-3 175B transformer blocks
+            layer_allreduce_bytes_per_sample: 2048.0 * 12288.0 * 2.0,
         },
         _ => {
             return Err(BoosterError::Config(format!(
@@ -270,6 +283,8 @@ mod tests {
             assert!(w.flops_per_gpu_step() > 0.0);
             assert!(w.activation_bytes_per_sample > 0.0, "{name}");
             assert!(w.state_bytes_per_param >= 4.0, "{name}");
+            assert!(w.layers >= 1, "{name}");
+            assert!(w.layer_allreduce_bytes_per_sample > 0.0, "{name}");
         }
         assert!(workload("dlrm").is_err());
     }

@@ -330,6 +330,13 @@ pub struct WorkloadSpec {
     /// Bytes of training state per parameter (weights + grads + optimizer
     /// moments; Adam mixed precision ≈ 16 B/param).
     pub state_bytes_per_param: f64,
+    /// Layers in the model — the unit Megatron-style tensor parallelism
+    /// allreduces over (a pipeline stage holds `layers / stages`).
+    pub layers: usize,
+    /// Bytes one tensor-group allreduce moves per layer per sample (the
+    /// row-parallel output tensor; seq × hidden × 2 B for transformers).
+    /// Each stage charges 2·(layers/stages) of these per microbatch.
+    pub layer_allreduce_bytes_per_sample: f64,
 }
 
 impl WorkloadSpec {
@@ -351,6 +358,8 @@ impl WorkloadSpec {
             fwd_flops_per_sample: self.fwd_flops_per_sample,
             activation_bytes_per_sample: self.activation_bytes_per_sample,
             state_bytes_per_param: self.state_bytes_per_param,
+            layers: self.layers,
+            layer_allreduce_bytes_per_sample: self.layer_allreduce_bytes_per_sample,
         }
     }
 
@@ -367,20 +376,34 @@ impl WorkloadSpec {
                 Json::Num(self.activation_bytes_per_sample),
             ),
             ("state_bytes_per_param", Json::Num(self.state_bytes_per_param)),
+            ("layers", Json::Num(self.layers as f64)),
+            (
+                "layer_allreduce_bytes_per_sample",
+                Json::Num(self.layer_allreduce_bytes_per_sample),
+            ),
         ])
     }
 
     /// Deserialize. The pipeline fields default (1 MB activations,
-    /// 16 B/param state) when absent so pre-hybrid spec files still load.
+    /// 16 B/param state) when absent so pre-hybrid spec files still load;
+    /// the tensor fields default to 24 layers with the stage-boundary
+    /// activation volume per layer allreduce, so pre-3D files load too.
     pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        let activation = opt_f64(j, "activation_bytes_per_sample", 1e6)?;
         Ok(WorkloadSpec {
             name: req_str(j, "name")?,
             fwd_flops_per_sample: req_f64(j, "fwd_flops_per_sample")?,
             params: req_f64(j, "params")?,
             batch_per_gpu: req_usize(j, "batch_per_gpu")?,
             efficiency: req_f64(j, "efficiency")?,
-            activation_bytes_per_sample: opt_f64(j, "activation_bytes_per_sample", 1e6)?,
+            activation_bytes_per_sample: activation,
             state_bytes_per_param: opt_f64(j, "state_bytes_per_param", 16.0)?,
+            layers: opt_usize(j, "layers", 24)?,
+            layer_allreduce_bytes_per_sample: opt_f64(
+                j,
+                "layer_allreduce_bytes_per_sample",
+                activation,
+            )?,
         })
     }
 }
@@ -402,9 +425,15 @@ pub struct ParallelismSpec {
     pub bucket_bytes: f64,
     /// Fraction of the allreduce overlapped with backprop.
     pub overlap: f64,
-    /// Pipeline stages per data-parallel replica; 1 = pure data parallel.
-    /// Must divide the job's GPU count (`nodes x gpus_per_node`).
+    /// Pipeline stages per data-parallel replica; 1 = no pipelining.
+    /// `pipeline_stages x tensor_parallel` must divide the job's GPU
+    /// count (`nodes x gpus_per_node`).
     pub pipeline_stages: usize,
+    /// Megatron-style tensor-parallel group size per stage; 1 = no
+    /// tensor parallelism. Must divide the machine's `gpus_per_node`, so
+    /// compact placement keeps every tensor group inside one node's
+    /// NVLink domain (the Megatron deployment rule).
+    pub tensor_parallel: usize,
     /// Microbatches per step per replica (pipeline fill depth).
     pub microbatches: usize,
     /// Microbatch schedule key (see [`crate::pipeline::Schedule::parse`]):
@@ -415,7 +444,7 @@ pub struct ParallelismSpec {
 impl ParallelismSpec {
     /// Data-parallel replica count for a job of `job_gpus` GPUs.
     pub fn replicas(&self, job_gpus: usize) -> usize {
-        job_gpus / self.pipeline_stages.max(1)
+        job_gpus / (self.pipeline_stages * self.tensor_parallel).max(1)
     }
 
     /// Serialize.
@@ -428,14 +457,15 @@ impl ParallelismSpec {
             ("bucket_bytes", Json::Num(self.bucket_bytes)),
             ("overlap", Json::Num(self.overlap)),
             ("pipeline_stages", Json::Num(self.pipeline_stages as f64)),
+            ("tensor_parallel", Json::Num(self.tensor_parallel as f64)),
             ("microbatches", Json::Num(self.microbatches as f64)),
             ("schedule", Json::Str(self.schedule.clone())),
         ])
     }
 
     /// Deserialize. The hybrid fields default to pure data parallelism
-    /// (`stages=1`, `microbatches=1`, gpipe) when absent so pre-hybrid
-    /// spec files still load.
+    /// (`stages=1`, `tensor_parallel=1`, `microbatches=1`, gpipe) when
+    /// absent so pre-hybrid and pre-3D spec files still load.
     pub fn from_json(j: &Json) -> Result<ParallelismSpec> {
         Ok(ParallelismSpec {
             nodes: req_usize(j, "nodes")?,
@@ -445,6 +475,7 @@ impl ParallelismSpec {
             bucket_bytes: req_f64(j, "bucket_bytes")?,
             overlap: req_f64(j, "overlap")?,
             pipeline_stages: opt_usize(j, "pipeline_stages", 1)?,
+            tensor_parallel: opt_usize(j, "tensor_parallel", 1)?,
             microbatches: opt_usize(j, "microbatches", 1)?,
             schedule: opt_str(j, "schedule", "gpipe")?,
         })
@@ -503,6 +534,7 @@ impl ScenarioSpec {
             bucket_bytes: 64e6,
             overlap: 0.7,
             pipeline_stages: 1,
+            tensor_parallel: 1,
             microbatches: 1,
             schedule: "gpipe".into(),
             precision: "fp16_tc".into(),
@@ -532,6 +564,14 @@ impl ScenarioSpec {
         if w.state_bytes_per_param < 0.0 || !w.state_bytes_per_param.is_finite() {
             return fail("state_bytes_per_param must be non-negative".into());
         }
+        if w.layers == 0 {
+            return fail("workload layers must be > 0".into());
+        }
+        if w.layer_allreduce_bytes_per_sample < 0.0
+            || !w.layer_allreduce_bytes_per_sample.is_finite()
+        {
+            return fail("layer_allreduce_bytes_per_sample must be non-negative".into());
+        }
         let p = &self.parallelism;
         if p.nodes == 0 {
             return fail("parallelism.nodes must be > 0".into());
@@ -554,8 +594,18 @@ impl ScenarioSpec {
         if p.pipeline_stages == 0 {
             return fail("pipeline_stages must be > 0".into());
         }
+        if p.tensor_parallel == 0 {
+            return fail("tensor_parallel must be > 0".into());
+        }
         if p.microbatches == 0 {
             return fail("microbatches must be > 0".into());
+        }
+        if self.machine.gpus_per_node % p.tensor_parallel != 0 {
+            return fail(format!(
+                "tensor_parallel {} must divide gpus_per_node {} — Megatron-style \
+                 tensor groups live inside one node's NVLink domain",
+                p.tensor_parallel, self.machine.gpus_per_node
+            ));
         }
         let job_gpus = p.nodes * self.machine.gpus_per_node;
         if job_gpus % p.pipeline_stages != 0 {
@@ -563,6 +613,17 @@ impl ScenarioSpec {
                 "pipeline_stages {} does not divide the job's {} GPUs \
                  ({} nodes x {} GPUs/node)",
                 p.pipeline_stages, job_gpus, p.nodes, self.machine.gpus_per_node
+            ));
+        }
+        if job_gpus % (p.pipeline_stages * p.tensor_parallel) != 0 {
+            return fail(format!(
+                "pipeline_stages {} x tensor_parallel {} does not divide the job's \
+                 {} GPUs ({} nodes x {} GPUs/node)",
+                p.pipeline_stages,
+                p.tensor_parallel,
+                job_gpus,
+                p.nodes,
+                self.machine.gpus_per_node
             ));
         }
         crate::pipeline::Schedule::parse(&p.schedule)?;
@@ -609,20 +670,23 @@ impl ScenarioSpec {
 
     /// Canonical auto-generated scenario name:
     /// `machine/workload/nN/precision`, with a `/pSxM-schedule` suffix
-    /// when the scenario actually pipelines. Used by the builder default
-    /// and by the sweep driver when it renames grid points.
+    /// when the scenario actually pipelines and a further `-tT` suffix
+    /// when it tensor-parallelizes. Used by the builder default and by
+    /// the sweep driver when it renames grid points.
     pub fn auto_name(&self) -> String {
         let mut name = format!(
             "{}/{}/n{}/{}",
             self.machine.name, self.workload.name, self.parallelism.nodes, self.precision
         );
-        if self.parallelism.pipeline_stages > 1 || self.parallelism.microbatches > 1 {
+        let p = &self.parallelism;
+        if p.pipeline_stages > 1 || p.microbatches > 1 || p.tensor_parallel > 1 {
             name.push_str(&format!(
                 "/p{}x{}-{}",
-                self.parallelism.pipeline_stages,
-                self.parallelism.microbatches,
-                self.parallelism.schedule
+                p.pipeline_stages, p.microbatches, p.schedule
             ));
+            if p.tensor_parallel > 1 {
+                name.push_str(&format!("-t{}", p.tensor_parallel));
+            }
         }
         name
     }
@@ -665,6 +729,7 @@ pub struct ScenarioBuilder {
     bucket_bytes: f64,
     overlap: f64,
     pipeline_stages: usize,
+    tensor_parallel: usize,
     microbatches: usize,
     schedule: String,
     precision: String,
@@ -725,6 +790,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Megatron-style tensor-parallel group size per stage (1 = none).
+    pub fn tensor_parallel(mut self, t: usize) -> Self {
+        self.tensor_parallel = t;
+        self
+    }
+
     /// Microbatches per step per replica.
     pub fn microbatches(mut self, m: usize) -> Self {
         self.microbatches = m;
@@ -760,6 +831,7 @@ impl ScenarioBuilder {
                 bucket_bytes: self.bucket_bytes,
                 overlap: self.overlap,
                 pipeline_stages: self.pipeline_stages,
+                tensor_parallel: self.tensor_parallel,
                 microbatches: self.microbatches,
                 schedule: self.schedule,
             },
@@ -866,12 +938,13 @@ mod tests {
 
     #[test]
     fn pre_hybrid_json_defaults_to_data_parallel() {
-        // A parallelism/workload object written before the hybrid fields
-        // existed must still load, as pure data parallelism.
+        // A parallelism/workload object written before the hybrid (or 3D)
+        // fields existed must still load, as pure data parallelism.
         let legacy_p = r#"{"nodes":4,"placement":"compact","algo":"ring",
             "compression":"none","bucket_bytes":64000000,"overlap":0.7}"#;
         let p = ParallelismSpec::from_json(&Json::parse(legacy_p).unwrap()).unwrap();
         assert_eq!(p.pipeline_stages, 1);
+        assert_eq!(p.tensor_parallel, 1);
         assert_eq!(p.microbatches, 1);
         assert_eq!(p.schedule, "gpipe");
         let legacy_w = r#"{"name":"bert","fwd_flops_per_sample":343e9,"params":335e6,
@@ -879,6 +952,52 @@ mod tests {
         let w = WorkloadSpec::from_json(&Json::parse(legacy_w).unwrap()).unwrap();
         assert_eq!(w.state_bytes_per_param, 16.0);
         assert!(w.activation_bytes_per_sample > 0.0);
+        assert_eq!(w.layers, 24, "pre-3D workloads default to 24 layers");
+        assert_eq!(
+            w.layer_allreduce_bytes_per_sample, w.activation_bytes_per_sample,
+            "per-layer allreduce volume defaults to the boundary activation"
+        );
+    }
+
+    #[test]
+    fn tensor_fields_roundtrip_and_validate() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .workload(presets::workload("gpt3_175b").unwrap())
+            .nodes(32)
+            .pipeline_stages(16)
+            .tensor_parallel(4)
+            .microbatches(8)
+            .schedule("1f1b")
+            .build()
+            .unwrap();
+        assert!(spec.name.ends_with("/p16x8-1f1b-t4"), "{}", spec.name);
+        assert_eq!(spec.parallelism.replicas(32 * 4), 2, "128 / (16 x 4)");
+        let j = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+
+        let m = presets::machine("juwels_booster").unwrap(); // 4 GPUs/node
+        assert!(
+            ScenarioSpec::builder(m.clone()).tensor_parallel(3).build().is_err(),
+            "tensor groups must divide gpus_per_node (Megatron intra-node rule)"
+        );
+        assert!(
+            ScenarioSpec::builder(m.clone()).tensor_parallel(8).build().is_err(),
+            "tensor group larger than the node must be rejected"
+        );
+        assert!(ScenarioSpec::builder(m.clone()).tensor_parallel(0).build().is_err());
+        assert!(
+            ScenarioSpec::builder(m.clone())
+                .nodes(2)
+                .pipeline_stages(4)
+                .tensor_parallel(4)
+                .build()
+                .is_err(),
+            "stages x tensor = 16 does not divide 8 GPUs"
+        );
+        // tensor=1 keeps pre-3D names so existing CSV rows stay stable.
+        let flat = ScenarioSpec::builder(m).nodes(2).pipeline_stages(4).build().unwrap();
+        assert!(flat.name.ends_with("/p4x1-gpipe"), "{}", flat.name);
     }
 
     #[test]

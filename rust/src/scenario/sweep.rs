@@ -4,22 +4,40 @@
 //! the grid, the **first axis is the outermost loop** (changes least
 //! frequently), and expansion order is fully deterministic so CSV rows are
 //! stable across runs. Points sharing a machine are priced through one
-//! [`HybridTimeline`] (and therefore one pattern-level
-//! [`crate::collectives::CostCache`]): a sweep that revisits a placement
-//! at new byte sizes pays interpolation, not flow simulation (§Perf).
+//! shared [`crate::collectives::CollectiveModel`] (and therefore one
+//! pattern-level [`crate::collectives::CostCache`]): a sweep that
+//! revisits a placement at new byte sizes pays interpolation, not flow
+//! simulation (§Perf).
 //!
-//! Every point is priced by the hybrid pipeline×data model; at
-//! `stages=1, microbatches=1` (the defaults) that degenerates *exactly*
-//! to the pure data-parallel [`crate::train::timeline::TimelineModel`],
-//! so pre-hybrid sweeps produce identical numbers.
+//! Every point is priced by the hybrid data×pipeline×tensor model; at
+//! `stages=1, tensor=1, microbatches=1` (the defaults) that degenerates
+//! *exactly* to the pure data-parallel
+//! [`crate::train::timeline::TimelineModel`], so pre-hybrid sweeps
+//! produce identical numbers.
 //!
-//! **Parallel execution:** machine groups are independent (each owns its
-//! topology and collective model), so [`run`] evaluates them on scoped
-//! threads — one worker per machine in the grid — and then merges rows
-//! back into expansion order and sums the per-worker cache stats.
-//! [`run_sequential`] is the same evaluation on the caller's thread; a
-//! differential test pins byte-identical CSV between the two paths.
+//! # Parallel execution (§Sync)
+//!
+//! Two levels, both on `std::thread::scope` threads:
+//!
+//! * **across machines** — machine groups are independent (each owns its
+//!   topology and collective model), so [`run`] evaluates them
+//!   concurrently;
+//! * **within a machine** — one group's points are sharded across
+//!   workers that share the group's single `CollectiveModel`.
+//!
+//! Determinism is by construction, not by luck: before sharding, the
+//! group replays every point's collective queries **sequentially** in
+//! expansion order ([`crate::train::hybrid::HybridTimeline::warm_comm`]),
+//! which simulates and learns exactly what a sequential run would; the
+//! cache is then **frozen** so the evaluation phase reads a constant
+//! cache no matter how workers interleave. Rows merge back in expansion
+//! order, hit/miss counters sum deterministically, and the CSV is
+//! **byte-identical** to [`run_sequential`] — a differential test pins
+//! this for both the cross-machine and the intra-machine level.
 
+use std::sync::Arc;
+
+use crate::collectives::CollectiveModel;
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
 use crate::train::hybrid::HybridTimeline;
@@ -37,7 +55,7 @@ pub struct ParamAxis {
 }
 
 /// Scenario fields a sweep may vary.
-pub const SWEEPABLE_KEYS: [&str; 12] = [
+pub const SWEEPABLE_KEYS: [&str; 13] = [
     "machine",
     "workload",
     "nodes",
@@ -48,6 +66,7 @@ pub const SWEEPABLE_KEYS: [&str; 12] = [
     "bucket_mb",
     "batch",
     "stages",
+    "tensor",
     "microbatches",
     "schedule",
 ];
@@ -56,6 +75,11 @@ pub const SWEEPABLE_KEYS: [&str; 12] = [
 /// hands us `["nodes=48", "96", "precision=bf16", "tf32"]` for
 /// `--param nodes=48,96 --param precision=bf16,tf32`: an entry containing
 /// `=` opens a new axis, bare entries extend the previous one.
+///
+/// Unknown keys are rejected **here, up front** — before any spec is
+/// built or simulation run — with the full valid key set in the error,
+/// so a typo like `--param stagez=4` can never flow into a half-priced
+/// grid.
 pub fn parse_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
     let mut axes: Vec<ParamAxis> = Vec::new();
     for e in entries {
@@ -130,6 +154,7 @@ pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()
         }
         "batch" => spec.workload.batch_per_gpu = value.parse().map_err(|_| bad_num())?,
         "stages" => spec.parallelism.pipeline_stages = value.parse().map_err(|_| bad_num())?,
+        "tensor" => spec.parallelism.tensor_parallel = value.parse().map_err(|_| bad_num())?,
         "microbatches" => spec.parallelism.microbatches = value.parse().map_err(|_| bad_num())?,
         "schedule" => spec.parallelism.schedule = value.to_string(),
         _ => {
@@ -165,8 +190,10 @@ pub struct SweepRow {
     pub placement: String,
     /// Fusion-buffer size, MB.
     pub bucket_mb: f64,
-    /// Pipeline stages per data-parallel replica (1 = pure data parallel).
+    /// Pipeline stages per data-parallel replica (1 = no pipelining).
     pub stages: usize,
+    /// Tensor-parallel group size per stage (1 = no tensor parallelism).
+    pub tensor: usize,
     /// Microbatches per step per replica.
     pub microbatches: usize,
     /// Microbatch schedule key.
@@ -175,8 +202,11 @@ pub struct SweepRow {
     pub bubble_pct: f64,
     /// Slowest-rank compute time per step, ms.
     pub compute_ms: f64,
-    /// Full allreduce time per step, ms.
+    /// Full gradient allreduce time per step, ms.
     pub comm_ms: f64,
+    /// Tensor-group (intra-layer) allreduce time on the step's critical
+    /// path, ms (0 at tensor=1; already included in compute_ms).
+    pub tp_comm_ms: f64,
     /// Wall-clock step time after overlap, ms.
     pub step_ms: f64,
     /// Weak-scaling throughput, samples/s.
@@ -185,6 +215,21 @@ pub struct SweepRow {
     pub step_energy_kj: f64,
     /// The grid assignment that produced this row.
     pub assignment: Vec<(String, String)>,
+}
+
+/// Per-machine-group execution stats for `results/BENCH_sweep.json`.
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    /// Machine preset the group evaluated.
+    pub machine: String,
+    /// Grid points in the group.
+    pub points: usize,
+    /// Intra-machine workers the evaluation was sharded across.
+    pub workers: usize,
+    /// Collective cost-cache hits of this group's shared model.
+    pub hits: u64,
+    /// Flow simulations this group's shared model ran.
+    pub misses: u64,
 }
 
 /// A completed sweep: rows in expansion order plus shared-cache stats.
@@ -199,6 +244,8 @@ pub struct SweepOutcome {
     /// `(scenario, reason)` for grid points that were infeasible at
     /// evaluation time, in expansion order per machine group.
     pub infeasible: Vec<(String, String)>,
+    /// Per-machine-group worker counts and cache stats.
+    pub groups: Vec<GroupStats>,
     /// Collective cost-cache hits across all machines in the sweep.
     pub cache_hits: u64,
     /// Flow simulations actually run.
@@ -210,12 +257,12 @@ impl SweepOutcome {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "scenario,machine,workload,nodes,gpus,precision,algo,compression,placement,\
-             bucket_mb,stages,microbatches,schedule,bubble_pct,\
-             compute_ms,comm_ms,step_ms,samples_per_s,step_energy_kj\n",
+             bucket_mb,stages,tensor,microbatches,schedule,bubble_pct,\
+             compute_ms,comm_ms,tp_comm_ms,step_ms,samples_per_s,step_energy_kj\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
                 r.scenario,
                 r.machine,
                 r.workload,
@@ -227,11 +274,13 @@ impl SweepOutcome {
                 r.placement,
                 r.bucket_mb,
                 r.stages,
+                r.tensor,
                 r.microbatches,
                 r.schedule,
                 r.bubble_pct,
                 r.compute_ms,
                 r.comm_ms,
+                r.tp_comm_ms,
                 r.step_ms,
                 r.samples_per_s,
                 r.step_energy_kj,
@@ -268,11 +317,13 @@ impl SweepOutcome {
                         ("placement", Json::Str(r.placement.clone())),
                         ("bucket_mb", Json::Num(r.bucket_mb)),
                         ("stages", Json::Num(r.stages as f64)),
+                        ("tensor", Json::Num(r.tensor as f64)),
                         ("microbatches", Json::Num(r.microbatches as f64)),
                         ("schedule", Json::Str(r.schedule.clone())),
                         ("bubble_pct", Json::Num(r.bubble_pct)),
                         ("compute_ms", Json::Num(r.compute_ms)),
                         ("comm_ms", Json::Num(r.comm_ms)),
+                        ("tp_comm_ms", Json::Num(r.tp_comm_ms)),
                         ("step_ms", Json::Num(r.step_ms)),
                         ("samples_per_s", Json::Num(r.samples_per_s)),
                         ("step_energy_kj", Json::Num(r.step_energy_kj)),
@@ -291,12 +342,27 @@ impl SweepOutcome {
                 })
                 .collect(),
         );
+        let groups = Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| {
+                    Json::obj(vec![
+                        ("machine", Json::Str(g.machine.clone())),
+                        ("points", Json::Num(g.points as f64)),
+                        ("workers", Json::Num(g.workers as f64)),
+                        ("hits", Json::Num(g.hits as f64)),
+                        ("misses", Json::Num(g.misses as f64)),
+                    ])
+                })
+                .collect(),
+        );
         let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
             ("bench", Json::Str("sweep".into())),
             ("params", params),
             ("rows", rows),
             ("infeasible", infeasible),
+            ("groups", groups),
             (
                 "cost_cache",
                 Json::obj(vec![
@@ -310,8 +376,10 @@ impl SweepOutcome {
 }
 
 /// A grid point: the fully-applied scenario plus the assignment that
-/// produced it.
-type Point = (ScenarioSpec, Vec<(String, String)>);
+/// produced it. [`run_points`] accepts prebuilt slices of these, which is
+/// how the crossover driver sweeps shapes the static grid validation
+/// would reject wholesale.
+pub type Point = (ScenarioSpec, Vec<(String, String)>);
 
 /// One machine group's outcome.
 struct GroupOutcome {
@@ -322,32 +390,52 @@ struct GroupOutcome {
     infeasible: Vec<(String, String)>,
     /// Collective cost-cache (hits, misses) of this group's model.
     cache: (u64, u64),
+    /// Workers the evaluation phase was sharded across.
+    workers: usize,
 }
 
 type GroupResult = Result<GroupOutcome>;
 
-/// Evaluate one machine group's points through a single shared
-/// [`HybridTimeline`] (one topology, one collective cost cache). Returns
-/// the rows in `idxs` order plus the group's cache stats. This is the
-/// unit of work both the sequential and the threaded sweep paths share —
-/// it touches nothing outside its own machine, which is what makes the
-/// per-group threading race-free.
-///
-/// A point whose pricing fails with a `Config` error (the pipeline
-/// memory-fit check — only decidable at evaluation time) is recorded as
-/// infeasible and the group continues; any other error aborts the sweep.
-fn eval_group(points: &[Point], idxs: &[usize]) -> GroupResult {
-    let machine = &points[idxs[0]].0.machine;
-    let topo = machine.build_topology()?;
-    let power = machine.power_model()?;
-    // One hybrid timeline (and cost cache) for every point on this machine.
-    let mut hy = HybridTimeline::from_scenario(&points[idxs[0]].0, &topo)?;
+/// A worker's slice of one group's evaluation.
+struct ChunkOutcome {
+    rows: Vec<Option<SweepRow>>,
+    infeasible: Vec<(String, String)>,
+}
+
+/// Split `0..n` into at most `workers` contiguous, near-equal ranges.
+fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let w = workers.clamp(1, n.max(1));
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Evaluate the points in `idxs` (a contiguous slice of one group's point
+/// indices) through one per-worker [`HybridTimeline`] wrapped around the
+/// group's shared collective model. The cache is already warm and frozen,
+/// so every collective query is a deterministic read — this is what makes
+/// sharding the loop across workers value- and stats-preserving.
+fn eval_points<'t>(
+    points: &[Point],
+    idxs: &[usize],
+    topo: &'t crate::topology::Topology,
+    power: &crate::hw::power::PowerModel,
+    shared: &Arc<CollectiveModel<'t>>,
+) -> Result<ChunkOutcome> {
+    let mut hy = HybridTimeline::with_collectives(&points[idxs[0]].0, topo, Arc::clone(shared))?;
     let mut rows = Vec::with_capacity(idxs.len());
     let mut infeasible = Vec::new();
     for &i in idxs {
         let (spec, asg) = &points[i];
         hy.configure_from(spec)?;
-        let gpus = spec.job_gpus(&topo)?;
+        let gpus = spec.job_gpus(topo)?;
         let mut rng = Rng::seed_from(7);
         let st = match hy.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng) {
             Ok(st) => st,
@@ -371,31 +459,97 @@ fn eval_group(points: &[Point], idxs: &[usize]) -> GroupResult {
             placement: spec.parallelism.placement.clone(),
             bucket_mb: spec.parallelism.bucket_bytes / 1e6,
             stages: spec.parallelism.pipeline_stages,
+            tensor: spec.parallelism.tensor_parallel,
             microbatches: spec.parallelism.microbatches,
             schedule: spec.parallelism.schedule.clone(),
             bubble_pct: st.bubble_fraction * 100.0,
             compute_ms: st.compute * 1e3,
             comm_ms: st.comm * 1e3,
+            tp_comm_ms: st.tp_comm * 1e3,
             step_ms: st.total * 1e3,
             samples_per_s: samples / st.total,
             step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
             assignment: asg.clone(),
         }));
     }
+    Ok(ChunkOutcome { rows, infeasible })
+}
+
+/// Evaluate one machine group's points through a single shared
+/// [`CollectiveModel`] (one topology, one cost cache). Two phases:
+///
+/// 1. **Warm (sequential).** Replay each point's collective queries in
+///    group order via [`HybridTimeline::warm_comm`]: the cache learns
+///    exactly the sizes a sequential run would learn, in the same order.
+/// 2. **Evaluate (sharded).** Freeze the cache and price the points on
+///    `workers` scoped threads, each with its own `HybridTimeline` around
+///    the shared model. Frozen reads are deterministic, pipeline pricing
+///    and straggler sampling are per-point, so rows are identical to a
+///    one-worker run.
+///
+/// A point whose pricing fails with a `Config` error (the pipeline
+/// memory-fit check — only decidable at evaluation time) is recorded as
+/// infeasible and the group continues; any other error aborts the sweep.
+fn eval_group(points: &[Point], idxs: &[usize], workers: usize) -> GroupResult {
+    let machine = &points[idxs[0]].0.machine;
+    let topo = machine.build_topology()?;
+    let power = machine.power_model()?;
+    let shared = Arc::new(CollectiveModel::new(&topo));
+
+    // Phase 1: deterministic sequential warm-up of the shared cache.
+    {
+        let mut hy =
+            HybridTimeline::with_collectives(&points[idxs[0]].0, &topo, Arc::clone(&shared))?;
+        for &i in idxs {
+            let (spec, _) = &points[i];
+            hy.configure_from(spec)?;
+            let gpus = spec.job_gpus(&topo)?;
+            hy.warm_comm(&gpus, spec.workload.batch_per_gpu)?;
+        }
+    }
+    shared.freeze_cache(true);
+
+    // Phase 2: shard the evaluation.
+    let chunks = chunk_ranges(idxs.len(), workers);
+    let outcomes: Vec<Result<ChunkOutcome>> = if chunks.len() <= 1 {
+        vec![eval_points(points, idxs, &topo, &power, &shared)]
+    } else {
+        std::thread::scope(|s| {
+            let topo = &topo;
+            let power = &power;
+            let shared = &shared;
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|r| {
+                    let slice = &idxs[r.clone()];
+                    s.spawn(move || eval_points(points, slice, topo, power, shared))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| join_worker(&machine.name, h))
+                .collect()
+        })
+    };
+
+    let mut rows = Vec::with_capacity(idxs.len());
+    let mut infeasible = Vec::new();
+    for o in outcomes {
+        let o = o?;
+        rows.extend(o.rows);
+        infeasible.extend(o.infeasible);
+    }
     Ok(GroupOutcome {
         rows,
         infeasible,
-        cache: hy.timeline.collectives.cache_stats(),
+        cache: shared.cache_stats(),
+        workers: chunks.len(),
     })
 }
 
-/// Materialize, validate and machine-group the grid. A bad grid value
-/// fails the whole sweep here, before any simulation runs.
-#[allow(clippy::type_complexity)]
-fn prepare(
-    base: &ScenarioSpec,
-    axes: &[ParamAxis],
-) -> Result<(Vec<Point>, Vec<(String, Vec<usize>)>)> {
+/// Materialize and validate the grid. A bad grid value fails the whole
+/// sweep here, before any simulation runs.
+fn prepare(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<Vec<Point>> {
     let assignments = expand(axes);
     let mut points: Vec<Point> = Vec::with_capacity(assignments.len());
     for asg in assignments {
@@ -407,7 +561,11 @@ fn prepare(
         spec.validate()?;
         points.push((spec, asg));
     }
-    // Group point indices by machine, preserving first-appearance order.
+    Ok(points)
+}
+
+/// Group point indices by machine, preserving first-appearance order.
+fn group_by_machine(points: &[Point]) -> Vec<(String, Vec<usize>)> {
     let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
     for (i, (spec, _)) in points.iter().enumerate() {
         match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
@@ -415,7 +573,7 @@ fn prepare(
             None => groups.push((spec.machine.name.clone(), vec![i])),
         }
     }
-    Ok((points, groups))
+    groups
 }
 
 /// Merge per-group results back into expansion order and sum cache stats.
@@ -426,9 +584,10 @@ fn merge(
 ) -> Result<SweepOutcome> {
     let mut rows: Vec<Option<SweepRow>> = (0..n_points).map(|_| None).collect();
     let mut infeasible = Vec::new();
+    let mut stats = Vec::with_capacity(groups.len());
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
-    for ((_, idxs), res) in groups.iter().zip(results) {
+    for ((machine, idxs), res) in groups.iter().zip(results) {
         let group = res?;
         for (&i, row) in idxs.iter().zip(group.rows) {
             rows[i] = row;
@@ -436,33 +595,56 @@ fn merge(
         infeasible.extend(group.infeasible);
         cache_hits += group.cache.0;
         cache_misses += group.cache.1;
+        stats.push(GroupStats {
+            machine: machine.clone(),
+            points: idxs.len(),
+            workers: group.workers,
+            hits: group.cache.0,
+            misses: group.cache.1,
+        });
     }
     Ok(SweepOutcome {
         rows: rows.into_iter().flatten().collect(),
         infeasible,
+        groups: stats,
         cache_hits,
         cache_misses,
     })
 }
 
-/// Expand the grid over `base` and evaluate every point. Points are
-/// grouped by machine so each machine's topology is built once and all of
-/// its points share one cached collective model; machine groups evaluate
-/// **in parallel** on scoped threads (one topology + collective model per
-/// worker — they share nothing), and rows come back in deterministic
-/// expansion order with the workers' hit/miss stats summed.
-pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
-    let (points, groups) = prepare(base, axes)?;
+/// Intra-machine workers to give each of `groups` machine groups:
+/// the host's cores spread across the groups, at least one each.
+fn auto_workers(groups: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cores / groups.max(1)).max(1)
+}
+
+/// Evaluate prebuilt grid points: groups by machine, machine groups on
+/// parallel scoped threads, each group's points sharded across
+/// `workers_per_group` workers sharing one pre-warmed frozen cache
+/// (`0` = auto: the host's cores split across the machine groups). Rows
+/// come back in `points` order; the outcome is byte-identical to
+/// [`run_points_sequential`] on the same points.
+pub fn run_points(points: &[Point], workers_per_group: usize) -> Result<SweepOutcome> {
+    if points.is_empty() {
+        return Err(BoosterError::Config("sweep with no grid points".into()));
+    }
+    let groups = group_by_machine(points);
+    let workers = if workers_per_group == 0 {
+        auto_workers(groups.len())
+    } else {
+        workers_per_group
+    };
     if groups.len() <= 1 {
-        // Single machine: nothing to parallelize over.
-        let results = groups.iter().map(|(_, g)| eval_group(&points, g)).collect();
+        let results = groups.iter().map(|(_, g)| eval_group(points, g, workers)).collect();
         return merge(points.len(), &groups, results);
     }
     let results: Vec<GroupResult> = std::thread::scope(|s| {
-        let points = &points;
         let handles: Vec<_> = groups
             .iter()
-            .map(|(machine, idxs)| (machine, s.spawn(move || eval_group(points, idxs))))
+            .map(|(machine, idxs)| {
+                (machine, s.spawn(move || eval_group(points, idxs, workers)))
+            })
             .collect();
         handles
             .into_iter()
@@ -472,13 +654,39 @@ pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
     merge(points.len(), &groups, results)
 }
 
+/// [`run_points`] with no threading at all: machine groups in sequence on
+/// the caller's thread, one evaluation worker each. Identical grid,
+/// identical warm-up, identical rows — the parallel path must produce a
+/// byte-identical CSV (the differential tests pin this); benchmarks also
+/// use it to measure the threading speedup honestly.
+pub fn run_points_sequential(points: &[Point]) -> Result<SweepOutcome> {
+    if points.is_empty() {
+        return Err(BoosterError::Config("sweep with no grid points".into()));
+    }
+    let groups = group_by_machine(points);
+    let results = groups.iter().map(|(_, g)| eval_group(points, g, 1)).collect();
+    merge(points.len(), &groups, results)
+}
+
+/// Expand the grid over `base` and evaluate every point in parallel —
+/// across machine groups and, within each group, across workers sharing
+/// the group's pre-warmed cost cache (see the module docs).
+pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
+    run_points(&prepare(base, axes)?, 0)
+}
+
+/// [`run`] on the caller's thread only (see [`run_points_sequential`]).
+pub fn run_sequential(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
+    run_points_sequential(&prepare(base, axes)?)
+}
+
 /// Resolve a worker's result, turning a panic into a simulation error
 /// (carrying the machine and the panic message) instead of poisoning the
 /// whole process.
-fn join_worker(
+fn join_worker<T>(
     machine: &str,
-    handle: std::thread::ScopedJoinHandle<'_, GroupResult>,
-) -> GroupResult {
+    handle: std::thread::ScopedJoinHandle<'_, Result<T>>,
+) -> Result<T> {
     match handle.join() {
         Ok(result) => result,
         Err(payload) => {
@@ -494,14 +702,25 @@ fn join_worker(
     }
 }
 
-/// [`run`] without the per-machine threading: identical grid, identical
-/// evaluation, on the caller's thread. The parallel path must produce a
-/// byte-identical CSV (the differential test pins this); benchmarks can
-/// also use it to measure the threading speedup honestly.
-pub fn run_sequential(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
-    let (points, groups) = prepare(base, axes)?;
-    let results = groups.iter().map(|(_, g)| eval_group(&points, g)).collect();
-    merge(points.len(), &groups, results)
+/// Indices of the throughput-optimal row per `(machine, nodes)` pair —
+/// the §2.3 parallelism frontier the `booster crossover` report emits.
+/// Ties keep the earliest (expansion-order) row; output indices ascend.
+pub fn throughput_frontier(rows: &[SweepRow]) -> Vec<usize> {
+    let mut best: Vec<((&str, usize), usize)> = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        let key = (r.machine.as_str(), r.nodes);
+        match best.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, j)) => {
+                if r.samples_per_s > rows[*j].samples_per_s {
+                    *j = i;
+                }
+            }
+            None => best.push((key, i)),
+        }
+    }
+    let mut idxs: Vec<usize> = best.into_iter().map(|(_, i)| i).collect();
+    idxs.sort_unstable();
+    idxs
 }
 
 #[cfg(test)]
@@ -532,6 +751,22 @@ mod tests {
     }
 
     #[test]
+    fn unknown_param_keys_rejected_up_front_with_the_valid_set() {
+        // The satellite contract: a typo'd key fails at parse time — no
+        // spec built, no simulation run — and the error teaches the full
+        // key set, tensor included.
+        let err = parse_params(&s(&["stagez=4"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown sweep key 'stagez'"), "{msg}");
+        for key in SWEEPABLE_KEYS {
+            assert!(msg.contains(key), "error must list '{key}': {msg}");
+        }
+        assert!(msg.contains("tensor"), "{msg}");
+        // Same treatment when the bad key hides after a valid axis.
+        assert!(parse_params(&s(&["nodes=2", "4", "tensr=2"])).is_err());
+    }
+
+    #[test]
     fn expansion_order_is_deterministic_outer_first() {
         let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
         let pts = expand(&axes);
@@ -559,6 +794,13 @@ mod tests {
     }
 
     #[test]
+    fn chunk_ranges_cover_contiguously() {
+        assert_eq!(chunk_ranges(8, 3), vec![0..3, 3..6, 6..8]);
+        assert_eq!(chunk_ranges(2, 8).len(), 2, "never more chunks than items");
+        assert_eq!(chunk_ranges(5, 1), vec![0..5]);
+    }
+
+    #[test]
     fn sweep_runs_end_to_end_and_shares_the_cache() {
         let base = presets::default_scenario("selene").unwrap();
         let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
@@ -572,15 +814,20 @@ mod tests {
         for r in &out.rows {
             assert!(r.step_ms > 0.0 && r.samples_per_s > 0.0, "{r:?}");
             assert_eq!(r.gpus, r.nodes * 8, "selene packs 8 GPUs/node");
+            assert_eq!(r.tensor, 1);
+            assert_eq!(r.tp_comm_ms, 0.0);
         }
         // bf16 and tf32 share the machine+placement: same allreduce
         // pattern at the same sizes — the shared model must cache-hit.
         assert!(out.cache_hits >= 1, "grid must reuse the cost cache");
+        assert_eq!(out.groups.len(), 1);
+        assert!(out.groups[0].workers >= 1);
         let csv = out.to_csv();
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.starts_with("scenario,machine,"));
         let j = out.to_json(&axes);
         assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.req("groups").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]
@@ -590,6 +837,8 @@ mod tests {
         assert!(run(&base, &axes).is_err(), "9999 nodes exceeds selene");
         let axes = parse_params(&s(&["stages=3"])).unwrap();
         assert!(run(&base, &axes).is_err(), "3 stages does not divide the job GPUs");
+        let axes = parse_params(&s(&["tensor=3"])).unwrap();
+        assert!(run(&base, &axes).is_err(), "3 does not divide selene's 8 GPUs/node");
         let axes = parse_params(&s(&["schedule=interleaved"])).unwrap();
         assert!(run(&base, &axes).is_err(), "unknown schedule key");
     }
@@ -613,6 +862,33 @@ mod tests {
         // Same machine+stages, different schedule: time identical (the
         // flush-variant schedules differ in memory, not time).
         assert_eq!(out.rows[2].step_ms, out.rows[3].step_ms);
+    }
+
+    #[test]
+    fn tensor_axis_sweeps_and_reports_tp_comm() {
+        let mut base = presets::default_scenario("juwels_booster").unwrap();
+        base.parallelism.nodes = 4; // 16 GPUs, 4/node
+        let axes = parse_params(&s(&["tensor=1", "2", "stages=1", "2"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        for r in &out.rows {
+            assert!(r.step_ms > 0.0, "{r:?}");
+            if r.tensor == 1 {
+                assert_eq!(r.tp_comm_ms, 0.0, "no tensor comm at t=1: {r:?}");
+            } else {
+                assert!(r.tp_comm_ms > 0.0, "t=2 must charge layer allreduces: {r:?}");
+                assert!(r.scenario.contains("-t2"), "{}", r.scenario);
+            }
+        }
+        // The tensor=1 rows are bit-identical to a sweep without the
+        // tensor axis at all — the degeneracy contract at sweep level.
+        let flat_axes = parse_params(&s(&["stages=1", "2"])).unwrap();
+        let flat = run(&base, &flat_axes).unwrap();
+        for (a, b) in out.rows.iter().filter(|r| r.tensor == 1).zip(&flat.rows) {
+            assert_eq!(a.step_ms, b.step_ms, "{} vs {}", a.scenario, b.scenario);
+            assert_eq!(a.comm_ms, b.comm_ms);
+            assert_eq!(a.compute_ms, b.compute_ms);
+        }
     }
 
     #[test]
@@ -670,7 +946,7 @@ mod tests {
 
     #[test]
     fn parallel_and_sequential_sweeps_are_byte_identical() {
-        // Two machines -> two worker threads on the parallel path. Rows,
+        // Two machines -> two group threads on the parallel path. Rows,
         // CSV bytes and merged cache stats must not depend on threading.
         let base = presets::default_scenario("juwels_booster").unwrap();
         let axes = parse_params(&s(&[
@@ -693,5 +969,52 @@ mod tests {
         // outermost, so rows alternate machines in blocks.
         assert_eq!(par.rows[0].machine, "juwels_booster");
         assert_eq!(par.rows[4].machine, "leonardo");
+    }
+
+    #[test]
+    fn intra_machine_sharded_sweep_is_byte_identical() {
+        // The tentpole's §Sync contract: ONE machine's grid sharded
+        // across 4 workers sharing one pre-warmed frozen cache produces
+        // the same CSV bytes and the same summed hit/miss stats as the
+        // fully sequential path, even though evaluation interleaves.
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&[
+            "nodes=1",
+            "2",
+            "precision=bf16",
+            "tf32",
+            "compression=none",
+            "fp16",
+        ]))
+        .unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        assert_eq!(points.len(), 8);
+        let sharded = run_points(&points, 4).unwrap();
+        let seq = run_points_sequential(&points).unwrap();
+        assert_eq!(sharded.groups.len(), 1, "one machine, one group");
+        assert_eq!(sharded.groups[0].workers, 4);
+        assert_eq!(seq.groups[0].workers, 1);
+        assert_eq!(
+            sharded.to_csv(),
+            seq.to_csv(),
+            "intra-machine sharding must not change a byte"
+        );
+        assert_eq!(sharded.cache_hits, seq.cache_hits, "summed hit stats match");
+        assert_eq!(sharded.cache_misses, seq.cache_misses, "summed miss stats match");
+        assert!(sharded.cache_hits > 0, "warm + frozen eval must hit");
+    }
+
+    #[test]
+    fn frontier_picks_the_best_row_per_machine_and_scale() {
+        let mut base = presets::default_scenario("juwels_booster").unwrap();
+        base.parallelism.nodes = 4;
+        let axes = parse_params(&s(&["stages=1", "2", "tensor=1", "2"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        let frontier = throughput_frontier(&out.rows);
+        assert_eq!(frontier.len(), 1, "one machine at one scale -> one winner");
+        let best = &out.rows[frontier[0]];
+        for r in &out.rows {
+            assert!(best.samples_per_s >= r.samples_per_s, "{}", r.scenario);
+        }
     }
 }

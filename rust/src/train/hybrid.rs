@@ -1,40 +1,50 @@
-//! Hybrid pipeline×data parallelism (§2.3).
+//! Hybrid 3D parallelism: data × pipeline × tensor (§2.3).
 //!
 //! "Large deep learning models may not fit on a single computational
 //! device, requiring an extension of the purely data-parallel approach to
 //! model parallelism or pipelining ... JSC supports DeepSpeed." This
-//! module composes the two previously separate cost models:
+//! module composes the previously separate cost models around one
+//! [`ParallelLayout`]:
 //!
-//! * the job's GPUs are partitioned into `replicas = gpus / stages`
-//!   **data-parallel replicas** of `stages` consecutive GPUs each
-//!   (consecutive in placement order, so a compact placement keeps a
-//!   pipeline inside a node and its NVLink domain);
+//! * the job's GPUs are partitioned **replicas → stages → tensor groups**
+//!   ([`crate::train::layout`]): `data = gpus / (stages · tensor)`
+//!   data-parallel replicas of consecutive GPUs, each split into
+//!   `stages` consecutive stages whose `tensor` GPUs form one
+//!   Megatron-style tensor group (compact placement keeps a group inside
+//!   a node's NVLink domain);
 //! * each replica runs the microbatch pipeline priced by
-//!   [`crate::pipeline::step_time`] (per-stage compute, inter-stage
+//!   [`crate::pipeline::step_time`] (per-GPU compute, inter-stage
 //!   activation transfers, the (s−1)/(m+s−1) bubble, and the
-//!   state+activation memory-fit check);
-//! * after the local step, stage `k` of every replica allreduces its
-//!   gradient shard (`1/stages` of the gradient bytes) with stage `k` of
-//!   every other replica — priced per stage group through the shared
-//!   cached [`crate::collectives::CollectiveModel`], with the same
-//!   bucketing/compression/overlap semantics as pure data parallelism.
+//!   state+activation memory-fit check over the `s × t` shard grid);
+//! * every microbatch slot additionally carries `2·(layers/stages)`
+//!   tensor-group allreduces of the per-layer activation volume (the
+//!   Megatron intra-layer exchanges), priced through the shared cached
+//!   [`crate::collectives::CollectiveModel`] — the slowest stage group of
+//!   the replica is charged;
+//! * after the local step, the GPU holding shard `(stage k, tensor rank
+//!   j)` in every replica allreduces its `1/(stages·tensor)` gradient
+//!   slice with its peers — priced per disjoint group through the same
+//!   shared model, with the bucketing/compression/overlap semantics of
+//!   pure data parallelism.
 //!
-//! **Degeneracy contract:** at `stages = 1, microbatches = 1` every term
-//! reduces to the corresponding [`TimelineModel`] term — same kernel-time
-//! call, same allreduce over the same GPU set, same straggler sampling and
-//! overlap formula — so `HybridTimeline::step_time` equals
-//! [`TimelineModel::step_time`] exactly (a differential test pins this).
-//! Stage groups are disjoint GPU sets whose allreduces proceed
-//! concurrently; the model charges the slowest group and ignores
-//! cross-group fabric contention (a fluid-model simplification, like
-//! treating homogeneous nodes as one representative in the hierarchical
-//! collective).
+//! **Degeneracy contract:** at `tensor = 1` every term reduces to the
+//! PR-3 pipeline×data model — same flow patterns, same cache-op order,
+//! same randomness — and at `stages = 1, microbatches = 1` further to
+//! [`TimelineModel::step_time`] exactly (differential tests on every
+//! machine preset pin both). Stage/tensor groups are disjoint GPU sets
+//! whose allreduces proceed concurrently; the model charges the slowest
+//! group and ignores cross-group fabric contention (a fluid-model
+//! simplification, like treating homogeneous nodes as one representative
+//! in the hierarchical collective).
 
-use crate::collectives::bucketed_allreduce_time;
+use std::sync::Arc;
+
+use crate::collectives::{bucketed_allreduce_time, CollectiveModel};
 use crate::pipeline::{self, PipelinedModel, Schedule};
 use crate::topology::{GpuId, Topology};
+use crate::train::layout::ParallelLayout;
 use crate::train::timeline::TimelineModel;
-use crate::util::error::{BoosterError, Result};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// One hybrid step's cost breakdown (seconds).
@@ -42,9 +52,12 @@ use crate::util::rng::Rng;
 pub struct HybridStepTime {
     /// Slowest-replica pipeline time, after straggler sampling.
     pub compute: f64,
-    /// Slowest stage group's cross-replica gradient allreduce (before
-    /// overlap accounting).
+    /// Slowest gradient group's cross-replica allreduce (before overlap
+    /// accounting).
     pub comm: f64,
+    /// Tensor-parallel allreduce seconds on the step's critical path
+    /// (already inside `compute`'s pipeline slots; 0 at `tensor = 1`).
+    pub tp_comm: f64,
     /// Wall-clock step time after overlap.
     pub total: f64,
     /// Pipeline bubble fraction, (s−1)/(m+s−1); 0 at one stage and one
@@ -56,6 +69,8 @@ pub struct HybridStepTime {
     pub transfer_time: f64,
     /// Data-parallel replica count the job was split into.
     pub replicas: usize,
+    /// Tensor-parallel group size the step was priced with.
+    pub tensor: usize,
     /// Microbatches per step per replica the step was priced with.
     pub microbatches: usize,
     /// Samples per microbatch per replica (replica batch rounded up onto
@@ -70,18 +85,22 @@ impl HybridStepTime {
     }
 }
 
-/// Timeline for hybrid pipeline×data-parallel training. Owns a
+/// Timeline for hybrid data×pipeline×tensor training. Owns a
 /// [`TimelineModel`] (precision, efficiency, collective settings, jitter
-/// — and the shared, cached collective model) plus the pipeline shape.
+/// — and the shared, cached collective model) plus the model-parallel
+/// shape.
 #[derive(Debug)]
 pub struct HybridTimeline<'t> {
-    /// The data-parallel cost model this hybrid composes with; its owned
-    /// `CollectiveModel` prices every cross-replica allreduce, so keeping
-    /// one `HybridTimeline` alive across evaluations shares the cost
-    /// cache exactly like the pure data-parallel sweep path.
+    /// The data-parallel cost model this hybrid composes with; its
+    /// `CollectiveModel` prices every cross-replica and tensor-group
+    /// allreduce, so keeping one `HybridTimeline` alive across
+    /// evaluations shares the cost cache exactly like the pure
+    /// data-parallel sweep path.
     pub timeline: TimelineModel<'t>,
-    /// Pipeline stages per replica (1 = pure data parallelism).
+    /// Pipeline stages per replica (1 = no pipelining).
     pub stages: usize,
+    /// Tensor-parallel group size per stage (1 = no tensor parallelism).
+    pub tensor: usize,
     /// Microbatches per step per replica.
     pub microbatches: usize,
     /// Microbatch schedule.
@@ -91,7 +110,7 @@ pub struct HybridTimeline<'t> {
 }
 
 impl<'t> HybridTimeline<'t> {
-    /// Build from a scenario: the timeline settings, pipeline shape and
+    /// Build from a scenario: the timeline settings, parallel shape and
     /// pipelined model all come from the spec. The topology must be the
     /// spec machine's ([`crate::scenario::ExperimentContext`] guarantees
     /// this).
@@ -99,10 +118,22 @@ impl<'t> HybridTimeline<'t> {
         spec: &crate::scenario::ScenarioSpec,
         topo: &'t Topology,
     ) -> Result<HybridTimeline<'t>> {
-        let timeline = TimelineModel::from_scenario(spec, topo)?;
+        Self::with_collectives(spec, topo, Arc::new(CollectiveModel::new(topo)))
+    }
+
+    /// [`HybridTimeline::from_scenario`] on an existing (possibly shared)
+    /// collective model: the sweep's intra-machine workers each build one
+    /// of these around the group's single pre-warmed cache (§Sync).
+    pub fn with_collectives(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+        collectives: Arc<CollectiveModel<'t>>,
+    ) -> Result<HybridTimeline<'t>> {
+        let timeline = TimelineModel::from_scenario_shared(spec, topo, collectives)?;
         let mut h = HybridTimeline {
             timeline,
             stages: 1,
+            tensor: 1,
             microbatches: 1,
             schedule: Schedule::GPipe,
             model: spec.workload.pipelined_model(),
@@ -121,40 +152,50 @@ impl<'t> HybridTimeline<'t> {
 
     fn configure_pipeline(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
         self.stages = spec.parallelism.pipeline_stages;
+        self.tensor = spec.parallelism.tensor_parallel;
         self.microbatches = spec.parallelism.microbatches;
         self.schedule = spec.schedule()?;
         self.model = spec.workload.pipelined_model();
         Ok(())
     }
 
-    /// Partition check: replica count for a job of `n` GPUs.
-    fn replica_count(&self, n: usize) -> Result<usize> {
-        if n == 0 || self.stages == 0 || self.microbatches == 0 {
-            return Err(BoosterError::Config("empty hybrid job".into()));
+    /// The 3D layout this timeline induces on a job of `n` GPUs.
+    pub fn layout(&self, n: usize) -> Result<ParallelLayout> {
+        if self.microbatches == 0 {
+            return Err(crate::util::error::BoosterError::Config(
+                "empty hybrid job: zero microbatches".into(),
+            ));
         }
-        if n % self.stages != 0 {
-            return Err(BoosterError::Config(format!(
-                "pipeline_stages {} does not divide the job's {n} GPUs",
-                self.stages
-            )));
-        }
-        Ok(n / self.stages)
+        ParallelLayout::new(n, self.stages, self.tensor)
     }
 
-    /// Per-stage gradient shard on the wire, as a tensor set (the stage's
-    /// `1/stages` slice of the fused FP32 gradient).
-    fn stage_shard_bytes(&self) -> Vec<f64> {
-        vec![self.model.params * 4.0 / self.stages as f64]
+    /// Samples per microbatch per replica under the weak-scaling
+    /// convention: each replica's step processes
+    /// `batch_per_gpu × stages × tensor` samples, split over the
+    /// microbatches.
+    fn micro_size(&self, layout: &ParallelLayout, batch_per_gpu: usize) -> usize {
+        (batch_per_gpu * layout.gpus_per_replica())
+            .div_ceil(self.microbatches)
+            .max(1)
     }
 
-    /// Topological signature of a replica's stage chain: one class per
-    /// consecutive stage pair — same node / same leaf / same cell /
+    /// Per-stage gradient shard on the wire, as a tensor set (the
+    /// `(stage, tensor rank)` GPU's `1/(stages·tensor)` slice of the
+    /// fused FP32 gradient).
+    fn shard_bytes(&self, layout: &ParallelLayout) -> Vec<f64> {
+        vec![self.model.params * 4.0 / layout.gpus_per_replica() as f64]
+    }
+
+    /// Topological signature of a replica's GPU chain: one class per
+    /// consecutive GPU pair — same node / same leaf / same cell /
     /// inter-cell. Link bandwidths and latencies are homogeneous within a
     /// class, so two replicas with equal signatures price identically;
     /// pricing one representative per distinct signature covers the
-    /// slowest replica exactly (a stages value that does not align with
-    /// node or cell boundaries makes *middle* replicas straddle fabric
-    /// levels the first and last do not).
+    /// slowest replica exactly (a `stages × tensor` extent that does not
+    /// align with node or cell boundaries makes *middle* replicas
+    /// straddle fabric levels the first and last do not). The chain walks
+    /// the replica in stage-major order, so it distinguishes straddling
+    /// tensor groups as well as straddling stage boundaries.
     fn replica_signature(topo: &Topology, replica: &[GpuId]) -> Vec<u8> {
         let p = &topo.params;
         let nodes_per_leaf = p.nodes_per_cell / p.leaves_per_cell;
@@ -179,68 +220,43 @@ impl<'t> HybridTimeline<'t> {
             .collect()
     }
 
-    /// Simulate one synchronous hybrid step over `gpus` (the job's
-    /// placement, replica-major: replica `r` owns
-    /// `gpus[r*stages..(r+1)*stages]`). `batch_per_gpu` keeps the weak
-    /// scaling convention: each replica's step processes
-    /// `batch_per_gpu * stages` samples, split over the microbatches.
-    pub fn step_time(
+    /// Per-microbatch tensor-group allreduce seconds for replica `r`:
+    /// `2·(layers/stages)` allreduces of the per-layer activation volume,
+    /// gated by the replica's slowest stage group. 0 at `tensor = 1`
+    /// (and no cache traffic, preserving the degeneracy contract).
+    fn tensor_comm_per_micro(
         &self,
+        layout: &ParallelLayout,
         gpus: &[GpuId],
-        batch_per_gpu: usize,
-        rng: &mut Rng,
-    ) -> Result<HybridStepTime> {
-        let replicas = self.replica_count(gpus.len())?;
-        let micro_size = (batch_per_gpu * self.stages).div_ceil(self.microbatches).max(1);
-
-        // Per-replica pipeline step. Replicas are topologically similar
-        // but not identical (a stages value misaligned with node/cell
-        // boundaries makes some replicas straddle fabric levels others do
-        // not): price one representative per distinct replica signature
-        // and let the slowest gate the synchronous step.
-        let topo = self.timeline.topo;
-        let price = |replica: &[GpuId]| {
-            pipeline::step_time(
-                topo,
-                replica,
-                &self.model,
-                self.schedule,
-                self.microbatches,
-                micro_size,
-                self.timeline.efficiency,
-                self.timeline.precision,
-            )
-        };
-        let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
-        let mut step: Option<crate::pipeline::PipelineStep> = None;
-        let mut slowest = f64::NEG_INFINITY;
-        for r in 0..replicas {
-            let replica = &gpus[r * self.stages..(r + 1) * self.stages];
-            if !seen.insert(Self::replica_signature(topo, replica)) {
-                continue;
-            }
-            let ps = price(replica)?;
-            if ps.total > slowest {
-                slowest = ps.total;
-                step = Some(ps);
-            }
+        r: usize,
+        micro_size: usize,
+    ) -> Result<f64> {
+        if layout.tensor == 1 {
+            return Ok(0.0);
         }
-        let step = step.expect("at least one replica");
+        let bytes = self.model.layer_allreduce_bytes_per_sample * micro_size as f64;
+        let per_micro = 2.0 * self.model.layers as f64 / layout.pipeline as f64;
+        let mut worst = 0.0f64;
+        for stage in 0..layout.pipeline {
+            let group = layout.tensor_group(gpus, r, stage);
+            let t = self
+                .timeline
+                .collectives
+                .allreduce_time(group, bytes, self.timeline.algo)?;
+            worst = worst.max(t);
+        }
+        Ok(per_micro * worst)
+    }
 
-        // Straggler sampling: every GPU in the job can stall the
-        // synchronous step (same draw structure as the data-parallel
-        // timeline, so stages=1 consumes identical randomness).
-        let compute = self.timeline.slowest_rank_time(step.total, gpus.len(), rng);
-
-        // Cross-replica gradient allreduce, one disjoint group per stage;
-        // groups reduce concurrently, the slowest one is charged.
+    /// Slowest cross-replica gradient allreduce over the
+    /// `stages × tensor` disjoint shard groups (reducing concurrently).
+    fn grad_comm(&self, layout: &ParallelLayout, gpus: &[GpuId]) -> Result<f64> {
+        let shard = self.shard_bytes(layout);
         let mut comm = 0.0f64;
-        if replicas > 1 {
-            let shard = self.stage_shard_bytes();
-            let mut group = Vec::with_capacity(replicas);
-            for stage in 0..self.stages {
-                group.clear();
-                group.extend((0..replicas).map(|r| gpus[r * self.stages + stage]));
+        let mut group = Vec::with_capacity(layout.data);
+        for stage in 0..layout.pipeline {
+            for k in 0..layout.tensor {
+                layout.data_group(gpus, stage, k, &mut group);
                 let t = bucketed_allreduce_time(
                     &self.timeline.collectives,
                     &group,
@@ -252,16 +268,108 @@ impl<'t> HybridTimeline<'t> {
                 comm = comm.max(t);
             }
         }
+        Ok(comm)
+    }
+
+    /// Issue exactly the collective-cost queries one [`step_time`] call
+    /// would make — tensor-group allreduces for every distinct replica
+    /// signature, then the gradient groups — without pricing the pipeline
+    /// or consuming randomness. The sweep driver replays a grid through
+    /// this **sequentially** to warm the shared cache into a
+    /// deterministic state before sharding the evaluation across workers
+    /// against the then-frozen cache (see `scenario::sweep`).
+    ///
+    /// [`step_time`]: HybridTimeline::step_time
+    pub fn warm_comm(&self, gpus: &[GpuId], batch_per_gpu: usize) -> Result<()> {
+        let layout = self.layout(gpus.len())?;
+        let micro_size = self.micro_size(&layout, batch_per_gpu);
+        let topo = self.timeline.topo;
+        let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
+        for r in 0..layout.data {
+            if !seen.insert(Self::replica_signature(topo, layout.replica(gpus, r))) {
+                continue;
+            }
+            self.tensor_comm_per_micro(&layout, gpus, r, micro_size)?;
+        }
+        if layout.data > 1 {
+            self.grad_comm(&layout, gpus)?;
+        }
+        Ok(())
+    }
+
+    /// Simulate one synchronous hybrid step over `gpus` (the job's
+    /// placement, replica-major: replica `r` owns
+    /// `gpus[r·stages·tensor..(r+1)·stages·tensor]`, stage-major inside).
+    /// `batch_per_gpu` keeps the weak scaling convention — see
+    /// [`HybridTimeline::micro_size`].
+    pub fn step_time(
+        &self,
+        gpus: &[GpuId],
+        batch_per_gpu: usize,
+        rng: &mut Rng,
+    ) -> Result<HybridStepTime> {
+        let layout = self.layout(gpus.len())?;
+        let micro_size = self.micro_size(&layout, batch_per_gpu);
+
+        // Per-replica pipeline step. Replicas are topologically similar
+        // but not identical (a replica extent misaligned with node/cell
+        // boundaries makes some replicas straddle fabric levels others do
+        // not): price one representative per distinct replica signature
+        // and let the slowest gate the synchronous step.
+        let topo = self.timeline.topo;
+        let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
+        let mut step: Option<crate::pipeline::PipelineStep> = None;
+        let mut slowest = f64::NEG_INFINITY;
+        for r in 0..layout.data {
+            let replica = layout.replica(gpus, r);
+            if !seen.insert(Self::replica_signature(topo, replica)) {
+                continue;
+            }
+            let tp = self.tensor_comm_per_micro(&layout, gpus, r, micro_size)?;
+            let ps = pipeline::step_time(
+                topo,
+                replica,
+                &self.model,
+                self.schedule,
+                self.microbatches,
+                micro_size,
+                self.timeline.efficiency,
+                self.timeline.precision,
+                layout.tensor,
+                tp,
+            )?;
+            if ps.total > slowest {
+                slowest = ps.total;
+                step = Some(ps);
+            }
+        }
+        let step = step.expect("at least one replica");
+
+        // Straggler sampling: every GPU in the job can stall the
+        // synchronous step (same draw structure as the data-parallel
+        // timeline, so stages=tensor=1 consumes identical randomness).
+        let compute = self.timeline.slowest_rank_time(step.total, gpus.len(), rng);
+
+        // Cross-replica gradient allreduce, one disjoint group per
+        // (stage, tensor rank); groups reduce concurrently, the slowest
+        // one is charged.
+        let comm = if layout.data > 1 {
+            self.grad_comm(&layout, gpus)?
+        } else {
+            0.0
+        };
 
         let total = self.timeline.exposed_step(compute, comm);
         Ok(HybridStepTime {
             compute,
             comm,
+            tp_comm: (self.microbatches as f64 + layout.pipeline as f64 - 1.0) * step.tensor_comm,
             total,
             bubble_fraction: step.bubble_fraction,
             stage_time: step.stage_time,
             transfer_time: step.transfer_time,
-            replicas,
+            replicas: layout.data,
+            tensor: layout.tensor,
             microbatches: self.microbatches,
             micro_size,
         })
@@ -274,18 +382,19 @@ mod tests {
     use crate::scenario::{presets, ScenarioSpec};
     use crate::train::timeline::Jitter;
 
-    /// The acceptance contract: at stages=1, microbatches=1 the hybrid
-    /// timeline IS the data-parallel timeline, to 1e-9 relative, on every
-    /// machine the crossover study compares.
+    /// The acceptance contract: at stages=1, tensor=1, microbatches=1 the
+    /// hybrid timeline IS the data-parallel timeline, to 1e-9 relative,
+    /// on every machine preset the crossover study compares.
     #[test]
     fn degenerates_to_data_parallel_at_one_stage() {
-        for machine in ["juwels_booster", "selene", "leonardo"] {
+        for machine in presets::machine_names() {
             let spec = presets::default_scenario(machine).unwrap();
             let topo = spec.machine.build_topology().unwrap();
             let gpus = spec.job_gpus(&topo).unwrap();
             let tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
             let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
             assert_eq!(hy.stages, 1);
+            assert_eq!(hy.tensor, 1);
             let mut rng_a = Rng::seed_from(7);
             let mut rng_b = Rng::seed_from(7);
             let a = tl
@@ -308,7 +417,9 @@ mod tests {
             close(b.comm, a.comm, "comm");
             close(b.total, a.total, "total");
             assert_eq!(b.bubble_fraction, 0.0, "{machine}: no bubble at s=1,m=1");
+            assert_eq!(b.tp_comm, 0.0, "{machine}: no tensor comm at t=1");
             assert_eq!(b.replicas, gpus.len());
+            assert_eq!(b.tensor, 1);
         }
     }
 
@@ -411,6 +522,8 @@ mod tests {
                 micro,
                 hy.timeline.efficiency,
                 hy.timeline.precision,
+                1,
+                0.0,
             )
             .unwrap()
         };
@@ -479,5 +592,103 @@ mod tests {
         let (hits, misses) = hy.timeline.collectives.cache_stats();
         assert!(hits >= 1, "second step must be served by the cache");
         assert!(misses >= 1);
+    }
+
+    // ---- tensor (intra-layer) parallelism ------------------------------
+
+    fn spec_3d(nodes: usize, stages: usize, tensor: usize, mb: usize) -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(nodes)
+            .pipeline_stages(stages)
+            .tensor_parallel(tensor)
+            .microbatches(mb)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn tensor_groups_charge_layer_allreduces() {
+        // 8 nodes = 32 GPUs as d4·p4·t2: tensor comm must appear, inside
+        // the pipeline slots, and the tensor groups stay intra-node.
+        let spec = spec_3d(8, 4, 2, 8);
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        assert_eq!(hy.tensor, 2);
+        let mut rng = Rng::seed_from(7);
+        let batch = spec.workload.batch_per_gpu;
+        let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
+        assert_eq!(st.replicas, 4, "32 GPUs / (4 stages x 2 tensor)");
+        assert_eq!(st.tensor, 2);
+        assert!(st.tp_comm > 0.0, "tensor groups must pay layer allreduces");
+        assert!(st.comm > 0.0, "4 replicas still allreduce gradients");
+
+        // Against the same shape without tensor parallelism (d8·p4·t1 on
+        // the same GPUs): the t=2 step carries tensor comm in its slots,
+        // and its compute includes that comm.
+        let flat = spec_3d(8, 4, 1, 8);
+        let hy1 = HybridTimeline::from_scenario(&flat, &topo).unwrap();
+        let mut rng1 = Rng::seed_from(7);
+        let st1 = hy1.step_time(&gpus, batch, &mut rng1).unwrap();
+        assert_eq!(st1.tp_comm, 0.0);
+        assert!(st.stage_time < st1.stage_time, "t=2 halves per-GPU math");
+    }
+
+    #[test]
+    fn tensor_one_is_bit_exact_with_the_pipeline_model() {
+        // The tentpole's degeneracy contract at the hybrid level: the
+        // tensor-aware path at t=1 produces *identical* numbers (and
+        // identical rng/cache behavior) to the same spec priced with the
+        // tensor field left at its default.
+        for machine in ["juwels_booster", "selene", "leonardo"] {
+            let m = presets::machine(machine).unwrap();
+            let spec = ScenarioSpec::builder(m)
+                .nodes(4)
+                .pipeline_stages(2)
+                .microbatches(4)
+                .build()
+                .unwrap();
+            let mut explicit = spec.clone();
+            explicit.parallelism.tensor_parallel = 1;
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let a = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+            let b = HybridTimeline::from_scenario(&explicit, &topo).unwrap();
+            let mut rng_a = Rng::seed_from(7);
+            let mut rng_b = Rng::seed_from(7);
+            let batch = spec.workload.batch_per_gpu;
+            let sa = a.step_time(&gpus, batch, &mut rng_a).unwrap();
+            let sb = b.step_time(&gpus, batch, &mut rng_b).unwrap();
+            assert_eq!(sa, sb, "{machine}: t=1 must be bit-exact");
+            assert_eq!(
+                a.timeline.collectives.cache_stats(),
+                b.timeline.collectives.cache_stats(),
+                "{machine}: identical cache-op sequence"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_comm_makes_step_time_fully_cached() {
+        // warm_comm must issue exactly the queries step_time makes: after
+        // warming, a frozen cache serves the step without a single miss —
+        // the invariant the sharded sweep's determinism rests on.
+        for (stages, tensor, mb) in [(1usize, 1usize, 1usize), (4, 1, 8), (4, 2, 8), (2, 4, 4)] {
+            let spec = spec_3d(8, stages, tensor, mb);
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+            let batch = spec.workload.batch_per_gpu;
+            hy.warm_comm(&gpus, batch).unwrap();
+            let (_, warm_misses) = hy.timeline.collectives.cache_stats();
+            hy.timeline.collectives.freeze_cache(true);
+            let mut rng = Rng::seed_from(7);
+            hy.step_time(&gpus, batch, &mut rng).unwrap();
+            let (_, misses) = hy.timeline.collectives.cache_stats();
+            assert_eq!(
+                misses, warm_misses,
+                "p{stages}t{tensor}m{mb}: step after warm_comm must not simulate"
+            );
+        }
     }
 }

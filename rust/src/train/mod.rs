@@ -17,11 +17,15 @@
 //! batch — the combination of all distributed data batches" (§2.3).
 //!
 //! The simulated-machine cost models live next door: [`timeline`] prices
-//! pure data parallelism, [`hybrid`] composes it with the microbatch
-//! pipeline from [`crate::pipeline`] (hybrid pipeline×data parallelism).
+//! pure data parallelism, [`layout`] carves a job along the three
+//! parallelism axes (data × pipeline × tensor), and [`hybrid`] composes
+//! the data-parallel timeline with the microbatch pipeline from
+//! [`crate::pipeline`] and Megatron-style tensor groups into the full
+//! 3D-parallel step cost.
 
 pub mod allreduce;
 pub mod hybrid;
+pub mod layout;
 pub mod timeline;
 
 use std::time::Instant;

@@ -12,6 +12,8 @@
 //!    time variance *grows with scale* — exactly the effect the paper
 //!    reports beyond 32 GPUs in Fig. 4.
 
+use std::sync::Arc;
+
 use crate::collectives::{bucketed_allreduce_time, Algo, CollectiveModel, Compression};
 use crate::hw::precision::Precision;
 use crate::topology::{GpuId, Topology};
@@ -51,15 +53,19 @@ impl Jitter {
 
 /// Timeline model bound to a topology.
 ///
-/// Owns a [`CollectiveModel`] so repeated step/throughput evaluations on
+/// Holds a [`CollectiveModel`] so repeated step/throughput evaluations on
 /// the same placement are served by the pattern-level cost cache instead
-/// of re-running flow simulations (§Perf).
+/// of re-running flow simulations (§Perf). The model sits behind an
+/// `Arc`: by default each timeline gets its own, but the sweep driver
+/// hands many per-worker timelines the **same** model so they share one
+/// warm cache across threads (§Sync —
+/// [`TimelineModel::amp_defaults_shared`]).
 #[derive(Debug)]
 pub struct TimelineModel<'t> {
     /// The machine.
     pub topo: &'t Topology,
     /// Shared collective cost model (route table + cost cache inside).
-    pub collectives: CollectiveModel<'t>,
+    pub collectives: Arc<CollectiveModel<'t>>,
     /// Precision of the training math (paper workloads: FP16_TC AMP).
     pub precision: Precision,
     /// Achieved fraction of peak FLOP/s for the compute phase.
@@ -91,9 +97,24 @@ pub struct StepTime {
 impl<'t> TimelineModel<'t> {
     /// Standard configuration for the paper's AMP data-parallel workloads.
     pub fn amp_defaults(topo: &'t Topology) -> TimelineModel<'t> {
+        Self::amp_defaults_shared(topo, Arc::new(CollectiveModel::new(topo)))
+    }
+
+    /// [`TimelineModel::amp_defaults`] on an existing (possibly shared)
+    /// collective model. `collectives` must be bound to the same
+    /// `Topology` as `topo` — the sweep driver uses this to point every
+    /// worker's timeline at one shared, pre-warmed cost cache.
+    pub fn amp_defaults_shared(
+        topo: &'t Topology,
+        collectives: Arc<CollectiveModel<'t>>,
+    ) -> TimelineModel<'t> {
+        debug_assert!(
+            std::ptr::eq(collectives.topology(), topo),
+            "shared collective model must be bound to the same topology"
+        );
         TimelineModel {
             topo,
-            collectives: CollectiveModel::new(topo),
+            collectives,
             precision: Precision::Fp16Tc,
             efficiency: 0.42,
             overlap: 0.7,
@@ -113,7 +134,17 @@ impl<'t> TimelineModel<'t> {
         spec: &crate::scenario::ScenarioSpec,
         topo: &'t Topology,
     ) -> Result<TimelineModel<'t>> {
-        let mut m = TimelineModel::amp_defaults(topo);
+        Self::from_scenario_shared(spec, topo, Arc::new(CollectiveModel::new(topo)))
+    }
+
+    /// [`TimelineModel::from_scenario`] on an existing (possibly shared)
+    /// collective model (see [`TimelineModel::amp_defaults_shared`]).
+    pub fn from_scenario_shared(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+        collectives: Arc<CollectiveModel<'t>>,
+    ) -> Result<TimelineModel<'t>> {
+        let mut m = TimelineModel::amp_defaults_shared(topo, collectives);
         m.configure_from(spec)?;
         Ok(m)
     }
