@@ -107,5 +107,38 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(tensor groups trade pipeline bubble for intra-node NVLink allreduces)");
+
+    // The other §2.3 memory axis: ZeRO sharding keeps the step
+    // data-parallel (no bubble) and pays reduce-scatter + allgather.
+    println!("\nGPT-3 175B on 32 nodes, ZeRO optimizer+grads sharding (no pipeline):\n");
+    println!(
+        "{:>10} | {:>10} {:>10} {:>10} {:>12}",
+        "d·1·t", "rs", "ag", "step", "samples/s"
+    );
+    for tensor in [1usize, 2, 4] {
+        let machine = presets::machine("juwels_booster").map_err(anyhow::Error::msg)?;
+        let spec = ScenarioSpec::builder(machine)
+            .workload(presets::workload("gpt3_175b").map_err(anyhow::Error::msg)?)
+            .nodes(32)
+            .tensor_parallel(tensor)
+            .sharding("optimizer+grads")
+            .build()
+            .map_err(anyhow::Error::msg)?;
+        let ctxz = booster::scenario::ExperimentContext::new(spec).map_err(anyhow::Error::msg)?;
+        let z = ctxz.zero_timeline().map_err(anyhow::Error::msg)?;
+        let gpus = ctxz.job_gpus().map_err(anyhow::Error::msg)?;
+        let mut rng = Rng::seed_from(7);
+        let batch = ctxz.spec.workload.batch_per_gpu;
+        let st = z.step_time(&gpus, batch, &mut rng).map_err(anyhow::Error::msg)?;
+        println!(
+            "{:>10} | {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>12.1}",
+            format!("{}·1·{}", st.replicas, st.tensor),
+            st.rs * 1e3,
+            st.ag * 1e3,
+            st.total * 1e3,
+            st.replicas as f64 * st.micro_size as f64 / st.total,
+        );
+    }
+    println!("\n(the crossover frontier picks pipeline or ZeRO per machine: booster crossover)");
     Ok(())
 }

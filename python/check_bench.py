@@ -1,0 +1,270 @@
+#!/usr/bin/env python3
+"""Schema validator for the machine-readable bench/sweep artifacts.
+
+Replaces the copy-pasted heredoc asserts that used to live in each CI
+smoke step. One validator, called from every step, so the schema is
+checked the same way everywhere and a mode's failure pinpoints itself.
+
+Usage:
+    check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero]
+                   [--degenerate-csv CONTROL.csv --sweep-csv SWEEP.csv]
+    check_bench.py results/BENCH_hotpath.json
+    check_bench.py results/crossover.csv --mode crossover
+
+Generic checks (every BENCH_sweep.json):
+  * required top-level keys and per-row columns;
+  * row count + infeasible count == the grid product of the params axes;
+  * ms columns non-negative, step_ms/samples_per_s positive;
+  * cost-cache hit/miss arithmetic consistent (hit_rate == hits/(h+m));
+  * per-group hits/misses/points sum to the totals.
+
+Mode checks add the smoke-specific assertions (see `--mode`).
+"""
+
+import argparse
+import csv
+import json
+import math
+import sys
+
+ROW_KEYS = [
+    "scenario", "machine", "workload", "nodes", "gpus", "precision", "algo",
+    "compression", "placement", "bucket_mb", "stages", "tensor",
+    "microbatches", "schedule", "sharding", "bubble_pct", "compute_ms",
+    "comm_ms", "rs_ms", "ag_ms", "tp_comm_ms", "step_ms", "samples_per_s",
+    "step_energy_kj",
+]
+MS_KEYS = ["compute_ms", "comm_ms", "rs_ms", "ag_ms", "tp_comm_ms", "step_ms"]
+
+
+def fail(msg):
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require(cond, msg):
+    if not cond:
+        fail(msg)
+
+
+def check_cost_cache(cc, where):
+    for k in ("hits", "misses", "hit_rate"):
+        require(k in cc, f"{where}: cost_cache missing '{k}'")
+    hits, misses = cc["hits"], cc["misses"]
+    require(hits >= 0 and misses >= 0, f"{where}: negative cache counters {cc}")
+    total = max(1, hits + misses)
+    require(
+        math.isclose(cc["hit_rate"], hits / total, rel_tol=1e-9, abs_tol=1e-9),
+        f"{where}: hit_rate {cc['hit_rate']} != {hits}/{hits + misses}",
+    )
+
+
+def check_sweep(d, path):
+    for k in ("bench", "params", "rows", "infeasible", "groups", "cost_cache"):
+        require(k in d, f"{path}: missing top-level key '{k}'")
+    require(d["bench"] == "sweep", f"{path}: bench key is {d['bench']!r}")
+    rows, infeasible, groups = d["rows"], d["infeasible"], d["groups"]
+
+    # Row count: the deterministic grid product, minus nothing — points
+    # that could not price must land in `infeasible`, not vanish.
+    product = 1
+    for axis in d["params"]:
+        require(
+            axis.get("key") and axis.get("values"),
+            f"{path}: malformed params axis {axis}",
+        )
+        product *= len(axis["values"])
+    require(
+        len(rows) + len(infeasible) == product,
+        f"{path}: {len(rows)} rows + {len(infeasible)} infeasible != grid "
+        f"product {product}",
+    )
+    require(rows, f"{path}: sweep produced no feasible rows")
+
+    for i, r in enumerate(rows):
+        for k in ROW_KEYS:
+            require(k in r, f"{path}: row {i} missing '{k}'")
+        for k in MS_KEYS:
+            require(r[k] >= 0, f"{path}: row {i} has negative {k}: {r[k]}")
+        require(r["step_ms"] > 0, f"{path}: row {i} not priced: {r}")
+        require(r["samples_per_s"] > 0, f"{path}: row {i} zero throughput")
+        if r["sharding"] == "none":
+            require(
+                r["rs_ms"] == 0 and r["ag_ms"] == 0,
+                f"{path}: unsharded row {i} charges RS/AG: {r}",
+            )
+        else:
+            require(
+                abs(r["comm_ms"] - (r["rs_ms"] + r["ag_ms"])) <= 1e-6,
+                f"{path}: sharded row {i}: comm_ms != rs_ms + ag_ms: {r}",
+            )
+
+    check_cost_cache(d["cost_cache"], path)
+    require(groups, f"{path}: no machine groups recorded")
+    for g in groups:
+        for k in ("machine", "points", "workers", "hits", "misses"):
+            require(k in g, f"{path}: group missing '{k}': {g}")
+        require(g["workers"] >= 1, f"{path}: group without workers: {g}")
+    require(
+        sum(g["hits"] for g in groups) == d["cost_cache"]["hits"],
+        f"{path}: group hits do not sum to the total",
+    )
+    require(
+        sum(g["misses"] for g in groups) == d["cost_cache"]["misses"],
+        f"{path}: group misses do not sum to the total",
+    )
+    require(
+        sum(g["points"] for g in groups) == len(rows) + len(infeasible),
+        f"{path}: group points do not cover the grid",
+    )
+    return rows
+
+
+def check_hotpath(d, path):
+    for k in ("bench", "sim", "cost_cache"):
+        require(k in d, f"{path}: missing top-level key '{k}'")
+    require(d["bench"] == "runtime_hotpath", f"{path}: bench key {d['bench']!r}")
+    sim = d["sim"]
+    for k in ("ring512_ms_median", "events_per_s", "speedup_vs_reference"):
+        require(k in sim and sim[k] > 0, f"{path}: sim.{k} missing or <= 0")
+    cc = d["cost_cache"]
+    check_cost_cache(cc, path)
+    require(cc["hit_rate"] > 0, f"{path}: repeated-size sweep never hit the cache")
+    require(cc["speedup"] > 1, f"{path}: cached sweep slower than uncached: {cc}")
+    sc = d.get("shared_cache", {})
+    for k in ("threads", "lookups", "single_thread_ms", "multi_thread_ms"):
+        require(k in sc, f"{path}: shared_cache missing '{k}'")
+
+
+# ---- per-mode smoke assertions ------------------------------------------
+
+
+def mode_hybrid(rows):
+    require(len(rows) == 8, f"hybrid grid expected 8 rows, got {len(rows)}")
+    require(
+        any(r["stages"] == 4 and r["bubble_pct"] > 0 for r in rows),
+        "multi-stage rows must report a pipeline bubble",
+    )
+
+
+def mode_3d(rows, d):
+    require(len(rows) == 8, f"3d grid expected 8 rows, got {len(rows)}")
+    require(
+        any(r["tensor"] == 2 and r["tp_comm_ms"] > 0 for r in rows),
+        "tensor=2 rows must charge layer allreduces",
+    )
+    require(
+        all(r["tp_comm_ms"] == 0 for r in rows if r["tensor"] == 1),
+        "tensor=1 rows must not charge tensor comm",
+    )
+    require(len(d["groups"]) == 2, f"two machine groups expected: {d['groups']}")
+
+
+def mode_zero(rows):
+    sharded = [r for r in rows if r["sharding"] != "none"]
+    plain = [r for r in rows if r["sharding"] == "none"]
+    require(sharded and plain, "zero grid needs sharded and unsharded rows")
+    for r in sharded:
+        require(r["rs_ms"] > 0, f"sharded row must price a reduce-scatter: {r}")
+        require(r["ag_ms"] > 0, f"sharded row must price an allgather: {r}")
+        require(r["bubble_pct"] == 0, f"sharded rows have no pipeline bubble: {r}")
+        require("zero-" in r["scenario"], f"sharded row name lacks zero tag: {r}")
+
+
+def check_degeneration(sweep_csv, control_csv):
+    """`sharding=none` rows of the sweep must be byte-identical to the
+    rows of a control sweep run without the sharding axis at all."""
+    with open(control_csv) as f:
+        control = {line.split(",", 1)[0]: line for line in f.read().splitlines() if "," in line}
+    with open(sweep_csv) as f:
+        lines = f.read().splitlines()
+    header = lines[0].split(",")
+    require("sharding" in header, f"{sweep_csv}: no sharding column")
+    shard_idx = header.index("sharding")
+    checked = 0
+    for line in lines[1:]:
+        parts = line.split(",")
+        if parts[shard_idx] != "none":
+            continue
+        name = parts[0]
+        require(
+            name in control,
+            f"degeneration: scenario {name!r} absent from control sweep",
+        )
+        require(
+            control[name] == line,
+            f"degeneration: sharding=none row differs from the control run\n"
+            f"  sweep:   {line}\n  control: {control[name]}",
+        )
+        checked += 1
+    require(checked > 0, "degeneration: no sharding=none rows to compare")
+    print(f"check_bench: degeneration OK ({checked} bit-exact rows)")
+
+
+def mode_crossover(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    require(rows, "crossover must emit at least one frontier row")
+    for r in rows:
+        require(float(r["samples_per_s"]) > 0, f"unpriced frontier row: {r}")
+        if r["sharding"] == "none":
+            require(
+                int(r["stages"]) * int(r["tensor"]) >= 8,
+                f"unsharded winner must actually model-parallelize: {r}",
+            )
+        else:
+            require(float(r["rs_ms"]) > 0 and float(r["ag_ms"]) > 0, f"{r}")
+    machines = {r["machine"] for r in rows}
+    require(len(machines) >= 2, f"frontier should span machines: {machines}")
+    modes = {r["mode"] for r in rows}
+    require(
+        "zero" in modes,
+        f"ZeRO sharding must win at least one (machine, nodes) cell: {modes}",
+    )
+    require(
+        "pipeline" in modes,
+        f"a pipeline must win at least one (machine, nodes) cell: {modes}",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("file", help="BENCH_*.json or crossover.csv to validate")
+    ap.add_argument("--mode", choices=["hybrid", "3d", "zero", "crossover"])
+    ap.add_argument("--degenerate-csv", help="control sweep CSV (no sharding axis)")
+    ap.add_argument("--sweep-csv", default="results/sweep.csv",
+                    help="sweep CSV holding the sharding=none rows to compare")
+    args = ap.parse_args()
+
+    if args.mode == "crossover":
+        mode_crossover(args.file)
+        print(f"check_bench: {args.file} OK (crossover)")
+        return
+
+    with open(args.file) as f:
+        d = json.load(f)
+    bench = d.get("bench")
+    if bench == "sweep":
+        rows = check_sweep(d, args.file)
+        require(
+            d["cost_cache"]["hit_rate"] > 0,
+            f"{args.file}: warmed+frozen evaluation must hit the cost cache: "
+            f"{d['cost_cache']}",
+        )
+        if args.mode == "hybrid":
+            mode_hybrid(rows)
+        elif args.mode == "3d":
+            mode_3d(rows, d)
+        elif args.mode == "zero":
+            mode_zero(rows)
+            if args.degenerate_csv:
+                check_degeneration(args.sweep_csv, args.degenerate_csv)
+    elif bench == "runtime_hotpath":
+        check_hotpath(d, args.file)
+    else:
+        fail(f"{args.file}: unknown bench kind {bench!r}")
+    print(f"check_bench: {args.file} OK" + (f" ({args.mode})" if args.mode else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,10 @@
 //! Horovod fusion-buffer size, FP16 gradient compression — swept on the
 //! DragonFly+ model. `cargo bench --bench collectives_ablation`.
 
-use booster::collectives::{bucketed_allreduce_time_uncached, Algo, Compression};
+use booster::collectives::{
+    bucketed_allgather_time, bucketed_allreduce_time, bucketed_allreduce_time_uncached,
+    bucketed_reduce_scatter_time, Algo, Compression,
+};
 use booster::scenario::ExperimentContext;
 use booster::util::table::Table;
 
@@ -65,14 +68,42 @@ fn main() {
         ]);
     }
     out.push_str(&t.render());
+    out.push('\n');
 
-    // Table rows are priced with the cache bypassed so sub-percent deltas
-    // reflect the model, never interpolation error (the cost-cache speedup
-    // itself is measured in the runtime_hotpath bench). The shared route
-    // table still serves every simulation:
+    // ZeRO's per-step exchange vs the plain allreduce: the sharded step
+    // replaces AR(4 B/param grads) with RS(4 B/param) + AG(2 B/param bf16
+    // params) — ~0.75x the allreduce wire time on the same pattern.
+    let mut t = Table::new(&["model size", "allreduce", "rs + ag (ZeRO)", "ratio"])
+        .with_title("ZeRO exchange vs allreduce (hierarchical, 64 MB buckets)");
+    for params in [25e6, 335e6, 1.5e9] {
+        let grads = vec![params * 4.0];
+        let wparams = vec![params * 2.0];
+        let ar = bucketed_allreduce_time(&model, &gpus, &grads, 64e6, Compression::None, Algo::Hierarchical)
+            .unwrap();
+        let rs = bucketed_reduce_scatter_time(&model, &gpus, &grads, 64e6, Compression::None, Algo::Hierarchical)
+            .unwrap();
+        let ag = bucketed_allgather_time(&model, &gpus, &wparams, 64e6, Compression::None, Algo::Hierarchical)
+            .unwrap();
+        t.row(&[
+            format!("{:.0}M params", params / 1e6),
+            format!("{:.2} ms", ar * 1e3),
+            format!("{:.2} ms", (rs + ag) * 1e3),
+            format!("{:.2}x", (rs + ag) / ar),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Ablation tables are priced with the cache bypassed so sub-percent
+    // deltas reflect the model, never interpolation error (the cost-cache
+    // speedup itself is measured in the runtime_hotpath bench); the ZeRO
+    // table deliberately goes through the cached path because RS/AG
+    // sharing the allreduce's size curve *is* the design under test. The
+    // shared route table still serves every simulation:
     let (rhits, rmisses) = model.route_stats();
+    let (chits, cmisses) = model.cache_stats();
     out.push_str(&format!(
-        "\nall rows fully simulated (cache bypassed); \
+        "\nablation rows fully simulated (cache bypassed); ZeRO rows cached \
+         ({chits} hits / {cmisses} sims); \
          route table: {rhits} hits / {rmisses} routes interned\n",
     ));
     print!("{out}");

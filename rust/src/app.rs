@@ -72,13 +72,15 @@ pub fn commands() -> Vec<Command> {
         Command {
             name: "sweep",
             about: "run a scenario grid (--param key=v1,v2) over machines/scales/parallelism \
-                    (incl. 3D data×pipeline×tensor: stages/tensor/microbatches/schedule)",
+                    (3D data×pipeline×tensor: stages/tensor/microbatches/schedule; ZeRO state \
+                    sharding: sharding=none|optimizer|optimizer+grads)",
             run: crate::report::cmd_sweep,
         },
         Command {
             name: "crossover",
-            about: "sweep stages×tensor×nodes for a pipelining-mandatory workload across all \
-                    machine presets and emit the throughput-optimal parallelism frontier (§2.3)",
+            about: "price pure-DP vs pipeline (stages×tensor×microbatches) vs ZeRO sharding \
+                    per (machine, nodes) cell for a memory-bound workload and emit the \
+                    three-way throughput-optimal frontier (§2.3)",
             run: crate::report::cmd_crossover,
         },
     ]
@@ -167,6 +169,38 @@ mod tests {
         ])
         .unwrap_err();
         assert!(err.to_string().contains("microbatches"), "{err}");
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_sharding_value_up_front() {
+        // The satellite contract: `--param sharding=<typo>` fails during
+        // grid validation — before any simulation — and the error teaches
+        // the full valid value set.
+        let err = crate::report::cmd_sweep(&[
+            "--param".to_string(),
+            "sharding=zero3".to_string(),
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        for v in ["none", "optimizer", "optimizer+grads"] {
+            assert!(msg.contains(v), "error must list '{v}': {msg}");
+        }
+    }
+
+    #[test]
+    fn crossover_rejects_none_in_the_sharding_arm() {
+        let err = crate::report::cmd_crossover(&[
+            "--sharding".to_string(),
+            "none".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("pure-DP baseline"), "{err}");
+        let err = crate::report::cmd_crossover(&[
+            "--sharding".to_string(),
+            "zero9".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown sharding"), "{err}");
     }
 
     #[test]

@@ -627,6 +627,39 @@ impl<'a> CollectiveModel<'a> {
     pub fn algbw(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
         Ok(bytes / self.allreduce_time(gpus, bytes, algo)?)
     }
+
+    /// Time for one reduce-scatter of `bytes` over `gpus`: every rank ends
+    /// with its reduced `1/n` shard.
+    ///
+    /// Every modeled algorithm's allreduce is a reduce-scatter followed by
+    /// its mirror-image allgather — a ring runs `(n−1)` reduce-scatter
+    /// rounds then `(n−1)` allgather rounds of the same flow pattern,
+    /// halving–doubling mirrors its rounds exactly, and the hierarchical
+    /// phases split the same way — so the half-collective costs **half
+    /// the fabric time of the full allreduce**, plus one launch overhead.
+    /// The ZeRO sharded-optimizer step is priced from this
+    /// ([`crate::train::zero`]).
+    ///
+    /// Deliberately implemented *on top of* [`CollectiveModel::allreduce_time`]
+    /// so reduce-scatter and allgather share the allreduce's cached
+    /// `(gpu set, algo)` size curve: a warm allreduce pattern serves both
+    /// halves with zero extra flow simulations, and
+    /// `reduce_scatter + allgather == allreduce + LAUNCH_OVERHEAD` holds
+    /// to float rounding (the extra overhead being the second kernel
+    /// launch).
+    pub fn reduce_scatter_time(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        let full = self.allreduce_time(gpus, bytes, algo)?;
+        Ok((full - LAUNCH_OVERHEAD) * 0.5 + LAUNCH_OVERHEAD)
+    }
+
+    /// Time for one allgather of `bytes` (the full gathered size) over
+    /// `gpus`: every rank starts with its `1/n` shard and ends with the
+    /// whole buffer. Mirror image of
+    /// [`CollectiveModel::reduce_scatter_time`] — identical cost, same
+    /// shared cache curve.
+    pub fn allgather_time(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
+        self.reduce_scatter_time(gpus, bytes, algo)
+    }
 }
 
 /// Horovod-style fusion buckets: greedily pack tensors (bytes) into buckets
@@ -726,6 +759,49 @@ pub fn bucketed_allreduce_time(
     let mut total = 0.0;
     for b in wire_buckets(tensor_bytes, bucket_bytes, compression) {
         total += model.allreduce_time(gpus, b, algo)?;
+    }
+    Ok(total)
+}
+
+/// Time for a bucketed, optionally compressed **reduce-scatter** of a
+/// gradient set — the first half of the ZeRO sharded-optimizer step
+/// ([`crate::train::zero`]): gradients are reduced and every rank keeps
+/// only its `1/n` shard. Same wire-size-first bucketing as
+/// [`bucketed_allreduce_time`]; each bucket pays half the allreduce
+/// fabric time plus one launch overhead
+/// ([`CollectiveModel::reduce_scatter_time`]).
+pub fn bucketed_reduce_scatter_time(
+    model: &CollectiveModel,
+    gpus: &[GpuId],
+    tensor_bytes: &[f64],
+    bucket_bytes: f64,
+    compression: Compression,
+    algo: Algo,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in wire_buckets(tensor_bytes, bucket_bytes, compression) {
+        total += model.reduce_scatter_time(gpus, b, algo)?;
+    }
+    Ok(total)
+}
+
+/// Time for a bucketed **allgather** of a parameter set — the second half
+/// of the ZeRO step: each rank broadcasts its updated `1/n` parameter
+/// shard so everyone holds the full working copy again. `tensor_bytes`
+/// are already wire-sized (the working-precision parameters), so
+/// `compression` normally stays [`Compression::None`]; it is accepted for
+/// symmetry with the other bucketed collectives.
+pub fn bucketed_allgather_time(
+    model: &CollectiveModel,
+    gpus: &[GpuId],
+    tensor_bytes: &[f64],
+    bucket_bytes: f64,
+    compression: Compression,
+    algo: Algo,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in wire_buckets(tensor_bytes, bucket_bytes, compression) {
+        total += model.allgather_time(gpus, b, algo)?;
     }
     Ok(total)
 }
@@ -879,6 +955,89 @@ mod tests {
         bucketed_allreduce_time(&m2, &gpus, &tensors, 64e6, fp16, Algo::Ring).unwrap();
         let (hits, misses) = m2.cache_stats();
         assert_eq!((hits, misses), (2, 2), "4 buckets of 2 distinct sizes");
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_is_one_allreduce() {
+        // The half-collective identity the ZeRO cost model rests on:
+        // RS + AG of the same volume == allreduce + one extra launch
+        // overhead, bit-exactly, for every algorithm.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(32).unwrap();
+        for algo in [Algo::Ring, Algo::HalvingDoubling, Algo::Hierarchical] {
+            let ar = m.allreduce_time(&gpus, 256e6, algo).unwrap();
+            let rs = m.reduce_scatter_time(&gpus, 256e6, algo).unwrap();
+            let ag = m.allgather_time(&gpus, 256e6, algo).unwrap();
+            assert_eq!(rs, ag, "{algo:?}: mirror halves cost the same");
+            let want = ar + LAUNCH_OVERHEAD;
+            assert!(
+                (rs + ag - want).abs() <= 1e-12 * want,
+                "{algo:?}: rs {rs} + ag {ag} != allreduce {ar} + launch"
+            );
+            assert!(rs < ar, "{algo:?}: half collective must be cheaper");
+            assert!(rs > LAUNCH_OVERHEAD, "{algo:?}: fabric time must show");
+        }
+    }
+
+    #[test]
+    fn half_collectives_share_the_allreduce_cache_curve() {
+        // reduce_scatter/allgather are defined on top of allreduce_time so
+        // they read the same (gpu set, algo) size curve: after the two
+        // allreduce span probes, RS and AG queries at in-span sizes are
+        // pure cache hits — zero extra simulations.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16).unwrap();
+        m.allreduce_time(&gpus, 64e6, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 256e6, Algo::Ring).unwrap();
+        let (_, misses_warm) = m.cache_stats();
+        m.reduce_scatter_time(&gpus, 128e6, Algo::Ring).unwrap();
+        m.allgather_time(&gpus, 200e6, Algo::Ring).unwrap();
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(misses, misses_warm, "half collectives must not simulate");
+        assert!(hits >= 2, "both queries served by the warm curve");
+    }
+
+    #[test]
+    fn degenerate_half_collectives_cost_only_the_launch() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let one = t.first_gpus(1).unwrap();
+        assert_eq!(
+            m.reduce_scatter_time(&one, 1e9, Algo::Ring).unwrap(),
+            LAUNCH_OVERHEAD
+        );
+        let gpus = t.first_gpus(8).unwrap();
+        assert_eq!(
+            m.allgather_time(&gpus, 0.0, Algo::Ring).unwrap(),
+            LAUNCH_OVERHEAD
+        );
+    }
+
+    #[test]
+    fn bucketed_half_collectives_follow_wire_buckets() {
+        // Same wire-size-first bucketing as the allreduce: 100 x 4 MB at
+        // 64 MB buckets under fp16 -> 4 buckets, each half the allreduce
+        // fabric time plus one launch.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(32).unwrap();
+        let tensors = vec![4e6; 100];
+        let rs = bucketed_reduce_scatter_time(
+            &m, &gpus, &tensors, 64e6, Compression::Fp16, Algo::Ring,
+        )
+        .unwrap();
+        let want = 3.0 * m.reduce_scatter_time(&gpus, 64e6, Algo::Ring).unwrap()
+            + m.reduce_scatter_time(&gpus, 8e6, Algo::Ring).unwrap();
+        assert!((rs - want).abs() <= 1e-12 * want, "rs {rs} want {want}");
+        let ar = bucketed_allreduce_time(&m, &gpus, &tensors, 64e6, Compression::Fp16, Algo::Ring)
+            .unwrap();
+        assert!(rs < ar, "reduce-scatter is half the allreduce work");
+        let ag =
+            bucketed_allgather_time(&m, &gpus, &tensors, 64e6, Compression::None, Algo::Ring)
+                .unwrap();
+        assert!(ag > rs, "uncompressed allgather moves twice the wire bytes");
     }
 
     #[test]

@@ -22,11 +22,13 @@
 //! `booster sweep --param key=v1,v2` ([`scenario::sweep`]) and the §2.3
 //! `booster crossover` frontier study: every point is priced by the 3D
 //! data×pipeline×tensor [`train::hybrid::HybridTimeline`] (built on
-//! [`train::layout::ParallelLayout`]) through one shared, cached,
-//! `Send + Sync` [`collectives::CollectiveModel`] — machine groups run
-//! on parallel threads and each machine's grid is sharded across
-//! workers over a pre-warmed frozen cache. The schema and preset
-//! numbers are documented in `rust/src/scenario/README.md`.
+//! [`train::layout::ParallelLayout`]; scenarios with `sharding != none`
+//! dispatch to the ZeRO sharded-state step of [`train::zero`], trading
+//! the pipeline bubble for reduce-scatter + allgather traffic) through
+//! one shared, cached, `Send + Sync` [`collectives::CollectiveModel`] —
+//! machine groups run on parallel threads and each machine's grid is
+//! sharded across workers over a pre-warmed frozen cache. The schema and
+//! preset numbers are documented in `rust/src/scenario/README.md`.
 
 pub mod app;
 pub mod collectives;

@@ -171,12 +171,12 @@ pub fn cmd_topo(args: &[String]) -> Result<i32> {
 }
 
 /// `booster sweep` — runexp-style scenario grid over machines, workloads,
-/// scales, precisions, collective settings and 3D
+/// scales, precisions, collective settings, 3D
 /// (data×pipeline×tensor) parallelism (`stages`, `tensor`,
-/// `microbatches`, `schedule`). Machine groups evaluate on parallel
-/// threads and each machine's grid is sharded across workers sharing one
-/// pre-warmed cost cache; emits a combined CSV plus
-/// `results/BENCH_sweep.json`.
+/// `microbatches`, `schedule`) and ZeRO-style state sharding
+/// (`sharding`). Machine groups evaluate on parallel threads and each
+/// machine's grid is sharded across workers sharing one pre-warmed cost
+/// cache; emits a combined CSV plus `results/BENCH_sweep.json`.
 pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .str_flag("machine", "juwels_booster", "base machine preset")
@@ -191,6 +191,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .int_flag("tensor", 1, "base tensor-parallel group size per stage (1 = none)")
         .int_flag("microbatches", 1, "base microbatches per step per replica")
         .str_flag("schedule", "gpipe", "base microbatch schedule (gpipe|1f1b)")
+        .str_flag("sharding", "none", "base state sharding (none|optimizer|optimizer+grads)")
         .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
         .bool_flag("list", false, "list presets and sweepable keys, then exit")
         .bool_flag("help", false, "show help");
@@ -201,6 +202,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("example: booster sweep --param nodes=48,96 --param precision=bf16,tf32");
         println!("example: booster sweep --param stages=1,2,4 --param machine=juwels_booster,leonardo");
         println!("example: booster sweep --nodes 4 --param tensor=1,2,4 --param stages=1,4");
+        println!("example: booster sweep --nodes 2 --param sharding=none,optimizer,optimizer+grads");
         return Ok(0);
     }
     if flags.get_bool("list") {
@@ -224,6 +226,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .tensor_parallel(flags.get_usize("tensor"))
         .microbatches(flags.get_usize("microbatches"))
         .schedule(flags.get_str("schedule"))
+        .sharding(flags.get_str("sharding"))
         .build()?;
     let outcome = sweep::run(&base, &axes)?;
 
@@ -235,7 +238,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     );
     let mut t = Table::new(&[
         "scenario", "gpus", "algo", "comp", "d·p·t x mb", "bubble %", "compute ms", "comm ms",
-        "tp ms", "step ms", "samples/s", "kJ/step",
+        "rs ms", "ag ms", "tp ms", "step ms", "samples/s", "kJ/step",
     ]);
     for r in &outcome.rows {
         let replicas = r.gpus / (r.stages * r.tensor).max(1);
@@ -248,6 +251,8 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             format!("{:.1}", r.bubble_pct),
             format!("{:.3}", r.compute_ms),
             format!("{:.3}", r.comm_ms),
+            format!("{:.3}", r.rs_ms),
+            format!("{:.3}", r.ag_ms),
             format!("{:.3}", r.tp_comm_ms),
             format!("{:.3}", r.step_ms),
             format!("{:.0}", r.samples_per_s),
@@ -286,21 +291,30 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     Ok(0)
 }
 
-/// `booster crossover` — the §2.3 study the pipeline module advertises:
-/// sweep `stages × tensor × nodes` for a pipelining-mandatory workload
-/// (default `gpt3_175b`) across every machine preset and emit the
-/// throughput-optimal parallelism frontier. Parallelism shapes that a
-/// machine cannot host (divisibility, tensor-per-node) are skipped
-/// silently; shapes that fail the memory fit at pricing time are
-/// reported as infeasible. Writes `results/crossover.{txt,csv}`.
+/// `booster crossover` — the §2.3 study the pipeline and ZeRO modules
+/// advertise: for a workload that outgrows device memory (default
+/// `gpt3_175b`), price **three** answers per (machine, nodes) cell across
+/// every machine preset — the pure data-parallel baseline (expected
+/// memory-infeasible), deep pipelines (`stages × tensor × microbatches`,
+/// paying the bubble) and ZeRO-style state sharding (`tensor × sharding`,
+/// paying per-step reduce-scatter + allgather) — and emit the
+/// throughput-optimal frontier. Parallelism shapes that a machine cannot
+/// host (divisibility, tensor-per-node) are skipped silently; shapes that
+/// fail the per-rank memory fit at pricing time are reported as
+/// infeasible. Writes `results/crossover.{txt,csv}`.
 pub fn cmd_crossover(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .str_flag("workload", "gpt3_175b", "workload preset to cross over")
         .str_flag("nodes", "32,64,128", "comma-separated node counts")
         .str_flag("stages", "32,64,128", "comma-separated pipeline stage counts")
         .str_flag("tensor", "1,2,4", "comma-separated tensor group sizes")
-        .int_flag("microbatches", 8, "microbatches per step per replica")
+        .str_flag("microbatches", "8,64", "comma-separated pipeline fill depths")
         .str_flag("schedule", "1f1b", "microbatch schedule (gpipe|1f1b)")
+        .str_flag(
+            "sharding",
+            "optimizer+grads",
+            "comma-separated ZeRO arm sharding modes (optimizer|optimizer+grads)",
+        )
         .bool_flag("help", false, "show help");
     let spec_flags = spec.clone().parse(args)?;
     if spec_flags.get_bool("help") {
@@ -322,17 +336,34 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
     let nodes_list = parse_list("nodes")?;
     let stages_list = parse_list("stages")?;
     let tensor_list = parse_list("tensor")?;
+    let micro_list = parse_list("microbatches")?;
     let workload = presets::workload(spec_flags.get_str("workload"))?;
     // Shape-independent flags are validated up front so a typo'd
-    // --schedule or a zero --microbatches fails loudly here instead of
+    // --schedule, --sharding or a zero count fails loudly here instead of
     // being silently counted below as "machine-incompatible".
     crate::pipeline::Schedule::parse(spec_flags.get_str("schedule"))?;
-    if spec_flags.get_usize("microbatches") == 0 {
-        return Err(BoosterError::Config("--microbatches must be > 0".into()));
+    let sharding_list: Vec<String> = spec_flags
+        .get_str("sharding")
+        .split(',')
+        .map(|v| v.trim().to_string())
+        .collect();
+    for mode in &sharding_list {
+        let parsed = crate::train::zero::Sharding::parse(mode)?;
+        if !parsed.is_sharded() {
+            return Err(BoosterError::Config(
+                "--sharding lists the ZeRO arm's modes; 'none' is already priced by the \
+                 pure-DP baseline and the pipeline arm"
+                    .into(),
+            ));
+        }
     }
-    if nodes_list.contains(&0) || stages_list.contains(&0) || tensor_list.contains(&0) {
+    if nodes_list.contains(&0)
+        || stages_list.contains(&0)
+        || tensor_list.contains(&0)
+        || micro_list.contains(&0)
+    {
         return Err(BoosterError::Config(
-            "--nodes/--stages/--tensor values must be > 0".into(),
+            "--nodes/--stages/--tensor/--microbatches values must be > 0".into(),
         ));
     }
 
@@ -341,32 +372,59 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
     // tensor must divide the node, nodes must fit the machine), so
     // per-combination build errors — which after the up-front checks can
     // only be those shape incompatibilities — are skipped, not fatal.
+    // Three arms per (machine, nodes) cell: the pure-DP baseline, the
+    // pipeline shapes, and the ZeRO shapes.
     let mut points: Vec<sweep::Point> = Vec::new();
     let mut skipped_static = 0usize;
     for machine_name in presets::machine_names() {
         for &nodes in &nodes_list {
+            let mut push = |built: Result<ScenarioSpec>, kind: &str| match built {
+                Ok(s) => {
+                    let asg = vec![
+                        ("machine".to_string(), machine_name.to_string()),
+                        ("nodes".to_string(), nodes.to_string()),
+                        ("arm".to_string(), kind.to_string()),
+                    ];
+                    points.push((s, asg));
+                }
+                Err(_) => skipped_static += 1,
+            };
+            // Pure data parallelism: the baseline the workload outgrew.
+            push(
+                ScenarioSpec::builder(presets::machine(machine_name)?)
+                    .workload(workload.clone())
+                    .nodes(nodes)
+                    .build(),
+                "dp",
+            );
             for &stages in &stages_list {
                 for &tensor in &tensor_list {
-                    let built = ScenarioSpec::builder(presets::machine(machine_name)?)
-                        .workload(workload.clone())
-                        .nodes(nodes)
-                        .pipeline_stages(stages)
-                        .tensor_parallel(tensor)
-                        .microbatches(spec_flags.get_usize("microbatches"))
-                        .schedule(spec_flags.get_str("schedule"))
-                        .build();
-                    match built {
-                        Ok(s) => {
-                            let asg = vec![
-                                ("machine".to_string(), machine_name.to_string()),
-                                ("nodes".to_string(), nodes.to_string()),
-                                ("stages".to_string(), stages.to_string()),
-                                ("tensor".to_string(), tensor.to_string()),
-                            ];
-                            points.push((s, asg));
-                        }
-                        Err(_) => skipped_static += 1,
+                    for &microbatches in &micro_list {
+                        push(
+                            ScenarioSpec::builder(presets::machine(machine_name)?)
+                                .workload(workload.clone())
+                                .nodes(nodes)
+                                .pipeline_stages(stages)
+                                .tensor_parallel(tensor)
+                                .microbatches(microbatches)
+                                .schedule(spec_flags.get_str("schedule"))
+                                .build(),
+                            "pipeline",
+                        );
                     }
+                }
+            }
+            for &tensor in &tensor_list {
+                for mode in &sharding_list {
+                    push(
+                        ScenarioSpec::builder(presets::machine(machine_name)?)
+                            .workload(workload.clone())
+                            .nodes(nodes)
+                            .tensor_parallel(tensor)
+                            .sharding(mode)
+                            .build(),
+                        "zero",
+                    );
                 }
             }
         }
@@ -378,9 +436,18 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
     }
     let outcome = sweep::run_points(&points, 0)?;
     let frontier = sweep::throughput_frontier(&outcome.rows);
+    let mode_of = |r: &sweep::SweepRow| {
+        if r.sharding != "none" {
+            "zero"
+        } else if r.stages > 1 {
+            "pipeline"
+        } else {
+            "dp"
+        }
+    };
 
     let mut out = format!(
-        "data-parallel vs 3D-parallel crossover: {} ({} shapes priced, \
+        "pure-DP vs pipeline vs ZeRO crossover: {} ({} shapes priced, \
          {} machine-incompatible skipped, {} memory-infeasible)\n\n",
         workload.name,
         outcome.rows.len(),
@@ -388,12 +455,13 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
         outcome.infeasible.len()
     );
     let mut t = Table::new(&[
-        "machine", "nodes", "gpus", "d·p·t", "mb", "bubble %", "tp ms", "step ms", "samples/s",
+        "machine", "nodes", "gpus", "mode", "d·p·t", "mb", "sharding", "bubble %", "rs ms",
+        "ag ms", "step ms", "samples/s",
     ])
     .with_title("throughput-optimal parallelism frontier (best shape per machine x scale)");
     let mut csv = String::from(
-        "machine,nodes,gpus,replicas,stages,tensor,microbatches,schedule,bubble_pct,\
-         tp_comm_ms,step_ms,samples_per_s\n",
+        "machine,nodes,gpus,mode,replicas,stages,tensor,microbatches,schedule,sharding,\
+         bubble_pct,tp_comm_ms,rs_ms,ag_ms,step_ms,samples_per_s\n",
     );
     for &i in &frontier {
         let r = &outcome.rows[i];
@@ -402,34 +470,59 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
             r.machine.clone(),
             r.nodes.to_string(),
             r.gpus.to_string(),
+            mode_of(r).to_string(),
             format!("{}·{}·{}", replicas, r.stages, r.tensor),
             r.microbatches.to_string(),
+            r.sharding.clone(),
             format!("{:.1}", r.bubble_pct),
-            format!("{:.3}", r.tp_comm_ms),
+            format!("{:.3}", r.rs_ms),
+            format!("{:.3}", r.ag_ms),
             format!("{:.3}", r.step_ms),
             format!("{:.0}", r.samples_per_s),
         ]);
         csv.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.1}\n",
+            "{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.1}\n",
             r.machine,
             r.nodes,
             r.gpus,
+            mode_of(r),
             replicas,
             r.stages,
             r.tensor,
             r.microbatches,
             r.schedule,
+            r.sharding,
             r.bubble_pct,
             r.tp_comm_ms,
+            r.rs_ms,
+            r.ag_ms,
             r.step_ms,
             r.samples_per_s,
         ));
     }
     out.push_str(&t.render());
+    let zero_cells = frontier.iter().filter(|&&i| mode_of(&outcome.rows[i]) == "zero").count();
+    let pipe_cells = frontier
+        .iter()
+        .filter(|&&i| mode_of(&outcome.rows[i]) == "pipeline")
+        .count();
+    out.push_str(&format!(
+        "\nfrontier: {} cell(s) won by ZeRO sharding, {} by pipelines, {} by pure DP\n",
+        zero_cells,
+        pipe_cells,
+        frontier.len() - zero_cells - pipe_cells
+    ));
     if !outcome.infeasible.is_empty() {
+        let dp_infeasible = outcome
+            .infeasible
+            .iter()
+            .filter(|(n, _)| !n.contains("/p") && !n.contains("/zero-"))
+            .count();
         out.push_str(&format!(
-            "\n{} shape(s) were memory-infeasible at pricing time (first: {})\n",
+            "{} shape(s) were memory-infeasible at pricing time ({} of them the pure-DP \
+             baseline; first: {})\n",
             outcome.infeasible.len(),
+            dp_infeasible,
             outcome.infeasible[0].0
         ));
     }

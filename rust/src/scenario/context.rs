@@ -86,6 +86,15 @@ impl ExperimentContext {
         HybridTimeline::from_scenario(&self.spec, &self.topo)
     }
 
+    /// A ZeRO sharded-state timeline configured from the scenario
+    /// (`parallelism.sharding` / `tensor_parallel` on top of the timeline
+    /// settings). At `sharding=none` it degenerates exactly to
+    /// [`ExperimentContext::timeline`]'s step cost; requires
+    /// `pipeline_stages == 1`.
+    pub fn zero_timeline(&self) -> Result<crate::train::zero::ZeroTimeline<'_>> {
+        crate::train::zero::ZeroTimeline::from_scenario(&self.spec, &self.topo)
+    }
+
     /// The job's GPUs under the scenario's node count and placement.
     pub fn job_gpus(&self) -> Result<Vec<GpuId>> {
         self.spec.job_gpus(&self.topo)
@@ -183,6 +192,25 @@ mod tests {
         let st = hy.step_time(&gpus, batch, &mut rng).unwrap();
         assert_eq!(st.replicas, 4, "16 GPUs / 4 stages");
         assert!(st.bubble_fraction > 0.0);
+    }
+
+    #[test]
+    fn zero_timeline_matches_the_scenario_shape() {
+        let spec = ScenarioSpec::builder(presets::machine("leonardo").unwrap())
+            .nodes(4)
+            .tensor_parallel(2)
+            .sharding("optimizer")
+            .build()
+            .unwrap();
+        let ctx = ExperimentContext::new(spec).unwrap();
+        let z = ctx.zero_timeline().unwrap();
+        assert_eq!(z.sharding, crate::train::zero::Sharding::Optimizer);
+        assert_eq!(z.tensor, 2);
+        let gpus = ctx.job_gpus().unwrap();
+        let mut rng = crate::util::rng::Rng::seed_from(0);
+        let st = z.step_time(&gpus, ctx.spec.workload.batch_per_gpu, &mut rng).unwrap();
+        assert_eq!(st.replicas, 8, "16 GPUs / 2 tensor");
+        assert!(st.rs > 0.0 && st.ag > 0.0);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   evaluation behind `booster sweep` and `booster crossover` (every
 //!   point priced by the 3D data×pipeline×tensor
 //!   [`crate::train::hybrid::HybridTimeline`], which degenerates exactly
-//!   to the data-parallel timeline at `stages=1, tensor=1`).
+//!   to the data-parallel timeline at `stages=1, tensor=1` and
+//!   dispatches to the ZeRO sharded-state step of
+//!   [`crate::train::zero`] when the scenario sets `sharding != none`).
 //!
 //! See `rust/src/scenario/README.md` for the spec schema, the preset
 //! numbers with paper citations, and how the context threads the §Perf

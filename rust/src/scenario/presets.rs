@@ -199,10 +199,12 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             layers: 4, // stacked convLSTM cells
             layer_allreduce_bytes_per_sample: 2.0e6,
         },
-        // The paper's §2.3 motivation for pipelining: a GPT-3-175B-class
-        // model (2.8 TB Adam state) that *cannot* run purely data-parallel
-        // on any 40-96 GB GPU — `pipeline_stages` is mandatory, enabling
-        // the data-parallel vs pipeline-parallel crossover study.
+        // The paper's §2.3 motivation for model parallelism: a
+        // GPT-3-175B-class model (2.8 TB Adam state) that *cannot* run
+        // purely data-parallel on any 40-96 GB GPU — either deep
+        // `pipeline_stages` or ZeRO `sharding=optimizer+grads` is
+        // mandatory, enabling the three-way pure-DP vs pipeline vs ZeRO
+        // crossover study (`booster crossover`).
         "gpt3_175b" => WorkloadSpec {
             name: "gpt3_175b".into(),
             fwd_flops_per_sample: 2.0 * 175e9 * 2048.0, // 2*params per token, seq 2048
@@ -297,6 +299,20 @@ mod tests {
         let m = w.pipelined_model();
         assert!(m.min_stages(40e9) >= 70, "min stages {}", m.min_stages(40e9));
         assert!(m.min_stages(96e9) >= 29, "even GH200 needs deep pipelines");
+    }
+
+    #[test]
+    fn gpt3_preset_fits_under_full_zero_sharding() {
+        // The other §2.3 answer: the same 2.8 TB state fits 40 GB GPUs at
+        // 128-way ZeRO optimizer+grads sharding (~22 GB/rank + streamed
+        // working weights), while ZeRO-1's 6 B/param resident floor
+        // (~1 TB) never does — the shape of the three-way crossover.
+        use crate::train::zero::{resident_state_bytes, Sharding};
+        let m = workload("gpt3_175b").unwrap().pipelined_model();
+        let full = resident_state_bytes(&m, Sharding::OptimizerGrads, 128, 1);
+        assert!(full < 40e9, "{} GB must fit an A100-40GB", full / 1e9);
+        let zero1 = resident_state_bytes(&m, Sharding::Optimizer, 128, 1);
+        assert!(zero1 > 96e9, "ZeRO-1 keeps ~1 TB resident: {} GB", zero1 / 1e9);
     }
 
     #[test]

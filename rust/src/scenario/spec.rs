@@ -439,6 +439,13 @@ pub struct ParallelismSpec {
     /// Microbatch schedule key (see [`crate::pipeline::Schedule::parse`]):
     /// `"gpipe"` or `"1f1b"`.
     pub schedule: String,
+    /// ZeRO-style optimizer-state sharding key (see
+    /// [`crate::train::zero::Sharding::parse`]): `"none"`, `"optimizer"`
+    /// (ZeRO-1) or `"optimizer+grads"` (ZeRO-2/FSDP). Sharding is the
+    /// *alternative* to deep pipelines, so `sharding != none` is
+    /// validated incompatible with `pipeline_stages > 1` (and with
+    /// `microbatches > 1`) for now.
+    pub sharding: String,
 }
 
 impl ParallelismSpec {
@@ -460,12 +467,14 @@ impl ParallelismSpec {
             ("tensor_parallel", Json::Num(self.tensor_parallel as f64)),
             ("microbatches", Json::Num(self.microbatches as f64)),
             ("schedule", Json::Str(self.schedule.clone())),
+            ("sharding", Json::Str(self.sharding.clone())),
         ])
     }
 
     /// Deserialize. The hybrid fields default to pure data parallelism
-    /// (`stages=1`, `tensor_parallel=1`, `microbatches=1`, gpipe) when
-    /// absent so pre-hybrid and pre-3D spec files still load.
+    /// (`stages=1`, `tensor_parallel=1`, `microbatches=1`, gpipe,
+    /// `sharding=none`) when absent so pre-hybrid, pre-3D and pre-ZeRO
+    /// spec files still load.
     pub fn from_json(j: &Json) -> Result<ParallelismSpec> {
         Ok(ParallelismSpec {
             nodes: req_usize(j, "nodes")?,
@@ -478,6 +487,11 @@ impl ParallelismSpec {
             tensor_parallel: opt_usize(j, "tensor_parallel", 1)?,
             microbatches: opt_usize(j, "microbatches", 1)?,
             schedule: opt_str(j, "schedule", "gpipe")?,
+            // Aliases canonicalize at load so the stored string is always
+            // the canonical key (unknowns pass through for validate()).
+            sharding: crate::train::zero::Sharding::canonicalize(&opt_str(
+                j, "sharding", "none",
+            )?),
         })
     }
 }
@@ -537,6 +551,7 @@ impl ScenarioSpec {
             tensor_parallel: 1,
             microbatches: 1,
             schedule: "gpipe".into(),
+            sharding: "none".into(),
             precision: "fp16_tc".into(),
         }
     }
@@ -627,6 +642,21 @@ impl ScenarioSpec {
             ));
         }
         crate::pipeline::Schedule::parse(&p.schedule)?;
+        let sharding = crate::train::zero::Sharding::parse(&p.sharding)?;
+        if sharding.is_sharded() && p.pipeline_stages > 1 {
+            return fail(format!(
+                "sharding '{}' is incompatible with pipeline_stages {} — ZeRO-style \
+                 state sharding and deep pipelines are priced as alternatives (for now)",
+                p.sharding, p.pipeline_stages
+            ));
+        }
+        if sharding.is_sharded() && p.microbatches > 1 {
+            return fail(format!(
+                "sharding '{}' is incompatible with microbatches {} — the sharded step \
+                 is not microbatched",
+                p.sharding, p.microbatches
+            ));
+        }
         Precision::parse(&self.precision)?;
         Ok(())
     }
@@ -668,11 +698,18 @@ impl ScenarioSpec {
         crate::pipeline::Schedule::parse(&self.parallelism.schedule)
     }
 
+    /// Resolved sharding mode.
+    pub fn sharding(&self) -> Result<crate::train::zero::Sharding> {
+        crate::train::zero::Sharding::parse(&self.parallelism.sharding)
+    }
+
     /// Canonical auto-generated scenario name:
     /// `machine/workload/nN/precision`, with a `/pSxM-schedule` suffix
-    /// when the scenario actually pipelines and a further `-tT` suffix
-    /// when it tensor-parallelizes. Used by the builder default and by
-    /// the sweep driver when it renames grid points.
+    /// when the scenario actually pipelines, a further `-tT` suffix when
+    /// it tensor-parallelizes, and a `/zero-<mode>` suffix when it shards
+    /// optimizer state (absent at `sharding=none` so pre-ZeRO names stay
+    /// stable). Used by the builder default and by the sweep driver when
+    /// it renames grid points.
     pub fn auto_name(&self) -> String {
         let mut name = format!(
             "{}/{}/n{}/{}",
@@ -687,6 +724,9 @@ impl ScenarioSpec {
             if p.tensor_parallel > 1 {
                 name.push_str(&format!("-t{}", p.tensor_parallel));
             }
+        }
+        if p.sharding != "none" {
+            name.push_str(&format!("/zero-{}", p.sharding));
         }
         name
     }
@@ -732,6 +772,7 @@ pub struct ScenarioBuilder {
     tensor_parallel: usize,
     microbatches: usize,
     schedule: String,
+    sharding: String,
     precision: String,
 }
 
@@ -808,6 +849,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// ZeRO-style state-sharding key (`none`, `optimizer` or
+    /// `optimizer+grads`).
+    pub fn sharding(mut self, s: &str) -> Self {
+        self.sharding = s.to_string();
+        self
+    }
+
     /// Precision key.
     pub fn precision(mut self, p: &str) -> Self {
         self.precision = p.to_string();
@@ -834,6 +882,7 @@ impl ScenarioBuilder {
                 tensor_parallel: self.tensor_parallel,
                 microbatches: self.microbatches,
                 schedule: self.schedule,
+                sharding: crate::train::zero::Sharding::canonicalize(&self.sharding),
             },
             precision: self.precision,
         };
@@ -947,6 +996,7 @@ mod tests {
         assert_eq!(p.tensor_parallel, 1);
         assert_eq!(p.microbatches, 1);
         assert_eq!(p.schedule, "gpipe");
+        assert_eq!(p.sharding, "none", "pre-ZeRO specs load unsharded");
         let legacy_w = r#"{"name":"bert","fwd_flops_per_sample":343e9,"params":335e6,
             "batch_per_gpu":24,"efficiency":0.12}"#;
         let w = WorkloadSpec::from_json(&Json::parse(legacy_w).unwrap()).unwrap();
@@ -998,6 +1048,86 @@ mod tests {
         // tensor=1 keeps pre-3D names so existing CSV rows stay stable.
         let flat = ScenarioSpec::builder(m).nodes(2).pipeline_stages(4).build().unwrap();
         assert!(flat.name.ends_with("/p4x1-gpipe"), "{}", flat.name);
+    }
+
+    #[test]
+    fn sharding_fields_roundtrip_and_validate() {
+        // JSON round-trip of every sharding value, names stable at none.
+        for sharding in ["none", "optimizer", "optimizer+grads"] {
+            let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+                .nodes(4)
+                .sharding(sharding)
+                .build()
+                .unwrap();
+            assert_eq!(spec.parallelism.sharding, sharding);
+            if sharding == "none" {
+                assert!(!spec.name.contains("zero"), "{}", spec.name);
+            } else {
+                assert!(spec.name.ends_with(&format!("/zero-{sharding}")), "{}", spec.name);
+            }
+            let j = spec.to_json().to_string();
+            let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(spec, back, "sharding={sharding} did not round-trip");
+            assert_eq!(
+                back.sharding().unwrap(),
+                crate::train::zero::Sharding::parse(sharding).unwrap()
+            );
+        }
+
+        // The builder rejects sharding composed with a pipeline (and with
+        // microbatching) — they are priced as alternatives for now.
+        let m = presets::machine("juwels_booster").unwrap();
+        let err = ScenarioSpec::builder(m.clone())
+            .nodes(4)
+            .pipeline_stages(4)
+            .microbatches(4)
+            .sharding("optimizer")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("incompatible with pipeline_stages"), "{err}");
+        let err = ScenarioSpec::builder(m.clone())
+            .nodes(4)
+            .microbatches(4)
+            .sharding("optimizer+grads")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("incompatible with microbatches"), "{err}");
+
+        // Unknown values fail with the full valid set listed.
+        let err = ScenarioSpec::builder(m.clone()).sharding("zero3").build().unwrap_err();
+        let msg = err.to_string();
+        for v in ["none", "optimizer", "optimizer+grads"] {
+            assert!(msg.contains(v), "error must list '{v}': {msg}");
+        }
+        // Sharding composes fine with tensor parallelism.
+        ScenarioSpec::builder(m)
+            .nodes(4)
+            .tensor_parallel(2)
+            .sharding("optimizer")
+            .build()
+            .expect("sharding x tensor is a valid shape");
+    }
+
+    #[test]
+    fn sharding_aliases_canonicalize_everywhere() {
+        // Regression: "off"/"zero2" must not leak into the stored spec —
+        // auto-naming, sweep rows and check_bench.py compare the literal
+        // string, so an alias would mislabel an unsharded run as sharded.
+        let m = presets::machine("juwels_booster").unwrap();
+        let off = ScenarioSpec::builder(m.clone()).nodes(4).sharding("off").build().unwrap();
+        assert_eq!(off.parallelism.sharding, "none");
+        assert!(!off.name.contains("zero"), "{}", off.name);
+        let z2 = ScenarioSpec::builder(m).nodes(4).sharding("zero2").build().unwrap();
+        assert_eq!(z2.parallelism.sharding, "optimizer+grads");
+        assert!(z2.name.ends_with("/zero-optimizer+grads"), "{}", z2.name);
+        // The JSON loader canonicalizes too.
+        let legacy = r#"{"nodes":4,"placement":"compact","algo":"ring",
+            "compression":"none","bucket_bytes":64000000,"overlap":0.7,
+            "sharding":"zero1"}"#;
+        let p = ParallelismSpec::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(p.sharding, "optimizer");
     }
 
     #[test]

@@ -55,7 +55,7 @@ pub struct ParamAxis {
 }
 
 /// Scenario fields a sweep may vary.
-pub const SWEEPABLE_KEYS: [&str; 13] = [
+pub const SWEEPABLE_KEYS: [&str; 14] = [
     "machine",
     "workload",
     "nodes",
@@ -69,6 +69,7 @@ pub const SWEEPABLE_KEYS: [&str; 13] = [
     "tensor",
     "microbatches",
     "schedule",
+    "sharding",
 ];
 
 /// Group comma-split `--param` entries back into axes. The flag parser
@@ -157,6 +158,12 @@ pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()
         "tensor" => spec.parallelism.tensor_parallel = value.parse().map_err(|_| bad_num())?,
         "microbatches" => spec.parallelism.microbatches = value.parse().map_err(|_| bad_num())?,
         "schedule" => spec.parallelism.schedule = value.to_string(),
+        "sharding" => {
+            // Canonicalize aliases (off/zero1/zero2) so row columns, the
+            // /zero- name suffix and check_bench.py all see one spelling;
+            // unknown values pass through for spec validation to reject.
+            spec.parallelism.sharding = crate::train::zero::Sharding::canonicalize(value);
+        }
         _ => {
             return Err(BoosterError::Config(format!(
                 "unknown sweep key '{key}' (sweepable: {})",
@@ -198,12 +205,20 @@ pub struct SweepRow {
     pub microbatches: usize,
     /// Microbatch schedule key.
     pub schedule: String,
+    /// ZeRO-style state-sharding key (`none`, `optimizer`,
+    /// `optimizer+grads`).
+    pub sharding: String,
     /// Pipeline bubble fraction as a percentage (0 at stages=1, mb=1).
     pub bubble_pct: f64,
     /// Slowest-rank compute time per step, ms.
     pub compute_ms: f64,
-    /// Full gradient allreduce time per step, ms.
+    /// Gradient-exchange time per step, ms: the allreduce at
+    /// `sharding=none`, `rs_ms + ag_ms` when sharded.
     pub comm_ms: f64,
+    /// Gradient reduce-scatter time per step, ms (0 unless sharded).
+    pub rs_ms: f64,
+    /// Parameter allgather time per step, ms (0 unless sharded).
+    pub ag_ms: f64,
     /// Tensor-group (intra-layer) allreduce time on the step's critical
     /// path, ms (0 at tensor=1; already included in compute_ms).
     pub tp_comm_ms: f64,
@@ -257,12 +272,13 @@ impl SweepOutcome {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "scenario,machine,workload,nodes,gpus,precision,algo,compression,placement,\
-             bucket_mb,stages,tensor,microbatches,schedule,bubble_pct,\
-             compute_ms,comm_ms,tp_comm_ms,step_ms,samples_per_s,step_energy_kj\n",
+             bucket_mb,stages,tensor,microbatches,schedule,sharding,bubble_pct,\
+             compute_ms,comm_ms,rs_ms,ag_ms,tp_comm_ms,step_ms,samples_per_s,step_energy_kj\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.1},{:.3}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},\
+                 {:.4},{:.4},{:.1},{:.3}\n",
                 r.scenario,
                 r.machine,
                 r.workload,
@@ -277,9 +293,12 @@ impl SweepOutcome {
                 r.tensor,
                 r.microbatches,
                 r.schedule,
+                r.sharding,
                 r.bubble_pct,
                 r.compute_ms,
                 r.comm_ms,
+                r.rs_ms,
+                r.ag_ms,
                 r.tp_comm_ms,
                 r.step_ms,
                 r.samples_per_s,
@@ -320,9 +339,12 @@ impl SweepOutcome {
                         ("tensor", Json::Num(r.tensor as f64)),
                         ("microbatches", Json::Num(r.microbatches as f64)),
                         ("schedule", Json::Str(r.schedule.clone())),
+                        ("sharding", Json::Str(r.sharding.clone())),
                         ("bubble_pct", Json::Num(r.bubble_pct)),
                         ("compute_ms", Json::Num(r.compute_ms)),
                         ("comm_ms", Json::Num(r.comm_ms)),
+                        ("rs_ms", Json::Num(r.rs_ms)),
+                        ("ag_ms", Json::Num(r.ag_ms)),
                         ("tp_comm_ms", Json::Num(r.tp_comm_ms)),
                         ("step_ms", Json::Num(r.step_ms)),
                         ("samples_per_s", Json::Num(r.samples_per_s)),
@@ -462,9 +484,12 @@ fn eval_points<'t>(
             tensor: spec.parallelism.tensor_parallel,
             microbatches: spec.parallelism.microbatches,
             schedule: spec.parallelism.schedule.clone(),
+            sharding: spec.parallelism.sharding.clone(),
             bubble_pct: st.bubble_fraction * 100.0,
             compute_ms: st.compute * 1e3,
             comm_ms: st.comm * 1e3,
+            rs_ms: st.rs * 1e3,
+            ag_ms: st.ag * 1e3,
             tp_comm_ms: st.tp_comm * 1e3,
             step_ms: st.total * 1e3,
             samples_per_s: samples / st.total,
@@ -889,6 +914,140 @@ mod tests {
             assert_eq!(a.comm_ms, b.comm_ms);
             assert_eq!(a.compute_ms, b.compute_ms);
         }
+    }
+
+    #[test]
+    fn sharding_axis_sweeps_and_reports_rs_ag() {
+        let mut base = presets::default_scenario("juwels_booster").unwrap();
+        base.parallelism.nodes = 2; // 8 GPUs
+        let axes =
+            parse_params(&s(&["sharding=none", "optimizer", "optimizer+grads"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 3);
+        for r in &out.rows {
+            assert!(r.step_ms > 0.0, "{r:?}");
+            assert_eq!(r.bubble_pct, 0.0, "sharded steps have no bubble: {r:?}");
+            if r.sharding == "none" {
+                assert_eq!((r.rs_ms, r.ag_ms), (0.0, 0.0), "{r:?}");
+                assert!(r.comm_ms > 0.0);
+            } else {
+                assert!(r.rs_ms > 0.0, "sharded rows must price a reduce-scatter: {r:?}");
+                assert!(r.ag_ms > 0.0, "sharded rows must price an allgather: {r:?}");
+                let sum = r.rs_ms + r.ag_ms;
+                assert!((r.comm_ms - sum).abs() <= 1e-9 * sum, "{r:?}");
+                assert!(r.scenario.contains("/zero-"), "{}", r.scenario);
+            }
+        }
+        // ZeRO-1 and ZeRO-2 move the same wire bytes: identical comm.
+        assert_eq!(out.rows[1].rs_ms, out.rows[2].rs_ms);
+        assert_eq!(out.rows[1].ag_ms, out.rows[2].ag_ms);
+
+        // The sharding=none row is bit-identical to a sweep without the
+        // sharding axis at all — the degeneracy contract at sweep level.
+        let flat = run(&base, &[]).unwrap();
+        assert_eq!(flat.rows.len(), 1);
+        assert_eq!(out.rows[0].step_ms, flat.rows[0].step_ms);
+        assert_eq!(out.rows[0].comm_ms, flat.rows[0].comm_ms);
+        assert_eq!(out.rows[0].compute_ms, flat.rows[0].compute_ms);
+        assert_eq!(out.rows[0].scenario, flat.rows[0].scenario);
+    }
+
+    #[test]
+    fn sharding_param_aliases_canonicalize() {
+        let mut spec = presets::default_scenario("juwels_booster").unwrap();
+        apply_param(&mut spec, "sharding", "zero2").unwrap();
+        assert_eq!(spec.parallelism.sharding, "optimizer+grads");
+        apply_param(&mut spec, "sharding", "off").unwrap();
+        assert_eq!(spec.parallelism.sharding, "none");
+    }
+
+    #[test]
+    fn bad_sharding_value_fails_up_front_with_the_valid_set() {
+        let base = presets::default_scenario("juwels_booster").unwrap();
+        let axes = parse_params(&s(&["sharding=none", "zero3"])).unwrap();
+        let err = run(&base, &axes).unwrap_err().to_string();
+        for v in ["none", "optimizer", "optimizer+grads"] {
+            assert!(err.contains(v), "error must list '{v}': {err}");
+        }
+        // Sharding composed with a pipeline axis is statically invalid.
+        let axes = parse_params(&s(&["sharding=optimizer", "stages=4"])).unwrap();
+        let err = run(&base, &axes).unwrap_err().to_string();
+        assert!(err.contains("incompatible with pipeline_stages"), "{err}");
+    }
+
+    #[test]
+    fn crossover_frontier_is_three_way() {
+        // The acceptance contract for `booster crossover`: with the ZeRO
+        // arm in the grid, the frontier must contain at least one cell
+        // won by sharding and one won by a pipeline — the machine fabric
+        // flips the winner. The compute-dense GH200 preset (Isambard-AI)
+        // races through the 175B step and is throttled by ZeRO's per-step
+        // RS/AG of the full gradient, so a deep-microbatch pipeline wins
+        // there; the A100-40GB booster computes ~3x slower on the same
+        // fabric, hides most of the (tensor-sharded, concurrent-group)
+        // RS/AG under it, and prefers bubble-free ZeRO. The pure-DP point
+        // is priced too and must be reported memory-infeasible.
+        let workload = presets::workload("gpt3_175b").unwrap();
+        let mut points: Vec<Point> = Vec::new();
+        for machine in ["juwels_booster", "isambard_ai"] {
+            // Pure DP: infeasible on every preset GPU (2.8 TB state).
+            let dp = ScenarioSpec::builder(presets::machine(machine).unwrap())
+                .workload(workload.clone())
+                .nodes(32)
+                .build()
+                .unwrap();
+            points.push((dp, vec![]));
+            // Pipeline arm (mirrors the crossover defaults, incl. the
+            // microbatch axis — shallow fills lose to ZeRO everywhere).
+            for stages in [32usize, 64, 128] {
+                for tensor in [1usize, 2, 4] {
+                    for microbatches in [8usize, 64] {
+                        if let Ok(spec) =
+                            ScenarioSpec::builder(presets::machine(machine).unwrap())
+                                .workload(workload.clone())
+                                .nodes(32)
+                                .pipeline_stages(stages)
+                                .tensor_parallel(tensor)
+                                .microbatches(microbatches)
+                                .schedule("1f1b")
+                                .build()
+                        {
+                            points.push((spec, vec![]));
+                        }
+                    }
+                }
+            }
+            // ZeRO arm.
+            for tensor in [1usize, 2, 4] {
+                let spec = ScenarioSpec::builder(presets::machine(machine).unwrap())
+                    .workload(workload.clone())
+                    .nodes(32)
+                    .tensor_parallel(tensor)
+                    .sharding("optimizer+grads")
+                    .build()
+                    .unwrap();
+                points.push((spec, vec![]));
+            }
+        }
+        let out = run_points(&points, 0).unwrap();
+        assert!(
+            out.infeasible.iter().any(|(name, _)| !name.contains("zero-") && !name.contains("/p")),
+            "the pure-DP point must be reported infeasible: {:?}",
+            out.infeasible
+        );
+        let frontier = throughput_frontier(&out.rows);
+        assert_eq!(frontier.len(), 2, "one winner per (machine, nodes) cell");
+        let winners: Vec<&SweepRow> = frontier.iter().map(|&i| &out.rows[i]).collect();
+        assert!(
+            winners.iter().any(|r| r.sharding != "none"),
+            "ZeRO must win at least one cell: {:?}",
+            winners.iter().map(|r| &r.scenario).collect::<Vec<_>>()
+        );
+        assert!(
+            winners.iter().any(|r| r.stages > 1),
+            "a pipeline must win at least one cell: {:?}",
+            winners.iter().map(|r| &r.scenario).collect::<Vec<_>>()
+        );
     }
 
     #[test]

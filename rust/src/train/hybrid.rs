@@ -42,8 +42,9 @@ use std::sync::Arc;
 use crate::collectives::{bucketed_allreduce_time, CollectiveModel};
 use crate::pipeline::{self, PipelinedModel, Schedule};
 use crate::topology::{GpuId, Topology};
-use crate::train::layout::ParallelLayout;
+use crate::train::layout::{chain_signature, ParallelLayout};
 use crate::train::timeline::TimelineModel;
+use crate::train::zero::{self, Sharding};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -52,9 +53,14 @@ use crate::util::rng::Rng;
 pub struct HybridStepTime {
     /// Slowest-replica pipeline time, after straggler sampling.
     pub compute: f64,
-    /// Slowest gradient group's cross-replica allreduce (before overlap
-    /// accounting).
+    /// Slowest gradient group's cross-replica exchange (before overlap
+    /// accounting): the allreduce at `sharding=none`, `rs + ag` when the
+    /// scenario shards optimizer state.
     pub comm: f64,
+    /// Gradient reduce-scatter share of `comm` (0 unless sharded).
+    pub rs: f64,
+    /// Parameter allgather share of `comm` (0 unless sharded).
+    pub ag: f64,
     /// Tensor-parallel allreduce seconds on the step's critical path
     /// (already inside `compute`'s pipeline slots; 0 at `tensor = 1`).
     pub tp_comm: f64,
@@ -105,6 +111,11 @@ pub struct HybridTimeline<'t> {
     pub microbatches: usize,
     /// Microbatch schedule.
     pub schedule: Schedule,
+    /// ZeRO-style state sharding. When not [`Sharding::None`] the spec
+    /// validation guarantees `stages = microbatches = 1` and the step is
+    /// priced by [`crate::train::zero`] — reduce-scatter + allgather over
+    /// the data-parallel group instead of a pipeline + allreduce.
+    pub sharding: Sharding,
     /// The model being pipelined.
     pub model: PipelinedModel,
 }
@@ -136,6 +147,7 @@ impl<'t> HybridTimeline<'t> {
             tensor: 1,
             microbatches: 1,
             schedule: Schedule::GPipe,
+            sharding: Sharding::None,
             model: spec.workload.pipelined_model(),
         };
         h.configure_pipeline(spec)?;
@@ -155,6 +167,7 @@ impl<'t> HybridTimeline<'t> {
         self.tensor = spec.parallelism.tensor_parallel;
         self.microbatches = spec.parallelism.microbatches;
         self.schedule = spec.schedule()?;
+        self.sharding = spec.sharding()?;
         self.model = spec.workload.pipelined_model();
         Ok(())
     }
@@ -186,38 +199,16 @@ impl<'t> HybridTimeline<'t> {
         vec![self.model.params * 4.0 / layout.gpus_per_replica() as f64]
     }
 
-    /// Topological signature of a replica's GPU chain: one class per
-    /// consecutive GPU pair — same node / same leaf / same cell /
-    /// inter-cell. Link bandwidths and latencies are homogeneous within a
-    /// class, so two replicas with equal signatures price identically;
-    /// pricing one representative per distinct signature covers the
-    /// slowest replica exactly (a `stages × tensor` extent that does not
-    /// align with node or cell boundaries makes *middle* replicas
+    /// Topological signature of a replica's GPU chain
+    /// ([`chain_signature`]): two replicas with equal signatures price
+    /// identically, so one representative per distinct signature covers
+    /// the slowest replica exactly (a `stages × tensor` extent that does
+    /// not align with node or cell boundaries makes *middle* replicas
     /// straddle fabric levels the first and last do not). The chain walks
     /// the replica in stage-major order, so it distinguishes straddling
     /// tensor groups as well as straddling stage boundaries.
     fn replica_signature(topo: &Topology, replica: &[GpuId]) -> Vec<u8> {
-        let p = &topo.params;
-        let nodes_per_leaf = p.nodes_per_cell / p.leaves_per_cell;
-        replica
-            .windows(2)
-            .map(|w| {
-                let (a, b) = (w[0].node, w[1].node);
-                if a == b {
-                    return 0;
-                }
-                if a / p.nodes_per_cell != b / p.nodes_per_cell {
-                    return 3;
-                }
-                let la = (a % p.nodes_per_cell) / nodes_per_leaf;
-                let lb = (b % p.nodes_per_cell) / nodes_per_leaf;
-                if la == lb {
-                    1
-                } else {
-                    2
-                }
-            })
-            .collect()
+        chain_signature(topo, replica)
     }
 
     /// Per-microbatch tensor-group allreduce seconds for replica `r`:
@@ -281,6 +272,16 @@ impl<'t> HybridTimeline<'t> {
     ///
     /// [`step_time`]: HybridTimeline::step_time
     pub fn warm_comm(&self, gpus: &[GpuId], batch_per_gpu: usize) -> Result<()> {
+        if self.sharding.is_sharded() {
+            return zero::warm_queries(
+                &self.timeline,
+                &self.model,
+                self.sharding,
+                self.tensor,
+                gpus,
+                batch_per_gpu,
+            );
+        }
         let layout = self.layout(gpus.len())?;
         let micro_size = self.micro_size(&layout, batch_per_gpu);
         let topo = self.timeline.topo;
@@ -308,6 +309,35 @@ impl<'t> HybridTimeline<'t> {
         batch_per_gpu: usize,
         rng: &mut Rng,
     ) -> Result<HybridStepTime> {
+        // A sharded scenario (validated to stages = microbatches = 1) is
+        // the ZeRO step: no pipeline, reduce-scatter + allgather instead
+        // of the gradient allreduce.
+        if self.sharding.is_sharded() {
+            let st = zero::priced_step(
+                &self.timeline,
+                &self.model,
+                self.sharding,
+                self.tensor,
+                gpus,
+                batch_per_gpu,
+                rng,
+            )?;
+            return Ok(HybridStepTime {
+                compute: st.compute,
+                comm: st.comm,
+                rs: st.rs,
+                ag: st.ag,
+                tp_comm: st.tp_comm,
+                total: st.total,
+                bubble_fraction: 0.0,
+                stage_time: st.compute,
+                transfer_time: 0.0,
+                replicas: st.replicas,
+                tensor: st.tensor,
+                microbatches: 1,
+                micro_size: st.micro_size,
+            });
+        }
         let layout = self.layout(gpus.len())?;
         let micro_size = self.micro_size(&layout, batch_per_gpu);
 
@@ -363,6 +393,8 @@ impl<'t> HybridTimeline<'t> {
         Ok(HybridStepTime {
             compute,
             comm,
+            rs: 0.0,
+            ag: 0.0,
             tp_comm: (self.microbatches as f64 + layout.pipeline as f64 - 1.0) * step.tensor_comm,
             total,
             bubble_fraction: step.bubble_fraction,
@@ -666,6 +698,76 @@ mod tests {
                 "{machine}: identical cache-op sequence"
             );
         }
+    }
+
+    // ---- ZeRO sharding dispatch ----------------------------------------
+
+    #[test]
+    fn sharded_scenarios_dispatch_to_the_zero_step() {
+        // A sharded spec priced through HybridTimeline must be bit-exact
+        // with the ZeroTimeline it dispatches to — same numbers, same rng
+        // draws, same cache ops — and must surface RS/AG with no bubble.
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .sharding("optimizer")
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        assert!(hy.sharding.is_sharded());
+        let z = crate::train::zero::ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+        let batch = spec.workload.batch_per_gpu;
+        let mut rng_a = Rng::seed_from(7);
+        let mut rng_b = Rng::seed_from(7);
+        let h = hy.step_time(&gpus, batch, &mut rng_a).unwrap();
+        let s = z.step_time(&gpus, batch, &mut rng_b).unwrap();
+        assert_eq!(h.compute, s.compute);
+        assert_eq!((h.rs, h.ag, h.comm, h.total), (s.rs, s.ag, s.comm, s.total));
+        assert!(h.rs > 0.0 && h.ag > 0.0);
+        assert_eq!(h.bubble_fraction, 0.0, "no pipeline, no bubble");
+        assert_eq!(h.replicas, gpus.len(), "t=1: every GPU is a replica");
+        assert_eq!(
+            hy.timeline.collectives.cache_stats(),
+            z.timeline.collectives.cache_stats(),
+            "identical cache-op sequence"
+        );
+    }
+
+    #[test]
+    fn unsharded_steps_report_zero_rs_ag() {
+        let spec = hybrid_spec(4, 8);
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let st = hy.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng).unwrap();
+        assert_eq!((st.rs, st.ag), (0.0, 0.0));
+        assert!(st.comm > 0.0);
+    }
+
+    #[test]
+    fn sharded_warm_comm_makes_step_fully_cached() {
+        // The sweep §Sync invariant holds through the dispatch: warming a
+        // sharded point replays exactly the RS/AG/tensor queries its
+        // step_time makes.
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .tensor_parallel(2)
+            .sharding("optimizer+grads")
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+        let batch = spec.workload.batch_per_gpu;
+        hy.warm_comm(&gpus, batch).unwrap();
+        let (_, warm_misses) = hy.timeline.collectives.cache_stats();
+        hy.timeline.collectives.freeze_cache(true);
+        let mut rng = Rng::seed_from(7);
+        hy.step_time(&gpus, batch, &mut rng).unwrap();
+        let (_, misses) = hy.timeline.collectives.cache_stats();
+        assert_eq!(misses, warm_misses, "sharded step after warm_comm must not simulate");
     }
 
     #[test]

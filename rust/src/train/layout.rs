@@ -109,6 +109,38 @@ impl ParallelLayout {
     }
 }
 
+/// Topological signature of a GPU chain: one class per consecutive pair —
+/// `0` same node, `1` same leaf, `2` same cell, `3` inter-cell. Link
+/// bandwidths and latencies are homogeneous within a class, so two GPU
+/// groups with equal signatures price identically under the fluid model;
+/// the hybrid and ZeRO timelines both dedup replica/group pricing on this
+/// (pricing one representative per distinct signature covers the slowest
+/// group exactly — a group extent that does not align with node or cell
+/// boundaries makes *middle* groups straddle fabric levels the first and
+/// last do not).
+pub fn chain_signature(topo: &crate::topology::Topology, gpus: &[GpuId]) -> Vec<u8> {
+    let p = &topo.params;
+    let nodes_per_leaf = p.nodes_per_cell / p.leaves_per_cell;
+    gpus.windows(2)
+        .map(|w| {
+            let (a, b) = (w[0].node, w[1].node);
+            if a == b {
+                return 0;
+            }
+            if a / p.nodes_per_cell != b / p.nodes_per_cell {
+                return 3;
+            }
+            let la = (a % p.nodes_per_cell) / nodes_per_leaf;
+            let lb = (b % p.nodes_per_cell) / nodes_per_leaf;
+            if la == lb {
+                1
+            } else {
+                2
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +217,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn chain_signature_classifies_fabric_levels() {
+        let topo = Topology::juwels_booster(); // 4 GPUs/node, 48/cell
+        let gpus = topo.first_gpus(8).unwrap();
+        // GPUs 0-3 share node 0, 4-7 share node 1 (same leaf).
+        let sig = chain_signature(&topo, &gpus);
+        assert_eq!(sig, vec![0, 0, 0, 1, 0, 0, 0]);
+        // Two GPUs in different cells -> inter-cell class.
+        let far = [GpuId { node: 0, gpu: 0 }, GpuId { node: 48, gpu: 0 }];
+        assert_eq!(chain_signature(&topo, &far), vec![3]);
+        // Equal-signature groups are the dedup unit: shifting a whole
+        // intra-node group by one node preserves the signature.
+        let a = chain_signature(&topo, &gpus[0..4]);
+        let b = chain_signature(&topo, &gpus[4..8]);
+        assert_eq!(a, b);
     }
 
     #[test]

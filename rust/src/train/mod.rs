@@ -18,15 +18,18 @@
 //!
 //! The simulated-machine cost models live next door: [`timeline`] prices
 //! pure data parallelism, [`layout`] carves a job along the three
-//! parallelism axes (data × pipeline × tensor), and [`hybrid`] composes
+//! parallelism axes (data × pipeline × tensor), [`hybrid`] composes
 //! the data-parallel timeline with the microbatch pipeline from
 //! [`crate::pipeline`] and Megatron-style tensor groups into the full
-//! 3D-parallel step cost.
+//! 3D-parallel step cost, and [`zero`] prices the ZeRO/FSDP alternative —
+//! optimizer-state sharding over the data-parallel group, trading the
+//! pipeline bubble for per-step reduce-scatter + allgather traffic.
 
 pub mod allreduce;
 pub mod hybrid;
 pub mod layout;
 pub mod timeline;
+pub mod zero;
 
 use std::time::Instant;
 

@@ -1,0 +1,773 @@
+//! ZeRO/FSDP-style optimizer-state sharding — the *second* §2.3 memory
+//! axis.
+//!
+//! "Large deep learning models may not fit on a single computational
+//! device, requiring an extension of the purely data-parallel approach to
+//! model parallelism or pipelining ... JSC supports DeepSpeed." Deep
+//! pipelines are one production answer to a model outgrowing device
+//! memory; DeepSpeed's ZeRO (and PyTorch FSDP) is the other: keep the
+//! step data-parallel but shard the training state across the
+//! data-parallel group, trading the pipeline *bubble* for per-step
+//! **gradient reduce-scatter + parameter allgather** traffic. Modeling
+//! both turns `booster crossover` into a genuine three-way frontier —
+//! pure-DP infeasible vs pipeline vs ZeRO — whose winner flips with the
+//! machine fabric (LEONARDO's 4×HDR100 injection vs Isambard-AI's GH200
+//! compute density, arXiv 2307.16885 / 2410.11199).
+//!
+//! # Memory model
+//!
+//! Of the workload's `state_bytes_per_param` (Adam mixed precision
+//! ≈ 16 B/param), a rank keeps resident, per parameter:
+//!
+//! | sharding          | resident per rank                 | 16 B/param example |
+//! |-------------------|-----------------------------------|--------------------|
+//! | `none`            | `S`                               | 16 B               |
+//! | `optimizer`       | `W + G + (S − W − G)/N`           | 6 B + 10 B / N     |
+//! | `optimizer+grads` | `S/N` + streamed working weights  | 16 B / N + 2·W·(params/layers) total |
+//!
+//! with `W = 2` B (bf16 working copy), `G = 4` B (the fused fp32
+//! gradient, matching `WorkloadSpec::grad_tensor_bytes`) and `N` the
+//! data-parallel group size. `optimizer` is ZeRO stage 1 (optimizer
+//! moments + fp32 master weights sharded); `optimizer+grads` is ZeRO
+//! stage 2 run FSDP-style — gradients and state fully sharded, the bf16
+//! working weights materialized layer-by-layer from the per-step
+//! allgather (double-buffered prefetch, so two layers' weights are the
+//! transient working set). Tensor parallelism further divides every
+//! per-rank term by `t`, exactly as in the pipeline memory fit.
+//!
+//! This **per-rank memory-fit check replaces the all-or-nothing pipeline
+//! fit**: a GPT-3-175B-class model (2.8 TB Adam state) that no preset GPU
+//! can hold data-parallel fits at `optimizer+grads` once `N ≥ ~80` on
+//! 40 GB parts — with zero pipeline bubble.
+//!
+//! # Communication model
+//!
+//! * `none`: the bucketed gradient allreduce of the plain data-parallel
+//!   timeline — **bit-exact** [`TimelineModel::step_time`] communication
+//!   volume (differential tests on every machine preset pin this).
+//! * sharded: per step, a bucketed **reduce-scatter** of the fused fp32
+//!   gradient (wire compression applies, as in the allreduce) followed by
+//!   a bucketed **allgather** of the updated bf16 working parameters,
+//!   both over the data-parallel group, priced through the shared
+//!   frozen-able [`CollectiveModel`]
+//!   ([`CollectiveModel::reduce_scatter_time`] — half the allreduce
+//!   fabric time, read from the same cached size curve). ZeRO-1 and
+//!   ZeRO-2 move the same wire bytes (they differ in what stays
+//!   *resident*), so both modes price the same `rs + ag`.
+//!
+//! With tensor parallelism the `(tensor rank k)` data-parallel groups are
+//! disjoint and reduce concurrently; the slowest group gates, mirroring
+//! the hybrid timeline's gradient groups. Overlap accounting and
+//! straggler sampling are the data-parallel timeline's own, so identical
+//! `(nominal, ranks, rng)` draws identical noise.
+
+use std::sync::Arc;
+
+use crate::collectives::{
+    bucketed_allgather_time, bucketed_allreduce_time, bucketed_reduce_scatter_time,
+    CollectiveModel, Compression,
+};
+use crate::pipeline::PipelinedModel;
+use crate::topology::{GpuId, Topology};
+use crate::train::layout::{chain_signature, ParallelLayout};
+use crate::train::timeline::TimelineModel;
+use crate::util::error::{BoosterError, Result};
+use crate::util::rng::Rng;
+
+/// Bytes per parameter of the working-precision (bf16/fp16) weight copy.
+pub const WORKING_WEIGHT_BYTES: f64 = 2.0;
+/// Bytes per parameter of the fused fp32 gradient (the wire tensor
+/// [`crate::scenario::spec::WorkloadSpec::grad_tensor_bytes`] prices).
+pub const GRAD_BYTES: f64 = 4.0;
+
+/// How much of the training state is sharded across the data-parallel
+/// group (the `sharding` field of
+/// [`crate::scenario::spec::ParallelismSpec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharding {
+    /// No sharding: every rank holds the full state (plain data
+    /// parallelism, gradient allreduce).
+    None,
+    /// ZeRO stage 1: optimizer moments + fp32 master weights sharded;
+    /// working weights and gradients stay resident.
+    Optimizer,
+    /// ZeRO stage 2 run FSDP-style: gradients and the whole training
+    /// state sharded; working weights streamed from the per-step
+    /// allgather.
+    OptimizerGrads,
+}
+
+impl Sharding {
+    /// Canonical scenario-spec key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Sharding::None => "none",
+            Sharding::Optimizer => "optimizer",
+            Sharding::OptimizerGrads => "optimizer+grads",
+        }
+    }
+
+    /// Parse a sharding key (case-insensitive). The error lists the full
+    /// valid value set so a typo'd `--param sharding=...` teaches the
+    /// vocabulary up front.
+    pub fn parse(s: &str) -> Result<Sharding> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(Sharding::None),
+            "optimizer" | "zero1" | "os" => Ok(Sharding::Optimizer),
+            "optimizer+grads" | "zero2" | "os+g" => Ok(Sharding::OptimizerGrads),
+            _ => Err(BoosterError::Config(format!(
+                "unknown sharding '{s}' (expected none, optimizer or optimizer+grads)"
+            ))),
+        }
+    }
+
+    /// Whether any state is sharded (i.e. the step pays reduce-scatter +
+    /// allgather instead of the allreduce).
+    pub fn is_sharded(self) -> bool {
+        self != Sharding::None
+    }
+
+    /// Canonical spelling of `s`: aliases (`off`, `zero1`, `zero2`, ...)
+    /// map to [`Sharding::key`] so every downstream string comparison —
+    /// auto-naming, sweep rows, the crossover's mode tag, check_bench.py
+    /// — sees one spelling. Unknown strings pass through unchanged for
+    /// `ScenarioSpec::validate` to reject with the full value set.
+    pub fn canonicalize(s: &str) -> String {
+        match Sharding::parse(s) {
+            Ok(v) => v.key().to_string(),
+            Err(_) => s.to_string(),
+        }
+    }
+}
+
+/// Resident training-state bytes per rank for a model sharded `sharding`
+/// across a data-parallel group of `data` ranks with `tensor`-way tensor
+/// parallelism (see the module docs for the per-mode breakdown).
+pub fn resident_state_bytes(
+    model: &PipelinedModel,
+    sharding: Sharding,
+    data: usize,
+    tensor: usize,
+) -> f64 {
+    let n = data.max(1) as f64;
+    let t = tensor.max(1) as f64;
+    match sharding {
+        Sharding::None => model.params * model.state_bytes_per_param / t,
+        Sharding::Optimizer => {
+            let resident = WORKING_WEIGHT_BYTES + GRAD_BYTES;
+            let sharded = (model.state_bytes_per_param - resident).max(0.0);
+            model.params * (resident + sharded / n) / t
+        }
+        Sharding::OptimizerGrads => {
+            // Fully sharded state + a double-buffered per-layer working
+            // copy of the bf16 weights streamed from the allgather.
+            let sharded = model.params * model.state_bytes_per_param / n;
+            let streamed =
+                2.0 * WORKING_WEIGHT_BYTES * model.params / model.layers.max(1) as f64;
+            (sharded + streamed) / t
+        }
+    }
+}
+
+/// Per-rank memory-fit check for a (possibly sharded) data-parallel step:
+/// resident state + the activation footprint of the per-GPU batch must
+/// fit the GPU's HBM. Returns the resident state bytes on success; the
+/// `Config` error names the sharding mode and the data-parallel group so
+/// sweep rows it skips read as "infeasible at this shape", matching the
+/// pipeline fit's reporting.
+pub fn memory_fit(
+    topo: &Topology,
+    model: &PipelinedModel,
+    sharding: Sharding,
+    layout: &ParallelLayout,
+    batch_per_gpu: usize,
+) -> Result<f64> {
+    let hbm = topo.node_spec.gpu.hbm_bytes as f64;
+    let state = resident_state_bytes(model, sharding, layout.data, layout.tensor);
+    let act = model.activation_bytes_per_sample * batch_per_gpu as f64;
+    if state + act > hbm {
+        return Err(BoosterError::Config(format!(
+            "data-parallel step does not fit: {:.1} GB resident state \
+             (sharding={}, {} ranks x {} tensor shards) + {:.1} GB activations \
+             > {:.0} GB HBM",
+            state / 1e9,
+            sharding.key(),
+            layout.data,
+            layout.tensor,
+            act / 1e9,
+            hbm / 1e9,
+        )));
+    }
+    Ok(state)
+}
+
+/// One ZeRO (or degenerate data-parallel) step's cost breakdown, seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ZeroStepTime {
+    /// Slowest-rank compute time (tensor-group allreduces included).
+    pub compute: f64,
+    /// Slowest gradient-group reduce-scatter (0 at `sharding=none`).
+    pub rs: f64,
+    /// Slowest parameter-group allgather (0 at `sharding=none`).
+    pub ag: f64,
+    /// Total step communication before overlap: `rs + ag` when sharded,
+    /// the gradient allreduce at `sharding=none`.
+    pub comm: f64,
+    /// Tensor-parallel allreduce seconds inside `compute` (0 at t=1).
+    pub tp_comm: f64,
+    /// Wall-clock step time after overlap.
+    pub total: f64,
+    /// Data-parallel group size the state is sharded across.
+    pub replicas: usize,
+    /// Tensor-parallel group size.
+    pub tensor: usize,
+    /// Samples one replica processes per step (`batch_per_gpu × tensor`).
+    pub micro_size: usize,
+    /// Resident per-rank training-state bytes under the sharding mode.
+    pub resident_bytes: f64,
+}
+
+/// Price one synchronous (ZeRO-)data-parallel step of `model` over `gpus`
+/// through `tl`'s collective model. Free function so both
+/// [`ZeroTimeline`] and [`crate::train::hybrid::HybridTimeline`] (which
+/// dispatches here when its scenario sets `sharding != none`) share one
+/// implementation.
+#[allow(clippy::too_many_arguments)]
+pub fn priced_step(
+    tl: &TimelineModel,
+    model: &PipelinedModel,
+    sharding: Sharding,
+    tensor: usize,
+    gpus: &[GpuId],
+    batch_per_gpu: usize,
+    rng: &mut Rng,
+) -> Result<ZeroStepTime> {
+    let layout = ParallelLayout::new(gpus.len(), 1, tensor)?;
+    let resident = memory_fit(tl.topo, model, sharding, &layout, batch_per_gpu)?;
+    let micro_size = (batch_per_gpu * layout.gpus_per_replica()).max(1);
+
+    // Tensor-group layer allreduces ride inside the compute, exactly as
+    // the hybrid timeline's single-slot (s=1, m=1) step charges them.
+    let tp_comm = tensor_comm(tl, model, &layout, gpus, micro_size)?;
+    let flops = 3.0 * model.fwd_flops_per_sample * micro_size as f64 / tensor as f64;
+    let nominal = tl.compute_time(flops) + tp_comm;
+    let compute = tl.slowest_rank_time(nominal, gpus.len(), rng);
+
+    let (rs, ag, comm) = grad_comm(tl, model, sharding, &layout, gpus)?;
+    let total = tl.exposed_step(compute, comm);
+    Ok(ZeroStepTime {
+        compute,
+        rs,
+        ag,
+        comm,
+        tp_comm,
+        total,
+        replicas: layout.data,
+        tensor: layout.tensor,
+        micro_size,
+        resident_bytes: resident,
+    })
+}
+
+/// Issue exactly the collective-cost queries one [`priced_step`] call
+/// makes — tensor-group allreduces for every distinct group signature,
+/// then the per-tensor-rank gradient collectives — without pricing the
+/// step or consuming randomness. The sweep driver replays a grid through
+/// this sequentially to warm the shared cache before freezing it (see
+/// `scenario::sweep`).
+pub fn warm_queries(
+    tl: &TimelineModel,
+    model: &PipelinedModel,
+    sharding: Sharding,
+    tensor: usize,
+    gpus: &[GpuId],
+    batch_per_gpu: usize,
+) -> Result<()> {
+    let layout = ParallelLayout::new(gpus.len(), 1, tensor)?;
+    let micro_size = (batch_per_gpu * layout.gpus_per_replica()).max(1);
+    tensor_comm(tl, model, &layout, gpus, micro_size)?;
+    grad_comm(tl, model, sharding, &layout, gpus)?;
+    Ok(())
+}
+
+/// Worst tensor-group layer-allreduce seconds for the step: every rank
+/// runs `2·layers` allreduces of the per-layer volume (fwd + bwd); one
+/// representative per distinct group signature is priced and the slowest
+/// gates. 0 — and no cache traffic — at `tensor = 1`.
+fn tensor_comm(
+    tl: &TimelineModel,
+    model: &PipelinedModel,
+    layout: &ParallelLayout,
+    gpus: &[GpuId],
+    micro_size: usize,
+) -> Result<f64> {
+    if layout.tensor == 1 {
+        return Ok(0.0);
+    }
+    let bytes = model.layer_allreduce_bytes_per_sample * micro_size as f64;
+    let per_step = 2.0 * model.layers as f64;
+    let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
+    let mut worst = 0.0f64;
+    for r in 0..layout.data {
+        let group = layout.tensor_group(gpus, r, 0);
+        if !seen.insert(chain_signature(tl.topo, group)) {
+            continue;
+        }
+        let t = tl.collectives.allreduce_time(group, bytes, tl.algo)?;
+        worst = worst.max(t);
+    }
+    Ok(per_step * worst)
+}
+
+/// `(rs, ag, comm)` of the step's gradient exchange: the bucketed
+/// allreduce at `sharding=none` (bit-exact with the plain timeline), the
+/// reduce-scatter + allgather pair when sharded. Per-tensor-rank groups
+/// are disjoint and reduce concurrently; the slowest gates.
+fn grad_comm(
+    tl: &TimelineModel,
+    model: &PipelinedModel,
+    sharding: Sharding,
+    layout: &ParallelLayout,
+    gpus: &[GpuId],
+) -> Result<(f64, f64, f64)> {
+    if layout.data <= 1 {
+        return Ok((0.0, 0.0, 0.0));
+    }
+    let grad_shard = vec![model.params * GRAD_BYTES / layout.tensor as f64];
+    let mut group = Vec::with_capacity(layout.data);
+    if !sharding.is_sharded() {
+        let mut comm = 0.0f64;
+        for k in 0..layout.tensor {
+            layout.data_group(gpus, 0, k, &mut group);
+            let t = bucketed_allreduce_time(
+                &tl.collectives,
+                &group,
+                &grad_shard,
+                tl.bucket_bytes,
+                tl.compression,
+                tl.algo,
+            )?;
+            comm = comm.max(t);
+        }
+        return Ok((0.0, 0.0, comm));
+    }
+    let param_shard = vec![model.params * WORKING_WEIGHT_BYTES / layout.tensor as f64];
+    let (mut rs, mut ag) = (0.0f64, 0.0f64);
+    for k in 0..layout.tensor {
+        layout.data_group(gpus, 0, k, &mut group);
+        let r = bucketed_reduce_scatter_time(
+            &tl.collectives,
+            &group,
+            &grad_shard,
+            tl.bucket_bytes,
+            tl.compression,
+            tl.algo,
+        )?;
+        // The gathered parameters are already wire-precision (bf16): no
+        // further compression applies.
+        let a = bucketed_allgather_time(
+            &tl.collectives,
+            &group,
+            &param_shard,
+            tl.bucket_bytes,
+            Compression::None,
+            tl.algo,
+        )?;
+        rs = rs.max(r);
+        ag = ag.max(a);
+    }
+    Ok((rs, ag, rs + ag))
+}
+
+/// Timeline for ZeRO-sharded (or plain) data-parallel training. Owns a
+/// [`TimelineModel`] (precision, efficiency, collective settings, jitter
+/// — and the shared, cached collective model) plus the sharding mode and
+/// tensor-parallel width. Built on [`ParallelLayout`] with
+/// `pipeline = 1`: the spec validation forbids combining `sharding` with
+/// `pipeline_stages > 1` (the crossover prices them as *alternatives*).
+#[derive(Debug)]
+pub struct ZeroTimeline<'t> {
+    /// The data-parallel cost model this sharded step composes with; its
+    /// `CollectiveModel` prices every reduce-scatter/allgather, so
+    /// keeping one `ZeroTimeline` alive across evaluations shares the
+    /// cost cache exactly like the sweep's hybrid path.
+    pub timeline: TimelineModel<'t>,
+    /// Sharding mode.
+    pub sharding: Sharding,
+    /// Tensor-parallel group size (1 = none).
+    pub tensor: usize,
+    /// The model whose state is sharded.
+    pub model: PipelinedModel,
+}
+
+impl<'t> ZeroTimeline<'t> {
+    /// Build from a scenario: timeline settings, sharding mode, tensor
+    /// width and model profile all come from the spec.
+    pub fn from_scenario(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<ZeroTimeline<'t>> {
+        Self::with_collectives(spec, topo, Arc::new(CollectiveModel::new(topo)))
+    }
+
+    /// [`ZeroTimeline::from_scenario`] on an existing (possibly shared)
+    /// collective model — the sweep's workers share one pre-warmed cache.
+    pub fn with_collectives(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+        collectives: Arc<CollectiveModel<'t>>,
+    ) -> Result<ZeroTimeline<'t>> {
+        let timeline = TimelineModel::from_scenario_shared(spec, topo, collectives)?;
+        let mut z = ZeroTimeline {
+            timeline,
+            sharding: Sharding::None,
+            tensor: 1,
+            model: spec.workload.pipelined_model(),
+        };
+        z.configure_sharding(spec)?;
+        Ok(z)
+    }
+
+    /// Reconfigure from another scenario without touching the owned
+    /// collective model's caches.
+    pub fn configure_from(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        self.timeline.configure_from(spec)?;
+        self.configure_sharding(spec)
+    }
+
+    fn configure_sharding(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        if spec.parallelism.pipeline_stages > 1 {
+            return Err(BoosterError::Config(format!(
+                "ZeroTimeline requires pipeline_stages == 1, scenario '{}' has {}",
+                spec.name, spec.parallelism.pipeline_stages
+            )));
+        }
+        self.sharding = Sharding::parse(&spec.parallelism.sharding)?;
+        self.tensor = spec.parallelism.tensor_parallel;
+        self.model = spec.workload.pipelined_model();
+        Ok(())
+    }
+
+    /// The layout this timeline induces on a job of `n` GPUs
+    /// (`data × 1 × tensor`).
+    pub fn layout(&self, n: usize) -> Result<ParallelLayout> {
+        ParallelLayout::new(n, 1, self.tensor)
+    }
+
+    /// Resident per-rank state bytes for a job of `n` GPUs.
+    pub fn resident_bytes(&self, n: usize) -> Result<f64> {
+        let layout = self.layout(n)?;
+        Ok(resident_state_bytes(
+            &self.model,
+            self.sharding,
+            layout.data,
+            layout.tensor,
+        ))
+    }
+
+    /// Replay the step's collective queries to warm a shared cache (see
+    /// [`warm_queries`]).
+    pub fn warm_comm(&self, gpus: &[GpuId], batch_per_gpu: usize) -> Result<()> {
+        warm_queries(
+            &self.timeline,
+            &self.model,
+            self.sharding,
+            self.tensor,
+            gpus,
+            batch_per_gpu,
+        )
+    }
+
+    /// Simulate one synchronous (sharded) data-parallel step over `gpus`.
+    /// At `sharding=none, tensor=1` this is **bit-exact** with
+    /// [`TimelineModel::step_time`] — same compute, same rng draws, same
+    /// collective queries (the differential tests pin every preset).
+    pub fn step_time(
+        &self,
+        gpus: &[GpuId],
+        batch_per_gpu: usize,
+        rng: &mut Rng,
+    ) -> Result<ZeroStepTime> {
+        priced_step(
+            &self.timeline,
+            &self.model,
+            self.sharding,
+            self.tensor,
+            gpus,
+            batch_per_gpu,
+            rng,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{presets, ScenarioSpec};
+    use crate::train::timeline::Jitter;
+
+    fn spec_with(machine: &str, sharding: &str) -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine(machine).unwrap())
+            .nodes(4)
+            .sharding(sharding)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn sharding_keys_roundtrip_and_error_lists_values() {
+        for s in [Sharding::None, Sharding::Optimizer, Sharding::OptimizerGrads] {
+            assert_eq!(Sharding::parse(s.key()).unwrap(), s);
+        }
+        assert_eq!(Sharding::parse("zero2").unwrap(), Sharding::OptimizerGrads);
+        let err = Sharding::parse("zero3").unwrap_err().to_string();
+        for v in ["none", "optimizer", "optimizer+grads"] {
+            assert!(err.contains(v), "error must list '{v}': {err}");
+        }
+    }
+
+    /// The acceptance contract: at sharding=none the ZeRO timeline IS the
+    /// data-parallel timeline — bit-exact compute, comm and total, on
+    /// every machine preset the crossover compares.
+    #[test]
+    fn degenerates_to_data_parallel_at_sharding_none() {
+        for machine in presets::machine_names() {
+            let spec = presets::default_scenario(machine).unwrap();
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
+            let z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+            assert_eq!(z.sharding, Sharding::None);
+            let mut rng_a = Rng::seed_from(7);
+            let mut rng_b = Rng::seed_from(7);
+            let a = tl
+                .step_time(
+                    &gpus,
+                    spec.workload.flops_per_gpu_step(),
+                    &spec.workload.grad_tensor_bytes(),
+                    &mut rng_a,
+                )
+                .unwrap();
+            let b = z
+                .step_time(&gpus, spec.workload.batch_per_gpu, &mut rng_b)
+                .unwrap();
+            assert_eq!(b.compute, a.compute, "{machine}: compute must be bit-exact");
+            assert_eq!(b.comm, a.comm, "{machine}: comm volume must be bit-exact");
+            assert_eq!(b.total, a.total, "{machine}: total must be bit-exact");
+            assert_eq!((b.rs, b.ag), (0.0, 0.0), "{machine}: no RS/AG at none");
+            assert_eq!(b.replicas, gpus.len());
+            // Identical collective-query sequence: a fresh data-parallel
+            // timeline replaying the same step sees the same cache ops.
+            let tl2 = TimelineModel::from_scenario(&spec, &topo).unwrap();
+            let mut rng_c = Rng::seed_from(7);
+            tl2.step_time(
+                &gpus,
+                spec.workload.flops_per_gpu_step(),
+                &spec.workload.grad_tensor_bytes(),
+                &mut rng_c,
+            )
+            .unwrap();
+            assert_eq!(
+                z.timeline.collectives.cache_stats(),
+                tl2.collectives.cache_stats(),
+                "{machine}: identical cache-op sequence"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_jitter_draws_match() {
+        let spec = presets::default_scenario("juwels_booster").unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let mut tl = TimelineModel::from_scenario(&spec, &topo).unwrap();
+        tl.jitter = Jitter::default_loader();
+        let mut z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+        z.timeline.jitter = Jitter::default_loader();
+        let mut rng_a = Rng::seed_from(42);
+        let mut rng_b = Rng::seed_from(42);
+        let a = tl
+            .step_time(
+                &gpus,
+                spec.workload.flops_per_gpu_step(),
+                &spec.workload.grad_tensor_bytes(),
+                &mut rng_a,
+            )
+            .unwrap();
+        let b = z
+            .step_time(&gpus, spec.workload.batch_per_gpu, &mut rng_b)
+            .unwrap();
+        assert_eq!(a.compute, b.compute, "identical rng consumption");
+        assert_eq!(a.total, b.total);
+    }
+
+    #[test]
+    fn resident_memory_math() {
+        let w = presets::workload("bert").unwrap(); // 335e6 params, 16 B
+        let m = w.pipelined_model();
+        let p = m.params;
+        let full = resident_state_bytes(&m, Sharding::None, 8, 1);
+        assert_eq!(full, p * 16.0);
+        // ZeRO-1: 6 B resident + 10 B sharded over 8 ranks.
+        let z1 = resident_state_bytes(&m, Sharding::Optimizer, 8, 1);
+        assert!((z1 - p * (6.0 + 10.0 / 8.0)).abs() < 1e-3);
+        // ZeRO-2/FSDP: everything /8 + two streamed layers of bf16 weights.
+        let z2 = resident_state_bytes(&m, Sharding::OptimizerGrads, 8, 1);
+        let want = p * 16.0 / 8.0 + 2.0 * 2.0 * p / m.layers as f64;
+        assert!((z2 - want).abs() < 1e-3, "z2 {z2} want {want}");
+        assert!(full > z1 && z1 > z2, "each stage must shrink the footprint");
+        // Tensor parallelism divides every mode by t.
+        assert_eq!(resident_state_bytes(&m, Sharding::None, 8, 2), full / 2.0);
+        // A group of 1 shards nothing.
+        assert_eq!(resident_state_bytes(&m, Sharding::Optimizer, 1, 1), full);
+    }
+
+    #[test]
+    fn sharded_step_trades_allreduce_for_rs_ag() {
+        let spec = spec_with("juwels_booster", "optimizer");
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap(); // 16 GPUs
+        let z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let st = z.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng).unwrap();
+        assert!(st.rs > 0.0, "gradient reduce-scatter must be priced");
+        assert!(st.ag > 0.0, "parameter allgather must be priced");
+        assert_eq!(st.comm, st.rs + st.ag);
+        assert!(st.total > 0.0 && st.compute > 0.0);
+
+        // Against the unsharded step on the same GPUs: the RS moves the
+        // same gradient bytes at half the allreduce fabric time, and the
+        // AG moves the (half-size) bf16 parameters — so comm must come in
+        // below the full allreduce.
+        let none = spec_with("juwels_booster", "none");
+        let zn = ZeroTimeline::from_scenario(&none, &topo).unwrap();
+        let mut rng2 = Rng::seed_from(7);
+        let stn = zn.step_time(&gpus, none.workload.batch_per_gpu, &mut rng2).unwrap();
+        assert!(
+            st.comm < stn.comm,
+            "rs+ag {} must undercut the allreduce {}",
+            st.comm,
+            stn.comm
+        );
+        // ZeRO-1 and ZeRO-2 move the same wire bytes.
+        let z2spec = spec_with("juwels_booster", "optimizer+grads");
+        let z2 = ZeroTimeline::from_scenario(&z2spec, &topo).unwrap();
+        let mut rng3 = Rng::seed_from(7);
+        let st2 = z2.step_time(&gpus, z2spec.workload.batch_per_gpu, &mut rng3).unwrap();
+        assert_eq!(st2.rs, st.rs);
+        assert_eq!(st2.ag, st.ag);
+        assert!(st2.resident_bytes < st.resident_bytes);
+    }
+
+    #[test]
+    fn zero_unlocks_gpt3_without_a_pipeline() {
+        // The §2.3 three-way frontier's ZeRO arm: GPT-3 175B (2.8 TB
+        // state) on 32 nodes of 40 GB GPUs. Pure data parallelism and
+        // ZeRO-1 (6 B/param floor = 1 TB/rank) both fail the per-rank
+        // fit; full sharding fits (22 GB state + 7 GB streamed weights)
+        // and prices a bubble-free step with real RS/AG traffic.
+        let m = presets::machine("juwels_booster").unwrap();
+        let build = |sharding: &str| {
+            ScenarioSpec::builder(m.clone())
+                .workload(presets::workload("gpt3_175b").unwrap())
+                .nodes(32)
+                .sharding(sharding)
+                .build()
+                .unwrap()
+        };
+        let spec = build("optimizer+grads");
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap(); // 128 GPUs
+        let z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let st = z.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng).unwrap();
+        assert!(st.rs > 0.0 && st.ag > 0.0);
+        assert_eq!(st.replicas, 128);
+        assert!(
+            st.resident_bytes < 40e9,
+            "fully sharded state must fit: {} GB",
+            st.resident_bytes / 1e9
+        );
+
+        for infeasible in ["none", "optimizer"] {
+            let s = build(infeasible);
+            let zt = ZeroTimeline::from_scenario(&s, &topo).unwrap();
+            let mut r = Rng::seed_from(7);
+            let err = zt
+                .step_time(&gpus, s.workload.batch_per_gpu, &mut r)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("does not fit") && err.contains(infeasible),
+                "sharding={infeasible} must fail the per-rank fit: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn tensor_parallel_sharding_composes() {
+        // d8·t2 on 16 GPUs, sharded: tensor groups pay layer allreduces,
+        // the per-rank gradient shard halves, and the two tensor-rank
+        // data groups reduce concurrently.
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .tensor_parallel(2)
+            .sharding("optimizer")
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+        let mut rng = Rng::seed_from(7);
+        let st = z.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng).unwrap();
+        assert_eq!(st.replicas, 8);
+        assert_eq!(st.tensor, 2);
+        assert!(st.tp_comm > 0.0, "tensor groups must pay layer allreduces");
+        let flat = spec_with("juwels_booster", "optimizer");
+        let zf = ZeroTimeline::from_scenario(&flat, &topo).unwrap();
+        let mut rng2 = Rng::seed_from(7);
+        let stf = zf.step_time(&gpus, flat.workload.batch_per_gpu, &mut rng2).unwrap();
+        assert!(st.rs < stf.rs, "t=2 halves the per-group gradient shard");
+    }
+
+    #[test]
+    fn warm_comm_makes_step_fully_cached() {
+        // The sweep's §Sync invariant, extended to the ZeRO path: after
+        // warm_comm, a frozen cache serves step_time without one miss.
+        for (sharding, tensor) in [("none", 1usize), ("optimizer", 1), ("optimizer+grads", 2)] {
+            let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+                .nodes(4)
+                .tensor_parallel(tensor)
+                .sharding(sharding)
+                .build()
+                .unwrap();
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let z = ZeroTimeline::from_scenario(&spec, &topo).unwrap();
+            let batch = spec.workload.batch_per_gpu;
+            z.warm_comm(&gpus, batch).unwrap();
+            let (_, warm_misses) = z.timeline.collectives.cache_stats();
+            z.timeline.collectives.freeze_cache(true);
+            let mut rng = Rng::seed_from(7);
+            z.step_time(&gpus, batch, &mut rng).unwrap();
+            let (_, misses) = z.timeline.collectives.cache_stats();
+            assert_eq!(
+                misses, warm_misses,
+                "{sharding}/t{tensor}: step after warm_comm must not simulate"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_timeline_rejects_pipelined_scenarios() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .pipeline_stages(4)
+            .microbatches(4)
+            .build()
+            .unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let err = ZeroTimeline::from_scenario(&spec, &topo).unwrap_err().to_string();
+        assert!(err.contains("pipeline_stages"), "{err}");
+    }
+}
