@@ -6,19 +6,32 @@ smoke step. One validator, called from every step, so the schema is
 checked the same way everywhere and a mode's failure pinpoints itself.
 
 Usage:
-    check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero]
+    check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero|interrupt|resume|fault]
                    [--degenerate-csv CONTROL.csv --sweep-csv SWEEP.csv]
+                   [--identical-csv CONTROL.csv]
     check_bench.py results/BENCH_hotpath.json
     check_bench.py results/crossover.csv --mode crossover
+    check_bench.py --self-test
 
 Generic checks (every BENCH_sweep.json):
   * required top-level keys and per-row columns;
-  * row count + infeasible count == the grid product of the params axes;
+  * rows + infeasible + failed + pending == the grid product of the axes;
+  * a sweep that does not report `interrupted` has no pending points;
+  * resume accounting: resumed_rows + fresh_rows == rows;
   * ms columns non-negative, step_ms/samples_per_s positive;
   * cost-cache hit/miss arithmetic consistent (hit_rate == hits/(h+m));
-  * per-group hits/misses/points sum to the totals.
+  * per-group hits/misses sum to the totals; group points cover exactly
+    the non-restored part of the grid (a fully-resumed sweep has no
+    groups at all — nothing was evaluated).
 
-Mode checks add the smoke-specific assertions (see `--mode`).
+Mode checks add the smoke-specific assertions (see `--mode`):
+  * interrupt — the sweep was cut mid-grid: `interrupted` with pending
+    points, yet the partial artifact is schema-complete (not torn);
+  * resume   — a resumed run finished the grid: no pending points, at
+    least one journal-restored row, and (with `--identical-csv`) a CSV
+    byte-identical to the uninterrupted control run;
+  * fault    — worker fault isolation: at least one `failed` row whose
+    reason records the panic and the bounded retry.
 """
 
 import argparse
@@ -60,13 +73,17 @@ def check_cost_cache(cc, where):
 
 
 def check_sweep(d, path):
-    for k in ("bench", "params", "rows", "infeasible", "groups", "cost_cache"):
+    for k in ("bench", "params", "rows", "infeasible", "failed", "groups",
+              "cost_cache", "interrupted", "pending", "resume"):
         require(k in d, f"{path}: missing top-level key '{k}'")
     require(d["bench"] == "sweep", f"{path}: bench key is {d['bench']!r}")
-    rows, infeasible, groups = d["rows"], d["infeasible"], d["groups"]
+    rows, infeasible, failed = d["rows"], d["infeasible"], d["failed"]
+    groups, pending = d["groups"], d["pending"]
 
     # Row count: the deterministic grid product, minus nothing — points
-    # that could not price must land in `infeasible`, not vanish.
+    # that could not price must land in `infeasible`, points whose worker
+    # panicked in `failed`, and points an interruption left unevaluated
+    # in `pending`. Nothing vanishes.
     product = 1
     for axis in d["params"]:
         require(
@@ -75,11 +92,33 @@ def check_sweep(d, path):
         )
         product *= len(axis["values"])
     require(
-        len(rows) + len(infeasible) == product,
-        f"{path}: {len(rows)} rows + {len(infeasible)} infeasible != grid "
-        f"product {product}",
+        len(rows) + len(infeasible) + len(failed) + pending == product,
+        f"{path}: {len(rows)} rows + {len(infeasible)} infeasible + "
+        f"{len(failed)} failed + {pending} pending != grid product {product}",
+    )
+    require(
+        d["interrupted"] or pending == 0,
+        f"{path}: {pending} pending point(s) in a sweep not marked interrupted",
     )
     require(rows, f"{path}: sweep produced no feasible rows")
+
+    for i, f in enumerate(failed):
+        for k in ("scenario", "machine", "reason"):
+            require(k in f, f"{path}: failed entry {i} missing '{k}': {f}")
+
+    res = d["resume"]
+    for k in ("resumed_rows", "fresh_rows", "resumed_infeasible", "resumed_failed"):
+        require(k in res and res[k] >= 0, f"{path}: resume block missing '{k}': {res}")
+    require(
+        res["resumed_rows"] + res["fresh_rows"] == len(rows),
+        f"{path}: resumed_rows {res['resumed_rows']} + fresh_rows "
+        f"{res['fresh_rows']} != {len(rows)} rows",
+    )
+    require(
+        res["resumed_infeasible"] <= len(infeasible)
+        and res["resumed_failed"] <= len(failed),
+        f"{path}: resume block restores more than the sweep reports: {res}",
+    )
 
     for i, r in enumerate(rows):
         for k in ROW_KEYS:
@@ -100,7 +139,16 @@ def check_sweep(d, path):
             )
 
     check_cost_cache(d["cost_cache"], path)
-    require(groups, f"{path}: no machine groups recorded")
+    resumed_total = (
+        res["resumed_rows"] + res["resumed_infeasible"] + res["resumed_failed"]
+    )
+    # A group exists per machine with work left to do; a fully-resumed
+    # sweep evaluates nothing and legitimately records no groups.
+    require(
+        groups or resumed_total == product,
+        f"{path}: no machine groups despite {product - resumed_total} "
+        f"non-restored point(s)",
+    )
     for g in groups:
         for k in ("machine", "points", "workers", "hits", "misses"):
             require(k in g, f"{path}: group missing '{k}': {g}")
@@ -114,8 +162,9 @@ def check_sweep(d, path):
         f"{path}: group misses do not sum to the total",
     )
     require(
-        sum(g["points"] for g in groups) == len(rows) + len(infeasible),
-        f"{path}: group points do not cover the grid",
+        sum(g["points"] for g in groups) == product - resumed_total,
+        f"{path}: group points {sum(g['points'] for g in groups)} != "
+        f"{product} grid - {resumed_total} restored",
     )
     return rows
 
@@ -201,6 +250,112 @@ def check_degeneration(sweep_csv, control_csv):
     print(f"check_bench: degeneration OK ({checked} bit-exact rows)")
 
 
+def mode_interrupt(d):
+    require(d["interrupted"] is True, "interrupt: sweep not marked interrupted")
+    require(d["pending"] > 0, "interrupt: no pending points — nothing was cut off")
+    print(f"check_bench: interrupt OK ({d['pending']} pending point(s))")
+
+
+def mode_resume(d, identical_csv, sweep_csv):
+    require(not d["interrupted"], "resume: resumed sweep still marked interrupted")
+    require(d["pending"] == 0, f"resume: {d['pending']} point(s) still pending")
+    res = d["resume"]
+    require(
+        res["resumed_rows"] > 0,
+        f"resume: no journal-restored rows — this was a fresh run: {res}",
+    )
+    if identical_csv:
+        with open(identical_csv, "rb") as f:
+            control = f.read()
+        with open(sweep_csv, "rb") as f:
+            resumed = f.read()
+        require(
+            control == resumed,
+            f"resume: {sweep_csv} is not byte-identical to the uninterrupted "
+            f"control {identical_csv}",
+        )
+        print(f"check_bench: resumed CSV byte-identical to {identical_csv}")
+    print(
+        f"check_bench: resume OK ({res['resumed_rows']} restored + "
+        f"{res['fresh_rows']} fresh row(s))"
+    )
+
+
+def mode_fault(d):
+    failed = d["failed"]
+    require(failed, "fault: no failed rows — the injected panic vanished")
+    require(
+        any("panicked" in f["reason"] and "retried" in f["reason"] for f in failed),
+        f"fault: failed reasons do not record the panic + bounded retry: {failed}",
+    )
+    print(f"check_bench: fault OK ({len(failed)} isolated failed point(s))")
+
+
+def _fixture():
+    """A minimal schema-valid interrupted sweep with one failed point."""
+    row = {k: 1.0 for k in ROW_KEYS}
+    row.update(
+        scenario="s0", machine="m", workload="bert", nodes=1, gpus=4,
+        precision="fp16_tc", algo="hierarchical", compression="none",
+        placement="compact", schedule="gpipe", sharding="none",
+        stages=1, tensor=1, microbatches=1, rs_ms=0.0, ag_ms=0.0,
+    )
+    return {
+        "bench": "sweep",
+        "params": [{"key": "nodes", "values": ["1", "2", "4"]}],
+        "rows": [row],
+        "infeasible": [],
+        "failed": [{
+            "scenario": "s1", "machine": "m",
+            "reason": "evaluation panicked (retried once): injected fault",
+        }],
+        "interrupted": True,
+        "pending": 1,
+        "resume": {"resumed_rows": 0, "fresh_rows": 1,
+                   "resumed_infeasible": 0, "resumed_failed": 0},
+        "groups": [{"machine": "m", "points": 3, "workers": 1,
+                    "hits": 2, "misses": 1}],
+        "cost_cache": {"hits": 2, "misses": 1, "hit_rate": 2 / 3},
+    }
+
+
+def self_test():
+    """Run the validator against synthetic fixtures: the good one must
+    pass every applicable check, and each deliberately-broken variant
+    must be rejected."""
+    import copy
+
+    good = _fixture()
+    check_sweep(good, "<fixture>")
+    mode_interrupt(good)
+    mode_fault(good)
+
+    def must_fail(d, what):
+        try:
+            check_sweep(d, f"<fixture:{what}>")
+        except SystemExit:
+            return
+        fail(f"self-test: broken fixture ({what}) was accepted")
+
+    miscounted = copy.deepcopy(good)
+    miscounted["pending"] = 0  # 1 row + 1 failed != product 3
+    must_fail(miscounted, "miscounted grid")
+
+    torn = copy.deepcopy(good)
+    del torn["resume"]
+    must_fail(torn, "missing resume block")
+
+    silent_loss = copy.deepcopy(good)
+    silent_loss["interrupted"] = False  # pending > 0 without interruption
+    must_fail(silent_loss, "pending without interruption")
+
+    bad_group = copy.deepcopy(good)
+    bad_group["groups"][0]["points"] = 99
+    must_fail(bad_group, "group points not covering the grid")
+
+    print("check_bench: self-test OK (1 good + 4 rejected fixtures)")
+
+
 def mode_crossover(path):
     with open(path) as f:
         rows = list(csv.DictReader(f))
@@ -229,12 +384,24 @@ def mode_crossover(path):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("file", help="BENCH_*.json or crossover.csv to validate")
-    ap.add_argument("--mode", choices=["hybrid", "3d", "zero", "crossover"])
+    ap.add_argument("file", nargs="?", help="BENCH_*.json or crossover.csv to validate")
+    ap.add_argument("--mode", choices=[
+        "hybrid", "3d", "zero", "crossover", "interrupt", "resume", "fault",
+    ])
     ap.add_argument("--degenerate-csv", help="control sweep CSV (no sharding axis)")
     ap.add_argument("--sweep-csv", default="results/sweep.csv",
                     help="sweep CSV holding the sharding=none rows to compare")
+    ap.add_argument("--identical-csv",
+                    help="resume mode: control CSV the sweep CSV must equal byte-for-byte")
+    ap.add_argument("--self-test", action="store_true",
+                    help="validate the validator against synthetic fixtures")
     args = ap.parse_args()
+
+    if args.self_test:
+        self_test()
+        return
+    if not args.file:
+        ap.error("a file to validate is required (or --self-test)")
 
     if args.mode == "crossover":
         mode_crossover(args.file)
@@ -246,11 +413,14 @@ def main():
     bench = d.get("bench")
     if bench == "sweep":
         rows = check_sweep(d, args.file)
-        require(
-            d["cost_cache"]["hit_rate"] > 0,
-            f"{args.file}: warmed+frozen evaluation must hit the cost cache: "
-            f"{d['cost_cache']}",
-        )
+        # A fully-resumed sweep evaluates nothing, so the cache is never
+        # touched; any sweep that did evaluate must hit the warmed cache.
+        if d["groups"]:
+            require(
+                d["cost_cache"]["hit_rate"] > 0,
+                f"{args.file}: warmed+frozen evaluation must hit the cost cache: "
+                f"{d['cost_cache']}",
+            )
         if args.mode == "hybrid":
             mode_hybrid(rows)
         elif args.mode == "3d":
@@ -259,6 +429,12 @@ def main():
             mode_zero(rows)
             if args.degenerate_csv:
                 check_degeneration(args.sweep_csv, args.degenerate_csv)
+        elif args.mode == "interrupt":
+            mode_interrupt(d)
+        elif args.mode == "resume":
+            mode_resume(d, args.identical_csv, args.sweep_csv)
+        elif args.mode == "fault":
+            mode_fault(d)
     elif bench == "runtime_hotpath":
         check_hotpath(d, args.file)
     else:

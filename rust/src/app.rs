@@ -71,9 +71,10 @@ pub fn commands() -> Vec<Command> {
         },
         Command {
             name: "sweep",
-            about: "run a scenario grid (--param key=v1,v2) over machines/scales/parallelism \
-                    (3D data×pipeline×tensor: stages/tensor/microbatches/schedule; ZeRO state \
-                    sharding: sharding=none|optimizer|optimizer+grads)",
+            about: "run a scenario grid (--param key=v1,v2, dependent expressions like \
+                    microbatches=8n) over machines/scales/parallelism (3D \
+                    data×pipeline×tensor; ZeRO sharding); journaled row checkpoints, \
+                    --resume continues an interrupted sweep",
             run: crate::report::cmd_sweep,
         },
         Command {
@@ -215,5 +216,32 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("unknown sweep key 'stagez'"), "{msg}");
         assert!(msg.contains("tensor"), "{msg}");
+    }
+
+    #[test]
+    fn sweep_rejects_resume_without_a_journal() {
+        // --resume reads the journal, so combining it with --no-journal is
+        // a contradiction the driver must refuse before any simulation.
+        let err = crate::report::cmd_sweep(&[
+            "--resume".to_string(),
+            "--no-journal".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("--no-journal"), "{err}");
+    }
+
+    #[test]
+    fn sweep_rejects_a_dependent_param_cycle_up_front() {
+        // Cyclic dependent expressions fail during grid validation with
+        // the cycle spelled out, before any spec resolution or pricing.
+        let err = crate::report::cmd_sweep(&[
+            "--param".to_string(),
+            "stages=microbatches".to_string(),
+            "--param".to_string(),
+            "microbatches=2stages".to_string(),
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cycle"), "{msg}");
     }
 }

@@ -174,9 +174,18 @@ pub fn cmd_topo(args: &[String]) -> Result<i32> {
 /// scales, precisions, collective settings, 3D
 /// (data×pipeline×tensor) parallelism (`stages`, `tensor`,
 /// `microbatches`, `schedule`) and ZeRO-style state sharding
-/// (`sharding`). Machine groups evaluate on parallel threads and each
-/// machine's grid is sharded across workers sharing one pre-warmed cost
-/// cache; emits a combined CSV plus `results/BENCH_sweep.json`.
+/// (`sharding`), with runexp-style dependent parameter expressions
+/// (`--param n=1,4 --param microbatches=8n`). Machine groups evaluate on
+/// parallel threads and each machine's grid is sharded across workers
+/// sharing one pre-warmed cost cache; emits a combined CSV plus
+/// `results/BENCH_sweep.json`.
+///
+/// Crash tolerance: every completed point is checkpointed to an fsync'd
+/// journal (`--journal`, default `results/sweep.journal`); `--resume`
+/// validates the journal against this grid's fingerprint and skips the
+/// journaled points, producing a CSV byte-identical to an uninterrupted
+/// run. The first Ctrl-C drains in-flight points and flushes partial
+/// artifacts (exit code 130); the second aborts.
 pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     let spec = Flags::new()
         .str_flag("machine", "juwels_booster", "base machine preset")
@@ -193,6 +202,15 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .str_flag("schedule", "gpipe", "base microbatch schedule (gpipe|1f1b)")
         .str_flag("sharding", "none", "base state sharding (none|optimizer|optimizer+grads)")
         .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
+        .str_flag("journal", "results/sweep.journal", "row-checkpoint journal path")
+        .bool_flag("resume", false, "resume from the journal, skipping completed points")
+        .bool_flag("no-journal", false, "disable row checkpointing")
+        .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
+        .int_flag(
+            "interrupt-after",
+            0,
+            "cancel after this many evaluated points (deterministic Ctrl-C for tests; 0 = off)",
+        )
         .bool_flag("list", false, "list presets and sweepable keys, then exit")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
@@ -203,13 +221,21 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("example: booster sweep --param stages=1,2,4 --param machine=juwels_booster,leonardo");
         println!("example: booster sweep --nodes 4 --param tensor=1,2,4 --param stages=1,4");
         println!("example: booster sweep --nodes 2 --param sharding=none,optimizer,optimizer+grads");
+        println!("example: booster sweep --nodes 4 --param n=1,2,4 --param stages=n --param microbatches=8n");
+        println!("example: booster sweep --resume   # continue an interrupted sweep");
         return Ok(0);
     }
     if flags.get_bool("list") {
         println!("machine presets:  {}", presets::machine_names().join(", "));
         println!("workload presets: {}", presets::workload_names().join(", "));
         println!("sweepable keys:   {}", sweep::SWEEPABLE_KEYS.join(", "));
+        println!("expression keys:  {} + single-letter variables (n=1,2)", sweep::EXPR_KEYS.join(", "));
         return Ok(0);
+    }
+    if flags.get_bool("resume") && flags.get_bool("no-journal") {
+        return Err(BoosterError::Config(
+            "--resume reads the journal; it cannot be combined with --no-journal".into(),
+        ));
     }
     // Reject unknown/duplicate --param keys before any spec resolution or
     // simulation — a typo'd axis must not cost a half-priced grid.
@@ -228,7 +254,36 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .schedule(flags.get_str("schedule"))
         .sharding(flags.get_str("sharding"))
         .build()?;
-    let outcome = sweep::run(&base, &axes)?;
+
+    // Fault injection for the CI failed-path fixture: a point index in
+    // BOOSTER_SWEEP_FAULT panics on every attempt, so the sweep records a
+    // `failed` row for it (after the bounded retry) instead of dying.
+    let fault: Option<sweep::FaultHook> = match std::env::var("BOOSTER_SWEEP_FAULT") {
+        Ok(v) => {
+            let idx: usize = v.trim().parse().map_err(|_| {
+                BoosterError::Config(format!(
+                    "BOOSTER_SWEEP_FAULT must be a grid point index, got '{v}'"
+                ))
+            })?;
+            Some(std::sync::Arc::new(move |i, _attempt| i == idx))
+        }
+        Err(_) => None,
+    };
+    sweep::sigint::install();
+    let interrupt_after = flags.get_usize("interrupt-after");
+    let opts = sweep::SweepOptions {
+        workers: flags.get_usize("workers"),
+        sequential: false,
+        cancel: sweep::Cancel::with_sigint(),
+        interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
+        fault,
+    };
+    let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
+    let outcome = if flags.get_bool("no-journal") {
+        sweep::run_points_with(&sweep::prepare(&base, &axes)?, &opts)?
+    } else {
+        sweep::run_journaled(&base, &axes, &journal_path, flags.get_bool("resume"), &opts)?
+    };
 
     let mut out = format!(
         "scenario sweep: {} point(s) over {} axis/axes (base: {})\n\n",
@@ -269,6 +324,26 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             out.push_str(&format!("  {scenario}: {reason}\n"));
         }
     }
+    if !outcome.failed.is_empty() {
+        out.push_str(&format!(
+            "\n{} failed point(s) (worker fault isolated, one retry each):\n",
+            outcome.failed.len()
+        ));
+        for f in &outcome.failed {
+            out.push_str(&format!("  {} [{}]: {}\n", f.scenario, f.machine, f.reason));
+        }
+    }
+    let resumed = outcome.resumed_rows + outcome.resumed_infeasible + outcome.resumed_failed;
+    if resumed > 0 {
+        out.push_str(&format!(
+            "\nresumed {resumed} journaled point(s) ({} row(s), {} infeasible, {} failed); \
+             evaluated {} fresh\n",
+            outcome.resumed_rows,
+            outcome.resumed_infeasible,
+            outcome.resumed_failed,
+            outcome.rows.len() - outcome.resumed_rows,
+        ));
+    }
     out.push_str(&format!(
         "\nshared collective cost cache: {} hits / {} simulations ({:.0}% hit rate)\n",
         outcome.cache_hits,
@@ -282,13 +357,26 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             g.machine, g.points, g.workers, g.hits, g.misses
         ));
     }
+    if outcome.interrupted {
+        out.push_str(&format!(
+            "\ninterrupted: {} point(s) still pending — rerun with --resume to finish\n",
+            outcome.pending
+        ));
+    }
     emit("sweep", &out, Some(&outcome.to_csv()))?;
-    std::fs::write(
-        "results/BENCH_sweep.json",
-        outcome.to_json(&axes).to_pretty(),
+    crate::util::atomic_write(
+        std::path::Path::new("results/BENCH_sweep.json"),
+        &outcome.to_json(&axes).to_pretty(),
     )?;
-    println!("wrote results/sweep.csv and results/BENCH_sweep.json");
-    Ok(0)
+    if flags.get_bool("no-journal") {
+        println!("wrote results/sweep.csv and results/BENCH_sweep.json (journal disabled)");
+    } else {
+        println!(
+            "wrote results/sweep.csv and results/BENCH_sweep.json (journal: {})",
+            journal_path.display()
+        );
+    }
+    Ok(if outcome.interrupted { 130 } else { 0 })
 }
 
 /// `booster crossover` — the §2.3 study the pipeline and ZeRO modules

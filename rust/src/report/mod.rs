@@ -11,13 +11,16 @@ mod experiments;
 pub use experiments::*;
 
 /// Write a report both to stdout and to `results/<name>.txt` (+`.csv` if
-/// provided). Creates `results/` on demand.
+/// provided). Creates `results/` on demand. Writes are atomic
+/// (tempfile + rename), so an interrupted run never leaves a torn
+/// artifact behind — at worst the previous complete version survives.
 pub fn emit(name: &str, text: &str, csv: Option<&str>) -> Result<()> {
     print!("{text}");
-    std::fs::create_dir_all("results")?;
-    std::fs::write(format!("results/{name}.txt"), text)?;
+    let txt_path = std::path::PathBuf::from(format!("results/{name}.txt"));
+    crate::util::atomic_write(&txt_path, text)?;
     if let Some(csv) = csv {
-        std::fs::write(format!("results/{name}.csv"), csv)?;
+        let csv_path = std::path::PathBuf::from(format!("results/{name}.csv"));
+        crate::util::atomic_write(&csv_path, csv)?;
     }
     Ok(())
 }

@@ -1,0 +1,581 @@
+//! Crash-tolerant sweep journal — the persistence layer behind
+//! `booster sweep --resume`.
+//!
+//! One fsync'd JSON line per completed grid point, appended as the sweep
+//! runs. The first line is a **header** carrying a grid fingerprint
+//! (binary schema version + the axes verbatim + an FNV-1a hash of the
+//! base [`ScenarioSpec`]); every later line is an **entry** keyed by the
+//! point's expansion index:
+//!
+//! ```text
+//! {"kind":"header","schema":1,"base":"<16-hex>","axes":[{"key":...,"values":[...]}]}
+//! {"kind":"row","index":0,"row":{...full SweepRow incl. assignment...}}
+//! {"kind":"infeasible","index":1,"reason":"...","scenario":"..."}
+//! {"kind":"failed","index":2,"machine":"...","reason":"...","scenario":"..."}
+//! ```
+//!
+//! Resume validates the header against the *requested* grid, runexp-style:
+//! a schema, axes, or base-spec mismatch is rejected with an error naming
+//! exactly what differed, so a journal can never silently splice rows
+//! from a different grid into a CSV. A torn **final** line (the crash
+//! happened mid-append) is tolerated and dropped; a malformed line
+//! anywhere else means real corruption and fails the resume.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::scenario::spec::ScenarioSpec;
+use crate::scenario::sweep::{ParamAxis, PointOutcome, SweepRow};
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+
+/// Version of the journal line schema baked into this binary. Bump when
+/// the `SweepRow` columns or the entry shape change incompatibly; resume
+/// then rejects journals written by older builds instead of misreading
+/// them.
+pub const JOURNAL_SCHEMA_VERSION: u32 = 1;
+
+/// Identity of a sweep grid: what must match for a journal to be
+/// resumable into this run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridFingerprint {
+    /// Binary journal schema version ([`JOURNAL_SCHEMA_VERSION`]).
+    pub schema: u32,
+    /// The sweep axes, verbatim (keys + values in input order) — stored
+    /// whole rather than hashed so a mismatch error can say *which* axis
+    /// differed.
+    pub axes: Vec<ParamAxis>,
+    /// FNV-1a 64 hash of the base scenario's canonical JSON
+    /// ([`ScenarioSpec::fingerprint`]).
+    pub base: String,
+}
+
+impl GridFingerprint {
+    /// Fingerprint the grid a sweep is about to run.
+    pub fn new(base: &ScenarioSpec, axes: &[ParamAxis]) -> GridFingerprint {
+        GridFingerprint {
+            schema: JOURNAL_SCHEMA_VERSION,
+            axes: axes.to_vec(),
+            base: base.fingerprint(),
+        }
+    }
+
+    fn axes_json(axes: &[ParamAxis]) -> Json {
+        Json::Arr(
+            axes.iter()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("key", Json::Str(a.key.clone())),
+                        (
+                            "values",
+                            Json::Arr(a.values.iter().cloned().map(Json::Str).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn header_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("header".into())),
+            ("schema", Json::Num(self.schema as f64)),
+            ("base", Json::Str(self.base.clone())),
+            ("axes", Self::axes_json(&self.axes)),
+        ])
+    }
+
+    fn from_header(j: &Json) -> Result<GridFingerprint> {
+        let bad = |what: &str| {
+            BoosterError::Artifact(format!("sweep journal header: {what}"))
+        };
+        let schema = j
+            .req("schema")?
+            .as_usize()
+            .ok_or_else(|| bad("'schema' is not an integer"))? as u32;
+        let base = j
+            .req("base")?
+            .as_str()
+            .ok_or_else(|| bad("'base' is not a string"))?
+            .to_string();
+        let mut axes = Vec::new();
+        for a in j
+            .req("axes")?
+            .as_arr()
+            .ok_or_else(|| bad("'axes' is not an array"))?
+        {
+            let key = a
+                .req("key")?
+                .as_str()
+                .ok_or_else(|| bad("axis 'key' is not a string"))?
+                .to_string();
+            let mut values = Vec::new();
+            for v in a
+                .req("values")?
+                .as_arr()
+                .ok_or_else(|| bad("axis 'values' is not an array"))?
+            {
+                values.push(
+                    v.as_str()
+                        .ok_or_else(|| bad("axis value is not a string"))?
+                        .to_string(),
+                );
+            }
+            axes.push(ParamAxis { key, values });
+        }
+        Ok(GridFingerprint { schema, axes, base })
+    }
+
+    /// Check a journal's fingerprint (`self`) against the grid a resumed
+    /// run wants (`wanted`), naming the first mismatch runexp-style.
+    fn check_against(&self, wanted: &GridFingerprint, path: &Path) -> Result<()> {
+        let reject = |what: String| {
+            BoosterError::Config(format!(
+                "cannot resume from {}: {what} (delete the journal or rerun without --resume)",
+                path.display()
+            ))
+        };
+        if self.schema != wanted.schema {
+            return Err(reject(format!(
+                "journal schema version {} != this binary's version {}",
+                self.schema, wanted.schema
+            )));
+        }
+        if self.axes.len() != wanted.axes.len() {
+            return Err(reject(format!(
+                "journal has {} sweep axes [{}], this run has {} [{}]",
+                self.axes.len(),
+                fmt_axes(&self.axes),
+                wanted.axes.len(),
+                fmt_axes(&wanted.axes),
+            )));
+        }
+        for (j, w) in self.axes.iter().zip(&wanted.axes) {
+            if j != w {
+                return Err(reject(format!(
+                    "sweep axis differs: journal has '{}', this run has '{}'",
+                    fmt_axis(j),
+                    fmt_axis(w),
+                )));
+            }
+        }
+        if self.base != wanted.base {
+            return Err(reject(format!(
+                "base scenario fingerprint {} != this run's {} (the base spec changed)",
+                self.base, wanted.base
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn fmt_axis(a: &ParamAxis) -> String {
+    format!("{}={}", a.key, a.values.join(","))
+}
+
+fn fmt_axes(axes: &[ParamAxis]) -> String {
+    axes.iter().map(fmt_axis).collect::<Vec<_>>().join("; ")
+}
+
+fn entry_json(index: usize, outcome: &PointOutcome) -> Json {
+    match outcome {
+        PointOutcome::Row(row) => Json::obj(vec![
+            ("kind", Json::Str("row".into())),
+            ("index", Json::Num(index as f64)),
+            ("row", row.to_json()),
+        ]),
+        PointOutcome::Infeasible { scenario, reason } => Json::obj(vec![
+            ("kind", Json::Str("infeasible".into())),
+            ("index", Json::Num(index as f64)),
+            ("scenario", Json::Str(scenario.clone())),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+        PointOutcome::Failed {
+            scenario,
+            machine,
+            reason,
+        } => Json::obj(vec![
+            ("kind", Json::Str("failed".into())),
+            ("index", Json::Num(index as f64)),
+            ("scenario", Json::Str(scenario.clone())),
+            ("machine", Json::Str(machine.clone())),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+    }
+}
+
+fn entry_from_json(j: &Json) -> Result<(usize, PointOutcome)> {
+    let kind = j
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| BoosterError::Artifact("journal entry 'kind' is not a string".into()))?
+        .to_string();
+    let index = j
+        .req("index")?
+        .as_usize()
+        .ok_or_else(|| BoosterError::Artifact("journal entry 'index' is not an index".into()))?;
+    let str_field = |k: &str| -> Result<String> {
+        Ok(j.req(k)?
+            .as_str()
+            .ok_or_else(|| {
+                BoosterError::Artifact(format!("journal entry '{k}' is not a string"))
+            })?
+            .to_string())
+    };
+    let outcome = match kind.as_str() {
+        "row" => PointOutcome::Row(Box::new(SweepRow::from_json(j.req("row")?)?)),
+        "infeasible" => PointOutcome::Infeasible {
+            scenario: str_field("scenario")?,
+            reason: str_field("reason")?,
+        },
+        "failed" => PointOutcome::Failed {
+            scenario: str_field("scenario")?,
+            machine: str_field("machine")?,
+            reason: str_field("reason")?,
+        },
+        other => {
+            return Err(BoosterError::Artifact(format!(
+                "journal entry has unknown kind '{other}'"
+            )))
+        }
+    };
+    Ok((index, outcome))
+}
+
+/// An open, append-only sweep journal.
+#[derive(Debug)]
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Start a fresh journal at `path` (truncating any previous one) and
+    /// write the fsync'd header line.
+    pub fn create(path: &Path, fp: &GridFingerprint) -> Result<Journal> {
+        if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = File::create(path)?;
+        let header = fp.header_json().to_string();
+        writeln!(file, "{header}")?;
+        file.sync_data()?;
+        Ok(Journal {
+            file,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Reopen an existing journal for a resumed run: validate its header
+    /// against `fp` (rejecting a mismatch with an error naming what
+    /// differed), replay its entries, and return the journal opened for
+    /// appending plus the restored per-point outcomes (`None` = the point
+    /// was never journaled and must be evaluated).
+    ///
+    /// A torn final line — the only line a mid-append crash can damage —
+    /// is dropped; a malformed line anywhere earlier fails the resume.
+    pub fn resume(
+        path: &Path,
+        fp: &GridFingerprint,
+        n_points: usize,
+    ) -> Result<(Journal, Vec<Option<PointOutcome>>)> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            BoosterError::Config(format!(
+                "cannot resume: sweep journal {} is unreadable: {e}",
+                path.display()
+            ))
+        })?;
+        let lines: Vec<&str> = text.lines().collect();
+        if lines.is_empty() {
+            return Err(BoosterError::Artifact(format!(
+                "sweep journal {} is empty (no header)",
+                path.display()
+            )));
+        }
+        let header = Json::parse(lines[0]).map_err(|_| {
+            BoosterError::Artifact(format!(
+                "sweep journal {} has a malformed header line",
+                path.display()
+            ))
+        })?;
+        if header.get("kind").and_then(|k| k.as_str()) != Some("header") {
+            return Err(BoosterError::Artifact(format!(
+                "{} is not a sweep journal (first line is not a header)",
+                path.display()
+            )));
+        }
+        GridFingerprint::from_header(&header)?.check_against(fp, path)?;
+
+        let mut restored: Vec<Option<PointOutcome>> = (0..n_points).map(|_| None).collect();
+        let last = lines.len() - 1;
+        for (lineno, line) in lines.iter().enumerate().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line).ok().map(|j| entry_from_json(&j));
+            match parsed {
+                Some(Ok((index, outcome))) => {
+                    if index >= n_points {
+                        return Err(BoosterError::Artifact(format!(
+                            "sweep journal {} entry index {index} is out of range for a \
+                             {n_points}-point grid",
+                            path.display()
+                        )));
+                    }
+                    // Duplicate index (a retried append): last wins.
+                    restored[index] = Some(outcome);
+                }
+                // Only the final line can be torn by a crash mid-append.
+                Some(Err(_)) | None if lineno == last => break,
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(BoosterError::Artifact(format!(
+                        "sweep journal {} line {} is malformed (not a torn tail — the \
+                         journal is corrupt)",
+                        path.display(),
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+
+        let file = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok((
+            Journal {
+                file,
+                path: path.to_path_buf(),
+            },
+            restored,
+        ))
+    }
+
+    /// Append one completed point, fsync'd so a crash after return can
+    /// never lose it.
+    pub fn append(&mut self, index: usize, outcome: &PointOutcome) -> Result<()> {
+        let line = entry_json(index, outcome).to_string();
+        writeln!(self.file, "{line}")?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// The journal's path (for messages).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("booster_journal_{}_{name}", std::process::id()))
+    }
+
+    fn axes() -> Vec<ParamAxis> {
+        vec![
+            ParamAxis {
+                key: "nodes".into(),
+                values: vec!["1".into(), "2".into()],
+            },
+            ParamAxis {
+                key: "precision".into(),
+                values: vec!["bf16".into(), "tf32".into()],
+            },
+        ]
+    }
+
+    fn row(scenario: &str) -> SweepRow {
+        SweepRow {
+            scenario: scenario.into(),
+            machine: "selene".into(),
+            workload: "resnet50".into(),
+            nodes: 1,
+            gpus: 8,
+            precision: "bf16".into(),
+            algo: "hierarchical".into(),
+            compression: "none".into(),
+            placement: "compact".into(),
+            bucket_mb: 64.0,
+            stages: 1,
+            tensor: 1,
+            microbatches: 1,
+            schedule: "gpipe".into(),
+            sharding: "none".into(),
+            bubble_pct: 0.0,
+            compute_ms: 12.3456789,
+            comm_ms: 1.5,
+            rs_ms: 0.0,
+            ag_ms: 0.0,
+            tp_comm_ms: 0.0,
+            step_ms: 13.75,
+            samples_per_s: 1234.5,
+            step_energy_kj: 0.125,
+            assignment: vec![("nodes".into(), "1".into()), ("precision".into(), "bf16".into())],
+        }
+    }
+
+    fn fp() -> GridFingerprint {
+        let base = presets::default_scenario("selene").unwrap();
+        GridFingerprint::new(&base, &axes())
+    }
+
+    #[test]
+    fn create_append_resume_round_trips() {
+        let path = tmp("roundtrip");
+        let mut j = Journal::create(&path, &fp()).unwrap();
+        j.append(0, &PointOutcome::Row(Box::new(row("a")))).unwrap();
+        j.append(
+            1,
+            &PointOutcome::Infeasible {
+                scenario: "b".into(),
+                reason: "memory".into(),
+            },
+        )
+        .unwrap();
+        j.append(
+            2,
+            &PointOutcome::Failed {
+                scenario: "c".into(),
+                machine: "selene".into(),
+                reason: "panicked: boom".into(),
+            },
+        )
+        .unwrap();
+        drop(j);
+
+        let (_, restored) = Journal::resume(&path, &fp(), 4).unwrap();
+        assert_eq!(restored.len(), 4);
+        match restored[0].as_ref().unwrap() {
+            PointOutcome::Row(r) => {
+                assert_eq!(r.scenario, "a");
+                // f64 fields survive the JSON round-trip bit-exactly.
+                assert_eq!(r.compute_ms, 12.3456789);
+                assert_eq!(r.assignment.len(), 2);
+                assert_eq!(r.assignment[1], ("precision".into(), "bf16".into()));
+            }
+            other => panic!("expected a row, got {other:?}"),
+        }
+        assert!(matches!(
+            restored[1].as_ref().unwrap(),
+            PointOutcome::Infeasible { .. }
+        ));
+        match restored[2].as_ref().unwrap() {
+            PointOutcome::Failed { machine, reason, .. } => {
+                assert_eq!(machine, "selene");
+                assert!(reason.contains("boom"));
+            }
+            other => panic!("expected failed, got {other:?}"),
+        }
+        assert!(restored[3].is_none(), "never-journaled point stays pending");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_but_midfile_corruption_fails() {
+        let path = tmp("torn");
+        let mut j = Journal::create(&path, &fp()).unwrap();
+        j.append(0, &PointOutcome::Row(Box::new(row("a")))).unwrap();
+        j.append(1, &PointOutcome::Row(Box::new(row("b")))).unwrap();
+        drop(j);
+
+        // Tear the last line mid-JSON (as a crash mid-append would).
+        let text = std::fs::read_to_string(&path).unwrap();
+        let torn: String = text[..text.len() - 30].to_string();
+        std::fs::write(&path, &torn).unwrap();
+        let (_, restored) = Journal::resume(&path, &fp(), 4).unwrap();
+        assert!(restored[0].is_some(), "intact entry survives");
+        assert!(restored[1].is_none(), "torn tail entry is dropped");
+
+        // Corruption *before* the tail is not recoverable.
+        let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        lines[1] = "{ not json".into();
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        let err = Journal::resume(&path, &fp(), 4).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn duplicate_index_last_wins_and_out_of_range_rejected() {
+        let path = tmp("dupe");
+        let mut j = Journal::create(&path, &fp()).unwrap();
+        j.append(0, &PointOutcome::Row(Box::new(row("first")))).unwrap();
+        j.append(0, &PointOutcome::Row(Box::new(row("second")))).unwrap();
+        drop(j);
+        let (_, restored) = Journal::resume(&path, &fp(), 2).unwrap();
+        match restored[0].as_ref().unwrap() {
+            PointOutcome::Row(r) => assert_eq!(r.scenario, "second"),
+            other => panic!("{other:?}"),
+        }
+        // A 1-point grid cannot hold index 0 *and* more: index 0 with
+        // n_points=0 must be out of range.
+        let err = Journal::resume(&path, &fp(), 0).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incompatible_journals_rejected_naming_the_mismatch() {
+        let path = tmp("mismatch");
+        Journal::create(&path, &fp()).unwrap();
+
+        // Changed axes: extra axis.
+        let mut more = fp();
+        more.axes.push(ParamAxis {
+            key: "algo".into(),
+            values: vec!["ring".into()],
+        });
+        let err = Journal::resume(&path, &more, 8).unwrap_err().to_string();
+        assert!(err.contains("sweep axes"), "{err}");
+        assert!(err.contains("algo=ring"), "must name the new axis: {err}");
+
+        // Changed axes: same count, different values.
+        let mut diff = fp();
+        diff.axes[1].values = vec!["fp16".into()];
+        let err = Journal::resume(&path, &diff, 2).unwrap_err().to_string();
+        assert!(err.contains("axis differs"), "{err}");
+        assert!(err.contains("precision=bf16,tf32"), "{err}");
+        assert!(err.contains("precision=fp16"), "{err}");
+
+        // Changed base spec.
+        let mut base = presets::default_scenario("selene").unwrap();
+        base.parallelism.nodes = 7;
+        let moved = GridFingerprint::new(&base, &axes());
+        let err = Journal::resume(&path, &moved, 4).unwrap_err().to_string();
+        assert!(err.contains("base scenario fingerprint"), "{err}");
+
+        // Changed schema version.
+        let mut newer = fp();
+        newer.schema += 1;
+        let err = Journal::resume(&path, &newer, 4).unwrap_err().to_string();
+        assert!(err.contains("schema version"), "{err}");
+        assert!(err.contains(&format!("{}", JOURNAL_SCHEMA_VERSION)), "{err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_journal_file_rejected() {
+        let path = tmp("notjournal");
+        std::fs::write(&path, "scenario,machine\n").unwrap();
+        assert!(Journal::resume(&path, &fp(), 4).is_err());
+        let err = Journal::resume(&tmp("absent"), &fp(), 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unreadable"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn base_fingerprint_is_stable_and_change_sensitive() {
+        let a = presets::default_scenario("selene").unwrap();
+        let b = presets::default_scenario("selene").unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = presets::default_scenario("selene").unwrap();
+        c.workload.batch_per_gpu += 1;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -26,6 +26,7 @@
 //! [`crate::collectives::CostCache`] through a sweep.
 
 pub mod context;
+pub mod journal;
 pub mod presets;
 pub mod spec;
 pub mod sweep;

@@ -754,6 +754,20 @@ impl ScenarioSpec {
         s.validate()?;
         Ok(s)
     }
+
+    /// Stable content fingerprint of the full spec: FNV-1a 64 over the
+    /// canonical JSON serialization (BTreeMap-backed, so key order is
+    /// deterministic). The sweep journal stores this to detect a resumed
+    /// run whose base scenario changed.
+    pub fn fingerprint(&self) -> String {
+        let text = self.to_json().to_string();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
 }
 
 /// Builder for [`ScenarioSpec`] — see [`ScenarioSpec::builder`].

@@ -35,13 +35,18 @@
 //! **byte-identical** to [`run_sequential`] — a differential test pins
 //! this for both the cross-machine and the intra-machine level.
 
-use std::sync::Arc;
+use std::panic::AssertUnwindSafe;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::collectives::CollectiveModel;
+use crate::scenario::journal::{GridFingerprint, Journal};
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
 use crate::train::hybrid::HybridTimeline;
 use crate::util::error::{BoosterError, Result};
+use crate::util::expr::Expr;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -86,10 +91,11 @@ pub fn parse_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
     for e in entries {
         match e.split_once('=') {
             Some((key, first)) => {
-                let key = key.trim().to_string();
-                if !SWEEPABLE_KEYS.contains(&key.as_str()) {
+                let key = key.trim().to_ascii_lowercase();
+                if !SWEEPABLE_KEYS.contains(&key.as_str()) && !is_var_key(&key) {
                     return Err(BoosterError::Config(format!(
-                        "unknown sweep key '{key}' (sweepable: {})",
+                        "unknown sweep key '{key}' (sweepable: {}; single-letter keys \
+                         like n=1,2 define expression variables)",
                         SWEEPABLE_KEYS.join(", ")
                     )));
                 }
@@ -174,6 +180,180 @@ pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()
     Ok(())
 }
 
+/// Sweepable keys whose values are arithmetic *expressions* — possibly
+/// referencing other axes runexp-style (`microbatches=8n` with
+/// `stages=n` and a variable axis `n=1,4`). All other keys take raw
+/// strings (`schedule=1f1b` is never parsed as arithmetic).
+pub const EXPR_KEYS: [&str; 6] = [
+    "nodes",
+    "bucket_mb",
+    "batch",
+    "stages",
+    "tensor",
+    "microbatches",
+];
+
+/// A single-letter axis key defines a free expression variable rather
+/// than a scenario field (`--param n=1,4`): it multiplies the grid and
+/// appears in each point's assignment, but is only consumed by
+/// expressions on other axes.
+pub fn is_var_key(key: &str) -> bool {
+    key.len() == 1 && key.chars().all(|c| c.is_ascii_lowercase())
+}
+
+fn is_expr_key(key: &str) -> bool {
+    EXPR_KEYS.contains(&key) || is_var_key(key)
+}
+
+/// Dependency-resolved evaluation plan for a grid's expression axes.
+///
+/// Built once per sweep: parses every expression value, resolves which
+/// axes each depends on, topologically orders them (cycle detection with
+/// the cycle named in the error), and rejects unknown variables up front
+/// listing the names that are defined.
+struct ExprPlan {
+    /// Axis indices in dependency-evaluation order (raw-string axes
+    /// included; they resolve to themselves).
+    order: Vec<usize>,
+    /// Whether each axis is expression-valued.
+    numeric: Vec<bool>,
+}
+
+impl ExprPlan {
+    fn build(axes: &[ParamAxis]) -> Result<ExprPlan> {
+        let numeric: Vec<bool> = axes.iter().map(|a| is_expr_key(&a.key)).collect();
+        let known: Vec<&str> = axes
+            .iter()
+            .zip(&numeric)
+            .filter(|(_, n)| **n)
+            .map(|(a, _)| a.key.as_str())
+            .collect();
+        // Parse every expression value and collect axis-level deps.
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); axes.len()];
+        for (i, axis) in axes.iter().enumerate() {
+            if !numeric[i] {
+                continue;
+            }
+            for value in &axis.values {
+                let expr = Expr::parse(value).map_err(|e| {
+                    BoosterError::Config(format!(
+                        "sweep key '{}': bad value '{value}': {e}",
+                        axis.key
+                    ))
+                })?;
+                for var in expr.vars() {
+                    match axes.iter().position(|a| a.key == var && is_expr_key(&a.key)) {
+                        Some(j) => {
+                            if !deps[i].contains(&j) {
+                                deps[i].push(j);
+                            }
+                        }
+                        None => {
+                            return Err(BoosterError::Config(format!(
+                                "unknown variable '{var}' in sweep value '{}={value}' \
+                                 (defined: {})",
+                                axis.key,
+                                if known.is_empty() {
+                                    "none".to_string()
+                                } else {
+                                    known.join(", ")
+                                }
+                            )))
+                        }
+                    }
+                }
+            }
+        }
+        let order = dependency_order(axes, &deps)?;
+        Ok(ExprPlan { order, numeric })
+    }
+
+    /// Resolve one expansion assignment: evaluate expression axes in
+    /// dependency order, substituting earlier axes' values, and return
+    /// the concrete assignment **in input (axis) order** so CSV/JSON
+    /// columns never depend on the dependency structure.
+    fn resolve(&self, asg: &[(String, String)]) -> Result<Vec<(String, String)>> {
+        let mut resolved: Vec<Option<String>> = vec![None; asg.len()];
+        let mut env = std::collections::BTreeMap::new();
+        for &i in &self.order {
+            let (key, raw) = &asg[i];
+            if !self.numeric[i] {
+                resolved[i] = Some(raw.clone());
+                continue;
+            }
+            let v = Expr::parse(raw)?.eval(&env).map_err(|e| {
+                BoosterError::Config(format!("sweep key '{key}': value '{raw}': {e}"))
+            })?;
+            env.insert(key.clone(), v);
+            resolved[i] = Some(fmt_value(v));
+        }
+        Ok(asg
+            .iter()
+            .zip(resolved)
+            .map(|((k, _), v)| (k.clone(), v.expect("every axis resolved")))
+            .collect())
+    }
+}
+
+/// Format an evaluated expression value the way the spec parser expects:
+/// integers without a fractional part, everything else as shortest
+/// round-trip decimal.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Topological order of the axes under `deps` (DFS). A cycle fails with
+/// the cycle spelled out key-by-key.
+fn dependency_order(axes: &[ParamAxis], deps: &[Vec<usize>]) -> Result<Vec<usize>> {
+    const UNSEEN: u8 = 0;
+    const ACTIVE: u8 = 1;
+    const DONE: u8 = 2;
+    fn visit(
+        i: usize,
+        axes: &[ParamAxis],
+        deps: &[Vec<usize>],
+        state: &mut [u8],
+        stack: &mut Vec<usize>,
+        order: &mut Vec<usize>,
+    ) -> Result<()> {
+        match state[i] {
+            DONE => return Ok(()),
+            ACTIVE => {
+                // Reconstruct the cycle from the active stack.
+                let start = stack.iter().position(|&s| s == i).unwrap_or(0);
+                let mut names: Vec<&str> =
+                    stack[start..].iter().map(|&s| axes[s].key.as_str()).collect();
+                names.push(axes[i].key.as_str());
+                return Err(BoosterError::Config(format!(
+                    "dependent parameter cycle: {}",
+                    names.join(" -> ")
+                )));
+            }
+            _ => {}
+        }
+        state[i] = ACTIVE;
+        stack.push(i);
+        for &j in &deps[i] {
+            visit(j, axes, deps, state, stack, order)?;
+        }
+        stack.pop();
+        state[i] = DONE;
+        order.push(i);
+        Ok(())
+    }
+    let mut state = vec![UNSEEN; axes.len()];
+    let mut stack = Vec::new();
+    let mut order = Vec::new();
+    for i in 0..axes.len() {
+        visit(i, axes, deps, &mut state, &mut stack, &mut order)?;
+    }
+    Ok(order)
+}
+
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
 pub struct SweepRow {
@@ -232,6 +412,150 @@ pub struct SweepRow {
     pub assignment: Vec<(String, String)>,
 }
 
+fn jstr(j: &Json, k: &str) -> Result<String> {
+    j.req(k)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| BoosterError::Artifact(format!("sweep row field '{k}' is not a string")))
+}
+
+fn jnum(j: &Json, k: &str) -> Result<f64> {
+    j.req(k)?
+        .as_f64()
+        .ok_or_else(|| BoosterError::Artifact(format!("sweep row field '{k}' is not a number")))
+}
+
+fn jint(j: &Json, k: &str) -> Result<usize> {
+    j.req(k)?
+        .as_usize()
+        .ok_or_else(|| BoosterError::Artifact(format!("sweep row field '{k}' is not an integer")))
+}
+
+impl SweepRow {
+    /// Full row serialization — the `BENCH_sweep.json` row shape and the
+    /// journal `row` entry payload. The writer prints f64s in shortest
+    /// round-trip form, so `from_json(to_json(r)) == r` bit-for-bit;
+    /// that exactness is what lets a resumed sweep reproduce a
+    /// byte-identical CSV from journaled rows.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("machine", Json::Str(self.machine.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("precision", Json::Str(self.precision.clone())),
+            ("algo", Json::Str(self.algo.clone())),
+            ("compression", Json::Str(self.compression.clone())),
+            ("placement", Json::Str(self.placement.clone())),
+            ("bucket_mb", Json::Num(self.bucket_mb)),
+            ("stages", Json::Num(self.stages as f64)),
+            ("tensor", Json::Num(self.tensor as f64)),
+            ("microbatches", Json::Num(self.microbatches as f64)),
+            ("schedule", Json::Str(self.schedule.clone())),
+            ("sharding", Json::Str(self.sharding.clone())),
+            ("bubble_pct", Json::Num(self.bubble_pct)),
+            ("compute_ms", Json::Num(self.compute_ms)),
+            ("comm_ms", Json::Num(self.comm_ms)),
+            ("rs_ms", Json::Num(self.rs_ms)),
+            ("ag_ms", Json::Num(self.ag_ms)),
+            ("tp_comm_ms", Json::Num(self.tp_comm_ms)),
+            ("step_ms", Json::Num(self.step_ms)),
+            ("samples_per_s", Json::Num(self.samples_per_s)),
+            ("step_energy_kj", Json::Num(self.step_energy_kj)),
+            (
+                "assignment",
+                Json::Arr(
+                    self.assignment
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::obj(vec![
+                                ("key", Json::Str(k.clone())),
+                                ("value", Json::Str(v.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`SweepRow::to_json`] (journal replay).
+    pub fn from_json(j: &Json) -> Result<SweepRow> {
+        let mut assignment = Vec::new();
+        for pair in j
+            .req("assignment")?
+            .as_arr()
+            .ok_or_else(|| BoosterError::Artifact("row 'assignment' is not an array".into()))?
+        {
+            assignment.push((jstr(pair, "key")?, jstr(pair, "value")?));
+        }
+        Ok(SweepRow {
+            scenario: jstr(j, "scenario")?,
+            machine: jstr(j, "machine")?,
+            workload: jstr(j, "workload")?,
+            nodes: jint(j, "nodes")?,
+            gpus: jint(j, "gpus")?,
+            precision: jstr(j, "precision")?,
+            algo: jstr(j, "algo")?,
+            compression: jstr(j, "compression")?,
+            placement: jstr(j, "placement")?,
+            bucket_mb: jnum(j, "bucket_mb")?,
+            stages: jint(j, "stages")?,
+            tensor: jint(j, "tensor")?,
+            microbatches: jint(j, "microbatches")?,
+            schedule: jstr(j, "schedule")?,
+            sharding: jstr(j, "sharding")?,
+            bubble_pct: jnum(j, "bubble_pct")?,
+            compute_ms: jnum(j, "compute_ms")?,
+            comm_ms: jnum(j, "comm_ms")?,
+            rs_ms: jnum(j, "rs_ms")?,
+            ag_ms: jnum(j, "ag_ms")?,
+            tp_comm_ms: jnum(j, "tp_comm_ms")?,
+            step_ms: jnum(j, "step_ms")?,
+            samples_per_s: jnum(j, "samples_per_s")?,
+            step_energy_kj: jnum(j, "step_energy_kj")?,
+            assignment,
+        })
+    }
+}
+
+/// The recorded fate of one grid point — what the journal persists and
+/// what a resumed run restores.
+#[derive(Debug, Clone)]
+pub enum PointOutcome {
+    /// Priced successfully.
+    Row(Box<SweepRow>),
+    /// Skipped by the evaluation-time feasibility check (memory fit).
+    Infeasible {
+        /// Scenario name of the skipped point.
+        scenario: String,
+        /// Why it was infeasible.
+        reason: String,
+    },
+    /// The evaluation panicked (both attempts); the sweep carried on.
+    Failed {
+        /// Scenario name of the failed point.
+        scenario: String,
+        /// Machine group the point belonged to.
+        machine: String,
+        /// Panic payload text.
+        reason: String,
+    },
+}
+
+/// A point whose evaluation panicked — recorded beside `infeasible` in
+/// [`SweepOutcome`] instead of aborting the grid.
+#[derive(Debug, Clone)]
+pub struct FailedPoint {
+    /// Scenario name of the failed point.
+    pub scenario: String,
+    /// Machine group the point belonged to.
+    pub machine: String,
+    /// Panic payload text (both attempts).
+    pub reason: String,
+}
+
 /// Per-machine-group execution stats for `results/BENCH_sweep.json`.
 #[derive(Debug, Clone)]
 pub struct GroupStats {
@@ -259,12 +583,28 @@ pub struct SweepOutcome {
     /// `(scenario, reason)` for grid points that were infeasible at
     /// evaluation time, in expansion order per machine group.
     pub infeasible: Vec<(String, String)>,
-    /// Per-machine-group worker counts and cache stats.
+    /// Points whose evaluation panicked (after one bounded retry) — the
+    /// sweep records them and carries on instead of aborting.
+    pub failed: Vec<FailedPoint>,
+    /// Per-machine-group worker counts and cache stats (groups whose
+    /// points were all restored from a journal do not evaluate and are
+    /// absent).
     pub groups: Vec<GroupStats>,
     /// Collective cost-cache hits across all machines in the sweep.
     pub cache_hits: u64,
     /// Flow simulations actually run.
     pub cache_misses: u64,
+    /// Whether the sweep was cancelled (SIGINT / `--interrupt-after`)
+    /// before every point completed.
+    pub interrupted: bool,
+    /// Grid points never evaluated (only non-zero when interrupted).
+    pub pending: usize,
+    /// Rows restored from the journal rather than re-evaluated.
+    pub resumed_rows: usize,
+    /// Infeasible markers restored from the journal.
+    pub resumed_infeasible: usize,
+    /// Failed markers restored from the journal.
+    pub resumed_failed: usize,
 }
 
 impl SweepOutcome {
@@ -320,39 +660,7 @@ impl SweepOutcome {
                 })
                 .collect(),
         );
-        let rows = Json::Arr(
-            self.rows
-                .iter()
-                .map(|r| {
-                    Json::obj(vec![
-                        ("scenario", Json::Str(r.scenario.clone())),
-                        ("machine", Json::Str(r.machine.clone())),
-                        ("workload", Json::Str(r.workload.clone())),
-                        ("nodes", Json::Num(r.nodes as f64)),
-                        ("gpus", Json::Num(r.gpus as f64)),
-                        ("precision", Json::Str(r.precision.clone())),
-                        ("algo", Json::Str(r.algo.clone())),
-                        ("compression", Json::Str(r.compression.clone())),
-                        ("placement", Json::Str(r.placement.clone())),
-                        ("bucket_mb", Json::Num(r.bucket_mb)),
-                        ("stages", Json::Num(r.stages as f64)),
-                        ("tensor", Json::Num(r.tensor as f64)),
-                        ("microbatches", Json::Num(r.microbatches as f64)),
-                        ("schedule", Json::Str(r.schedule.clone())),
-                        ("sharding", Json::Str(r.sharding.clone())),
-                        ("bubble_pct", Json::Num(r.bubble_pct)),
-                        ("compute_ms", Json::Num(r.compute_ms)),
-                        ("comm_ms", Json::Num(r.comm_ms)),
-                        ("rs_ms", Json::Num(r.rs_ms)),
-                        ("ag_ms", Json::Num(r.ag_ms)),
-                        ("tp_comm_ms", Json::Num(r.tp_comm_ms)),
-                        ("step_ms", Json::Num(r.step_ms)),
-                        ("samples_per_s", Json::Num(r.samples_per_s)),
-                        ("step_energy_kj", Json::Num(r.step_energy_kj)),
-                    ])
-                })
-                .collect(),
-        );
+        let rows = Json::Arr(self.rows.iter().map(|r| r.to_json()).collect());
         let infeasible = Json::Arr(
             self.infeasible
                 .iter()
@@ -378,13 +686,43 @@ impl SweepOutcome {
                 })
                 .collect(),
         );
+        let failed = Json::Arr(
+            self.failed
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(f.scenario.clone())),
+                        ("machine", Json::Str(f.machine.clone())),
+                        ("reason", Json::Str(f.reason.clone())),
+                    ])
+                })
+                .collect(),
+        );
         let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
             ("bench", Json::Str("sweep".into())),
             ("params", params),
             ("rows", rows),
             ("infeasible", infeasible),
+            ("failed", failed),
             ("groups", groups),
+            ("interrupted", Json::Bool(self.interrupted)),
+            ("pending", Json::Num(self.pending as f64)),
+            (
+                "resume",
+                Json::obj(vec![
+                    ("resumed_rows", Json::Num(self.resumed_rows as f64)),
+                    (
+                        "fresh_rows",
+                        Json::Num((self.rows.len() - self.resumed_rows) as f64),
+                    ),
+                    (
+                        "resumed_infeasible",
+                        Json::Num(self.resumed_infeasible as f64),
+                    ),
+                    ("resumed_failed", Json::Num(self.resumed_failed as f64)),
+                ]),
+            ),
             (
                 "cost_cache",
                 Json::obj(vec![
@@ -403,13 +741,134 @@ impl SweepOutcome {
 /// would reject wholesale.
 pub type Point = (ScenarioSpec, Vec<(String, String)>);
 
+/// Process-global SIGINT observation — hand-rolled (the vendored crate
+/// set has no `ctrlc`/`signal-hook`). The handler only bumps an atomic:
+/// the first Ctrl-C is *cooperative* (workers see [`sigint::pending`]
+/// through their [`Cancel`] token, stop dispatching new points, drain
+/// in-flight ones, and the driver flushes partial artifacts); the second
+/// Ctrl-C calls the async-signal-safe `_exit(130)` — the user means it.
+pub mod sigint {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static SEEN: AtomicUsize = AtomicUsize::new(0);
+
+    #[cfg(unix)]
+    mod ffi {
+        extern "C" {
+            pub fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+            pub fn _exit(code: i32) -> !;
+        }
+        pub const SIGINT: i32 = 2;
+    }
+
+    #[cfg(unix)]
+    extern "C" fn on_sigint(_sig: i32) {
+        if SEEN.fetch_add(1, Ordering::SeqCst) >= 1 {
+            unsafe { ffi::_exit(130) }
+        }
+    }
+
+    /// Install the SIGINT handler (no-op off unix) and reset the
+    /// seen-count so a long-lived process can run several sweeps.
+    pub fn install() {
+        SEEN.store(0, Ordering::SeqCst);
+        #[cfg(unix)]
+        unsafe {
+            ffi::signal(ffi::SIGINT, on_sigint);
+        }
+    }
+
+    /// Whether a SIGINT has arrived since [`install`].
+    pub fn pending() -> bool {
+        SEEN.load(Ordering::SeqCst) > 0
+    }
+}
+
+/// Cooperative cancellation token threaded through the sweep worker
+/// loops. Cancelling stops *dispatch* of new points; in-flight points
+/// drain, so every row that does appear is identical to what an
+/// uninterrupted run would have produced.
+#[derive(Clone)]
+pub struct Cancel {
+    flag: Arc<AtomicBool>,
+    watch_sigint: bool,
+}
+
+impl Default for Cancel {
+    fn default() -> Cancel {
+        Cancel::new()
+    }
+}
+
+impl Cancel {
+    /// A token nobody has cancelled (library callers, tests).
+    pub fn new() -> Cancel {
+        Cancel {
+            flag: Arc::new(AtomicBool::new(false)),
+            watch_sigint: false,
+        }
+    }
+
+    /// A token that additionally observes the process SIGINT count
+    /// (see [`sigint::install`]) — the `booster sweep` wiring.
+    pub fn with_sigint() -> Cancel {
+        Cancel {
+            flag: Arc::new(AtomicBool::new(false)),
+            watch_sigint: true,
+        }
+    }
+
+    /// Request cancellation.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst) || (self.watch_sigint && sigint::pending())
+    }
+}
+
+/// Fault-injection hook: called with `(grid_index, attempt)` before each
+/// evaluation attempt; returning `true` makes that attempt panic. Tests
+/// and the CI failed-path fixture use it to exercise worker fault
+/// isolation deterministically.
+pub type FaultHook = Arc<dyn Fn(usize, usize) -> bool + Send + Sync>;
+
+/// Options for [`run_points_with`] / [`run_journaled`].
+#[derive(Clone, Default)]
+pub struct SweepOptions {
+    /// Intra-machine evaluation workers per group (`0` = auto).
+    pub workers: usize,
+    /// Run everything on the caller's thread (the [`run_sequential`]
+    /// path — differential-test baseline and honest benchmarking).
+    pub sequential: bool,
+    /// Cooperative cancellation token.
+    pub cancel: Cancel,
+    /// Flip `cancel` after this many points complete in this run —
+    /// deterministic mid-grid interruption for tests and CI (a timed
+    /// SIGINT would be flaky).
+    pub interrupt_after: Option<usize>,
+    /// Fault-injection hook (see [`FaultHook`]).
+    pub fault: Option<FaultHook>,
+}
+
+/// Shared evaluation context, one per engine run.
+struct EvalCtx<'a> {
+    points: &'a [Point],
+    cancel: &'a Cancel,
+    fault: Option<&'a FaultHook>,
+    journal: Option<&'a Mutex<Journal>>,
+    /// Points completed in *this* run (fresh, not restored).
+    done: &'a AtomicUsize,
+    interrupt_after: Option<usize>,
+}
+
 /// One machine group's outcome.
 struct GroupOutcome {
-    /// One entry per point in group order; `None` marks an infeasible
-    /// point (recorded in `infeasible` instead).
-    rows: Vec<Option<SweepRow>>,
-    /// `(scenario, reason)` for infeasible points, in group order.
-    infeasible: Vec<(String, String)>,
+    /// One entry per *pending* point in group order; `None` marks a
+    /// point skipped by cancellation.
+    outcomes: Vec<Option<PointOutcome>>,
     /// Collective cost-cache (hits, misses) of this group's model.
     cache: (u64, u64),
     /// Workers the evaluation phase was sharded across.
@@ -417,12 +876,6 @@ struct GroupOutcome {
 }
 
 type GroupResult = Result<GroupOutcome>;
-
-/// A worker's slice of one group's evaluation.
-struct ChunkOutcome {
-    rows: Vec<Option<SweepRow>>,
-    infeasible: Vec<(String, String)>,
-}
 
 /// Split `0..n` into at most `workers` contiguous, near-equal ranges.
 fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
@@ -439,65 +892,139 @@ fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
-/// Evaluate the points in `idxs` (a contiguous slice of one group's point
-/// indices) through one per-worker [`HybridTimeline`] wrapped around the
-/// group's shared collective model. The cache is already warm and frozen,
-/// so every collective query is a deterministic read — this is what makes
-/// sharding the loop across workers value- and stats-preserving.
+/// Extract a panic payload's text (workers and [`catch_unwind`] share it).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic payload".into())
+}
+
+/// Evaluate one grid point with worker fault isolation: a panicking
+/// evaluation is caught, retried once on a freshly rebuilt timeline
+/// (`hy` is dropped — a panic may leave it mid-reconfiguration), and
+/// recorded as a [`PointOutcome::Failed`] if the retry panics too. A
+/// `Config` error from pricing is the pre-existing infeasible path; any
+/// other error still aborts the sweep.
+fn eval_one<'t>(
+    ctx: &EvalCtx<'_>,
+    i: usize,
+    topo: &'t crate::topology::Topology,
+    power: &crate::hw::power::PowerModel,
+    shared: &Arc<CollectiveModel<'t>>,
+    hy: &mut Option<HybridTimeline<'t>>,
+) -> Result<PointOutcome> {
+    let (spec, asg) = &ctx.points[i];
+    let mut attempt = 0;
+    loop {
+        if hy.is_none() {
+            *hy = Some(HybridTimeline::with_collectives(spec, topo, Arc::clone(shared))?);
+        }
+        let tl = hy.as_mut().expect("timeline just built");
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<SweepRow> {
+            if let Some(fault) = ctx.fault {
+                if fault(i, attempt) {
+                    panic!("injected fault at point {i} attempt {attempt}");
+                }
+            }
+            tl.configure_from(spec)?;
+            let gpus = spec.job_gpus(topo)?;
+            let mut rng = Rng::seed_from(7);
+            let st = tl.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng)?;
+            let samples = st.samples_per_step();
+            Ok(SweepRow {
+                scenario: spec.name.clone(),
+                machine: spec.machine.name.clone(),
+                workload: spec.workload.name.clone(),
+                nodes: spec.parallelism.nodes,
+                gpus: gpus.len(),
+                precision: spec.precision.clone(),
+                algo: spec.parallelism.algo.clone(),
+                compression: spec.parallelism.compression.clone(),
+                placement: spec.parallelism.placement.clone(),
+                bucket_mb: spec.parallelism.bucket_bytes / 1e6,
+                stages: spec.parallelism.pipeline_stages,
+                tensor: spec.parallelism.tensor_parallel,
+                microbatches: spec.parallelism.microbatches,
+                schedule: spec.parallelism.schedule.clone(),
+                sharding: spec.parallelism.sharding.clone(),
+                bubble_pct: st.bubble_fraction * 100.0,
+                compute_ms: st.compute * 1e3,
+                comm_ms: st.comm * 1e3,
+                rs_ms: st.rs * 1e3,
+                ag_ms: st.ag * 1e3,
+                tp_comm_ms: st.tp_comm * 1e3,
+                step_ms: st.total * 1e3,
+                samples_per_s: samples / st.total,
+                step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
+                assignment: asg.clone(),
+            })
+        }));
+        match caught {
+            Ok(Ok(row)) => return Ok(PointOutcome::Row(Box::new(row))),
+            Ok(Err(BoosterError::Config(reason))) => {
+                return Ok(PointOutcome::Infeasible {
+                    scenario: spec.name.clone(),
+                    reason,
+                })
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                // The timeline may be mid-mutation; rebuild before retry.
+                *hy = None;
+                let what = panic_text(payload.as_ref());
+                if attempt == 0 {
+                    attempt = 1;
+                    continue;
+                }
+                return Ok(PointOutcome::Failed {
+                    scenario: spec.name.clone(),
+                    machine: spec.machine.name.clone(),
+                    reason: format!("evaluation panicked (retried once): {what}"),
+                });
+            }
+        }
+    }
+}
+
+/// Evaluate the points in `idxs` (a contiguous slice of one group's
+/// pending point indices) through one per-worker [`HybridTimeline`]
+/// wrapped around the group's shared collective model. The cache is
+/// already warm and frozen, so every collective query is a deterministic
+/// read — this is what makes sharding the loop across workers value- and
+/// stats-preserving. Each completed point is journaled and counted; a
+/// cancellation request stops dispatch, leaving the rest `None`.
 fn eval_points<'t>(
-    points: &[Point],
+    ctx: &EvalCtx<'_>,
     idxs: &[usize],
     topo: &'t crate::topology::Topology,
     power: &crate::hw::power::PowerModel,
     shared: &Arc<CollectiveModel<'t>>,
-) -> Result<ChunkOutcome> {
-    let mut hy = HybridTimeline::with_collectives(&points[idxs[0]].0, topo, Arc::clone(shared))?;
-    let mut rows = Vec::with_capacity(idxs.len());
-    let mut infeasible = Vec::new();
+) -> Result<Vec<Option<PointOutcome>>> {
+    let mut hy: Option<HybridTimeline<'t>> = None;
+    let mut out = Vec::with_capacity(idxs.len());
     for &i in idxs {
-        let (spec, asg) = &points[i];
-        hy.configure_from(spec)?;
-        let gpus = spec.job_gpus(topo)?;
-        let mut rng = Rng::seed_from(7);
-        let st = match hy.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng) {
-            Ok(st) => st,
-            Err(BoosterError::Config(reason)) => {
-                infeasible.push((spec.name.clone(), reason));
-                rows.push(None);
-                continue;
+        if ctx.cancel.cancelled() {
+            out.push(None);
+            continue;
+        }
+        let outcome = eval_one(ctx, i, topo, power, shared, &mut hy)?;
+        if let Some(journal) = ctx.journal {
+            journal
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .append(i, &outcome)?;
+        }
+        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(limit) = ctx.interrupt_after {
+            if completed >= limit {
+                ctx.cancel.cancel();
             }
-            Err(e) => return Err(e),
-        };
-        let samples = st.samples_per_step();
-        rows.push(Some(SweepRow {
-            scenario: spec.name.clone(),
-            machine: spec.machine.name.clone(),
-            workload: spec.workload.name.clone(),
-            nodes: spec.parallelism.nodes,
-            gpus: gpus.len(),
-            precision: spec.precision.clone(),
-            algo: spec.parallelism.algo.clone(),
-            compression: spec.parallelism.compression.clone(),
-            placement: spec.parallelism.placement.clone(),
-            bucket_mb: spec.parallelism.bucket_bytes / 1e6,
-            stages: spec.parallelism.pipeline_stages,
-            tensor: spec.parallelism.tensor_parallel,
-            microbatches: spec.parallelism.microbatches,
-            schedule: spec.parallelism.schedule.clone(),
-            sharding: spec.parallelism.sharding.clone(),
-            bubble_pct: st.bubble_fraction * 100.0,
-            compute_ms: st.compute * 1e3,
-            comm_ms: st.comm * 1e3,
-            rs_ms: st.rs * 1e3,
-            ag_ms: st.ag * 1e3,
-            tp_comm_ms: st.tp_comm * 1e3,
-            step_ms: st.total * 1e3,
-            samples_per_s: samples / st.total,
-            step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
-            assignment: asg.clone(),
-        }));
+        }
+        out.push(Some(outcome));
     }
-    Ok(ChunkOutcome { rows, infeasible })
+    Ok(out)
 }
 
 /// Evaluate one machine group's points through a single shared
@@ -514,30 +1041,53 @@ fn eval_points<'t>(
 ///
 /// A point whose pricing fails with a `Config` error (the pipeline
 /// memory-fit check — only decidable at evaluation time) is recorded as
-/// infeasible and the group continues; any other error aborts the sweep.
-fn eval_group(points: &[Point], idxs: &[usize], workers: usize) -> GroupResult {
-    let machine = &points[idxs[0]].0.machine;
+/// infeasible and the group continues; a panicking point is retried once
+/// and then recorded as failed; any other error aborts the sweep.
+///
+/// `idxs` is the group's **full** point list; `pending` the subset that
+/// still needs evaluation (everything on a fresh run, the unjournaled
+/// tail on a resume). The warm phase deliberately replays **all** points
+/// — cost-cache interpolation curves are path-dependent, so skipping
+/// restored points would change what the cache learned and break the
+/// byte-identical-CSV resume contract; only the (expensive) evaluation
+/// phase skips them.
+fn eval_group(ctx: &EvalCtx<'_>, idxs: &[usize], pending: &[usize], workers: usize) -> GroupResult {
+    let machine = &ctx.points[idxs[0]].0.machine;
     let topo = machine.build_topology()?;
     let power = machine.power_model()?;
     let shared = Arc::new(CollectiveModel::new(&topo));
+    let chunks = chunk_ranges(pending.len(), workers);
 
     // Phase 1: deterministic sequential warm-up of the shared cache.
+    let mut cancelled_in_warm = false;
     {
         let mut hy =
-            HybridTimeline::with_collectives(&points[idxs[0]].0, &topo, Arc::clone(&shared))?;
+            HybridTimeline::with_collectives(&ctx.points[idxs[0]].0, &topo, Arc::clone(&shared))?;
         for &i in idxs {
-            let (spec, _) = &points[i];
+            if ctx.cancel.cancelled() {
+                cancelled_in_warm = true;
+                break;
+            }
+            let (spec, _) = &ctx.points[i];
             hy.configure_from(spec)?;
             let gpus = spec.job_gpus(&topo)?;
             hy.warm_comm(&gpus, spec.workload.batch_per_gpu)?;
         }
     }
     shared.freeze_cache(true);
+    if cancelled_in_warm {
+        // A half-warm cache would price points differently than an
+        // uninterrupted run; evaluate nothing in this group.
+        return Ok(GroupOutcome {
+            outcomes: vec![None; pending.len()],
+            cache: shared.cache_stats(),
+            workers: chunks.len(),
+        });
+    }
 
-    // Phase 2: shard the evaluation.
-    let chunks = chunk_ranges(idxs.len(), workers);
-    let outcomes: Vec<Result<ChunkOutcome>> = if chunks.len() <= 1 {
-        vec![eval_points(points, idxs, &topo, &power, &shared)]
+    // Phase 2: shard the evaluation over the pending points.
+    let outcomes: Vec<Result<Vec<Option<PointOutcome>>>> = if chunks.len() <= 1 {
+        vec![eval_points(ctx, pending, &topo, &power, &shared)]
     } else {
         std::thread::scope(|s| {
             let topo = &topo;
@@ -546,8 +1096,8 @@ fn eval_group(points: &[Point], idxs: &[usize], workers: usize) -> GroupResult {
             let handles: Vec<_> = chunks
                 .iter()
                 .map(|r| {
-                    let slice = &idxs[r.clone()];
-                    s.spawn(move || eval_points(points, slice, topo, power, shared))
+                    let slice = &pending[r.clone()];
+                    s.spawn(move || eval_points(ctx, slice, topo, power, shared))
                 })
                 .collect();
             handles
@@ -557,34 +1107,38 @@ fn eval_group(points: &[Point], idxs: &[usize], workers: usize) -> GroupResult {
         })
     };
 
-    let mut rows = Vec::with_capacity(idxs.len());
-    let mut infeasible = Vec::new();
+    let mut merged = Vec::with_capacity(pending.len());
     for o in outcomes {
-        let o = o?;
-        rows.extend(o.rows);
-        infeasible.extend(o.infeasible);
+        merged.extend(o?);
     }
     Ok(GroupOutcome {
-        rows,
-        infeasible,
+        outcomes: merged,
         cache: shared.cache_stats(),
         workers: chunks.len(),
     })
 }
 
-/// Materialize and validate the grid. A bad grid value fails the whole
-/// sweep here, before any simulation runs.
-fn prepare(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<Vec<Point>> {
+/// Materialize and validate the grid. Expression axes are resolved in
+/// dependency order per point (cycles and unknown variables fail here);
+/// a bad grid value fails the whole sweep here, before any simulation
+/// runs. The returned assignments carry the *resolved* values in input
+/// (axis) order.
+pub fn prepare(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<Vec<Point>> {
+    let plan = ExprPlan::build(axes)?;
     let assignments = expand(axes);
     let mut points: Vec<Point> = Vec::with_capacity(assignments.len());
     for asg in assignments {
+        let resolved = plan.resolve(&asg)?;
         let mut spec = base.clone();
-        for (k, v) in &asg {
+        for (k, v) in &resolved {
+            if is_var_key(k) {
+                continue; // variable axes only feed expressions
+            }
             apply_param(&mut spec, k, v)?;
         }
         spec.name = spec.auto_name();
         spec.validate()?;
-        points.push((spec, asg));
+        points.push((spec, resolved));
     }
     Ok(points)
 }
@@ -601,40 +1155,159 @@ fn group_by_machine(points: &[Point]) -> Vec<(String, Vec<usize>)> {
     groups
 }
 
-/// Merge per-group results back into expansion order and sum cache stats.
-fn merge(
-    n_points: usize,
-    groups: &[(String, Vec<usize>)],
+/// One machine group's work item: all its point indices plus the subset
+/// still pending evaluation.
+struct Work {
+    machine: String,
+    idxs: Vec<usize>,
+    pending: Vec<usize>,
+}
+
+/// Assemble the final outcome: slot evaluated outcomes into the grid,
+/// overlay the journal-restored ones, and walk the grid in expansion
+/// order so `rows`, `infeasible` and `failed` keep their deterministic
+/// order regardless of threading or resume history.
+fn assemble(
+    restored: Vec<Option<PointOutcome>>,
+    work: &[Work],
     results: Vec<GroupResult>,
+    interrupted: bool,
 ) -> Result<SweepOutcome> {
-    let mut rows: Vec<Option<SweepRow>> = (0..n_points).map(|_| None).collect();
-    let mut infeasible = Vec::new();
-    let mut stats = Vec::with_capacity(groups.len());
+    let mut resumed_rows = 0;
+    let mut resumed_infeasible = 0;
+    let mut resumed_failed = 0;
+    for r in restored.iter().flatten() {
+        match r {
+            PointOutcome::Row(_) => resumed_rows += 1,
+            PointOutcome::Infeasible { .. } => resumed_infeasible += 1,
+            PointOutcome::Failed { .. } => resumed_failed += 1,
+        }
+    }
+
+    let mut grid = restored;
+    let mut stats = Vec::with_capacity(work.len());
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
-    for ((machine, idxs), res) in groups.iter().zip(results) {
+    for (w, res) in work.iter().zip(results) {
         let group = res?;
-        for (&i, row) in idxs.iter().zip(group.rows) {
-            rows[i] = row;
+        for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
+            grid[i] = outcome;
         }
-        infeasible.extend(group.infeasible);
         cache_hits += group.cache.0;
         cache_misses += group.cache.1;
         stats.push(GroupStats {
-            machine: machine.clone(),
-            points: idxs.len(),
+            machine: w.machine.clone(),
+            points: w.pending.len(),
             workers: group.workers,
             hits: group.cache.0,
             misses: group.cache.1,
         });
     }
+
+    let mut rows = Vec::new();
+    let mut infeasible = Vec::new();
+    let mut failed = Vec::new();
+    let mut pending = 0;
+    for outcome in grid {
+        match outcome {
+            Some(PointOutcome::Row(row)) => rows.push(*row),
+            Some(PointOutcome::Infeasible { scenario, reason }) => {
+                infeasible.push((scenario, reason))
+            }
+            Some(PointOutcome::Failed {
+                scenario,
+                machine,
+                reason,
+            }) => failed.push(FailedPoint {
+                scenario,
+                machine,
+                reason,
+            }),
+            None => pending += 1,
+        }
+    }
     Ok(SweepOutcome {
-        rows: rows.into_iter().flatten().collect(),
+        rows,
         infeasible,
+        failed,
         groups: stats,
         cache_hits,
         cache_misses,
+        interrupted,
+        pending,
+        resumed_rows,
+        resumed_infeasible,
+        resumed_failed,
     })
+}
+
+/// The sweep engine: group points by machine, skip groups whose points
+/// were all restored from the journal, evaluate the rest (machine groups
+/// on parallel scoped threads unless `opts.sequential`, each group's
+/// pending points sharded across workers over one pre-warmed frozen
+/// cache), and assemble everything in expansion order.
+fn run_engine(
+    points: &[Point],
+    restored: Vec<Option<PointOutcome>>,
+    journal: Option<Mutex<Journal>>,
+    opts: &SweepOptions,
+) -> Result<SweepOutcome> {
+    if points.is_empty() {
+        return Err(BoosterError::Config("sweep with no grid points".into()));
+    }
+    assert_eq!(restored.len(), points.len(), "restored map must cover the grid");
+    let groups = group_by_machine(points);
+    let work: Vec<Work> = groups
+        .into_iter()
+        .filter_map(|(machine, idxs)| {
+            let pending: Vec<usize> =
+                idxs.iter().copied().filter(|&i| restored[i].is_none()).collect();
+            // A fully-restored group re-simulates nothing — not even the
+            // warm phase (its cache would never be read).
+            (!pending.is_empty()).then_some(Work {
+                machine,
+                idxs,
+                pending,
+            })
+        })
+        .collect();
+    let workers = if opts.sequential {
+        1
+    } else if opts.workers == 0 {
+        auto_workers(work.len())
+    } else {
+        opts.workers
+    };
+    let done = AtomicUsize::new(0);
+    let ctx = EvalCtx {
+        points,
+        cancel: &opts.cancel,
+        fault: opts.fault.as_ref(),
+        journal: journal.as_ref(),
+        done: &done,
+        interrupt_after: opts.interrupt_after,
+    };
+    let results: Vec<GroupResult> = if opts.sequential || work.len() <= 1 {
+        work.iter().map(|w| eval_group(&ctx, &w.idxs, &w.pending, workers)).collect()
+    } else {
+        std::thread::scope(|s| {
+            let ctx = &ctx;
+            let handles: Vec<_> = work
+                .iter()
+                .map(|w| {
+                    (
+                        w.machine.as_str(),
+                        s.spawn(move || eval_group(ctx, &w.idxs, &w.pending, workers)),
+                    )
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|(machine, handle)| join_worker(machine, handle))
+                .collect()
+        })
+    };
+    assemble(restored, &work, results, opts.cancel.cancelled())
 }
 
 /// Intra-machine workers to give each of `groups` machine groups:
@@ -651,32 +1324,20 @@ fn auto_workers(groups: usize) -> usize {
 /// come back in `points` order; the outcome is byte-identical to
 /// [`run_points_sequential`] on the same points.
 pub fn run_points(points: &[Point], workers_per_group: usize) -> Result<SweepOutcome> {
-    if points.is_empty() {
-        return Err(BoosterError::Config("sweep with no grid points".into()));
-    }
-    let groups = group_by_machine(points);
-    let workers = if workers_per_group == 0 {
-        auto_workers(groups.len())
-    } else {
-        workers_per_group
-    };
-    if groups.len() <= 1 {
-        let results = groups.iter().map(|(_, g)| eval_group(points, g, workers)).collect();
-        return merge(points.len(), &groups, results);
-    }
-    let results: Vec<GroupResult> = std::thread::scope(|s| {
-        let handles: Vec<_> = groups
-            .iter()
-            .map(|(machine, idxs)| {
-                (machine, s.spawn(move || eval_group(points, idxs, workers)))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|(machine, handle)| join_worker(machine, handle))
-            .collect()
-    });
-    merge(points.len(), &groups, results)
+    run_points_with(
+        points,
+        &SweepOptions {
+            workers: workers_per_group,
+            ..SweepOptions::default()
+        },
+    )
+}
+
+/// [`run_points`] with full [`SweepOptions`] control (cancellation,
+/// deterministic interruption, fault injection) but no journal.
+pub fn run_points_with(points: &[Point], opts: &SweepOptions) -> Result<SweepOutcome> {
+    let restored = (0..points.len()).map(|_| None).collect();
+    run_engine(points, restored, None, opts)
 }
 
 /// [`run_points`] with no threading at all: machine groups in sequence on
@@ -685,12 +1346,13 @@ pub fn run_points(points: &[Point], workers_per_group: usize) -> Result<SweepOut
 /// byte-identical CSV (the differential tests pin this); benchmarks also
 /// use it to measure the threading speedup honestly.
 pub fn run_points_sequential(points: &[Point]) -> Result<SweepOutcome> {
-    if points.is_empty() {
-        return Err(BoosterError::Config("sweep with no grid points".into()));
-    }
-    let groups = group_by_machine(points);
-    let results = groups.iter().map(|(_, g)| eval_group(points, g, 1)).collect();
-    merge(points.len(), &groups, results)
+    run_points_with(
+        points,
+        &SweepOptions {
+            sequential: true,
+            ..SweepOptions::default()
+        },
+    )
 }
 
 /// Expand the grid over `base` and evaluate every point in parallel —
@@ -703,6 +1365,31 @@ pub fn run(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
 /// [`run`] on the caller's thread only (see [`run_points_sequential`]).
 pub fn run_sequential(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<SweepOutcome> {
     run_points_sequential(&prepare(base, axes)?)
+}
+
+/// The crash-tolerant entry point behind `booster sweep`: expand and
+/// validate the grid, fingerprint it, open (or resume) the journal at
+/// `journal_path`, skip journal-restored points, and evaluate the rest
+/// with `opts`. On resume an incompatible journal — different axes, a
+/// changed base spec, another schema version — is rejected with an error
+/// naming the mismatch before anything runs. The final CSV is
+/// byte-identical to an uninterrupted run of the same grid.
+pub fn run_journaled(
+    base: &ScenarioSpec,
+    axes: &[ParamAxis],
+    journal_path: &Path,
+    resume: bool,
+    opts: &SweepOptions,
+) -> Result<SweepOutcome> {
+    let points = prepare(base, axes)?;
+    let fp = GridFingerprint::new(base, axes);
+    let (journal, restored) = if resume {
+        Journal::resume(journal_path, &fp, points.len())?
+    } else {
+        let journal = Journal::create(journal_path, &fp)?;
+        (journal, (0..points.len()).map(|_| None).collect())
+    };
+    run_engine(&points, restored, Some(Mutex::new(journal)), opts)
 }
 
 /// Resolve a worker's result, turning a panic into a simulation error
@@ -1161,6 +1848,236 @@ mod tests {
         assert_eq!(sharded.cache_hits, seq.cache_hits, "summed hit stats match");
         assert_eq!(sharded.cache_misses, seq.cache_misses, "summed miss stats match");
         assert!(sharded.cache_hits > 0, "warm + frozen eval must hit");
+    }
+
+    fn tmp_journal(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("booster_sweep_{}_{name}.journal", std::process::id()))
+    }
+
+    fn one_worker() -> SweepOptions {
+        SweepOptions {
+            workers: 1,
+            ..SweepOptions::default()
+        }
+    }
+
+    #[test]
+    fn dependent_params_expand_in_dependency_order() {
+        // The acceptance grid: `microbatches=8n` and `stages=n` both
+        // depend on the variable axis `n`, which comes *last* on the
+        // command line — evaluation must follow dependencies, not input
+        // order, while columns keep input order.
+        let mut base = presets::default_scenario("juwels_booster").unwrap();
+        base.parallelism.nodes = 4; // 16 GPUs
+        let axes = parse_params(&s(&["stages=n", "microbatches=8n", "n=1", "4"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!((out.rows[0].stages, out.rows[0].microbatches), (1, 8));
+        assert_eq!((out.rows[1].stages, out.rows[1].microbatches), (4, 32));
+        // Assignment columns preserve input order: stages, microbatches, n.
+        let keys: Vec<&str> =
+            out.rows[0].assignment.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["stages", "microbatches", "n"]);
+        // ...with resolved values.
+        assert_eq!(out.rows[1].assignment[1].1, "32");
+        assert_eq!(out.rows[1].assignment[2].1, "4");
+        // First axis (stages, tied to n) is still the outermost loop.
+        assert!(out.rows[0].stages < out.rows[1].stages);
+    }
+
+    #[test]
+    fn dependent_param_cycle_is_detected_and_named() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["stages=microbatches", "microbatches=2stages"])).unwrap();
+        let err = run(&base, &axes).unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(
+            err.contains("stages -> microbatches -> stages")
+                || err.contains("microbatches -> stages -> microbatches"),
+            "cycle must be spelled out: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_expression_variable_lists_defined_names() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["n=1", "2", "microbatches=8q"])).unwrap();
+        let err = run(&base, &axes).unwrap_err().to_string();
+        assert!(err.contains("unknown variable 'q'"), "{err}");
+        assert!(err.contains("defined: n, microbatches"), "must list the defined axes: {err}");
+        // A variable naming a non-numeric axis is just as unknown.
+        let axes = parse_params(&s(&["schedule=gpipe", "microbatches=2schedule"])).unwrap();
+        assert!(run(&base, &axes).is_err());
+    }
+
+    #[test]
+    fn variable_axes_multiply_the_grid_without_touching_the_spec() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["n=1", "2", "nodes=n"])).unwrap();
+        let out = run(&base, &axes).unwrap();
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!(out.rows[0].nodes, 1);
+        assert_eq!(out.rows[1].nodes, 2);
+        assert_eq!(out.rows[0].assignment[0], ("n".into(), "1".into()));
+    }
+
+    #[test]
+    fn kill_and_resume_produces_byte_identical_csv() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let path = tmp_journal("resume");
+
+        // Control: uninterrupted journaled run.
+        let control = run_journaled(&base, &axes, &path, false, &one_worker()).unwrap();
+        assert_eq!(control.rows.len(), 4);
+        assert!(!control.interrupted);
+        assert_eq!(control.pending, 0);
+        assert_eq!(control.resumed_rows, 0);
+
+        // Fresh run killed deterministically after 2 completed points
+        // (one worker -> the journal holds exactly the first 2 points).
+        let interrupted = run_journaled(
+            &base,
+            &axes,
+            &path,
+            false,
+            &SweepOptions {
+                workers: 1,
+                interrupt_after: Some(2),
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(interrupted.interrupted);
+        assert_eq!(interrupted.rows.len(), 2);
+        assert_eq!(interrupted.pending, 2);
+
+        // Resume: only the missing points evaluate; the CSV is
+        // byte-identical to the uninterrupted control.
+        let resumed = run_journaled(&base, &axes, &path, true, &one_worker()).unwrap();
+        assert!(!resumed.interrupted);
+        assert_eq!(resumed.pending, 0);
+        assert_eq!(resumed.resumed_rows, 2);
+        assert_eq!(resumed.rows.len(), 4);
+        assert_eq!(resumed.to_csv(), control.to_csv(), "resume must be byte-identical");
+        // Restored points skip the (frozen-cache) evaluation phase: the
+        // resumed run reads the cache strictly less than the control.
+        assert!(
+            resumed.cache_hits < control.cache_hits,
+            "journaled points must not re-evaluate ({} !< {})",
+            resumed.cache_hits,
+            control.cache_hits
+        );
+
+        // Crash mid-append: a torn final journal line is recovered by
+        // re-evaluating just that point.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 25]).unwrap();
+        let recovered = run_journaled(&base, &axes, &path, true, &one_worker()).unwrap();
+        assert_eq!(recovered.resumed_rows, 3);
+        assert_eq!(recovered.to_csv(), control.to_csv());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_rejects_an_incompatible_grid_naming_the_mismatch() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2"])).unwrap();
+        let path = tmp_journal("mismatch");
+        run_journaled(&base, &axes, &path, false, &one_worker()).unwrap();
+
+        // Different axes.
+        let other = parse_params(&s(&["nodes=1", "2", "precision=bf16"])).unwrap();
+        let err = run_journaled(&base, &other, &path, true, &one_worker())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot resume"), "{err}");
+        assert!(err.contains("axes"), "{err}");
+        assert!(err.contains("precision=bf16"), "must name the new axis: {err}");
+
+        // Different base spec.
+        let mut moved = base.clone();
+        moved.workload.batch_per_gpu *= 2;
+        let err = run_journaled(&moved, &axes, &path, true, &one_worker())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("base scenario fingerprint"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn panicking_point_is_retried_then_recorded_failed() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2"])).unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        // Point 1 panics on every attempt: one failed row, sweep intact.
+        let fault: FaultHook = Arc::new(|i, _attempt| i == 1);
+        let out = run_points_with(
+            &points,
+            &SweepOptions {
+                workers: 1,
+                fault: Some(fault),
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows.len(), 1, "the healthy point still prices");
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].machine, "selene");
+        assert!(out.failed[0].reason.contains("injected fault"), "{}", out.failed[0].reason);
+        assert!(out.failed[0].reason.contains("retried once"), "{}", out.failed[0].reason);
+        assert!(!out.interrupted);
+        assert_eq!(out.pending, 0);
+        let j = out.to_json(&axes);
+        assert_eq!(j.req("failed").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn transient_panic_is_absorbed_by_the_retry() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2"])).unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        let clean = run_points_with(&points, &one_worker()).unwrap();
+        // Point 0 panics only on its first attempt: the bounded retry
+        // rebuilds the timeline and must reproduce the exact row.
+        let fault: FaultHook = Arc::new(|i, attempt| i == 0 && attempt == 0);
+        let out = run_points_with(
+            &points,
+            &SweepOptions {
+                workers: 1,
+                fault: Some(fault),
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(out.failed.is_empty(), "one retry must absorb a transient fault");
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!(out.to_csv(), clean.to_csv(), "retried row must be byte-identical");
+    }
+
+    #[test]
+    fn cancelled_sweep_reports_interrupted_with_pending_points() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        // Pre-cancelled: dispatch never starts, everything stays pending.
+        let cancel = Cancel::new();
+        cancel.cancel();
+        let out = run_points_with(
+            &points,
+            &SweepOptions {
+                workers: 1,
+                cancel,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(out.interrupted);
+        assert_eq!(out.pending, 4);
+        assert!(out.rows.is_empty());
+        let j = out.to_json(&axes);
+        assert_eq!(j.req("interrupted").unwrap().as_bool(), Some(true));
+        assert_eq!(j.req("pending").unwrap().as_usize(), Some(4));
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Tiny arithmetic expression parser for dependent sweep parameters.
+//!
+//! Grammar (runexp-style):
+//!
+//! ```text
+//! expr    := term (('+' | '-') term)*
+//! term    := unary (('*' | '/')? unary)*      // adjacency = implicit '*'
+//! unary   := '-' unary | atom
+//! atom    := NUMBER | IDENT | '(' expr ')'
+//! ```
+//!
+//! Implicit multiplication makes `8n` mean `8 * n` and `2(n+1)` mean
+//! `2 * (n + 1)`, matching the `ylxdzsw/runexp` exemplar. Identifiers are
+//! case-insensitive (lowercased at parse time). Evaluation takes a
+//! variable environment and reports unknown variables by listing the
+//! names that *are* defined, so a sweep typo fails with a useful message.
+
+use std::collections::BTreeMap;
+
+use super::error::{BoosterError, Result};
+
+/// A parsed arithmetic expression over f64 variables.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Numeric literal.
+    Num(f64),
+    /// Variable reference (lowercased).
+    Var(String),
+    /// Negation.
+    Neg(Box<Expr>),
+    /// Binary operation.
+    Bin(Op, Box<Expr>, Box<Expr>),
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Addition.
+    Add,
+    /// Subtraction.
+    Sub,
+    /// Multiplication (explicit `*` or implicit adjacency).
+    Mul,
+    /// Division.
+    Div,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    LParen,
+    RParen,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            ' ' | '\t' => i += 1,
+            '+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                toks.push(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                toks.push(Tok::Slash);
+                i += 1;
+            }
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == '.') {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                let n: f64 = text.parse().map_err(|_| {
+                    BoosterError::Config(format!("bad number {text:?} in expression {src:?}"))
+                })?;
+                toks.push(Tok::Num(n));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_')
+                {
+                    i += 1;
+                }
+                // `8n` lexes the digits first, so an identifier never
+                // starts mid-number; `n8` is one identifier.
+                let text: String = bytes[start..i].iter().collect();
+                toks.push(Tok::Ident(text.to_ascii_lowercase()));
+            }
+            _ => {
+                return Err(BoosterError::Config(format!(
+                    "unexpected character {c:?} in expression {src:?}"
+                )))
+            }
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    src: &'a str,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.term()?;
+        while let Some(op) = match self.peek() {
+            Some(Tok::Plus) => Some(Op::Add),
+            Some(Tok::Minus) => Some(Op::Sub),
+            _ => None,
+        } {
+            self.next();
+            let rhs = self.term()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.next();
+                    let rhs = self.unary()?;
+                    lhs = Expr::Bin(Op::Mul, Box::new(lhs), Box::new(rhs));
+                }
+                Some(Tok::Slash) => {
+                    self.next();
+                    let rhs = self.unary()?;
+                    lhs = Expr::Bin(Op::Div, Box::new(lhs), Box::new(rhs));
+                }
+                // Adjacency is implicit multiplication: `8n`, `2(x+1)`,
+                // `n m`. A '-' is *not* adjacency (it binds as subtraction
+                // at the expr level), so only value-starting tokens count.
+                Some(Tok::Num(_)) | Some(Tok::Ident(_)) | Some(Tok::LParen) => {
+                    let rhs = self.unary()?;
+                    lhs = Expr::Bin(Op::Mul, Box::new(lhs), Box::new(rhs));
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        if let Some(Tok::Minus) = self.peek() {
+            self.next();
+            return Ok(Expr::Neg(Box::new(self.unary()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.next() {
+            Some(Tok::Num(n)) => Ok(Expr::Num(n)),
+            Some(Tok::Ident(name)) => Ok(Expr::Var(name)),
+            Some(Tok::LParen) => {
+                let inner = self.expr()?;
+                match self.next() {
+                    Some(Tok::RParen) => Ok(inner),
+                    _ => Err(BoosterError::Config(format!(
+                        "missing ')' in expression {:?}",
+                        self.src
+                    ))),
+                }
+            }
+            other => Err(BoosterError::Config(format!(
+                "expected a value in expression {:?}, got {other:?}",
+                self.src
+            ))),
+        }
+    }
+}
+
+impl Expr {
+    /// Parse an expression string.
+    pub fn parse(src: &str) -> Result<Expr> {
+        let toks = lex(src)?;
+        if toks.is_empty() {
+            return Err(BoosterError::Config(format!(
+                "empty expression {src:?}"
+            )));
+        }
+        let mut p = Parser {
+            toks: &toks,
+            pos: 0,
+            src,
+        };
+        let e = p.expr()?;
+        if p.pos != toks.len() {
+            return Err(BoosterError::Config(format!(
+                "trailing tokens in expression {src:?}"
+            )));
+        }
+        Ok(e)
+    }
+
+    /// All variable names referenced (lowercased, sorted, deduplicated).
+    pub fn vars(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Num(_) => {}
+            Expr::Var(v) => out.push(v.clone()),
+            Expr::Neg(e) => e.collect_vars(out),
+            Expr::Bin(_, a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+        }
+    }
+
+    /// Evaluate against a variable environment. Unknown variables error,
+    /// listing the names that are defined.
+    pub fn eval(&self, env: &BTreeMap<String, f64>) -> Result<f64> {
+        let v = self.eval_inner(env)?;
+        if !v.is_finite() {
+            return Err(BoosterError::Config(
+                "expression evaluated to a non-finite value".into(),
+            ));
+        }
+        Ok(v)
+    }
+
+    fn eval_inner(&self, env: &BTreeMap<String, f64>) -> Result<f64> {
+        match self {
+            Expr::Num(n) => Ok(*n),
+            Expr::Var(name) => env.get(name).copied().ok_or_else(|| {
+                let known: Vec<&str> = env.keys().map(|k| k.as_str()).collect();
+                BoosterError::Config(format!(
+                    "unknown variable '{name}' in expression (defined: {})",
+                    if known.is_empty() {
+                        "none".to_string()
+                    } else {
+                        known.join(", ")
+                    }
+                ))
+            }),
+            Expr::Neg(e) => Ok(-e.eval_inner(env)?),
+            Expr::Bin(op, a, b) => {
+                let (a, b) = (a.eval_inner(env)?, b.eval_inner(env)?);
+                match op {
+                    Op::Add => Ok(a + b),
+                    Op::Sub => Ok(a - b),
+                    Op::Mul => Ok(a * b),
+                    Op::Div => {
+                        if b == 0.0 {
+                            Err(BoosterError::Config(
+                                "division by zero in expression".into(),
+                            ))
+                        } else {
+                            Ok(a / b)
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether the expression is a bare literal (no variables, no ops).
+    pub fn is_literal(&self) -> bool {
+        matches!(self, Expr::Num(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect()
+    }
+
+    #[test]
+    fn literals_and_precedence() {
+        let e = Expr::parse("1 + 2 * 3").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 7.0);
+        let e = Expr::parse("(1 + 2) * 3").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 9.0);
+        let e = Expr::parse("8 / 2 / 2").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn implicit_multiplication() {
+        let e = Expr::parse("8n").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 4.0)])).unwrap(), 32.0);
+        let e = Expr::parse("2(n+1)").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 3.0)])).unwrap(), 8.0);
+        let e = Expr::parse("n m").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 3.0), ("m", 5.0)])).unwrap(), 15.0);
+    }
+
+    #[test]
+    fn unary_minus_and_case() {
+        let e = Expr::parse("-n + 10").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 4.0)])).unwrap(), 6.0);
+        // Identifiers are case-insensitive.
+        let e = Expr::parse("4N").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 2.0)])).unwrap(), 8.0);
+    }
+
+    #[test]
+    fn vars_collected_sorted() {
+        let e = Expr::parse("a + 2b + a").unwrap();
+        assert_eq!(e.vars(), vec!["a".to_string(), "b".to_string()]);
+        assert!(Expr::parse("42").unwrap().vars().is_empty());
+        assert!(Expr::parse("42").unwrap().is_literal());
+        assert!(!Expr::parse("4n").unwrap().is_literal());
+    }
+
+    #[test]
+    fn unknown_variable_lists_known_names() {
+        let e = Expr::parse("4q").unwrap();
+        let err = e
+            .eval(&env(&[("n", 1.0), ("m", 2.0)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown variable 'q'"), "{err}");
+        assert!(err.contains("m, n"), "{err}");
+    }
+
+    #[test]
+    fn division_by_zero_rejected() {
+        let e = Expr::parse("1/n").unwrap();
+        assert!(e.eval(&env(&[("n", 0.0)])).is_err());
+    }
+
+    #[test]
+    fn malformed_expressions_rejected() {
+        assert!(Expr::parse("").is_err());
+        assert!(Expr::parse("1 +").is_err());
+        assert!(Expr::parse("(1").is_err());
+        assert!(Expr::parse("1..2").is_err());
+        assert!(Expr::parse("a $ b").is_err());
+        assert!(Expr::parse("1 2 +").is_err());
+    }
+}

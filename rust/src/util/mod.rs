@@ -15,10 +15,41 @@
 pub mod check;
 pub mod cli;
 pub mod error;
+pub mod expr;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Write `contents` to `path` atomically: write a sibling tempfile, then
+/// rename it into place. A crash mid-write can leave a stray `.tmp` file
+/// but never a torn artifact at `path` (rename within one directory is
+/// atomic on POSIX filesystems).
+pub fn atomic_write(path: &std::path::Path, contents: &str) -> error::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| {
+            error::BoosterError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("atomic_write: bad path {}", path.display()),
+            ))
+        })?;
+    // Unique per process so concurrent writers (e.g. parallel tests)
+    // never clobber each other's tempfile.
+    let tmp_name = format!(".{}.{}.tmp", file_name, std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
 
 /// Format a byte count with binary units (`1.5 MiB`).
 pub fn fmt_bytes(bytes: u64) -> String {
@@ -90,5 +121,23 @@ mod tests {
     fn flops_formatting() {
         assert_eq!(fmt_flops(9.7e12), "9.70 TFLOP/s");
         assert_eq!(fmt_flops(312e12), "312.00 TFLOP/s");
+    }
+
+    #[test]
+    fn atomic_write_replaces_existing_content() {
+        let dir = std::env::temp_dir().join(format!("booster_aw_{}", std::process::id()));
+        let path = dir.join("out.txt");
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // No tempfile debris left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }
