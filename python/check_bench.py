@@ -9,6 +9,8 @@ Usage:
     check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero|interrupt|resume|fault]
                    [--degenerate-csv CONTROL.csv --sweep-csv SWEEP.csv]
                    [--identical-csv CONTROL.csv]
+    check_bench.py results/BENCH_serve.json [--mode serve|interrupt|resume|fault]
+                   [--identical-csv CONTROL.csv --sweep-csv results/serve.csv]
     check_bench.py results/BENCH_hotpath.json
     check_bench.py results/crossover.csv --mode crossover
     check_bench.py --self-test
@@ -48,6 +50,13 @@ ROW_KEYS = [
     "step_energy_kj",
 ]
 MS_KEYS = ["compute_ms", "comm_ms", "rs_ms", "ag_ms", "tp_comm_ms", "step_ms"]
+
+SERVE_ROW_KEYS = [
+    "scenario", "machine", "workload", "nodes", "gpus", "replicas", "tensor",
+    "batch_cap", "precision", "prompt_tokens", "decode_tokens", "rate",
+    "kv_gb", "prefill_ms", "token_ms", "p50_ms", "p99_ms", "slo_ms",
+    "slo_ok", "mean_batch", "tokens_per_s", "total_tokens_per_s",
+]
 
 
 def fail(msg):
@@ -167,6 +176,129 @@ def check_sweep(d, path):
         f"{product} grid - {resumed_total} restored",
     )
     return rows
+
+
+def check_serve(d, path):
+    """BENCH_serve.json: the same crash-tolerant grid accounting as the
+    training sweep, plus serving-specific row checks and the
+    throughput-under-SLO frontier."""
+    for k in ("bench", "params", "rows", "infeasible", "failed", "groups",
+              "frontier", "cost_cache", "interrupted", "pending", "resume"):
+        require(k in d, f"{path}: missing top-level key '{k}'")
+    require(d["bench"] == "serve", f"{path}: bench key is {d['bench']!r}")
+    rows, infeasible, failed = d["rows"], d["infeasible"], d["failed"]
+    groups, pending = d["groups"], d["pending"]
+
+    product = 1
+    for axis in d["params"]:
+        require(
+            axis.get("key") and axis.get("values"),
+            f"{path}: malformed params axis {axis}",
+        )
+        product *= len(axis["values"])
+    require(
+        len(rows) + len(infeasible) + len(failed) + pending == product,
+        f"{path}: {len(rows)} rows + {len(infeasible)} infeasible + "
+        f"{len(failed)} failed + {pending} pending != grid product {product}",
+    )
+    require(
+        d["interrupted"] or pending == 0,
+        f"{path}: {pending} pending point(s) in a sweep not marked interrupted",
+    )
+    require(rows, f"{path}: serve sweep produced no feasible rows")
+
+    for i, f in enumerate(failed):
+        for k in ("scenario", "machine", "reason"):
+            require(k in f, f"{path}: failed entry {i} missing '{k}': {f}")
+
+    res = d["resume"]
+    for k in ("resumed_rows", "fresh_rows", "resumed_infeasible", "resumed_failed"):
+        require(k in res and res[k] >= 0, f"{path}: resume block missing '{k}': {res}")
+    require(
+        res["resumed_rows"] + res["fresh_rows"] == len(rows),
+        f"{path}: resumed_rows {res['resumed_rows']} + fresh_rows "
+        f"{res['fresh_rows']} != {len(rows)} rows",
+    )
+
+    for i, r in enumerate(rows):
+        for k in SERVE_ROW_KEYS:
+            require(k in r, f"{path}: serve row {i} missing '{k}'")
+        require(
+            r["p99_ms"] >= r["p50_ms"] >= 0,
+            f"{path}: serve row {i}: p99 {r['p99_ms']} < p50 {r['p50_ms']}",
+        )
+        require(r["tokens_per_s"] > 0, f"{path}: serve row {i} zero throughput")
+        require(
+            math.isclose(
+                r["total_tokens_per_s"], r["tokens_per_s"] * r["replicas"],
+                rel_tol=1e-9,
+            ),
+            f"{path}: serve row {i}: total != per-replica x replicas: {r}",
+        )
+        require(r["batch_cap"] >= 1, f"{path}: serve row {i} zero batch cap")
+        require(
+            r["gpus"] == r["replicas"] * r["tensor"],
+            f"{path}: serve row {i}: gpus != replicas x tensor: {r}",
+        )
+        require(
+            r["slo_ok"] == (r["p99_ms"] <= r["slo_ms"]),
+            f"{path}: serve row {i}: slo_ok inconsistent with p99 vs SLO: {r}",
+        )
+
+    # Frontier: per machine with at least one SLO-feasible row, exactly
+    # one winner carrying that machine's best total tokens/s.
+    best = {}
+    for r in rows:
+        if r["slo_ok"]:
+            m = r["machine"]
+            if m not in best or r["total_tokens_per_s"] > best[m]:
+                best[m] = r["total_tokens_per_s"]
+    frontier = d["frontier"]
+    fr_machines = [f["machine"] for f in frontier]
+    require(
+        len(fr_machines) == len(set(fr_machines)),
+        f"{path}: duplicate machines in the frontier: {fr_machines}",
+    )
+    require(
+        set(fr_machines) == set(best),
+        f"{path}: frontier machines {sorted(fr_machines)} != machines with "
+        f"SLO-feasible rows {sorted(best)}",
+    )
+    for f in frontier:
+        for k in ("machine", "scenario", "replicas", "tensor", "batch_cap",
+                  "p99_ms", "total_tokens_per_s"):
+            require(k in f, f"{path}: frontier entry missing '{k}': {f}")
+        require(
+            math.isclose(f["total_tokens_per_s"], best[f["machine"]], rel_tol=1e-9),
+            f"{path}: frontier winner for {f['machine']} is not that machine's "
+            f"best SLO-feasible throughput: {f} vs {best[f['machine']]}",
+        )
+
+    check_cost_cache(d["cost_cache"], path)
+    for g in groups:
+        for k in ("machine", "points", "workers", "hits", "misses"):
+            require(k in g, f"{path}: group missing '{k}': {g}")
+        require(g["workers"] >= 1, f"{path}: group without workers: {g}")
+    require(
+        sum(g["hits"] for g in groups) == d["cost_cache"]["hits"],
+        f"{path}: group hits do not sum to the total",
+    )
+    require(
+        sum(g["misses"] for g in groups) == d["cost_cache"]["misses"],
+        f"{path}: group misses do not sum to the total",
+    )
+    return rows
+
+
+def mode_serve(rows, d):
+    """The CI serve smoke: replicas x tensor on two machines — both must
+    field an SLO-feasible frontier winner."""
+    require(len(d["groups"]) == 2, f"two machine groups expected: {d['groups']}")
+    machines = {f["machine"] for f in d["frontier"]}
+    require(
+        len(machines) >= 2,
+        f"serve frontier must report a feasible winner on >= 2 machines: {machines}",
+    )
 
 
 def check_hotpath(d, path):
@@ -319,8 +451,47 @@ def _fixture():
     }
 
 
+def _serve_fixture():
+    """A minimal schema-valid completed serve sweep with a frontier."""
+    def row(machine, tps, slo_ok):
+        return {
+            "scenario": f"{machine}/gpt3_13b/n1/fp16_tc/serve-r1-t1-b8",
+            "machine": machine, "workload": "gpt3_13b", "nodes": 1, "gpus": 1,
+            "replicas": 1, "tensor": 1, "batch_cap": 8,
+            "precision": "fp16_tc", "prompt_tokens": 512, "decode_tokens": 64,
+            "rate": 4.0, "kv_gb": 0.472, "prefill_ms": 300.0, "token_ms": 17.0,
+            "p50_ms": 1500.0, "p99_ms": 2000.0 if slo_ok else 9000.0,
+            "slo_ms": 4000.0, "slo_ok": slo_ok, "mean_batch": 2.5,
+            "tokens_per_s": tps, "total_tokens_per_s": tps,
+        }
+    return {
+        "bench": "serve",
+        "params": [{"key": "machine", "values": ["a", "b"]},
+                   {"key": "tensor", "values": ["1", "2"]}],
+        "rows": [row("a", 200.0, True), row("a", 350.0, True),
+                 row("b", 900.0, True), row("b", 100.0, False)],
+        "infeasible": [],
+        "failed": [],
+        "groups": [
+            {"machine": "a", "points": 2, "workers": 1, "hits": 3, "misses": 1},
+            {"machine": "b", "points": 2, "workers": 1, "hits": 1, "misses": 1},
+        ],
+        "frontier": [
+            {"machine": "a", "scenario": "a/...", "replicas": 1, "tensor": 2,
+             "batch_cap": 8, "p99_ms": 2000.0, "total_tokens_per_s": 350.0},
+            {"machine": "b", "scenario": "b/...", "replicas": 1, "tensor": 1,
+             "batch_cap": 8, "p99_ms": 2000.0, "total_tokens_per_s": 900.0},
+        ],
+        "interrupted": False,
+        "pending": 0,
+        "resume": {"resumed_rows": 0, "fresh_rows": 4,
+                   "resumed_infeasible": 0, "resumed_failed": 0},
+        "cost_cache": {"hits": 4, "misses": 2, "hit_rate": 4 / 6},
+    }
+
+
 def self_test():
-    """Run the validator against synthetic fixtures: the good one must
+    """Run the validator against synthetic fixtures: the good ones must
     pass every applicable check, and each deliberately-broken variant
     must be rejected."""
     import copy
@@ -330,9 +501,9 @@ def self_test():
     mode_interrupt(good)
     mode_fault(good)
 
-    def must_fail(d, what):
+    def must_fail(d, what, checker=check_sweep):
         try:
-            check_sweep(d, f"<fixture:{what}>")
+            checker(d, f"<fixture:{what}>")
         except SystemExit:
             return
         fail(f"self-test: broken fixture ({what}) was accepted")
@@ -353,7 +524,19 @@ def self_test():
     bad_group["groups"][0]["points"] = 99
     must_fail(bad_group, "group points not covering the grid")
 
-    print("check_bench: self-test OK (1 good + 4 rejected fixtures)")
+    serve = _serve_fixture()
+    check_serve(serve, "<serve-fixture>")
+    mode_serve(serve["rows"], serve)
+
+    wrong_winner = copy.deepcopy(serve)
+    wrong_winner["frontier"][0]["total_tokens_per_s"] = 200.0  # not a's best
+    must_fail(wrong_winner, "frontier winner not the best", check_serve)
+
+    lying_slo = copy.deepcopy(serve)
+    lying_slo["rows"][3]["slo_ok"] = True  # p99 9000 > slo 4000
+    must_fail(lying_slo, "slo_ok contradicting p99", check_serve)
+
+    print("check_bench: self-test OK (2 good + 6 rejected fixtures)")
 
 
 def mode_crossover(path):
@@ -387,6 +570,7 @@ def main():
     ap.add_argument("file", nargs="?", help="BENCH_*.json or crossover.csv to validate")
     ap.add_argument("--mode", choices=[
         "hybrid", "3d", "zero", "crossover", "interrupt", "resume", "fault",
+        "serve",
     ])
     ap.add_argument("--degenerate-csv", help="control sweep CSV (no sharding axis)")
     ap.add_argument("--sweep-csv", default="results/sweep.csv",
@@ -429,6 +613,16 @@ def main():
             mode_zero(rows)
             if args.degenerate_csv:
                 check_degeneration(args.sweep_csv, args.degenerate_csv)
+        elif args.mode == "interrupt":
+            mode_interrupt(d)
+        elif args.mode == "resume":
+            mode_resume(d, args.identical_csv, args.sweep_csv)
+        elif args.mode == "fault":
+            mode_fault(d)
+    elif bench == "serve":
+        rows = check_serve(d, args.file)
+        if args.mode == "serve":
+            mode_serve(rows, d)
         elif args.mode == "interrupt":
             mode_interrupt(d)
         elif args.mode == "resume":

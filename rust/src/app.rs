@@ -84,6 +84,14 @@ pub fn commands() -> Vec<Command> {
                     three-way throughput-optimal frontier (§2.3)",
             run: crate::report::cmd_crossover,
         },
+        Command {
+            name: "serve-sweep",
+            about: "run an inference-serving grid (replicas × tensor × batch × machine): \
+                    KV-cache fit, continuous-batching p50/p99 and tokens/s, with the \
+                    throughput-under-SLO frontier; journaled row checkpoints, --resume \
+                    continues an interrupted sweep",
+            run: crate::report::cmd_serve_sweep,
+        },
     ]
 }
 
@@ -223,6 +231,49 @@ mod tests {
         // --resume reads the journal, so combining it with --no-journal is
         // a contradiction the driver must refuse before any simulation.
         let err = crate::report::cmd_sweep(&[
+            "--resume".to_string(),
+            "--no-journal".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("--no-journal"), "{err}");
+    }
+
+    #[test]
+    fn serve_sweep_help_and_list_exit_zero() {
+        let h = dispatch(&["serve-sweep".to_string(), "--help".to_string()]).unwrap();
+        assert_eq!(h, 0);
+        let l = dispatch(&["serve-sweep".to_string(), "--list".to_string()]).unwrap();
+        assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn serve_sweep_rejects_unknown_param_key_with_the_serve_set() {
+        // The satellite contract end-to-end: a typo'd serve axis fails in
+        // the driver before any simulation, and the error teaches the
+        // *serve* key set (replicas/rate/prompt/decode — not the training
+        // keys).
+        let err = crate::report::cmd_serve_sweep(&[
+            "--param".to_string(),
+            "replicaz=2".to_string(),
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown serve-sweep key 'replicaz'"), "{msg}");
+        for key in crate::serve::SERVE_KEYS {
+            assert!(msg.contains(key), "error must list '{key}': {msg}");
+        }
+        // Training-only axes are rejected too — the families don't mix.
+        let err = crate::report::cmd_serve_sweep(&[
+            "--param".to_string(),
+            "sharding=optimizer".to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown serve-sweep key"), "{err}");
+    }
+
+    #[test]
+    fn serve_sweep_rejects_resume_without_a_journal() {
+        let err = crate::report::cmd_serve_sweep(&[
             "--resume".to_string(),
             "--no-journal".to_string(),
         ])

@@ -31,8 +31,9 @@ pub struct GpuSpec {
     /// Idle power draw in watts (used by the energy model).
     pub idle_watts: f64,
     /// Peak FLOP/s per precision, indexed by [`Precision::index`]
-    /// (paper order: FP64, FP64_TC, FP32, TF32_TC, FP16, FP16_TC, BF16_TC).
-    peaks: [f64; 7],
+    /// (paper order: FP64, FP64_TC, FP32, TF32_TC, FP16, FP16_TC, BF16_TC,
+    /// then the serving precisions FP8_TC, INT8_TC).
+    peaks: [f64; 9],
 }
 
 impl GpuSpec {
@@ -45,7 +46,12 @@ impl GpuSpec {
             tdp_watts: 400.0,
             nvlink_bw: 300e9,
             idle_watts: 55.0,
-            peaks: [9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12],
+            // No FP8 unit on Ampere: FP8 falls back to the FP16_TC rate
+            // (as the v100 entries fall back below); INT8 IMMA is
+            // 624 TOPS dense per the A100 datasheet.
+            peaks: [
+                9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12, 312e12, 624e12,
+            ],
         }
     }
 
@@ -59,7 +65,10 @@ impl GpuSpec {
             tdp_watts: 450.0,
             nvlink_bw: 300e9,
             idle_watts: 60.0,
-            peaks: [9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12],
+            // A100 compute rates, so the same FP8 fallback / INT8 IMMA.
+            peaks: [
+                9.7e12, 19.5e12, 19.5e12, 156e12, 78e12, 312e12, 312e12, 312e12, 624e12,
+            ],
         }
     }
 
@@ -74,7 +83,11 @@ impl GpuSpec {
             tdp_watts: 700.0,
             nvlink_bw: 200e9,
             idle_watts: 75.0,
-            peaks: [34e12, 67e12, 67e12, 494e12, 134e12, 990e12, 990e12],
+            // FP8/INT8 are both 1979 TFLOP·TOP/s dense on the H100 SXM
+            // datasheet — the transformer-engine serving rates.
+            peaks: [
+                34e12, 67e12, 67e12, 494e12, 134e12, 990e12, 990e12, 1979e12, 1979e12,
+            ],
         }
     }
 
@@ -89,7 +102,11 @@ impl GpuSpec {
             tdp_watts: 300.0,
             nvlink_bw: 150e9,
             idle_watts: 40.0,
-            peaks: [7.8e12, 7.8e12, 15.7e12, 15.7e12, 31.4e12, 125e12, 125e12],
+            // FP8/INT8 fall back to the FP16_TC rate (no IMMA tensor
+            // path on Volta).
+            peaks: [
+                7.8e12, 7.8e12, 15.7e12, 15.7e12, 31.4e12, 125e12, 125e12, 125e12, 125e12,
+            ],
         }
     }
 
@@ -195,6 +212,23 @@ mod tests {
             }
         }
         assert!(GpuSpec::by_name("tpu-v4").is_none());
+    }
+
+    #[test]
+    fn serving_peaks_match_datasheets() {
+        // H100 SXM datasheet: 1979 TFLOP/s FP8 == 1979 TOPS INT8 dense.
+        let h = GpuSpec::gh200_96gb();
+        assert_eq!(h.peak_flops(Precision::Fp8Tc), 1979e12);
+        assert_eq!(h.peak_flops(Precision::Int8Tc), 1979e12);
+        // A100 datasheet: 624 TOPS INT8 dense; FP8 falls back to FP16_TC.
+        for a in [GpuSpec::a100_40gb(), GpuSpec::a100_64gb()] {
+            assert_eq!(a.peak_flops(Precision::Int8Tc), 624e12);
+            assert_eq!(a.peak_flops(Precision::Fp8Tc), a.peak_flops(Precision::Fp16Tc));
+        }
+        // Volta has neither path: both fall back to FP16_TC.
+        let v = GpuSpec::v100_16gb();
+        assert_eq!(v.peak_flops(Precision::Fp8Tc), v.peak_flops(Precision::Fp16Tc));
+        assert_eq!(v.peak_flops(Precision::Int8Tc), v.peak_flops(Precision::Fp16Tc));
     }
 
     #[test]

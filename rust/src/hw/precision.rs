@@ -22,11 +22,17 @@ pub enum Precision {
     Fp16Tc,
     /// BF16 through the Tensor Cores (same rate as FP16_TC on A100).
     Bf16Tc,
+    /// FP8 (E4M3/E5M2) through the Tensor Cores — Hopper-class serving
+    /// precision; pre-Hopper devices fall back to their FP16_TC rate.
+    Fp8Tc,
+    /// INT8 through the Tensor Cores (IMMA) — quantized inference.
+    Int8Tc,
 }
 
 impl Precision {
-    /// All variants, in the order the paper lists them.
-    pub const ALL: [Precision; 7] = [
+    /// All variants, in the order the paper lists them (the two serving
+    /// precisions appended after the paper's training set).
+    pub const ALL: [Precision; 9] = [
         Precision::Fp64,
         Precision::Fp64Tc,
         Precision::Fp32,
@@ -34,6 +40,8 @@ impl Precision {
         Precision::Fp16,
         Precision::Fp16Tc,
         Precision::Bf16Tc,
+        Precision::Fp8Tc,
+        Precision::Int8Tc,
     ];
 
     /// Bytes per element of the storage type.
@@ -42,6 +50,7 @@ impl Precision {
             Precision::Fp64 | Precision::Fp64Tc => 8,
             Precision::Fp32 | Precision::Tf32Tc => 4,
             Precision::Fp16 | Precision::Fp16Tc | Precision::Bf16Tc => 2,
+            Precision::Fp8Tc | Precision::Int8Tc => 1,
         }
     }
 
@@ -49,7 +58,12 @@ impl Precision {
     pub fn tensor_core(self) -> bool {
         matches!(
             self,
-            Precision::Fp64Tc | Precision::Tf32Tc | Precision::Fp16Tc | Precision::Bf16Tc
+            Precision::Fp64Tc
+                | Precision::Tf32Tc
+                | Precision::Fp16Tc
+                | Precision::Bf16Tc
+                | Precision::Fp8Tc
+                | Precision::Int8Tc
         )
     }
 
@@ -63,6 +77,8 @@ impl Precision {
             Precision::Fp16 => "FP16",
             Precision::Fp16Tc => "FP16_TC",
             Precision::Bf16Tc => "BF16_TC",
+            Precision::Fp8Tc => "FP8_TC",
+            Precision::Int8Tc => "INT8_TC",
         }
     }
 
@@ -77,6 +93,8 @@ impl Precision {
             Precision::Fp16 => 4,
             Precision::Fp16Tc => 5,
             Precision::Bf16Tc => 6,
+            Precision::Fp8Tc => 7,
+            Precision::Int8Tc => 8,
         }
     }
 
@@ -90,6 +108,8 @@ impl Precision {
             Precision::Fp16 => "fp16",
             Precision::Fp16Tc => "fp16_tc",
             Precision::Bf16Tc => "bf16",
+            Precision::Fp8Tc => "fp8",
+            Precision::Int8Tc => "int8",
         }
     }
 
@@ -107,10 +127,12 @@ impl Precision {
             "fp16" => Precision::Fp16,
             "fp16_tc" | "fp16-tc" | "amp" => Precision::Fp16Tc,
             "bf16" | "bf16_tc" | "bf16-tc" => Precision::Bf16Tc,
+            "fp8" | "fp8_tc" | "fp8-tc" => Precision::Fp8Tc,
+            "int8" | "int8_tc" | "int8-tc" => Precision::Int8Tc,
             _ => {
                 return Err(crate::util::error::BoosterError::Config(format!(
                     "unknown precision '{s}' (expected one of fp64, fp64_tc, fp32, tf32, \
-                     fp16, fp16_tc, bf16)"
+                     fp16, fp16_tc, bf16, fp8, int8)"
                 )))
             }
         })
@@ -125,6 +147,7 @@ impl Precision {
             Precision::Fp64Tc => 4,
             Precision::Tf32Tc => 4,
             Precision::Fp16Tc | Precision::Bf16Tc => 8,
+            Precision::Fp8Tc | Precision::Int8Tc => 16,
             _ => 1,
         }
     }
@@ -165,6 +188,19 @@ mod tests {
         assert_eq!(Precision::parse("fp16").unwrap(), Precision::Fp16);
         assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16Tc);
         assert_eq!(Precision::parse("tf32").unwrap(), Precision::Tf32Tc);
-        assert!(Precision::parse("int8").is_err());
+        assert_eq!(Precision::parse("fp8").unwrap(), Precision::Fp8Tc);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8Tc);
+        assert!(Precision::parse("int4").is_err());
+    }
+
+    #[test]
+    fn serving_precisions_are_one_byte_tc() {
+        for p in [Precision::Fp8Tc, Precision::Int8Tc] {
+            assert_eq!(p.bytes(), 1);
+            assert!(p.tensor_core());
+            assert_eq!(p.tc_dim_multiple(), 16);
+        }
+        assert_eq!(Precision::Fp8Tc.label(), "FP8_TC");
+        assert_eq!(Precision::Int8Tc.label(), "INT8_TC");
     }
 }

@@ -45,6 +45,7 @@ pub mod rs;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod serve;
 pub mod storage;
 pub mod topology;
 pub mod train;

@@ -7,7 +7,8 @@
 //! `results/BENCH_sweep.json`.
 
 use crate::hw::precision::Precision;
-use crate::scenario::{presets, sweep, ExperimentContext, ScenarioSpec};
+use crate::scenario::{presets, sweep, ExperimentContext, ScenarioSpec, ServingSpec};
+use crate::serve::sweep as serve_sweep;
 use crate::util::cli::Flags;
 use crate::util::error::{BoosterError, Result};
 use crate::util::table::{BarChart, Table};
@@ -1068,4 +1069,230 @@ pub fn cmd_sched(args: &[String]) -> Result<i32> {
     out.push_str(&t.render());
     emit("sched", &out, Some(&t.to_csv()))?;
     Ok(0)
+}
+
+/// `booster serve-sweep` — the inference frontier study: grid over
+/// replicas × tensor × batch × machine (plus workload, precision, prompt/
+/// decode lengths and offered rate), each point priced by the serving
+/// cost model — KV-cache memory fit, per-token roofline + tensor-group
+/// allreduces, and a deterministic continuous-batching queue simulation
+/// yielding p50/p99 request latency and tokens/s. Emits
+/// `results/serve.csv` plus `results/BENCH_serve.json`, whose `frontier`
+/// names each machine's highest-throughput configuration under the p99
+/// latency SLO.
+///
+/// Crash tolerance matches `booster sweep`: every completed point is
+/// journaled (`--journal`, default `results/serve.journal`, tagged with
+/// the `serve` sweep kind so a train journal can never cross-resume) and
+/// `--resume` produces a CSV byte-identical to an uninterrupted run.
+/// First Ctrl-C drains and flushes (exit 130); second aborts.
+pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
+    let spec = Flags::new()
+        .str_flag("machine", "juwels_booster", "base machine preset")
+        .str_flag("workload", "gpt3_13b", "base workload preset (the model being served)")
+        .int_flag("replicas", 1, "base model replicas sharing the offered load")
+        .int_flag("tensor", 1, "base tensor-parallel width per replica")
+        .int_flag("batch", 8, "base admission ceiling (continuous-batching max batch)")
+        .int_flag("prompt", 512, "base prompt tokens per request")
+        .int_flag("decode", 64, "base decoded tokens per request")
+        .float_flag("rate", 4.0, "base offered load, requests/s across all replicas")
+        .float_flag("slo-ms", 4000.0, "p99 request-latency SLO, ms (the frontier filter)")
+        .int_flag("kv-heads", 40, "KV heads per layer (KV-cache sizing)")
+        .int_flag("head-dim", 128, "head dimension (KV-cache sizing)")
+        .int_flag("sim-requests", 64, "requests per queue simulation")
+        .str_flag("precision", "fp16_tc", "base serving precision")
+        .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
+        .str_flag("journal", "results/serve.journal", "row-checkpoint journal path")
+        .bool_flag("resume", false, "resume from the journal, skipping completed points")
+        .bool_flag("no-journal", false, "disable row checkpointing")
+        .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
+        .int_flag(
+            "interrupt-after",
+            0,
+            "cancel after this many evaluated points (deterministic Ctrl-C for tests; 0 = off)",
+        )
+        .bool_flag("list", false, "list presets and serve-sweepable keys, then exit")
+        .bool_flag("help", false, "show help");
+    let flags = spec.clone().parse(args)?;
+    if flags.get_bool("help") {
+        println!("{}", spec.help("serve-sweep"));
+        println!("sweepable keys: {}", serve_sweep::SERVE_KEYS.join(", "));
+        println!("example: booster serve-sweep --param replicas=1,2,4 --param tensor=1,2");
+        println!(
+            "example: booster serve-sweep --param machine=juwels_booster,isambard_ai --param batch=1,8"
+        );
+        println!("example: booster serve-sweep --rate 8 --param replicas=2,4 --param decode=64,256");
+        println!("example: booster serve-sweep --resume   # continue an interrupted serve sweep");
+        return Ok(0);
+    }
+    if flags.get_bool("list") {
+        println!("machine presets:  {}", presets::machine_names().join(", "));
+        println!("workload presets: {}", presets::workload_names().join(", "));
+        println!("sweepable keys:   {}", serve_sweep::SERVE_KEYS.join(", "));
+        return Ok(0);
+    }
+    if flags.get_bool("resume") && flags.get_bool("no-journal") {
+        return Err(BoosterError::Config(
+            "--resume reads the journal; it cannot be combined with --no-journal".into(),
+        ));
+    }
+    // Reject unknown/duplicate --param keys before any spec resolution or
+    // simulation — a typo'd axis must not cost a half-priced grid.
+    let axes = serve_sweep::parse_serve_params(flags.get_strs("param"))?;
+    let mut serving = ServingSpec::defaults();
+    serving.replicas = flags.get_usize("replicas");
+    serving.max_batch = flags.get_usize("batch");
+    serving.prompt_tokens = flags.get_usize("prompt");
+    serving.decode_tokens = flags.get_usize("decode");
+    serving.requests_per_s = flags.get_f64("rate");
+    serving.slo_p99_ms = flags.get_f64("slo-ms");
+    serving.kv_heads = flags.get_usize("kv-heads");
+    serving.head_dim = flags.get_usize("head-dim");
+    serving.sim_requests = flags.get_usize("sim-requests");
+    let base = ScenarioSpec::builder(presets::machine(flags.get_str("machine"))?)
+        .workload(presets::workload(flags.get_str("workload"))?)
+        .nodes(1)
+        .tensor_parallel(flags.get_usize("tensor"))
+        .precision(flags.get_str("precision"))
+        .serving(serving)
+        .build()?;
+
+    // Same fault-injection hook as `booster sweep` — the CI serve leg
+    // reuses the env var to exercise the failed-point path.
+    let fault: Option<sweep::FaultHook> = match std::env::var("BOOSTER_SWEEP_FAULT") {
+        Ok(v) => {
+            let idx: usize = v.trim().parse().map_err(|_| {
+                BoosterError::Config(format!(
+                    "BOOSTER_SWEEP_FAULT must be a grid point index, got '{v}'"
+                ))
+            })?;
+            Some(std::sync::Arc::new(move |i, _attempt| i == idx))
+        }
+        Err(_) => None,
+    };
+    sweep::sigint::install();
+    let interrupt_after = flags.get_usize("interrupt-after");
+    let opts = sweep::SweepOptions {
+        workers: flags.get_usize("workers"),
+        sequential: false,
+        cancel: sweep::Cancel::with_sigint(),
+        interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
+        fault,
+    };
+    let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
+    let outcome = if flags.get_bool("no-journal") {
+        serve_sweep::run_serve_points_with(&serve_sweep::prepare_serve(&base, &axes)?, &opts)?
+    } else {
+        serve_sweep::run_serve_journaled(
+            &base,
+            &axes,
+            &journal_path,
+            flags.get_bool("resume"),
+            &opts,
+        )?
+    };
+
+    let mut out = format!(
+        "serve sweep: {} point(s) over {} axis/axes (base: {})\n\n",
+        outcome.rows.len(),
+        axes.len(),
+        base.name
+    );
+    let mut t = Table::new(&[
+        "scenario", "gpus", "r x t", "cap", "kv GB", "prefill ms", "token ms", "p50 ms",
+        "p99 ms", "SLO", "tok/s", "total tok/s",
+    ]);
+    for r in &outcome.rows {
+        t.row(&[
+            r.scenario.clone(),
+            r.gpus.to_string(),
+            format!("{} x {}", r.replicas, r.tensor),
+            r.batch_cap.to_string(),
+            format!("{:.3}", r.kv_gb),
+            format!("{:.2}", r.prefill_ms),
+            format!("{:.3}", r.token_ms),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            if r.slo_ok { "ok".into() } else { "miss".to_string() },
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.0}", r.total_tokens_per_s),
+        ]);
+    }
+    out.push_str(&t.render());
+    if !outcome.infeasible.is_empty() {
+        out.push_str(&format!(
+            "\n{} infeasible point(s) skipped (KV-cache memory fit):\n",
+            outcome.infeasible.len()
+        ));
+        for (scenario, reason) in &outcome.infeasible {
+            out.push_str(&format!("  {scenario}: {reason}\n"));
+        }
+    }
+    if !outcome.failed.is_empty() {
+        out.push_str(&format!(
+            "\n{} failed point(s) (worker fault isolated, one retry each):\n",
+            outcome.failed.len()
+        ));
+        for f in &outcome.failed {
+            out.push_str(&format!("  {} [{}]: {}\n", f.scenario, f.machine, f.reason));
+        }
+    }
+    let resumed = outcome.resumed_rows + outcome.resumed_infeasible + outcome.resumed_failed;
+    if resumed > 0 {
+        out.push_str(&format!(
+            "\nresumed {resumed} journaled point(s) ({} row(s), {} infeasible, {} failed); \
+             evaluated {} fresh\n",
+            outcome.resumed_rows,
+            outcome.resumed_infeasible,
+            outcome.resumed_failed,
+            outcome.rows.len() - outcome.resumed_rows,
+        ));
+    }
+    let frontier = serve_sweep::serve_frontier(&outcome.rows);
+    if frontier.is_empty() {
+        out.push_str("\nthroughput-under-SLO frontier: no configuration meets the p99 SLO\n");
+    } else {
+        out.push_str("\nthroughput-under-SLO frontier (best total tok/s with p99 <= SLO):\n");
+        for &i in &frontier {
+            let r = &outcome.rows[i];
+            out.push_str(&format!(
+                "  {}: {} — {:.0} tok/s at p99 {:.0} ms (r{} x t{}, cap {})\n",
+                r.machine, r.scenario, r.total_tokens_per_s, r.p99_ms, r.replicas, r.tensor,
+                r.batch_cap
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\nshared collective cost cache: {} hits / {} simulations ({:.0}% hit rate)\n",
+        outcome.cache_hits,
+        outcome.cache_misses,
+        100.0 * outcome.cache_hits as f64
+            / (outcome.cache_hits + outcome.cache_misses).max(1) as f64
+    ));
+    for g in &outcome.groups {
+        out.push_str(&format!(
+            "  {}: {} point(s) on {} worker(s), {} hits / {} sims\n",
+            g.machine, g.points, g.workers, g.hits, g.misses
+        ));
+    }
+    if outcome.interrupted {
+        out.push_str(&format!(
+            "\ninterrupted: {} point(s) still pending — rerun with --resume to finish\n",
+            outcome.pending
+        ));
+    }
+    emit("serve", &out, Some(&outcome.to_csv()))?;
+    crate::util::atomic_write(
+        std::path::Path::new("results/BENCH_serve.json"),
+        &outcome.to_json(&axes).to_pretty(),
+    )?;
+    if flags.get_bool("no-journal") {
+        println!("wrote results/serve.csv and results/BENCH_serve.json (journal disabled)");
+    } else {
+        println!(
+            "wrote results/serve.csv and results/BENCH_serve.json (journal: {})",
+            journal_path.display()
+        );
+    }
+    Ok(if outcome.interrupted { 130 } else { 0 })
 }

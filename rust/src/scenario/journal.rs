@@ -8,14 +8,15 @@
 //! point's expansion index:
 //!
 //! ```text
-//! {"kind":"header","schema":1,"base":"<16-hex>","axes":[{"key":...,"values":[...]}]}
+//! {"kind":"header","schema":1,"sweep_kind":"train","base":"<16-hex>","axes":[{"key":...,"values":[...]}]}
 //! {"kind":"row","index":0,"row":{...full SweepRow incl. assignment...}}
 //! {"kind":"infeasible","index":1,"reason":"...","scenario":"..."}
 //! {"kind":"failed","index":2,"machine":"...","reason":"...","scenario":"..."}
 //! ```
 //!
 //! Resume validates the header against the *requested* grid, runexp-style:
-//! a schema, axes, or base-spec mismatch is rejected with an error naming
+//! a sweep-kind (train vs serve), schema, axes, or base-spec mismatch is
+//! rejected with an error naming
 //! exactly what differed, so a journal can never silently splice rows
 //! from a different grid into a CSV. A torn **final** line (the crash
 //! happened mid-append) is tolerated and dropped; a malformed line
@@ -30,6 +31,24 @@ use crate::scenario::sweep::{ParamAxis, PointOutcome, SweepRow};
 use crate::util::error::{BoosterError, Result};
 use crate::util::json::Json;
 
+/// A row type the journal can persist and replay. Implemented by the
+/// training [`SweepRow`] and the serving
+/// [`crate::serve::sweep::ServeRow`]; the associated `SWEEP_KIND` tag is
+/// baked into the journal header so a serve resume can never silently
+/// splice training rows (or vice versa) — the kinds carry different
+/// columns under the same entry shape.
+pub trait JournalRow: Sized {
+    /// Header tag naming the sweep family this row belongs to
+    /// (`"train"` / `"serve"`).
+    const SWEEP_KIND: &'static str;
+
+    /// Serialize the row for a journal `row` entry (bit-exact f64s).
+    fn to_json(&self) -> Json;
+
+    /// Inverse of [`JournalRow::to_json`] (journal replay).
+    fn from_json(j: &Json) -> Result<Self>;
+}
+
 /// Version of the journal line schema baked into this binary. Bump when
 /// the `SweepRow` columns or the entry shape change incompatibly; resume
 /// then rejects journals written by older builds instead of misreading
@@ -42,6 +61,11 @@ pub const JOURNAL_SCHEMA_VERSION: u32 = 1;
 pub struct GridFingerprint {
     /// Binary journal schema version ([`JOURNAL_SCHEMA_VERSION`]).
     pub schema: u32,
+    /// Sweep family the grid belongs to ([`JournalRow::SWEEP_KIND`]:
+    /// `"train"` / `"serve"`). Checked *first* on resume — the two
+    /// families persist different row columns, so a kind mismatch means
+    /// the journal can never be spliced into this run's CSV.
+    pub kind: String,
     /// The sweep axes, verbatim (keys + values in input order) — stored
     /// whole rather than hashed so a mismatch error can say *which* axis
     /// differed.
@@ -52,10 +76,17 @@ pub struct GridFingerprint {
 }
 
 impl GridFingerprint {
-    /// Fingerprint the grid a sweep is about to run.
+    /// Fingerprint the grid a *training* sweep is about to run.
     pub fn new(base: &ScenarioSpec, axes: &[ParamAxis]) -> GridFingerprint {
+        GridFingerprint::for_kind(SweepRow::SWEEP_KIND, base, axes)
+    }
+
+    /// Fingerprint a grid of an explicit sweep kind (the serving sweep
+    /// passes `ServeRow::SWEEP_KIND`).
+    pub fn for_kind(kind: &str, base: &ScenarioSpec, axes: &[ParamAxis]) -> GridFingerprint {
         GridFingerprint {
             schema: JOURNAL_SCHEMA_VERSION,
+            kind: kind.to_string(),
             axes: axes.to_vec(),
             base: base.fingerprint(),
         }
@@ -81,6 +112,7 @@ impl GridFingerprint {
         Json::obj(vec![
             ("kind", Json::Str("header".into())),
             ("schema", Json::Num(self.schema as f64)),
+            ("sweep_kind", Json::Str(self.kind.clone())),
             ("base", Json::Str(self.base.clone())),
             ("axes", Self::axes_json(&self.axes)),
         ])
@@ -94,6 +126,15 @@ impl GridFingerprint {
             .req("schema")?
             .as_usize()
             .ok_or_else(|| bad("'schema' is not an integer"))? as u32;
+        // Journals written before the serving subsystem carry no
+        // `sweep_kind`; they are all training sweeps.
+        let kind = match j.get("sweep_kind") {
+            Some(k) => k
+                .as_str()
+                .ok_or_else(|| bad("'sweep_kind' is not a string"))?
+                .to_string(),
+            None => SweepRow::SWEEP_KIND.to_string(),
+        };
         let base = j
             .req("base")?
             .as_str()
@@ -124,7 +165,12 @@ impl GridFingerprint {
             }
             axes.push(ParamAxis { key, values });
         }
-        Ok(GridFingerprint { schema, axes, base })
+        Ok(GridFingerprint {
+            schema,
+            kind,
+            axes,
+            base,
+        })
     }
 
     /// Check a journal's fingerprint (`self`) against the grid a resumed
@@ -136,6 +182,12 @@ impl GridFingerprint {
                 path.display()
             ))
         };
+        if self.kind != wanted.kind {
+            return Err(reject(format!(
+                "the journal records a '{}' sweep, this run is a '{}' sweep",
+                self.kind, wanted.kind
+            )));
+        }
         if self.schema != wanted.schema {
             return Err(reject(format!(
                 "journal schema version {} != this binary's version {}",
@@ -178,7 +230,7 @@ fn fmt_axes(axes: &[ParamAxis]) -> String {
     axes.iter().map(fmt_axis).collect::<Vec<_>>().join("; ")
 }
 
-fn entry_json(index: usize, outcome: &PointOutcome) -> Json {
+fn entry_json<R: JournalRow>(index: usize, outcome: &PointOutcome<R>) -> Json {
     match outcome {
         PointOutcome::Row(row) => Json::obj(vec![
             ("kind", Json::Str("row".into())),
@@ -205,7 +257,7 @@ fn entry_json(index: usize, outcome: &PointOutcome) -> Json {
     }
 }
 
-fn entry_from_json(j: &Json) -> Result<(usize, PointOutcome)> {
+fn entry_from_json<R: JournalRow>(j: &Json) -> Result<(usize, PointOutcome<R>)> {
     let kind = j
         .req("kind")?
         .as_str()
@@ -224,7 +276,7 @@ fn entry_from_json(j: &Json) -> Result<(usize, PointOutcome)> {
             .to_string())
     };
     let outcome = match kind.as_str() {
-        "row" => PointOutcome::Row(Box::new(SweepRow::from_json(j.req("row")?)?)),
+        "row" => PointOutcome::Row(Box::new(R::from_json(j.req("row")?)?)),
         "infeasible" => PointOutcome::Infeasible {
             scenario: str_field("scenario")?,
             reason: str_field("reason")?,
@@ -275,11 +327,11 @@ impl Journal {
     ///
     /// A torn final line — the only line a mid-append crash can damage —
     /// is dropped; a malformed line anywhere earlier fails the resume.
-    pub fn resume(
+    pub fn resume<R: JournalRow>(
         path: &Path,
         fp: &GridFingerprint,
         n_points: usize,
-    ) -> Result<(Journal, Vec<Option<PointOutcome>>)> {
+    ) -> Result<(Journal, Vec<Option<PointOutcome<R>>>)> {
         let text = std::fs::read_to_string(path).map_err(|e| {
             BoosterError::Config(format!(
                 "cannot resume: sweep journal {} is unreadable: {e}",
@@ -307,7 +359,7 @@ impl Journal {
         }
         GridFingerprint::from_header(&header)?.check_against(fp, path)?;
 
-        let mut restored: Vec<Option<PointOutcome>> = (0..n_points).map(|_| None).collect();
+        let mut restored: Vec<Option<PointOutcome<R>>> = (0..n_points).map(|_| None).collect();
         let last = lines.len() - 1;
         for (lineno, line) in lines.iter().enumerate().skip(1) {
             if line.trim().is_empty() {
@@ -352,7 +404,7 @@ impl Journal {
 
     /// Append one completed point, fsync'd so a crash after return can
     /// never lose it.
-    pub fn append(&mut self, index: usize, outcome: &PointOutcome) -> Result<()> {
+    pub fn append<R: JournalRow>(&mut self, index: usize, outcome: &PointOutcome<R>) -> Result<()> {
         let line = entry_json(index, outcome).to_string();
         writeln!(self.file, "{line}")?;
         self.file.sync_data()?;
@@ -429,7 +481,7 @@ mod tests {
         j.append(0, &PointOutcome::Row(Box::new(row("a")))).unwrap();
         j.append(
             1,
-            &PointOutcome::Infeasible {
+            &PointOutcome::<SweepRow>::Infeasible {
                 scenario: "b".into(),
                 reason: "memory".into(),
             },
@@ -437,7 +489,7 @@ mod tests {
         .unwrap();
         j.append(
             2,
-            &PointOutcome::Failed {
+            &PointOutcome::<SweepRow>::Failed {
                 scenario: "c".into(),
                 machine: "selene".into(),
                 reason: "panicked: boom".into(),
@@ -446,7 +498,7 @@ mod tests {
         .unwrap();
         drop(j);
 
-        let (_, restored) = Journal::resume(&path, &fp(), 4).unwrap();
+        let (_, restored) = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap();
         assert_eq!(restored.len(), 4);
         match restored[0].as_ref().unwrap() {
             PointOutcome::Row(r) => {
@@ -485,7 +537,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let torn: String = text[..text.len() - 30].to_string();
         std::fs::write(&path, &torn).unwrap();
-        let (_, restored) = Journal::resume(&path, &fp(), 4).unwrap();
+        let (_, restored) = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap();
         assert!(restored[0].is_some(), "intact entry survives");
         assert!(restored[1].is_none(), "torn tail entry is dropped");
 
@@ -493,7 +545,7 @@ mod tests {
         let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
         lines[1] = "{ not json".into();
         std::fs::write(&path, lines.join("\n")).unwrap();
-        let err = Journal::resume(&path, &fp(), 4).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap_err().to_string();
         assert!(err.contains("corrupt"), "{err}");
         std::fs::remove_file(&path).ok();
     }
@@ -505,14 +557,14 @@ mod tests {
         j.append(0, &PointOutcome::Row(Box::new(row("first")))).unwrap();
         j.append(0, &PointOutcome::Row(Box::new(row("second")))).unwrap();
         drop(j);
-        let (_, restored) = Journal::resume(&path, &fp(), 2).unwrap();
+        let (_, restored) = Journal::resume::<SweepRow>(&path, &fp(), 2).unwrap();
         match restored[0].as_ref().unwrap() {
             PointOutcome::Row(r) => assert_eq!(r.scenario, "second"),
             other => panic!("{other:?}"),
         }
         // A 1-point grid cannot hold index 0 *and* more: index 0 with
         // n_points=0 must be out of range.
-        let err = Journal::resume(&path, &fp(), 0).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 0).unwrap_err().to_string();
         assert!(err.contains("out of range"), "{err}");
         std::fs::remove_file(&path).ok();
     }
@@ -528,14 +580,14 @@ mod tests {
             key: "algo".into(),
             values: vec!["ring".into()],
         });
-        let err = Journal::resume(&path, &more, 8).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &more, 8).unwrap_err().to_string();
         assert!(err.contains("sweep axes"), "{err}");
         assert!(err.contains("algo=ring"), "must name the new axis: {err}");
 
         // Changed axes: same count, different values.
         let mut diff = fp();
         diff.axes[1].values = vec!["fp16".into()];
-        let err = Journal::resume(&path, &diff, 2).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &diff, 2).unwrap_err().to_string();
         assert!(err.contains("axis differs"), "{err}");
         assert!(err.contains("precision=bf16,tf32"), "{err}");
         assert!(err.contains("precision=fp16"), "{err}");
@@ -544,13 +596,13 @@ mod tests {
         let mut base = presets::default_scenario("selene").unwrap();
         base.parallelism.nodes = 7;
         let moved = GridFingerprint::new(&base, &axes());
-        let err = Journal::resume(&path, &moved, 4).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &moved, 4).unwrap_err().to_string();
         assert!(err.contains("base scenario fingerprint"), "{err}");
 
         // Changed schema version.
         let mut newer = fp();
         newer.schema += 1;
-        let err = Journal::resume(&path, &newer, 4).unwrap_err().to_string();
+        let err = Journal::resume::<SweepRow>(&path, &newer, 4).unwrap_err().to_string();
         assert!(err.contains("schema version"), "{err}");
         assert!(err.contains(&format!("{}", JOURNAL_SCHEMA_VERSION)), "{err}");
 
@@ -558,11 +610,51 @@ mod tests {
     }
 
     #[test]
+    fn train_and_serve_journals_do_not_cross_resume() {
+        // Satellite contract: the sweep kind is part of the grid
+        // fingerprint, so `serve-sweep --resume` on a training journal
+        // (and vice versa) is rejected naming both kinds — before the
+        // axes or base spec are even compared.
+        let path = tmp("kindmix");
+        Journal::create(&path, &fp()).unwrap();
+        let base = presets::default_scenario("selene").unwrap();
+        let serve = GridFingerprint::for_kind("serve", &base, &axes());
+        let err = Journal::resume::<SweepRow>(&path, &serve, 4).unwrap_err().to_string();
+        assert!(err.contains("records a 'train' sweep"), "{err}");
+        assert!(err.contains("this run is a 'serve' sweep"), "{err}");
+
+        // The reverse direction: a serve journal cannot feed `sweep`.
+        Journal::create(&path, &serve).unwrap();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap_err().to_string();
+        assert!(err.contains("records a 'serve' sweep"), "{err}");
+        assert!(err.contains("this run is a 'train' sweep"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_serving_journals_default_to_the_train_kind() {
+        // Journals written before `sweep_kind` existed must keep
+        // resuming as training sweeps: strip the key from a fresh header
+        // and resume.
+        let path = tmp("prekind");
+        let mut j = Journal::create(&path, &fp()).unwrap();
+        j.append(0, &PointOutcome::Row(Box::new(row("a")))).unwrap();
+        drop(j);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"sweep_kind\":\"train\""), "{text}");
+        let stripped = text.replace("\"sweep_kind\":\"train\",", "");
+        std::fs::write(&path, stripped).unwrap();
+        let (_, restored) = Journal::resume::<SweepRow>(&path, &fp(), 2).unwrap();
+        assert!(restored[0].is_some(), "legacy journal rows restore");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn non_journal_file_rejected() {
         let path = tmp("notjournal");
         std::fs::write(&path, "scenario,machine\n").unwrap();
-        assert!(Journal::resume(&path, &fp(), 4).is_err());
-        let err = Journal::resume(&tmp("absent"), &fp(), 4)
+        assert!(Journal::resume::<SweepRow>(&path, &fp(), 4).is_err());
+        let err = Journal::resume::<SweepRow>(&tmp("absent"), &fp(), 4)
             .unwrap_err()
             .to_string();
         assert!(err.contains("unreadable"), "{err}");

@@ -32,4 +32,6 @@ pub mod spec;
 pub mod sweep;
 
 pub use context::ExperimentContext;
-pub use spec::{GpuPlacement, MachineSpec, ParallelismSpec, ScenarioSpec, TopoSpec, WorkloadSpec};
+pub use spec::{
+    GpuPlacement, MachineSpec, ParallelismSpec, ScenarioSpec, ServingSpec, TopoSpec, WorkloadSpec,
+};

@@ -141,7 +141,7 @@ pub fn machine(name: &str) -> Result<MachineSpec> {
 
 /// Names of every workload preset, in registry order.
 pub fn workload_names() -> Vec<&'static str> {
-    vec!["resnet50", "transformer", "bert", "convlstm", "gpt3_175b"]
+    vec!["resnet50", "transformer", "bert", "convlstm", "gpt3_175b", "gpt3_13b"]
 }
 
 /// Look up a workload preset by name. Profiles mirror the MLPerf v0.7
@@ -215,6 +215,23 @@ pub fn workload(name: &str) -> Result<WorkloadSpec> {
             state_bytes_per_param: 16.0,
             layers: 96, // GPT-3 175B transformer blocks
             layer_allreduce_bytes_per_sample: 2048.0 * 12288.0 * 2.0,
+        },
+        // GPT-3 13B (Brown et al. 2020, Table 2.1: 40 layers, d_model
+        // 5140 ≈ 40 heads x 128; we use the 5120 production shape) — the
+        // serve-sweep default. Unlike the 175B model, its fp16 weights
+        // (26 GB) fit a single 40 GB A100, so tensor=1 replicas are
+        // feasible and the serving frontier is a real replicas x tensor
+        // trade instead of "everything infeasible".
+        "gpt3_13b" => WorkloadSpec {
+            name: "gpt3_13b".into(),
+            fwd_flops_per_sample: 2.0 * 13e9 * 2048.0, // 2*params per token, seq 2048
+            params: 13e9,
+            batch_per_gpu: 1,
+            efficiency: 0.45,
+            activation_bytes_per_sample: 2048.0 * 5120.0 * 2.0, // seq x hidden, bf16
+            state_bytes_per_param: 16.0,
+            layers: 40, // GPT-3 13B transformer blocks
+            layer_allreduce_bytes_per_sample: 2048.0 * 5120.0 * 2.0,
         },
         _ => {
             return Err(BoosterError::Config(format!(
@@ -313,6 +330,17 @@ mod tests {
         assert!(full < 40e9, "{} GB must fit an A100-40GB", full / 1e9);
         let zero1 = resident_state_bytes(&m, Sharding::Optimizer, 128, 1);
         assert!(zero1 > 96e9, "ZeRO-1 keeps ~1 TB resident: {} GB", zero1 / 1e9);
+    }
+
+    #[test]
+    fn gpt3_13b_serves_on_a_single_a100() {
+        // The serve-sweep default must leave KV-cache headroom at
+        // tensor=1 on the smallest preset GPU: 26 GB fp16 weights inside
+        // 40 GB HBM.
+        let w = workload("gpt3_13b").unwrap();
+        assert_eq!(w.layers, 40);
+        let fp16_weights = w.params * 2.0;
+        assert!(fp16_weights < 0.7 * 40e9, "{} GB", fp16_weights / 1e9);
     }
 
     #[test]

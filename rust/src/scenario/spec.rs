@@ -408,6 +408,123 @@ impl WorkloadSpec {
     }
 }
 
+/// Autoregressive-serving profile: how the workload's model is *served*
+/// rather than trained. Lives beside [`WorkloadSpec`] in a
+/// [`ScenarioSpec`] as an optional block (absent = training scenario, so
+/// every pre-serving spec file, auto-name and fingerprint is unchanged).
+/// Consumed by `crate::serve`: the KV-cache fit, the per-token decode
+/// timeline and the continuous-batching queue simulation all read from
+/// here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSpec {
+    /// Model replicas serving independently; each owns
+    /// `tensor_parallel` GPUs and an equal share of the request rate.
+    pub replicas: usize,
+    /// Prompt (prefill) tokens per request.
+    pub prompt_tokens: usize,
+    /// Decode (generated) tokens per request.
+    pub decode_tokens: usize,
+    /// Offered load, requests/s across all replicas (Poisson arrivals).
+    pub requests_per_s: f64,
+    /// p99 end-to-end latency SLO in milliseconds — the frontier filter.
+    pub slo_p99_ms: f64,
+    /// Continuous-batching admission cap (the KV fit may bind tighter).
+    pub max_batch: usize,
+    /// KV heads of the served model (grouped-query models: < attention
+    /// heads). KV bytes/token/layer = 2 · kv_heads · head_dim · precision.
+    pub kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Requests the queue simulation completes per grid point.
+    pub sim_requests: usize,
+}
+
+impl ServingSpec {
+    /// Defaults matching the `gpt3_13b` preset (40 heads × 128 dim): one
+    /// replica, 512-token prompts, 64 decode tokens, 4 req/s against a
+    /// 4 s p99 SLO, batch cap 8, 64 simulated requests.
+    pub fn defaults() -> ServingSpec {
+        ServingSpec {
+            replicas: 1,
+            prompt_tokens: 512,
+            decode_tokens: 64,
+            requests_per_s: 4.0,
+            slo_p99_ms: 4000.0,
+            max_batch: 8,
+            kv_heads: 40,
+            head_dim: 128,
+            sim_requests: 64,
+        }
+    }
+
+    /// Check internal consistency (`who` names the owning scenario).
+    pub fn validate(&self, who: &str) -> Result<()> {
+        let fail = |m: String| Err(cfg(format!("scenario '{who}': serving {m}")));
+        if self.replicas == 0 {
+            return fail("replicas must be > 0".into());
+        }
+        if self.prompt_tokens == 0 {
+            return fail("prompt_tokens must be > 0".into());
+        }
+        if self.decode_tokens == 0 {
+            return fail("decode_tokens must be > 0".into());
+        }
+        if !(self.requests_per_s > 0.0 && self.requests_per_s.is_finite()) {
+            return fail(format!("requests_per_s {} must be positive", self.requests_per_s));
+        }
+        if !(self.slo_p99_ms > 0.0 && self.slo_p99_ms.is_finite()) {
+            return fail(format!("slo_p99_ms {} must be positive", self.slo_p99_ms));
+        }
+        if self.max_batch == 0 {
+            return fail("max_batch must be > 0".into());
+        }
+        if self.kv_heads == 0 || self.head_dim == 0 {
+            return fail("kv_heads and head_dim must be > 0".into());
+        }
+        if self.sim_requests == 0 {
+            return fail("sim_requests must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Total sequence length a finished request's KV cache spans.
+    pub fn seq_len(&self) -> usize {
+        self.prompt_tokens + self.decode_tokens
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("decode_tokens", Json::Num(self.decode_tokens as f64)),
+            ("requests_per_s", Json::Num(self.requests_per_s)),
+            ("slo_p99_ms", Json::Num(self.slo_p99_ms)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("kv_heads", Json::Num(self.kv_heads as f64)),
+            ("head_dim", Json::Num(self.head_dim as f64)),
+            ("sim_requests", Json::Num(self.sim_requests as f64)),
+        ])
+    }
+
+    /// Deserialize. Absent fields take the [`ServingSpec::defaults`]
+    /// values so terse spec files work.
+    pub fn from_json(j: &Json) -> Result<ServingSpec> {
+        let d = ServingSpec::defaults();
+        Ok(ServingSpec {
+            replicas: opt_usize(j, "replicas", d.replicas)?,
+            prompt_tokens: opt_usize(j, "prompt_tokens", d.prompt_tokens)?,
+            decode_tokens: opt_usize(j, "decode_tokens", d.decode_tokens)?,
+            requests_per_s: opt_f64(j, "requests_per_s", d.requests_per_s)?,
+            slo_p99_ms: opt_f64(j, "slo_p99_ms", d.slo_p99_ms)?,
+            max_batch: opt_usize(j, "max_batch", d.max_batch)?,
+            kv_heads: opt_usize(j, "kv_heads", d.kv_heads)?,
+            head_dim: opt_usize(j, "head_dim", d.head_dim)?,
+            sim_requests: opt_usize(j, "sim_requests", d.sim_requests)?,
+        })
+    }
+}
+
 /// How the workload is spread over the machine: data parallelism across
 /// replicas, optionally composed with pipeline parallelism inside each
 /// replica (hybrid pipeline×data, §2.3 "model parallelism or pipelining").
@@ -532,6 +649,10 @@ pub struct ScenarioSpec {
     pub parallelism: ParallelismSpec,
     /// Training math precision key (see [`Precision::parse`]).
     pub precision: String,
+    /// Serving profile — `Some` turns the scenario into an inference
+    /// workload for `crate::serve` (absent on every training scenario, so
+    /// pre-serving JSON and fingerprints are untouched).
+    pub serving: Option<ServingSpec>,
 }
 
 impl ScenarioSpec {
@@ -553,6 +674,7 @@ impl ScenarioSpec {
             schedule: "gpipe".into(),
             sharding: "none".into(),
             precision: "fp16_tc".into(),
+            serving: None,
         }
     }
 
@@ -658,6 +780,23 @@ impl ScenarioSpec {
             ));
         }
         Precision::parse(&self.precision)?;
+        if let Some(serving) = &self.serving {
+            serving.validate(&self.name)?;
+            if p.pipeline_stages > 1 || p.microbatches > 1 {
+                return fail(format!(
+                    "serving scenarios decode on replicas x tensor only — \
+                     pipeline_stages {} / microbatches {} must both be 1",
+                    p.pipeline_stages, p.microbatches
+                ));
+            }
+            if sharding.is_sharded() {
+                return fail(format!(
+                    "serving scenarios hold inference weights, not sharded optimizer \
+                     state — sharding '{}' must be none",
+                    p.sharding
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -728,18 +867,27 @@ impl ScenarioSpec {
         if p.sharding != "none" {
             name.push_str(&format!("/zero-{}", p.sharding));
         }
+        if let Some(s) = &self.serving {
+            name.push_str(&format!("/serve-r{}-t{}-b{}", s.replicas, p.tensor_parallel, s.max_batch));
+        }
         name
     }
 
-    /// Serialize the full scenario.
+    /// Serialize the full scenario. The `serving` key is emitted only
+    /// when present, so training scenarios serialize (and fingerprint)
+    /// exactly as before the serving layer existed.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("machine", self.machine.to_json()),
             ("workload", self.workload.to_json()),
             ("parallelism", self.parallelism.to_json()),
             ("precision", Json::Str(self.precision.clone())),
-        ])
+        ];
+        if let Some(serving) = &self.serving {
+            fields.push(("serving", serving.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Deserialize and validate.
@@ -750,6 +898,10 @@ impl ScenarioSpec {
             workload: WorkloadSpec::from_json(j.req("workload")?)?,
             parallelism: ParallelismSpec::from_json(j.req("parallelism")?)?,
             precision: req_str(j, "precision")?,
+            serving: match j.get("serving") {
+                None => None,
+                Some(v) => Some(ServingSpec::from_json(v)?),
+            },
         };
         s.validate()?;
         Ok(s)
@@ -788,6 +940,7 @@ pub struct ScenarioBuilder {
     schedule: String,
     sharding: String,
     precision: String,
+    serving: Option<ServingSpec>,
 }
 
 impl ScenarioBuilder {
@@ -876,6 +1029,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Serving profile — turns the scenario into an inference workload.
+    pub fn serving(mut self, s: ServingSpec) -> Self {
+        self.serving = Some(s);
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<ScenarioSpec> {
         let workload = self
@@ -899,6 +1058,7 @@ impl ScenarioBuilder {
                 sharding: crate::train::zero::Sharding::canonicalize(&self.sharding),
             },
             precision: self.precision,
+            serving: self.serving,
         };
         spec.name = self.name.unwrap_or_else(|| spec.auto_name());
         spec.validate()?;
@@ -1142,6 +1302,65 @@ mod tests {
             "sharding":"zero1"}"#;
         let p = ParallelismSpec::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(p.sharding, "optimizer");
+    }
+
+    #[test]
+    fn serving_fields_roundtrip_and_validate() {
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .workload(presets::workload("gpt3_13b").unwrap())
+            .nodes(1)
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap();
+        assert!(spec.name.ends_with("/serve-r1-t1-b8"), "{}", spec.name);
+        let j = spec.to_json().to_string();
+        assert!(j.contains("\"serving\""));
+        let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+
+        // Terse serving blocks fill in the defaults.
+        let terse = ServingSpec::from_json(&Json::parse(r#"{"replicas":2}"#).unwrap()).unwrap();
+        assert_eq!(terse.replicas, 2);
+        assert_eq!(terse.prompt_tokens, 512);
+        assert_eq!(terse.max_batch, 8);
+
+        // Serving rejects the training-only shapes.
+        let m = presets::machine("juwels_booster").unwrap();
+        let err = ScenarioSpec::builder(m.clone())
+            .nodes(2)
+            .pipeline_stages(4)
+            .microbatches(4)
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline_stages"), "{err}");
+        let err = ScenarioSpec::builder(m.clone())
+            .nodes(2)
+            .sharding("optimizer")
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sharding"), "{err}");
+        let mut bad = ServingSpec::defaults();
+        bad.requests_per_s = 0.0;
+        assert!(ScenarioSpec::builder(m).nodes(2).serving(bad).build().is_err());
+    }
+
+    #[test]
+    fn serving_absent_keeps_training_specs_byte_stable() {
+        // The serving key is emitted only when set, so every pre-serving
+        // training spec serializes — and fingerprints — as before.
+        let spec = ScenarioSpec::builder(presets::machine("selene").unwrap())
+            .nodes(4)
+            .build()
+            .unwrap();
+        let j = spec.to_json().to_string();
+        assert!(!j.contains("serving"), "{j}");
+        let mut served = spec.clone();
+        served.serving = Some(ServingSpec::defaults());
+        assert_ne!(spec.fingerprint(), served.fingerprint());
     }
 
     #[test]

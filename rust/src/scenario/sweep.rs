@@ -41,7 +41,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::collectives::CollectiveModel;
-use crate::scenario::journal::{GridFingerprint, Journal};
+use crate::scenario::journal::{GridFingerprint, Journal, JournalRow};
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
 use crate::train::hybrid::HybridTimeline;
@@ -520,12 +520,26 @@ impl SweepRow {
     }
 }
 
+impl JournalRow for SweepRow {
+    const SWEEP_KIND: &'static str = "train";
+
+    fn to_json(&self) -> Json {
+        SweepRow::to_json(self)
+    }
+
+    fn from_json(j: &Json) -> Result<SweepRow> {
+        SweepRow::from_json(j)
+    }
+}
+
 /// The recorded fate of one grid point — what the journal persists and
-/// what a resumed run restores.
+/// what a resumed run restores. Generic over the row type so the
+/// training sweep ([`SweepRow`], the default) and the serving sweep
+/// ([`crate::serve::sweep::ServeRow`]) share one journal format.
 #[derive(Debug, Clone)]
-pub enum PointOutcome {
+pub enum PointOutcome<R = SweepRow> {
     /// Priced successfully.
-    Row(Box<SweepRow>),
+    Row(Box<R>),
     /// Skipped by the evaluation-time feasibility check (memory fit).
     Infeasible {
         /// Scenario name of the skipped point.
@@ -877,8 +891,9 @@ struct GroupOutcome {
 
 type GroupResult = Result<GroupOutcome>;
 
-/// Split `0..n` into at most `workers` contiguous, near-equal ranges.
-fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+/// Split `0..n` into at most `workers` contiguous, near-equal ranges
+/// (shared with the serving sweep engine).
+pub(crate) fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
     let w = workers.clamp(1, n.max(1));
     let base = n / w;
     let extra = n % w;
@@ -893,7 +908,7 @@ fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
 }
 
 /// Extract a panic payload's text (workers and [`catch_unwind`] share it).
-fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
     payload
         .downcast_ref::<&str>()
         .map(|s| s.to_string())
@@ -1312,7 +1327,7 @@ fn run_engine(
 
 /// Intra-machine workers to give each of `groups` machine groups:
 /// the host's cores spread across the groups, at least one each.
-fn auto_workers(groups: usize) -> usize {
+pub(crate) fn auto_workers(groups: usize) -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     (cores / groups.max(1)).max(1)
 }
@@ -1395,7 +1410,7 @@ pub fn run_journaled(
 /// Resolve a worker's result, turning a panic into a simulation error
 /// (carrying the machine and the panic message) instead of poisoning the
 /// whole process.
-fn join_worker<T>(
+pub(crate) fn join_worker<T>(
     machine: &str,
     handle: std::thread::ScopedJoinHandle<'_, Result<T>>,
 ) -> Result<T> {

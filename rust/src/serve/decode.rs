@@ -1,0 +1,317 @@
+//! Per-token decode pricing — [`DecodeTimeline`], the serving sibling of
+//! [`crate::train::zero::ZeroTimeline`].
+//!
+//! Autoregressive decode emits one token per forward pass, so each step
+//! per rank is:
+//!
+//! * **compute** — a matrix-vector pass over the whole (tensor-sharded)
+//!   model: `2 · params · batch ÷ tensor` FLOPs that must stream the
+//!   weights *and* every resident request's KV cache from HBM. Priced by
+//!   the [`crate::hw::gpu::GpuSpec::kernel_time`] roofline with a
+//!   non-zero byte term — at small batch, decode sits firmly on the
+//!   bandwidth roof (this is why serving is priced per token and not as
+//!   a training step);
+//! * **tensor-group allreduces** — Megatron row-parallel layers reduce
+//!   twice per layer per token, `kv_heads · head_dim · batch` elements
+//!   each: tiny, latency-dominated collectives charged through the same
+//!   shared [`crate::collectives::CostCache`] the training sweeps warm
+//!   and freeze. One representative per distinct group signature is
+//!   priced and the slowest gates, exactly as the ZeRO step's
+//!   `tensor_comm` does. Zero — and zero cache traffic — at `tensor=1`.
+//!
+//! **Prefill** prices the prompt like one pipelined forward: the same
+//! roofline over `2 · params · prompt_tokens · n_prompts ÷ tensor` FLOPs
+//! plus the same per-layer allreduces at prompt volume.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::collectives::CollectiveModel;
+use crate::pipeline::PipelinedModel;
+use crate::scenario::spec::ServingSpec;
+use crate::serve::kv;
+use crate::topology::{GpuId, Topology};
+use crate::train::layout::{chain_signature, ParallelLayout};
+use crate::train::timeline::TimelineModel;
+use crate::util::error::{BoosterError, Result};
+
+/// Cost model for one serving job (all replicas of one grid point). Owns
+/// a [`TimelineModel`] for the device roofline, the collective settings
+/// and the shared cost cache; serving adds the model profile, the
+/// [`ServingSpec`] and the tensor width.
+#[derive(Debug)]
+pub struct DecodeTimeline<'t> {
+    /// Device + collective cost model (precision, efficiency, algo and
+    /// the shared, cached [`CollectiveModel`] all live here).
+    pub timeline: TimelineModel<'t>,
+    /// The model being served.
+    pub model: PipelinedModel,
+    /// The serving profile (prompt/decode lengths, batch cap, KV shape).
+    pub serving: ServingSpec,
+    /// Tensor-parallel group size per replica (1 = none).
+    pub tensor: usize,
+}
+
+impl<'t> DecodeTimeline<'t> {
+    /// Build from a serving scenario (one with a `serving` block).
+    pub fn from_scenario(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<DecodeTimeline<'t>> {
+        Self::with_collectives(spec, topo, Arc::new(CollectiveModel::new(topo)))
+    }
+
+    /// [`DecodeTimeline::from_scenario`] on an existing (possibly shared)
+    /// collective model — the serve sweep's workers share one pre-warmed
+    /// cache exactly like the training sweep's.
+    pub fn with_collectives(
+        spec: &crate::scenario::ScenarioSpec,
+        topo: &'t Topology,
+        collectives: Arc<CollectiveModel<'t>>,
+    ) -> Result<DecodeTimeline<'t>> {
+        let timeline = TimelineModel::from_scenario_shared(spec, topo, collectives)?;
+        let mut dt = DecodeTimeline {
+            timeline,
+            model: spec.workload.pipelined_model(),
+            serving: ServingSpec::defaults(),
+            tensor: 1,
+        };
+        dt.configure_serving(spec)?;
+        Ok(dt)
+    }
+
+    /// Reconfigure from another scenario without touching the owned
+    /// collective model's caches.
+    pub fn configure_from(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        self.timeline.configure_from(spec)?;
+        self.configure_serving(spec)
+    }
+
+    fn configure_serving(&mut self, spec: &crate::scenario::ScenarioSpec) -> Result<()> {
+        let serving = spec.serving.clone().ok_or_else(|| {
+            BoosterError::Config(format!(
+                "scenario '{}' has no serving block — DecodeTimeline prices \
+                 inference scenarios only",
+                spec.name
+            ))
+        })?;
+        self.serving = serving;
+        self.tensor = spec.parallelism.tensor_parallel;
+        self.model = spec.workload.pipelined_model();
+        Ok(())
+    }
+
+    /// The layout a serving job of `n` GPUs induces
+    /// (`replicas × 1 × tensor`).
+    pub fn layout(&self, n: usize) -> Result<ParallelLayout> {
+        ParallelLayout::new(n, 1, self.tensor)
+    }
+
+    /// Max requests one replica can keep resident (KV fit — see
+    /// [`kv::max_resident_batch`]), capped by the spec's `max_batch`.
+    pub fn batch_cap(&self) -> Result<usize> {
+        let resident = kv::max_resident_batch(
+            self.timeline.topo,
+            &self.model,
+            &self.serving,
+            self.timeline.precision,
+            self.tensor,
+        )?;
+        Ok(resident.min(self.serving.max_batch).max(1))
+    }
+
+    /// HBM bytes one decode step streams per rank: the sharded weights
+    /// plus every resident request's KV cache.
+    fn step_bytes(&self, batch: usize) -> f64 {
+        let weights =
+            kv::weight_bytes_per_rank(&self.model, self.timeline.precision, self.tensor);
+        let cache = kv::kv_bytes_per_request(
+            &self.serving,
+            &self.model,
+            self.timeline.precision,
+            self.tensor,
+        );
+        weights + cache * batch as f64
+    }
+
+    /// Wire bytes of one tensor-group layer allreduce at decode volume.
+    fn token_allreduce_bytes(&self, batch: usize) -> f64 {
+        (self.serving.kv_heads * self.serving.head_dim * batch) as f64
+            * self.timeline.precision.bytes() as f64
+    }
+
+    /// Wire bytes of one tensor-group layer allreduce at prefill volume.
+    fn prefill_allreduce_bytes(&self, n_prompts: usize) -> f64 {
+        self.token_allreduce_bytes(n_prompts) * self.serving.prompt_tokens as f64
+    }
+
+    /// Worst tensor-group allreduce seconds for `2·layers` reductions of
+    /// `bytes` each — one representative per distinct group signature,
+    /// slowest gates (mirrors `zero::tensor_comm`). 0, with no cache
+    /// traffic, at `tensor = 1`.
+    fn tensor_comm(&self, layout: &ParallelLayout, gpus: &[GpuId], bytes: f64) -> Result<f64> {
+        if layout.tensor == 1 {
+            return Ok(0.0);
+        }
+        let per_step = 2.0 * self.model.layers as f64;
+        let mut seen: HashSet<Vec<u8>> = HashSet::new();
+        let mut worst = 0.0f64;
+        for r in 0..layout.data {
+            let group = layout.tensor_group(gpus, r, 0);
+            if !seen.insert(chain_signature(self.timeline.topo, group)) {
+                continue;
+            }
+            let t = self.timeline.collectives.allreduce_time(group, bytes, self.timeline.algo)?;
+            worst = worst.max(t);
+        }
+        Ok(per_step * worst)
+    }
+
+    /// Seconds to decode one token for `batch` resident requests on a
+    /// replica: roofline compute (weights + KV stream) plus the
+    /// per-layer tensor allreduces.
+    pub fn token_time(&self, gpus: &[GpuId], batch: usize) -> Result<f64> {
+        let layout = self.layout(gpus.len())?;
+        let flops = 2.0 * self.model.params * batch as f64 / self.tensor as f64;
+        let compute = self.timeline.topo.node_spec.gpu.kernel_time(
+            flops,
+            self.step_bytes(batch),
+            self.timeline.precision,
+            self.timeline.efficiency,
+        );
+        let tp = self.tensor_comm(&layout, gpus, self.token_allreduce_bytes(batch))?;
+        Ok(compute + tp)
+    }
+
+    /// Seconds to prefill `n_prompts` freshly admitted prompts: one
+    /// forward over `prompt_tokens · n_prompts` tokens plus the per-layer
+    /// allreduces at prompt volume.
+    pub fn prefill_time(&self, gpus: &[GpuId], n_prompts: usize) -> Result<f64> {
+        let layout = self.layout(gpus.len())?;
+        let tokens = (self.serving.prompt_tokens * n_prompts) as f64;
+        let flops = 2.0 * self.model.params * tokens / self.tensor as f64;
+        let compute = self.timeline.topo.node_spec.gpu.kernel_time(
+            flops,
+            self.step_bytes(n_prompts),
+            self.timeline.precision,
+            self.timeline.efficiency,
+        );
+        let tp = self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(n_prompts))?;
+        Ok(compute + tp)
+    }
+
+    /// Issue exactly the collective queries one queue simulation makes —
+    /// token- and prefill-volume allreduces at every admissible batch
+    /// size — so the serve sweep can warm its shared cache sequentially
+    /// and freeze it before sharding evaluation across workers. A replica
+    /// that fails the KV fit issues no queries (neither does its
+    /// evaluation — it is infeasible before any collective is priced).
+    pub fn warm_comm(&self, gpus: &[GpuId]) -> Result<()> {
+        let layout = self.layout(gpus.len())?;
+        if layout.tensor == 1 {
+            return Ok(());
+        }
+        let cap = match self.batch_cap() {
+            Ok(cap) => cap,
+            Err(_) => return Ok(()),
+        };
+        for b in 1..=cap {
+            self.tensor_comm(&layout, gpus, self.token_allreduce_bytes(b))?;
+            self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(b))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+    use crate::scenario::spec::ScenarioSpec;
+
+    fn serve_spec(machine: &str, tensor: usize) -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine(machine).unwrap())
+            .workload(presets::workload("gpt3_13b").unwrap())
+            .nodes(1)
+            .tensor_parallel(tensor)
+            .precision("fp16")
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn single_gpu_decode_is_pure_roofline_with_zero_collective_traffic() {
+        // Satellite degeneracy contract: at tensor=1 a decode token is
+        // the bare kernel_time roofline — no allreduce priced, no cost
+        // cache touched.
+        let spec = serve_spec("juwels_booster", 1);
+        let topo = spec.machine.build_topology().unwrap();
+        let dt = DecodeTimeline::from_scenario(&spec, &topo).unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let one = &gpus[..1];
+
+        let token = dt.token_time(one, 1).unwrap();
+        let gpu = &topo.node_spec.gpu;
+        let expect = gpu.kernel_time(
+            2.0 * dt.model.params,
+            dt.step_bytes(1),
+            dt.timeline.precision,
+            dt.timeline.efficiency,
+        );
+        assert_eq!(token, expect, "token time must be the bare roofline");
+        // 26 GB of fp16 weights at 1.555 TB/s: decode is bandwidth-bound
+        // and takes ~17 ms/token.
+        assert!(token > 0.010 && token < 0.030, "{token}");
+
+        let prefill = dt.prefill_time(one, 1).unwrap();
+        assert!(prefill > token, "512 prompt tokens outweigh one decode token");
+        assert_eq!(
+            dt.timeline.collectives.cache_stats(),
+            (0, 0),
+            "tensor=1 must not touch the collective cache"
+        );
+    }
+
+    #[test]
+    fn tensor_width_adds_collective_cost_but_splits_the_stream() {
+        let spec = serve_spec("juwels_booster", 2);
+        let topo = spec.machine.build_topology().unwrap();
+        let dt = DecodeTimeline::from_scenario(&spec, &topo).unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let pair = &gpus[..2];
+        let token2 = dt.token_time(pair, 4).unwrap();
+        assert!(token2 > 0.0);
+        let (hits, misses) = dt.timeline.collectives.cache_stats();
+        assert!(hits + misses > 0, "tensor=2 must price allreduces");
+
+        // Halving the weight stream beats the tiny allreduce: wider
+        // tensor is faster per token at this model size.
+        let spec1 = serve_spec("juwels_booster", 1);
+        let dt1 = DecodeTimeline::from_scenario(&spec1, &topo).unwrap();
+        let token1 = dt1.token_time(&gpus[..1], 4).unwrap();
+        assert!(token2 < token1, "t=2 {token2} must beat t=1 {token1}");
+    }
+
+    #[test]
+    fn batch_cap_tracks_the_kv_fit() {
+        let spec = serve_spec("juwels_booster", 1);
+        let topo = spec.machine.build_topology().unwrap();
+        let dt = DecodeTimeline::from_scenario(&spec, &topo).unwrap();
+        // defaults cap at max_batch=8 long before the ~30-request KV cap.
+        assert_eq!(dt.batch_cap().unwrap(), 8);
+        let mut wide = serve_spec("juwels_booster", 1);
+        wide.serving.as_mut().unwrap().max_batch = 512;
+        let dt = DecodeTimeline::from_scenario(&wide, &topo).unwrap();
+        let cap = dt.batch_cap().unwrap();
+        assert!(cap > 8 && cap < 512, "KV fit must bind: {cap}");
+    }
+
+    #[test]
+    fn a_training_scenario_is_rejected() {
+        let spec = presets::default_scenario("juwels_booster").unwrap();
+        let topo = spec.machine.build_topology().unwrap();
+        let err = DecodeTimeline::from_scenario(&spec, &topo).unwrap_err().to_string();
+        assert!(err.contains("no serving block"), "{err}");
+    }
+}

@@ -1,0 +1,152 @@
+//! KV-cache memory model — the serving counterpart of the training
+//! memory axes (pipeline fit, [`crate::train::zero::memory_fit`]).
+//!
+//! A serving replica holds two things in each rank's HBM:
+//!
+//! * the **weights**, `params · precision_bytes ÷ tensor` (inference
+//!   carries no optimizer state — `state_bytes_per_param` is a training
+//!   quantity);
+//! * one **KV-cache block per in-flight request**:
+//!   `2 · layers · kv_heads · head_dim · (prompt + decode) ·
+//!   precision_bytes ÷ tensor` (the 2 is K and V; tensor parallelism
+//!   shards the head dimension exactly as it shards the weights).
+//!
+//! Whatever HBM the weights leave over, divided by the per-request block,
+//! is the **max resident batch** — the hard ceiling continuous batching
+//! can admit to, and the third memory axis the serve sweep trades against
+//! replicas and tensor width. A replica that cannot hold the weights plus
+//! a single request's cache is infeasible, reported with the same
+//! "does not fit" `Config`-error shape the training fits use so the sweep
+//! driver files it as infeasible rather than aborting the grid.
+
+use crate::hw::precision::Precision;
+use crate::pipeline::PipelinedModel;
+use crate::scenario::spec::ServingSpec;
+use crate::topology::Topology;
+use crate::util::error::{BoosterError, Result};
+
+/// Weight bytes resident per rank: the full model at the serving
+/// precision, sharded `tensor`-ways (serving replicas never pipeline, so
+/// there is no per-stage split).
+pub fn weight_bytes_per_rank(model: &PipelinedModel, precision: Precision, tensor: usize) -> f64 {
+    model.params * precision.bytes() as f64 / tensor.max(1) as f64
+}
+
+/// KV-cache bytes one request pins per rank for its whole lifetime
+/// (prompt + all decoded tokens), sharded `tensor`-ways. Zero sequence
+/// length means zero cache — the fit check then degenerates bit-exactly
+/// to a weights-only check.
+pub fn kv_bytes_per_request(
+    serving: &ServingSpec,
+    model: &PipelinedModel,
+    precision: Precision,
+    tensor: usize,
+) -> f64 {
+    let head_bytes = (serving.kv_heads * serving.head_dim) as f64 * precision.bytes() as f64;
+    2.0 * model.layers as f64 * head_bytes * serving.seq_len() as f64 / tensor.max(1) as f64
+}
+
+/// Per-rank memory fit for one serving replica: weights plus at least one
+/// request's KV cache must fit the GPU's HBM. On success returns the max
+/// resident batch — how many requests' caches fit beside the weights
+/// (`usize::MAX` when the per-request cache is zero bytes).
+pub fn max_resident_batch(
+    topo: &Topology,
+    model: &PipelinedModel,
+    serving: &ServingSpec,
+    precision: Precision,
+    tensor: usize,
+) -> Result<usize> {
+    let hbm = topo.node_spec.gpu.hbm_bytes as f64;
+    let weights = weight_bytes_per_rank(model, precision, tensor);
+    let kv = kv_bytes_per_request(serving, model, precision, tensor);
+    if weights + kv > hbm {
+        return Err(BoosterError::Config(format!(
+            "serving replica does not fit: {:.1} GB weights ({} tensor shards) \
+             + {:.1} GB KV cache for one {}-token request > {:.0} GB HBM",
+            weights / 1e9,
+            tensor.max(1),
+            kv / 1e9,
+            serving.seq_len(),
+            hbm / 1e9,
+        )));
+    }
+    if kv <= 0.0 {
+        return Ok(usize::MAX);
+    }
+    Ok(((hbm - weights) / kv) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    fn setup(machine: &str, workload: &str) -> (Topology, PipelinedModel, ServingSpec) {
+        let m = presets::machine(machine).unwrap();
+        let topo = m.build_topology().unwrap();
+        let model = presets::workload(workload).unwrap().pipelined_model();
+        (topo, model, ServingSpec::defaults())
+    }
+
+    #[test]
+    fn kv_block_matches_the_closed_form() {
+        let (_, model, serving) = setup("juwels_booster", "gpt3_13b");
+        // 2 · 40 layers · (40·128) heads · 576 tokens · 2 B ≈ 472 MB.
+        let kv = kv_bytes_per_request(&serving, &model, Precision::Fp16, 1);
+        let expect = 2.0 * 40.0 * (40.0 * 128.0) * 576.0 * 2.0;
+        assert_eq!(kv, expect);
+        // Tensor parallelism shards the cache like the weights.
+        assert_eq!(kv_bytes_per_request(&serving, &model, Precision::Fp16, 4), expect / 4.0);
+        // One-byte serving precisions halve the block.
+        assert_eq!(kv_bytes_per_request(&serving, &model, Precision::Int8Tc, 1), expect / 2.0);
+    }
+
+    #[test]
+    fn gpt3_13b_fits_a_40gb_a100_with_headroom_for_a_real_batch() {
+        let (topo, model, serving) = setup("juwels_booster", "gpt3_13b");
+        let cap = max_resident_batch(&topo, &model, &serving, Precision::Fp16, 1).unwrap();
+        // 26 GB weights leave ~17 GB; ~472 MB per request ⇒ tens of slots.
+        assert!(cap >= 20 && cap <= 60, "cap {cap}");
+        // Wider tensor shards both terms: strictly more slots.
+        let cap4 = max_resident_batch(&topo, &model, &serving, Precision::Fp16, 4).unwrap();
+        assert!(cap4 > cap, "{cap4} vs {cap}");
+    }
+
+    #[test]
+    fn gpt3_175b_is_infeasible_on_the_booster_at_any_intra_node_width() {
+        // 350 GB fp16 weights; tensor is capped at 4 GPUs/node ⇒ 87.5 GB
+        // per rank against 40 GB HBM. This is why the serve sweep
+        // defaults to the 13B preset.
+        let (topo, model, serving) = setup("juwels_booster", "gpt3_175b");
+        for tensor in [1usize, 2, 4] {
+            let err = max_resident_batch(&topo, &model, &serving, Precision::Fp16, tensor)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("does not fit"), "{err}");
+            assert!(err.contains("GB HBM"), "{err}");
+        }
+    }
+
+    #[test]
+    fn zero_sequence_degenerates_to_a_weights_only_fit() {
+        let (topo, model, mut serving) = setup("juwels_booster", "gpt3_13b");
+        serving.prompt_tokens = 0;
+        serving.decode_tokens = 0;
+        assert_eq!(kv_bytes_per_request(&serving, &model, Precision::Fp16, 1), 0.0);
+        // Fits ⇒ unbounded batch (no cache to pin).
+        assert_eq!(
+            max_resident_batch(&topo, &model, &serving, Precision::Fp16, 1).unwrap(),
+            usize::MAX
+        );
+        // The accept/reject boundary is bit-exactly the weights-only
+        // comparison: a model sized exactly at HBM passes, one byte per
+        // parameter class over fails.
+        let hbm = topo.node_spec.gpu.hbm_bytes as f64;
+        let mut edge = model.clone();
+        edge.params = hbm / Precision::Fp16.bytes() as f64;
+        assert!(max_resident_batch(&topo, &edge, &serving, Precision::Fp16, 1).is_ok());
+        edge.params = (hbm + 2.0) / Precision::Fp16.bytes() as f64;
+        assert!(max_resident_batch(&topo, &edge, &serving, Precision::Fp16, 1).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Inference serving — autoregressive decode as a priced workload.
+//!
+//! The paper's systems (§2.3, "large deep learning models may not fit on
+//! a single computational device") are described for training, but the
+//! same machine descriptions price *serving* a trained model: per-token
+//! decode is a memory-bandwidth-bound matrix-vector pass over the full
+//! weights plus, under Megatron-style tensor parallelism, two small
+//! tensor-group allreduces per layer per token — all quantities the
+//! existing [`crate::hw::gpu::GpuSpec`] roofline and cached
+//! [`crate::collectives::CollectiveModel`] already model. Four parts:
+//!
+//! * [`kv`] — the **KV-cache memory axis**: resident bytes per in-flight
+//!   request (`2·layers·kv_heads·head_dim·seq·precision ÷ tensor`), the
+//!   weights-plus-cache fit check mirroring
+//!   [`crate::train::zero::memory_fit`], and the **max resident batch**
+//!   one replica can hold;
+//! * [`decode`] — [`decode::DecodeTimeline`], pricing one decode token
+//!   (roofline compute + per-layer tensor allreduces through the shared
+//!   cost cache) and the prefill pass over the prompt;
+//! * [`queue`] — continuous-batching queue simulation: deterministic
+//!   seeded Poisson arrivals, iteration-level admission up to the
+//!   KV-cache batch cap, p50/p99 request latency and per-replica
+//!   tokens/s;
+//! * [`sweep`] — the `booster serve-sweep` grid engine over
+//!   replicas × tensor × batch × machine, sharing the training sweep's
+//!   journal/resume machinery with a `serve` kind tag so the two sweep
+//!   families can never cross-resume.
+//!
+//! See `rust/src/scenario/README.md` §Serving for the spec schema and
+//! the per-machine KV-cache capacity table.
+
+pub mod decode;
+pub mod kv;
+pub mod queue;
+pub mod sweep;
+
+pub use decode::DecodeTimeline;
+pub use kv::{kv_bytes_per_request, max_resident_batch, weight_bytes_per_rank};
+pub use queue::{simulate_replica, ReplicaStats};
+pub use sweep::{ServeOutcome, ServeRow, SERVE_KEYS};

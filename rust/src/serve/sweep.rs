@@ -1,0 +1,1184 @@
+//! The `booster serve-sweep` grid engine — replicas × tensor × batch ×
+//! machine over the serving cost model.
+//!
+//! Deliberately the same machinery as the training sweep
+//! ([`crate::scenario::sweep`]): the same deterministic expansion order,
+//! the same machine grouping with one shared pre-warmed frozen
+//! [`crate::collectives::CollectiveModel`] per group, the same
+//! journal/resume contract (byte-identical CSV after a crash), the same
+//! worker fault isolation. What differs is the *row*: a grid point is
+//! priced by [`DecodeTimeline`] + [`simulate_replica`] into p50/p99
+//! request latency and tokens/s instead of a training step time.
+//!
+//! Journals are tagged `sweep_kind: "serve"` (see
+//! [`crate::scenario::journal`]); a serve resume on a train journal — or
+//! vice versa — is rejected up front naming both kinds.
+//!
+//! The headline artifact is the **throughput-under-SLO frontier**: per
+//! machine, the feasible row with the highest aggregate tokens/s among
+//! those whose simulated p99 meets the spec's `slo_p99_ms`.
+
+use std::panic::AssertUnwindSafe;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::CollectiveModel;
+use crate::scenario::journal::{GridFingerprint, Journal, JournalRow};
+use crate::scenario::presets;
+use crate::scenario::spec::ScenarioSpec;
+use crate::scenario::sweep::{
+    auto_workers, chunk_ranges, expand, join_worker, panic_text, Cancel, FailedPoint, GroupStats,
+    ParamAxis, Point, PointOutcome, SweepOptions,
+};
+use crate::serve::decode::DecodeTimeline;
+use crate::serve::kv;
+use crate::serve::queue::simulate_replica;
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Scenario fields a serve sweep may vary. Narrower than the training
+/// set by design: serving never pipelines or shards optimizer state, and
+/// expression axes (runexp variables) are a training-sweep feature.
+pub const SERVE_KEYS: [&str; 9] = [
+    "machine",
+    "workload",
+    "replicas",
+    "tensor",
+    "batch",
+    "precision",
+    "prompt",
+    "decode",
+    "rate",
+];
+
+/// Group comma-split `--param` entries into axes, exactly as the
+/// training sweep's parser does — but against [`SERVE_KEYS`], with no
+/// expression variables. Unknown keys are rejected up front with the
+/// full serve key set in the error, so `--param replicaz=2` can never
+/// flow into a half-priced grid.
+pub fn parse_serve_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
+    let mut axes: Vec<ParamAxis> = Vec::new();
+    for e in entries {
+        match e.split_once('=') {
+            Some((key, first)) => {
+                let key = key.trim().to_ascii_lowercase();
+                if !SERVE_KEYS.contains(&key.as_str()) {
+                    return Err(BoosterError::Config(format!(
+                        "unknown serve-sweep key '{key}' (sweepable: {})",
+                        SERVE_KEYS.join(", ")
+                    )));
+                }
+                if axes.iter().any(|a| a.key == key) {
+                    return Err(BoosterError::Config(format!(
+                        "duplicate serve-sweep key '{key}'"
+                    )));
+                }
+                axes.push(ParamAxis {
+                    key,
+                    values: vec![first.trim().to_string()],
+                });
+            }
+            None => match axes.last_mut() {
+                Some(axis) => axis.values.push(e.trim().to_string()),
+                None => {
+                    return Err(BoosterError::Config(format!(
+                        "serve-sweep value '{e}' has no key (use --param key=v1,v2)"
+                    )))
+                }
+            },
+        }
+    }
+    for a in &axes {
+        if a.values.iter().any(|v| v.is_empty()) {
+            return Err(BoosterError::Config(format!(
+                "serve-sweep key '{}' has an empty value",
+                a.key
+            )));
+        }
+    }
+    Ok(axes)
+}
+
+/// Apply one `key=value` assignment to a serving scenario.
+pub fn apply_serve_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()> {
+    let bad_num =
+        || BoosterError::Config(format!("serve-sweep key '{key}': invalid value '{value}'"));
+    if matches!(key, "replicas" | "batch" | "prompt" | "decode" | "rate") && spec.serving.is_none()
+    {
+        return Err(BoosterError::Config(format!(
+            "serve-sweep key '{key}' needs a base scenario with a serving block"
+        )));
+    }
+    match key {
+        "machine" => spec.machine = presets::machine(value)?,
+        "workload" => spec.workload = presets::workload(value)?,
+        "precision" => spec.precision = value.to_string(),
+        "tensor" => spec.parallelism.tensor_parallel = value.parse().map_err(|_| bad_num())?,
+        "replicas" => {
+            spec.serving.as_mut().expect("checked above").replicas =
+                value.parse().map_err(|_| bad_num())?
+        }
+        "batch" => {
+            spec.serving.as_mut().expect("checked above").max_batch =
+                value.parse().map_err(|_| bad_num())?
+        }
+        "prompt" => {
+            spec.serving.as_mut().expect("checked above").prompt_tokens =
+                value.parse().map_err(|_| bad_num())?
+        }
+        "decode" => {
+            spec.serving.as_mut().expect("checked above").decode_tokens =
+                value.parse().map_err(|_| bad_num())?
+        }
+        "rate" => {
+            spec.serving.as_mut().expect("checked above").requests_per_s =
+                value.parse().map_err(|_| bad_num())?
+        }
+        _ => {
+            return Err(BoosterError::Config(format!(
+                "unknown serve-sweep key '{key}' (sweepable: {})",
+                SERVE_KEYS.join(", ")
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// Materialize and validate the serve grid. After the axes are applied,
+/// each point's node count is *derived* — the smallest allocation that
+/// holds `replicas × tensor` GPUs on the point's machine — so the grid
+/// author never has to co-vary a nodes axis by hand.
+pub fn prepare_serve(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<Vec<Point>> {
+    if base.serving.is_none() {
+        return Err(BoosterError::Config(
+            "serve sweep needs a base scenario with a serving block".into(),
+        ));
+    }
+    let assignments = expand(axes);
+    let mut points: Vec<Point> = Vec::with_capacity(assignments.len());
+    for asg in assignments {
+        let mut spec = base.clone();
+        for (k, v) in &asg {
+            apply_serve_param(&mut spec, k, v)?;
+        }
+        let serving = spec.serving.as_ref().expect("base has serving");
+        let need = (serving.replicas * spec.parallelism.tensor_parallel).max(1);
+        let per_node = spec.machine.gpus_per_node.max(1);
+        spec.parallelism.nodes = (need + per_node - 1) / per_node;
+        spec.name = spec.auto_name();
+        spec.validate()?;
+        points.push((spec, asg));
+    }
+    Ok(points)
+}
+
+/// One evaluated serve grid point.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Auto-generated scenario name (…/serve-rR-tT-bB).
+    pub scenario: String,
+    /// Machine preset name.
+    pub machine: String,
+    /// Workload (the model being served).
+    pub workload: String,
+    /// Nodes allocated (derived: smallest holding replicas × tensor).
+    pub nodes: usize,
+    /// GPUs actually serving (replicas × tensor).
+    pub gpus: usize,
+    /// Model replicas sharing the offered load.
+    pub replicas: usize,
+    /// Tensor-parallel width per replica.
+    pub tensor: usize,
+    /// Admission ceiling: `min(max_batch, KV-cache fit)`.
+    pub batch_cap: usize,
+    /// Serving precision key.
+    pub precision: String,
+    /// Prompt tokens per request.
+    pub prompt_tokens: usize,
+    /// Decoded tokens per request.
+    pub decode_tokens: usize,
+    /// Offered load, requests/s across all replicas.
+    pub rate: f64,
+    /// Per-request KV-cache block per rank, GB.
+    pub kv_gb: f64,
+    /// One-prompt prefill time, ms.
+    pub prefill_ms: f64,
+    /// Batch-1 decode token time, ms.
+    pub token_ms: f64,
+    /// Median request latency from the queue simulation, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency, ms.
+    pub p99_ms: f64,
+    /// The p99 latency SLO this point was judged against, ms.
+    pub slo_ms: f64,
+    /// Whether `p99_ms <= slo_ms` — the frontier filter.
+    pub slo_ok: bool,
+    /// Mean resident batch across decode steps.
+    pub mean_batch: f64,
+    /// Decoded tokens/s, one replica.
+    pub tokens_per_s: f64,
+    /// Decoded tokens/s, all replicas.
+    pub total_tokens_per_s: f64,
+    /// The grid assignment that produced this row.
+    pub assignment: Vec<(String, String)>,
+}
+
+fn jstr(j: &Json, k: &str) -> Result<String> {
+    j.req(k)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| BoosterError::Artifact(format!("serve row field '{k}' is not a string")))
+}
+
+fn jnum(j: &Json, k: &str) -> Result<f64> {
+    j.req(k)?
+        .as_f64()
+        .ok_or_else(|| BoosterError::Artifact(format!("serve row field '{k}' is not a number")))
+}
+
+fn jint(j: &Json, k: &str) -> Result<usize> {
+    j.req(k)?
+        .as_usize()
+        .ok_or_else(|| BoosterError::Artifact(format!("serve row field '{k}' is not an integer")))
+}
+
+impl ServeRow {
+    /// Full row serialization — the `BENCH_serve.json` row shape and the
+    /// journal `row` payload. f64s print in shortest round-trip form, so
+    /// `from_json(to_json(r))` is bit-exact and a resumed sweep's CSV is
+    /// byte-identical.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("machine", Json::Str(self.machine.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("tensor", Json::Num(self.tensor as f64)),
+            ("batch_cap", Json::Num(self.batch_cap as f64)),
+            ("precision", Json::Str(self.precision.clone())),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("decode_tokens", Json::Num(self.decode_tokens as f64)),
+            ("rate", Json::Num(self.rate)),
+            ("kv_gb", Json::Num(self.kv_gb)),
+            ("prefill_ms", Json::Num(self.prefill_ms)),
+            ("token_ms", Json::Num(self.token_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("slo_ms", Json::Num(self.slo_ms)),
+            ("slo_ok", Json::Bool(self.slo_ok)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("total_tokens_per_s", Json::Num(self.total_tokens_per_s)),
+            (
+                "assignment",
+                Json::Arr(
+                    self.assignment
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::obj(vec![
+                                ("key", Json::Str(k.clone())),
+                                ("value", Json::Str(v.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`ServeRow::to_json`] (journal replay).
+    pub fn from_json(j: &Json) -> Result<ServeRow> {
+        let mut assignment = Vec::new();
+        for pair in j
+            .req("assignment")?
+            .as_arr()
+            .ok_or_else(|| BoosterError::Artifact("row 'assignment' is not an array".into()))?
+        {
+            assignment.push((jstr(pair, "key")?, jstr(pair, "value")?));
+        }
+        Ok(ServeRow {
+            scenario: jstr(j, "scenario")?,
+            machine: jstr(j, "machine")?,
+            workload: jstr(j, "workload")?,
+            nodes: jint(j, "nodes")?,
+            gpus: jint(j, "gpus")?,
+            replicas: jint(j, "replicas")?,
+            tensor: jint(j, "tensor")?,
+            batch_cap: jint(j, "batch_cap")?,
+            precision: jstr(j, "precision")?,
+            prompt_tokens: jint(j, "prompt_tokens")?,
+            decode_tokens: jint(j, "decode_tokens")?,
+            rate: jnum(j, "rate")?,
+            kv_gb: jnum(j, "kv_gb")?,
+            prefill_ms: jnum(j, "prefill_ms")?,
+            token_ms: jnum(j, "token_ms")?,
+            p50_ms: jnum(j, "p50_ms")?,
+            p99_ms: jnum(j, "p99_ms")?,
+            slo_ms: jnum(j, "slo_ms")?,
+            slo_ok: j
+                .req("slo_ok")?
+                .as_bool()
+                .ok_or_else(|| BoosterError::Artifact("serve row field 'slo_ok' is not a bool".into()))?,
+            mean_batch: jnum(j, "mean_batch")?,
+            tokens_per_s: jnum(j, "tokens_per_s")?,
+            total_tokens_per_s: jnum(j, "total_tokens_per_s")?,
+            assignment,
+        })
+    }
+}
+
+impl JournalRow for ServeRow {
+    const SWEEP_KIND: &'static str = "serve";
+
+    fn to_json(&self) -> Json {
+        ServeRow::to_json(self)
+    }
+
+    fn from_json(j: &Json) -> Result<ServeRow> {
+        ServeRow::from_json(j)
+    }
+}
+
+/// A completed serve sweep — the serving sibling of
+/// [`crate::scenario::sweep::SweepOutcome`].
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// One row per feasible grid point, deterministic expansion order.
+    pub rows: Vec<ServeRow>,
+    /// `(scenario, reason)` for points infeasible at evaluation time
+    /// (the KV-cache fit — only decidable when pricing).
+    pub infeasible: Vec<(String, String)>,
+    /// Points whose evaluation panicked (after one bounded retry).
+    pub failed: Vec<FailedPoint>,
+    /// Per-machine-group worker counts and cache stats.
+    pub groups: Vec<GroupStats>,
+    /// Collective cost-cache hits across all machine groups.
+    pub cache_hits: u64,
+    /// Flow simulations actually run.
+    pub cache_misses: u64,
+    /// Whether the sweep was cancelled before every point completed.
+    pub interrupted: bool,
+    /// Grid points never evaluated (only non-zero when interrupted).
+    pub pending: usize,
+    /// Rows restored from the journal rather than re-evaluated.
+    pub resumed_rows: usize,
+    /// Infeasible markers restored from the journal.
+    pub resumed_infeasible: usize,
+    /// Failed markers restored from the journal.
+    pub resumed_failed: usize,
+}
+
+/// Indices of the best feasible row per machine: highest
+/// `total_tokens_per_s` among rows with `slo_ok`, machines in
+/// first-appearance (expansion) order. A machine none of whose rows meet
+/// the SLO is absent — that absence *is* the finding.
+pub fn serve_frontier(rows: &[ServeRow]) -> Vec<usize> {
+    let mut best: Vec<(&str, usize)> = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        if !r.slo_ok {
+            continue;
+        }
+        match best.iter_mut().find(|(m, _)| *m == r.machine.as_str()) {
+            Some((_, j)) => {
+                if r.total_tokens_per_s > rows[*j].total_tokens_per_s {
+                    *j = i;
+                }
+            }
+            None => best.push((r.machine.as_str(), i)),
+        }
+    }
+    best.into_iter().map(|(_, i)| i).collect()
+}
+
+impl ServeOutcome {
+    /// CSV with a header, one line per grid point, expansion order.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "scenario,machine,workload,nodes,gpus,replicas,tensor,batch_cap,precision,\
+             prompt_tokens,decode_tokens,rate,kv_gb,prefill_ms,token_ms,p50_ms,p99_ms,\
+             slo_ms,slo_ok,mean_batch,tokens_per_s,total_tokens_per_s\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.2},{:.2},{:.0},{},\
+                 {:.2},{:.1},{:.1}\n",
+                r.scenario,
+                r.machine,
+                r.workload,
+                r.nodes,
+                r.gpus,
+                r.replicas,
+                r.tensor,
+                r.batch_cap,
+                r.precision,
+                r.prompt_tokens,
+                r.decode_tokens,
+                r.rate,
+                r.kv_gb,
+                r.prefill_ms,
+                r.token_ms,
+                r.p50_ms,
+                r.p99_ms,
+                r.slo_ms,
+                r.slo_ok,
+                r.mean_batch,
+                r.tokens_per_s,
+                r.total_tokens_per_s,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable result (`results/BENCH_serve.json` shape).
+    pub fn to_json(&self, axes: &[ParamAxis]) -> Json {
+        let params = Json::Arr(
+            axes.iter()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("key", Json::Str(a.key.clone())),
+                        ("values", Json::Arr(a.values.iter().cloned().map(Json::Str).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let rows = Json::Arr(self.rows.iter().map(|r| r.to_json()).collect());
+        let infeasible = Json::Arr(
+            self.infeasible
+                .iter()
+                .map(|(scenario, reason)| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(scenario.clone())),
+                        ("reason", Json::Str(reason.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let failed = Json::Arr(
+            self.failed
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(f.scenario.clone())),
+                        ("machine", Json::Str(f.machine.clone())),
+                        ("reason", Json::Str(f.reason.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let groups = Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| {
+                    Json::obj(vec![
+                        ("machine", Json::Str(g.machine.clone())),
+                        ("points", Json::Num(g.points as f64)),
+                        ("workers", Json::Num(g.workers as f64)),
+                        ("hits", Json::Num(g.hits as f64)),
+                        ("misses", Json::Num(g.misses as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let frontier = Json::Arr(
+            serve_frontier(&self.rows)
+                .into_iter()
+                .map(|i| {
+                    let r = &self.rows[i];
+                    Json::obj(vec![
+                        ("machine", Json::Str(r.machine.clone())),
+                        ("scenario", Json::Str(r.scenario.clone())),
+                        ("replicas", Json::Num(r.replicas as f64)),
+                        ("tensor", Json::Num(r.tensor as f64)),
+                        ("batch_cap", Json::Num(r.batch_cap as f64)),
+                        ("p99_ms", Json::Num(r.p99_ms)),
+                        ("total_tokens_per_s", Json::Num(r.total_tokens_per_s)),
+                    ])
+                })
+                .collect(),
+        );
+        let total = (self.cache_hits + self.cache_misses).max(1);
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("params", params),
+            ("rows", rows),
+            ("infeasible", infeasible),
+            ("failed", failed),
+            ("groups", groups),
+            ("frontier", frontier),
+            ("interrupted", Json::Bool(self.interrupted)),
+            ("pending", Json::Num(self.pending as f64)),
+            (
+                "resume",
+                Json::obj(vec![
+                    ("resumed_rows", Json::Num(self.resumed_rows as f64)),
+                    (
+                        "fresh_rows",
+                        Json::Num((self.rows.len() - self.resumed_rows) as f64),
+                    ),
+                    (
+                        "resumed_infeasible",
+                        Json::Num(self.resumed_infeasible as f64),
+                    ),
+                    ("resumed_failed", Json::Num(self.resumed_failed as f64)),
+                ]),
+            ),
+            (
+                "cost_cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.cache_hits as f64)),
+                    ("misses", Json::Num(self.cache_misses as f64)),
+                    ("hit_rate", Json::Num(self.cache_hits as f64 / total as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Shared evaluation context, one per engine run (the serving mirror of
+/// the training sweep's `EvalCtx`).
+struct ServeCtx<'a> {
+    points: &'a [Point],
+    cancel: &'a Cancel,
+    fault: Option<&'a crate::scenario::sweep::FaultHook>,
+    journal: Option<&'a Mutex<Journal>>,
+    done: &'a AtomicUsize,
+    interrupt_after: Option<usize>,
+}
+
+struct ServeGroupOutcome {
+    outcomes: Vec<Option<PointOutcome<ServeRow>>>,
+    cache: (u64, u64),
+    workers: usize,
+}
+
+/// Evaluate one serve grid point with worker fault isolation (panic →
+/// rebuild + one retry → `Failed`; `Config` error → `Infeasible` — the
+/// KV-cache fit lands here).
+fn eval_one_serve<'t>(
+    ctx: &ServeCtx<'_>,
+    i: usize,
+    topo: &'t crate::topology::Topology,
+    shared: &Arc<CollectiveModel<'t>>,
+    dt: &mut Option<DecodeTimeline<'t>>,
+) -> Result<PointOutcome<ServeRow>> {
+    let (spec, asg) = &ctx.points[i];
+    let mut attempt = 0;
+    loop {
+        if dt.is_none() {
+            *dt = Some(DecodeTimeline::with_collectives(spec, topo, Arc::clone(shared))?);
+        }
+        let tl = dt.as_mut().expect("timeline just built");
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<ServeRow> {
+            if let Some(fault) = ctx.fault {
+                if fault(i, attempt) {
+                    panic!("injected fault at point {i} attempt {attempt}");
+                }
+            }
+            tl.configure_from(spec)?;
+            let serving = tl.serving.clone();
+            let all = spec.job_gpus(topo)?;
+            let need = (serving.replicas * tl.tensor).max(1);
+            // prepare_serve sized the allocation to hold the job.
+            let gpus = &all[..need];
+            let cap = tl.batch_cap()?; // KV fit → Config → infeasible
+            let kv_bytes = kv::kv_bytes_per_request(
+                &serving,
+                &tl.model,
+                tl.timeline.precision,
+                tl.tensor,
+            );
+            let prefill = tl.prefill_time(gpus, 1)?;
+            let token = tl.token_time(gpus, 1)?;
+            let rate_per_replica = serving.requests_per_s / serving.replicas.max(1) as f64;
+            let mut rng = Rng::seed_from(7);
+            let stats = simulate_replica(tl, gpus, rate_per_replica, cap, &mut rng)?;
+            let p99_ms = stats.p99 * 1e3;
+            Ok(ServeRow {
+                scenario: spec.name.clone(),
+                machine: spec.machine.name.clone(),
+                workload: spec.workload.name.clone(),
+                nodes: spec.parallelism.nodes,
+                gpus: need,
+                replicas: serving.replicas,
+                tensor: tl.tensor,
+                batch_cap: cap,
+                precision: spec.precision.clone(),
+                prompt_tokens: serving.prompt_tokens,
+                decode_tokens: serving.decode_tokens,
+                rate: serving.requests_per_s,
+                kv_gb: kv_bytes / 1e9,
+                prefill_ms: prefill * 1e3,
+                token_ms: token * 1e3,
+                p50_ms: stats.p50 * 1e3,
+                p99_ms,
+                slo_ms: serving.slo_p99_ms,
+                slo_ok: p99_ms <= serving.slo_p99_ms,
+                mean_batch: stats.mean_batch,
+                tokens_per_s: stats.tokens_per_s,
+                total_tokens_per_s: stats.tokens_per_s * serving.replicas as f64,
+                assignment: asg.clone(),
+            })
+        }));
+        match caught {
+            Ok(Ok(row)) => return Ok(PointOutcome::Row(Box::new(row))),
+            Ok(Err(BoosterError::Config(reason))) => {
+                return Ok(PointOutcome::Infeasible {
+                    scenario: spec.name.clone(),
+                    reason,
+                })
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                *dt = None;
+                let what = panic_text(payload.as_ref());
+                if attempt == 0 {
+                    attempt = 1;
+                    continue;
+                }
+                return Ok(PointOutcome::Failed {
+                    scenario: spec.name.clone(),
+                    machine: spec.machine.name.clone(),
+                    reason: format!("evaluation panicked (retried once): {what}"),
+                });
+            }
+        }
+    }
+}
+
+/// Evaluate the points in `idxs` through one per-worker
+/// [`DecodeTimeline`] over the group's frozen shared cache, journaling
+/// and counting each completion (mirror of the training `eval_points`).
+fn eval_serve_points<'t>(
+    ctx: &ServeCtx<'_>,
+    idxs: &[usize],
+    topo: &'t crate::topology::Topology,
+    shared: &Arc<CollectiveModel<'t>>,
+) -> Result<Vec<Option<PointOutcome<ServeRow>>>> {
+    let mut dt: Option<DecodeTimeline<'t>> = None;
+    let mut out = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        if ctx.cancel.cancelled() {
+            out.push(None);
+            continue;
+        }
+        let outcome = eval_one_serve(ctx, i, topo, shared, &mut dt)?;
+        if let Some(journal) = ctx.journal {
+            journal
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .append(i, &outcome)?;
+        }
+        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(limit) = ctx.interrupt_after {
+            if completed >= limit {
+                ctx.cancel.cancel();
+            }
+        }
+        out.push(Some(outcome));
+    }
+    Ok(out)
+}
+
+/// One machine group: sequential warm of the shared cache over **all**
+/// the group's points (restored ones included — cache interpolation is
+/// path-dependent, and skipping them would break the byte-identical
+/// resume contract), then freeze and shard the pending evaluations.
+fn eval_serve_group(
+    ctx: &ServeCtx<'_>,
+    idxs: &[usize],
+    pending: &[usize],
+    workers: usize,
+) -> Result<ServeGroupOutcome> {
+    let machine = &ctx.points[idxs[0]].0.machine;
+    let topo = machine.build_topology()?;
+    let shared = Arc::new(CollectiveModel::new(&topo));
+    let chunks = chunk_ranges(pending.len(), workers);
+
+    let mut cancelled_in_warm = false;
+    {
+        let mut dt =
+            DecodeTimeline::with_collectives(&ctx.points[idxs[0]].0, &topo, Arc::clone(&shared))?;
+        for &i in idxs {
+            if ctx.cancel.cancelled() {
+                cancelled_in_warm = true;
+                break;
+            }
+            let (spec, _) = &ctx.points[i];
+            dt.configure_from(spec)?;
+            let all = spec.job_gpus(&topo)?;
+            let need = (dt.serving.replicas * dt.tensor).max(1);
+            dt.warm_comm(&all[..need])?;
+        }
+    }
+    shared.freeze_cache(true);
+    if cancelled_in_warm {
+        return Ok(ServeGroupOutcome {
+            outcomes: vec![None; pending.len()],
+            cache: shared.cache_stats(),
+            workers: chunks.len(),
+        });
+    }
+
+    let outcomes: Vec<Result<Vec<Option<PointOutcome<ServeRow>>>>> = if chunks.len() <= 1 {
+        vec![eval_serve_points(ctx, pending, &topo, &shared)]
+    } else {
+        std::thread::scope(|s| {
+            let topo = &topo;
+            let shared = &shared;
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|r| {
+                    let slice = &pending[r.clone()];
+                    s.spawn(move || eval_serve_points(ctx, slice, topo, shared))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| join_worker(&machine.name, h))
+                .collect()
+        })
+    };
+
+    let mut merged = Vec::with_capacity(pending.len());
+    for o in outcomes {
+        merged.extend(o?);
+    }
+    Ok(ServeGroupOutcome {
+        outcomes: merged,
+        cache: shared.cache_stats(),
+        workers: chunks.len(),
+    })
+}
+
+fn group_by_machine(points: &[Point]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, (spec, _)) in points.iter().enumerate() {
+        match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((spec.machine.name.clone(), vec![i])),
+        }
+    }
+    groups
+}
+
+struct Work {
+    machine: String,
+    idxs: Vec<usize>,
+    pending: Vec<usize>,
+}
+
+fn assemble(
+    restored: Vec<Option<PointOutcome<ServeRow>>>,
+    work: &[Work],
+    results: Vec<Result<ServeGroupOutcome>>,
+    interrupted: bool,
+) -> Result<ServeOutcome> {
+    let mut resumed_rows = 0;
+    let mut resumed_infeasible = 0;
+    let mut resumed_failed = 0;
+    for r in restored.iter().flatten() {
+        match r {
+            PointOutcome::Row(_) => resumed_rows += 1,
+            PointOutcome::Infeasible { .. } => resumed_infeasible += 1,
+            PointOutcome::Failed { .. } => resumed_failed += 1,
+        }
+    }
+
+    let mut grid = restored;
+    let mut stats = Vec::with_capacity(work.len());
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    for (w, res) in work.iter().zip(results) {
+        let group = res?;
+        for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
+            grid[i] = outcome;
+        }
+        cache_hits += group.cache.0;
+        cache_misses += group.cache.1;
+        stats.push(GroupStats {
+            machine: w.machine.clone(),
+            points: w.pending.len(),
+            workers: group.workers,
+            hits: group.cache.0,
+            misses: group.cache.1,
+        });
+    }
+
+    let mut rows = Vec::new();
+    let mut infeasible = Vec::new();
+    let mut failed = Vec::new();
+    let mut pending = 0;
+    for outcome in grid {
+        match outcome {
+            Some(PointOutcome::Row(row)) => rows.push(*row),
+            Some(PointOutcome::Infeasible { scenario, reason }) => {
+                infeasible.push((scenario, reason))
+            }
+            Some(PointOutcome::Failed {
+                scenario,
+                machine,
+                reason,
+            }) => failed.push(FailedPoint {
+                scenario,
+                machine,
+                reason,
+            }),
+            None => pending += 1,
+        }
+    }
+    Ok(ServeOutcome {
+        rows,
+        infeasible,
+        failed,
+        groups: stats,
+        cache_hits,
+        cache_misses,
+        interrupted,
+        pending,
+        resumed_rows,
+        resumed_infeasible,
+        resumed_failed,
+    })
+}
+
+/// The serve engine: identical shape to the training `run_engine` —
+/// machine groups in parallel unless sequential, fully-restored groups
+/// skipped, everything assembled in expansion order.
+fn run_serve_engine(
+    points: &[Point],
+    restored: Vec<Option<PointOutcome<ServeRow>>>,
+    journal: Option<Mutex<Journal>>,
+    opts: &SweepOptions,
+) -> Result<ServeOutcome> {
+    if points.is_empty() {
+        return Err(BoosterError::Config("serve sweep with no grid points".into()));
+    }
+    assert_eq!(restored.len(), points.len(), "restored map must cover the grid");
+    let groups = group_by_machine(points);
+    let work: Vec<Work> = groups
+        .into_iter()
+        .filter_map(|(machine, idxs)| {
+            let pending: Vec<usize> =
+                idxs.iter().copied().filter(|&i| restored[i].is_none()).collect();
+            (!pending.is_empty()).then_some(Work {
+                machine,
+                idxs,
+                pending,
+            })
+        })
+        .collect();
+    let workers = if opts.sequential {
+        1
+    } else if opts.workers == 0 {
+        auto_workers(work.len())
+    } else {
+        opts.workers
+    };
+    let done = AtomicUsize::new(0);
+    let ctx = ServeCtx {
+        points,
+        cancel: &opts.cancel,
+        fault: opts.fault.as_ref(),
+        journal: journal.as_ref(),
+        done: &done,
+        interrupt_after: opts.interrupt_after,
+    };
+    let results: Vec<Result<ServeGroupOutcome>> = if opts.sequential || work.len() <= 1 {
+        work.iter()
+            .map(|w| eval_serve_group(&ctx, &w.idxs, &w.pending, workers))
+            .collect()
+    } else {
+        std::thread::scope(|s| {
+            let ctx = &ctx;
+            let handles: Vec<_> = work
+                .iter()
+                .map(|w| {
+                    (
+                        w.machine.as_str(),
+                        s.spawn(move || eval_serve_group(ctx, &w.idxs, &w.pending, workers)),
+                    )
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|(machine, handle)| join_worker(machine, handle))
+                .collect()
+        })
+    };
+    assemble(restored, &work, results, opts.cancel.cancelled())
+}
+
+/// Expand the serve grid over `base` and evaluate every point (no
+/// journal).
+pub fn run_serve(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<ServeOutcome> {
+    run_serve_points_with(&prepare_serve(base, axes)?, &SweepOptions::default())
+}
+
+/// Evaluate prebuilt serve points with full [`SweepOptions`] control but
+/// no journal.
+pub fn run_serve_points_with(points: &[Point], opts: &SweepOptions) -> Result<ServeOutcome> {
+    let restored = (0..points.len()).map(|_| None).collect();
+    run_serve_engine(points, restored, None, opts)
+}
+
+/// The crash-tolerant entry point behind `booster serve-sweep`: expand
+/// and validate the grid, fingerprint it under the `serve` kind, open
+/// (or resume) the journal, skip restored points, evaluate the rest. A
+/// resume against a training journal is rejected naming both kinds; the
+/// final CSV is byte-identical to an uninterrupted run.
+pub fn run_serve_journaled(
+    base: &ScenarioSpec,
+    axes: &[ParamAxis],
+    journal_path: &Path,
+    resume: bool,
+    opts: &SweepOptions,
+) -> Result<ServeOutcome> {
+    let points = prepare_serve(base, axes)?;
+    let fp = GridFingerprint::for_kind(ServeRow::SWEEP_KIND, base, axes);
+    let (journal, restored) = if resume {
+        Journal::resume::<ServeRow>(journal_path, &fp, points.len())?
+    } else {
+        let journal = Journal::create(journal_path, &fp)?;
+        (journal, (0..points.len()).map(|_| None).collect())
+    };
+    run_serve_engine(&points, restored, Some(Mutex::new(journal)), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::ServingSpec;
+    use std::path::PathBuf;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("booster_serve_{}_{name}", std::process::id()))
+    }
+
+    fn base() -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .workload(presets::workload("gpt3_13b").unwrap())
+            .nodes(1)
+            .precision("fp16_tc")
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap()
+    }
+
+    fn frontier_axes() -> Vec<ParamAxis> {
+        parse_serve_params(&s(&[
+            "machine=juwels_booster",
+            "isambard_ai",
+            "replicas=1",
+            "2",
+            "tensor=1",
+            "2",
+        ]))
+        .unwrap()
+    }
+
+    #[test]
+    fn unknown_serve_keys_rejected_up_front_with_the_full_set() {
+        // Satellite contract: a typo'd key fails at parse time and the
+        // error teaches every serve-sweepable key.
+        let err = parse_serve_params(&s(&["replicaz=2"])).unwrap_err().to_string();
+        assert!(err.contains("unknown serve-sweep key 'replicaz'"), "{err}");
+        for key in SERVE_KEYS {
+            assert!(err.contains(key), "error must list '{key}': {err}");
+        }
+        // Training-only keys are not serveable; single-letter expression
+        // variables are a training-sweep feature.
+        assert!(parse_serve_params(&s(&["stages=2"])).is_err());
+        assert!(parse_serve_params(&s(&["n=1", "2"])).is_err());
+        assert!(parse_serve_params(&s(&["replicas=1", "replicas=2"])).is_err(), "duplicate");
+    }
+
+    #[test]
+    fn prepare_derives_nodes_from_replicas_and_tensor() {
+        let axes = parse_serve_params(&s(&["replicas=1", "2", "tensor=1", "4"])).unwrap();
+        let points = prepare_serve(&base(), &axes).unwrap();
+        assert_eq!(points.len(), 4);
+        // 4 GPUs/node on the booster: r2·t4 = 8 GPUs ⇒ 2 nodes.
+        let by_asg: Vec<(usize, usize)> = points
+            .iter()
+            .map(|(spec, _)| {
+                (spec.parallelism.nodes, spec.serving.as_ref().unwrap().replicas)
+            })
+            .collect();
+        assert_eq!(by_asg, vec![(1, 1), (1, 1), (1, 2), (2, 2)]);
+        for (spec, _) in &points {
+            assert!(spec.name.contains("/serve-r"), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn serve_sweep_runs_end_to_end_with_a_two_machine_frontier() {
+        // The acceptance grid: replicas × tensor on both the A100 booster
+        // and the GH200 Isambard-AI. Every point fits (13B model), and
+        // each machine must put at least one configuration under the
+        // 4-second p99 SLO — the frontier reports a winner per machine.
+        let out = run_serve(&base(), &frontier_axes()).unwrap();
+        assert_eq!(out.rows.len(), 8);
+        assert!(out.infeasible.is_empty(), "{:?}", out.infeasible);
+        assert!(out.failed.is_empty());
+        for r in &out.rows {
+            assert_eq!(r.gpus, r.replicas * r.tensor);
+            assert!(r.batch_cap >= 1 && r.batch_cap <= 8, "{r:?}");
+            assert!(r.p99_ms >= r.p50_ms && r.p50_ms > 0.0, "{r:?}");
+            assert!(r.tokens_per_s > 0.0, "{r:?}");
+            assert_eq!(r.total_tokens_per_s, r.tokens_per_s * r.replicas as f64);
+            assert!(r.kv_gb > 0.0 && r.prefill_ms > 0.0 && r.token_ms > 0.0, "{r:?}");
+        }
+        // Expansion order: first axis (machine) outermost.
+        assert_eq!(out.rows[0].machine, "juwels_booster");
+        assert_eq!(out.rows[4].machine, "isambard_ai");
+        assert_eq!(out.groups.len(), 2);
+
+        let f = serve_frontier(&out.rows);
+        let machines: Vec<&str> = f.iter().map(|&i| out.rows[i].machine.as_str()).collect();
+        assert_eq!(
+            machines,
+            vec!["juwels_booster", "isambard_ai"],
+            "both machines must field an SLO-feasible winner"
+        );
+        for &i in &f {
+            assert!(out.rows[i].slo_ok, "frontier rows must meet the SLO");
+        }
+
+        // The GH200's ~4x HBM bandwidth must show up as a faster decode.
+        let jb = &out.rows[serve_frontier(&out.rows)[0]];
+        let ia = &out.rows[serve_frontier(&out.rows)[1]];
+        assert!(
+            ia.total_tokens_per_s > jb.total_tokens_per_s,
+            "isambard {} vs booster {}",
+            ia.total_tokens_per_s,
+            jb.total_tokens_per_s
+        );
+
+        let csv = out.to_csv();
+        assert_eq!(csv.lines().count(), 9);
+        assert!(csv.starts_with("scenario,machine,"));
+        let j = out.to_json(&frontier_axes());
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(j.req("frontier").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn infeasible_points_are_recorded_not_fatal() {
+        // The 175B model cannot fit a 40 GB A100 at any intra-node tensor
+        // width: every point lands in `infeasible`, none abort the grid.
+        let mut b = base();
+        b.workload = presets::workload("gpt3_175b").unwrap();
+        let axes = parse_serve_params(&s(&["tensor=1", "4"])).unwrap();
+        let out = run_serve(&b, &axes).unwrap();
+        assert!(out.rows.is_empty());
+        assert_eq!(out.infeasible.len(), 2);
+        for (_, reason) in &out.infeasible {
+            assert!(reason.contains("does not fit"), "{reason}");
+        }
+        assert!(serve_frontier(&out.rows).is_empty());
+    }
+
+    #[test]
+    fn serve_rows_round_trip_bit_exactly() {
+        let out = run_serve(&base(), &frontier_axes()).unwrap();
+        for r in &out.rows {
+            let back = ServeRow::from_json(&r.to_json()).unwrap();
+            assert_eq!(back.to_json().to_string(), r.to_json().to_string());
+            assert_eq!(back.p99_ms, r.p99_ms);
+            assert_eq!(back.slo_ok, r.slo_ok);
+            assert_eq!(back.assignment, r.assignment);
+        }
+    }
+
+    #[test]
+    fn interrupted_serve_sweep_resumes_to_a_byte_identical_csv() {
+        // The tentpole resume contract, serve edition: interrupt after 3
+        // points, resume from the journal, and the final CSV must be
+        // byte-identical to an uninterrupted run of the same grid.
+        let path = tmp("resume.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let axes = frontier_axes();
+
+        let uninterrupted = run_serve(&base(), &axes).unwrap();
+
+        let opts = SweepOptions {
+            sequential: true,
+            interrupt_after: Some(3),
+            ..SweepOptions::default()
+        };
+        let partial = run_serve_journaled(&base(), &axes, &path, false, &opts).unwrap();
+        assert!(partial.interrupted);
+        assert!(partial.pending > 0, "{}", partial.pending);
+        assert_eq!(partial.rows.len() + partial.pending, 8);
+
+        let resumed =
+            run_serve_journaled(&base(), &axes, &path, true, &SweepOptions::default()).unwrap();
+        assert!(!resumed.interrupted);
+        assert_eq!(resumed.pending, 0);
+        assert_eq!(resumed.resumed_rows, partial.rows.len());
+        assert_eq!(resumed.to_csv(), uninterrupted.to_csv(), "resume must be byte-identical");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn a_serve_resume_on_a_train_journal_is_rejected() {
+        // Cross-family resume protection end-to-end: a training journal
+        // at the same path must be refused by the serve engine with both
+        // kinds named (the journal-level unit test covers the reverse).
+        let path = tmp("cross.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let train_base = presets::default_scenario("juwels_booster").unwrap();
+        let train_axes =
+            crate::scenario::sweep::parse_params(&s(&["nodes=1", "2"])).unwrap();
+        crate::scenario::sweep::run_journaled(
+            &train_base,
+            &train_axes,
+            &path,
+            false,
+            &SweepOptions {
+                sequential: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+
+        let err = run_serve_journaled(
+            &base(),
+            &frontier_axes(),
+            &path,
+            true,
+            &SweepOptions::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("records a 'train' sweep"), "{err}");
+        assert!(err.contains("'serve' sweep"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_faults_are_isolated_per_point() {
+        let fault_idx = 2usize;
+        let fault: crate::scenario::sweep::FaultHook =
+            Arc::new(move |i, _attempt| i == fault_idx);
+        let opts = SweepOptions {
+            sequential: true,
+            fault: Some(fault),
+            ..SweepOptions::default()
+        };
+        let points = prepare_serve(&base(), &frontier_axes()).unwrap();
+        let out = run_serve_points_with(&points, &opts).unwrap();
+        assert_eq!(out.failed.len(), 1, "{:?}", out.failed);
+        assert!(out.failed[0].reason.contains("retried once"), "{}", out.failed[0].reason);
+        assert_eq!(out.rows.len(), 7, "the other points survive");
+    }
+}
