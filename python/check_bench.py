@@ -6,9 +6,10 @@ smoke step. One validator, called from every step, so the schema is
 checked the same way everywhere and a mode's failure pinpoints itself.
 
 Usage:
-    check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero|interrupt|resume|fault]
+    check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero|interrupt|resume|fault|
+                                                     bigsweep|warm]
                    [--degenerate-csv CONTROL.csv --sweep-csv SWEEP.csv]
-                   [--identical-csv CONTROL.csv]
+                   [--identical-csv CONTROL.csv] [--min-points N]
     check_bench.py results/BENCH_serve.json [--mode serve|interrupt|resume|fault]
                    [--identical-csv CONTROL.csv --sweep-csv results/serve.csv]
     check_bench.py results/BENCH_hotpath.json
@@ -33,7 +34,11 @@ Mode checks add the smoke-specific assertions (see `--mode`):
     least one journal-restored row, and (with `--identical-csv`) a CSV
     byte-identical to the uninterrupted control run;
   * fault    — worker fault isolation: at least one `failed` row whose
-    reason records the panic and the bounded retry.
+    reason records the panic and the bounded retry;
+  * bigsweep — a streamed big grid completed whole (>= --min-points,
+    nothing pending or failed);
+  * warm     — a persistent-cache warm start answered >90% of collective
+    cost queries without fresh simulation, surrogate errors in bound.
 """
 
 import argparse
@@ -79,6 +84,35 @@ def check_cost_cache(cc, where):
         math.isclose(cc["hit_rate"], hits / total, rel_tol=1e-9, abs_tol=1e-9),
         f"{where}: hit_rate {cc['hit_rate']} != {hits}/{hits + misses}",
     )
+    # Surrogate / persistent-cache block (sweep engine artifacts; absent
+    # from the hotpath bench's simpler cost_cache block).
+    if "surrogate_hits" not in cc:
+        return
+    for k in ("surrogate_share", "surrogate_max_err", "surrogate_bound",
+              "sim_reuses", "warm_curves_loaded", "answer_share"):
+        require(k in cc, f"{where}: cost_cache missing '{k}'")
+    require(
+        cc["surrogate_hits"] >= 0 and cc["sim_reuses"] >= 0
+        and cc["warm_curves_loaded"] >= 0,
+        f"{where}: negative surrogate/warm counters {cc}",
+    )
+    require(
+        math.isclose(cc["surrogate_share"], cc["surrogate_hits"] / total,
+                     rel_tol=1e-9, abs_tol=1e-9),
+        f"{where}: surrogate_share inconsistent with surrogate_hits: {cc}",
+    )
+    require(
+        math.isclose(cc["answer_share"], (hits + cc["sim_reuses"]) / total,
+                     rel_tol=1e-9, abs_tol=1e-9),
+        f"{where}: answer_share != (hits + sim_reuses)/(hits + misses): {cc}",
+    )
+    require(cc["surrogate_bound"] >= 0, f"{where}: negative surrogate bound: {cc}")
+    if cc["surrogate_hits"] > 0:
+        require(
+            cc["surrogate_max_err"] <= cc["surrogate_bound"] + 1e-12,
+            f"{where}: surrogate answered with error {cc['surrogate_max_err']} "
+            f"above the fitted bound {cc['surrogate_bound']}",
+        )
 
 
 def check_sweep(d, path):
@@ -315,6 +349,22 @@ def check_hotpath(d, path):
     sc = d.get("shared_cache", {})
     for k in ("threads", "lookups", "single_thread_ms", "multi_thread_ms"):
         require(k in sc, f"{path}: shared_cache missing '{k}'")
+    sg = d.get("surrogate")
+    require(sg is not None, f"{path}: missing the surrogate-ladder block")
+    for k in ("queries", "surrogate_total_ms", "interpolated_total_ms",
+              "simulated_total_ms", "sim_over_surrogate", "surrogate_hits",
+              "surrogate_max_rel_err", "surrogate_fit_err"):
+        require(k in sg, f"{path}: surrogate block missing '{k}'")
+    require(sg["queries"] > 0 and sg["surrogate_hits"] > 0,
+            f"{path}: surrogate ladder answered nothing: {sg}")
+    require(
+        sg["sim_over_surrogate"] > 1,
+        f"{path}: full simulation not slower than the closed form: {sg}",
+    )
+    require(
+        sg["surrogate_max_rel_err"] <= sg["surrogate_fit_err"] + 1e-12,
+        f"{path}: observed surrogate error above the fitted bound: {sg}",
+    )
 
 
 # ---- per-mode smoke assertions ------------------------------------------
@@ -423,6 +473,50 @@ def mode_fault(d):
     print(f"check_bench: fault OK ({len(failed)} isolated failed point(s))")
 
 
+def mode_bigsweep(d, min_points):
+    """The streamed big-grid leg: the whole grid completed (nothing
+    pending, nothing silently dropped) at a scale that would be
+    expensive to materialize."""
+    product = 1
+    for axis in d["params"]:
+        product *= len(axis["values"])
+    require(
+        product >= min_points,
+        f"bigsweep: grid product {product} below the required {min_points}",
+    )
+    require(not d["interrupted"], "bigsweep: streamed sweep was interrupted")
+    require(d["pending"] == 0, f"bigsweep: {d['pending']} point(s) pending")
+    require(not d["failed"], f"bigsweep: {len(d['failed'])} failed point(s)")
+    print(f"check_bench: bigsweep OK ({product}-point streamed grid)")
+
+
+def mode_warm(d):
+    """The persistent-cache warm-start leg (second run over the same
+    grid sharing results/cost_cache.json): the acceptance bar is that
+    >90% of collective cost queries are answered without a fresh flow
+    simulation, and any surrogate answer stayed within its fitted
+    bound (check_cost_cache already enforces the latter)."""
+    cc = d["cost_cache"]
+    require(
+        "answer_share" in cc,
+        "warm: cost_cache block predates the surrogate/persistence schema",
+    )
+    require(
+        cc["warm_curves_loaded"] > 0,
+        f"warm: no warm curves loaded — the cache file was not used: {cc}",
+    )
+    require(
+        cc["answer_share"] > 0.9,
+        f"warm: answer share {cc['answer_share']:.3f} <= 0.9 — the warm start "
+        f"re-simulated too much: {cc}",
+    )
+    print(
+        f"check_bench: warm OK (answer share {cc['answer_share']:.3f}, "
+        f"{cc['warm_curves_loaded']} curve(s) loaded, "
+        f"{cc['sim_reuses']} stored-sample reuse(s))"
+    )
+
+
 def _fixture():
     """A minimal schema-valid interrupted sweep with one failed point."""
     row = {k: 1.0 for k in ROW_KEYS}
@@ -447,7 +541,12 @@ def _fixture():
                    "resumed_infeasible": 0, "resumed_failed": 0},
         "groups": [{"machine": "m", "points": 3, "workers": 1,
                     "hits": 2, "misses": 1}],
-        "cost_cache": {"hits": 2, "misses": 1, "hit_rate": 2 / 3},
+        "cost_cache": {
+            "hits": 2, "misses": 1, "hit_rate": 2 / 3,
+            "surrogate_hits": 1, "surrogate_share": 1 / 3,
+            "surrogate_max_err": 0.001, "surrogate_bound": 0.01,
+            "sim_reuses": 1, "warm_curves_loaded": 2, "answer_share": 1.0,
+        },
     }
 
 
@@ -536,7 +635,35 @@ def self_test():
     lying_slo["rows"][3]["slo_ok"] = True  # p99 9000 > slo 4000
     must_fail(lying_slo, "slo_ok contradicting p99", check_serve)
 
-    print("check_bench: self-test OK (2 good + 6 rejected fixtures)")
+    # Surrogate / persistent-cache blocks.
+    mode_warm(good)
+
+    over_bound = copy.deepcopy(good)
+    over_bound["cost_cache"]["surrogate_max_err"] = 0.02  # > bound 0.01
+    must_fail(over_bound, "surrogate error above the fitted bound")
+
+    lying_share = copy.deepcopy(good)
+    lying_share["cost_cache"]["answer_share"] = 0.5  # != (2+1)/3
+    must_fail(lying_share, "answer_share arithmetic")
+
+    cold = copy.deepcopy(good)
+    cold["cost_cache"]["warm_curves_loaded"] = 0
+    must_fail(cold, "warm start without loaded curves",
+              lambda d, _where: mode_warm(d))
+
+    big = {
+        "params": [{"key": "a", "values": ["1", "2"]},
+                   {"key": "b", "values": ["1", "2"]}],
+        "interrupted": False, "pending": 0, "failed": [],
+    }
+    mode_bigsweep(big, 4)
+    must_fail(big, "bigsweep below min points",
+              lambda d, _where: mode_bigsweep(d, 5))
+    cut = dict(big, pending=1, interrupted=True)
+    must_fail(cut, "bigsweep left points pending",
+              lambda d, _where: mode_bigsweep(d, 4))
+
+    print("check_bench: self-test OK (4 good + 11 rejected fixtures)")
 
 
 def mode_crossover(path):
@@ -570,8 +697,10 @@ def main():
     ap.add_argument("file", nargs="?", help="BENCH_*.json or crossover.csv to validate")
     ap.add_argument("--mode", choices=[
         "hybrid", "3d", "zero", "crossover", "interrupt", "resume", "fault",
-        "serve",
+        "serve", "bigsweep", "warm",
     ])
+    ap.add_argument("--min-points", type=int, default=100_000,
+                    help="bigsweep mode: required minimum grid product")
     ap.add_argument("--degenerate-csv", help="control sweep CSV (no sharding axis)")
     ap.add_argument("--sweep-csv", default="results/sweep.csv",
                     help="sweep CSV holding the sharding=none rows to compare")
@@ -619,6 +748,10 @@ def main():
             mode_resume(d, args.identical_csv, args.sweep_csv)
         elif args.mode == "fault":
             mode_fault(d)
+        elif args.mode == "bigsweep":
+            mode_bigsweep(d, args.min_points)
+        elif args.mode == "warm":
+            mode_warm(d)
     elif bench == "serve":
         rows = check_serve(d, args.file)
         if args.mode == "serve":
@@ -629,6 +762,8 @@ def main():
             mode_resume(d, args.identical_csv, args.sweep_csv)
         elif args.mode == "fault":
             mode_fault(d)
+        elif args.mode == "warm":
+            mode_warm(d)
     elif bench == "runtime_hotpath":
         check_hotpath(d, args.file)
     else:

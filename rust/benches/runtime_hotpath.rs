@@ -4,7 +4,9 @@
 //! * literal <-> host conversion;
 //! * PJRT grad_step / apply_update execution latency;
 //! * network-simulator events/s (event-driven engine vs reference);
-//! * pattern-level collective cost cache (repeated-allreduce sweep).
+//! * pattern-level collective cost cache (repeated-allreduce sweep);
+//! * the surrogate ladder: α–β closed form vs piecewise interpolation vs
+//!   full flow simulation for the same off-sample queries.
 //!
 //! Timing is median-of-reps with the min..max spread reported (the old
 //! harness took a single mean after one warmup, so one scheduler hiccup
@@ -12,7 +14,7 @@
 //! `results/BENCH_hotpath.json` so the perf trajectory is trackable
 //! across PRs.
 
-use booster::collectives::Algo;
+use booster::collectives::{gpu_set_fingerprint, Algo, CollectiveModel};
 use booster::net::{simulate_reference, simulate_with_scratch, Flow, SimScratch};
 use booster::runtime::{tensor, Engine};
 use booster::scenario::ExperimentContext;
@@ -266,6 +268,92 @@ fn main() {
         ]),
     ));
     out.push('\n');
+
+    // --- surrogate ladder --------------------------------------------------
+    // The O(1) vs O(points) vs O(sim) answer ladder for the SAME off-sample
+    // queries: a fresh model is warmed at a geometric ladder of sizes (each
+    // step >4x, so every probe extends the trusted span with a real curve
+    // point), frozen, then queried at the geometric midpoints — never an
+    // exact curve sample, so exact-match can't short-circuit the tiers.
+    let ladder_model = CollectiveModel::new(topo);
+    let warm_sizes: Vec<f64> = (0..8).map(|k| 1e6 * 4.5f64.powi(k)).collect();
+    for &b in &warm_sizes {
+        ladder_model.allreduce_time(&gpus256, b, Algo::Ring).unwrap();
+    }
+    ladder_model.freeze_cache(true);
+    let queries: Vec<f64> = (0..64)
+        .map(|i| {
+            let k = i % (warm_sizes.len() - 1);
+            (warm_sizes[k] * warm_sizes[k + 1]).sqrt()
+        })
+        .collect();
+    let sim_ladder = time_it(3, || {
+        for &b in &queries {
+            ladder_model.allreduce_time_uncached(&gpus256, b, Algo::Ring).unwrap();
+        }
+    });
+    ladder_model.set_surrogate_bound(0.0); // interpolation only
+    let interp_ladder = time_it(9, || {
+        for &b in &queries {
+            ladder_model.allreduce_time(&gpus256, b, Algo::Ring).unwrap();
+        }
+    });
+    let (s_before, _) = ladder_model.surrogate_stats();
+    ladder_model.set_surrogate_bound(1.0); // closed form answers everything
+    let surr_ladder = time_it(9, || {
+        for &b in &queries {
+            ladder_model.allreduce_time(&gpus256, b, Algo::Ring).unwrap();
+        }
+    });
+    let (s_after, s_err) = ladder_model.surrogate_stats();
+    let fitted_err = ladder_model
+        .dump_curves()
+        .into_iter()
+        .find(|r| r.fp == gpu_set_fingerprint(&gpus256))
+        .and_then(|r| r.surrogate.map(|(_, _, err)| err))
+        .unwrap_or(0.0);
+    assert!(s_after > s_before, "surrogate tier must answer from the closed form");
+    assert!(
+        sim_ladder.median > interp_ladder.median && sim_ladder.median > surr_ladder.median,
+        "simulation must be the slow tier"
+    );
+    let per_q = |t: &Timing| t.median / queries.len() as f64 * 1e6;
+    let mut t = Table::new(&["answer tier (64 off-sample queries)", "total", "per query"])
+        .with_title("surrogate ladder: closed form vs interpolation vs simulation");
+    t.row(&[
+        "α–β surrogate (O(1))".into(),
+        surr_ladder.ms(),
+        format!("{:.2} us", per_q(&surr_ladder)),
+    ]);
+    t.row(&[
+        "piecewise interpolation (O(points))".into(),
+        interp_ladder.ms(),
+        format!("{:.2} us", per_q(&interp_ladder)),
+    ]);
+    t.row(&[
+        "flow simulation (O(sim))".into(),
+        sim_ladder.ms(),
+        format!("{:.2} us", per_q(&sim_ladder)),
+    ]);
+    out.push_str(&t.render());
+    out.push('\n');
+    json.push((
+        "surrogate",
+        Json::obj(vec![
+            ("queries", Json::Num(queries.len() as f64)),
+            ("curve_points", Json::Num(warm_sizes.len() as f64)),
+            ("surrogate_total_ms", Json::Num(surr_ladder.median * 1e3)),
+            ("interpolated_total_ms", Json::Num(interp_ladder.median * 1e3)),
+            ("simulated_total_ms", Json::Num(sim_ladder.median * 1e3)),
+            (
+                "sim_over_surrogate",
+                Json::Num(sim_ladder.median / surr_ladder.median.max(1e-12)),
+            ),
+            ("surrogate_hits", Json::Num((s_after - s_before) as f64)),
+            ("surrogate_max_rel_err", Json::Num(s_err)),
+            ("surrogate_fit_err", Json::Num(fitted_err)),
+        ]),
+    ));
 
     // --- shared cache under concurrency (§Sync) ---------------------------
     // 4 workers replay the warm 64-size sweep concurrently on the SAME

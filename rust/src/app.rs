@@ -74,7 +74,9 @@ pub fn commands() -> Vec<Command> {
             about: "run a scenario grid (--param key=v1,v2, dependent expressions like \
                     microbatches=8n) over machines/scales/parallelism (3D \
                     data×pipeline×tensor; ZeRO sharding); journaled row checkpoints, \
-                    --resume continues an interrupted sweep",
+                    --resume continues an interrupted sweep, --stream holds only \
+                    O(workers) points of a million-point grid, and the persistent \
+                    cost cache (--cache-file) warm-starts repeat runs",
             run: crate::report::cmd_sweep,
         },
         Command {

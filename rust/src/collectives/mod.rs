@@ -32,6 +32,34 @@
 //! cost point (needed only if a `Topology` could mutate, which the public
 //! API does not allow).
 //!
+//! # §Surrogates: closed-form α–β curve distillation
+//!
+//! Each warmed curve additionally carries a least-squares **α–β fit**
+//! (`secs ≈ α + β·bytes` — the classic latency/bandwidth collective
+//! model used to characterize fabrics in the LEONARDO and Isambard-AI
+//! system papers), refit after every insert, with the fit's **max
+//! relative error vs the curve's own points** recorded. A lookup that
+//! would be answered by interpolation is answered by the surrogate
+//! instead **iff** the recorded fit error is within the cache's
+//! acceptance bound ([`DEFAULT_SURROGATE_BOUND`], configurable via
+//! [`CostCache::set_surrogate_bound`]; `0.0` disables). Every refusal
+//! path — exact matches first, the 4× trusted-span check, the sparse
+//! segment check — is evaluated *before* the surrogate, so enabling it
+//! never turns a miss into a hit; it only replaces the chord walk with
+//! the closed form. `rust/src/net/README.md` §Surrogates documents the
+//! fit procedure and fallback rule.
+//!
+//! # §Persistence: the cross-process warm store
+//!
+//! [`CollectiveModel::preload_warm_store`] accepts curves deserialized
+//! from `results/cost_cache.json` ([`CurveRecord`]). The store is
+//! consulted **only on a cache miss, at exact stored sizes**: the stored
+//! sample replaces the flow simulation (counted by
+//! [`CollectiveModel::sim_reuses`]) but the live cache still learns it
+//! as if it had been simulated — identical insert order, identical
+//! hit/miss counters, identical interpolation state — so a warm-started
+//! process is bit-identical to a cold one, just faster.
+//!
 //! # §Sync: thread safety
 //!
 //! `CollectiveModel` is `Send + Sync`: multiple sweep workers share **one**
@@ -58,12 +86,13 @@
 //! unchanged from the single-threaded cache (`rust/src/net/README.md`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::net::{simulate_makespan_with_scratch, Flow, SimScratch};
 use crate::topology::{GpuId, RouteTable, Topology};
 use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
 use crate::util::rng::splitmix64;
 
 /// Allreduce algorithm.
@@ -138,23 +167,107 @@ pub fn gpu_set_fingerprint(gpus: &[GpuId]) -> u64 {
 }
 
 const CURVE_MAX_POINTS: usize = 32;
-/// How far beyond the probed byte range interpolation is trusted.
+/// How far beyond the probed byte range interpolation is trusted —
+/// **symmetric**: a curve sampled on `[lo, hi]` answers
+/// `[lo/CURVE_SPAN, hi*CURVE_SPAN]` inclusive and refuses both tails.
 const CURVE_SPAN: f64 = 4.0;
 
-/// Simulated `(bytes, seconds)` samples of one flow pattern, kept sorted.
+/// Schema version of the persistent cost-cache serialization
+/// ([`CurveRecord`] / `results/cost_cache.json`). Folded into the sweep
+/// journal's grid fingerprint so `--resume` across a cache-format change
+/// is rejected naming the mismatch.
+pub const COST_CACHE_SCHEMA_VERSION: u32 = 1;
+
+/// Default surrogate-fit acceptance bound: a curve's α–β model answers
+/// lookups only while its recorded max relative error vs the piecewise
+/// curve stays within 1%.
+pub const DEFAULT_SURROGATE_BOUND: f64 = 0.01;
+
+/// Closed-form α–β distillation of one size curve: `secs ≈ alpha +
+/// beta·bytes` (latency + inverse-bandwidth), least-squares fitted over
+/// the curve's simulated points, with the fit's max relative error
+/// against those points recorded. An answer served by the surrogate is
+/// therefore within `max_rel_err` of the piecewise curve **at every
+/// sampled size** by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Surrogate {
+    /// Fixed per-collective latency term, seconds.
+    pub alpha: f64,
+    /// Marginal seconds per payload byte (inverse algorithm bandwidth).
+    pub beta: f64,
+    /// Max relative error of the fit vs the curve's own points.
+    pub max_rel_err: f64,
+}
+
+impl Surrogate {
+    /// Least-squares fit over `points` (needs ≥ 2 distinct sizes).
+    fn fit(points: &[(f64, f64)]) -> Option<Surrogate> {
+        if points.len() < 2 {
+            return None;
+        }
+        let n = points.len() as f64;
+        let (mut sx, mut sy) = (0.0, 0.0);
+        for &(b, t) in points {
+            sx += b;
+            sy += t;
+        }
+        let (mx, my) = (sx / n, sy / n);
+        let (mut sxx, mut sxy) = (0.0, 0.0);
+        for &(b, t) in points {
+            sxx += (b - mx) * (b - mx);
+            sxy += (b - mx) * (t - my);
+        }
+        if sxx <= 0.0 || !sxx.is_finite() {
+            return None;
+        }
+        let beta = sxy / sxx;
+        let alpha = my - beta * mx;
+        let mut max_rel_err = 0.0f64;
+        for &(b, t) in points {
+            let pred = alpha + beta * b;
+            max_rel_err = max_rel_err.max((pred - t).abs() / t.abs().max(f64::MIN_POSITIVE));
+        }
+        Some(Surrogate {
+            alpha,
+            beta,
+            max_rel_err,
+        })
+    }
+
+    /// Evaluate the model at `bytes` (clamped non-negative).
+    pub fn eval(&self, bytes: f64) -> f64 {
+        (self.alpha + self.beta * bytes).max(0.0)
+    }
+}
+
+/// Simulated `(bytes, seconds)` samples of one flow pattern, kept
+/// sorted, plus the α–β surrogate refit after every insert.
 #[derive(Debug, Clone, Default)]
 struct SizeCurve {
     points: Vec<(f64, f64)>,
+    surrogate: Option<Surrogate>,
+}
+
+/// How a [`SizeCurve`] answered a lookup.
+enum CurveAnswer {
+    /// An exact sample or piecewise-linear interpolation.
+    Curve(f64),
+    /// The α–β surrogate (carrying its recorded fit error).
+    Surrogate(f64, f64),
 }
 
 impl SizeCurve {
-    /// Cost at `bytes`, if the curve can answer without simulating:
-    /// an exact sample, or piecewise-linear interpolation once ≥ 2 points
-    /// exist and `bytes` lies within the trusted span of the samples.
-    fn eval(&self, bytes: f64) -> Option<f64> {
+    /// Cost at `bytes`, if the curve can answer without simulating: an
+    /// exact sample; otherwise — once ≥ 2 points exist, `bytes` lies
+    /// within the trusted span and the containing segment is not sparse
+    /// — the α–β surrogate when its fit error is within
+    /// `surrogate_bound`, else piecewise-linear interpolation. Every
+    /// refusal path runs *before* the surrogate, so the surrogate never
+    /// answers where interpolation would have refused.
+    fn eval(&self, bytes: f64, surrogate_bound: f64) -> Option<CurveAnswer> {
         for &(b, t) in &self.points {
             if (b - bytes).abs() <= 1e-12 * b.max(bytes) {
-                return Some(t);
+                return Some(CurveAnswer::Curve(t));
             }
         }
         if self.points.len() < 2 {
@@ -162,6 +275,8 @@ impl SizeCurve {
         }
         let lo = self.points[0].0;
         let hi = self.points[self.points.len() - 1].0;
+        // Symmetric trusted-span refusal: exactly lo/SPAN and hi*SPAN
+        // still answer; anything beyond either end simulates instead.
         if bytes < lo / CURVE_SPAN || bytes > hi * CURVE_SPAN {
             return None;
         }
@@ -174,12 +289,20 @@ impl SizeCurve {
         // Refuse to bridge a sparse segment: samples more than CURVE_SPAN²
         // apart can straddle the latency/bandwidth regime change, where a
         // single chord misprices the middle. Simulating instead densifies
-        // the curve there.
+        // the curve there. (The surrogate is a chord too — it must not
+        // bridge what interpolation refuses to.)
         if b1 / b0.max(f64::MIN_POSITIVE) > CURVE_SPAN * CURVE_SPAN {
             return None;
         }
+        if surrogate_bound > 0.0 {
+            if let Some(s) = &self.surrogate {
+                if s.max_rel_err <= surrogate_bound {
+                    return Some(CurveAnswer::Surrogate(s.eval(bytes), s.max_rel_err));
+                }
+            }
+        }
         let slope = (t1 - t0) / (b1 - b0);
-        Some((t0 + slope * (bytes - b0)).max(0.0))
+        Some(CurveAnswer::Curve((t0 + slope * (bytes - b0)).max(0.0)))
     }
 
     fn insert(&mut self, bytes: f64, secs: f64) {
@@ -191,8 +314,85 @@ impl SizeCurve {
             .binary_search_by(|p| p.0.partial_cmp(&bytes).unwrap())
         {
             Ok(_) => {}
-            Err(pos) => self.points.insert(pos, (bytes, secs)),
+            Err(pos) => {
+                self.points.insert(pos, (bytes, secs));
+                self.surrogate = Surrogate::fit(&self.points);
+            }
         }
+    }
+}
+
+/// One warm `(gpu-set, algo)` curve in serialized form — the unit of
+/// `results/cost_cache.json` (see [`crate::sweep`] for the file layout).
+/// u64 fingerprints travel as 16-hex-digit strings (JSON numbers are
+/// f64 and would corrupt them); f64 samples round-trip bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurveRecord {
+    /// [`gpu_set_fingerprint`] of the flow pattern's endpoints.
+    pub fp: u64,
+    /// Algorithm cache index (0 = ring, 1 = halving-doubling,
+    /// 2 = hierarchical).
+    pub algo: u8,
+    /// The curve's simulated `(bytes, seconds)` samples, sorted.
+    pub points: Vec<(f64, f64)>,
+    /// Fitted `(alpha, beta, max_rel_err)`, when ≥ 2 points existed.
+    pub surrogate: Option<(f64, f64, f64)>,
+}
+
+impl CurveRecord {
+    /// Serialize for the persistent cache file.
+    pub fn to_json(&self) -> Json {
+        let points = Json::Arr(
+            self.points
+                .iter()
+                .map(|&(b, t)| Json::Arr(vec![Json::Num(b), Json::Num(t)]))
+                .collect(),
+        );
+        let mut fields = vec![
+            ("algo", Json::Num(self.algo as f64)),
+            ("fp", Json::Str(format!("{:016x}", self.fp))),
+            ("points", points),
+        ];
+        if let Some((alpha, beta, max_rel_err)) = self.surrogate {
+            fields.push((
+                "surrogate",
+                Json::obj(vec![
+                    ("alpha", Json::Num(alpha)),
+                    ("beta", Json::Num(beta)),
+                    ("max_rel_err", Json::Num(max_rel_err)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one record; `None` on any malformed field (the caller
+    /// discards the whole file — the cache is rebuilt, never trusted).
+    pub fn from_json(j: &Json) -> Option<CurveRecord> {
+        let fp = u64::from_str_radix(j.get("fp")?.as_str()?, 16).ok()?;
+        let algo = j.get("algo")?.as_usize()? as u8;
+        let mut points = Vec::new();
+        for p in j.get("points")?.as_arr()? {
+            let xy = p.as_arr()?;
+            if xy.len() != 2 {
+                return None;
+            }
+            points.push((xy[0].as_f64()?, xy[1].as_f64()?));
+        }
+        let surrogate = match j.get("surrogate") {
+            Some(s) => Some((
+                s.get("alpha")?.as_f64()?,
+                s.get("beta")?.as_f64()?,
+                s.get("max_rel_err")?.as_f64()?,
+            )),
+            None => None,
+        };
+        Some(CurveRecord {
+            fp,
+            algo,
+            points,
+            surrogate,
+        })
     }
 }
 
@@ -208,6 +408,11 @@ struct CostShard {
     curves: HashMap<(u64, u8), SizeCurve>,
     hits: u64,
     misses: u64,
+    /// Hits answered by a curve's α–β surrogate (a subset of `hits`).
+    surrogate_hits: u64,
+    /// Largest recorded fit error among curves that answered via
+    /// surrogate on this shard.
+    surrogate_max_err: f64,
 }
 
 /// Lock a mutex, recovering the data from a poisoned lock: every value
@@ -227,12 +432,16 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 #[derive(Debug)]
 pub struct CostCache {
     shards: Vec<Mutex<CostShard>>,
+    /// Surrogate acceptance bound, stored as f64 bits so readers never
+    /// lock (`0.0` disables surrogate answers).
+    surrogate_bound_bits: AtomicU64,
 }
 
 impl Default for CostCache {
     fn default() -> CostCache {
         CostCache {
             shards: (0..COST_SHARDS).map(|_| Mutex::new(CostShard::default())).collect(),
+            surrogate_bound_bits: AtomicU64::new(DEFAULT_SURROGATE_BOUND.to_bits()),
         }
     }
 }
@@ -242,18 +451,41 @@ impl CostCache {
         &self.shards[(fp as usize) & (COST_SHARDS - 1)]
     }
 
+    /// Set the surrogate-fit acceptance bound (`0.0` disables; curves
+    /// whose recorded fit error exceeds the bound fall back to
+    /// piecewise-linear interpolation).
+    pub fn set_surrogate_bound(&self, bound: f64) {
+        self.surrogate_bound_bits.store(bound.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The surrogate-fit acceptance bound in effect.
+    pub fn surrogate_bound(&self) -> f64 {
+        f64::from_bits(self.surrogate_bound_bits.load(Ordering::Relaxed))
+    }
+
     fn lookup(&self, fp: u64, algo: Algo, bytes: f64) -> Option<f64> {
+        let bound = self.surrogate_bound();
         let mut s = lock(self.shard(fp));
         let r = s
             .curves
             .get(&(fp, algo.cache_idx()))
-            .and_then(|c| c.eval(bytes));
-        if r.is_some() {
-            s.hits += 1;
-        } else {
-            s.misses += 1;
+            .and_then(|c| c.eval(bytes, bound));
+        match r {
+            Some(CurveAnswer::Curve(t)) => {
+                s.hits += 1;
+                Some(t)
+            }
+            Some(CurveAnswer::Surrogate(t, err)) => {
+                s.hits += 1;
+                s.surrogate_hits += 1;
+                s.surrogate_max_err = s.surrogate_max_err.max(err);
+                Some(t)
+            }
+            None => {
+                s.misses += 1;
+                None
+            }
         }
-        r
     }
 
     fn insert(&self, fp: u64, algo: Algo, bytes: f64, secs: f64) {
@@ -274,6 +506,40 @@ impl CostCache {
             misses += s.misses;
         }
         (hits, misses)
+    }
+
+    /// `(surrogate hits, max recorded fit error among answering
+    /// curves)` summed/maxed over the shards. Surrogate hits are a
+    /// subset of [`CostCache::stats`]'s hits.
+    pub fn surrogate_stats(&self) -> (u64, f64) {
+        let mut hits = 0;
+        let mut max_err = 0.0f64;
+        for s in &self.shards {
+            let s = lock(s);
+            hits += s.surrogate_hits;
+            max_err = max_err.max(s.surrogate_max_err);
+        }
+        (hits, max_err)
+    }
+
+    /// Serialize every warm curve (with its fitted surrogate) for the
+    /// persistent cache file, sorted by `(fingerprint, algo)` so the
+    /// artifact is deterministic regardless of shard iteration order.
+    pub fn dump(&self) -> Vec<CurveRecord> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let s = lock(s);
+            for (&(fp, algo), curve) in &s.curves {
+                out.push(CurveRecord {
+                    fp,
+                    algo,
+                    points: curve.points.clone(),
+                    surrogate: curve.surrogate.map(|s| (s.alpha, s.beta, s.max_rel_err)),
+                });
+            }
+        }
+        out.sort_by(|a, b| (a.fp, a.algo).cmp(&(b.fp, b.algo)));
+        out
     }
 
     /// Fraction of lookups served from the cache.
@@ -297,6 +563,8 @@ impl CostCache {
             s.curves.clear();
             s.hits = 0;
             s.misses = 0;
+            s.surrogate_hits = 0;
+            s.surrogate_max_err = 0.0;
         }
     }
 }
@@ -329,6 +597,12 @@ pub struct CollectiveModel<'a> {
     /// read-only, so concurrent lookups are pure functions of the warm
     /// state (the sweep's determinism lever — see the module docs).
     frozen: AtomicBool,
+    /// Curves loaded from a persistent cache file (§Persistence):
+    /// consulted only on a miss, at exact stored sizes, replacing the
+    /// flow simulation with the stored sample.
+    warm: Mutex<HashMap<(u64, u8), SizeCurve>>,
+    /// Misses answered from the warm store instead of a simulation.
+    sim_reuses: AtomicU64,
 }
 
 impl<'a> CollectiveModel<'a> {
@@ -340,6 +614,8 @@ impl<'a> CollectiveModel<'a> {
             cache: CostCache::default(),
             scratch: Mutex::new(Vec::new()),
             frozen: AtomicBool::new(false),
+            warm: Mutex::new(HashMap::new()),
+            sim_reuses: AtomicU64::new(0),
         }
     }
 
@@ -398,11 +674,74 @@ impl<'a> CollectiveModel<'a> {
         if let Some(t) = self.cache.lookup(fp, algo, bytes) {
             return Ok(t + LAUNCH_OVERHEAD);
         }
-        let t = self.simulate_algo(gpus, bytes, algo)?;
+        // Miss: a persisted sample at this exact size substitutes for
+        // the (deterministic) simulation; either way the live cache
+        // learns the point exactly as a cold run would (§Persistence).
+        let t = match self.warm_sample(fp, algo, bytes) {
+            Some(t) => {
+                self.sim_reuses.fetch_add(1, Ordering::Relaxed);
+                t
+            }
+            None => self.simulate_algo(gpus, bytes, algo)?,
+        };
         if !self.frozen.load(Ordering::Relaxed) {
             self.cache.insert(fp, algo, bytes, t);
         }
         Ok(t + LAUNCH_OVERHEAD)
+    }
+
+    /// Exact-size lookup in the persistent warm store (never
+    /// interpolates — only a sample the *simulator itself produced* may
+    /// substitute for the simulator).
+    fn warm_sample(&self, fp: u64, algo: Algo, bytes: f64) -> Option<f64> {
+        let warm = lock(&self.warm);
+        let curve = warm.get(&(fp, algo.cache_idx()))?;
+        curve
+            .points
+            .iter()
+            .find(|&&(b, _)| (b - bytes).abs() <= 1e-12 * b.max(bytes))
+            .map(|&(_, t)| t)
+    }
+
+    /// Load persisted curves into the warm store (see §Persistence in
+    /// the module docs). Non-finite or non-positive samples are
+    /// silently dropped — the file is an accelerator, never an oracle.
+    pub fn preload_warm_store(&self, curves: &[CurveRecord]) {
+        let mut warm = lock(&self.warm);
+        for rec in curves {
+            let mut c = SizeCurve::default();
+            for &(b, t) in &rec.points {
+                if b.is_finite() && t.is_finite() && b > 0.0 && t >= 0.0 {
+                    c.insert(b, t);
+                }
+            }
+            if !c.points.is_empty() {
+                warm.insert((rec.fp, rec.algo), c);
+            }
+        }
+    }
+
+    /// Misses answered from the persistent warm store.
+    pub fn sim_reuses(&self) -> u64 {
+        self.sim_reuses.load(Ordering::Relaxed)
+    }
+
+    /// Set the α–β surrogate acceptance bound on the cost cache
+    /// (`0.0` disables surrogate answers).
+    pub fn set_surrogate_bound(&self, bound: f64) {
+        self.cache.set_surrogate_bound(bound);
+    }
+
+    /// `(surrogate hits, max recorded fit error among answering
+    /// curves)` of the cost cache.
+    pub fn surrogate_stats(&self) -> (u64, f64) {
+        self.cache.surrogate_stats()
+    }
+
+    /// Serialize the warm cost-cache curves for the persistent cache
+    /// file ([`CostCache::dump`]).
+    pub fn dump_curves(&self) -> Vec<CurveRecord> {
+        self.cache.dump()
     }
 
     /// [`CollectiveModel::allreduce_time`] with the cost cache bypassed:
@@ -444,6 +783,8 @@ impl<'a> CollectiveModel<'a> {
     pub fn invalidate_caches(&self) {
         *lock(&self.routes) = RouteTable::new();
         self.cache.clear();
+        lock(&self.warm).clear();
+        self.sim_reuses.store(0, Ordering::Relaxed);
     }
 
     fn simulate_algo(&self, gpus: &[GpuId], bytes: f64, algo: Algo) -> Result<f64> {
@@ -1316,5 +1657,127 @@ mod tests {
         let (h1, m1) = m.route_stats();
         assert_eq!(m1, m0, "second ring build must intern nothing new");
         assert!(h1 > h0, "second ring build must hit the route table");
+    }
+
+    // ---- §Surrogates + trusted span ------------------------------------
+
+    #[test]
+    fn curve_refusal_is_symmetric_at_exactly_4x_each_side() {
+        // A curve sampled on [lo, hi] answers [lo/4, hi*4] *inclusive*
+        // and refuses just beyond either end — both tails, not only the
+        // high one.
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16).unwrap();
+        m.allreduce_time(&gpus, 1e8, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 2e8, Algo::Ring).unwrap();
+        m.freeze_cache(true);
+        let (h0, m0) = m.cache_stats();
+        m.allreduce_time(&gpus, 1e8 / CURVE_SPAN, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 2e8 * CURVE_SPAN, Algo::Ring).unwrap();
+        let (h1, m1) = m.cache_stats();
+        assert_eq!((h1, m1), (h0 + 2, m0), "exactly 4x either side still answers");
+        m.allreduce_time(&gpus, 1e8 / CURVE_SPAN * 0.999, Algo::Ring).unwrap();
+        m.allreduce_time(&gpus, 2e8 * CURVE_SPAN * 1.001, Algo::Ring).unwrap();
+        let (h2, m2) = m.cache_stats();
+        assert_eq!((h2, m2), (h1, m1 + 2), "beyond 4x either side must simulate");
+    }
+
+    #[test]
+    fn surrogate_fits_within_recorded_bound_on_all_presets() {
+        // Property: on every machine preset and every algorithm, the α–β
+        // model agrees with its own piecewise curve within the recorded
+        // max relative error at every sampled size.
+        for name in crate::scenario::presets::machine_names() {
+            let machine = crate::scenario::presets::machine(name).unwrap();
+            let t = machine.build_topology().unwrap();
+            let m = CollectiveModel::new(&t);
+            let gpus = t.first_gpus(8).unwrap();
+            for algo in Algo::ALL {
+                // Successive sizes > 4x apart so each probe simulates and
+                // lands a real point on the curve.
+                for bytes in [1e6, 8e6, 6.4e7, 5.12e8] {
+                    m.allreduce_time(&gpus, bytes, algo).unwrap();
+                }
+            }
+            let curves = m.dump_curves();
+            assert_eq!(curves.len(), Algo::ALL.len(), "{name}: one curve per algo");
+            for rec in &curves {
+                let (alpha, beta, err) = rec.surrogate.expect("4 points must fit a surrogate");
+                assert!(err.is_finite() && err >= 0.0, "{name}: err {err}");
+                for &(b, tsecs) in &rec.points {
+                    let pred = (alpha + beta * b).max(0.0);
+                    let rel = (pred - tsecs).abs() / tsecs.abs().max(f64::MIN_POSITIVE);
+                    assert!(
+                        rel <= err + 1e-12,
+                        "{name} algo {}: rel err {rel} exceeds recorded {err} at {b} bytes",
+                        rec.algo
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn over_bound_surrogate_falls_back_to_interpolation() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16).unwrap();
+        for bytes in [1e6, 8e6, 6.4e7, 5.12e8] {
+            m.allreduce_time(&gpus, bytes, Algo::Ring).unwrap();
+        }
+        m.freeze_cache(true);
+        // Bound 0 disables the surrogate entirely: pure interpolation.
+        m.set_surrogate_bound(0.0);
+        let interp = m.allreduce_time(&gpus, 1.2e7, Algo::Ring).unwrap();
+        assert_eq!(m.surrogate_stats().0, 0, "bound 0 must disable the surrogate");
+        // A generous bound routes the same lookup through the α–β model.
+        m.set_surrogate_bound(1.0);
+        let sur = m.allreduce_time(&gpus, 1.2e7, Algo::Ring).unwrap();
+        let (sh, serr) = m.surrogate_stats();
+        assert_eq!(sh, 1, "generous bound must route to the surrogate");
+        assert!(sur > 0.0 && sur.is_finite());
+        let fp = gpu_set_fingerprint(&gpus);
+        let rec = m
+            .dump_curves()
+            .into_iter()
+            .find(|r| r.fp == fp && r.algo == Algo::Ring.cache_idx())
+            .expect("ring curve must be dumpable");
+        let (_, _, err) = rec.surrogate.unwrap();
+        assert!(serr <= err, "observed surrogate error must not exceed the fit's");
+        // A bound tighter than the recorded fit error → interpolation,
+        // bit-identical to the bound-0 answer.
+        if err > 0.0 {
+            let (sh2, _) = m.surrogate_stats();
+            m.set_surrogate_bound(err * 0.5);
+            let again = m.allreduce_time(&gpus, 1.2e7, Algo::Ring).unwrap();
+            assert_eq!(m.surrogate_stats().0, sh2, "over-bound fit must fall back");
+            assert_eq!(again, interp, "fallback answer is the interpolant");
+        }
+    }
+
+    #[test]
+    fn warm_store_reuses_stored_samples_instead_of_simulating() {
+        // Cross-process persistence contract: a model preloaded with a
+        // dumped curve answers the *same misses* with the stored samples
+        // (sim_reuses) and prices them bit-identically to a cold model.
+        let t = topo();
+        let gpus = t.first_gpus(16).unwrap();
+        let sizes = [1e6, 8e6, 6.4e7];
+        let cold = CollectiveModel::new(&t);
+        let mut want = Vec::new();
+        for &b in &sizes {
+            want.push(cold.allreduce_time(&gpus, b, Algo::Ring).unwrap());
+        }
+        let dump = cold.dump_curves();
+        let warm = CollectiveModel::new(&t);
+        warm.preload_warm_store(&dump);
+        for (&b, &w) in sizes.iter().zip(&want) {
+            assert_eq!(warm.allreduce_time(&gpus, b, Algo::Ring).unwrap(), w);
+        }
+        assert_eq!(warm.sim_reuses(), sizes.len() as u64, "every miss reused a sample");
+        let (hits, misses) = warm.cache_stats();
+        let (ch, cm) = cold.cache_stats();
+        assert_eq!((hits, misses), (ch, cm), "counters evolve exactly as in a cold run");
     }
 }

@@ -47,6 +47,7 @@ pub mod scenario;
 pub mod sched;
 pub mod serve;
 pub mod storage;
+pub mod sweep;
 pub mod topology;
 pub mod train;
 pub mod transfer;

@@ -206,6 +206,18 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .str_flag("journal", "results/sweep.journal", "row-checkpoint journal path")
         .bool_flag("resume", false, "resume from the journal, skipping completed points")
         .bool_flag("no-journal", false, "disable row checkpointing")
+        .bool_flag("stream", false, "stream the grid lazily — O(workers) points resident")
+        .str_flag(
+            "cache-file",
+            "results/cost_cache.json",
+            "persistent cost-cache path (cross-process warm starts)",
+        )
+        .bool_flag("no-cache-file", false, "disable the persistent cost cache")
+        .float_flag(
+            "surrogate-bound",
+            -1.0,
+            "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
+        )
         .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
         .int_flag(
             "interrupt-after",
@@ -224,6 +236,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         println!("example: booster sweep --nodes 2 --param sharding=none,optimizer,optimizer+grads");
         println!("example: booster sweep --nodes 4 --param n=1,2,4 --param stages=n --param microbatches=8n");
         println!("example: booster sweep --resume   # continue an interrupted sweep");
+        println!("example: booster sweep --stream --param n=1,2,4 --param microbatches=2n");
         return Ok(0);
     }
     if flags.get_bool("list") {
@@ -272,16 +285,27 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     };
     sweep::sigint::install();
     let interrupt_after = flags.get_usize("interrupt-after");
+    let bound = flags.get_f64("surrogate-bound");
     let opts = sweep::SweepOptions {
         workers: flags.get_usize("workers"),
         sequential: false,
         cancel: sweep::Cancel::with_sigint(),
         interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
         fault,
+        cache_file: (!flags.get_bool("no-cache-file"))
+            .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
+        surrogate_bound: (bound >= 0.0).then_some(bound),
     };
     let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
     let outcome = if flags.get_bool("no-journal") {
-        sweep::run_points_with(&sweep::prepare(&base, &axes)?, &opts)?
+        if flags.get_bool("stream") {
+            sweep::run_streamed(&base, &axes, &opts)?
+        } else {
+            sweep::run_points_with(&sweep::prepare(&base, &axes)?, &opts)?
+        }
+    } else if flags.get_bool("stream") {
+        let resume = flags.get_bool("resume");
+        sweep::run_journaled_streamed(&base, &axes, &journal_path, resume, &opts)?
     } else {
         sweep::run_journaled(&base, &axes, &journal_path, flags.get_bool("resume"), &opts)?
     };
@@ -356,6 +380,21 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         out.push_str(&format!(
             "  {}: {} point(s) on {} worker(s), {} hits / {} sims\n",
             g.machine, g.points, g.workers, g.hits, g.misses
+        ));
+    }
+    if outcome.surrogate_hits > 0 {
+        out.push_str(&format!(
+            "  α–β surrogate: {} answer(s), max rel err {:.2e} (bound {:.2e})\n",
+            outcome.surrogate_hits, outcome.surrogate_max_err, outcome.surrogate_bound
+        ));
+    }
+    if outcome.warm_curves_loaded > 0 {
+        out.push_str(&format!(
+            "  persistent cache: {} warm curve(s) loaded, {} stored-sample reuse(s), \
+             {:.0}% answer share\n",
+            outcome.warm_curves_loaded,
+            outcome.sim_reuses,
+            100.0 * outcome.answer_share()
         ));
     }
     if outcome.interrupted {
@@ -1105,6 +1144,17 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         .str_flag("journal", "results/serve.journal", "row-checkpoint journal path")
         .bool_flag("resume", false, "resume from the journal, skipping completed points")
         .bool_flag("no-journal", false, "disable row checkpointing")
+        .str_flag(
+            "cache-file",
+            "results/cost_cache.json",
+            "persistent cost-cache path (cross-process warm starts)",
+        )
+        .bool_flag("no-cache-file", false, "disable the persistent cost cache")
+        .float_flag(
+            "surrogate-bound",
+            -1.0,
+            "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
+        )
         .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
         .int_flag(
             "interrupt-after",
@@ -1172,12 +1222,16 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
     };
     sweep::sigint::install();
     let interrupt_after = flags.get_usize("interrupt-after");
+    let bound = flags.get_f64("surrogate-bound");
     let opts = sweep::SweepOptions {
         workers: flags.get_usize("workers"),
         sequential: false,
         cancel: sweep::Cancel::with_sigint(),
         interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
         fault,
+        cache_file: (!flags.get_bool("no-cache-file"))
+            .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
+        surrogate_bound: (bound >= 0.0).then_some(bound),
     };
     let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
     let outcome = if flags.get_bool("no-journal") {
@@ -1273,6 +1327,21 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         out.push_str(&format!(
             "  {}: {} point(s) on {} worker(s), {} hits / {} sims\n",
             g.machine, g.points, g.workers, g.hits, g.misses
+        ));
+    }
+    if outcome.surrogate_hits > 0 {
+        out.push_str(&format!(
+            "  α–β surrogate: {} answer(s), max rel err {:.2e} (bound {:.2e})\n",
+            outcome.surrogate_hits, outcome.surrogate_max_err, outcome.surrogate_bound
+        ));
+    }
+    if outcome.warm_curves_loaded > 0 {
+        out.push_str(&format!(
+            "  persistent cache: {} warm curve(s) loaded, {} stored-sample reuse(s), \
+             {:.0}% answer share\n",
+            outcome.warm_curves_loaded,
+            outcome.sim_reuses,
+            100.0 * outcome.answer_share()
         ));
     }
     if outcome.interrupted {

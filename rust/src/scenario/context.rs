@@ -12,8 +12,11 @@
 //! driver that keeps one timeline (or one collective model from
 //! [`ExperimentContext::collectives`]) alive across evaluations gets the
 //! pattern-level [`crate::collectives::CostCache`] for free — the sweep
-//! driver in [`super::sweep`] relies on this to price whole grids with a
-//! handful of flow simulations.
+//! engine in [`crate::sweep`] relies on this to price whole grids with a
+//! handful of flow simulations, and can carry the warmed curves across
+//! processes via the persistent cost cache (`results/cost_cache.json`,
+//! keyed by [`MachineSpec::fingerprint`] — see `scenario/README.md`
+//! §Persistent cache).
 
 use std::cell::OnceCell;
 

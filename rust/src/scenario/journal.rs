@@ -73,6 +73,15 @@ pub struct GridFingerprint {
     /// FNV-1a 64 hash of the base scenario's canonical JSON
     /// ([`ScenarioSpec::fingerprint`]).
     pub base: String,
+    /// Version of the collective cost-cache / surrogate format
+    /// ([`crate::collectives::COST_CACHE_SCHEMA_VERSION`]) the rows were
+    /// priced under. The cache decides how collective costs are
+    /// answered (piecewise interpolation vs fitted surrogate), so rows
+    /// journaled under one cache format must not be spliced into a CSV
+    /// priced under another. Journals written before the cache was
+    /// versioned carry no field and parse as 0 — always a mismatch
+    /// against a versioned binary, by design.
+    pub cache_schema: u32,
 }
 
 impl GridFingerprint {
@@ -89,6 +98,7 @@ impl GridFingerprint {
             kind: kind.to_string(),
             axes: axes.to_vec(),
             base: base.fingerprint(),
+            cache_schema: crate::collectives::COST_CACHE_SCHEMA_VERSION,
         }
     }
 
@@ -114,6 +124,7 @@ impl GridFingerprint {
             ("schema", Json::Num(self.schema as f64)),
             ("sweep_kind", Json::Str(self.kind.clone())),
             ("base", Json::Str(self.base.clone())),
+            ("cache_schema", Json::Num(self.cache_schema as f64)),
             ("axes", Self::axes_json(&self.axes)),
         ])
     }
@@ -134,6 +145,14 @@ impl GridFingerprint {
                 .ok_or_else(|| bad("'sweep_kind' is not a string"))?
                 .to_string(),
             None => SweepRow::SWEEP_KIND.to_string(),
+        };
+        // Journals written before the cost cache was versioned carry no
+        // `cache_schema`; 0 never matches a versioned binary.
+        let cache_schema = match j.get("cache_schema") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| bad("'cache_schema' is not an integer"))? as u32,
+            None => 0,
         };
         let base = j
             .req("base")?
@@ -170,6 +189,7 @@ impl GridFingerprint {
             kind,
             axes,
             base,
+            cache_schema,
         })
     }
 
@@ -192,6 +212,13 @@ impl GridFingerprint {
             return Err(reject(format!(
                 "journal schema version {} != this binary's version {}",
                 self.schema, wanted.schema
+            )));
+        }
+        if self.cache_schema != wanted.cache_schema {
+            return Err(reject(format!(
+                "journal cost-cache schema version {} != this binary's version {} (rows were \
+                 priced under a different cache format)",
+                self.cache_schema, wanted.cache_schema
             )));
         }
         if self.axes.len() != wanted.axes.len() {
@@ -606,6 +633,48 @@ mod tests {
         assert!(err.contains("schema version"), "{err}");
         assert!(err.contains(&format!("{}", JOURNAL_SCHEMA_VERSION)), "{err}");
 
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_schema_change_rejects_resume_in_both_directions() {
+        // Satellite contract: the cost-cache/surrogate format version is
+        // part of the grid fingerprint. A journal written under an
+        // *older* cache format must not resume into this binary — and a
+        // journal from a *newer* binary must not resume into this one —
+        // and both rejections name the cost-cache schema specifically.
+        let path = tmp("cacheschema");
+
+        // Direction 1: older journal (including pre-versioning, which
+        // parses as 0), current binary.
+        let mut old = fp();
+        old.cache_schema = crate::collectives::COST_CACHE_SCHEMA_VERSION - 1;
+        Journal::create(&path, &old).unwrap();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap_err().to_string();
+        assert!(err.contains("cost-cache schema version"), "{err}");
+        assert!(err.contains("different cache format"), "{err}");
+
+        // Direction 2: newer journal, current binary.
+        let mut newer = fp();
+        newer.cache_schema = crate::collectives::COST_CACHE_SCHEMA_VERSION + 1;
+        Journal::create(&path, &newer).unwrap();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap_err().to_string();
+        assert!(err.contains("cost-cache schema version"), "{err}");
+
+        // A pre-versioning journal (no `cache_schema` key at all) is the
+        // degenerate old case: strip the key and resume must fail naming
+        // version 0.
+        Journal::create(&path, &fp()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let key = format!(
+            "\"cache_schema\":{},",
+            crate::collectives::COST_CACHE_SCHEMA_VERSION
+        );
+        let stripped = text.replace(&key, "");
+        assert_ne!(stripped, text, "header must carry the key");
+        std::fs::write(&path, stripped).unwrap();
+        let err = Journal::resume::<SweepRow>(&path, &fp(), 4).unwrap_err().to_string();
+        assert!(err.contains("version 0"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

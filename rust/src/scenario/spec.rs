@@ -278,6 +278,22 @@ impl MachineSpec {
         self.topo.nodes * self.gpus_per_node
     }
 
+    /// Stable content fingerprint of the machine description: FNV-1a 64
+    /// over the canonical JSON serialization (BTreeMap-backed, so key
+    /// order is deterministic). The persistent cost-cache file stores
+    /// this per machine so a dump taken on a different topology — or a
+    /// preset whose numbers changed — is ignored and rebuilt rather
+    /// than trusted.
+    pub fn fingerprint(&self) -> u64 {
+        let text = self.to_json().to_string();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     /// Serialize.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![

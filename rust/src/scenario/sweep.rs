@@ -34,16 +34,23 @@
 //! order, hit/miss counters sum deterministically, and the CSV is
 //! **byte-identical** to [`run_sequential`] — a differential test pins
 //! this for both the cross-machine and the intra-machine level.
+//!
+//! Since the engine unification the machinery itself — grouping,
+//! warm/freeze, sharding, fault isolation, journaling, persistent
+//! cache warm starts — lives in [`crate::sweep`] and is shared with the
+//! serving sweep; this module contributes the grid expansion
+//! (materialized via [`prepare`], streaming via [`StreamedGrid`]), the
+//! [`TrainFamily`] pricing instantiation, and the CSV/JSON serializers.
 
-use std::panic::AssertUnwindSafe;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::collectives::CollectiveModel;
+use crate::hw::power::PowerModel;
 use crate::scenario::journal::{GridFingerprint, Journal, JournalRow};
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
+use crate::topology::Topology;
 use crate::train::hybrid::HybridTimeline;
 use crate::util::error::{BoosterError, Result};
 use crate::util::expr::Expr;
@@ -532,94 +539,12 @@ impl JournalRow for SweepRow {
     }
 }
 
-/// The recorded fate of one grid point — what the journal persists and
-/// what a resumed run restores. Generic over the row type so the
-/// training sweep ([`SweepRow`], the default) and the serving sweep
-/// ([`crate::serve::sweep::ServeRow`]) share one journal format.
-#[derive(Debug, Clone)]
-pub enum PointOutcome<R = SweepRow> {
-    /// Priced successfully.
-    Row(Box<R>),
-    /// Skipped by the evaluation-time feasibility check (memory fit).
-    Infeasible {
-        /// Scenario name of the skipped point.
-        scenario: String,
-        /// Why it was infeasible.
-        reason: String,
-    },
-    /// The evaluation panicked (both attempts); the sweep carried on.
-    Failed {
-        /// Scenario name of the failed point.
-        scenario: String,
-        /// Machine group the point belonged to.
-        machine: String,
-        /// Panic payload text.
-        reason: String,
-    },
-}
-
-/// A point whose evaluation panicked — recorded beside `infeasible` in
-/// [`SweepOutcome`] instead of aborting the grid.
-#[derive(Debug, Clone)]
-pub struct FailedPoint {
-    /// Scenario name of the failed point.
-    pub scenario: String,
-    /// Machine group the point belonged to.
-    pub machine: String,
-    /// Panic payload text (both attempts).
-    pub reason: String,
-}
-
-/// Per-machine-group execution stats for `results/BENCH_sweep.json`.
-#[derive(Debug, Clone)]
-pub struct GroupStats {
-    /// Machine preset the group evaluated.
-    pub machine: String,
-    /// Grid points in the group.
-    pub points: usize,
-    /// Intra-machine workers the evaluation was sharded across.
-    pub workers: usize,
-    /// Collective cost-cache hits of this group's shared model.
-    pub hits: u64,
-    /// Flow simulations this group's shared model ran.
-    pub misses: u64,
-}
-
-/// A completed sweep: rows in expansion order plus shared-cache stats.
-#[derive(Debug, Clone)]
-pub struct SweepOutcome {
-    /// One row per *feasible* grid point, in deterministic expansion
-    /// order. Points that fail the evaluation-time feasibility checks
-    /// (pipeline memory fit — only detectable when pricing) land in
-    /// [`SweepOutcome::infeasible`] instead of aborting the sweep; static
-    /// spec errors still fail the whole grid up front.
-    pub rows: Vec<SweepRow>,
-    /// `(scenario, reason)` for grid points that were infeasible at
-    /// evaluation time, in expansion order per machine group.
-    pub infeasible: Vec<(String, String)>,
-    /// Points whose evaluation panicked (after one bounded retry) — the
-    /// sweep records them and carries on instead of aborting.
-    pub failed: Vec<FailedPoint>,
-    /// Per-machine-group worker counts and cache stats (groups whose
-    /// points were all restored from a journal do not evaluate and are
-    /// absent).
-    pub groups: Vec<GroupStats>,
-    /// Collective cost-cache hits across all machines in the sweep.
-    pub cache_hits: u64,
-    /// Flow simulations actually run.
-    pub cache_misses: u64,
-    /// Whether the sweep was cancelled (SIGINT / `--interrupt-after`)
-    /// before every point completed.
-    pub interrupted: bool,
-    /// Grid points never evaluated (only non-zero when interrupted).
-    pub pending: usize,
-    /// Rows restored from the journal rather than re-evaluated.
-    pub resumed_rows: usize,
-    /// Infeasible markers restored from the journal.
-    pub resumed_infeasible: usize,
-    /// Failed markers restored from the journal.
-    pub resumed_failed: usize,
-}
+/// A completed training sweep: the shared engine's
+/// [`crate::sweep::EngineOutcome`] instantiated at [`SweepRow`].
+/// Construction lives in [`crate::sweep`]; the CSV/JSON serializers
+/// below are inherent to this instantiation and preserve the
+/// pre-unification formats byte-for-byte (differential tests pin this).
+pub type SweepOutcome = crate::sweep::EngineOutcome<SweepRow>;
 
 impl SweepOutcome {
     /// CSV with a header, one line per grid point, expansion order.
@@ -712,7 +637,6 @@ impl SweepOutcome {
                 })
                 .collect(),
         );
-        let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
             ("bench", Json::Str("sweep".into())),
             ("params", params),
@@ -737,400 +661,91 @@ impl SweepOutcome {
                     ("resumed_failed", Json::Num(self.resumed_failed as f64)),
                 ]),
             ),
-            (
-                "cost_cache",
-                Json::obj(vec![
-                    ("hits", Json::Num(self.cache_hits as f64)),
-                    ("misses", Json::Num(self.cache_misses as f64)),
-                    ("hit_rate", Json::Num(self.cache_hits as f64 / total as f64)),
-                ]),
-            ),
+            ("cost_cache", self.cost_cache_json()),
         ])
     }
 }
 
-/// A grid point: the fully-applied scenario plus the assignment that
-/// produced it. [`run_points`] accepts prebuilt slices of these, which is
-/// how the crossover driver sweeps shapes the static grid validation
-/// would reject wholesale.
-pub type Point = (ScenarioSpec, Vec<(String, String)>);
+pub use crate::sweep::{
+    sigint, Cancel, FailedPoint, FaultHook, GroupStats, Point, PointOutcome, SweepOptions,
+};
 
-/// Process-global SIGINT observation — hand-rolled (the vendored crate
-/// set has no `ctrlc`/`signal-hook`). The handler only bumps an atomic:
-/// the first Ctrl-C is *cooperative* (workers see [`sigint::pending`]
-/// through their [`Cancel`] token, stop dispatching new points, drain
-/// in-flight ones, and the driver flushes partial artifacts); the second
-/// Ctrl-C calls the async-signal-safe `_exit(130)` — the user means it.
-pub mod sigint {
-    use std::sync::atomic::{AtomicUsize, Ordering};
+/// The training instantiation of the generic engine's
+/// [`crate::sweep::SweepFamily`]: a per-worker
+/// [`HybridTimeline`] wrapped around the group's shared collective
+/// model, warmed via [`HybridTimeline::warm_comm`] and priced through
+/// [`HybridTimeline::step_time`].
+pub struct TrainFamily;
 
-    static SEEN: AtomicUsize = AtomicUsize::new(0);
+impl crate::sweep::SweepFamily for TrainFamily {
+    type Row = SweepRow;
+    type Worker<'t> = HybridTimeline<'t>;
 
-    #[cfg(unix)]
-    mod ffi {
-        extern "C" {
-            pub fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
-            pub fn _exit(code: i32) -> !;
-        }
-        pub const SIGINT: i32 = 2;
+    fn noun(&self) -> &'static str {
+        "sweep"
     }
 
-    #[cfg(unix)]
-    extern "C" fn on_sigint(_sig: i32) {
-        if SEEN.fetch_add(1, Ordering::SeqCst) >= 1 {
-            unsafe { ffi::_exit(130) }
-        }
+    fn new_worker<'t>(
+        &self,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+        shared: &Arc<CollectiveModel<'t>>,
+    ) -> Result<HybridTimeline<'t>> {
+        HybridTimeline::with_collectives(spec, topo, Arc::clone(shared))
     }
 
-    /// Install the SIGINT handler (no-op off unix) and reset the
-    /// seen-count so a long-lived process can run several sweeps.
-    pub fn install() {
-        SEEN.store(0, Ordering::SeqCst);
-        #[cfg(unix)]
-        unsafe {
-            ffi::signal(ffi::SIGINT, on_sigint);
-        }
+    fn warm<'t>(
+        &self,
+        worker: &mut HybridTimeline<'t>,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<()> {
+        worker.configure_from(spec)?;
+        let gpus = spec.job_gpus(topo)?;
+        worker.warm_comm(&gpus, spec.workload.batch_per_gpu)
     }
 
-    /// Whether a SIGINT has arrived since [`install`].
-    pub fn pending() -> bool {
-        SEEN.load(Ordering::SeqCst) > 0
-    }
-}
-
-/// Cooperative cancellation token threaded through the sweep worker
-/// loops. Cancelling stops *dispatch* of new points; in-flight points
-/// drain, so every row that does appear is identical to what an
-/// uninterrupted run would have produced.
-#[derive(Clone)]
-pub struct Cancel {
-    flag: Arc<AtomicBool>,
-    watch_sigint: bool,
-}
-
-impl Default for Cancel {
-    fn default() -> Cancel {
-        Cancel::new()
-    }
-}
-
-impl Cancel {
-    /// A token nobody has cancelled (library callers, tests).
-    pub fn new() -> Cancel {
-        Cancel {
-            flag: Arc::new(AtomicBool::new(false)),
-            watch_sigint: false,
-        }
-    }
-
-    /// A token that additionally observes the process SIGINT count
-    /// (see [`sigint::install`]) — the `booster sweep` wiring.
-    pub fn with_sigint() -> Cancel {
-        Cancel {
-            flag: Arc::new(AtomicBool::new(false)),
-            watch_sigint: true,
-        }
-    }
-
-    /// Request cancellation.
-    pub fn cancel(&self) {
-        self.flag.store(true, Ordering::SeqCst);
-    }
-
-    /// Whether cancellation has been requested.
-    pub fn cancelled(&self) -> bool {
-        self.flag.load(Ordering::SeqCst) || (self.watch_sigint && sigint::pending())
-    }
-}
-
-/// Fault-injection hook: called with `(grid_index, attempt)` before each
-/// evaluation attempt; returning `true` makes that attempt panic. Tests
-/// and the CI failed-path fixture use it to exercise worker fault
-/// isolation deterministically.
-pub type FaultHook = Arc<dyn Fn(usize, usize) -> bool + Send + Sync>;
-
-/// Options for [`run_points_with`] / [`run_journaled`].
-#[derive(Clone, Default)]
-pub struct SweepOptions {
-    /// Intra-machine evaluation workers per group (`0` = auto).
-    pub workers: usize,
-    /// Run everything on the caller's thread (the [`run_sequential`]
-    /// path — differential-test baseline and honest benchmarking).
-    pub sequential: bool,
-    /// Cooperative cancellation token.
-    pub cancel: Cancel,
-    /// Flip `cancel` after this many points complete in this run —
-    /// deterministic mid-grid interruption for tests and CI (a timed
-    /// SIGINT would be flaky).
-    pub interrupt_after: Option<usize>,
-    /// Fault-injection hook (see [`FaultHook`]).
-    pub fault: Option<FaultHook>,
-}
-
-/// Shared evaluation context, one per engine run.
-struct EvalCtx<'a> {
-    points: &'a [Point],
-    cancel: &'a Cancel,
-    fault: Option<&'a FaultHook>,
-    journal: Option<&'a Mutex<Journal>>,
-    /// Points completed in *this* run (fresh, not restored).
-    done: &'a AtomicUsize,
-    interrupt_after: Option<usize>,
-}
-
-/// One machine group's outcome.
-struct GroupOutcome {
-    /// One entry per *pending* point in group order; `None` marks a
-    /// point skipped by cancellation.
-    outcomes: Vec<Option<PointOutcome>>,
-    /// Collective cost-cache (hits, misses) of this group's model.
-    cache: (u64, u64),
-    /// Workers the evaluation phase was sharded across.
-    workers: usize,
-}
-
-type GroupResult = Result<GroupOutcome>;
-
-/// Split `0..n` into at most `workers` contiguous, near-equal ranges
-/// (shared with the serving sweep engine).
-pub(crate) fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
-    let w = workers.clamp(1, n.max(1));
-    let base = n / w;
-    let extra = n % w;
-    let mut out = Vec::with_capacity(w);
-    let mut start = 0;
-    for i in 0..w {
-        let len = base + usize::from(i < extra);
-        out.push(start..start + len);
-        start += len;
-    }
-    out
-}
-
-/// Extract a panic payload's text (workers and [`catch_unwind`] share it).
-pub(crate) fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
-    payload
-        .downcast_ref::<&str>()
-        .map(|s| s.to_string())
-        .or_else(|| payload.downcast_ref::<String>().cloned())
-        .unwrap_or_else(|| "unknown panic payload".into())
-}
-
-/// Evaluate one grid point with worker fault isolation: a panicking
-/// evaluation is caught, retried once on a freshly rebuilt timeline
-/// (`hy` is dropped — a panic may leave it mid-reconfiguration), and
-/// recorded as a [`PointOutcome::Failed`] if the retry panics too. A
-/// `Config` error from pricing is the pre-existing infeasible path; any
-/// other error still aborts the sweep.
-fn eval_one<'t>(
-    ctx: &EvalCtx<'_>,
-    i: usize,
-    topo: &'t crate::topology::Topology,
-    power: &crate::hw::power::PowerModel,
-    shared: &Arc<CollectiveModel<'t>>,
-    hy: &mut Option<HybridTimeline<'t>>,
-) -> Result<PointOutcome> {
-    let (spec, asg) = &ctx.points[i];
-    let mut attempt = 0;
-    loop {
-        if hy.is_none() {
-            *hy = Some(HybridTimeline::with_collectives(spec, topo, Arc::clone(shared))?);
-        }
-        let tl = hy.as_mut().expect("timeline just built");
-        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<SweepRow> {
-            if let Some(fault) = ctx.fault {
-                if fault(i, attempt) {
-                    panic!("injected fault at point {i} attempt {attempt}");
-                }
-            }
-            tl.configure_from(spec)?;
-            let gpus = spec.job_gpus(topo)?;
-            let mut rng = Rng::seed_from(7);
-            let st = tl.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng)?;
-            let samples = st.samples_per_step();
-            Ok(SweepRow {
-                scenario: spec.name.clone(),
-                machine: spec.machine.name.clone(),
-                workload: spec.workload.name.clone(),
-                nodes: spec.parallelism.nodes,
-                gpus: gpus.len(),
-                precision: spec.precision.clone(),
-                algo: spec.parallelism.algo.clone(),
-                compression: spec.parallelism.compression.clone(),
-                placement: spec.parallelism.placement.clone(),
-                bucket_mb: spec.parallelism.bucket_bytes / 1e6,
-                stages: spec.parallelism.pipeline_stages,
-                tensor: spec.parallelism.tensor_parallel,
-                microbatches: spec.parallelism.microbatches,
-                schedule: spec.parallelism.schedule.clone(),
-                sharding: spec.parallelism.sharding.clone(),
-                bubble_pct: st.bubble_fraction * 100.0,
-                compute_ms: st.compute * 1e3,
-                comm_ms: st.comm * 1e3,
-                rs_ms: st.rs * 1e3,
-                ag_ms: st.ag * 1e3,
-                tp_comm_ms: st.tp_comm * 1e3,
-                step_ms: st.total * 1e3,
-                samples_per_s: samples / st.total,
-                step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
-                assignment: asg.clone(),
-            })
-        }));
-        match caught {
-            Ok(Ok(row)) => return Ok(PointOutcome::Row(Box::new(row))),
-            Ok(Err(BoosterError::Config(reason))) => {
-                return Ok(PointOutcome::Infeasible {
-                    scenario: spec.name.clone(),
-                    reason,
-                })
-            }
-            Ok(Err(e)) => return Err(e),
-            Err(payload) => {
-                // The timeline may be mid-mutation; rebuild before retry.
-                *hy = None;
-                let what = panic_text(payload.as_ref());
-                if attempt == 0 {
-                    attempt = 1;
-                    continue;
-                }
-                return Ok(PointOutcome::Failed {
-                    scenario: spec.name.clone(),
-                    machine: spec.machine.name.clone(),
-                    reason: format!("evaluation panicked (retried once): {what}"),
-                });
-            }
-        }
-    }
-}
-
-/// Evaluate the points in `idxs` (a contiguous slice of one group's
-/// pending point indices) through one per-worker [`HybridTimeline`]
-/// wrapped around the group's shared collective model. The cache is
-/// already warm and frozen, so every collective query is a deterministic
-/// read — this is what makes sharding the loop across workers value- and
-/// stats-preserving. Each completed point is journaled and counted; a
-/// cancellation request stops dispatch, leaving the rest `None`.
-fn eval_points<'t>(
-    ctx: &EvalCtx<'_>,
-    idxs: &[usize],
-    topo: &'t crate::topology::Topology,
-    power: &crate::hw::power::PowerModel,
-    shared: &Arc<CollectiveModel<'t>>,
-) -> Result<Vec<Option<PointOutcome>>> {
-    let mut hy: Option<HybridTimeline<'t>> = None;
-    let mut out = Vec::with_capacity(idxs.len());
-    for &i in idxs {
-        if ctx.cancel.cancelled() {
-            out.push(None);
-            continue;
-        }
-        let outcome = eval_one(ctx, i, topo, power, shared, &mut hy)?;
-        if let Some(journal) = ctx.journal {
-            journal
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .append(i, &outcome)?;
-        }
-        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
-        if let Some(limit) = ctx.interrupt_after {
-            if completed >= limit {
-                ctx.cancel.cancel();
-            }
-        }
-        out.push(Some(outcome));
-    }
-    Ok(out)
-}
-
-/// Evaluate one machine group's points through a single shared
-/// [`CollectiveModel`] (one topology, one cost cache). Two phases:
-///
-/// 1. **Warm (sequential).** Replay each point's collective queries in
-///    group order via [`HybridTimeline::warm_comm`]: the cache learns
-///    exactly the sizes a sequential run would learn, in the same order.
-/// 2. **Evaluate (sharded).** Freeze the cache and price the points on
-///    `workers` scoped threads, each with its own `HybridTimeline` around
-///    the shared model. Frozen reads are deterministic, pipeline pricing
-///    and straggler sampling are per-point, so rows are identical to a
-///    one-worker run.
-///
-/// A point whose pricing fails with a `Config` error (the pipeline
-/// memory-fit check — only decidable at evaluation time) is recorded as
-/// infeasible and the group continues; a panicking point is retried once
-/// and then recorded as failed; any other error aborts the sweep.
-///
-/// `idxs` is the group's **full** point list; `pending` the subset that
-/// still needs evaluation (everything on a fresh run, the unjournaled
-/// tail on a resume). The warm phase deliberately replays **all** points
-/// — cost-cache interpolation curves are path-dependent, so skipping
-/// restored points would change what the cache learned and break the
-/// byte-identical-CSV resume contract; only the (expensive) evaluation
-/// phase skips them.
-fn eval_group(ctx: &EvalCtx<'_>, idxs: &[usize], pending: &[usize], workers: usize) -> GroupResult {
-    let machine = &ctx.points[idxs[0]].0.machine;
-    let topo = machine.build_topology()?;
-    let power = machine.power_model()?;
-    let shared = Arc::new(CollectiveModel::new(&topo));
-    let chunks = chunk_ranges(pending.len(), workers);
-
-    // Phase 1: deterministic sequential warm-up of the shared cache.
-    let mut cancelled_in_warm = false;
-    {
-        let mut hy =
-            HybridTimeline::with_collectives(&ctx.points[idxs[0]].0, &topo, Arc::clone(&shared))?;
-        for &i in idxs {
-            if ctx.cancel.cancelled() {
-                cancelled_in_warm = true;
-                break;
-            }
-            let (spec, _) = &ctx.points[i];
-            hy.configure_from(spec)?;
-            let gpus = spec.job_gpus(&topo)?;
-            hy.warm_comm(&gpus, spec.workload.batch_per_gpu)?;
-        }
-    }
-    shared.freeze_cache(true);
-    if cancelled_in_warm {
-        // A half-warm cache would price points differently than an
-        // uninterrupted run; evaluate nothing in this group.
-        return Ok(GroupOutcome {
-            outcomes: vec![None; pending.len()],
-            cache: shared.cache_stats(),
-            workers: chunks.len(),
-        });
-    }
-
-    // Phase 2: shard the evaluation over the pending points.
-    let outcomes: Vec<Result<Vec<Option<PointOutcome>>>> = if chunks.len() <= 1 {
-        vec![eval_points(ctx, pending, &topo, &power, &shared)]
-    } else {
-        std::thread::scope(|s| {
-            let topo = &topo;
-            let power = &power;
-            let shared = &shared;
-            let handles: Vec<_> = chunks
-                .iter()
-                .map(|r| {
-                    let slice = &pending[r.clone()];
-                    s.spawn(move || eval_points(ctx, slice, topo, power, shared))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| join_worker(&machine.name, h))
-                .collect()
+    fn price<'t>(
+        &self,
+        worker: &mut HybridTimeline<'t>,
+        spec: &ScenarioSpec,
+        asg: &[(String, String)],
+        topo: &'t Topology,
+        power: &PowerModel,
+    ) -> Result<SweepRow> {
+        worker.configure_from(spec)?;
+        let gpus = spec.job_gpus(topo)?;
+        let mut rng = Rng::seed_from(7);
+        let st = worker.step_time(&gpus, spec.workload.batch_per_gpu, &mut rng)?;
+        let samples = st.samples_per_step();
+        Ok(SweepRow {
+            scenario: spec.name.clone(),
+            machine: spec.machine.name.clone(),
+            workload: spec.workload.name.clone(),
+            nodes: spec.parallelism.nodes,
+            gpus: gpus.len(),
+            precision: spec.precision.clone(),
+            algo: spec.parallelism.algo.clone(),
+            compression: spec.parallelism.compression.clone(),
+            placement: spec.parallelism.placement.clone(),
+            bucket_mb: spec.parallelism.bucket_bytes / 1e6,
+            stages: spec.parallelism.pipeline_stages,
+            tensor: spec.parallelism.tensor_parallel,
+            microbatches: spec.parallelism.microbatches,
+            schedule: spec.parallelism.schedule.clone(),
+            sharding: spec.parallelism.sharding.clone(),
+            bubble_pct: st.bubble_fraction * 100.0,
+            compute_ms: st.compute * 1e3,
+            comm_ms: st.comm * 1e3,
+            rs_ms: st.rs * 1e3,
+            ag_ms: st.ag * 1e3,
+            tp_comm_ms: st.tp_comm * 1e3,
+            step_ms: st.total * 1e3,
+            samples_per_s: samples / st.total,
+            step_energy_kj: power.job_energy(spec.parallelism.nodes, st.total, 0.9)? / 1e3,
+            assignment: asg.to_vec(),
         })
-    };
-
-    let mut merged = Vec::with_capacity(pending.len());
-    for o in outcomes {
-        merged.extend(o?);
     }
-    Ok(GroupOutcome {
-        outcomes: merged,
-        cache: shared.cache_stats(),
-        workers: chunks.len(),
-    })
 }
 
 /// Materialize and validate the grid. Expression axes are resolved in
@@ -1158,180 +773,6 @@ pub fn prepare(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<Vec<Point>> {
     Ok(points)
 }
 
-/// Group point indices by machine, preserving first-appearance order.
-fn group_by_machine(points: &[Point]) -> Vec<(String, Vec<usize>)> {
-    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
-    for (i, (spec, _)) in points.iter().enumerate() {
-        match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
-            Some((_, idxs)) => idxs.push(i),
-            None => groups.push((spec.machine.name.clone(), vec![i])),
-        }
-    }
-    groups
-}
-
-/// One machine group's work item: all its point indices plus the subset
-/// still pending evaluation.
-struct Work {
-    machine: String,
-    idxs: Vec<usize>,
-    pending: Vec<usize>,
-}
-
-/// Assemble the final outcome: slot evaluated outcomes into the grid,
-/// overlay the journal-restored ones, and walk the grid in expansion
-/// order so `rows`, `infeasible` and `failed` keep their deterministic
-/// order regardless of threading or resume history.
-fn assemble(
-    restored: Vec<Option<PointOutcome>>,
-    work: &[Work],
-    results: Vec<GroupResult>,
-    interrupted: bool,
-) -> Result<SweepOutcome> {
-    let mut resumed_rows = 0;
-    let mut resumed_infeasible = 0;
-    let mut resumed_failed = 0;
-    for r in restored.iter().flatten() {
-        match r {
-            PointOutcome::Row(_) => resumed_rows += 1,
-            PointOutcome::Infeasible { .. } => resumed_infeasible += 1,
-            PointOutcome::Failed { .. } => resumed_failed += 1,
-        }
-    }
-
-    let mut grid = restored;
-    let mut stats = Vec::with_capacity(work.len());
-    let mut cache_hits = 0u64;
-    let mut cache_misses = 0u64;
-    for (w, res) in work.iter().zip(results) {
-        let group = res?;
-        for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
-            grid[i] = outcome;
-        }
-        cache_hits += group.cache.0;
-        cache_misses += group.cache.1;
-        stats.push(GroupStats {
-            machine: w.machine.clone(),
-            points: w.pending.len(),
-            workers: group.workers,
-            hits: group.cache.0,
-            misses: group.cache.1,
-        });
-    }
-
-    let mut rows = Vec::new();
-    let mut infeasible = Vec::new();
-    let mut failed = Vec::new();
-    let mut pending = 0;
-    for outcome in grid {
-        match outcome {
-            Some(PointOutcome::Row(row)) => rows.push(*row),
-            Some(PointOutcome::Infeasible { scenario, reason }) => {
-                infeasible.push((scenario, reason))
-            }
-            Some(PointOutcome::Failed {
-                scenario,
-                machine,
-                reason,
-            }) => failed.push(FailedPoint {
-                scenario,
-                machine,
-                reason,
-            }),
-            None => pending += 1,
-        }
-    }
-    Ok(SweepOutcome {
-        rows,
-        infeasible,
-        failed,
-        groups: stats,
-        cache_hits,
-        cache_misses,
-        interrupted,
-        pending,
-        resumed_rows,
-        resumed_infeasible,
-        resumed_failed,
-    })
-}
-
-/// The sweep engine: group points by machine, skip groups whose points
-/// were all restored from the journal, evaluate the rest (machine groups
-/// on parallel scoped threads unless `opts.sequential`, each group's
-/// pending points sharded across workers over one pre-warmed frozen
-/// cache), and assemble everything in expansion order.
-fn run_engine(
-    points: &[Point],
-    restored: Vec<Option<PointOutcome>>,
-    journal: Option<Mutex<Journal>>,
-    opts: &SweepOptions,
-) -> Result<SweepOutcome> {
-    if points.is_empty() {
-        return Err(BoosterError::Config("sweep with no grid points".into()));
-    }
-    assert_eq!(restored.len(), points.len(), "restored map must cover the grid");
-    let groups = group_by_machine(points);
-    let work: Vec<Work> = groups
-        .into_iter()
-        .filter_map(|(machine, idxs)| {
-            let pending: Vec<usize> =
-                idxs.iter().copied().filter(|&i| restored[i].is_none()).collect();
-            // A fully-restored group re-simulates nothing — not even the
-            // warm phase (its cache would never be read).
-            (!pending.is_empty()).then_some(Work {
-                machine,
-                idxs,
-                pending,
-            })
-        })
-        .collect();
-    let workers = if opts.sequential {
-        1
-    } else if opts.workers == 0 {
-        auto_workers(work.len())
-    } else {
-        opts.workers
-    };
-    let done = AtomicUsize::new(0);
-    let ctx = EvalCtx {
-        points,
-        cancel: &opts.cancel,
-        fault: opts.fault.as_ref(),
-        journal: journal.as_ref(),
-        done: &done,
-        interrupt_after: opts.interrupt_after,
-    };
-    let results: Vec<GroupResult> = if opts.sequential || work.len() <= 1 {
-        work.iter().map(|w| eval_group(&ctx, &w.idxs, &w.pending, workers)).collect()
-    } else {
-        std::thread::scope(|s| {
-            let ctx = &ctx;
-            let handles: Vec<_> = work
-                .iter()
-                .map(|w| {
-                    (
-                        w.machine.as_str(),
-                        s.spawn(move || eval_group(ctx, &w.idxs, &w.pending, workers)),
-                    )
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|(machine, handle)| join_worker(machine, handle))
-                .collect()
-        })
-    };
-    assemble(restored, &work, results, opts.cancel.cancelled())
-}
-
-/// Intra-machine workers to give each of `groups` machine groups:
-/// the host's cores spread across the groups, at least one each.
-pub(crate) fn auto_workers(groups: usize) -> usize {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    (cores / groups.max(1)).max(1)
-}
-
 /// Evaluate prebuilt grid points: groups by machine, machine groups on
 /// parallel scoped threads, each group's points sharded across
 /// `workers_per_group` workers sharing one pre-warmed frozen cache
@@ -1352,7 +793,7 @@ pub fn run_points(points: &[Point], workers_per_group: usize) -> Result<SweepOut
 /// deterministic interruption, fault injection) but no journal.
 pub fn run_points_with(points: &[Point], opts: &SweepOptions) -> Result<SweepOutcome> {
     let restored = (0..points.len()).map(|_| None).collect();
-    run_engine(points, restored, None, opts)
+    crate::sweep::run_engine(&TrainFamily, &points, restored, None, opts)
 }
 
 /// [`run_points`] with no threading at all: machine groups in sequence on
@@ -1404,29 +845,152 @@ pub fn run_journaled(
         let journal = Journal::create(journal_path, &fp)?;
         (journal, (0..points.len()).map(|_| None).collect())
     };
-    run_engine(&points, restored, Some(Mutex::new(journal)), opts)
+    let slice: &[Point] = &points;
+    crate::sweep::run_engine(&TrainFamily, &slice, restored, Some(Mutex::new(journal)), opts)
 }
 
-/// Resolve a worker's result, turning a panic into a simulation error
-/// (carrying the machine and the panic message) instead of poisoning the
-/// whole process.
-pub(crate) fn join_worker<T>(
-    machine: &str,
-    handle: std::thread::ScopedJoinHandle<'_, Result<T>>,
-) -> Result<T> {
-    match handle.join() {
-        Ok(result) => result,
-        Err(payload) => {
-            let what = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "unknown panic payload".into());
-            Err(BoosterError::Sim(format!(
-                "sweep worker for machine '{machine}' panicked: {what}"
-            )))
+/// A streaming grid: the cartesian product of `axes` over `base`,
+/// realized one point at a time. Point `i` is decoded mixed-radix with
+/// the first axis outermost — exactly [`expand`]'s order — and its spec
+/// is built and validated on demand, so a 10⁶-point grid holds
+/// O(workers) resident scenarios instead of 10⁶ (`booster sweep
+/// --stream`). Realized points are identical to [`prepare`]'s, so the
+/// resulting CSV is byte-identical to the materialized path (pinned by a
+/// differential test). The one behavioral difference: a bad grid *value*
+/// (unknown keys still fail at parse time) only surfaces when its point
+/// is first realized in the warm phase, not before the sweep starts.
+pub struct StreamedGrid {
+    base: ScenarioSpec,
+    axes: Vec<ParamAxis>,
+    plan: ExprPlan,
+    len: usize,
+}
+
+impl StreamedGrid {
+    /// Build the streaming view. Expression axes are parsed and their
+    /// dependency structure checked up front, like [`prepare`] — only
+    /// per-point spec construction is deferred.
+    pub fn new(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<StreamedGrid> {
+        let plan = ExprPlan::build(axes)?;
+        let mut len = 1usize;
+        for a in axes {
+            len = len.saturating_mul(a.values.len());
         }
+        Ok(StreamedGrid {
+            base: base.clone(),
+            axes: axes.to_vec(),
+            plan,
+            len,
+        })
     }
+
+    /// Number of grid points (the full cartesian product).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the grid is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The raw (unresolved) assignment of point `i`: mixed-radix decode,
+    /// last axis fastest.
+    fn assignment(&self, i: usize) -> Vec<(String, String)> {
+        let mut asg = Vec::with_capacity(self.axes.len());
+        let mut rest = i;
+        for axis in self.axes.iter().rev() {
+            let n = axis.values.len();
+            asg.push((axis.key.clone(), axis.values[rest % n].clone()));
+            rest /= n;
+        }
+        asg.reverse();
+        asg
+    }
+}
+
+impl crate::sweep::PointSource for StreamedGrid {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn point(&self, i: usize) -> Result<Point> {
+        let resolved = self.plan.resolve(&self.assignment(i))?;
+        let mut spec = self.base.clone();
+        for (k, v) in &resolved {
+            if is_var_key(k) {
+                continue; // variable axes only feed expressions
+            }
+            apply_param(&mut spec, k, v)?;
+        }
+        spec.name = spec.auto_name();
+        spec.validate()?;
+        Ok((spec, resolved))
+    }
+
+    fn groups(&self) -> Result<Vec<(String, Vec<usize>)>> {
+        // A point's machine depends only on the `machine` axis (a
+        // raw-string axis, never an expression), so grouping is pure
+        // index arithmetic — no spec is ever built here.
+        let pos = self.axes.iter().position(|a| a.key == "machine");
+        let (names, stride) = match pos {
+            None => (vec![self.base.machine.name.clone()], 1),
+            Some(p) => {
+                let mut names = Vec::with_capacity(self.axes[p].values.len());
+                for v in &self.axes[p].values {
+                    names.push(presets::machine(v)?.name);
+                }
+                let stride: usize =
+                    self.axes[p + 1..].iter().map(|a| a.values.len()).product();
+                (names, stride)
+            }
+        };
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for i in 0..self.len {
+            let name = match pos {
+                None => &names[0],
+                Some(p) => &names[(i / stride) % self.axes[p].values.len()],
+            };
+            match groups.iter_mut().find(|(m, _)| m == name) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((name.clone(), vec![i])),
+            }
+        }
+        Ok(groups)
+    }
+}
+
+/// [`run_points_with`] over a [`StreamedGrid`] (no journal): the grid is
+/// never materialized.
+pub fn run_streamed(
+    base: &ScenarioSpec,
+    axes: &[ParamAxis],
+    opts: &SweepOptions,
+) -> Result<SweepOutcome> {
+    let grid = StreamedGrid::new(base, axes)?;
+    let restored = (0..grid.len()).map(|_| None).collect();
+    crate::sweep::run_engine(&TrainFamily, &grid, restored, None, opts)
+}
+
+/// [`run_journaled`] over a [`StreamedGrid`] — `booster sweep --stream`
+/// with crash tolerance. Same grid fingerprint, same journal format,
+/// same CSV bytes as the materialized path.
+pub fn run_journaled_streamed(
+    base: &ScenarioSpec,
+    axes: &[ParamAxis],
+    journal_path: &Path,
+    resume: bool,
+    opts: &SweepOptions,
+) -> Result<SweepOutcome> {
+    let grid = StreamedGrid::new(base, axes)?;
+    let fp = GridFingerprint::new(base, axes);
+    let (journal, restored) = if resume {
+        Journal::resume(journal_path, &fp, grid.len())?
+    } else {
+        let journal = Journal::create(journal_path, &fp)?;
+        (journal, (0..grid.len()).map(|_| None).collect())
+    };
+    crate::sweep::run_engine(&TrainFamily, &grid, restored, Some(Mutex::new(journal)), opts)
 }
 
 /// Indices of the throughput-optimal row per `(machine, nodes)` pair —
@@ -1518,13 +1082,6 @@ mod tests {
     #[test]
     fn empty_grid_is_one_point() {
         assert_eq!(expand(&[]).len(), 1);
-    }
-
-    #[test]
-    fn chunk_ranges_cover_contiguously() {
-        assert_eq!(chunk_ranges(8, 3), vec![0..3, 3..6, 6..8]);
-        assert_eq!(chunk_ranges(2, 8).len(), 2, "never more chunks than items");
-        assert_eq!(chunk_ranges(5, 1), vec![0..5]);
     }
 
     #[test]
@@ -2107,5 +1664,111 @@ mod tests {
         for r in &out.rows {
             assert!(best.samples_per_s >= r.samples_per_s, "{}", r.scenario);
         }
+    }
+
+    #[test]
+    fn streamed_and_materialized_sweeps_are_byte_identical() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let mat = run(&base, &axes).unwrap();
+        let streamed = run_streamed(&base, &axes, &SweepOptions::default()).unwrap();
+        assert_eq!(streamed.to_csv(), mat.to_csv(), "streaming must not change a byte");
+        assert_eq!(streamed.cache_hits, mat.cache_hits);
+        assert_eq!(streamed.cache_misses, mat.cache_misses);
+        assert_eq!(
+            streamed.to_json(&axes).to_string(),
+            mat.to_json(&axes).to_string(),
+            "identical artifact JSON too"
+        );
+    }
+
+    #[test]
+    fn streamed_grid_matches_prepare_point_for_point() {
+        use crate::sweep::PointSource;
+        let base = presets::default_scenario("juwels_booster").unwrap();
+        let axes = parse_params(&s(&[
+            "machine=juwels_booster",
+            "leonardo",
+            "nodes=2",
+            "4",
+            "precision=bf16",
+        ]))
+        .unwrap();
+        let grid = StreamedGrid::new(&base, &axes).unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        assert_eq!(grid.len(), points.len());
+        let slice: &[Point] = &points;
+        assert_eq!(grid.groups().unwrap(), slice.groups().unwrap());
+        for (i, (spec, asg)) in points.iter().enumerate() {
+            let (s2, asg2) = grid.point(i).unwrap();
+            assert_eq!(&asg2, asg, "assignment {i}");
+            assert_eq!(s2.to_json().to_string(), spec.to_json().to_string(), "spec {i}");
+        }
+    }
+
+    #[test]
+    fn million_point_grid_streams_without_materializing() {
+        // Three 100-value variable axes = 10^6 points. Construction plus
+        // sampled decodes touch a handful of specs — the grid itself is
+        // never expanded.
+        use crate::sweep::PointSource;
+        let base = presets::default_scenario("selene").unwrap();
+        let axes: Vec<ParamAxis> = ["a", "b", "c"]
+            .iter()
+            .map(|k| ParamAxis {
+                key: k.to_string(),
+                values: (0..100).map(|v| v.to_string()).collect(),
+            })
+            .collect();
+        let grid = StreamedGrid::new(&base, &axes).unwrap();
+        assert_eq!(grid.len(), 1_000_000);
+        // Mixed-radix decode, first axis outermost: index 123456 is
+        // digits (12, 34, 56).
+        let (_, asg) = grid.point(123_456).unwrap();
+        assert_eq!(
+            asg,
+            vec![
+                ("a".to_string(), "12".to_string()),
+                ("b".to_string(), "34".to_string()),
+                ("c".to_string(), "56".to_string()),
+            ]
+        );
+        let (_, last) = grid.point(999_999).unwrap();
+        assert_eq!(last[0], ("a".to_string(), "99".to_string()));
+        let groups = grid.groups().unwrap();
+        assert_eq!(groups.len(), 1, "no machine axis -> one group");
+        assert_eq!(groups[0].0, "selene");
+        assert_eq!(groups[0].1.len(), 1_000_000);
+    }
+
+    #[test]
+    fn persistent_cache_warm_starts_a_second_run_bit_identically() {
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        let dir = std::env::temp_dir().join(format!("booster_cachewarm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = dir.join("cost_cache.json");
+        let opts = SweepOptions {
+            workers: 1,
+            cache_file: Some(cache.clone()),
+            ..SweepOptions::default()
+        };
+        let cold = run_points_with(&points, &opts).unwrap();
+        assert!(cache.exists(), "first run must write the cache file");
+        assert_eq!(cold.sim_reuses, 0);
+        assert_eq!(cold.warm_curves_loaded, 0);
+        let warm = run_points_with(&points, &opts).unwrap();
+        assert_eq!(warm.to_csv(), cold.to_csv(), "warm start must not change a byte");
+        assert_eq!(warm.cache_hits, cold.cache_hits, "counters evolve as in a cold run");
+        assert_eq!(warm.cache_misses, cold.cache_misses);
+        assert!(warm.warm_curves_loaded > 0, "second run must load the dumped curves");
+        assert!(warm.sim_reuses > 0, "warm misses must reuse stored samples");
+        assert!(
+            warm.answer_share() > 0.9,
+            "warm start must answer >90% without simulating: {}",
+            warm.answer_share()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

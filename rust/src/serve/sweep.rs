@@ -1,14 +1,16 @@
 //! The `booster serve-sweep` grid engine — replicas × tensor × batch ×
 //! machine over the serving cost model.
 //!
-//! Deliberately the same machinery as the training sweep
-//! ([`crate::scenario::sweep`]): the same deterministic expansion order,
-//! the same machine grouping with one shared pre-warmed frozen
-//! [`crate::collectives::CollectiveModel`] per group, the same
-//! journal/resume contract (byte-identical CSV after a crash), the same
-//! worker fault isolation. What differs is the *row*: a grid point is
-//! priced by [`DecodeTimeline`] + [`simulate_replica`] into p50/p99
-//! request latency and tokens/s instead of a training step time.
+//! Literally the same machinery as the training sweep: both families
+//! instantiate the generic engine in [`crate::sweep`] — the same
+//! deterministic expansion order, the same machine grouping with one
+//! shared pre-warmed frozen [`crate::collectives::CollectiveModel`] per
+//! group, the same journal/resume contract (byte-identical CSV after a
+//! crash), the same worker fault isolation, the same persistent
+//! cost-cache warm starts. What differs is the *family*
+//! ([`ServeFamily`]): a grid point is priced by [`DecodeTimeline`] +
+//! [`simulate_replica`] into p50/p99 request latency and tokens/s
+//! instead of a training step time.
 //!
 //! Journals are tagged `sweep_kind: "serve"` (see
 //! [`crate::scenario::journal`]); a serve resume on a train journal — or
@@ -18,22 +20,20 @@
 //! machine, the feasible row with the highest aggregate tokens/s among
 //! those whose simulated p99 meets the spec's `slo_p99_ms`.
 
-use std::panic::AssertUnwindSafe;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::collectives::CollectiveModel;
+use crate::hw::power::PowerModel;
 use crate::scenario::journal::{GridFingerprint, Journal, JournalRow};
 use crate::scenario::presets;
 use crate::scenario::spec::ScenarioSpec;
-use crate::scenario::sweep::{
-    auto_workers, chunk_ranges, expand, join_worker, panic_text, Cancel, FailedPoint, GroupStats,
-    ParamAxis, Point, PointOutcome, SweepOptions,
-};
+use crate::scenario::sweep::{expand, ParamAxis};
 use crate::serve::decode::DecodeTimeline;
 use crate::serve::kv;
 use crate::serve::queue::simulate_replica;
+use crate::sweep::{Point, SweepOptions};
+use crate::topology::Topology;
 use crate::util::error::{BoosterError, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -343,34 +343,10 @@ impl JournalRow for ServeRow {
     }
 }
 
-/// A completed serve sweep — the serving sibling of
-/// [`crate::scenario::sweep::SweepOutcome`].
-#[derive(Debug, Clone)]
-pub struct ServeOutcome {
-    /// One row per feasible grid point, deterministic expansion order.
-    pub rows: Vec<ServeRow>,
-    /// `(scenario, reason)` for points infeasible at evaluation time
-    /// (the KV-cache fit — only decidable when pricing).
-    pub infeasible: Vec<(String, String)>,
-    /// Points whose evaluation panicked (after one bounded retry).
-    pub failed: Vec<FailedPoint>,
-    /// Per-machine-group worker counts and cache stats.
-    pub groups: Vec<GroupStats>,
-    /// Collective cost-cache hits across all machine groups.
-    pub cache_hits: u64,
-    /// Flow simulations actually run.
-    pub cache_misses: u64,
-    /// Whether the sweep was cancelled before every point completed.
-    pub interrupted: bool,
-    /// Grid points never evaluated (only non-zero when interrupted).
-    pub pending: usize,
-    /// Rows restored from the journal rather than re-evaluated.
-    pub resumed_rows: usize,
-    /// Infeasible markers restored from the journal.
-    pub resumed_infeasible: usize,
-    /// Failed markers restored from the journal.
-    pub resumed_failed: usize,
-}
+/// A completed serve sweep — the serving instantiation of the generic
+/// engine outcome ([`crate::sweep::EngineOutcome`]); the training
+/// sibling is [`crate::scenario::sweep::SweepOutcome`].
+pub type ServeOutcome = crate::sweep::EngineOutcome<ServeRow>;
 
 /// Indices of the best feasible row per machine: highest
 /// `total_tokens_per_s` among rows with `slo_ok`, machines in
@@ -500,7 +476,6 @@ impl ServeOutcome {
                 })
                 .collect(),
         );
-        let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
             ("bench", Json::Str("serve".into())),
             ("params", params),
@@ -526,390 +501,98 @@ impl ServeOutcome {
                     ("resumed_failed", Json::Num(self.resumed_failed as f64)),
                 ]),
             ),
-            (
-                "cost_cache",
-                Json::obj(vec![
-                    ("hits", Json::Num(self.cache_hits as f64)),
-                    ("misses", Json::Num(self.cache_misses as f64)),
-                    ("hit_rate", Json::Num(self.cache_hits as f64 / total as f64)),
-                ]),
-            ),
+            ("cost_cache", self.cost_cache_json()),
         ])
     }
 }
 
-/// Shared evaluation context, one per engine run (the serving mirror of
-/// the training sweep's `EvalCtx`).
-struct ServeCtx<'a> {
-    points: &'a [Point],
-    cancel: &'a Cancel,
-    fault: Option<&'a crate::scenario::sweep::FaultHook>,
-    journal: Option<&'a Mutex<Journal>>,
-    done: &'a AtomicUsize,
-    interrupt_after: Option<usize>,
-}
+/// The serving instantiation of the generic sweep engine
+/// ([`crate::sweep::SweepFamily`]): one [`DecodeTimeline`] per worker
+/// over the group's shared frozen cache, warmed replica-set by
+/// replica-set, priced through the KV fit + queue simulation. The
+/// KV-cache fit surfaces as a `Config` error, which the engine records
+/// as infeasible rather than fatal.
+pub struct ServeFamily;
 
-struct ServeGroupOutcome {
-    outcomes: Vec<Option<PointOutcome<ServeRow>>>,
-    cache: (u64, u64),
-    workers: usize,
-}
+impl crate::sweep::SweepFamily for ServeFamily {
+    type Row = ServeRow;
+    type Worker<'t> = DecodeTimeline<'t>;
 
-/// Evaluate one serve grid point with worker fault isolation (panic →
-/// rebuild + one retry → `Failed`; `Config` error → `Infeasible` — the
-/// KV-cache fit lands here).
-fn eval_one_serve<'t>(
-    ctx: &ServeCtx<'_>,
-    i: usize,
-    topo: &'t crate::topology::Topology,
-    shared: &Arc<CollectiveModel<'t>>,
-    dt: &mut Option<DecodeTimeline<'t>>,
-) -> Result<PointOutcome<ServeRow>> {
-    let (spec, asg) = &ctx.points[i];
-    let mut attempt = 0;
-    loop {
-        if dt.is_none() {
-            *dt = Some(DecodeTimeline::with_collectives(spec, topo, Arc::clone(shared))?);
-        }
-        let tl = dt.as_mut().expect("timeline just built");
-        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<ServeRow> {
-            if let Some(fault) = ctx.fault {
-                if fault(i, attempt) {
-                    panic!("injected fault at point {i} attempt {attempt}");
-                }
-            }
-            tl.configure_from(spec)?;
-            let serving = tl.serving.clone();
-            let all = spec.job_gpus(topo)?;
-            let need = (serving.replicas * tl.tensor).max(1);
-            // prepare_serve sized the allocation to hold the job.
-            let gpus = &all[..need];
-            let cap = tl.batch_cap()?; // KV fit → Config → infeasible
-            let kv_bytes = kv::kv_bytes_per_request(
-                &serving,
-                &tl.model,
-                tl.timeline.precision,
-                tl.tensor,
-            );
-            let prefill = tl.prefill_time(gpus, 1)?;
-            let token = tl.token_time(gpus, 1)?;
-            let rate_per_replica = serving.requests_per_s / serving.replicas.max(1) as f64;
-            let mut rng = Rng::seed_from(7);
-            let stats = simulate_replica(tl, gpus, rate_per_replica, cap, &mut rng)?;
-            let p99_ms = stats.p99 * 1e3;
-            Ok(ServeRow {
-                scenario: spec.name.clone(),
-                machine: spec.machine.name.clone(),
-                workload: spec.workload.name.clone(),
-                nodes: spec.parallelism.nodes,
-                gpus: need,
-                replicas: serving.replicas,
-                tensor: tl.tensor,
-                batch_cap: cap,
-                precision: spec.precision.clone(),
-                prompt_tokens: serving.prompt_tokens,
-                decode_tokens: serving.decode_tokens,
-                rate: serving.requests_per_s,
-                kv_gb: kv_bytes / 1e9,
-                prefill_ms: prefill * 1e3,
-                token_ms: token * 1e3,
-                p50_ms: stats.p50 * 1e3,
-                p99_ms,
-                slo_ms: serving.slo_p99_ms,
-                slo_ok: p99_ms <= serving.slo_p99_ms,
-                mean_batch: stats.mean_batch,
-                tokens_per_s: stats.tokens_per_s,
-                total_tokens_per_s: stats.tokens_per_s * serving.replicas as f64,
-                assignment: asg.clone(),
-            })
-        }));
-        match caught {
-            Ok(Ok(row)) => return Ok(PointOutcome::Row(Box::new(row))),
-            Ok(Err(BoosterError::Config(reason))) => {
-                return Ok(PointOutcome::Infeasible {
-                    scenario: spec.name.clone(),
-                    reason,
-                })
-            }
-            Ok(Err(e)) => return Err(e),
-            Err(payload) => {
-                *dt = None;
-                let what = panic_text(payload.as_ref());
-                if attempt == 0 {
-                    attempt = 1;
-                    continue;
-                }
-                return Ok(PointOutcome::Failed {
-                    scenario: spec.name.clone(),
-                    machine: spec.machine.name.clone(),
-                    reason: format!("evaluation panicked (retried once): {what}"),
-                });
-            }
-        }
-    }
-}
-
-/// Evaluate the points in `idxs` through one per-worker
-/// [`DecodeTimeline`] over the group's frozen shared cache, journaling
-/// and counting each completion (mirror of the training `eval_points`).
-fn eval_serve_points<'t>(
-    ctx: &ServeCtx<'_>,
-    idxs: &[usize],
-    topo: &'t crate::topology::Topology,
-    shared: &Arc<CollectiveModel<'t>>,
-) -> Result<Vec<Option<PointOutcome<ServeRow>>>> {
-    let mut dt: Option<DecodeTimeline<'t>> = None;
-    let mut out = Vec::with_capacity(idxs.len());
-    for &i in idxs {
-        if ctx.cancel.cancelled() {
-            out.push(None);
-            continue;
-        }
-        let outcome = eval_one_serve(ctx, i, topo, shared, &mut dt)?;
-        if let Some(journal) = ctx.journal {
-            journal
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .append(i, &outcome)?;
-        }
-        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
-        if let Some(limit) = ctx.interrupt_after {
-            if completed >= limit {
-                ctx.cancel.cancel();
-            }
-        }
-        out.push(Some(outcome));
-    }
-    Ok(out)
-}
-
-/// One machine group: sequential warm of the shared cache over **all**
-/// the group's points (restored ones included — cache interpolation is
-/// path-dependent, and skipping them would break the byte-identical
-/// resume contract), then freeze and shard the pending evaluations.
-fn eval_serve_group(
-    ctx: &ServeCtx<'_>,
-    idxs: &[usize],
-    pending: &[usize],
-    workers: usize,
-) -> Result<ServeGroupOutcome> {
-    let machine = &ctx.points[idxs[0]].0.machine;
-    let topo = machine.build_topology()?;
-    let shared = Arc::new(CollectiveModel::new(&topo));
-    let chunks = chunk_ranges(pending.len(), workers);
-
-    let mut cancelled_in_warm = false;
-    {
-        let mut dt =
-            DecodeTimeline::with_collectives(&ctx.points[idxs[0]].0, &topo, Arc::clone(&shared))?;
-        for &i in idxs {
-            if ctx.cancel.cancelled() {
-                cancelled_in_warm = true;
-                break;
-            }
-            let (spec, _) = &ctx.points[i];
-            dt.configure_from(spec)?;
-            let all = spec.job_gpus(&topo)?;
-            let need = (dt.serving.replicas * dt.tensor).max(1);
-            dt.warm_comm(&all[..need])?;
-        }
-    }
-    shared.freeze_cache(true);
-    if cancelled_in_warm {
-        return Ok(ServeGroupOutcome {
-            outcomes: vec![None; pending.len()],
-            cache: shared.cache_stats(),
-            workers: chunks.len(),
-        });
+    fn noun(&self) -> &'static str {
+        "serve sweep"
     }
 
-    let outcomes: Vec<Result<Vec<Option<PointOutcome<ServeRow>>>>> = if chunks.len() <= 1 {
-        vec![eval_serve_points(ctx, pending, &topo, &shared)]
-    } else {
-        std::thread::scope(|s| {
-            let topo = &topo;
-            let shared = &shared;
-            let handles: Vec<_> = chunks
-                .iter()
-                .map(|r| {
-                    let slice = &pending[r.clone()];
-                    s.spawn(move || eval_serve_points(ctx, slice, topo, shared))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| join_worker(&machine.name, h))
-                .collect()
+    fn new_worker<'t>(
+        &self,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+        shared: &Arc<CollectiveModel<'t>>,
+    ) -> Result<Self::Worker<'t>> {
+        DecodeTimeline::with_collectives(spec, topo, Arc::clone(shared))
+    }
+
+    fn warm<'t>(
+        &self,
+        worker: &mut Self::Worker<'t>,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<()> {
+        worker.configure_from(spec)?;
+        let all = spec.job_gpus(topo)?;
+        let need = (worker.serving.replicas * worker.tensor).max(1);
+        worker.warm_comm(&all[..need])
+    }
+
+    fn price<'t>(
+        &self,
+        worker: &mut Self::Worker<'t>,
+        spec: &ScenarioSpec,
+        asg: &[(String, String)],
+        topo: &'t Topology,
+        _power: &PowerModel,
+    ) -> Result<Self::Row> {
+        let tl = worker;
+        tl.configure_from(spec)?;
+        let serving = tl.serving.clone();
+        let all = spec.job_gpus(topo)?;
+        let need = (serving.replicas * tl.tensor).max(1);
+        // prepare_serve sized the allocation to hold the job.
+        let gpus = &all[..need];
+        let cap = tl.batch_cap()?; // KV fit → Config → infeasible
+        let kv_bytes =
+            kv::kv_bytes_per_request(&serving, &tl.model, tl.timeline.precision, tl.tensor);
+        let prefill = tl.prefill_time(gpus, 1)?;
+        let token = tl.token_time(gpus, 1)?;
+        let rate_per_replica = serving.requests_per_s / serving.replicas.max(1) as f64;
+        let mut rng = Rng::seed_from(7);
+        let stats = simulate_replica(tl, gpus, rate_per_replica, cap, &mut rng)?;
+        let p99_ms = stats.p99 * 1e3;
+        Ok(ServeRow {
+            scenario: spec.name.clone(),
+            machine: spec.machine.name.clone(),
+            workload: spec.workload.name.clone(),
+            nodes: spec.parallelism.nodes,
+            gpus: need,
+            replicas: serving.replicas,
+            tensor: tl.tensor,
+            batch_cap: cap,
+            precision: spec.precision.clone(),
+            prompt_tokens: serving.prompt_tokens,
+            decode_tokens: serving.decode_tokens,
+            rate: serving.requests_per_s,
+            kv_gb: kv_bytes / 1e9,
+            prefill_ms: prefill * 1e3,
+            token_ms: token * 1e3,
+            p50_ms: stats.p50 * 1e3,
+            p99_ms,
+            slo_ms: serving.slo_p99_ms,
+            slo_ok: p99_ms <= serving.slo_p99_ms,
+            mean_batch: stats.mean_batch,
+            tokens_per_s: stats.tokens_per_s,
+            total_tokens_per_s: stats.tokens_per_s * serving.replicas as f64,
+            assignment: asg.to_vec(),
         })
-    };
-
-    let mut merged = Vec::with_capacity(pending.len());
-    for o in outcomes {
-        merged.extend(o?);
     }
-    Ok(ServeGroupOutcome {
-        outcomes: merged,
-        cache: shared.cache_stats(),
-        workers: chunks.len(),
-    })
-}
-
-fn group_by_machine(points: &[Point]) -> Vec<(String, Vec<usize>)> {
-    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
-    for (i, (spec, _)) in points.iter().enumerate() {
-        match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
-            Some((_, idxs)) => idxs.push(i),
-            None => groups.push((spec.machine.name.clone(), vec![i])),
-        }
-    }
-    groups
-}
-
-struct Work {
-    machine: String,
-    idxs: Vec<usize>,
-    pending: Vec<usize>,
-}
-
-fn assemble(
-    restored: Vec<Option<PointOutcome<ServeRow>>>,
-    work: &[Work],
-    results: Vec<Result<ServeGroupOutcome>>,
-    interrupted: bool,
-) -> Result<ServeOutcome> {
-    let mut resumed_rows = 0;
-    let mut resumed_infeasible = 0;
-    let mut resumed_failed = 0;
-    for r in restored.iter().flatten() {
-        match r {
-            PointOutcome::Row(_) => resumed_rows += 1,
-            PointOutcome::Infeasible { .. } => resumed_infeasible += 1,
-            PointOutcome::Failed { .. } => resumed_failed += 1,
-        }
-    }
-
-    let mut grid = restored;
-    let mut stats = Vec::with_capacity(work.len());
-    let mut cache_hits = 0u64;
-    let mut cache_misses = 0u64;
-    for (w, res) in work.iter().zip(results) {
-        let group = res?;
-        for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
-            grid[i] = outcome;
-        }
-        cache_hits += group.cache.0;
-        cache_misses += group.cache.1;
-        stats.push(GroupStats {
-            machine: w.machine.clone(),
-            points: w.pending.len(),
-            workers: group.workers,
-            hits: group.cache.0,
-            misses: group.cache.1,
-        });
-    }
-
-    let mut rows = Vec::new();
-    let mut infeasible = Vec::new();
-    let mut failed = Vec::new();
-    let mut pending = 0;
-    for outcome in grid {
-        match outcome {
-            Some(PointOutcome::Row(row)) => rows.push(*row),
-            Some(PointOutcome::Infeasible { scenario, reason }) => {
-                infeasible.push((scenario, reason))
-            }
-            Some(PointOutcome::Failed {
-                scenario,
-                machine,
-                reason,
-            }) => failed.push(FailedPoint {
-                scenario,
-                machine,
-                reason,
-            }),
-            None => pending += 1,
-        }
-    }
-    Ok(ServeOutcome {
-        rows,
-        infeasible,
-        failed,
-        groups: stats,
-        cache_hits,
-        cache_misses,
-        interrupted,
-        pending,
-        resumed_rows,
-        resumed_infeasible,
-        resumed_failed,
-    })
-}
-
-/// The serve engine: identical shape to the training `run_engine` —
-/// machine groups in parallel unless sequential, fully-restored groups
-/// skipped, everything assembled in expansion order.
-fn run_serve_engine(
-    points: &[Point],
-    restored: Vec<Option<PointOutcome<ServeRow>>>,
-    journal: Option<Mutex<Journal>>,
-    opts: &SweepOptions,
-) -> Result<ServeOutcome> {
-    if points.is_empty() {
-        return Err(BoosterError::Config("serve sweep with no grid points".into()));
-    }
-    assert_eq!(restored.len(), points.len(), "restored map must cover the grid");
-    let groups = group_by_machine(points);
-    let work: Vec<Work> = groups
-        .into_iter()
-        .filter_map(|(machine, idxs)| {
-            let pending: Vec<usize> =
-                idxs.iter().copied().filter(|&i| restored[i].is_none()).collect();
-            (!pending.is_empty()).then_some(Work {
-                machine,
-                idxs,
-                pending,
-            })
-        })
-        .collect();
-    let workers = if opts.sequential {
-        1
-    } else if opts.workers == 0 {
-        auto_workers(work.len())
-    } else {
-        opts.workers
-    };
-    let done = AtomicUsize::new(0);
-    let ctx = ServeCtx {
-        points,
-        cancel: &opts.cancel,
-        fault: opts.fault.as_ref(),
-        journal: journal.as_ref(),
-        done: &done,
-        interrupt_after: opts.interrupt_after,
-    };
-    let results: Vec<Result<ServeGroupOutcome>> = if opts.sequential || work.len() <= 1 {
-        work.iter()
-            .map(|w| eval_serve_group(&ctx, &w.idxs, &w.pending, workers))
-            .collect()
-    } else {
-        std::thread::scope(|s| {
-            let ctx = &ctx;
-            let handles: Vec<_> = work
-                .iter()
-                .map(|w| {
-                    (
-                        w.machine.as_str(),
-                        s.spawn(move || eval_serve_group(ctx, &w.idxs, &w.pending, workers)),
-                    )
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|(machine, handle)| join_worker(machine, handle))
-                .collect()
-        })
-    };
-    assemble(restored, &work, results, opts.cancel.cancelled())
 }
 
 /// Expand the serve grid over `base` and evaluate every point (no
@@ -922,7 +605,7 @@ pub fn run_serve(base: &ScenarioSpec, axes: &[ParamAxis]) -> Result<ServeOutcome
 /// no journal.
 pub fn run_serve_points_with(points: &[Point], opts: &SweepOptions) -> Result<ServeOutcome> {
     let restored = (0..points.len()).map(|_| None).collect();
-    run_serve_engine(points, restored, None, opts)
+    crate::sweep::run_engine(&ServeFamily, &points, restored, None, opts)
 }
 
 /// The crash-tolerant entry point behind `booster serve-sweep`: expand
@@ -945,7 +628,8 @@ pub fn run_serve_journaled(
         let journal = Journal::create(journal_path, &fp)?;
         (journal, (0..points.len()).map(|_| None).collect())
     };
-    run_serve_engine(&points, restored, Some(Mutex::new(journal)), opts)
+    let slice: &[Point] = &points;
+    crate::sweep::run_engine(&ServeFamily, &slice, restored, Some(Mutex::new(journal)), opts)
 }
 
 #[cfg(test)]

@@ -1,0 +1,1041 @@
+//! The generic sweep engine — one grid evaluator behind both the
+//! training sweep (`booster sweep`, [`crate::scenario::sweep`]) and the
+//! serving sweep (`booster serve-sweep`, [`crate::serve::sweep`]).
+//!
+//! Historically each driver carried its own copy of the machinery:
+//! machine grouping, the sequential warm → `freeze_cache` handoff,
+//! `chunk_ranges` scoped-thread workers, `catch_unwind`
+//! retry-then-`failed` fault isolation, SIGINT drain, journaling, and
+//! outcome assembly — ~3300 lines with heavy overlap. This module hosts
+//! the single engine; the drivers instantiate it through two small
+//! traits:
+//!
+//! * [`SweepFamily`] — what a *point evaluation* is: how to build a
+//!   per-worker pricing timeline, how to warm the shared cost cache for
+//!   one point, and how to price one point into a row. The train family
+//!   wraps [`crate::train::hybrid::HybridTimeline`], the serve family
+//!   [`crate::serve::decode::DecodeTimeline`].
+//! * [`PointSource`] — where grid points come from: a materialized
+//!   `&[Point]` slice (the classic path) or a streaming source such as
+//!   [`crate::scenario::sweep::StreamedGrid`] that realizes each point
+//!   on demand, so a 10⁶-point grid holds O(workers) points in memory
+//!   instead of 10⁶ specs.
+//!
+//! Output formats are pinned: the rows, stats and orderings produced
+//! here are identical to the pre-unification engines (differential
+//! tests in both drivers), so CSV/JSON/journal artifacts stay
+//! byte-identical.
+//!
+//! # Persistent cost cache (§Perf)
+//!
+//! With [`SweepOptions::cache_file`] set, warm collective curves (and
+//! their fitted α–β surrogates) are loaded from / saved to a JSON file
+//! keyed by [`COST_CACHE_SCHEMA_VERSION`] and a per-machine
+//! [`crate::scenario::spec::MachineSpec::fingerprint`]. A mismatched or
+//! malformed file is **ignored and rebuilt**, never an error. Loaded
+//! curves feed the model's *warm store*: a cache miss at an exact stored
+//! size reuses the stored sample instead of running the flow simulation
+//! ([`CollectiveModel::sim_reuses`] counts these). Crucially the live
+//! cache still evolves exactly as in a cold run — same insert order,
+//! same hit/miss counters, same interpolation state — so a warm-started
+//! process produces byte-identical CSVs (the cross-process `cmp` checks
+//! in CI rely on this).
+
+use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::{CollectiveModel, CurveRecord, COST_CACHE_SCHEMA_VERSION};
+use crate::hw::power::PowerModel;
+use crate::scenario::journal::{Journal, JournalRow};
+use crate::scenario::spec::ScenarioSpec;
+use crate::topology::Topology;
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+
+/// A grid point: the fully-applied scenario plus the assignment that
+/// produced it.
+pub type Point = (ScenarioSpec, Vec<(String, String)>);
+
+/// Process-global SIGINT observation — hand-rolled (the vendored crate
+/// set has no `ctrlc`/`signal-hook`). The handler only bumps an atomic:
+/// the first Ctrl-C is *cooperative* (workers see [`sigint::pending`]
+/// through their [`Cancel`] token, stop dispatching new points, drain
+/// in-flight ones, and the driver flushes partial artifacts); the second
+/// Ctrl-C calls the async-signal-safe `_exit(130)` — the user means it.
+pub mod sigint {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static SEEN: AtomicUsize = AtomicUsize::new(0);
+
+    #[cfg(unix)]
+    mod ffi {
+        extern "C" {
+            pub fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+            pub fn _exit(code: i32) -> !;
+        }
+        pub const SIGINT: i32 = 2;
+    }
+
+    #[cfg(unix)]
+    extern "C" fn on_sigint(_sig: i32) {
+        if SEEN.fetch_add(1, Ordering::SeqCst) >= 1 {
+            unsafe { ffi::_exit(130) }
+        }
+    }
+
+    /// Install the SIGINT handler (no-op off unix) and reset the
+    /// seen-count so a long-lived process can run several sweeps.
+    pub fn install() {
+        SEEN.store(0, Ordering::SeqCst);
+        #[cfg(unix)]
+        unsafe {
+            ffi::signal(ffi::SIGINT, on_sigint);
+        }
+    }
+
+    /// Whether a SIGINT has arrived since [`install`].
+    pub fn pending() -> bool {
+        SEEN.load(Ordering::SeqCst) > 0
+    }
+}
+
+/// Cooperative cancellation token threaded through the sweep worker
+/// loops. Cancelling stops *dispatch* of new points; in-flight points
+/// drain, so every row that does appear is identical to what an
+/// uninterrupted run would have produced.
+#[derive(Clone)]
+pub struct Cancel {
+    flag: Arc<AtomicBool>,
+    watch_sigint: bool,
+}
+
+impl Default for Cancel {
+    fn default() -> Cancel {
+        Cancel::new()
+    }
+}
+
+impl Cancel {
+    /// A token nobody has cancelled (library callers, tests).
+    pub fn new() -> Cancel {
+        Cancel {
+            flag: Arc::new(AtomicBool::new(false)),
+            watch_sigint: false,
+        }
+    }
+
+    /// A token that additionally observes the process SIGINT count
+    /// (see [`sigint::install`]) — the `booster sweep` wiring.
+    pub fn with_sigint() -> Cancel {
+        Cancel {
+            flag: Arc::new(AtomicBool::new(false)),
+            watch_sigint: true,
+        }
+    }
+
+    /// Request cancellation.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst) || (self.watch_sigint && sigint::pending())
+    }
+}
+
+/// Fault-injection hook: called with `(grid_index, attempt)` before each
+/// evaluation attempt; returning `true` makes that attempt panic. Tests
+/// and the CI failed-path fixture use it to exercise worker fault
+/// isolation deterministically.
+pub type FaultHook = Arc<dyn Fn(usize, usize) -> bool + Send + Sync>;
+
+/// Options for the journaled / point-level engine entry points.
+#[derive(Clone, Default)]
+pub struct SweepOptions {
+    /// Intra-machine evaluation workers per group (`0` = auto).
+    pub workers: usize,
+    /// Run everything on the caller's thread (the sequential path —
+    /// differential-test baseline and honest benchmarking).
+    pub sequential: bool,
+    /// Cooperative cancellation token.
+    pub cancel: Cancel,
+    /// Flip `cancel` after this many points complete in this run —
+    /// deterministic mid-grid interruption for tests and CI (a timed
+    /// SIGINT would be flaky).
+    pub interrupt_after: Option<usize>,
+    /// Fault-injection hook (see [`FaultHook`]).
+    pub fault: Option<FaultHook>,
+    /// Persistent cost-cache file (`results/cost_cache.json` in the
+    /// CLI). `None` — the default, and what every library/test caller
+    /// gets — disables persistence entirely.
+    pub cache_file: Option<PathBuf>,
+    /// Override the collective surrogate-fit acceptance bound
+    /// (`None` = the model default, [`crate::collectives`]'s 1%;
+    /// `Some(0.0)` disables surrogate answers).
+    pub surrogate_bound: Option<f64>,
+}
+
+/// The recorded fate of one grid point — what the journal persists and
+/// what a resumed run restores. Generic over the row type so the
+/// training sweep ([`crate::scenario::sweep::SweepRow`], the default)
+/// and the serving sweep ([`crate::serve::sweep::ServeRow`]) share one
+/// journal format.
+#[derive(Debug, Clone)]
+pub enum PointOutcome<R = crate::scenario::sweep::SweepRow> {
+    /// Priced successfully.
+    Row(Box<R>),
+    /// Skipped by the evaluation-time feasibility check (memory fit).
+    Infeasible {
+        /// Scenario name of the skipped point.
+        scenario: String,
+        /// Why it was infeasible.
+        reason: String,
+    },
+    /// The evaluation panicked (both attempts); the sweep carried on.
+    Failed {
+        /// Scenario name of the failed point.
+        scenario: String,
+        /// Machine group the point belonged to.
+        machine: String,
+        /// Panic payload text.
+        reason: String,
+    },
+}
+
+/// A point whose evaluation panicked — recorded beside `infeasible` in
+/// the outcome instead of aborting the grid.
+#[derive(Debug, Clone)]
+pub struct FailedPoint {
+    /// Scenario name of the failed point.
+    pub scenario: String,
+    /// Machine group the point belonged to.
+    pub machine: String,
+    /// Panic payload text (both attempts).
+    pub reason: String,
+}
+
+/// Per-machine-group execution stats for the `BENCH_*.json` artifacts.
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    /// Machine preset the group evaluated.
+    pub machine: String,
+    /// Grid points in the group.
+    pub points: usize,
+    /// Intra-machine workers the evaluation was sharded across.
+    pub workers: usize,
+    /// Collective cost-cache hits of this group's shared model.
+    pub hits: u64,
+    /// Flow simulations this group's shared model ran.
+    pub misses: u64,
+}
+
+/// A completed sweep: rows in expansion order plus shared-cache stats.
+/// Generic over the row type; the drivers alias it
+/// (`SweepOutcome = EngineOutcome<SweepRow>`,
+/// `ServeOutcome = EngineOutcome<ServeRow>`) and attach their CSV/JSON
+/// serializers as inherent impls on the aliases.
+#[derive(Debug, Clone)]
+pub struct EngineOutcome<R> {
+    /// One row per *feasible* grid point, in deterministic expansion
+    /// order. Points that fail the evaluation-time feasibility checks
+    /// (memory fit — only detectable when pricing) land in
+    /// [`EngineOutcome::infeasible`] instead of aborting the sweep;
+    /// static spec errors still fail the whole grid up front.
+    pub rows: Vec<R>,
+    /// `(scenario, reason)` for grid points that were infeasible at
+    /// evaluation time, in expansion order per machine group.
+    pub infeasible: Vec<(String, String)>,
+    /// Points whose evaluation panicked (after one bounded retry) — the
+    /// sweep records them and carries on instead of aborting.
+    pub failed: Vec<FailedPoint>,
+    /// Per-machine-group worker counts and cache stats (groups whose
+    /// points were all restored from a journal do not evaluate and are
+    /// absent).
+    pub groups: Vec<GroupStats>,
+    /// Collective cost-cache hits across all machines in the sweep.
+    pub cache_hits: u64,
+    /// Flow simulations actually run (including warm-store reuses,
+    /// which replace the simulation but keep the counters identical to
+    /// a cold run).
+    pub cache_misses: u64,
+    /// Whether the sweep was cancelled (SIGINT / `--interrupt-after`)
+    /// before every point completed.
+    pub interrupted: bool,
+    /// Grid points never evaluated (only non-zero when interrupted).
+    pub pending: usize,
+    /// Rows restored from the journal rather than re-evaluated.
+    pub resumed_rows: usize,
+    /// Infeasible markers restored from the journal.
+    pub resumed_infeasible: usize,
+    /// Failed markers restored from the journal.
+    pub resumed_failed: usize,
+    /// Cache answers served by a fitted α–β surrogate (a subset of
+    /// [`EngineOutcome::cache_hits`]).
+    pub surrogate_hits: u64,
+    /// Largest fitted max-relative-error among curves that answered via
+    /// surrogate (0 when no surrogate answered). By construction every
+    /// surrogate answer's error vs the piecewise curve is ≤ this.
+    pub surrogate_max_err: f64,
+    /// The surrogate acceptance bound in effect.
+    pub surrogate_bound: f64,
+    /// Cache misses answered from the persistent warm store instead of
+    /// a fresh flow simulation.
+    pub sim_reuses: u64,
+    /// Curves loaded from the persistent cache file (0 when disabled,
+    /// missing, or fingerprint-mismatched).
+    pub warm_curves_loaded: usize,
+}
+
+impl<R> EngineOutcome<R> {
+    /// Fraction of collective queries answered without running a flow
+    /// simulation: cache hits (exact, interpolated or surrogate) plus
+    /// warm-store reuses over all lookups. The warm-start acceptance
+    /// gate (`answer_share > 0.9` on a second run) reads this.
+    pub fn answer_share(&self) -> f64 {
+        let total = (self.cache_hits + self.cache_misses).max(1);
+        (self.cache_hits + self.sim_reuses) as f64 / total as f64
+    }
+
+    /// The shared `cost_cache` JSON block for `BENCH_*.json` artifacts:
+    /// the pre-existing hit/miss keys plus the surrogate and warm-start
+    /// telemetry (`check_bench.py` validates the internal consistency).
+    pub fn cost_cache_json(&self) -> Json {
+        let total = (self.cache_hits + self.cache_misses).max(1);
+        Json::obj(vec![
+            ("hits", Json::Num(self.cache_hits as f64)),
+            ("misses", Json::Num(self.cache_misses as f64)),
+            ("hit_rate", Json::Num(self.cache_hits as f64 / total as f64)),
+            ("surrogate_hits", Json::Num(self.surrogate_hits as f64)),
+            ("surrogate_share", Json::Num(self.surrogate_hits as f64 / total as f64)),
+            ("surrogate_max_err", Json::Num(self.surrogate_max_err)),
+            ("surrogate_bound", Json::Num(self.surrogate_bound)),
+            ("sim_reuses", Json::Num(self.sim_reuses as f64)),
+            ("warm_curves_loaded", Json::Num(self.warm_curves_loaded as f64)),
+            ("answer_share", Json::Num(self.answer_share())),
+        ])
+    }
+}
+
+/// What a point evaluation *is* — implemented once per sweep family
+/// (train, serve). The engine owns grouping, threading, warm/freeze,
+/// fault isolation, journaling and assembly; the family owns pricing.
+pub trait SweepFamily: Sync {
+    /// The per-point result row (journalable, CSV/JSON-serializable by
+    /// the driver).
+    type Row: JournalRow + Clone + Send;
+    /// The per-worker pricing state (a timeline wrapped around the
+    /// group's shared collective model), borrowing the group topology.
+    type Worker<'t>;
+
+    /// Sweep noun for error messages (`"sweep"` / `"serve sweep"`).
+    fn noun(&self) -> &'static str;
+
+    /// Build a fresh worker for `spec` over the group's shared model.
+    fn new_worker<'t>(
+        &self,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+        shared: &Arc<CollectiveModel<'t>>,
+    ) -> Result<Self::Worker<'t>>;
+
+    /// Replay one point's collective queries into the shared cache
+    /// (phase 1, sequential — see [`run_engine`]).
+    fn warm<'t>(
+        &self,
+        worker: &mut Self::Worker<'t>,
+        spec: &ScenarioSpec,
+        topo: &'t Topology,
+    ) -> Result<()>;
+
+    /// Price one point into a row (phase 2, over the frozen cache).
+    fn price<'t>(
+        &self,
+        worker: &mut Self::Worker<'t>,
+        spec: &ScenarioSpec,
+        asg: &[(String, String)],
+        topo: &'t Topology,
+        power: &PowerModel,
+    ) -> Result<Self::Row>;
+}
+
+/// Where grid points come from. The engine only ever asks for one point
+/// at a time (plus the machine grouping), so a streaming implementation
+/// keeps a 10⁶-point grid at O(workers) resident points.
+pub trait PointSource: Sync {
+    /// Number of grid points.
+    fn len(&self) -> usize;
+
+    /// Whether the grid is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Realize point `i` (owned — the caller may hold it across a
+    /// retry). Deterministic: the same `i` must always produce the same
+    /// point, or warm/evaluate phases would diverge.
+    fn point(&self, i: usize) -> Result<Point>;
+
+    /// Point indices grouped by machine, first-appearance order — the
+    /// machine-level parallelism units.
+    fn groups(&self) -> Result<Vec<(String, Vec<usize>)>>;
+}
+
+/// The classic materialized grid: a slice of prebuilt points.
+/// (Implemented for the *reference* type so `&points` coerces to
+/// `&dyn PointSource` — unsized `[Point]` itself cannot.)
+impl PointSource for &[Point] {
+    fn len(&self) -> usize {
+        <[Point]>::len(self)
+    }
+
+    fn point(&self, i: usize) -> Result<Point> {
+        Ok(self[i].clone())
+    }
+
+    fn groups(&self) -> Result<Vec<(String, Vec<usize>)>> {
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, (spec, _)) in self.iter().enumerate() {
+            match groups.iter_mut().find(|(m, _)| *m == spec.machine.name) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((spec.machine.name.clone(), vec![i])),
+            }
+        }
+        Ok(groups)
+    }
+}
+
+/// Shared evaluation context, one per engine run.
+struct EvalCtx<'a> {
+    source: &'a dyn PointSource,
+    cancel: &'a Cancel,
+    fault: Option<&'a FaultHook>,
+    journal: Option<&'a Mutex<Journal>>,
+    /// Points completed in *this* run (fresh, not restored).
+    done: &'a AtomicUsize,
+    interrupt_after: Option<usize>,
+    /// Parsed persistent cache file, when enabled and readable.
+    cache_file: Option<&'a CacheFileData>,
+    surrogate_bound: Option<f64>,
+}
+
+/// One machine group's shared pricing infrastructure, bundled so the
+/// evaluation helpers stay within argument-count lints.
+struct GroupCtx<'t, 'e> {
+    topo: &'t Topology,
+    power: &'e PowerModel,
+    shared: &'e Arc<CollectiveModel<'t>>,
+}
+
+/// One machine group's outcome.
+struct GroupOutcome<R> {
+    /// One entry per *pending* point in group order; `None` marks a
+    /// point skipped by cancellation.
+    outcomes: Vec<Option<PointOutcome<R>>>,
+    /// Collective cost-cache (hits, misses) of this group's model.
+    cache: (u64, u64),
+    /// Workers the evaluation phase was sharded across.
+    workers: usize,
+    /// `(surrogate hits, max fitted error among answering curves)`.
+    surrogate: (u64, f64),
+    /// Misses answered from the persistent warm store.
+    sim_reuses: u64,
+    /// Curves preloaded from the persistent cache file.
+    warm_loaded: usize,
+    /// Post-warm curve dump for the persistent cache file (only when
+    /// persistence is enabled).
+    dump: Option<MachineCurves>,
+}
+
+type GroupResult<R> = Result<GroupOutcome<R>>;
+
+/// Split `0..n` into at most `workers` contiguous, near-equal ranges.
+pub fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let w = workers.clamp(1, n.max(1));
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Extract a panic payload's text (workers and `catch_unwind` share it).
+pub fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic payload".into())
+}
+
+/// Evaluate one grid point with worker fault isolation: a panicking
+/// evaluation is caught, retried once on a freshly rebuilt worker (a
+/// panic may leave the timeline mid-reconfiguration), and recorded as a
+/// [`PointOutcome::Failed`] if the retry panics too. A `Config` error
+/// from pricing is the pre-existing infeasible path; any other error
+/// still aborts the sweep. The point is realized **once** and reused
+/// across the retry.
+fn eval_one<'t, F: SweepFamily>(
+    family: &F,
+    ctx: &EvalCtx<'_>,
+    gctx: &GroupCtx<'t, '_>,
+    i: usize,
+    worker: &mut Option<F::Worker<'t>>,
+) -> Result<PointOutcome<F::Row>> {
+    let (spec, asg) = ctx.source.point(i)?;
+    let mut attempt = 0;
+    loop {
+        if worker.is_none() {
+            *worker = Some(family.new_worker(&spec, gctx.topo, gctx.shared)?);
+        }
+        let w = worker.as_mut().expect("worker just built");
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<F::Row> {
+            if let Some(fault) = ctx.fault {
+                if fault(i, attempt) {
+                    panic!("injected fault at point {i} attempt {attempt}");
+                }
+            }
+            family.price(w, &spec, &asg, gctx.topo, gctx.power)
+        }));
+        match caught {
+            Ok(Ok(row)) => return Ok(PointOutcome::Row(Box::new(row))),
+            Ok(Err(BoosterError::Config(reason))) => {
+                return Ok(PointOutcome::Infeasible {
+                    scenario: spec.name.clone(),
+                    reason,
+                })
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                // The worker may be mid-mutation; rebuild before retry.
+                *worker = None;
+                let what = panic_text(payload.as_ref());
+                if attempt == 0 {
+                    attempt = 1;
+                    continue;
+                }
+                return Ok(PointOutcome::Failed {
+                    scenario: spec.name.clone(),
+                    machine: spec.machine.name.clone(),
+                    reason: format!("evaluation panicked (retried once): {what}"),
+                });
+            }
+        }
+    }
+}
+
+/// Evaluate the points in `idxs` (a contiguous slice of one group's
+/// pending point indices) through one per-worker family timeline wrapped
+/// around the group's shared collective model. The cache is already warm
+/// and frozen, so every collective query is a deterministic read — this
+/// is what makes sharding the loop across workers value- and
+/// stats-preserving. Each completed point is journaled and counted; a
+/// cancellation request stops dispatch, leaving the rest `None`.
+fn eval_points<'t, F: SweepFamily>(
+    family: &F,
+    ctx: &EvalCtx<'_>,
+    gctx: &GroupCtx<'t, '_>,
+    idxs: &[usize],
+) -> Result<Vec<Option<PointOutcome<F::Row>>>> {
+    let mut worker: Option<F::Worker<'t>> = None;
+    let mut out = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        if ctx.cancel.cancelled() {
+            out.push(None);
+            continue;
+        }
+        let outcome = eval_one(family, ctx, gctx, i, &mut worker)?;
+        if let Some(journal) = ctx.journal {
+            journal
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .append(i, &outcome)?;
+        }
+        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(limit) = ctx.interrupt_after {
+            if completed >= limit {
+                ctx.cancel.cancel();
+            }
+        }
+        out.push(Some(outcome));
+    }
+    Ok(out)
+}
+
+/// Evaluate one machine group's points through a single shared
+/// [`CollectiveModel`] (one topology, one cost cache). Two phases:
+///
+/// 1. **Warm (sequential).** Replay each point's collective queries in
+///    group order via [`SweepFamily::warm`]: the cache learns exactly
+///    the sizes a sequential run would learn, in the same order.
+/// 2. **Evaluate (sharded).** Freeze the cache and price the points on
+///    `workers` scoped threads, each with its own worker around the
+///    shared model. Frozen reads are deterministic, so rows are
+///    identical to a one-worker run.
+///
+/// `idxs` is the group's **full** point list; `pending` the subset that
+/// still needs evaluation (everything on a fresh run, the unjournaled
+/// tail on a resume). The warm phase deliberately replays **all** points
+/// — cost-cache interpolation curves are path-dependent, so skipping
+/// restored points would change what the cache learned and break the
+/// byte-identical-CSV resume contract; only the (expensive) evaluation
+/// phase skips them.
+fn eval_group<F: SweepFamily>(
+    family: &F,
+    ctx: &EvalCtx<'_>,
+    idxs: &[usize],
+    pending: &[usize],
+    workers: usize,
+) -> GroupResult<F::Row> {
+    let (first, _) = ctx.source.point(idxs[0])?;
+    let machine = first.machine.clone();
+    let topo = machine.build_topology()?;
+    let power = machine.power_model()?;
+    let shared = Arc::new(CollectiveModel::new(&topo));
+    if let Some(bound) = ctx.surrogate_bound {
+        shared.set_surrogate_bound(bound);
+    }
+    let mut warm_loaded = 0;
+    if let Some(data) = ctx.cache_file {
+        if let Some(mc) = data.machines.get(&machine.name) {
+            if mc.fingerprint == machine.fingerprint() {
+                shared.preload_warm_store(&mc.curves);
+                warm_loaded = mc.curves.len();
+            }
+        }
+    }
+    let chunks = chunk_ranges(pending.len(), workers);
+
+    // Phase 1: deterministic sequential warm-up of the shared cache.
+    let mut cancelled_in_warm = false;
+    {
+        let mut worker = family.new_worker(&first, &topo, &shared)?;
+        for &i in idxs {
+            if ctx.cancel.cancelled() {
+                cancelled_in_warm = true;
+                break;
+            }
+            let (spec, _) = ctx.source.point(i)?;
+            family.warm(&mut worker, &spec, &topo)?;
+        }
+    }
+    shared.freeze_cache(true);
+    let dump = ctx.cache_file.map(|_| MachineCurves {
+        fingerprint: machine.fingerprint(),
+        curves: shared.dump_curves(),
+    });
+    if cancelled_in_warm {
+        // A half-warm cache would price points differently than an
+        // uninterrupted run; evaluate nothing in this group.
+        return Ok(GroupOutcome {
+            outcomes: vec![None; pending.len()],
+            cache: shared.cache_stats(),
+            workers: chunks.len(),
+            surrogate: shared.surrogate_stats(),
+            sim_reuses: shared.sim_reuses(),
+            warm_loaded,
+            dump,
+        });
+    }
+
+    // Phase 2: shard the evaluation over the pending points.
+    let gctx = GroupCtx {
+        topo: &topo,
+        power: &power,
+        shared: &shared,
+    };
+    let outcomes: Vec<Result<Vec<Option<PointOutcome<F::Row>>>>> = if chunks.len() <= 1 {
+        vec![eval_points(family, ctx, &gctx, pending)]
+    } else {
+        std::thread::scope(|s| {
+            let gctx = &gctx;
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|r| {
+                    let slice = &pending[r.clone()];
+                    s.spawn(move || eval_points(family, ctx, gctx, slice))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| join_worker(&machine.name, h))
+                .collect()
+        })
+    };
+
+    let mut merged = Vec::with_capacity(pending.len());
+    for o in outcomes {
+        merged.extend(o?);
+    }
+    Ok(GroupOutcome {
+        outcomes: merged,
+        cache: shared.cache_stats(),
+        workers: chunks.len(),
+        surrogate: shared.surrogate_stats(),
+        sim_reuses: shared.sim_reuses(),
+        warm_loaded,
+        dump,
+    })
+}
+
+/// One machine group's work item: all its point indices plus the subset
+/// still pending evaluation.
+struct Work {
+    machine: String,
+    idxs: Vec<usize>,
+    pending: Vec<usize>,
+}
+
+/// Assemble the final outcome: slot evaluated outcomes into the grid,
+/// overlay the journal-restored ones, and walk the grid in expansion
+/// order so `rows`, `infeasible` and `failed` keep their deterministic
+/// order regardless of threading or resume history. Curve dumps destined
+/// for the persistent cache file are collected into `dumps`.
+fn assemble<R>(
+    restored: Vec<Option<PointOutcome<R>>>,
+    work: &[Work],
+    results: Vec<GroupResult<R>>,
+    interrupted: bool,
+    dumps: &mut Vec<(String, MachineCurves)>,
+) -> Result<EngineOutcome<R>> {
+    let mut resumed_rows = 0;
+    let mut resumed_infeasible = 0;
+    let mut resumed_failed = 0;
+    for r in restored.iter().flatten() {
+        match r {
+            PointOutcome::Row(_) => resumed_rows += 1,
+            PointOutcome::Infeasible { .. } => resumed_infeasible += 1,
+            PointOutcome::Failed { .. } => resumed_failed += 1,
+        }
+    }
+
+    let mut grid = restored;
+    let mut stats = Vec::with_capacity(work.len());
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    let mut surrogate_hits = 0u64;
+    let mut surrogate_max_err = 0f64;
+    let mut sim_reuses = 0u64;
+    let mut warm_curves_loaded = 0usize;
+    for (w, res) in work.iter().zip(results) {
+        let group = res?;
+        for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
+            grid[i] = outcome;
+        }
+        cache_hits += group.cache.0;
+        cache_misses += group.cache.1;
+        surrogate_hits += group.surrogate.0;
+        surrogate_max_err = surrogate_max_err.max(group.surrogate.1);
+        sim_reuses += group.sim_reuses;
+        warm_curves_loaded += group.warm_loaded;
+        if let Some(dump) = group.dump {
+            dumps.push((w.machine.clone(), dump));
+        }
+        stats.push(GroupStats {
+            machine: w.machine.clone(),
+            points: w.pending.len(),
+            workers: group.workers,
+            hits: group.cache.0,
+            misses: group.cache.1,
+        });
+    }
+
+    let mut rows = Vec::new();
+    let mut infeasible = Vec::new();
+    let mut failed = Vec::new();
+    let mut pending = 0;
+    for outcome in grid {
+        match outcome {
+            Some(PointOutcome::Row(row)) => rows.push(*row),
+            Some(PointOutcome::Infeasible { scenario, reason }) => {
+                infeasible.push((scenario, reason))
+            }
+            Some(PointOutcome::Failed {
+                scenario,
+                machine,
+                reason,
+            }) => failed.push(FailedPoint {
+                scenario,
+                machine,
+                reason,
+            }),
+            None => pending += 1,
+        }
+    }
+    Ok(EngineOutcome {
+        rows,
+        infeasible,
+        failed,
+        groups: stats,
+        cache_hits,
+        cache_misses,
+        interrupted,
+        pending,
+        resumed_rows,
+        resumed_infeasible,
+        resumed_failed,
+        surrogate_hits,
+        surrogate_max_err,
+        surrogate_bound: 0.0, // caller fills in the effective bound
+        sim_reuses,
+        warm_curves_loaded,
+    })
+}
+
+/// The sweep engine: group points by machine, skip groups whose points
+/// were all restored from the journal, evaluate the rest (machine groups
+/// on parallel scoped threads unless `opts.sequential`, each group's
+/// pending points sharded across workers over one pre-warmed frozen
+/// cache), and assemble everything in expansion order. When
+/// [`SweepOptions::cache_file`] is set, warm curves are loaded before the
+/// groups run and the merged post-warm dump is written back atomically.
+pub fn run_engine<F: SweepFamily>(
+    family: &F,
+    source: &dyn PointSource,
+    restored: Vec<Option<PointOutcome<F::Row>>>,
+    journal: Option<Mutex<Journal>>,
+    opts: &SweepOptions,
+) -> Result<EngineOutcome<F::Row>> {
+    if source.is_empty() {
+        return Err(BoosterError::Config(format!(
+            "{} with no grid points",
+            family.noun()
+        )));
+    }
+    assert_eq!(restored.len(), source.len(), "restored map must cover the grid");
+    let cache_data = opts.cache_file.as_deref().map(load_cache_file);
+    let groups = source.groups()?;
+    let work: Vec<Work> = groups
+        .into_iter()
+        .filter_map(|(machine, idxs)| {
+            let pending: Vec<usize> =
+                idxs.iter().copied().filter(|&i| restored[i].is_none()).collect();
+            // A fully-restored group re-simulates nothing — not even the
+            // warm phase (its cache would never be read).
+            (!pending.is_empty()).then_some(Work {
+                machine,
+                idxs,
+                pending,
+            })
+        })
+        .collect();
+    let workers = if opts.sequential {
+        1
+    } else if opts.workers == 0 {
+        auto_workers(work.len())
+    } else {
+        opts.workers
+    };
+    let done = AtomicUsize::new(0);
+    let ctx = EvalCtx {
+        source,
+        cancel: &opts.cancel,
+        fault: opts.fault.as_ref(),
+        journal: journal.as_ref(),
+        done: &done,
+        interrupt_after: opts.interrupt_after,
+        cache_file: cache_data.as_ref(),
+        surrogate_bound: opts.surrogate_bound,
+    };
+    let results: Vec<GroupResult<F::Row>> = if opts.sequential || work.len() <= 1 {
+        work.iter()
+            .map(|w| eval_group(family, &ctx, &w.idxs, &w.pending, workers))
+            .collect()
+    } else {
+        std::thread::scope(|s| {
+            let ctx = &ctx;
+            let handles: Vec<_> = work
+                .iter()
+                .map(|w| {
+                    (
+                        w.machine.as_str(),
+                        s.spawn(move || eval_group(family, ctx, &w.idxs, &w.pending, workers)),
+                    )
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|(machine, handle)| join_worker(machine, handle))
+                .collect()
+        })
+    };
+    let mut dumps = Vec::new();
+    let mut outcome = assemble(restored, &work, results, opts.cancel.cancelled(), &mut dumps)?;
+    let default_bound = crate::collectives::DEFAULT_SURROGATE_BOUND;
+    outcome.surrogate_bound = opts.surrogate_bound.unwrap_or(default_bound);
+    if let Some(path) = opts.cache_file.as_deref() {
+        let mut data = cache_data.unwrap_or_default();
+        for (name, mc) in dumps {
+            data.machines.insert(name, mc);
+        }
+        save_cache_file(path, &data)?;
+    }
+    Ok(outcome)
+}
+
+/// Intra-machine workers to give each of `groups` machine groups:
+/// the host's cores spread across the groups, at least one each.
+pub fn auto_workers(groups: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cores / groups.max(1)).max(1)
+}
+
+/// Resolve a worker's result, turning a panic into a simulation error
+/// (carrying the machine and the panic message) instead of poisoning the
+/// whole process.
+pub fn join_worker<T>(
+    machine: &str,
+    handle: std::thread::ScopedJoinHandle<'_, Result<T>>,
+) -> Result<T> {
+    match handle.join() {
+        Ok(result) => result,
+        Err(payload) => {
+            let what = panic_text(payload.as_ref());
+            Err(BoosterError::Sim(format!(
+                "sweep worker for machine '{machine}' panicked: {what}"
+            )))
+        }
+    }
+}
+
+/// One machine's persisted curves: the preset's spec fingerprint (so a
+/// hardware-number change invalidates the entry) plus the curve records.
+#[derive(Debug, Clone)]
+pub struct MachineCurves {
+    /// [`crate::scenario::spec::MachineSpec::fingerprint`] at save time.
+    pub fingerprint: u64,
+    /// Warm curves with their fitted surrogates.
+    pub curves: Vec<CurveRecord>,
+}
+
+/// Parsed contents of `results/cost_cache.json`.
+#[derive(Debug, Clone, Default)]
+pub struct CacheFileData {
+    /// Per-machine curve sets, keyed by preset name.
+    pub machines: BTreeMap<String, MachineCurves>,
+}
+
+/// Load and validate a persistent cost-cache file. **Any** problem —
+/// missing file, unreadable, malformed JSON, wrong schema version, a bad
+/// machine entry — yields an empty dataset: the cache is a pure
+/// accelerator, so the only safe response to suspect contents is to
+/// ignore and rebuild them (fingerprint mismatches for *individual*
+/// machines are handled per-group in the engine).
+pub fn load_cache_file(path: &Path) -> CacheFileData {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return CacheFileData::default(),
+    };
+    parse_cache_file(&text).unwrap_or_default()
+}
+
+fn parse_cache_file(text: &str) -> Option<CacheFileData> {
+    let j = Json::parse(text).ok()?;
+    let schema = j.get("schema")?.as_usize()?;
+    if schema != COST_CACHE_SCHEMA_VERSION as usize {
+        return None;
+    }
+    let machines = match j.get("machines")? {
+        Json::Obj(m) => m,
+        _ => return None,
+    };
+    let mut out = CacheFileData::default();
+    for (name, entry) in machines {
+        let fingerprint = u64::from_str_radix(entry.get("fingerprint")?.as_str()?, 16).ok()?;
+        let mut curves = Vec::new();
+        for c in entry.get("curves")?.as_arr()? {
+            curves.push(CurveRecord::from_json(c)?);
+        }
+        out.machines.insert(name.clone(), MachineCurves { fingerprint, curves });
+    }
+    Some(out)
+}
+
+/// Serialize and atomically write the persistent cost-cache file.
+pub fn save_cache_file(path: &Path, data: &CacheFileData) -> Result<()> {
+    let machines = data
+        .machines
+        .iter()
+        .map(|(name, mc)| {
+            (
+                name.as_str(),
+                Json::obj(vec![
+                    ("fingerprint", Json::Str(format!("{:016x}", mc.fingerprint))),
+                    ("curves", Json::Arr(mc.curves.iter().map(CurveRecord::to_json).collect())),
+                ]),
+            )
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("schema", Json::Num(COST_CACHE_SCHEMA_VERSION as f64)),
+        ("machines", Json::obj(machines)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                BoosterError::Artifact(format!("create {}: {e}", dir.display()))
+            })?;
+        }
+    }
+    crate::util::atomic_write(path, &j.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_contiguously() {
+        let ranges = chunk_ranges(8, 3);
+        assert_eq!(ranges, vec![0..3, 3..6, 6..8]);
+        assert_eq!(chunk_ranges(2, 8).len(), 2);
+        assert_eq!(chunk_ranges(0, 4), vec![0..0]);
+    }
+
+    #[test]
+    fn cache_file_round_trips_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("booster_cachefile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cost_cache.json");
+        let mut data = CacheFileData::default();
+        data.machines.insert(
+            "selene".into(),
+            MachineCurves {
+                fingerprint: 0xdead_beef_0102_0304,
+                curves: vec![CurveRecord {
+                    fp: 42,
+                    algo: 1,
+                    points: vec![(1e6, 1.5e-3), (2e6, 2.5e-3)],
+                    surrogate: Some((5e-4, 1e-9, 0.0)),
+                }],
+            },
+        );
+        save_cache_file(&path, &data).unwrap();
+        let back = load_cache_file(&path);
+        let mc = &back.machines["selene"];
+        assert_eq!(mc.fingerprint, 0xdead_beef_0102_0304);
+        assert_eq!(mc.curves.len(), 1);
+        assert_eq!(mc.curves[0].fp, 42);
+        assert_eq!(mc.curves[0].algo, 1);
+        // f64s survive the JSON round trip bit-exactly (shortest
+        // round-trip printing) — the warm-store reuse contract.
+        assert_eq!(mc.curves[0].points, vec![(1e6, 1.5e-3), (2e6, 2.5e-3)]);
+        assert_eq!(mc.curves[0].surrogate, Some((5e-4, 1e-9, 0.0)));
+
+        // Garbage and schema mismatches are ignored, never errors.
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(load_cache_file(&path).machines.is_empty());
+        std::fs::write(&path, "{\"schema\": 999, \"machines\": {}}").unwrap();
+        assert!(load_cache_file(&path).machines.is_empty());
+        assert!(load_cache_file(&dir.join("missing.json")).machines.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
