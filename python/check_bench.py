@@ -7,7 +7,7 @@ checked the same way everywhere and a mode's failure pinpoints itself.
 
 Usage:
     check_bench.py results/BENCH_sweep.json [--mode hybrid|3d|zero|interrupt|resume|fault|
-                                                     bigsweep|warm]
+                                                     bigsweep|warm|perf]
                    [--degenerate-csv CONTROL.csv --sweep-csv SWEEP.csv]
                    [--identical-csv CONTROL.csv] [--min-points N]
     check_bench.py results/BENCH_serve.json [--mode serve|interrupt|resume|fault]
@@ -38,7 +38,11 @@ Mode checks add the smoke-specific assertions (see `--mode`):
   * bigsweep — a streamed big grid completed whole (>= --min-points,
     nothing pending or failed);
   * warm     — a persistent-cache warm start answered >90% of collective
-    cost queries without fresh simulation, surrogate errors in bound.
+    cost queries without fresh simulation, surrogate errors in bound;
+  * perf     — the deduplicated parallel warm reported its telemetry
+    (warm/eval wall-clock, 0 < dedup_ratio <= 1) and, with
+    --identical-csv, the dynamic-scheduler CSV is byte-identical to the
+    static-scheduler control.
 """
 
 import argparse
@@ -113,6 +117,18 @@ def check_cost_cache(cc, where):
             f"{where}: surrogate answered with error {cc['surrogate_max_err']} "
             f"above the fitted bound {cc['surrogate_bound']}",
         )
+    # Dedup-warm telemetry (sweep engine artifacts): consistent whenever
+    # present; mode perf additionally requires it to be non-trivial.
+    if "dedup_ratio" in cc:
+        for k in ("total_queries", "unique_queries", "warm_ms", "eval_ms"):
+            require(k in cc, f"{where}: cost_cache missing '{k}'")
+        tq, uq = cc["total_queries"], cc["unique_queries"]
+        require(tq >= 0 and uq >= 0 and (tq == 0 or uq <= tq),
+                f"{where}: warm query counters inconsistent: {cc}")
+        require(0 < cc["dedup_ratio"] <= 1,
+                f"{where}: dedup_ratio outside (0, 1]: {cc}")
+        require(cc["warm_ms"] >= 0 and cc["eval_ms"] >= 0,
+                f"{where}: negative phase wall-clock: {cc}")
 
 
 def check_sweep(d, path):
@@ -517,6 +533,47 @@ def mode_warm(d):
     )
 
 
+def mode_perf(d, identical_csv, sweep_csv):
+    """The sweep hot-path leg: the deduplicated parallel warm reported
+    its telemetry (per-phase wall-clock, query dedup), and — when the
+    static-scheduler rerun's CSV is given — the dynamic work-stealing
+    artifact is byte-identical to it."""
+    cc = d["cost_cache"]
+    for k in ("total_queries", "unique_queries", "dedup_ratio",
+              "warm_ms", "eval_ms"):
+        require(k in cc, f"perf: cost_cache missing '{k}'")
+    require(cc["warm_ms"] > 0, f"perf: warm phase reported no wall-clock: {cc}")
+    require(cc["eval_ms"] > 0, f"perf: eval phase reported no wall-clock: {cc}")
+    require(cc["total_queries"] > 0,
+            f"perf: the dedup pipeline recorded no warm queries: {cc}")
+    require(0 < cc["unique_queries"] <= cc["total_queries"],
+            f"perf: unique_queries outside (0, total_queries]: {cc}")
+    require(0 < cc["dedup_ratio"] <= 1,
+            f"perf: dedup_ratio outside (0, 1]: {cc}")
+    require(
+        math.isclose(cc["dedup_ratio"],
+                     cc["unique_queries"] / cc["total_queries"],
+                     rel_tol=1e-9, abs_tol=1e-9),
+        f"perf: dedup_ratio != unique_queries/total_queries: {cc}",
+    )
+    if identical_csv:
+        with open(identical_csv, "rb") as f:
+            control = f.read()
+        with open(sweep_csv, "rb") as f:
+            dynamic = f.read()
+        require(
+            control == dynamic,
+            f"perf: {sweep_csv} is not byte-identical to the static-scheduler "
+            f"control {identical_csv}",
+        )
+        print(f"check_bench: dynamic CSV byte-identical to {identical_csv}")
+    print(
+        f"check_bench: perf OK (dedup {cc['unique_queries']}/"
+        f"{cc['total_queries']} = {cc['dedup_ratio']:.3f}, "
+        f"warm {cc['warm_ms']:.1f} ms, eval {cc['eval_ms']:.1f} ms)"
+    )
+
+
 def _fixture():
     """A minimal schema-valid interrupted sweep with one failed point."""
     row = {k: 1.0 for k in ROW_KEYS}
@@ -546,6 +603,8 @@ def _fixture():
             "surrogate_hits": 1, "surrogate_share": 1 / 3,
             "surrogate_max_err": 0.001, "surrogate_bound": 0.01,
             "sim_reuses": 1, "warm_curves_loaded": 2, "answer_share": 1.0,
+            "total_queries": 6, "unique_queries": 3, "dedup_ratio": 0.5,
+            "warm_ms": 12.5, "eval_ms": 40.0,
         },
     }
 
@@ -651,6 +710,22 @@ def self_test():
     must_fail(cold, "warm start without loaded curves",
               lambda d, _where: mode_warm(d))
 
+    # Dedup-warm perf telemetry.
+    mode_perf(good, None, None)
+
+    lazy_warm = copy.deepcopy(good)
+    lazy_warm["cost_cache"]["warm_ms"] = 0.0
+    must_fail(lazy_warm, "perf without warm wall-clock",
+              lambda d, _where: mode_perf(d, None, None))
+
+    over_unity = copy.deepcopy(good)
+    over_unity["cost_cache"]["dedup_ratio"] = 1.5
+    must_fail(over_unity, "dedup_ratio above 1")
+
+    lying_dedup = copy.deepcopy(good)
+    lying_dedup["cost_cache"]["unique_queries"] = 99  # > total_queries 6
+    must_fail(lying_dedup, "unique_queries above total_queries")
+
     big = {
         "params": [{"key": "a", "values": ["1", "2"]},
                    {"key": "b", "values": ["1", "2"]}],
@@ -663,7 +738,7 @@ def self_test():
     must_fail(cut, "bigsweep left points pending",
               lambda d, _where: mode_bigsweep(d, 4))
 
-    print("check_bench: self-test OK (4 good + 11 rejected fixtures)")
+    print("check_bench: self-test OK (5 good + 14 rejected fixtures)")
 
 
 def mode_crossover(path):
@@ -697,7 +772,7 @@ def main():
     ap.add_argument("file", nargs="?", help="BENCH_*.json or crossover.csv to validate")
     ap.add_argument("--mode", choices=[
         "hybrid", "3d", "zero", "crossover", "interrupt", "resume", "fault",
-        "serve", "bigsweep", "warm",
+        "serve", "bigsweep", "warm", "perf",
     ])
     ap.add_argument("--min-points", type=int, default=100_000,
                     help="bigsweep mode: required minimum grid product")
@@ -752,6 +827,8 @@ def main():
             mode_bigsweep(d, args.min_points)
         elif args.mode == "warm":
             mode_warm(d)
+        elif args.mode == "perf":
+            mode_perf(d, args.identical_csv, args.sweep_csv)
     elif bench == "serve":
         rows = check_serve(d, args.file)
         if args.mode == "serve":
@@ -764,6 +841,8 @@ def main():
             mode_fault(d)
         elif args.mode == "warm":
             mode_warm(d)
+        elif args.mode == "perf":
+            mode_perf(d, args.identical_csv, args.sweep_csv)
     elif bench == "runtime_hotpath":
         check_hotpath(d, args.file)
     else:

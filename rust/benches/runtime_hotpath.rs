@@ -405,6 +405,84 @@ fn main() {
         ]),
     ));
 
+    // --- dedup warm ladder (§Perf, ISSUE 9) --------------------------------
+    // The sweep engine's warm phase: classic sequential direct warm vs
+    // the deduplicated pipeline at 1 and 4 simulation workers, on a grid
+    // whose schedule axis duplicates every collective query (schedule
+    // never changes comm volume, so dedup_ratio must drop below 1). The
+    // pipeline simulates only the unique misses, so even at 1 worker it
+    // must not lose to the sequential build — the ladder pins that and
+    // reports the fan-out speedup at 4.
+    use booster::scenario::sweep::{parse_params, prepare, run_points_with, SweepOptions};
+    let ladder_base = booster::scenario::presets::default_scenario("juwels_booster").unwrap();
+    let ladder_axes: Vec<String> = ["nodes=4", "8", "16", "schedule=gpipe", "1f1b"]
+        .iter()
+        .map(|x| x.to_string())
+        .collect();
+    let ladder_axes = parse_params(&ladder_axes).unwrap();
+    let ladder_points = prepare(&ladder_base, &ladder_axes).unwrap();
+    let warm_opts = |sequential: bool, workers: usize| SweepOptions {
+        workers: workers.max(1),
+        warm_workers: workers,
+        sequential,
+        ..SweepOptions::default()
+    };
+    let seq_out = run_points_with(&ladder_points, &warm_opts(true, 0)).unwrap();
+    let par1_out = run_points_with(&ladder_points, &warm_opts(false, 1)).unwrap();
+    let par4_out = run_points_with(&ladder_points, &warm_opts(false, 4)).unwrap();
+    assert_eq!(par1_out.to_csv(), seq_out.to_csv(), "dedup warm must not change a byte");
+    assert_eq!(par4_out.to_csv(), seq_out.to_csv(), "fan-out must not change a byte");
+    assert!(
+        par4_out.dedup_ratio() < 1.0,
+        "the schedule axis must duplicate queries: ratio {}",
+        par4_out.dedup_ratio()
+    );
+    // Generous noise margin: the pipeline's record+plan overhead is
+    // microseconds against millisecond flow simulations.
+    assert!(
+        par1_out.warm_ms <= seq_out.warm_ms * 1.5,
+        "dedup warm at 1 worker must not lose to sequential ({:.1} ms vs {:.1} ms)",
+        par1_out.warm_ms,
+        seq_out.warm_ms
+    );
+    let warm_speedup = seq_out.warm_ms / par4_out.warm_ms.max(1e-9);
+    let mut t = Table::new(&["sweep warm phase", "warm time", "dedup"])
+        .with_title("dedup warm ladder: 6-point grid, duplicated schedule axis");
+    t.row(&[
+        "sequential direct".into(),
+        format!("{:.2} ms", seq_out.warm_ms),
+        "(oracle)".into(),
+    ]);
+    t.row(&[
+        "dedup pipeline, 1 worker".into(),
+        format!("{:.2} ms", par1_out.warm_ms),
+        format!(
+            "{}/{} unique ({:.0}%)",
+            par1_out.unique_queries,
+            par1_out.total_queries,
+            100.0 * par1_out.dedup_ratio()
+        ),
+    ]);
+    t.row(&[
+        "dedup pipeline, 4 workers".into(),
+        format!("{:.2} ms", par4_out.warm_ms),
+        format!("{warm_speedup:.1}x vs sequential"),
+    ]);
+    out.push_str(&t.render());
+    json.push((
+        "warm_ladder",
+        Json::obj(vec![
+            ("grid_points", Json::Num(ladder_points.len() as f64)),
+            ("total_queries", Json::Num(par4_out.total_queries as f64)),
+            ("unique_queries", Json::Num(par4_out.unique_queries as f64)),
+            ("dedup_ratio", Json::Num(par4_out.dedup_ratio())),
+            ("sequential_warm_ms", Json::Num(seq_out.warm_ms)),
+            ("parallel1_warm_ms", Json::Num(par1_out.warm_ms)),
+            ("parallel4_warm_ms", Json::Num(par4_out.warm_ms)),
+            ("speedup_at_4", Json::Num(warm_speedup)),
+        ]),
+    ));
+
     print!("{out}");
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/runtime_hotpath.txt", &out).ok();

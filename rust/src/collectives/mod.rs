@@ -134,7 +134,7 @@ impl Algo {
         }
     }
 
-    fn cache_idx(self) -> u8 {
+    pub(crate) fn cache_idx(self) -> u8 {
         match self {
             Algo::Ring => 0,
             Algo::HalvingDoubling => 1,
@@ -583,6 +583,46 @@ struct ModelScratch {
     aux: Vec<Flow>,
 }
 
+/// One recorded `allreduce_time` query — the unit of the sweep's
+/// deduplicated warm pipeline (§Warming in `net/README.md`). Captured in
+/// recording mode ([`CollectiveModel::record_queries`]), planned into a
+/// minimal simulation set ([`CollectiveModel::plan_warm`]), and replayed
+/// through the real cache ([`CollectiveModel::replay_warm`]).
+#[derive(Debug, Clone)]
+pub struct WarmQuery {
+    /// [`gpu_set_fingerprint`] of the participating GPUs.
+    pub fp: u64,
+    /// Allreduce algorithm.
+    pub algo: Algo,
+    /// Payload bytes.
+    pub bytes: f64,
+    /// The participating GPUs (needed to run the simulation later).
+    pub gpus: Vec<GpuId>,
+}
+
+impl WarmQuery {
+    /// The dedup key: `(gpu-set fingerprint, algo, exact byte size)`.
+    /// Bytes compare as bit patterns — two warm queries either came from
+    /// the same arithmetic (identical bits) or are different sizes.
+    pub fn key(&self) -> (u64, u8, u64) {
+        (self.fp, self.algo.cache_idx(), self.bytes.to_bits())
+    }
+}
+
+/// A warm phase plan: the minimal ordered simulation set plus the query
+/// counts behind the `BENCH_*.json` `dedup_ratio` telemetry.
+#[derive(Debug, Default)]
+pub struct WarmPlan {
+    /// First occurrence of every query that the sequential warm would
+    /// have *simulated* (shadow-replay misses not answered by the warm
+    /// store), in stream order. These fan out over warm workers.
+    pub sims: Vec<WarmQuery>,
+    /// Total recorded queries (the multiset size).
+    pub total_queries: u64,
+    /// Distinct dedup keys among them.
+    pub unique_queries: u64,
+}
+
 /// Collective cost model bound to a topology, carrying the memoized
 /// route table and the pattern-level cost cache. `Send + Sync` (§Sync):
 /// sweep workers share one model — and one warm cache — across scoped
@@ -603,6 +643,12 @@ pub struct CollectiveModel<'a> {
     warm: Mutex<HashMap<(u64, u8), SizeCurve>>,
     /// Misses answered from the warm store instead of a simulation.
     sim_reuses: AtomicU64,
+    /// Recording mode ([`CollectiveModel::record_queries`]): while set,
+    /// `allreduce_time` captures its query and returns a launch-overhead
+    /// dummy — no cache traffic, no simulation.
+    recording: AtomicBool,
+    /// Queries captured while recording, in call order.
+    recorded: Mutex<Vec<WarmQuery>>,
 }
 
 impl<'a> CollectiveModel<'a> {
@@ -616,6 +662,8 @@ impl<'a> CollectiveModel<'a> {
             frozen: AtomicBool::new(false),
             warm: Mutex::new(HashMap::new()),
             sim_reuses: AtomicU64::new(0),
+            recording: AtomicBool::new(false),
+            recorded: Mutex::new(Vec::new()),
         }
     }
 
@@ -671,6 +719,18 @@ impl<'a> CollectiveModel<'a> {
             return Ok(LAUNCH_OVERHEAD);
         }
         let fp = gpu_set_fingerprint(gpus);
+        if self.recording.load(Ordering::Relaxed) {
+            lock(&self.recorded).push(WarmQuery {
+                fp,
+                algo,
+                bytes,
+                gpus: gpus.to_vec(),
+            });
+            // The dummy is safe because every warm path derives its query
+            // *set* (dedup signatures, loop bounds) independently of the
+            // returned times — see `record_queries`.
+            return Ok(LAUNCH_OVERHEAD);
+        }
         if let Some(t) = self.cache.lookup(fp, algo, bytes) {
             return Ok(t + LAUNCH_OVERHEAD);
         }
@@ -793,6 +853,100 @@ impl<'a> CollectiveModel<'a> {
             Algo::HalvingDoubling => self.hd_time(sc, gpus, bytes),
             Algo::Hierarchical => self.hierarchical_time(sc, gpus, bytes),
         })
+    }
+
+    /// Run `f` in recording mode: every `allreduce_time` it issues is
+    /// captured as a [`WarmQuery`] and answered with a launch-overhead
+    /// dummy — no cache traffic, no warm-store probe, no simulation.
+    /// Returns the ordered query stream alongside `f`'s result.
+    ///
+    /// **Safe only for query enumeration**: the dummies are fine because
+    /// every warm path ([`crate::train::hybrid`]'s `warm_comm`,
+    /// [`crate::train::zero::warm_queries`], [`crate::serve::decode`]'s
+    /// `warm_comm`) discards the returned times and derives its query set
+    /// — replica/chain dedup signatures, batch caps, loop bounds — from
+    /// the layout alone. Not reentrant; the sweep records from a single
+    /// thread (its warm enumeration is sequential by design).
+    pub fn record_queries<R>(
+        &self,
+        f: impl FnOnce() -> Result<R>,
+    ) -> Result<(R, Vec<WarmQuery>)> {
+        self.recording.store(true, Ordering::Relaxed);
+        let r = f();
+        self.recording.store(false, Ordering::Relaxed);
+        let queries = std::mem::take(&mut *lock(&self.recorded));
+        Ok((r?, queries))
+    }
+
+    /// Plan the deduplicated warm: dry-replay the ordered query stream
+    /// through a private shadow cache to find exactly the queries the
+    /// sequential warm would have *simulated*, deduplicated by
+    /// [`WarmQuery::key`]. Valid because `SizeCurve::eval`'s hit/miss
+    /// decision depends only on the byte *positions* already in a curve
+    /// (exact match, trusted span, segment sparsity), never on the cached
+    /// seconds — so a shadow replay with dummy values walks the same
+    /// hit/miss sequence as the real one. Shadow misses the warm store
+    /// can answer are excluded from `sims` (the real replay reuses the
+    /// stored sample, preserving `sim_reuses`).
+    pub fn plan_warm(&self, queries: &[WarmQuery]) -> WarmPlan {
+        let shadow = CostCache::default();
+        let mut seen = std::collections::HashSet::new();
+        let mut need = std::collections::HashSet::new();
+        let mut plan = WarmPlan {
+            total_queries: queries.len() as u64,
+            ..WarmPlan::default()
+        };
+        for q in queries {
+            seen.insert(q.key());
+            if shadow.lookup(q.fp, q.algo, q.bytes).is_none() {
+                if self.warm_sample(q.fp, q.algo, q.bytes).is_none() && need.insert(q.key()) {
+                    plan.sims.push(q.clone());
+                }
+                shadow.insert(q.fp, q.algo, q.bytes, 0.0);
+            }
+        }
+        plan.unique_queries = seen.len() as u64;
+        plan
+    }
+
+    /// Simulate one planned warm query, returning the **raw** sample (no
+    /// [`LAUNCH_OVERHEAD`]) — the exact value `allreduce_time` would have
+    /// inserted on a miss. Thread-safe (pooled scratch arenas); the warm
+    /// workers fan these out.
+    pub fn simulate_warm_query(&self, q: &WarmQuery) -> Result<f64> {
+        self.simulate_algo(&q.gpus, q.bytes, q.algo)
+    }
+
+    /// Replay one recorded query through the **real** cache logic:
+    /// lookup (bumping hit/miss/surrogate counters exactly as the
+    /// sequential warm did), then on a miss a warm-store probe (bumping
+    /// `sim_reuses`) or the presimulated sample from `presim` (keyed by
+    /// [`WarmQuery::key`]; a missing entry falls back to an inline
+    /// simulation), then insert-unless-frozen. Replaying the full stream
+    /// in order leaves curves, surrogates and every counter bit-identical
+    /// to the sequential warm.
+    pub fn replay_warm(
+        &self,
+        q: &WarmQuery,
+        presim: &HashMap<(u64, u8, u64), f64>,
+    ) -> Result<()> {
+        if self.cache.lookup(q.fp, q.algo, q.bytes).is_some() {
+            return Ok(());
+        }
+        let t = match self.warm_sample(q.fp, q.algo, q.bytes) {
+            Some(t) => {
+                self.sim_reuses.fetch_add(1, Ordering::Relaxed);
+                t
+            }
+            None => match presim.get(&q.key()) {
+                Some(&t) => t,
+                None => self.simulate_algo(&q.gpus, q.bytes, q.algo)?,
+            },
+        };
+        if !self.frozen.load(Ordering::Relaxed) {
+            self.cache.insert(q.fp, q.algo, q.bytes, t);
+        }
+        Ok(())
     }
 
     /// Grow `flows` to at least `n` reusable entries. Never shrinks: the
@@ -1779,5 +1933,135 @@ mod tests {
         let (hits, misses) = warm.cache_stats();
         let (ch, cm) = cold.cache_stats();
         assert_eq!((hits, misses), (ch, cm), "counters evolve exactly as in a cold run");
+    }
+
+    // ---- §Warming: recording / plan / replay ---------------------------
+
+    #[test]
+    fn recording_captures_queries_without_touching_the_cache() {
+        let t = topo();
+        let m = CollectiveModel::new(&t);
+        let gpus = t.first_gpus(16).unwrap();
+        let one = t.first_gpus(1).unwrap();
+        let ((), queries) = m
+            .record_queries(|| {
+                // Degenerate calls are answered before the gate: never
+                // recorded, exactly as they never touch the cache.
+                assert_eq!(m.allreduce_time(&one, 1e8, Algo::Ring)?, LAUNCH_OVERHEAD);
+                assert_eq!(m.allreduce_time(&gpus, 0.0, Algo::Ring)?, LAUNCH_OVERHEAD);
+                // Real queries come back as launch-overhead dummies.
+                assert_eq!(m.allreduce_time(&gpus, 1e8, Algo::Ring)?, LAUNCH_OVERHEAD);
+                assert_eq!(m.allreduce_time(&gpus, 1e8, Algo::Ring)?, LAUNCH_OVERHEAD);
+                assert_eq!(
+                    m.allreduce_time(&gpus, 2e8, Algo::Hierarchical)?,
+                    LAUNCH_OVERHEAD
+                );
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(m.cache_stats(), (0, 0), "recording must not touch the cache");
+        assert_eq!(queries.len(), 3, "duplicates recorded verbatim, degenerates not");
+        let fp = gpu_set_fingerprint(&gpus);
+        assert_eq!(queries[0].key(), (fp, 0, 1e8f64.to_bits()));
+        assert_eq!(queries[0].key(), queries[1].key());
+        assert_eq!(queries[2].key(), (fp, 2, 2e8f64.to_bits()));
+        assert_eq!(queries[2].gpus, gpus);
+        // Recording is off again: a normal call simulates and learns.
+        let real = m.allreduce_time(&gpus, 1e8, Algo::Ring).unwrap();
+        assert!(real > LAUNCH_OVERHEAD);
+        assert_eq!(m.cache_stats(), (0, 1));
+    }
+
+    #[test]
+    fn dedup_warm_pipeline_matches_sequential_bit_for_bit() {
+        // The tentpole contract in miniature: record → plan → simulate
+        // unique queries → replay leaves curves, surrogates and every
+        // counter identical to issuing the same stream directly.
+        let t = topo();
+        let gpus16 = t.first_gpus(16).unwrap();
+        let gpus8 = t.first_gpus(8).unwrap();
+        // A stream with exact duplicates, an in-span interpolated size
+        // (1.5e8: a *hit* sequentially, so never inserted) and two
+        // patterns × two algorithms.
+        let cases: [(&[GpuId], f64, Algo); 7] = [
+            (&gpus16, 1e8, Algo::Ring),
+            (&gpus16, 2e8, Algo::Ring),
+            (&gpus16, 1.5e8, Algo::Ring),
+            (&gpus16, 1e8, Algo::Ring),
+            (&gpus8, 1e6, Algo::HalvingDoubling),
+            (&gpus8, 1e6, Algo::HalvingDoubling),
+            (&gpus16, 2e8, Algo::Ring),
+        ];
+        let issue = |m: &CollectiveModel| -> Result<()> {
+            for &(g, b, a) in &cases {
+                m.allreduce_time(g, b, a)?;
+            }
+            Ok(())
+        };
+
+        let seq = CollectiveModel::new(&t);
+        issue(&seq).unwrap();
+
+        let par = CollectiveModel::new(&t);
+        let ((), queries) = par.record_queries(|| issue(&par)).unwrap();
+        let plan = par.plan_warm(&queries);
+        assert_eq!(plan.total_queries, 7);
+        assert_eq!(plan.unique_queries, 4);
+        // 1.5e8 is answered by interpolation in the shadow replay too,
+        // so only the 3 genuinely simulated sizes are planned.
+        assert_eq!(plan.sims.len(), 3, "hit-destined queries must not be planned");
+        let mut presim = HashMap::new();
+        for q in &plan.sims {
+            presim.insert(q.key(), par.simulate_warm_query(q).unwrap());
+        }
+        for q in &queries {
+            par.replay_warm(q, &presim).unwrap();
+        }
+
+        assert_eq!(par.dump_curves(), seq.dump_curves(), "curves + surrogates");
+        assert_eq!(par.cache_stats(), seq.cache_stats(), "hit/miss counters");
+        assert_eq!(par.surrogate_stats(), seq.surrogate_stats());
+        assert_eq!(par.sim_reuses(), seq.sim_reuses());
+        // And the frozen caches answer alike.
+        seq.freeze_cache(true);
+        par.freeze_cache(true);
+        assert_eq!(
+            seq.allreduce_time(&gpus16, 1.7e8, Algo::Ring).unwrap(),
+            par.allreduce_time(&gpus16, 1.7e8, Algo::Ring).unwrap()
+        );
+    }
+
+    #[test]
+    fn warm_plan_skips_queries_the_warm_store_answers() {
+        // Store-answerable misses are excluded from the simulation plan;
+        // the replay reuses the stored sample and counts it, exactly as
+        // the sequential warm would.
+        let t = topo();
+        let gpus = t.first_gpus(16).unwrap();
+        let cold = CollectiveModel::new(&t);
+        cold.allreduce_time(&gpus, 1e8, Algo::Ring).unwrap();
+        let dump = cold.dump_curves();
+
+        let m = CollectiveModel::new(&t);
+        m.preload_warm_store(&dump);
+        let ((), queries) = m
+            .record_queries(|| {
+                m.allreduce_time(&gpus, 1e8, Algo::Ring)?; // store-answerable
+                m.allreduce_time(&gpus, 9e8, Algo::Ring)?; // fresh simulation
+                Ok(())
+            })
+            .unwrap();
+        let plan = m.plan_warm(&queries);
+        assert_eq!(plan.sims.len(), 1, "stored sample must not be re-simulated");
+        assert_eq!(plan.sims[0].bytes, 9e8);
+        let mut presim = HashMap::new();
+        for q in &plan.sims {
+            presim.insert(q.key(), m.simulate_warm_query(q).unwrap());
+        }
+        for q in &queries {
+            m.replay_warm(q, &presim).unwrap();
+        }
+        assert_eq!(m.sim_reuses(), 1, "replay reuses the stored sample");
+        assert_eq!(m.cache_stats(), (0, 2), "both misses learned");
     }
 }

@@ -219,6 +219,14 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
         )
         .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
+        .int_flag("warm-workers", 0, "warm-simulation workers (0 = match --workers)")
+        .int_flag(
+            "journal-batch",
+            0,
+            "journal group-commit batch: fsync every N rows or 100 ms (0 = auto)",
+        )
+        .str_flag("scheduler", "dynamic", "point scheduler (dynamic = work stealing | static)")
+        .bool_flag("progress", false, "print done/total, points/s, ETA to stderr while sweeping")
         .int_flag(
             "interrupt-after",
             0,
@@ -286,6 +294,7 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     sweep::sigint::install();
     let interrupt_after = flags.get_usize("interrupt-after");
     let bound = flags.get_f64("surrogate-bound");
+    let journal_batch = flags.get_usize("journal-batch");
     let opts = sweep::SweepOptions {
         workers: flags.get_usize("workers"),
         sequential: false,
@@ -295,6 +304,10 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         cache_file: (!flags.get_bool("no-cache-file"))
             .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
         surrogate_bound: (bound >= 0.0).then_some(bound),
+        warm_workers: flags.get_usize("warm-workers"),
+        journal_batch: (journal_batch > 0).then_some(journal_batch),
+        static_scheduler: parse_scheduler(flags.get_str("scheduler"))?,
+        progress: flags.get_bool("progress"),
     };
     let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
     let outcome = if flags.get_bool("no-journal") {
@@ -397,6 +410,17 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
             100.0 * outcome.answer_share()
         ));
     }
+    if outcome.total_queries > 0 {
+        out.push_str(&format!(
+            "  dedup warm: {} of {} queries unique ({:.0}% dedup ratio), \
+             warm {:.0} ms / eval {:.0} ms\n",
+            outcome.unique_queries,
+            outcome.total_queries,
+            100.0 * outcome.dedup_ratio(),
+            outcome.warm_ms,
+            outcome.eval_ms
+        ));
+    }
     if outcome.interrupted {
         out.push_str(&format!(
             "\ninterrupted: {} point(s) still pending — rerun with --resume to finish\n",
@@ -417,6 +441,19 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         );
     }
     Ok(if outcome.interrupted { 130 } else { 0 })
+}
+
+/// Resolve `--scheduler` for the sweep commands: `dynamic` (the
+/// work-stealing default) or `static` (the chunked dispatcher kept for
+/// differential byte-identity checks). Returns `static_scheduler`.
+fn parse_scheduler(s: &str) -> Result<bool> {
+    match s {
+        "dynamic" => Ok(false),
+        "static" => Ok(true),
+        other => Err(BoosterError::Config(format!(
+            "unknown --scheduler '{other}' (expected dynamic|static)"
+        ))),
+    }
 }
 
 /// `booster crossover` — the §2.3 study the pipeline and ZeRO modules
@@ -1156,6 +1193,14 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
             "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
         )
         .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
+        .int_flag("warm-workers", 0, "warm-simulation workers (0 = match --workers)")
+        .int_flag(
+            "journal-batch",
+            0,
+            "journal group-commit batch: fsync every N rows or 100 ms (0 = auto)",
+        )
+        .str_flag("scheduler", "dynamic", "point scheduler (dynamic = work stealing | static)")
+        .bool_flag("progress", false, "print done/total, points/s, ETA to stderr while sweeping")
         .int_flag(
             "interrupt-after",
             0,
@@ -1223,6 +1268,7 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
     sweep::sigint::install();
     let interrupt_after = flags.get_usize("interrupt-after");
     let bound = flags.get_f64("surrogate-bound");
+    let journal_batch = flags.get_usize("journal-batch");
     let opts = sweep::SweepOptions {
         workers: flags.get_usize("workers"),
         sequential: false,
@@ -1232,6 +1278,10 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         cache_file: (!flags.get_bool("no-cache-file"))
             .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
         surrogate_bound: (bound >= 0.0).then_some(bound),
+        warm_workers: flags.get_usize("warm-workers"),
+        journal_batch: (journal_batch > 0).then_some(journal_batch),
+        static_scheduler: parse_scheduler(flags.get_str("scheduler"))?,
+        progress: flags.get_bool("progress"),
     };
     let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
     let outcome = if flags.get_bool("no-journal") {

@@ -1771,4 +1771,137 @@ mod tests {
         );
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    #[test]
+    fn dedup_parallel_warm_matches_sequential_on_every_preset_and_algo() {
+        // The tentpole's equivalence property: on all four machine
+        // presets × all three collective algorithms, the deduplicated
+        // parallel warm builds a frozen cache that answers every grid
+        // query exactly as the classic sequential warm does — CSV bytes,
+        // hit/miss counters, surrogate answers and fit errors, sample
+        // reuses — while recording a dedup ratio for telemetry.
+        for machine in presets::machine_names() {
+            for algo in ["ring", "halving_doubling", "hierarchical"] {
+                let mut base = presets::default_scenario(machine).unwrap();
+                base.parallelism.algo = algo.to_string();
+                let axes =
+                    parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+                let points = prepare(&base, &axes).unwrap();
+                let par = run_points_with(
+                    &points,
+                    &SweepOptions {
+                        workers: 4,
+                        warm_workers: 4,
+                        ..SweepOptions::default()
+                    },
+                )
+                .unwrap();
+                let seq = run_points_sequential(&points).unwrap();
+                let tag = format!("{machine}/{algo}");
+                assert_eq!(par.to_csv(), seq.to_csv(), "{tag}: warm path changed the CSV");
+                assert_eq!(par.cache_hits, seq.cache_hits, "{tag}: hit counters");
+                assert_eq!(par.cache_misses, seq.cache_misses, "{tag}: miss counters");
+                assert_eq!(par.surrogate_hits, seq.surrogate_hits, "{tag}: surrogate answers");
+                assert_eq!(
+                    par.surrogate_max_err.to_bits(),
+                    seq.surrogate_max_err.to_bits(),
+                    "{tag}: surrogate fit error must be bit-identical"
+                );
+                assert_eq!(par.sim_reuses, seq.sim_reuses, "{tag}: sample-reuse counters");
+                assert!(par.total_queries > 0, "{tag}: pipeline must record the multiset");
+                assert!(par.unique_queries <= par.total_queries, "{tag}");
+                let ratio = par.dedup_ratio();
+                assert!(ratio > 0.0 && ratio <= 1.0, "{tag}: ratio {ratio}");
+                assert_eq!(seq.total_queries, 0, "{tag}: the oracle path records nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_and_static_schedulers_are_byte_identical() {
+        // The work-stealing dispatcher must be invisible in the
+        // artifacts: same CSV bytes and counters as the static
+        // chunk_ranges path and the single-threaded oracle, despite
+        // nondeterministic claim order.
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&[
+            "nodes=1",
+            "2",
+            "precision=bf16",
+            "tf32",
+            "compression=none",
+            "fp16",
+        ]))
+        .unwrap();
+        let points = prepare(&base, &axes).unwrap();
+        let dynamic = run_points_with(
+            &points,
+            &SweepOptions {
+                workers: 4,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        let static_ = run_points_with(
+            &points,
+            &SweepOptions {
+                workers: 4,
+                static_scheduler: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        let seq = run_points_sequential(&points).unwrap();
+        assert_eq!(dynamic.to_csv(), static_.to_csv(), "scheduler must not change a byte");
+        assert_eq!(dynamic.to_csv(), seq.to_csv(), "the sequential oracle agrees");
+        assert_eq!(dynamic.cache_hits, static_.cache_hits);
+        assert_eq!(dynamic.cache_misses, static_.cache_misses);
+        assert_eq!(dynamic.groups[0].workers, 4);
+    }
+
+    #[test]
+    fn group_commit_journal_survives_interrupt_and_kill_mid_batch() {
+        // A journal batch far above the row count never flushes on count
+        // alone — the engine must still commit the tail on drain and
+        // finish so resume stays byte-identical, and a torn final line
+        // (the kill-mid-batch crash shape) still recovers.
+        let base = presets::default_scenario("selene").unwrap();
+        let axes = parse_params(&s(&["nodes=1", "2", "precision=bf16", "tf32"])).unwrap();
+        let path = tmp_journal("groupcommit");
+        let batched = SweepOptions {
+            workers: 1,
+            journal_batch: Some(1000),
+            ..SweepOptions::default()
+        };
+        let control = run_journaled(&base, &axes, &path, false, &batched).unwrap();
+        assert_eq!(control.rows.len(), 4);
+
+        let interrupted = run_journaled(
+            &base,
+            &axes,
+            &path,
+            false,
+            &SweepOptions {
+                interrupt_after: Some(2),
+                ..batched.clone()
+            },
+        )
+        .unwrap();
+        assert!(interrupted.interrupted);
+        assert_eq!(interrupted.rows.len(), 2);
+
+        // The drain must have committed both completed rows even though
+        // the 1000-row batch threshold was never reached.
+        let resumed = run_journaled(&base, &axes, &path, true, &batched).unwrap();
+        assert_eq!(resumed.resumed_rows, 2);
+        assert_eq!(resumed.to_csv(), control.to_csv(), "resume must be byte-identical");
+
+        // Tear the final committed line; only that point re-evaluates.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 25]).unwrap();
+        let recovered = run_journaled(&base, &axes, &path, true, &batched).unwrap();
+        assert_eq!(recovered.resumed_rows, 3);
+        assert_eq!(recovered.to_csv(), control.to_csv());
+        std::fs::remove_file(&path).ok();
+    }
 }

@@ -26,7 +26,7 @@
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::collectives::CollectiveModel;
+use crate::collectives::{CollectiveModel, WarmQuery};
 use crate::pipeline::PipelinedModel;
 use crate::scenario::spec::ServingSpec;
 use crate::serve::kv;
@@ -220,6 +220,20 @@ impl<'t> DecodeTimeline<'t> {
             self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(b))?;
         }
         Ok(())
+    }
+
+    /// Enumerate the collective queries [`DecodeTimeline::warm_comm`]
+    /// would issue — in order, without evaluating any. The collective
+    /// model records each `(fingerprint, algo, bytes)` and answers a
+    /// launch-overhead dummy; no cache traffic, no simulation. The sweep
+    /// engine dedupes the recorded multiset across grid points before
+    /// fanning the unique simulations over warm workers.
+    pub fn warm_queries(&self, gpus: &[GpuId]) -> Result<Vec<WarmQuery>> {
+        let ((), queries) = self
+            .timeline
+            .collectives
+            .record_queries(|| self.warm_comm(gpus))?;
+        Ok(queries)
     }
 }
 

@@ -865,4 +865,47 @@ mod tests {
         assert!(out.failed[0].reason.contains("retried once"), "{}", out.failed[0].reason);
         assert_eq!(out.rows.len(), 7, "the other points survive");
     }
+
+    #[test]
+    fn dedup_warm_and_work_stealing_leave_serve_artifacts_byte_identical() {
+        // Serve edition of the tentpole differential: the deduplicated
+        // parallel warm plus the work-stealing scheduler (the defaults)
+        // and the static-scheduler path must both reproduce the
+        // sequential oracle's CSV and cache counters bit for bit, while
+        // reporting the warm dedup telemetry.
+        let points = prepare_serve(&base(), &frontier_axes()).unwrap();
+        let seq = run_serve_points_with(
+            &points,
+            &SweepOptions {
+                sequential: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        let dynamic = run_serve_points_with(
+            &points,
+            &SweepOptions {
+                workers: 4,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        let static_ = run_serve_points_with(
+            &points,
+            &SweepOptions {
+                workers: 4,
+                static_scheduler: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(dynamic.to_csv(), seq.to_csv(), "dedup warm + stealing changed the CSV");
+        assert_eq!(static_.to_csv(), seq.to_csv(), "static scheduler changed the CSV");
+        assert_eq!(dynamic.cache_hits, seq.cache_hits);
+        assert_eq!(dynamic.cache_misses, seq.cache_misses);
+        assert_eq!(dynamic.surrogate_hits, seq.surrogate_hits);
+        assert!(dynamic.total_queries > 0, "pipeline must record the warm multiset");
+        assert!(dynamic.dedup_ratio() <= 1.0 && dynamic.dedup_ratio() > 0.0);
+        assert_eq!(seq.total_queries, 0, "the oracle path records nothing");
+    }
 }

@@ -177,7 +177,29 @@ pub struct SweepOptions {
     /// (`None` = the model default, [`crate::collectives`]'s 1%;
     /// `Some(0.0)` disables surrogate answers).
     pub surrogate_bound: Option<f64>,
+    /// Workers for the deduplicated-warm simulation fan-out (`0` = match
+    /// the evaluation worker count). Ignored on the sequential path,
+    /// which keeps the classic direct warm as the differential oracle.
+    pub warm_workers: usize,
+    /// Journal group-commit batch: fsync every N completed rows or 100 ms
+    /// (`None` = auto, [`AUTO_JOURNAL_BATCH`]; `Some(1)` = the original
+    /// fsync-per-row durability). The engine always flushes on drain,
+    /// interrupt and finish.
+    pub journal_batch: Option<usize>,
+    /// Use the static `chunk_ranges` point scheduler instead of the
+    /// default work-stealing dispatcher (differential tests and the CI
+    /// byte-identity `cmp` legs).
+    pub static_scheduler: bool,
+    /// Print a progress line (`done/total, points/s, ETA`) to stderr
+    /// every few completed points. Off by default so artifacts and
+    /// captured output are unchanged.
+    pub progress: bool,
 }
+
+/// Journal group-commit batch when [`SweepOptions::journal_batch`] is
+/// `None`: fsync every 32 rows (or 100 ms), amortizing the per-row fsync
+/// tax ~32× on large grids while bounding kill-window loss to one batch.
+pub const AUTO_JOURNAL_BATCH: usize = 32;
 
 /// The recorded fate of one grid point — what the journal persists and
 /// what a resumed run restores. Generic over the row type so the
@@ -288,6 +310,15 @@ pub struct EngineOutcome<R> {
     /// Curves loaded from the persistent cache file (0 when disabled,
     /// missing, or fingerprint-mismatched).
     pub warm_curves_loaded: usize,
+    /// Collective queries recorded during warm enumeration, summed over
+    /// machine groups (0 on the sequential path, which warms directly).
+    pub total_queries: u64,
+    /// Distinct `(gpu-set fingerprint, algo, bytes)` keys among them.
+    pub unique_queries: u64,
+    /// Warm-phase wall clock, milliseconds, summed over machine groups.
+    pub warm_ms: f64,
+    /// Evaluation-phase wall clock, milliseconds, summed over groups.
+    pub eval_ms: f64,
 }
 
 impl<R> EngineOutcome<R> {
@@ -300,9 +331,21 @@ impl<R> EngineOutcome<R> {
         (self.cache_hits + self.sim_reuses) as f64 / total as f64
     }
 
+    /// Warm-dedup effectiveness: unique over total recorded queries
+    /// (`1.0` when nothing was recorded — a sequential warm or an empty
+    /// grid dedups nothing).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.total_queries == 0 {
+            1.0
+        } else {
+            self.unique_queries as f64 / self.total_queries as f64
+        }
+    }
+
     /// The shared `cost_cache` JSON block for `BENCH_*.json` artifacts:
-    /// the pre-existing hit/miss keys plus the surrogate and warm-start
-    /// telemetry (`check_bench.py` validates the internal consistency).
+    /// the pre-existing hit/miss keys plus the surrogate, warm-start and
+    /// warm-dedup telemetry (`check_bench.py` validates the internal
+    /// consistency; `--mode perf` checks the dedup/wall-clock fields).
     pub fn cost_cache_json(&self) -> Json {
         let total = (self.cache_hits + self.cache_misses).max(1);
         Json::obj(vec![
@@ -316,6 +359,11 @@ impl<R> EngineOutcome<R> {
             ("sim_reuses", Json::Num(self.sim_reuses as f64)),
             ("warm_curves_loaded", Json::Num(self.warm_curves_loaded as f64)),
             ("answer_share", Json::Num(self.answer_share())),
+            ("total_queries", Json::Num(self.total_queries as f64)),
+            ("unique_queries", Json::Num(self.unique_queries as f64)),
+            ("dedup_ratio", Json::Num(self.dedup_ratio())),
+            ("warm_ms", Json::Num(self.warm_ms)),
+            ("eval_ms", Json::Num(self.eval_ms)),
         ])
     }
 }
@@ -420,6 +468,48 @@ struct EvalCtx<'a> {
     /// Parsed persistent cache file, when enabled and readable.
     cache_file: Option<&'a CacheFileData>,
     surrogate_bound: Option<f64>,
+    /// Warm-simulation workers: `0` = classic direct sequential warm
+    /// (the differential oracle, used by `opts.sequential`); `n ≥ 1` =
+    /// the deduplicated pipeline with `n` simulation workers.
+    warm_workers: usize,
+    /// Static `chunk_ranges` sharding instead of work stealing.
+    static_scheduler: bool,
+    /// Progress meter, when `--progress` is on.
+    progress: Option<&'a Progress>,
+}
+
+/// Stderr progress meter for long sweeps (`--progress`): every few
+/// completed points, report `done/total`, the journal-rate points/s and
+/// the ETA it implies. Stderr only — stdout artifacts stay byte-stable.
+struct Progress {
+    /// Points pending evaluation in this run (restored rows excluded).
+    total: usize,
+    started: std::time::Instant,
+    /// Report every this-many completions (and on the last).
+    every: usize,
+}
+
+impl Progress {
+    fn new(total: usize) -> Progress {
+        Progress {
+            total,
+            started: std::time::Instant::now(),
+            every: (total / 20).clamp(1, 500),
+        }
+    }
+
+    fn tick(&self, done: usize) {
+        if done % self.every != 0 && done != self.total {
+            return;
+        }
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        let rate = done as f64 / secs;
+        let eta = (self.total.saturating_sub(done)) as f64 / rate.max(1e-9);
+        eprintln!(
+            "progress: {done}/{} points, {rate:.1} points/s, ETA {eta:.0}s",
+            self.total
+        );
+    }
 }
 
 /// One machine group's shared pricing infrastructure, bundled so the
@@ -445,6 +535,10 @@ struct GroupOutcome<R> {
     sim_reuses: u64,
     /// Curves preloaded from the persistent cache file.
     warm_loaded: usize,
+    /// `(total, unique)` warm queries recorded (0 on the classic path).
+    queries: (u64, u64),
+    /// Warm-phase and evaluation-phase wall clock, milliseconds.
+    phase_ms: (f64, f64),
     /// Post-warm curve dump for the persistent cache file (only when
     /// persistence is enabled).
     dump: Option<MachineCurves>,
@@ -452,9 +546,15 @@ struct GroupOutcome<R> {
 
 type GroupResult<R> = Result<GroupOutcome<R>>;
 
-/// Split `0..n` into at most `workers` contiguous, near-equal ranges.
+/// Split `0..n` into at most `workers` contiguous, near-equal,
+/// **non-empty** ranges: `min(workers.max(1), n)` of them, so
+/// `workers > points` yields one unit range per point (no zero-length
+/// chunks spawning idle threads) and `n == 0` yields no ranges at all.
 pub fn chunk_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
-    let w = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = workers.clamp(1, n);
     let base = n / w;
     let extra = n % w;
     let mut out = Vec::with_capacity(w);
@@ -553,21 +653,102 @@ fn eval_points<'t, F: SweepFamily>(
             continue;
         }
         let outcome = eval_one(family, ctx, gctx, i, &mut worker)?;
-        if let Some(journal) = ctx.journal {
-            journal
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .append(i, &outcome)?;
-        }
-        let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
-        if let Some(limit) = ctx.interrupt_after {
-            if completed >= limit {
-                ctx.cancel.cancel();
-            }
-        }
+        complete_point(ctx, i, &outcome)?;
         out.push(Some(outcome));
     }
     Ok(out)
+}
+
+/// Per-completion bookkeeping shared by every scheduler: journal the
+/// outcome, bump the done counter (tripping `--interrupt-after` and the
+/// `--progress` meter), in that order — a journaled point is always
+/// counted, never the reverse.
+fn complete_point<R: JournalRow>(
+    ctx: &EvalCtx<'_>,
+    i: usize,
+    outcome: &PointOutcome<R>,
+) -> Result<()> {
+    if let Some(journal) = ctx.journal {
+        journal
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .append(i, outcome)?;
+    }
+    let completed = ctx.done.fetch_add(1, Ordering::SeqCst) + 1;
+    if let Some(limit) = ctx.interrupt_after {
+        if completed >= limit {
+            ctx.cancel.cancel();
+        }
+    }
+    if let Some(p) = ctx.progress {
+        p.tick(completed);
+    }
+    Ok(())
+}
+
+/// The work-stealing point scheduler (the default): `workers` scoped
+/// threads claim batches of pending-point positions from a shared atomic
+/// cursor, so a worker that drains cheap points (infeasible rows are
+/// near-free) steals expensive ones instead of idling at a static chunk
+/// boundary. Claim batches amortize cursor traffic; outcomes are
+/// scattered back into pending order, and each completion journals and
+/// counts exactly as the sequential path — rows, journal contents, and
+/// interrupt semantics are byte-identical to the static and sequential
+/// schedulers (differential tests pin this).
+fn eval_points_dynamic<'t, F: SweepFamily>(
+    family: &F,
+    ctx: &EvalCtx<'_>,
+    gctx: &GroupCtx<'t, '_>,
+    machine: &str,
+    pending: &[usize],
+    workers: usize,
+) -> Result<Vec<Option<PointOutcome<F::Row>>>> {
+    let n = pending.len();
+    let nworkers = workers.min(n).max(1);
+    // ~4 claims per worker balances the tail without hammering the
+    // cursor; capped so million-point grids still rebalance.
+    let batch = (n / (nworkers * 4)).clamp(1, 32);
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Result<Vec<(usize, Option<PointOutcome<F::Row>>)>>> =
+        std::thread::scope(|s| {
+            let cursor = &cursor;
+            let handles: Vec<_> = (0..nworkers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut worker: Option<F::Worker<'t>> = None;
+                        let mut out = Vec::new();
+                        loop {
+                            let start = cursor.fetch_add(batch, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            for pos in start..(start + batch).min(n) {
+                                if ctx.cancel.cancelled() {
+                                    out.push((pos, None));
+                                    continue;
+                                }
+                                let outcome =
+                                    eval_one(family, ctx, gctx, pending[pos], &mut worker)?;
+                                complete_point(ctx, pending[pos], &outcome)?;
+                                out.push((pos, Some(outcome)));
+                            }
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| join_worker(machine, h))
+                .collect()
+        });
+    let mut merged: Vec<Option<PointOutcome<F::Row>>> = (0..n).map(|_| None).collect();
+    for r in results {
+        for (pos, o) in r? {
+            merged[pos] = o;
+        }
+    }
+    Ok(merged)
 }
 
 /// Evaluate one machine group's points through a single shared
@@ -612,11 +793,26 @@ fn eval_group<F: SweepFamily>(
             }
         }
     }
-    let chunks = chunk_ranges(pending.len(), workers);
-
-    // Phase 1: deterministic sequential warm-up of the shared cache.
+    // Phase 1: warm the shared cache over **all** points (see the doc
+    // comment above — curves are path-dependent, restored points still
+    // warm). Two interchangeable builds of the same bit-exact state:
+    //
+    // * `warm_workers == 0` (the sequential path): the classic direct
+    //   replay — every point's queries walk the live cache in order.
+    //   This is the differential oracle for the pipeline below.
+    // * `warm_workers >= 1`: the deduplicated pipeline — (a) record the
+    //   full query stream with dummy answers and zero cache traffic,
+    //   (b) shadow-replay it to plan exactly the queries the sequential
+    //   warm would have simulated, deduplicated by (fingerprint, algo,
+    //   bytes), (c) fan those simulations over the warm workers,
+    //   (d) replay the stream through the real cache with the presimulated
+    //   samples. Lookup geometry never depends on cached *values*, so
+    //   curves, surrogates and every counter land bit-identical.
+    let eval_workers = workers.clamp(1, pending.len().max(1));
+    let warm_t0 = std::time::Instant::now();
     let mut cancelled_in_warm = false;
-    {
+    let mut queries_recorded = (0u64, 0u64);
+    if ctx.warm_workers == 0 {
         let mut worker = family.new_worker(&first, &topo, &shared)?;
         for &i in idxs {
             if ctx.cancel.cancelled() {
@@ -626,7 +822,29 @@ fn eval_group<F: SweepFamily>(
             let (spec, _) = ctx.source.point(i)?;
             family.warm(&mut worker, &spec, &topo)?;
         }
+    } else {
+        let mut worker = family.new_worker(&first, &topo, &shared)?;
+        let ((), queries) = shared.record_queries(|| {
+            for &i in idxs {
+                if ctx.cancel.cancelled() {
+                    cancelled_in_warm = true;
+                    break;
+                }
+                let (spec, _) = ctx.source.point(i)?;
+                family.warm(&mut worker, &spec, &topo)?;
+            }
+            Ok(())
+        })?;
+        if !cancelled_in_warm {
+            let plan = shared.plan_warm(&queries);
+            queries_recorded = (plan.total_queries, plan.unique_queries);
+            let presim = simulate_warm_plan(&shared, &machine.name, &plan, ctx.warm_workers)?;
+            for q in &queries {
+                shared.replay_warm(q, &presim)?;
+            }
+        }
     }
+    let warm_ms = warm_t0.elapsed().as_secs_f64() * 1e3;
     shared.freeze_cache(true);
     let dump = ctx.cache_file.map(|_| MachineCurves {
         fingerprint: machine.fingerprint(),
@@ -638,52 +856,113 @@ fn eval_group<F: SweepFamily>(
         return Ok(GroupOutcome {
             outcomes: vec![None; pending.len()],
             cache: shared.cache_stats(),
-            workers: chunks.len(),
+            workers: eval_workers,
             surrogate: shared.surrogate_stats(),
             sim_reuses: shared.sim_reuses(),
             warm_loaded,
             dump,
+            queries: queries_recorded,
+            phase_ms: (warm_ms, 0.0),
         });
     }
 
-    // Phase 2: shard the evaluation over the pending points.
+    // Phase 2: shard the evaluation over the pending points — the
+    // work-stealing dispatcher by default, static `chunk_ranges` under
+    // `--scheduler static`, in-place when there is nothing to share.
+    let eval_t0 = std::time::Instant::now();
     let gctx = GroupCtx {
         topo: &topo,
         power: &power,
         shared: &shared,
     };
-    let outcomes: Vec<Result<Vec<Option<PointOutcome<F::Row>>>>> = if chunks.len() <= 1 {
-        vec![eval_points(family, ctx, &gctx, pending)]
+    let merged: Vec<Option<PointOutcome<F::Row>>> = if eval_workers <= 1 {
+        eval_points(family, ctx, &gctx, pending)?
+    } else if ctx.static_scheduler {
+        let chunks = chunk_ranges(pending.len(), eval_workers);
+        let outcomes: Vec<Result<Vec<Option<PointOutcome<F::Row>>>>> =
+            std::thread::scope(|s| {
+                let gctx = &gctx;
+                let handles: Vec<_> = chunks
+                    .iter()
+                    .map(|r| {
+                        let slice = &pending[r.clone()];
+                        s.spawn(move || eval_points(family, ctx, gctx, slice))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| join_worker(&machine.name, h))
+                    .collect()
+            });
+        let mut merged = Vec::with_capacity(pending.len());
+        for o in outcomes {
+            merged.extend(o?);
+        }
+        merged
     } else {
-        std::thread::scope(|s| {
-            let gctx = &gctx;
-            let handles: Vec<_> = chunks
-                .iter()
-                .map(|r| {
-                    let slice = &pending[r.clone()];
-                    s.spawn(move || eval_points(family, ctx, gctx, slice))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| join_worker(&machine.name, h))
-                .collect()
-        })
+        eval_points_dynamic(family, ctx, &gctx, &machine.name, pending, eval_workers)?
     };
+    let eval_ms = eval_t0.elapsed().as_secs_f64() * 1e3;
 
-    let mut merged = Vec::with_capacity(pending.len());
-    for o in outcomes {
-        merged.extend(o?);
-    }
     Ok(GroupOutcome {
         outcomes: merged,
         cache: shared.cache_stats(),
-        workers: chunks.len(),
+        workers: eval_workers,
         surrogate: shared.surrogate_stats(),
         sim_reuses: shared.sim_reuses(),
         warm_loaded,
         dump,
+        queries: queries_recorded,
+        phase_ms: (warm_ms, eval_ms),
     })
+}
+
+/// Fan a warm plan's unique simulations over `workers` scoped threads
+/// (atomic-cursor claims; one thread is just an inlined loop), keyed by
+/// [`crate::collectives::WarmQuery::key`] for the replay.
+fn simulate_warm_plan(
+    shared: &CollectiveModel<'_>,
+    machine: &str,
+    plan: &crate::collectives::WarmPlan,
+    workers: usize,
+) -> Result<std::collections::HashMap<(u64, u8, u64), f64>> {
+    let mut presim = std::collections::HashMap::with_capacity(plan.sims.len());
+    let nworkers = workers.min(plan.sims.len());
+    if nworkers <= 1 {
+        for q in &plan.sims {
+            presim.insert(q.key(), shared.simulate_warm_query(q)?);
+        }
+        return Ok(presim);
+    }
+    let cursor = AtomicUsize::new(0);
+    let shards: Vec<Result<Vec<((u64, u8, u64), f64)>>> = std::thread::scope(|s| {
+        let cursor = &cursor;
+        let handles: Vec<_> = (0..nworkers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        match plan.sims.get(i) {
+                            Some(q) => out.push((q.key(), shared.simulate_warm_query(q)?)),
+                            None => break,
+                        }
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| join_worker(machine, h))
+            .collect()
+    });
+    for sh in shards {
+        for (k, v) in sh? {
+            presim.insert(k, v);
+        }
+    }
+    Ok(presim)
 }
 
 /// One machine group's work item: all its point indices plus the subset
@@ -725,6 +1004,10 @@ fn assemble<R>(
     let mut surrogate_max_err = 0f64;
     let mut sim_reuses = 0u64;
     let mut warm_curves_loaded = 0usize;
+    let mut total_queries = 0u64;
+    let mut unique_queries = 0u64;
+    let mut warm_ms = 0f64;
+    let mut eval_ms = 0f64;
     for (w, res) in work.iter().zip(results) {
         let group = res?;
         for (&i, outcome) in w.pending.iter().zip(group.outcomes) {
@@ -736,6 +1019,10 @@ fn assemble<R>(
         surrogate_max_err = surrogate_max_err.max(group.surrogate.1);
         sim_reuses += group.sim_reuses;
         warm_curves_loaded += group.warm_loaded;
+        total_queries += group.queries.0;
+        unique_queries += group.queries.1;
+        warm_ms += group.phase_ms.0;
+        eval_ms += group.phase_ms.1;
         if let Some(dump) = group.dump {
             dumps.push((w.machine.clone(), dump));
         }
@@ -787,6 +1074,10 @@ fn assemble<R>(
         surrogate_bound: 0.0, // caller fills in the effective bound
         sim_reuses,
         warm_curves_loaded,
+        total_queries,
+        unique_queries,
+        warm_ms,
+        eval_ms,
     })
 }
 
@@ -834,6 +1125,24 @@ pub fn run_engine<F: SweepFamily>(
     } else {
         opts.workers
     };
+    // The sequential path keeps the classic direct warm (the differential
+    // oracle, `warm_workers == 0`); otherwise the deduplicated pipeline
+    // runs, defaulting its simulation fan-out to the evaluation width.
+    let warm_workers = if opts.sequential {
+        0
+    } else if opts.warm_workers == 0 {
+        workers
+    } else {
+        opts.warm_workers
+    };
+    if let Some(j) = journal.as_ref() {
+        let batch = opts.journal_batch.unwrap_or(AUTO_JOURNAL_BATCH);
+        j.lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .set_group_commit(batch, std::time::Duration::from_millis(100));
+    }
+    let pending_total: usize = work.iter().map(|w| w.pending.len()).sum();
+    let progress = opts.progress.then(|| Progress::new(pending_total));
     let done = AtomicUsize::new(0);
     let ctx = EvalCtx {
         source,
@@ -844,6 +1153,9 @@ pub fn run_engine<F: SweepFamily>(
         interrupt_after: opts.interrupt_after,
         cache_file: cache_data.as_ref(),
         surrogate_bound: opts.surrogate_bound,
+        warm_workers,
+        static_scheduler: opts.static_scheduler,
+        progress: progress.as_ref(),
     };
     let results: Vec<GroupResult<F::Row>> = if opts.sequential || work.len() <= 1 {
         work.iter()
@@ -867,6 +1179,14 @@ pub fn run_engine<F: SweepFamily>(
                 .collect()
         })
     };
+    // Commit any group-commit tail before assembling: whether this run
+    // finished, drained after SIGINT, or tripped `--interrupt-after`,
+    // every completed point is durable when the engine returns.
+    if let Some(j) = journal.as_ref() {
+        j.lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .flush()?;
+    }
     let mut dumps = Vec::new();
     let mut outcome = assemble(restored, &work, results, opts.cancel.cancelled(), &mut dumps)?;
     let default_bound = crate::collectives::DEFAULT_SURROGATE_BOUND;
@@ -997,7 +1317,35 @@ mod tests {
         let ranges = chunk_ranges(8, 3);
         assert_eq!(ranges, vec![0..3, 3..6, 6..8]);
         assert_eq!(chunk_ranges(2, 8).len(), 2);
-        assert_eq!(chunk_ranges(0, 4), vec![0..0]);
+    }
+
+    #[test]
+    fn chunk_ranges_degenerate_boundaries() {
+        // workers > points: one unit range per point, no empty chunks.
+        assert_eq!(chunk_ranges(2, 8), vec![0..1, 1..2]);
+        assert_eq!(chunk_ranges(1, 4), vec![0..1]);
+        // An empty grid splits into no ranges at all (the old code
+        // produced a spurious `0..0` chunk — an idle worker thread).
+        assert_eq!(chunk_ranges(0, 4), Vec::<std::ops::Range<usize>>::new());
+        assert!(chunk_ranges(0, 0).is_empty());
+        // workers == 0 degrades to one chunk covering everything.
+        assert_eq!(chunk_ranges(5, 0), vec![0..5]);
+        // Exhaustive small-square check: every split is contiguous,
+        // covering, and free of zero-length ranges.
+        for n in 0..24usize {
+            for w in 0..10usize {
+                let ranges = chunk_ranges(n, w);
+                let want = if n == 0 { 0 } else { w.clamp(1, n) };
+                assert_eq!(ranges.len(), want, "n={n} w={w}");
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "contiguous at n={n} w={w}");
+                    assert!(r.end > r.start, "non-empty at n={n} w={w}");
+                    next = r.end;
+                }
+                assert_eq!(next, n, "covering at n={n} w={w}");
+            }
+        }
     }
 
     #[test]

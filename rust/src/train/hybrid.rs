@@ -39,7 +39,7 @@
 
 use std::sync::Arc;
 
-use crate::collectives::{bucketed_allreduce_time, CollectiveModel};
+use crate::collectives::{bucketed_allreduce_time, CollectiveModel, WarmQuery};
 use crate::pipeline::{self, PipelinedModel, Schedule};
 use crate::topology::{GpuId, Topology};
 use crate::train::layout::{chain_signature, ParallelLayout};
@@ -296,6 +296,20 @@ impl<'t> HybridTimeline<'t> {
             self.grad_comm(&layout, gpus)?;
         }
         Ok(())
+    }
+
+    /// Enumerate the collective queries [`HybridTimeline::warm_comm`]
+    /// would issue — in order, without evaluating any (the model records
+    /// each `(fingerprint, algo, bytes)` and answers a launch-overhead
+    /// dummy; no cache traffic, no simulation). The sweep engine's
+    /// deduplicated warm pipeline is built on this: the query *set* only
+    /// depends on the layout, never on the returned times.
+    pub fn warm_queries(&self, gpus: &[GpuId], batch_per_gpu: usize) -> Result<Vec<WarmQuery>> {
+        let ((), queries) = self
+            .timeline
+            .collectives
+            .record_queries(|| self.warm_comm(gpus, batch_per_gpu))?;
+        Ok(queries)
     }
 
     /// Simulate one synchronous hybrid step over `gpus` (the job's
@@ -791,6 +805,38 @@ mod tests {
                 misses, warm_misses,
                 "p{stages}t{tensor}m{mb}: step after warm_comm must not simulate"
             );
+        }
+    }
+
+    #[test]
+    fn warm_queries_enumerates_without_evaluating() {
+        // Query enumeration is pure: it returns the multiset warm_comm
+        // would issue, leaves the cache untouched, and composes with a
+        // later real warm. Covers both the dense and the ZeRO dispatch.
+        let dense = spec_3d(8, 4, 2, 8);
+        let sharded = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(4)
+            .tensor_parallel(2)
+            .sharding("optimizer+grads")
+            .build()
+            .unwrap();
+        for spec in [dense, sharded] {
+            let topo = spec.machine.build_topology().unwrap();
+            let gpus = spec.job_gpus(&topo).unwrap();
+            let hy = HybridTimeline::from_scenario(&spec, &topo).unwrap();
+            let batch = spec.workload.batch_per_gpu;
+            let queries = hy.warm_queries(&gpus, batch).unwrap();
+            assert!(!queries.is_empty(), "warm path must issue collectives");
+            assert!(queries.iter().all(|q| q.bytes > 0.0 && q.gpus.len() > 1));
+            assert_eq!(
+                hy.timeline.collectives.cache_stats(),
+                (0, 0),
+                "enumeration must not touch the cache"
+            );
+            // The recorded multiset drives a real warm identically.
+            hy.warm_comm(&gpus, batch).unwrap();
+            let (_, misses) = hy.timeline.collectives.cache_stats();
+            assert!(misses > 0, "real warm after enumeration still simulates");
         }
     }
 }

@@ -65,7 +65,7 @@ use std::sync::Arc;
 
 use crate::collectives::{
     bucketed_allgather_time, bucketed_allreduce_time, bucketed_reduce_scatter_time,
-    CollectiveModel, Compression,
+    CollectiveModel, Compression, WarmQuery,
 };
 use crate::pipeline::PipelinedModel;
 use crate::topology::{GpuId, Topology};
@@ -288,6 +288,25 @@ pub fn warm_queries(
     tensor_comm(tl, model, &layout, gpus, micro_size)?;
     grad_comm(tl, model, sharding, &layout, gpus)?;
     Ok(())
+}
+
+/// Enumerate the collective queries [`warm_queries`] would issue — in
+/// order, without evaluating any. The collective model records each
+/// `(fingerprint, algo, bytes)` and answers a launch-overhead dummy, so
+/// no cache traffic and no simulation happen; the sweep engine dedupes
+/// the recorded multiset before fanning simulations over workers.
+pub fn enumerate_warm_queries(
+    tl: &TimelineModel,
+    model: &PipelinedModel,
+    sharding: Sharding,
+    tensor: usize,
+    gpus: &[GpuId],
+    batch_per_gpu: usize,
+) -> Result<Vec<WarmQuery>> {
+    let ((), queries) = tl
+        .collectives
+        .record_queries(|| warm_queries(tl, model, sharding, tensor, gpus, batch_per_gpu))?;
+    Ok(queries)
 }
 
 /// Worst tensor-group layer-allreduce seconds for the step: every rank
