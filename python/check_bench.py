@@ -12,6 +12,7 @@ Usage:
                    [--identical-csv CONTROL.csv] [--min-points N]
     check_bench.py results/BENCH_serve.json [--mode serve|interrupt|resume|fault]
                    [--identical-csv CONTROL.csv --sweep-csv results/serve.csv]
+                   [--degenerate-csv CONTROL.csv]  # accept=1 rows == control
     check_bench.py results/BENCH_hotpath.json
     check_bench.py results/crossover.csv --mode crossover
     check_bench.py --self-test
@@ -63,8 +64,9 @@ MS_KEYS = ["compute_ms", "comm_ms", "rs_ms", "ag_ms", "tp_comm_ms", "step_ms"]
 SERVE_ROW_KEYS = [
     "scenario", "machine", "workload", "nodes", "gpus", "replicas", "tensor",
     "batch_cap", "precision", "prompt_tokens", "decode_tokens", "rate",
-    "kv_gb", "prefill_ms", "token_ms", "p50_ms", "p99_ms", "slo_ms",
-    "slo_ok", "mean_batch", "tokens_per_s", "total_tokens_per_s",
+    "accept", "kv_gb", "prefill_ms", "token_ms", "slo_ms", "slo_ok", "watts",
+    "p50_s", "p99_s", "tokens_per_s", "completed", "mean_batch", "occupancy",
+    "preempted", "total_tokens_per_s", "tokens_per_s_per_watt",
 ]
 
 
@@ -233,7 +235,8 @@ def check_serve(d, path):
     training sweep, plus serving-specific row checks and the
     throughput-under-SLO frontier."""
     for k in ("bench", "params", "rows", "infeasible", "failed", "groups",
-              "frontier", "cost_cache", "interrupted", "pending", "resume"):
+              "frontier", "cost_frontier", "cost_cache", "interrupted",
+              "pending", "resume"):
         require(k in d, f"{path}: missing top-level key '{k}'")
     require(d["bench"] == "serve", f"{path}: bench key is {d['bench']!r}")
     rows, infeasible, failed = d["rows"], d["infeasible"], d["failed"]
@@ -274,8 +277,8 @@ def check_serve(d, path):
         for k in SERVE_ROW_KEYS:
             require(k in r, f"{path}: serve row {i} missing '{k}'")
         require(
-            r["p99_ms"] >= r["p50_ms"] >= 0,
-            f"{path}: serve row {i}: p99 {r['p99_ms']} < p50 {r['p50_ms']}",
+            r["p99_s"] >= r["p50_s"] >= 0,
+            f"{path}: serve row {i}: p99 {r['p99_s']} < p50 {r['p50_s']}",
         )
         require(r["tokens_per_s"] > 0, f"{path}: serve row {i} zero throughput")
         require(
@@ -291,8 +294,25 @@ def check_serve(d, path):
             f"{path}: serve row {i}: gpus != replicas x tensor: {r}",
         )
         require(
-            r["slo_ok"] == (r["p99_ms"] <= r["slo_ms"]),
+            r["slo_ok"] == (r["p99_s"] * 1e3 <= r["slo_ms"]),
             f"{path}: serve row {i}: slo_ok inconsistent with p99 vs SLO: {r}",
+        )
+        require(
+            0 < r["accept"] <= 1,
+            f"{path}: serve row {i}: acceptance outside (0, 1]: {r}",
+        )
+        require(r["watts"] > 0, f"{path}: serve row {i}: no job power: {r}")
+        require(
+            math.isclose(
+                r["tokens_per_s_per_watt"],
+                r["total_tokens_per_s"] / r["watts"],
+                rel_tol=1e-9,
+            ),
+            f"{path}: serve row {i}: tokens_per_s_per_watt != total/watts: {r}",
+        )
+        require(
+            r["completed"] > 0 and r["preempted"] >= 0 and r["occupancy"] >= 0,
+            f"{path}: serve row {i}: queue counters inconsistent: {r}",
         )
 
     # Frontier: per machine with at least one SLO-feasible row, exactly
@@ -324,6 +344,38 @@ def check_serve(d, path):
             f"best SLO-feasible throughput: {f} vs {best[f['machine']]}",
         )
 
+    # Cost-aware frontier: same SLO filter, ranked by tokens/s/W. The
+    # machine set matches the throughput frontier's; the winner carries
+    # that machine's best feasible tokens_per_s_per_watt.
+    best_tppw = {}
+    for r in rows:
+        if r["slo_ok"]:
+            m = r["machine"]
+            if m not in best_tppw or r["tokens_per_s_per_watt"] > best_tppw[m]:
+                best_tppw[m] = r["tokens_per_s_per_watt"]
+    cost_frontier = d["cost_frontier"]
+    cf_machines = [f["machine"] for f in cost_frontier]
+    require(
+        len(cf_machines) == len(set(cf_machines)),
+        f"{path}: duplicate machines in the cost frontier: {cf_machines}",
+    )
+    require(
+        set(cf_machines) == set(best_tppw),
+        f"{path}: cost-frontier machines {sorted(cf_machines)} != machines "
+        f"with SLO-feasible rows {sorted(best_tppw)}",
+    )
+    for f in cost_frontier:
+        for k in ("machine", "scenario", "replicas", "tensor", "batch_cap",
+                  "watts", "total_tokens_per_s", "tokens_per_s_per_watt"):
+            require(k in f, f"{path}: cost-frontier entry missing '{k}': {f}")
+        require(
+            math.isclose(
+                f["tokens_per_s_per_watt"], best_tppw[f["machine"]], rel_tol=1e-9,
+            ),
+            f"{path}: cost-frontier winner for {f['machine']} is not that "
+            f"machine's best feasible tokens/s/W: {f} vs {best_tppw[f['machine']]}",
+        )
+
     check_cost_cache(d["cost_cache"], path)
     for g in groups:
         for k in ("machine", "points", "workers", "hits", "misses"):
@@ -349,6 +401,39 @@ def mode_serve(rows, d):
         len(machines) >= 2,
         f"serve frontier must report a feasible winner on >= 2 machines: {machines}",
     )
+
+
+def check_serve_degeneration(sweep_csv, control_csv):
+    """The speculative smoke's degeneracy bar: every `accept=1` row of a
+    serve sweep run with an acceptance axis must be byte-identical to the
+    non-speculative control row of the same scenario (the scenario name
+    carries no accept suffix, so the rows pair up by the first column)."""
+    with open(control_csv) as f:
+        control = {line.split(",", 1)[0]: line
+                   for line in f.read().splitlines() if "," in line}
+    with open(sweep_csv) as f:
+        lines = f.read().splitlines()
+    header = lines[0].split(",")
+    require("accept" in header, f"{sweep_csv}: no accept column")
+    accept_idx = header.index("accept")
+    checked = 0
+    for line in lines[1:]:
+        parts = line.split(",")
+        if parts[accept_idx] != "1":
+            continue
+        name = parts[0]
+        require(
+            name in control,
+            f"serve degeneration: scenario {name!r} absent from the control",
+        )
+        require(
+            control[name] == line,
+            f"serve degeneration: accept=1 row differs from the control run\n"
+            f"  sweep:   {line}\n  control: {control[name]}",
+        )
+        checked += 1
+    require(checked > 0, "serve degeneration: no accept=1 rows to compare")
+    print(f"check_bench: serve degeneration OK ({checked} bit-exact rows)")
 
 
 def check_hotpath(d, path):
@@ -610,24 +695,26 @@ def _fixture():
 
 
 def _serve_fixture():
-    """A minimal schema-valid completed serve sweep with a frontier."""
-    def row(machine, tps, slo_ok):
+    """A minimal schema-valid completed serve sweep with both frontiers."""
+    def row(machine, tps, slo_ok, watts):
         return {
             "scenario": f"{machine}/gpt3_13b/n1/fp16_tc/serve-r1-t1-b8",
             "machine": machine, "workload": "gpt3_13b", "nodes": 1, "gpus": 1,
             "replicas": 1, "tensor": 1, "batch_cap": 8,
             "precision": "fp16_tc", "prompt_tokens": 512, "decode_tokens": 64,
-            "rate": 4.0, "kv_gb": 0.472, "prefill_ms": 300.0, "token_ms": 17.0,
-            "p50_ms": 1500.0, "p99_ms": 2000.0 if slo_ok else 9000.0,
-            "slo_ms": 4000.0, "slo_ok": slo_ok, "mean_batch": 2.5,
-            "tokens_per_s": tps, "total_tokens_per_s": tps,
+            "rate": 4.0, "accept": 1.0, "kv_gb": 0.472, "prefill_ms": 300.0,
+            "token_ms": 17.0, "slo_ms": 4000.0, "slo_ok": slo_ok,
+            "watts": watts, "p50_s": 1.5, "p99_s": 2.0 if slo_ok else 9.0,
+            "tokens_per_s": tps, "completed": 64, "mean_batch": 2.5,
+            "occupancy": 0.4, "preempted": 0, "total_tokens_per_s": tps,
+            "tokens_per_s_per_watt": tps / watts,
         }
     return {
         "bench": "serve",
         "params": [{"key": "machine", "values": ["a", "b"]},
                    {"key": "tensor", "values": ["1", "2"]}],
-        "rows": [row("a", 200.0, True), row("a", 350.0, True),
-                 row("b", 900.0, True), row("b", 100.0, False)],
+        "rows": [row("a", 200.0, True, 400.0), row("a", 350.0, True, 2000.0),
+                 row("b", 900.0, True, 1000.0), row("b", 100.0, False, 500.0)],
         "infeasible": [],
         "failed": [],
         "groups": [
@@ -639,6 +726,17 @@ def _serve_fixture():
              "batch_cap": 8, "p99_ms": 2000.0, "total_tokens_per_s": 350.0},
             {"machine": "b", "scenario": "b/...", "replicas": 1, "tensor": 1,
              "batch_cap": 8, "p99_ms": 2000.0, "total_tokens_per_s": 900.0},
+        ],
+        # a's tokens/s champion (350 @ 2000 W) loses the cost frontier to
+        # the narrower 200 @ 400 W row — the two frontiers legitimately
+        # disagree, which is exactly what the fixture pins.
+        "cost_frontier": [
+            {"machine": "a", "scenario": "a/...", "replicas": 1, "tensor": 1,
+             "batch_cap": 8, "watts": 400.0, "total_tokens_per_s": 200.0,
+             "tokens_per_s_per_watt": 0.5},
+            {"machine": "b", "scenario": "b/...", "replicas": 1, "tensor": 1,
+             "batch_cap": 8, "watts": 1000.0, "total_tokens_per_s": 900.0,
+             "tokens_per_s_per_watt": 0.9},
         ],
         "interrupted": False,
         "pending": 0,
@@ -691,8 +789,17 @@ def self_test():
     must_fail(wrong_winner, "frontier winner not the best", check_serve)
 
     lying_slo = copy.deepcopy(serve)
-    lying_slo["rows"][3]["slo_ok"] = True  # p99 9000 > slo 4000
+    lying_slo["rows"][3]["slo_ok"] = True  # p99 9 s > slo 4 s
     must_fail(lying_slo, "slo_ok contradicting p99", check_serve)
+
+    lying_tppw = copy.deepcopy(serve)
+    lying_tppw["rows"][0]["tokens_per_s_per_watt"] = 0.7  # != 200/400
+    must_fail(lying_tppw, "tokens_per_s_per_watt arithmetic", check_serve)
+
+    wrong_cost_winner = copy.deepcopy(serve)
+    # a's tokens/s champion is not its tokens/s/W champion (0.175 < 0.5).
+    wrong_cost_winner["cost_frontier"][0]["tokens_per_s_per_watt"] = 0.175
+    must_fail(wrong_cost_winner, "cost-frontier winner not the best", check_serve)
 
     # Surrogate / persistent-cache blocks.
     mode_warm(good)
@@ -738,7 +845,7 @@ def self_test():
     must_fail(cut, "bigsweep left points pending",
               lambda d, _where: mode_bigsweep(d, 4))
 
-    print("check_bench: self-test OK (5 good + 14 rejected fixtures)")
+    print("check_bench: self-test OK (5 good + 16 rejected fixtures)")
 
 
 def mode_crossover(path):
@@ -833,6 +940,8 @@ def main():
         rows = check_serve(d, args.file)
         if args.mode == "serve":
             mode_serve(rows, d)
+            if args.degenerate_csv:
+                check_serve_degeneration(args.sweep_csv, args.degenerate_csv)
         elif args.mode == "interrupt":
             mode_interrupt(d)
         elif args.mode == "resume":

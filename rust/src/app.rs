@@ -89,9 +89,11 @@ pub fn commands() -> Vec<Command> {
         Command {
             name: "serve-sweep",
             about: "run an inference-serving grid (replicas × tensor × batch × machine): \
-                    KV-cache fit, continuous-batching p50/p99 and tokens/s, with the \
-                    throughput-under-SLO frontier; journaled row checkpoints, --resume \
-                    continues an interrupted sweep",
+                    KV-cache fit (optionally paged, --param block=...), speculative \
+                    decode (--param accept=...), trace-replayed or Poisson arrivals, \
+                    continuous-batching p50/p99 and tokens/s, with throughput-under-SLO \
+                    and tokens/s-per-watt frontiers; journaled row checkpoints, \
+                    --resume continues an interrupted sweep",
             run: crate::report::cmd_serve_sweep,
         },
     ]
@@ -261,8 +263,8 @@ mod tests {
         .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("unknown serve-sweep key 'replicaz'"), "{msg}");
-        for key in crate::serve::SERVE_KEYS {
-            assert!(msg.contains(key), "error must list '{key}': {msg}");
+        for key in crate::serve::sweep::SERVE_PARAM_KEYS {
+            assert!(msg.contains(key.name), "error must list '{}': {msg}", key.name);
         }
         // Training-only axes are rejected too — the families don't mix.
         let err = crate::report::cmd_serve_sweep(&[

@@ -203,41 +203,17 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
         .str_flag("schedule", "gpipe", "base microbatch schedule (gpipe|1f1b)")
         .str_flag("sharding", "none", "base state sharding (none|optimizer|optimizer+grads)")
         .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
-        .str_flag("journal", "results/sweep.journal", "row-checkpoint journal path")
-        .bool_flag("resume", false, "resume from the journal, skipping completed points")
-        .bool_flag("no-journal", false, "disable row checkpointing")
-        .bool_flag("stream", false, "stream the grid lazily — O(workers) points resident")
-        .str_flag(
-            "cache-file",
-            "results/cost_cache.json",
-            "persistent cost-cache path (cross-process warm starts)",
-        )
-        .bool_flag("no-cache-file", false, "disable the persistent cost cache")
-        .float_flag(
-            "surrogate-bound",
-            -1.0,
-            "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
-        )
-        .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
-        .int_flag("warm-workers", 0, "warm-simulation workers (0 = match --workers)")
-        .int_flag(
-            "journal-batch",
-            0,
-            "journal group-commit batch: fsync every N rows or 100 ms (0 = auto)",
-        )
-        .str_flag("scheduler", "dynamic", "point scheduler (dynamic = work stealing | static)")
-        .bool_flag("progress", false, "print done/total, points/s, ETA to stderr while sweeping")
-        .int_flag(
-            "interrupt-after",
-            0,
-            "cancel after this many evaluated points (deterministic Ctrl-C for tests; 0 = off)",
-        )
+        .bool_flag("stream", false, "stream the grid lazily — O(workers) points resident");
+    let spec = crate::sweep::EngineCliArgs::declare(spec, "results/sweep.journal")
         .bool_flag("list", false, "list presets and sweepable keys, then exit")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
     if flags.get_bool("help") {
         println!("{}", spec.help("sweep"));
-        println!("sweepable keys: {}", sweep::SWEEPABLE_KEYS.join(", "));
+        println!(
+            "sweepable keys: {}",
+            crate::sweep::render_param_keys(sweep::SWEEP_PARAM_KEYS)
+        );
         println!("example: booster sweep --param nodes=48,96 --param precision=bf16,tf32");
         println!("example: booster sweep --param stages=1,2,4 --param machine=juwels_booster,leonardo");
         println!("example: booster sweep --nodes 4 --param tensor=1,2,4 --param stages=1,4");
@@ -250,15 +226,15 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     if flags.get_bool("list") {
         println!("machine presets:  {}", presets::machine_names().join(", "));
         println!("workload presets: {}", presets::workload_names().join(", "));
-        println!("sweepable keys:   {}", sweep::SWEEPABLE_KEYS.join(", "));
+        println!(
+            "sweepable keys:   {}",
+            crate::sweep::render_param_keys(sweep::SWEEP_PARAM_KEYS)
+        );
         println!("expression keys:  {} + single-letter variables (n=1,2)", sweep::EXPR_KEYS.join(", "));
         return Ok(0);
     }
-    if flags.get_bool("resume") && flags.get_bool("no-journal") {
-        return Err(BoosterError::Config(
-            "--resume reads the journal; it cannot be combined with --no-journal".into(),
-        ));
-    }
+    let engine = crate::sweep::EngineCliArgs::from_flags(&flags)?;
+    let journal = engine.journal.clone().expect("full surface declares the journal group");
     // Reject unknown/duplicate --param keys before any spec resolution or
     // simulation — a typo'd axis must not cost a half-priced grid.
     let axes = sweep::parse_params(flags.get_strs("param"))?;
@@ -280,47 +256,20 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     // Fault injection for the CI failed-path fixture: a point index in
     // BOOSTER_SWEEP_FAULT panics on every attempt, so the sweep records a
     // `failed` row for it (after the bounded retry) instead of dying.
-    let fault: Option<sweep::FaultHook> = match std::env::var("BOOSTER_SWEEP_FAULT") {
-        Ok(v) => {
-            let idx: usize = v.trim().parse().map_err(|_| {
-                BoosterError::Config(format!(
-                    "BOOSTER_SWEEP_FAULT must be a grid point index, got '{v}'"
-                ))
-            })?;
-            Some(std::sync::Arc::new(move |i, _attempt| i == idx))
-        }
-        Err(_) => None,
-    };
+    let fault = crate::sweep::fault_from_env()?;
     sweep::sigint::install();
-    let interrupt_after = flags.get_usize("interrupt-after");
-    let bound = flags.get_f64("surrogate-bound");
-    let journal_batch = flags.get_usize("journal-batch");
-    let opts = sweep::SweepOptions {
-        workers: flags.get_usize("workers"),
-        sequential: false,
-        cancel: sweep::Cancel::with_sigint(),
-        interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
-        fault,
-        cache_file: (!flags.get_bool("no-cache-file"))
-            .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
-        surrogate_bound: (bound >= 0.0).then_some(bound),
-        warm_workers: flags.get_usize("warm-workers"),
-        journal_batch: (journal_batch > 0).then_some(journal_batch),
-        static_scheduler: parse_scheduler(flags.get_str("scheduler"))?,
-        progress: flags.get_bool("progress"),
-    };
-    let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
-    let outcome = if flags.get_bool("no-journal") {
+    let opts = engine.sweep_options(fault);
+    let journal_path = journal.path.clone();
+    let outcome = if journal.no_journal {
         if flags.get_bool("stream") {
             sweep::run_streamed(&base, &axes, &opts)?
         } else {
             sweep::run_points_with(&sweep::prepare(&base, &axes)?, &opts)?
         }
     } else if flags.get_bool("stream") {
-        let resume = flags.get_bool("resume");
-        sweep::run_journaled_streamed(&base, &axes, &journal_path, resume, &opts)?
+        sweep::run_journaled_streamed(&base, &axes, &journal_path, journal.resume, &opts)?
     } else {
-        sweep::run_journaled(&base, &axes, &journal_path, flags.get_bool("resume"), &opts)?
+        sweep::run_journaled(&base, &axes, &journal_path, journal.resume, &opts)?
     };
 
     let mut out = format!(
@@ -443,19 +392,6 @@ pub fn cmd_sweep(args: &[String]) -> Result<i32> {
     Ok(if outcome.interrupted { 130 } else { 0 })
 }
 
-/// Resolve `--scheduler` for the sweep commands: `dynamic` (the
-/// work-stealing default) or `static` (the chunked dispatcher kept for
-/// differential byte-identity checks). Returns `static_scheduler`.
-fn parse_scheduler(s: &str) -> Result<bool> {
-    match s {
-        "dynamic" => Ok(false),
-        "static" => Ok(true),
-        other => Err(BoosterError::Config(format!(
-            "unknown --scheduler '{other}' (expected dynamic|static)"
-        ))),
-    }
-}
-
 /// `booster crossover` — the §2.3 study the pipeline and ZeRO modules
 /// advertise: for a workload that outgrows device memory (default
 /// `gpt3_175b`), price **three** answers per (machine, nodes) cell across
@@ -479,8 +415,8 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
             "sharding",
             "optimizer+grads",
             "comma-separated ZeRO arm sharding modes (optimizer|optimizer+grads)",
-        )
-        .bool_flag("help", false, "show help");
+        );
+    let spec = crate::sweep::EngineCliArgs::declare_eval(spec).bool_flag("help", false, "show help");
     let spec_flags = spec.clone().parse(args)?;
     if spec_flags.get_bool("help") {
         println!("{}", spec.help("crossover"));
@@ -599,7 +535,9 @@ pub fn cmd_crossover(args: &[String]) -> Result<i32> {
             "crossover grid has no machine-compatible parallelism shape".into(),
         ));
     }
-    let outcome = sweep::run_points(&points, 0)?;
+    let engine = crate::sweep::EngineCliArgs::from_eval_flags(&spec_flags)?;
+    sweep::sigint::install();
+    let outcome = sweep::run_points_with(&points, &engine.sweep_options(None))?;
     let frontier = sweep::throughput_frontier(&outcome.rows);
     let mode_of = |r: &sweep::SweepRow| {
         if r.sharding != "none" {
@@ -1177,60 +1115,48 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         .int_flag("head-dim", 128, "head dimension (KV-cache sizing)")
         .int_flag("sim-requests", 64, "requests per queue simulation")
         .str_flag("precision", "fp16_tc", "base serving precision")
-        .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop")
-        .str_flag("journal", "results/serve.journal", "row-checkpoint journal path")
-        .bool_flag("resume", false, "resume from the journal, skipping completed points")
-        .bool_flag("no-journal", false, "disable row checkpointing")
-        .str_flag(
-            "cache-file",
-            "results/cost_cache.json",
-            "persistent cost-cache path (cross-process warm starts)",
-        )
-        .bool_flag("no-cache-file", false, "disable the persistent cost cache")
         .float_flag(
-            "surrogate-bound",
+            "accept",
             -1.0,
-            "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
+            "speculative decode acceptance rate in (0,1] over a free draft (negative = off)",
         )
-        .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
-        .int_flag("warm-workers", 0, "warm-simulation workers (0 = match --workers)")
-        .int_flag(
-            "journal-batch",
-            0,
-            "journal group-commit batch: fsync every N rows or 100 ms (0 = auto)",
-        )
-        .str_flag("scheduler", "dynamic", "point scheduler (dynamic = work stealing | static)")
-        .bool_flag("progress", false, "print done/total, points/s, ETA to stderr while sweeping")
-        .int_flag(
-            "interrupt-after",
-            0,
-            "cancel after this many evaluated points (deterministic Ctrl-C for tests; 0 = off)",
-        )
+        .int_flag("block", 0, "paged-KV block size, tokens (0 = closed-form KV reservation)")
+        .int_flag("chunk", 0, "chunked-prefill chunk size, tokens (0 = monolithic prefill)")
+        .int_flag("prefix", 0, "shared cached prompt-prefix tokens (prefix-cache hits)")
+        .str_flag("dist", "fixed", "request-length distribution (fixed|lognormal|zipf)")
+        .str_flag("trace", "", "replay arrivals/lengths from a JSONL trace file")
+        .str_list_flag("param", &[], "sweep axis key=v1,v2 — first axis is the outer loop");
+    let spec = crate::sweep::EngineCliArgs::declare(spec, "results/serve.journal")
         .bool_flag("list", false, "list presets and serve-sweepable keys, then exit")
         .bool_flag("help", false, "show help");
     let flags = spec.clone().parse(args)?;
     if flags.get_bool("help") {
         println!("{}", spec.help("serve-sweep"));
-        println!("sweepable keys: {}", serve_sweep::SERVE_KEYS.join(", "));
+        println!(
+            "sweepable keys: {}",
+            crate::sweep::render_param_keys(serve_sweep::SERVE_PARAM_KEYS)
+        );
         println!("example: booster serve-sweep --param replicas=1,2,4 --param tensor=1,2");
         println!(
             "example: booster serve-sweep --param machine=juwels_booster,isambard_ai --param batch=1,8"
         );
         println!("example: booster serve-sweep --rate 8 --param replicas=2,4 --param decode=64,256");
+        println!("example: booster serve-sweep --param accept=0.6,0.8,1.0   # speculative decode");
+        println!("example: booster serve-sweep --trace results/trace.jsonl  # replay arrivals");
         println!("example: booster serve-sweep --resume   # continue an interrupted serve sweep");
         return Ok(0);
     }
     if flags.get_bool("list") {
         println!("machine presets:  {}", presets::machine_names().join(", "));
         println!("workload presets: {}", presets::workload_names().join(", "));
-        println!("sweepable keys:   {}", serve_sweep::SERVE_KEYS.join(", "));
+        println!(
+            "sweepable keys:   {}",
+            crate::sweep::render_param_keys(serve_sweep::SERVE_PARAM_KEYS)
+        );
         return Ok(0);
     }
-    if flags.get_bool("resume") && flags.get_bool("no-journal") {
-        return Err(BoosterError::Config(
-            "--resume reads the journal; it cannot be combined with --no-journal".into(),
-        ));
-    }
+    let engine = crate::sweep::EngineCliArgs::from_flags(&flags)?;
+    let journal = engine.journal.clone().expect("full surface declares the journal group");
     // Reject unknown/duplicate --param keys before any spec resolution or
     // simulation — a typo'd axis must not cost a half-priced grid.
     let axes = serve_sweep::parse_serve_params(flags.get_strs("param"))?;
@@ -1244,6 +1170,19 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
     serving.kv_heads = flags.get_usize("kv-heads");
     serving.head_dim = flags.get_usize("head-dim");
     serving.sim_requests = flags.get_usize("sim-requests");
+    let accept = flags.get_f64("accept");
+    if accept >= 0.0 {
+        let mut draft = crate::scenario::spec::DraftSpec::defaults();
+        draft.acceptance = accept;
+        serving.draft = Some(draft);
+    }
+    serving.kv_block_tokens = flags.get_usize("block");
+    serving.chunk_tokens = flags.get_usize("chunk");
+    serving.prefix_tokens = flags.get_usize("prefix");
+    serving.length_dist = flags.get_str("dist").to_string();
+    if !flags.get_str("trace").is_empty() {
+        serving.trace = Some(flags.get_str("trace").to_string());
+    }
     let base = ScenarioSpec::builder(presets::machine(flags.get_str("machine"))?)
         .workload(presets::workload(flags.get_str("workload"))?)
         .nodes(1)
@@ -1254,46 +1193,14 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
 
     // Same fault-injection hook as `booster sweep` — the CI serve leg
     // reuses the env var to exercise the failed-point path.
-    let fault: Option<sweep::FaultHook> = match std::env::var("BOOSTER_SWEEP_FAULT") {
-        Ok(v) => {
-            let idx: usize = v.trim().parse().map_err(|_| {
-                BoosterError::Config(format!(
-                    "BOOSTER_SWEEP_FAULT must be a grid point index, got '{v}'"
-                ))
-            })?;
-            Some(std::sync::Arc::new(move |i, _attempt| i == idx))
-        }
-        Err(_) => None,
-    };
+    let fault = crate::sweep::fault_from_env()?;
     sweep::sigint::install();
-    let interrupt_after = flags.get_usize("interrupt-after");
-    let bound = flags.get_f64("surrogate-bound");
-    let journal_batch = flags.get_usize("journal-batch");
-    let opts = sweep::SweepOptions {
-        workers: flags.get_usize("workers"),
-        sequential: false,
-        cancel: sweep::Cancel::with_sigint(),
-        interrupt_after: (interrupt_after > 0).then_some(interrupt_after),
-        fault,
-        cache_file: (!flags.get_bool("no-cache-file"))
-            .then(|| std::path::PathBuf::from(flags.get_str("cache-file"))),
-        surrogate_bound: (bound >= 0.0).then_some(bound),
-        warm_workers: flags.get_usize("warm-workers"),
-        journal_batch: (journal_batch > 0).then_some(journal_batch),
-        static_scheduler: parse_scheduler(flags.get_str("scheduler"))?,
-        progress: flags.get_bool("progress"),
-    };
-    let journal_path = std::path::PathBuf::from(flags.get_str("journal"));
-    let outcome = if flags.get_bool("no-journal") {
+    let opts = engine.sweep_options(fault);
+    let journal_path = journal.path.clone();
+    let outcome = if journal.no_journal {
         serve_sweep::run_serve_points_with(&serve_sweep::prepare_serve(&base, &axes)?, &opts)?
     } else {
-        serve_sweep::run_serve_journaled(
-            &base,
-            &axes,
-            &journal_path,
-            flags.get_bool("resume"),
-            &opts,
-        )?
+        serve_sweep::run_serve_journaled(&base, &axes, &journal_path, journal.resume, &opts)?
     };
 
     let mut out = format!(
@@ -1303,8 +1210,8 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         base.name
     );
     let mut t = Table::new(&[
-        "scenario", "gpus", "r x t", "cap", "kv GB", "prefill ms", "token ms", "p50 ms",
-        "p99 ms", "SLO", "tok/s", "total tok/s",
+        "scenario", "gpus", "r x t", "cap", "accept", "kv GB", "prefill ms", "token ms",
+        "p50 ms", "p99 ms", "SLO", "tok/s", "total tok/s", "tok/s/W",
     ]);
     for r in &outcome.rows {
         t.row(&[
@@ -1312,14 +1219,16 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
             r.gpus.to_string(),
             format!("{} x {}", r.replicas, r.tensor),
             r.batch_cap.to_string(),
+            format!("{}", r.accept),
             format!("{:.3}", r.kv_gb),
             format!("{:.2}", r.prefill_ms),
             format!("{:.3}", r.token_ms),
-            format!("{:.0}", r.p50_ms),
-            format!("{:.0}", r.p99_ms),
+            format!("{:.0}", r.p50_ms()),
+            format!("{:.0}", r.p99_ms()),
             if r.slo_ok { "ok".into() } else { "miss".to_string() },
-            format!("{:.0}", r.tokens_per_s),
+            format!("{:.0}", r.tokens_per_s()),
             format!("{:.0}", r.total_tokens_per_s),
+            format!("{:.3}", r.tokens_per_s_per_watt),
         ]);
     }
     out.push_str(&t.render());
@@ -1361,7 +1270,30 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
             let r = &outcome.rows[i];
             out.push_str(&format!(
                 "  {}: {} — {:.0} tok/s at p99 {:.0} ms (r{} x t{}, cap {})\n",
-                r.machine, r.scenario, r.total_tokens_per_s, r.p99_ms, r.replicas, r.tensor,
+                r.machine,
+                r.scenario,
+                r.total_tokens_per_s,
+                r.p99_ms(),
+                r.replicas,
+                r.tensor,
+                r.batch_cap
+            ));
+        }
+    }
+    let cost_frontier = serve_sweep::serve_cost_frontier(&outcome.rows);
+    if !cost_frontier.is_empty() {
+        out.push_str("\ncost-aware frontier (best tok/s per watt with p99 <= SLO):\n");
+        for &i in &cost_frontier {
+            let r = &outcome.rows[i];
+            out.push_str(&format!(
+                "  {}: {} — {:.3} tok/s/W ({:.0} tok/s at {:.0} W; r{} x t{}, cap {})\n",
+                r.machine,
+                r.scenario,
+                r.tokens_per_s_per_watt,
+                r.total_tokens_per_s,
+                r.watts,
+                r.replicas,
+                r.tensor,
                 r.batch_cap
             ));
         }
@@ -1405,7 +1337,7 @@ pub fn cmd_serve_sweep(args: &[String]) -> Result<i32> {
         std::path::Path::new("results/BENCH_serve.json"),
         &outcome.to_json(&axes).to_pretty(),
     )?;
-    if flags.get_bool("no-journal") {
+    if journal.no_journal {
         println!("wrote results/serve.csv and results/BENCH_serve.json (journal disabled)");
     } else {
         println!(

@@ -424,13 +424,97 @@ impl WorkloadSpec {
     }
 }
 
+/// Draft-model speculative-decoding profile — an optional block inside
+/// [`ServingSpec`]. Present = the decode step is priced speculatively:
+/// a draft model proposes `lookahead` tokens per round and the target
+/// verifies them in a batched pass; `acceptance` is the per-token
+/// probability a drafted token survives verification. The model is
+/// calibrated so `acceptance = 1.0` degenerates **bit-exactly** to the
+/// plain decode step (speculation prices its *overhead* — wasted verify
+/// slots and draft re-runs on rejection — not a speedup we cannot
+/// calibrate), so the `accept` sweep axis erodes the SLO frontier
+/// monotonically from the non-speculative baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DraftSpec {
+    /// Draft model parameter count. 0 = an idealized free draft whose
+    /// pass hides entirely under the target's memory-bound verify.
+    pub params: f64,
+    /// Draft model layers (sets the draft KV footprint; 0 with
+    /// `params = 0` keeps the draft free).
+    pub layers: usize,
+    /// Tokens drafted per speculation round (the γ of the draft/verify
+    /// literature).
+    pub lookahead: usize,
+    /// Per-token acceptance probability in (0, 1].
+    pub acceptance: f64,
+}
+
+impl DraftSpec {
+    /// A free draft accepting everything — the bit-exact identity point.
+    pub fn defaults() -> DraftSpec {
+        DraftSpec {
+            params: 0.0,
+            layers: 0,
+            lookahead: 4,
+            acceptance: 1.0,
+        }
+    }
+
+    /// True when the draft pass itself prices to zero.
+    pub fn is_free(&self) -> bool {
+        self.params == 0.0
+    }
+
+    /// Check internal consistency (`who` names the owning scenario).
+    pub fn validate(&self, who: &str) -> Result<()> {
+        let fail = |m: String| Err(cfg(format!("scenario '{who}': serving draft {m}")));
+        if !(self.params >= 0.0 && self.params.is_finite()) {
+            return fail(format!("params {} must be finite and non-negative", self.params));
+        }
+        if self.params > 0.0 && self.layers == 0 {
+            return fail("layers must be > 0 when params > 0".into());
+        }
+        if self.lookahead == 0 {
+            return fail("lookahead must be > 0".into());
+        }
+        if !(self.acceptance > 0.0 && self.acceptance <= 1.0) {
+            return fail(format!("acceptance {} outside (0,1]", self.acceptance));
+        }
+        Ok(())
+    }
+
+    /// Serialize.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("params", Json::Num(self.params)),
+            ("layers", Json::Num(self.layers as f64)),
+            ("lookahead", Json::Num(self.lookahead as f64)),
+            ("acceptance", Json::Num(self.acceptance)),
+        ])
+    }
+
+    /// Deserialize; absent fields take [`DraftSpec::defaults`].
+    pub fn from_json(j: &Json) -> Result<DraftSpec> {
+        let d = DraftSpec::defaults();
+        Ok(DraftSpec {
+            params: opt_f64(j, "params", d.params)?,
+            layers: opt_usize(j, "layers", d.layers)?,
+            lookahead: opt_usize(j, "lookahead", d.lookahead)?,
+            acceptance: opt_f64(j, "acceptance", d.acceptance)?,
+        })
+    }
+}
+
 /// Autoregressive-serving profile: how the workload's model is *served*
 /// rather than trained. Lives beside [`WorkloadSpec`] in a
 /// [`ScenarioSpec`] as an optional block (absent = training scenario, so
 /// every pre-serving spec file, auto-name and fingerprint is unchanged).
 /// Consumed by `crate::serve`: the KV-cache fit, the per-token decode
 /// timeline and the continuous-batching queue simulation all read from
-/// here.
+/// here. The realism knobs added after PR 7 (`kv_block_tokens`,
+/// `prefix_tokens`, `chunk_tokens`, `length_dist`, `trace`, `draft`)
+/// serialize only when they leave their identity defaults, so every
+/// PR-7-era serving spec keeps its JSON bytes and fingerprint.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingSpec {
     /// Model replicas serving independently; each owns
@@ -453,6 +537,29 @@ pub struct ServingSpec {
     pub head_dim: usize,
     /// Requests the queue simulation completes per grid point.
     pub sim_requests: usize,
+    /// Paged-KV block size in tokens. 0 = unpaged: the PR-7 closed-form
+    /// per-request reservation. Otherwise KV is allocated in
+    /// block-granular pages and admission tracks per-step occupancy.
+    pub kv_block_tokens: usize,
+    /// Tokens of a shared prompt prefix cached once across requests
+    /// (paged mode only; whole blocks of the prefix skip both the KV
+    /// claim and the prefill charge). 0 = no shared prefix.
+    pub prefix_tokens: usize,
+    /// Chunked-prefill chunk size in tokens. 0 = unchunked: a prompt
+    /// prefills in one charge at admission (head-of-line blocking the
+    /// decode batch). Otherwise prompts prefill `chunk_tokens` per step,
+    /// interleaved with decode.
+    pub chunk_tokens: usize,
+    /// Request length distribution for generated arrivals: `"fixed"`
+    /// (every request uses `prompt_tokens`/`decode_tokens`),
+    /// `"lognormal"` or `"zipf"` (seeded heavy tails with those medians).
+    pub length_dist: String,
+    /// Path to a replayable arrival trace (JSON lines of
+    /// `{arrival_s, prompt_tokens, decode_tokens}`). `Some` replaces the
+    /// seeded Poisson arrivals per replica.
+    pub trace: Option<String>,
+    /// Speculative-decoding draft block; absent = plain decode.
+    pub draft: Option<DraftSpec>,
 }
 
 impl ServingSpec {
@@ -470,6 +577,12 @@ impl ServingSpec {
             kv_heads: 40,
             head_dim: 128,
             sim_requests: 64,
+            kv_block_tokens: 0,
+            prefix_tokens: 0,
+            chunk_tokens: 0,
+            length_dist: "fixed".into(),
+            trace: None,
+            draft: None,
         }
     }
 
@@ -500,6 +613,29 @@ impl ServingSpec {
         if self.sim_requests == 0 {
             return fail("sim_requests must be > 0".into());
         }
+        match self.length_dist.as_str() {
+            "fixed" | "lognormal" | "zipf" => {}
+            other => {
+                return fail(format!(
+                    "length_dist '{other}' unknown (expected fixed, lognormal or zipf)"
+                ))
+            }
+        }
+        if self.prefix_tokens > 0 && self.kv_block_tokens == 0 {
+            return fail(format!(
+                "prefix_tokens {} needs paged KV (kv_block_tokens > 0) — the \
+                 closed-form reservation has no shared blocks",
+                self.prefix_tokens
+            ));
+        }
+        if let Some(path) = &self.trace {
+            if path.is_empty() {
+                return fail("trace path must be non-empty".into());
+            }
+        }
+        if let Some(draft) = &self.draft {
+            draft.validate(who)?;
+        }
         Ok(())
     }
 
@@ -508,9 +644,12 @@ impl ServingSpec {
         self.prompt_tokens + self.decode_tokens
     }
 
-    /// Serialize.
+    /// Serialize. The post-PR-7 realism fields are emitted only when
+    /// they leave their identity defaults, so PR-7-era serving specs
+    /// keep their exact JSON bytes (and fingerprints, and journal
+    /// compatibility).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("replicas", Json::Num(self.replicas as f64)),
             ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
             ("decode_tokens", Json::Num(self.decode_tokens as f64)),
@@ -520,7 +659,26 @@ impl ServingSpec {
             ("kv_heads", Json::Num(self.kv_heads as f64)),
             ("head_dim", Json::Num(self.head_dim as f64)),
             ("sim_requests", Json::Num(self.sim_requests as f64)),
-        ])
+        ];
+        if self.kv_block_tokens != 0 {
+            fields.push(("kv_block_tokens", Json::Num(self.kv_block_tokens as f64)));
+        }
+        if self.prefix_tokens != 0 {
+            fields.push(("prefix_tokens", Json::Num(self.prefix_tokens as f64)));
+        }
+        if self.chunk_tokens != 0 {
+            fields.push(("chunk_tokens", Json::Num(self.chunk_tokens as f64)));
+        }
+        if self.length_dist != "fixed" {
+            fields.push(("length_dist", Json::Str(self.length_dist.clone())));
+        }
+        if let Some(trace) = &self.trace {
+            fields.push(("trace", Json::Str(trace.clone())));
+        }
+        if let Some(draft) = &self.draft {
+            fields.push(("draft", draft.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Deserialize. Absent fields take the [`ServingSpec::defaults`]
@@ -537,6 +695,22 @@ impl ServingSpec {
             kv_heads: opt_usize(j, "kv_heads", d.kv_heads)?,
             head_dim: opt_usize(j, "head_dim", d.head_dim)?,
             sim_requests: opt_usize(j, "sim_requests", d.sim_requests)?,
+            kv_block_tokens: opt_usize(j, "kv_block_tokens", d.kv_block_tokens)?,
+            prefix_tokens: opt_usize(j, "prefix_tokens", d.prefix_tokens)?,
+            chunk_tokens: opt_usize(j, "chunk_tokens", d.chunk_tokens)?,
+            length_dist: opt_str(j, "length_dist", &d.length_dist)?,
+            trace: match j.get("trace") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| cfg("trace must be a string".into()))?
+                        .to_string(),
+                ),
+            },
+            draft: match j.get("draft") {
+                None => None,
+                Some(v) => Some(DraftSpec::from_json(v)?),
+            },
         })
     }
 }
@@ -1362,6 +1536,94 @@ mod tests {
         let mut bad = ServingSpec::defaults();
         bad.requests_per_s = 0.0;
         assert!(ScenarioSpec::builder(m).nodes(2).serving(bad).build().is_err());
+    }
+
+    #[test]
+    fn serving_realism_fields_roundtrip_and_default_to_identity() {
+        // All realism knobs at defaults: the JSON must not mention them,
+        // so PR-7-era serving specs keep their bytes and fingerprints.
+        let plain = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(1)
+            .serving(ServingSpec::defaults())
+            .build()
+            .unwrap();
+        let j = plain.to_json().to_string();
+        for absent in [
+            "\"kv_block_tokens\"",
+            "\"prefix_tokens\"",
+            "\"chunk_tokens\"",
+            "\"length_dist\"",
+            "\"trace\"",
+            "\"draft\"",
+        ] {
+            assert!(!j.contains(absent), "default serving JSON must omit {absent}: {j}");
+        }
+
+        // Every knob set: round-trips losslessly.
+        let mut s = ServingSpec::defaults();
+        s.kv_block_tokens = 32;
+        s.prefix_tokens = 128;
+        s.chunk_tokens = 256;
+        s.length_dist = "lognormal".into();
+        s.trace = Some("results/trace.jsonl".into());
+        s.draft = Some(DraftSpec {
+            params: 1.5e9,
+            layers: 8,
+            lookahead: 6,
+            acceptance: 0.8,
+        });
+        let spec = ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+            .nodes(1)
+            .serving(s.clone())
+            .build()
+            .unwrap();
+        let j = spec.to_json().to_string();
+        assert!(j.contains("\"draft\""), "{j}");
+        assert!(j.contains("\"trace\""), "{j}");
+        let back = ScenarioSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+        assert_ne!(plain.fingerprint(), spec.fingerprint());
+
+        // Terse draft blocks fill in the free-draft defaults.
+        let terse = DraftSpec::from_json(&Json::parse(r#"{"acceptance":0.7}"#).unwrap()).unwrap();
+        assert_eq!(terse.lookahead, 4);
+        assert!(terse.is_free());
+        assert_eq!(terse.acceptance, 0.7);
+
+        // Validation: bad acceptance, zero lookahead, sized draft without
+        // layers, unknown length_dist, prefix without paged KV.
+        let m = presets::machine("juwels_booster").unwrap();
+        let check = |mutate: &dyn Fn(&mut ServingSpec), needle: &str| {
+            let mut s = ServingSpec::defaults();
+            mutate(&mut s);
+            let err = ScenarioSpec::builder(m.clone())
+                .nodes(1)
+                .serving(s)
+                .build()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "expected '{needle}' in: {err}");
+        };
+        let draft = |mutate: fn(&mut DraftSpec)| {
+            let mut d = DraftSpec::defaults();
+            mutate(&mut d);
+            Some(d)
+        };
+        check(&|s| s.draft = draft(|d| d.acceptance = 0.0), "acceptance");
+        check(&|s| s.draft = draft(|d| d.acceptance = 1.5), "acceptance");
+        check(&|s| s.draft = draft(|d| d.lookahead = 0), "lookahead");
+        check(
+            &|s| {
+                let mut d = DraftSpec::defaults();
+                d.params = 1e9;
+                d.layers = 0;
+                s.draft = Some(d);
+            },
+            "layers",
+        );
+        check(&|s| s.length_dist = "pareto".into(), "length_dist");
+        check(&|s| s.prefix_tokens = 64, "paged KV");
+        check(&|s| s.trace = Some(String::new()), "trace path");
     }
 
     #[test]

@@ -60,76 +60,179 @@ use crate::util::rng::Rng;
 /// One sweep axis: a scenario field and the values it takes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamAxis {
-    /// Scenario field key (see [`SWEEPABLE_KEYS`]).
+    /// Scenario field key (see [`SWEEP_PARAM_KEYS`]).
     pub key: String,
     /// Values, in CLI order.
     pub values: Vec<String>,
 }
 
-/// Scenario fields a sweep may vary.
-pub const SWEEPABLE_KEYS: [&str; 14] = [
-    "machine",
-    "workload",
-    "nodes",
-    "precision",
-    "algo",
-    "compression",
-    "placement",
-    "bucket_mb",
-    "batch",
-    "stages",
-    "tensor",
-    "microbatches",
-    "schedule",
-    "sharding",
+fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value
+        .parse()
+        .map_err(|_| BoosterError::Config(format!("sweep key '{key}': invalid value '{value}'")))
+}
+
+fn t_machine(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.machine = presets::machine(v)?;
+    Ok(())
+}
+
+fn t_workload(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.workload = presets::workload(v)?;
+    Ok(())
+}
+
+fn t_nodes(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.nodes = num("nodes", v)?;
+    Ok(())
+}
+
+fn t_precision(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.precision = v.to_string();
+    Ok(())
+}
+
+fn t_algo(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.algo = v.to_string();
+    Ok(())
+}
+
+fn t_compression(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.compression = v.to_string();
+    Ok(())
+}
+
+fn t_placement(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.placement = v.to_string();
+    Ok(())
+}
+
+fn t_bucket_mb(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    let mb: f64 = num("bucket_mb", v)?;
+    spec.parallelism.bucket_bytes = mb * 1e6;
+    Ok(())
+}
+
+fn t_batch(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.workload.batch_per_gpu = num("batch", v)?;
+    Ok(())
+}
+
+fn t_stages(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.pipeline_stages = num("stages", v)?;
+    Ok(())
+}
+
+fn t_tensor(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.tensor_parallel = num("tensor", v)?;
+    Ok(())
+}
+
+fn t_microbatches(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.microbatches = num("microbatches", v)?;
+    Ok(())
+}
+
+fn t_schedule(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.schedule = v.to_string();
+    Ok(())
+}
+
+fn t_sharding(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    // Canonicalize aliases (off/zero1/zero2) so row columns, the
+    // /zero- name suffix and check_bench.py all see one spelling;
+    // unknown values pass through for spec validation to reject.
+    spec.parallelism.sharding = crate::train::zero::Sharding::canonicalize(v);
+    Ok(())
+}
+
+/// The training sweep's key registry — every scenario field a training
+/// grid may vary, one table row each (see [`crate::sweep::ParamKey`]).
+/// The `--param` parser, the apply step, the CLI listings and the
+/// unknown-key error all render from this table.
+pub static SWEEP_PARAM_KEYS: &[crate::sweep::ParamKey] = &[
+    crate::sweep::ParamKey {
+        name: "machine",
+        kind: "preset",
+        apply: t_machine,
+    },
+    crate::sweep::ParamKey {
+        name: "workload",
+        kind: "preset",
+        apply: t_workload,
+    },
+    crate::sweep::ParamKey {
+        name: "nodes",
+        kind: "int",
+        apply: t_nodes,
+    },
+    crate::sweep::ParamKey {
+        name: "precision",
+        kind: "string",
+        apply: t_precision,
+    },
+    crate::sweep::ParamKey {
+        name: "algo",
+        kind: "string",
+        apply: t_algo,
+    },
+    crate::sweep::ParamKey {
+        name: "compression",
+        kind: "string",
+        apply: t_compression,
+    },
+    crate::sweep::ParamKey {
+        name: "placement",
+        kind: "string",
+        apply: t_placement,
+    },
+    crate::sweep::ParamKey {
+        name: "bucket_mb",
+        kind: "float",
+        apply: t_bucket_mb,
+    },
+    crate::sweep::ParamKey {
+        name: "batch",
+        kind: "int",
+        apply: t_batch,
+    },
+    crate::sweep::ParamKey {
+        name: "stages",
+        kind: "int",
+        apply: t_stages,
+    },
+    crate::sweep::ParamKey {
+        name: "tensor",
+        kind: "int",
+        apply: t_tensor,
+    },
+    crate::sweep::ParamKey {
+        name: "microbatches",
+        kind: "int",
+        apply: t_microbatches,
+    },
+    crate::sweep::ParamKey {
+        name: "schedule",
+        kind: "string",
+        apply: t_schedule,
+    },
+    crate::sweep::ParamKey {
+        name: "sharding",
+        kind: "string",
+        apply: t_sharding,
+    },
 ];
 
-/// Group comma-split `--param` entries back into axes. The flag parser
-/// hands us `["nodes=48", "96", "precision=bf16", "tf32"]` for
-/// `--param nodes=48,96 --param precision=bf16,tf32`: an entry containing
-/// `=` opens a new axis, bare entries extend the previous one.
-///
-/// Unknown keys are rejected **here, up front** — before any spec is
-/// built or simulation run — with the full valid key set in the error,
-/// so a typo like `--param stagez=4` can never flow into a half-priced
-/// grid.
+/// Group comma-split `--param` entries back into axes against
+/// [`SWEEP_PARAM_KEYS`] (plus single-letter expression variables). The
+/// flag parser hands us `["nodes=48", "96", "precision=bf16", "tf32"]`
+/// for `--param nodes=48,96 --param precision=bf16,tf32`: an entry
+/// containing `=` opens a new axis, bare entries extend the previous
+/// one. Unknown keys are rejected up front with the full valid key set
+/// in the error, so a typo like `--param stagez=4` can never flow into
+/// a half-priced grid.
 pub fn parse_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
-    let mut axes: Vec<ParamAxis> = Vec::new();
-    for e in entries {
-        match e.split_once('=') {
-            Some((key, first)) => {
-                let key = key.trim().to_ascii_lowercase();
-                if !SWEEPABLE_KEYS.contains(&key.as_str()) && !is_var_key(&key) {
-                    return Err(BoosterError::Config(format!(
-                        "unknown sweep key '{key}' (sweepable: {}; single-letter keys \
-                         like n=1,2 define expression variables)",
-                        SWEEPABLE_KEYS.join(", ")
-                    )));
-                }
-                if axes.iter().any(|a| a.key == key) {
-                    return Err(BoosterError::Config(format!("duplicate sweep key '{key}'")));
-                }
-                axes.push(ParamAxis {
-                    key,
-                    values: vec![first.trim().to_string()],
-                });
-            }
-            None => match axes.last_mut() {
-                Some(axis) => axis.values.push(e.trim().to_string()),
-                None => {
-                    return Err(BoosterError::Config(format!(
-                        "sweep value '{e}' has no key (use --param key=v1,v2)"
-                    )))
-                }
-            },
-        }
-    }
-    for a in &axes {
-        if a.values.iter().any(|v| v.is_empty()) {
-            return Err(BoosterError::Config(format!("sweep key '{}' has an empty value", a.key)));
-        }
-    }
-    Ok(axes)
+    crate::sweep::parse_params_table("sweep", SWEEP_PARAM_KEYS, true, entries)
 }
 
 /// Cartesian expansion of the axes. Point `i`'s assignment pairs each
@@ -151,40 +254,10 @@ pub fn expand(axes: &[ParamAxis]) -> Vec<Vec<(String, String)>> {
     points
 }
 
-/// Apply one `key=value` assignment to a scenario.
+/// Apply one `key=value` assignment to a scenario through
+/// [`SWEEP_PARAM_KEYS`].
 pub fn apply_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()> {
-    let bad_num = || BoosterError::Config(format!("sweep key '{key}': invalid value '{value}'"));
-    match key {
-        "machine" => spec.machine = presets::machine(value)?,
-        "workload" => spec.workload = presets::workload(value)?,
-        "nodes" => spec.parallelism.nodes = value.parse().map_err(|_| bad_num())?,
-        "precision" => spec.precision = value.to_string(),
-        "algo" => spec.parallelism.algo = value.to_string(),
-        "compression" => spec.parallelism.compression = value.to_string(),
-        "placement" => spec.parallelism.placement = value.to_string(),
-        "bucket_mb" => {
-            let mb: f64 = value.parse().map_err(|_| bad_num())?;
-            spec.parallelism.bucket_bytes = mb * 1e6;
-        }
-        "batch" => spec.workload.batch_per_gpu = value.parse().map_err(|_| bad_num())?,
-        "stages" => spec.parallelism.pipeline_stages = value.parse().map_err(|_| bad_num())?,
-        "tensor" => spec.parallelism.tensor_parallel = value.parse().map_err(|_| bad_num())?,
-        "microbatches" => spec.parallelism.microbatches = value.parse().map_err(|_| bad_num())?,
-        "schedule" => spec.parallelism.schedule = value.to_string(),
-        "sharding" => {
-            // Canonicalize aliases (off/zero1/zero2) so row columns, the
-            // /zero- name suffix and check_bench.py all see one spelling;
-            // unknown values pass through for spec validation to reject.
-            spec.parallelism.sharding = crate::train::zero::Sharding::canonicalize(value);
-        }
-        _ => {
-            return Err(BoosterError::Config(format!(
-                "unknown sweep key '{key}' (sweepable: {})",
-                SWEEPABLE_KEYS.join(", ")
-            )))
-        }
-    }
-    Ok(())
+    crate::sweep::apply_param_table("sweep", SWEEP_PARAM_KEYS, spec, key, value)
 }
 
 /// Sweepable keys whose values are arithmetic *expressions* — possibly
@@ -1049,8 +1122,8 @@ mod tests {
         let err = parse_params(&s(&["stagez=4"])).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("unknown sweep key 'stagez'"), "{msg}");
-        for key in SWEEPABLE_KEYS {
-            assert!(msg.contains(key), "error must list '{key}': {msg}");
+        for key in SWEEP_PARAM_KEYS {
+            assert!(msg.contains(key.name), "error must list '{}': {msg}", key.name);
         }
         assert!(msg.contains("tensor"), "{msg}");
         // Same treatment when the bad key hides after a valid axis.

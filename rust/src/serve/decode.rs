@@ -22,6 +22,22 @@
 //! **Prefill** prices the prompt like one pipelined forward: the same
 //! roofline over `2 · params · prompt_tokens · n_prompts ÷ tensor` FLOPs
 //! plus the same per-layer allreduces at prompt volume.
+//!
+//! **Speculative decoding** (a [`crate::scenario::spec::DraftSpec`] on
+//! the serving block): a
+//! draft model proposes `lookahead` (γ) tokens per round and the target
+//! verifies all γ+1 slots. The model prices speculation's *overhead*,
+//! not an uncalibrated speedup: the draft itself is assumed hidden under
+//! the target's bandwidth stalls (it is ~10× smaller and decode is
+//! memory-bound), so a round of perfect speculation costs exactly what
+//! γ+1 plain steps cost — and every rejected prefix charges the wasted
+//! verify slots plus a re-run of the (replicated, collective-free) draft
+//! pass. Expected accepted tokens per round follow the standard
+//! geometric form `E(a) = (1 − a^{γ+1}) / (1 − a)`, so the per-token
+//! multiplier is `(γ+1)/E(a)` — exactly 1.0 at `acceptance = 1.0`, which
+//! makes the speculative path degenerate **bit-exactly** to the plain
+//! decode there (CI pins the CSV bytes against a non-speculative
+//! control).
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -140,9 +156,16 @@ impl<'t> DecodeTimeline<'t> {
             * self.timeline.precision.bytes() as f64
     }
 
-    /// Wire bytes of one tensor-group layer allreduce at prefill volume.
-    fn prefill_allreduce_bytes(&self, n_prompts: usize) -> f64 {
-        self.token_allreduce_bytes(n_prompts) * self.serving.prompt_tokens as f64
+    /// Wire bytes of one tensor-group layer allreduce over `tokens`
+    /// prefill tokens. All factors are exact integers with a product far
+    /// below 2^53, so this equals the old per-prompt form
+    /// (`token_allreduce_bytes(n) · prompt_tokens`) bit-for-bit when
+    /// `tokens = prompt_tokens · n` — the generalization (variable-length
+    /// traces, chunked prefill) leaves every fixed-length warm/eval byte
+    /// size unchanged.
+    fn prefill_allreduce_bytes(&self, tokens: usize) -> f64 {
+        (self.serving.kv_heads * self.serving.head_dim * tokens) as f64
+            * self.timeline.precision.bytes() as f64
     }
 
     /// Worst tensor-group allreduce seconds for `2·layers` reductions of
@@ -167,9 +190,66 @@ impl<'t> DecodeTimeline<'t> {
         Ok(per_step * worst)
     }
 
+    /// Seconds for one draft-model forward over `batch` requests. The
+    /// draft runs replicated per rank — no tensor sharding and *no
+    /// collective traffic*, deliberately, so a draft's presence never
+    /// inserts points into the shared `(gpu-set, algo)` cost-cache
+    /// curves the non-speculative rows interpolate from (which would
+    /// break the acceptance=1.0 byte-exact degeneracy). Streams the
+    /// draft weights plus a draft-sized KV cache; exactly 0 for an
+    /// idealized free draft (`params == 0`).
+    fn draft_token_time(&self, batch: usize) -> f64 {
+        let draft = match &self.serving.draft {
+            Some(d) if !d.is_free() => d,
+            _ => return 0.0,
+        };
+        let prec = self.timeline.precision;
+        let weights = draft.params * prec.bytes() as f64;
+        let head_bytes = (self.serving.kv_heads * self.serving.head_dim) as f64
+            * prec.bytes() as f64;
+        let cache = 2.0 * draft.layers as f64 * head_bytes * self.serving.seq_len() as f64;
+        let flops = 2.0 * draft.params * batch as f64;
+        self.timeline.topo.node_spec.gpu.kernel_time(
+            flops,
+            weights + cache * batch as f64,
+            prec,
+            self.timeline.efficiency,
+        )
+    }
+
+    /// Expected tokens a speculative round of `lookahead` drafted tokens
+    /// commits at per-token acceptance `a`: the truncated geometric sum
+    /// `E(a) = (1 − a^{γ+1}) / (1 − a)`, and exactly `γ+1` at `a = 1`
+    /// (the closed form is 0/0 there; the limit is the full round).
+    fn expected_tokens(acceptance: f64, lookahead: usize) -> f64 {
+        let g1 = (lookahead + 1) as f64;
+        if acceptance >= 1.0 {
+            g1
+        } else {
+            (1.0 - acceptance.powf(g1)) / (1.0 - acceptance)
+        }
+    }
+
+    /// Apply the speculative-overhead multiplier to one plain decode
+    /// step: `(γ+1)/E(a)` verify slots are spent per committed token,
+    /// and the excess beyond 1 also re-runs the `γ`-token draft pass.
+    /// At `acceptance = 1.0` both factors are computed as literally
+    /// `g1/g1 == 1.0` and `1.0 − 1.0 == 0.0`, so the result is
+    /// `base · 1.0 + x · 0.0` — bit-exact identity with plain decode.
+    fn speculative_time(&self, base: f64, batch: usize) -> f64 {
+        let draft = match &self.serving.draft {
+            Some(d) => d,
+            None => return base,
+        };
+        let g1 = (draft.lookahead + 1) as f64;
+        let slots = g1 / Self::expected_tokens(draft.acceptance, draft.lookahead);
+        base * slots + draft.lookahead as f64 * self.draft_token_time(batch) * (slots - 1.0)
+    }
+
     /// Seconds to decode one token for `batch` resident requests on a
     /// replica: roofline compute (weights + KV stream) plus the
-    /// per-layer tensor allreduces.
+    /// per-layer tensor allreduces, inflated by the speculative-decode
+    /// overhead when the serving block carries a draft.
     pub fn token_time(&self, gpus: &[GpuId], batch: usize) -> Result<f64> {
         let layout = self.layout(gpus.len())?;
         let flops = 2.0 * self.model.params * batch as f64 / self.tensor as f64;
@@ -180,23 +260,35 @@ impl<'t> DecodeTimeline<'t> {
             self.timeline.efficiency,
         );
         let tp = self.tensor_comm(&layout, gpus, self.token_allreduce_bytes(batch))?;
-        Ok(compute + tp)
+        Ok(self.speculative_time(compute + tp, batch))
     }
 
-    /// Seconds to prefill `n_prompts` freshly admitted prompts: one
-    /// forward over `prompt_tokens · n_prompts` tokens plus the per-layer
-    /// allreduces at prompt volume.
+    /// Seconds to prefill `n_prompts` freshly admitted fixed-length
+    /// prompts (`prompt_tokens` each) — the spec-default form, delegating
+    /// to [`DecodeTimeline::prefill_time_tokens`].
     pub fn prefill_time(&self, gpus: &[GpuId], n_prompts: usize) -> Result<f64> {
+        self.prefill_time_tokens(gpus, self.serving.prompt_tokens * n_prompts, n_prompts)
+    }
+
+    /// Seconds to prefill `tokens` prompt tokens spread over `n_prompts`
+    /// requests — the general form variable-length traces and chunked
+    /// prefill feed: one forward over `tokens` plus the per-layer
+    /// allreduces at that volume. `n_prompts` sizes the KV stream term.
+    pub fn prefill_time_tokens(
+        &self,
+        gpus: &[GpuId],
+        tokens: usize,
+        n_prompts: usize,
+    ) -> Result<f64> {
         let layout = self.layout(gpus.len())?;
-        let tokens = (self.serving.prompt_tokens * n_prompts) as f64;
-        let flops = 2.0 * self.model.params * tokens / self.tensor as f64;
+        let flops = 2.0 * self.model.params * tokens as f64 / self.tensor as f64;
         let compute = self.timeline.topo.node_spec.gpu.kernel_time(
             flops,
             self.step_bytes(n_prompts),
             self.timeline.precision,
             self.timeline.efficiency,
         );
-        let tp = self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(n_prompts))?;
+        let tp = self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(tokens))?;
         Ok(compute + tp)
     }
 
@@ -206,6 +298,10 @@ impl<'t> DecodeTimeline<'t> {
     /// and freeze it before sharding evaluation across workers. A replica
     /// that fails the KV fit issues no queries (neither does its
     /// evaluation — it is infeasible before any collective is priced).
+    /// Variable-length traces and chunked prefill can query token totals
+    /// this enumeration does not cover; a frozen-cache miss simulates
+    /// deterministically without learning, so those answers stay
+    /// bit-stable across worker interleavings too — just uncached.
     pub fn warm_comm(&self, gpus: &[GpuId]) -> Result<()> {
         let layout = self.layout(gpus.len())?;
         if layout.tensor == 1 {
@@ -217,7 +313,11 @@ impl<'t> DecodeTimeline<'t> {
         };
         for b in 1..=cap {
             self.tensor_comm(&layout, gpus, self.token_allreduce_bytes(b))?;
-            self.tensor_comm(&layout, gpus, self.prefill_allreduce_bytes(b))?;
+            self.tensor_comm(
+                &layout,
+                gpus,
+                self.prefill_allreduce_bytes(self.serving.prompt_tokens * b),
+            )?;
         }
         Ok(())
     }
@@ -241,7 +341,7 @@ impl<'t> DecodeTimeline<'t> {
 mod tests {
     use super::*;
     use crate::scenario::presets;
-    use crate::scenario::spec::ScenarioSpec;
+    use crate::scenario::spec::{DraftSpec, ScenarioSpec};
 
     fn serve_spec(machine: &str, tensor: usize) -> ScenarioSpec {
         ScenarioSpec::builder(presets::machine(machine).unwrap())
@@ -319,6 +419,99 @@ mod tests {
         let dt = DecodeTimeline::from_scenario(&wide, &topo).unwrap();
         let cap = dt.batch_cap().unwrap();
         assert!(cap > 8 && cap < 512, "KV fit must bind: {cap}");
+    }
+
+    fn with_draft(machine: &str, tensor: usize, draft: DraftSpec) -> ScenarioSpec {
+        let mut spec = serve_spec(machine, tensor);
+        spec.serving.as_mut().unwrap().draft = Some(draft);
+        spec
+    }
+
+    fn sized_draft(params: f64, layers: usize, acceptance: f64) -> DraftSpec {
+        let mut d = DraftSpec::defaults();
+        d.params = params;
+        d.layers = layers;
+        d.acceptance = acceptance;
+        d
+    }
+
+    #[test]
+    fn acceptance_one_degenerates_bit_exactly_to_plain_decode() {
+        // The tentpole degeneracy contract, on two machine presets: a
+        // draft at acceptance=1.0 — even a sized one — must reproduce
+        // the non-speculative token time to the bit, at every feasible
+        // batch, and never touch prefill.
+        for machine in ["juwels_booster", "isambard_ai"] {
+            let plain = serve_spec(machine, 1);
+            let topo = plain.machine.build_topology().unwrap();
+            let dt_plain = DecodeTimeline::from_scenario(&plain, &topo).unwrap();
+            let drafted = with_draft(machine, 1, sized_draft(1.5e9, 24, 1.0));
+            let dt = DecodeTimeline::from_scenario(&drafted, &topo).unwrap();
+            let gpus = plain.job_gpus(&topo).unwrap();
+            let one = &gpus[..1];
+            for b in 1..=dt.batch_cap().unwrap() {
+                assert_eq!(
+                    dt.token_time(one, b).unwrap(),
+                    dt_plain.token_time(one, b).unwrap(),
+                    "{machine} b={b}: acceptance=1.0 must be the identity"
+                );
+            }
+            assert_eq!(
+                dt.prefill_time(one, 2).unwrap(),
+                dt_plain.prefill_time(one, 2).unwrap(),
+                "{machine}: speculation never reprices prefill"
+            );
+        }
+    }
+
+    #[test]
+    fn imperfect_acceptance_prices_strictly_positive_overhead() {
+        let spec = serve_spec("juwels_booster", 1);
+        let topo = spec.machine.build_topology().unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let one = &gpus[..1];
+        let base = DecodeTimeline::from_scenario(&spec, &topo)
+            .unwrap()
+            .token_time(one, 4)
+            .unwrap();
+        let at = |params: f64, layers: usize, acceptance: f64| {
+            let s = with_draft("juwels_booster", 1, sized_draft(params, layers, acceptance));
+            DecodeTimeline::from_scenario(&s, &topo).unwrap().token_time(one, 4).unwrap()
+        };
+        // A free draft still pays wasted verify slots below a=1.0, and
+        // the overhead grows monotonically as acceptance erodes.
+        let free_08 = at(0.0, 0, 0.8);
+        let free_06 = at(0.0, 0, 0.6);
+        assert!(free_08 > base, "a=0.8 must cost more than plain: {free_08} vs {base}");
+        assert!(free_06 > free_08, "a=0.6 must cost more than a=0.8");
+        // A sized draft adds its own re-run cost on top.
+        let sized_08 = at(1.5e9, 24, 0.8);
+        assert!(sized_08 > free_08, "a sized draft re-runs cost real time");
+    }
+
+    #[test]
+    fn a_draft_adds_no_collective_queries() {
+        // The draft is replicated — priced with zero tensor traffic — so
+        // the warm query stream (and therefore the shared cost-cache
+        // curves every row interpolates from) is identical with and
+        // without speculation.
+        let plain = serve_spec("juwels_booster", 2);
+        let topo = plain.machine.build_topology().unwrap();
+        let gpus = plain.job_gpus(&topo).unwrap();
+        let pair = &gpus[..2];
+        let queries = |spec: &ScenarioSpec| {
+            DecodeTimeline::from_scenario(spec, &topo)
+                .unwrap()
+                .warm_queries(pair)
+                .unwrap()
+                .iter()
+                .map(|q| q.key())
+                .collect::<Vec<_>>()
+        };
+        let drafted = with_draft("juwels_booster", 2, sized_draft(1.5e9, 24, 0.7));
+        let without = queries(&plain);
+        assert!(!without.is_empty(), "tensor=2 must record allreduce queries");
+        assert_eq!(queries(&drafted), without, "draft must not perturb the warm stream");
     }
 
     #[test]

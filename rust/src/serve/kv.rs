@@ -32,6 +32,22 @@ pub fn weight_bytes_per_rank(model: &PipelinedModel, precision: Precision, tenso
     model.params * precision.bytes() as f64 / tensor.max(1) as f64
 }
 
+/// KV-cache bytes `tokens` sequence positions pin per rank, sharded
+/// `tensor`-ways. The per-request closed form and the paged block size
+/// are both this expression (at `seq_len` and `kv_block_tokens`
+/// respectively), so paged allocation at `block = seq_len` prices the
+/// same bytes bit-exactly.
+pub fn kv_bytes_for_tokens(
+    serving: &ServingSpec,
+    model: &PipelinedModel,
+    precision: Precision,
+    tensor: usize,
+    tokens: usize,
+) -> f64 {
+    let head_bytes = (serving.kv_heads * serving.head_dim) as f64 * precision.bytes() as f64;
+    2.0 * model.layers as f64 * head_bytes * tokens as f64 / tensor.max(1) as f64
+}
+
 /// KV-cache bytes one request pins per rank for its whole lifetime
 /// (prompt + all decoded tokens), sharded `tensor`-ways. Zero sequence
 /// length means zero cache — the fit check then degenerates bit-exactly
@@ -42,8 +58,7 @@ pub fn kv_bytes_per_request(
     precision: Precision,
     tensor: usize,
 ) -> f64 {
-    let head_bytes = (serving.kv_heads * serving.head_dim) as f64 * precision.bytes() as f64;
-    2.0 * model.layers as f64 * head_bytes * serving.seq_len() as f64 / tensor.max(1) as f64
+    kv_bytes_for_tokens(serving, model, precision, tensor, serving.seq_len())
 }
 
 /// Per-rank memory fit for one serving replica: weights plus at least one
@@ -75,6 +90,125 @@ pub fn max_resident_batch(
         return Ok(usize::MAX);
     }
     Ok(((hbm - weights) / kv) as usize)
+}
+
+/// Block-granular (paged) KV allocation — vLLM-style. HBM left over by
+/// the weights is divided into fixed blocks of `kv_block_tokens` tokens;
+/// requests claim blocks as their sequences actually grow, so admission
+/// tracks real per-step occupancy instead of reserving every request's
+/// worst case up front. Whole blocks of a shared prompt prefix
+/// (`prefix_tokens`) are allocated once and shared by every request —
+/// those tokens skip both the claim and the prefill charge.
+///
+/// Degeneracy: at `kv_block_tokens = seq_len` one block is one request's
+/// closed-form reservation — `total_blocks` equals
+/// [`max_resident_batch`] bit-exactly (same float expression, same
+/// floor), a request owns exactly one block from admission to
+/// retirement, and no prefix block can ever be carved out (the prefix is
+/// shorter than the prompt, so shorter than a block).
+#[derive(Debug, Clone)]
+pub struct KvPager {
+    /// Tokens per block.
+    pub block_tokens: usize,
+    /// Blocks the rank's HBM holds beside the weights.
+    pub total_blocks: usize,
+    /// Blocks permanently pinned by the shared prompt prefix.
+    pub shared_blocks: usize,
+    /// Prefix tokens covered by `shared_blocks` (whole blocks only).
+    pub prefix_cached_tokens: usize,
+    /// Blocks currently claimed by in-flight requests (excludes shared).
+    used_blocks: usize,
+}
+
+impl KvPager {
+    /// Build the pager for a serving point, or `None` when the spec is
+    /// unpaged (`kv_block_tokens = 0` keeps the PR-7 closed form).
+    /// Infeasibility reuses [`max_resident_batch`]'s exact error, so the
+    /// paged and unpaged paths file identical infeasible reasons.
+    pub fn from_serving(
+        topo: &Topology,
+        model: &PipelinedModel,
+        serving: &ServingSpec,
+        precision: Precision,
+        tensor: usize,
+    ) -> Result<Option<KvPager>> {
+        if serving.kv_block_tokens == 0 {
+            return Ok(None);
+        }
+        // The closed-form fit gates paged mode too: its error text is the
+        // one the sweep files as the infeasible reason either way.
+        max_resident_batch(topo, model, serving, precision, tensor)?;
+        let block_tokens = serving.kv_block_tokens;
+        let hbm = topo.node_spec.gpu.hbm_bytes as f64;
+        let weights = weight_bytes_per_rank(model, precision, tensor);
+        let block_bytes = kv_bytes_for_tokens(serving, model, precision, tensor, block_tokens);
+        if block_bytes <= 0.0 {
+            return Ok(None);
+        }
+        let total_blocks = ((hbm - weights) / block_bytes) as usize;
+        let prefix = serving.prefix_tokens.min(serving.prompt_tokens);
+        let shared_blocks = prefix / block_tokens;
+        let prefix_cached_tokens = shared_blocks * block_tokens;
+        let lifetime = serving.seq_len() - prefix_cached_tokens;
+        let lifetime_blocks = lifetime.div_ceil(block_tokens);
+        if shared_blocks + lifetime_blocks > total_blocks {
+            return Err(BoosterError::Config(format!(
+                "paged KV does not fit: one {}-token request needs {} blocks of {} \
+                 tokens (+{} shared prefix blocks) but only {} fit beside the weights",
+                serving.seq_len(),
+                lifetime_blocks,
+                block_tokens,
+                shared_blocks,
+                total_blocks,
+            )));
+        }
+        Ok(Some(KvPager {
+            block_tokens,
+            total_blocks,
+            shared_blocks,
+            prefix_cached_tokens,
+            used_blocks: 0,
+        }))
+    }
+
+    /// Blocks a request owns once `resident_tokens` of its sequence are
+    /// materialized (prompt progress + decoded so far); the shared prefix
+    /// is not owned.
+    pub fn owned_blocks(&self, resident_tokens: usize) -> usize {
+        resident_tokens
+            .saturating_sub(self.prefix_cached_tokens)
+            .div_ceil(self.block_tokens)
+    }
+
+    /// Blocks still free for claims.
+    pub fn free_blocks(&self) -> usize {
+        self.total_blocks - self.shared_blocks - self.used_blocks
+    }
+
+    /// Blocks currently claimed by in-flight requests.
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    /// Claimable capacity (total minus the pinned shared prefix).
+    pub fn capacity_blocks(&self) -> usize {
+        self.total_blocks - self.shared_blocks
+    }
+
+    /// Claim `blocks` if the pool holds them; false leaves state intact.
+    pub fn try_claim(&mut self, blocks: usize) -> bool {
+        if blocks > self.free_blocks() {
+            return false;
+        }
+        self.used_blocks += blocks;
+        true
+    }
+
+    /// Return `blocks` to the pool.
+    pub fn release(&mut self, blocks: usize) {
+        debug_assert!(blocks <= self.used_blocks, "releasing unclaimed blocks");
+        self.used_blocks = self.used_blocks.saturating_sub(blocks);
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +260,79 @@ mod tests {
             assert!(err.contains("does not fit"), "{err}");
             assert!(err.contains("GB HBM"), "{err}");
         }
+    }
+
+    #[test]
+    fn pager_at_block_eq_seq_len_degenerates_to_the_closed_form() {
+        // One block = one request's closed-form reservation, on two
+        // machine presets: total_blocks must equal max_resident_batch
+        // bit-exactly and a request owns exactly one block for life.
+        for machine in ["juwels_booster", "isambard_ai"] {
+            let (topo, model, mut serving) = setup(machine, "gpt3_13b");
+            serving.kv_block_tokens = serving.seq_len();
+            let cap = max_resident_batch(&topo, &model, &serving, Precision::Fp16, 1).unwrap();
+            let pager = KvPager::from_serving(&topo, &model, &serving, Precision::Fp16, 1)
+                .unwrap()
+                .expect("paged");
+            assert_eq!(pager.total_blocks, cap, "{machine}");
+            assert_eq!(pager.shared_blocks, 0);
+            assert_eq!(pager.prefix_cached_tokens, 0);
+            assert_eq!(pager.owned_blocks(serving.prompt_tokens + 1), 1);
+            assert_eq!(pager.owned_blocks(serving.seq_len()), 1);
+            // A prefix shorter than the prompt can never pin a block at
+            // this granularity, so the degeneracy survives prefix_tokens.
+            serving.prefix_tokens = serving.prompt_tokens;
+            let pager = KvPager::from_serving(&topo, &model, &serving, Precision::Fp16, 1)
+                .unwrap()
+                .unwrap();
+            assert_eq!(pager.shared_blocks, 0, "{machine}");
+        }
+    }
+
+    #[test]
+    fn pager_tracks_claims_and_carves_out_the_shared_prefix() {
+        let (topo, model, mut serving) = setup("juwels_booster", "gpt3_13b");
+        serving.kv_block_tokens = 64;
+        serving.prefix_tokens = 200; // 3 whole 64-token blocks cached
+        let mut pager = KvPager::from_serving(&topo, &model, &serving, Precision::Fp16, 1)
+            .unwrap()
+            .unwrap();
+        assert_eq!(pager.shared_blocks, 3);
+        assert_eq!(pager.prefix_cached_tokens, 192);
+        // 512-token prompt: 512-192 = 320 owned tokens = 5 blocks.
+        assert_eq!(pager.owned_blocks(serving.prompt_tokens), 5);
+        // Full lifetime 576-192 = 384 tokens = 6 blocks.
+        assert_eq!(pager.owned_blocks(serving.seq_len()), 6);
+        assert_eq!(pager.capacity_blocks(), pager.total_blocks - 3);
+        let free0 = pager.free_blocks();
+        assert!(pager.try_claim(5));
+        assert_eq!(pager.used_blocks(), 5);
+        assert_eq!(pager.free_blocks(), free0 - 5);
+        assert!(!pager.try_claim(pager.free_blocks() + 1), "overcommit refused");
+        assert_eq!(pager.used_blocks(), 5, "failed claim leaves state intact");
+        pager.release(5);
+        assert_eq!(pager.free_blocks(), free0);
+        // Unpaged spec: no pager.
+        serving.kv_block_tokens = 0;
+        serving.prefix_tokens = 0;
+        assert!(KvPager::from_serving(&topo, &model, &serving, Precision::Fp16, 1)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn paged_infeasibility_files_the_closed_form_error() {
+        let (topo, model, mut serving) = setup("juwels_booster", "gpt3_175b");
+        serving.kv_block_tokens = 64;
+        let err = KvPager::from_serving(&topo, &model, &serving, Precision::Fp16, 1)
+            .unwrap_err()
+            .to_string();
+        // Same reason string the unpaged path files, so the sweep's
+        // infeasible records are identical in both modes.
+        let closed = max_resident_batch(&topo, &model, &serving, Precision::Fp16, 1)
+            .unwrap_err()
+            .to_string();
+        assert_eq!(err, closed);
     }
 
     #[test]

@@ -18,11 +18,17 @@
 //!   (roofline compute + per-layer tensor allreduces through the shared
 //!   cost cache) and the prefill pass over the prompt;
 //! * [`queue`] — continuous-batching queue simulation: deterministic
-//!   seeded Poisson arrivals, iteration-level admission up to the
-//!   KV-cache batch cap, p50/p99 request latency and per-replica
-//!   tokens/s;
+//!   seeded Poisson arrivals (or a replayed [`trace::Trace`], or
+//!   heavy-tail lognormal/zipf lengths), iteration-level admission up to
+//!   the KV-cache batch cap or the paged-KV block pool, chunked prefill,
+//!   and typed [`queue::QueueStats`] (p50/p99 latency, tokens/s,
+//!   occupancy);
+//! * [`trace`] — replayable arrival/length traces (JSON lines with the
+//!   journal's torn-tail tolerance), bit-exact record/replay of the
+//!   Poisson stream;
 //! * [`sweep`] — the `booster serve-sweep` grid engine over
-//!   replicas × tensor × batch × machine, sharing the training sweep's
+//!   replicas × tensor × batch × machine (plus speculative-acceptance,
+//!   KV-block and trace axes), sharing the training sweep's
 //!   journal/resume machinery with a `serve` kind tag so the two sweep
 //!   families can never cross-resume.
 //!
@@ -33,8 +39,10 @@ pub mod decode;
 pub mod kv;
 pub mod queue;
 pub mod sweep;
+pub mod trace;
 
 pub use decode::DecodeTimeline;
-pub use kv::{kv_bytes_per_request, max_resident_batch, weight_bytes_per_rank};
-pub use queue::{simulate_replica, ReplicaStats};
-pub use sweep::{ServeOutcome, ServeRow, SERVE_KEYS};
+pub use kv::{kv_bytes_per_request, max_resident_batch, weight_bytes_per_rank, KvPager};
+pub use queue::{simulate_replica, QueueStats};
+pub use sweep::{ServeOutcome, ServeRow};
+pub use trace::{Trace, TraceRecord};

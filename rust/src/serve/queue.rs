@@ -1,37 +1,136 @@
 //! Continuous-batching queue simulation — one serving replica under
-//! Poisson load.
+//! Poisson, heavy-tail or trace-replayed load.
 //!
 //! Iteration-level scheduling as production servers (Orca, vLLM) run it:
 //! between *any* two token steps the replica admits every arrived request
-//! up to its batch cap (the KV-fit ceiling), pays one prefill pass for
-//! the newly admitted prompts, then decodes one token for every resident
-//! request. Requests leave after `decode_tokens` tokens; their latency is
-//! admission-to-last-token plus the time spent queueing before admission.
+//! up to its batch cap (the KV-fit ceiling — or, in paged mode, the
+//! block pool), pays the prefill for the newly admitted prompts, then
+//! decodes one token for every resident request. Requests leave after
+//! their decode length; latency is arrival-to-last-token.
 //!
-//! Determinism is by construction: arrivals come from the repo's seeded
-//! [`Rng`] (`exponential` inter-arrival gaps), token/prefill times are
-//! memoized per batch size, and the simulation consumes no other
-//! randomness — the same `(spec, gpus, seed)` replays the same trace, so
-//! journaled serve rows survive a resume byte-identically.
+//! Beyond the PR-7 default (seeded Poisson, fixed lengths, closed-form
+//! KV, monolithic prefill), the realistic modes are:
+//!
+//! * **traces** ([`Trace`]) — replayable arrival/length streams replace
+//!   the generated arrivals; trace mode consumes *no* randomness, and a
+//!   Poisson stream recorded with [`Trace::from_poisson`] replays
+//!   bit-exactly (the draw order here is arrivals-first, cumulative —
+//!   exactly what the recorder writes);
+//! * **heavy-tail lengths** (`length_dist: lognormal | zipf`) — seeded
+//!   per-request prompt/decode lengths around the spec's base lengths,
+//!   drawn *after* the arrival stream so the arrival process is
+//!   unchanged;
+//! * **paged KV** ([`KvPager`]) — admission claims blocks for the
+//!   prompt + first token, decode claims lazily as sequences grow, and
+//!   when the pool runs dry the newest-arrival request is preempted
+//!   (pages released, restarted from the waiting queue) — occupancy then
+//!   measures real block usage instead of worst-case reservations;
+//! * **chunked prefill** (`chunk_tokens > 0`) — prompts prefill
+//!   `chunk_tokens` per step interleaved with decode instead of one
+//!   monolithic charge at admission, so a long prompt stops
+//!   head-of-line-blocking the resident decode batch. A chunk at least
+//!   as large as the prompt takes the identical charges (same memo keys)
+//!   as unchunked mode.
+//!
+//! Determinism is by construction: all randomness comes from the seeded
+//! [`Rng`] in a documented draw order, token/prefill times are memoized
+//! per (tokens, batch), and the default configuration walks the exact
+//! PR-7 float sequence — journaled serve rows survive a resume
+//! byte-identically.
+
+use std::collections::{HashMap, VecDeque};
 
 use crate::serve::decode::DecodeTimeline;
+use crate::serve::kv::KvPager;
+use crate::serve::trace::{Trace, TraceRecord};
 use crate::topology::GpuId;
-use crate::util::error::Result;
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Steady-state statistics of one simulated replica.
+/// Steady-state statistics of one simulated replica — the single source
+/// the serve sweep's JSON/CSV stat columns derive from.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ReplicaStats {
+pub struct QueueStats {
     /// Median request latency (arrival → last token), seconds.
     pub p50: f64,
     /// 99th-percentile request latency, seconds.
     pub p99: f64,
     /// Decoded tokens per second over the simulated span.
     pub tokens_per_s: f64,
-    /// Requests completed (== the spec's `sim_requests`).
+    /// Requests completed (`sim_requests`, or the trace length).
     pub completed: usize,
-    /// Mean resident batch across token steps (batching effectiveness).
+    /// Mean decode batch across steps (batching effectiveness).
     pub mean_batch: f64,
+    /// Mean fraction of the KV capacity in use across steps: claimed
+    /// blocks / claimable pool (paged), resident requests / batch cap
+    /// (unpaged).
+    pub occupancy: f64,
+    /// Requests preempted (pages reclaimed, restarted) — paged mode only.
+    pub preempted: usize,
+}
+
+impl QueueStats {
+    /// The CSV columns these stats contribute to a serve row, in the
+    /// order [`QueueStats::csv_cells`] emits them. One definition feeds
+    /// both the header and the per-row cells, so the two can never skew.
+    pub const CSV_COLUMNS: &'static str =
+        "p50_ms,p99_ms,mean_batch,tokens_per_s,occupancy,completed,preempted";
+
+    /// The CSV cells matching [`QueueStats::CSV_COLUMNS`]. Latencies are
+    /// converted to milliseconds here — the CSV is the lossy, human
+    /// surface; the JSON fields stay raw.
+    pub fn csv_cells(&self) -> String {
+        format!(
+            "{:.2},{:.2},{:.2},{:.1},{:.4},{},{}",
+            self.p50 * 1e3,
+            self.p99 * 1e3,
+            self.mean_batch,
+            self.tokens_per_s,
+            self.occupancy,
+            self.completed,
+            self.preempted,
+        )
+    }
+
+    /// The JSON stat fields of a serve row. Latencies are serialized in
+    /// raw seconds (`p50_s`/`p99_s`) with shortest-round-trip `Display`,
+    /// so `from_json_fields` inverts this bit-exactly — the journal
+    /// resume contract; ms conversion happens only in the CSV.
+    pub fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("p50_s", Json::Num(self.p50)),
+            ("p99_s", Json::Num(self.p99)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("occupancy", Json::Num(self.occupancy)),
+            ("preempted", Json::Num(self.preempted as f64)),
+        ]
+    }
+
+    /// Inverse of [`QueueStats::json_fields`] (journal replay).
+    pub fn from_json_fields(j: &Json) -> Result<QueueStats> {
+        fn num(j: &Json, k: &str) -> Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .ok_or_else(|| BoosterError::Artifact(format!("queue stat '{k}' is not a number")))
+        }
+        fn int(j: &Json, k: &str) -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| {
+                BoosterError::Artifact(format!("queue stat '{k}' is not an integer"))
+            })
+        }
+        Ok(QueueStats {
+            p50: num(j, "p50_s")?,
+            p99: num(j, "p99_s")?,
+            tokens_per_s: num(j, "tokens_per_s")?,
+            completed: int(j, "completed")?,
+            mean_batch: num(j, "mean_batch")?,
+            occupancy: num(j, "occupancy")?,
+            preempted: int(j, "preempted")?,
+        })
+    }
 }
 
 /// Order-statistic quantile on a sorted sample: `sorted[ceil(q·n) - 1]`.
@@ -41,100 +140,346 @@ fn quantile(sorted: &[f64], q: f64) -> f64 {
     sorted[rank - 1]
 }
 
-/// Simulate one replica serving `rate` requests/s of Poisson load until
-/// the spec's `sim_requests` requests complete. `batch_cap` is the
-/// admission ceiling (`min(max_batch, KV-fit)`); `rng` drives only the
-/// arrival process.
+/// Lognormal length multiplier shape (`mu = -sigma²/2` keeps the mean
+/// multiplier at 1, so the configured lengths stay the mean).
+const LOGNORMAL_SIGMA: f64 = 0.75;
+/// Zipf length multipliers: rank+1 over `[1, ZIPF_N]`, exponent `ZIPF_S`
+/// — most requests stay at the base length, a heavy tail stretches to
+/// `ZIPF_N ×`.
+const ZIPF_N: usize = 8;
+const ZIPF_S: f64 = 1.5;
+
+fn scaled_len(base: usize, multiplier: f64) -> usize {
+    ((base as f64 * multiplier).round() as usize).max(1)
+}
+
+/// Generate the arrival/length stream for one replica. Draw order is the
+/// record/replay contract: first exactly `sim_requests` cumulative
+/// `Exp(rate)` inter-arrival gaps (identical to PR 7 and to
+/// [`Trace::from_poisson`]), then — only for heavy-tail dists — one
+/// prompt and one decode length per request.
+fn generate_records(
+    serving: &crate::scenario::spec::ServingSpec,
+    rate: f64,
+    rng: &mut Rng,
+) -> Result<Vec<TraceRecord>> {
+    let n = serving.sim_requests;
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        t += rng.exponential(rate);
+        arrivals.push(t);
+    }
+    match serving.length_dist.as_str() {
+        "fixed" => Ok(arrivals
+            .into_iter()
+            .map(|arrival_s| TraceRecord {
+                arrival_s,
+                prompt_tokens: serving.prompt_tokens,
+                decode_tokens: serving.decode_tokens,
+            })
+            .collect()),
+        "lognormal" => {
+            let mu = -LOGNORMAL_SIGMA * LOGNORMAL_SIGMA / 2.0;
+            Ok(arrivals
+                .into_iter()
+                .map(|arrival_s| TraceRecord {
+                    arrival_s,
+                    prompt_tokens: scaled_len(
+                        serving.prompt_tokens,
+                        rng.lognormal(mu, LOGNORMAL_SIGMA),
+                    ),
+                    decode_tokens: scaled_len(
+                        serving.decode_tokens,
+                        rng.lognormal(mu, LOGNORMAL_SIGMA),
+                    ),
+                })
+                .collect())
+        }
+        "zipf" => Ok(arrivals
+            .into_iter()
+            .map(|arrival_s| TraceRecord {
+                arrival_s,
+                prompt_tokens: serving.prompt_tokens * (rng.zipf(ZIPF_N, ZIPF_S) + 1),
+                decode_tokens: serving.decode_tokens * (rng.zipf(ZIPF_N, ZIPF_S) + 1),
+            })
+            .collect()),
+        other => Err(BoosterError::Config(format!(
+            "length_dist '{other}' unknown (expected fixed, lognormal or zipf)"
+        ))),
+    }
+}
+
+/// One in-flight (or requeued) request.
+#[derive(Debug, Clone)]
+struct Request {
+    /// Arrival time (fixed across preemptions — latency is end-to-end).
+    arrival: f64,
+    /// Prompt length.
+    prompt: usize,
+    /// Decode tokens still to emit.
+    decode_left: usize,
+    /// Full decode length (restored on preemption restart).
+    decode_total: usize,
+    /// Prompt tokens still to prefill (0 = decoding).
+    prefill_left: usize,
+    /// Sequence positions materialized in KV (paged growth tracking).
+    resident: usize,
+    /// Blocks owned in the pager.
+    blocks: usize,
+}
+
+fn newest_idx(active: &[Request]) -> usize {
+    let mut best = 0;
+    for (i, r) in active.iter().enumerate() {
+        if r.arrival >= active[best].arrival {
+            best = i;
+        }
+    }
+    best
+}
+
+fn memo_prefill(
+    dt: &DecodeTimeline<'_>,
+    gpus: &[GpuId],
+    memo: &mut HashMap<(usize, usize), f64>,
+    tokens: usize,
+    n_prompts: usize,
+) -> Result<f64> {
+    if let Some(&p) = memo.get(&(tokens, n_prompts)) {
+        return Ok(p);
+    }
+    let p = dt.prefill_time_tokens(gpus, tokens, n_prompts)?;
+    memo.insert((tokens, n_prompts), p);
+    Ok(p)
+}
+
+/// Simulate one replica serving `rate` requests/s until every request
+/// completes. `batch_cap` is the admission ceiling
+/// (`min(max_batch, KV-fit)`); `rng` drives arrival/length generation
+/// only (see [`generate_records`] for the draw order); `trace` replaces
+/// the generated stream entirely — trace mode consumes no randomness.
 pub fn simulate_replica(
     dt: &DecodeTimeline<'_>,
     gpus: &[GpuId],
     rate: f64,
     batch_cap: usize,
     rng: &mut Rng,
-) -> Result<ReplicaStats> {
-    let n = dt.serving.sim_requests;
-    let decode_tokens = dt.serving.decode_tokens;
-    let cap = batch_cap.max(1);
-
-    // Poisson arrivals: cumulative exponential inter-arrival gaps.
-    let mut arrivals = Vec::with_capacity(n);
-    let mut t_arr = 0.0f64;
-    for _ in 0..n {
-        t_arr += rng.exponential(rate);
-        arrivals.push(t_arr);
+    trace: Option<&Trace>,
+) -> Result<QueueStats> {
+    let records: Vec<TraceRecord> = match trace {
+        Some(t) => t.records.clone(),
+        None => generate_records(&dt.serving, rate, rng)?,
+    };
+    let n = records.len();
+    if n == 0 {
+        return Err(BoosterError::Config(
+            "queue simulation needs at least one request".into(),
+        ));
     }
+    let cap = batch_cap.max(1);
+    let chunk = dt.serving.chunk_tokens;
+    let mut pager = KvPager::from_serving(
+        dt.timeline.topo,
+        &dt.model,
+        &dt.serving,
+        dt.timeline.precision,
+        dt.tensor,
+    )?;
+    let prefix_cached = pager.as_ref().map_or(0, |p| p.prefix_cached_tokens);
 
-    // Token/prefill times are pure functions of the batch size: memoize
-    // so a 4096-step trace prices each size once.
+    // Token/prefill times are pure functions of their volumes: memoize so
+    // a long trace prices each (tokens, batch) shape once.
     let mut token_memo: Vec<Option<f64>> = vec![None; cap + 1];
-    let mut prefill_memo: Vec<Option<f64>> = vec![None; cap + 1];
+    let mut prefill_memo: HashMap<(usize, usize), f64> = HashMap::new();
 
-    // In-flight requests: (arrival time, decode tokens remaining).
-    let mut active: Vec<(f64, usize)> = Vec::new();
+    let mut active: Vec<Request> = Vec::new();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut latencies: Vec<f64> = Vec::with_capacity(n);
     let mut next = 0usize; // first unadmitted arrival
     let mut t = 0.0f64;
     let mut steps = 0usize;
     let mut batch_sum = 0usize;
+    let mut occ_sum = 0.0f64;
+    let mut preempted = 0usize;
 
     while latencies.len() < n {
         // Idle replica: jump to the next arrival.
-        if active.is_empty() && arrivals[next] > t {
-            t = arrivals[next];
+        if active.is_empty() && waiting.is_empty() && records[next].arrival_s > t {
+            t = records[next].arrival_s;
         }
-        // Admit everything that has arrived, up to the cap.
-        let mut admitted = 0usize;
-        while next < n && active.len() < cap && arrivals[next] <= t {
-            active.push((arrivals[next], decode_tokens));
-            next += 1;
-            admitted += 1;
-        }
-        if admitted > 0 {
-            let p = match prefill_memo[admitted] {
-                Some(p) => p,
-                None => {
-                    let p = dt.prefill_time(gpus, admitted)?;
-                    prefill_memo[admitted] = Some(p);
-                    p
+        // Admit up to the cap (and, paged, the block pool): preempted
+        // requests first, then everything that has arrived.
+        let mut admitted_n = 0usize;
+        let mut admitted_tokens = 0usize;
+        while active.len() < cap {
+            let from_waiting = !waiting.is_empty();
+            let prompt = if from_waiting {
+                waiting.front().map(|w| w.prompt).unwrap_or(0)
+            } else if next < n && records[next].arrival_s <= t {
+                records[next].prompt_tokens
+            } else {
+                break;
+            };
+            let blocks = match pager.as_mut() {
+                Some(p) => {
+                    // Claim room for the prompt plus the first decoded
+                    // token; decode claims the rest lazily as it grows.
+                    let need = p.owned_blocks(prompt + 1);
+                    if !p.try_claim(need) {
+                        if active.is_empty() {
+                            return Err(BoosterError::Config(format!(
+                                "paged KV pool cannot admit a {}-token prompt: {} \
+                                 blocks needed but the pool holds {}",
+                                prompt,
+                                need,
+                                p.capacity_blocks(),
+                            )));
+                        }
+                        break;
+                    }
+                    need
+                }
+                None => 0,
+            };
+            let mut r = if from_waiting {
+                waiting.pop_front().expect("non-empty waiting queue")
+            } else {
+                let rec = &records[next];
+                next += 1;
+                Request {
+                    arrival: rec.arrival_s,
+                    prompt: rec.prompt_tokens,
+                    decode_left: rec.decode_tokens,
+                    decode_total: rec.decode_tokens,
+                    prefill_left: rec.prompt_tokens.saturating_sub(prefix_cached),
+                    resident: 0,
+                    blocks: 0,
                 }
             };
-            t += p;
+            r.blocks = blocks;
+            r.resident = r.prompt + 1;
+            admitted_n += 1;
+            admitted_tokens += r.prefill_left;
+            active.push(r);
         }
-        // One decode step for every resident request.
-        let batch = active.len();
-        let tok = match token_memo[batch] {
-            Some(tok) => tok,
-            None => {
-                let tok = dt.token_time(gpus, batch)?;
-                token_memo[batch] = Some(tok);
-                tok
+        if chunk == 0 {
+            // Monolithic prefill: one charge for the admission group
+            // (shared-prefix tokens are already cached and cost nothing).
+            if admitted_n > 0 && admitted_tokens > 0 {
+                t += memo_prefill(dt, gpus, &mut prefill_memo, admitted_tokens, admitted_n)?;
             }
-        };
-        t += tok;
+            for r in active.iter_mut() {
+                r.prefill_left = 0;
+            }
+        } else {
+            // Chunked prefill: every prefilling request advances one
+            // chunk, interleaved with the decode below.
+            let mut step_tokens = 0usize;
+            let mut prefillers = 0usize;
+            for r in active.iter_mut() {
+                if r.prefill_left > 0 {
+                    let adv = chunk.min(r.prefill_left);
+                    step_tokens += adv;
+                    prefillers += 1;
+                    r.prefill_left -= adv;
+                }
+            }
+            if step_tokens > 0 {
+                t += memo_prefill(dt, gpus, &mut prefill_memo, step_tokens, prefillers)?;
+            }
+        }
+        // One decode step for every prefilled resident request.
+        let batch = active.iter().filter(|r| r.prefill_left == 0).count();
+        if batch > 0 {
+            let tok = match token_memo[batch] {
+                Some(tok) => tok,
+                None => {
+                    let tok = dt.token_time(gpus, batch)?;
+                    token_memo[batch] = Some(tok);
+                    tok
+                }
+            };
+            t += tok;
+        }
         steps += 1;
         batch_sum += batch;
-        // Retire finished requests (order-preserving, so the trace is
-        // independent of how the Vec reallocates).
+        occ_sum += match pager.as_ref() {
+            Some(p) => p.used_blocks() as f64 / p.capacity_blocks().max(1) as f64,
+            None => active.len() as f64 / cap as f64,
+        };
+        // Retire finished requests (order-preserving, so the trajectory
+        // is independent of how the Vec reallocates) and grow the KV of
+        // the survivors that decoded a token.
         let mut i = 0;
-        while i < active.len() {
-            active[i].1 -= 1;
-            if active[i].1 == 0 {
-                latencies.push(t - active[i].0);
-                active.remove(i);
-            } else {
+        'retire: while i < active.len() {
+            if active[i].prefill_left > 0 {
                 i += 1;
+                continue;
             }
+            active[i].decode_left -= 1;
+            if active[i].decode_left == 0 {
+                latencies.push(t - active[i].arrival);
+                let done = active.remove(i);
+                if let Some(p) = pager.as_mut() {
+                    p.release(done.blocks);
+                }
+                continue;
+            }
+            active[i].resident += 1;
+            if let Some(p) = pager.as_mut() {
+                loop {
+                    let need = p.owned_blocks(active[i].resident);
+                    if need <= active[i].blocks {
+                        break;
+                    }
+                    if p.try_claim(need - active[i].blocks) {
+                        active[i].blocks = need;
+                        break;
+                    }
+                    if active.len() == 1 {
+                        return Err(BoosterError::Config(format!(
+                            "paged KV pool exhausted by a single request: {} resident \
+                             tokens need {} blocks but the pool holds {}",
+                            active[i].resident,
+                            need,
+                            p.capacity_blocks(),
+                        )));
+                    }
+                    // Pool dry: preempt the newest-arrival request —
+                    // release its pages and restart it from the waiting
+                    // queue (latency still counts from its arrival).
+                    let victim = newest_idx(&active);
+                    preempted += 1;
+                    let mut v = active.remove(victim);
+                    p.release(v.blocks);
+                    v.blocks = 0;
+                    v.resident = 0;
+                    v.prefill_left = v.prompt.saturating_sub(prefix_cached);
+                    v.decode_left = v.decode_total;
+                    waiting.push_back(v);
+                    if victim == i {
+                        continue 'retire; // the grower preempted itself
+                    }
+                    if victim < i {
+                        i -= 1;
+                    }
+                }
+            }
+            i += 1;
         }
     }
 
-    let tokens = (n * decode_tokens) as f64;
+    let tokens: usize = records.iter().map(|r| r.decode_tokens).sum();
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-    Ok(ReplicaStats {
+    Ok(QueueStats {
         p50: quantile(&latencies, 0.50),
         p99: quantile(&latencies, 0.99),
-        tokens_per_s: tokens / t.max(f64::MIN_POSITIVE),
+        tokens_per_s: tokens as f64 / t.max(f64::MIN_POSITIVE),
         completed: n,
         mean_batch: batch_sum as f64 / steps.max(1) as f64,
+        occupancy: occ_sum / steps.max(1) as f64,
+        preempted,
     })
 }
 
@@ -143,9 +488,10 @@ mod tests {
     use super::*;
     use crate::scenario::presets;
     use crate::scenario::spec::{ScenarioSpec, ServingSpec};
+    use crate::serve::DecodeTimeline;
 
-    fn serve_spec(tensor: usize, serving: ServingSpec) -> ScenarioSpec {
-        ScenarioSpec::builder(presets::machine("juwels_booster").unwrap())
+    fn serve_spec_on(machine: &str, tensor: usize, serving: ServingSpec) -> ScenarioSpec {
+        ScenarioSpec::builder(presets::machine(machine).unwrap())
             .workload(presets::workload("gpt3_13b").unwrap())
             .nodes(1)
             .tensor_parallel(tensor)
@@ -153,6 +499,24 @@ mod tests {
             .serving(serving)
             .build()
             .unwrap()
+    }
+
+    fn serve_spec(tensor: usize, serving: ServingSpec) -> ScenarioSpec {
+        serve_spec_on("juwels_booster", tensor, serving)
+    }
+
+    fn run(
+        spec: &ScenarioSpec,
+        rate: f64,
+        cap: usize,
+        seed: u64,
+        trace: Option<&Trace>,
+    ) -> QueueStats {
+        let topo = spec.machine.build_topology().unwrap();
+        let dt = DecodeTimeline::from_scenario(spec, &topo).unwrap();
+        let gpus = spec.job_gpus(&topo).unwrap();
+        let one = &gpus[..1];
+        simulate_replica(&dt, one, rate, cap, &mut Rng::seed_from(seed), trace).unwrap()
     }
 
     #[test]
@@ -166,18 +530,20 @@ mod tests {
         s.max_batch = 1;
         let spec = serve_spec(1, s);
         let topo = spec.machine.build_topology().unwrap();
-        let dt = crate::serve::DecodeTimeline::from_scenario(&spec, &topo).unwrap();
+        let dt = DecodeTimeline::from_scenario(&spec, &topo).unwrap();
         let gpus = spec.job_gpus(&topo).unwrap();
         let one = &gpus[..1];
 
         let mut rng = Rng::seed_from(7);
-        let stats = simulate_replica(&dt, one, 4.0, 1, &mut rng).unwrap();
+        let stats = simulate_replica(&dt, one, 4.0, 1, &mut rng, None).unwrap();
         let expect =
             dt.prefill_time(one, 1).unwrap() + 64.0 * dt.token_time(one, 1).unwrap();
         assert_eq!(stats.p50, expect, "latency is prefill + 64 tokens exactly");
         assert_eq!(stats.p99, stats.p50, "one sample: every quantile equal");
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.mean_batch, 1.0);
+        assert_eq!(stats.preempted, 0);
+        assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0, "{stats:?}");
         assert_eq!(
             dt.timeline.collectives.cache_stats(),
             (0, 0),
@@ -186,22 +552,18 @@ mod tests {
     }
 
     #[test]
-    fn the_trace_is_deterministic_and_batching_lifts_throughput() {
+    fn the_trajectory_is_deterministic_and_batching_lifts_throughput() {
         let spec = serve_spec(1, ServingSpec::defaults());
-        let topo = spec.machine.build_topology().unwrap();
-        let dt = crate::serve::DecodeTimeline::from_scenario(&spec, &topo).unwrap();
-        let gpus = spec.job_gpus(&topo).unwrap();
-        let one = &gpus[..1];
-
-        let a = simulate_replica(&dt, one, 4.0, 8, &mut Rng::seed_from(7)).unwrap();
-        let b = simulate_replica(&dt, one, 4.0, 8, &mut Rng::seed_from(7)).unwrap();
-        assert_eq!(a, b, "same seed, same trace, bit-equal stats");
+        let a = run(&spec, 4.0, 8, 7, None);
+        let b = run(&spec, 4.0, 8, 7, None);
+        assert_eq!(a, b, "same seed, same trajectory, bit-equal stats");
         assert!(a.p99 >= a.p50 && a.p50 > 0.0, "{a:?}");
         assert!(a.mean_batch > 1.0, "continuous batching must batch: {a:?}");
+        assert!(a.occupancy > 0.0 && a.occupancy <= 1.0, "{a:?}");
 
         // The same load forced through batch cap 1 decodes serially and
         // loses throughput.
-        let serial = simulate_replica(&dt, one, 4.0, 1, &mut Rng::seed_from(7)).unwrap();
+        let serial = run(&spec, 4.0, 1, 7, None);
         assert!(
             a.tokens_per_s > serial.tokens_per_s,
             "batched {} must beat serial {}",
@@ -216,12 +578,144 @@ mod tests {
         // grows and p99 balloons — the sweep's SLO filter (not a hard
         // error) is what rejects this point.
         let spec = serve_spec(1, ServingSpec::defaults());
-        let topo = spec.machine.build_topology().unwrap();
-        let dt = crate::serve::DecodeTimeline::from_scenario(&spec, &topo).unwrap();
-        let gpus = spec.job_gpus(&topo).unwrap();
-        let one = &gpus[..1];
-        let calm = simulate_replica(&dt, one, 1.0, 8, &mut Rng::seed_from(7)).unwrap();
-        let slammed = simulate_replica(&dt, one, 50.0, 8, &mut Rng::seed_from(7)).unwrap();
+        let calm = run(&spec, 1.0, 8, 7, None);
+        let slammed = run(&spec, 50.0, 8, 7, None);
         assert!(slammed.p99 > calm.p99, "{slammed:?} vs {calm:?}");
+    }
+
+    #[test]
+    fn a_recorded_poisson_trace_replays_bit_exactly() {
+        // The trace degeneracy property, on two machine presets: record
+        // the seeded Poisson stream, replay it through trace mode (with a
+        // *different* rng seed — trace mode must consume no randomness),
+        // and the stats match to the bit.
+        for machine in ["juwels_booster", "isambard_ai"] {
+            let s = ServingSpec::defaults();
+            let trace = Trace::from_poisson(
+                &mut Rng::seed_from(7),
+                s.sim_requests,
+                4.0,
+                s.prompt_tokens,
+                s.decode_tokens,
+            );
+            let spec = serve_spec_on(machine, 1, s);
+            let poisson = run(&spec, 4.0, 8, 7, None);
+            let replayed = run(&spec, 4.0, 8, 999, Some(&trace));
+            assert_eq!(poisson, replayed, "{machine}: trace replay must be the identity");
+        }
+    }
+
+    #[test]
+    fn paged_at_block_eq_seq_len_degenerates_to_the_unpaged_path() {
+        // One block = one request's closed-form reservation: the paged
+        // trajectory matches the PR-7 unpaged stats bit-exactly on every
+        // shared field. (Occupancy measures a different pool — blocks vs
+        // admission slots — so it is compared only for sanity.)
+        for machine in ["juwels_booster", "isambard_ai"] {
+            let unpaged = serve_spec_on(machine, 1, ServingSpec::defaults());
+            let mut s = ServingSpec::defaults();
+            s.kv_block_tokens = s.seq_len();
+            let paged = serve_spec_on(machine, 1, s);
+            let a = run(&unpaged, 4.0, 8, 7, None);
+            let b = run(&paged, 4.0, 8, 7, None);
+            assert_eq!(a.p50, b.p50, "{machine}");
+            assert_eq!(a.p99, b.p99, "{machine}");
+            assert_eq!(a.tokens_per_s, b.tokens_per_s, "{machine}");
+            assert_eq!(a.completed, b.completed, "{machine}");
+            assert_eq!(a.mean_batch, b.mean_batch, "{machine}");
+            assert_eq!(b.preempted, 0, "{machine}: block=seq_len can never preempt");
+            assert!(b.occupancy > 0.0 && b.occupancy <= 1.0, "{machine} {b:?}");
+        }
+    }
+
+    #[test]
+    fn a_chunk_at_least_the_prompt_matches_unchunked_bit_exactly() {
+        // chunk >= prompt charges the same (tokens, batch) memo keys in
+        // the same order as the monolithic path: full QueueStats equality.
+        let unchunked = serve_spec(1, ServingSpec::defaults());
+        let mut s = ServingSpec::defaults();
+        s.chunk_tokens = s.prompt_tokens;
+        let chunked = serve_spec(1, s);
+        assert_eq!(run(&unchunked, 4.0, 8, 7, None), run(&chunked, 4.0, 8, 7, None));
+
+        // A small chunk takes a genuinely different (still deterministic)
+        // trajectory.
+        let mut s = ServingSpec::defaults();
+        s.chunk_tokens = 128;
+        let small = serve_spec(1, s);
+        let a = run(&small, 4.0, 8, 7, None);
+        assert_eq!(a, run(&small, 4.0, 8, 7, None), "chunked runs are deterministic");
+        assert_ne!(a, run(&unchunked, 4.0, 8, 7, None));
+        assert_eq!(a.completed, 64, "every request still completes");
+    }
+
+    #[test]
+    fn a_dry_block_pool_preempts_the_newest_request_and_recovers() {
+        // prompt 500 + decode 64 with 64-token blocks: admission claims
+        // ceil(501/64) = 8 blocks, growth needs a 9th mid-decode. The
+        // pool (~267 blocks on a 40 GB A100 under 26 GB of weights) holds
+        // 30 admitted requests' claims but not every request's growth —
+        // preemption must fire, and everything still completes.
+        let mut s = ServingSpec::defaults();
+        s.prompt_tokens = 500;
+        s.max_batch = 512;
+        s.kv_block_tokens = 64;
+        let spec = serve_spec(1, s);
+        let a = run(&spec, 50.0, 30, 7, None);
+        assert_eq!(a, run(&spec, 50.0, 30, 7, None), "preemption is deterministic");
+        assert!(a.preempted > 0, "the pool must run dry: {a:?}");
+        assert_eq!(a.completed, 64, "preempted requests restart and finish");
+        assert!(a.p99 >= a.p50 && a.p50.is_finite(), "{a:?}");
+    }
+
+    #[test]
+    fn heavy_tail_lengths_are_seeded_and_change_the_trajectory() {
+        let fixed = run(&serve_spec(1, ServingSpec::defaults()), 4.0, 8, 7, None);
+        for dist in ["lognormal", "zipf"] {
+            let mut s = ServingSpec::defaults();
+            s.length_dist = dist.into();
+            let spec = serve_spec(1, s);
+            let a = run(&spec, 4.0, 8, 7, None);
+            assert_eq!(a, run(&spec, 4.0, 8, 7, None), "{dist} must be seeded");
+            assert_ne!(a, fixed, "{dist} must draw non-fixed lengths");
+            assert_eq!(a.completed, 64, "{dist}: all requests complete");
+        }
+    }
+
+    #[test]
+    fn stats_round_trip_their_json_fields_bit_exactly() {
+        // The serve row's journal payload derives from json_fields; a
+        // resume replays it through from_json_fields. Raw-seconds keys +
+        // shortest-round-trip floats make the cycle the identity.
+        let stats = run(&serve_spec(1, ServingSpec::defaults()), 4.0, 8, 7, None);
+        let j = Json::parse(&Json::obj(stats.json_fields()).to_string()).unwrap();
+        let back = QueueStats::from_json_fields(&j).unwrap();
+        assert_eq!(back, stats, "json_fields must round-trip bit-exactly");
+        let cells = stats.csv_cells();
+        assert_eq!(
+            cells.split(',').count(),
+            QueueStats::CSV_COLUMNS.split(',').count(),
+            "cells and columns must stay in lockstep: {cells}"
+        );
+    }
+
+    #[test]
+    fn a_variable_length_trace_drives_the_queue_without_randomness() {
+        let mut records = Vec::new();
+        for i in 0..16usize {
+            records.push(crate::serve::trace::TraceRecord {
+                arrival_s: 0.25 * i as f64,
+                prompt_tokens: 128 + 96 * (i % 5),
+                decode_tokens: 16 + 24 * (i % 3),
+            });
+        }
+        let trace = Trace { records };
+        let spec = serve_spec(1, ServingSpec::defaults());
+        let a = run(&spec, 4.0, 8, 1, Some(&trace));
+        let b = run(&spec, 4.0, 8, 2, Some(&trace));
+        assert_eq!(a, b, "trace mode consumes no rng — seeds are irrelevant");
+        assert_eq!(a.completed, 16, "the trace length overrides sim_requests");
+        let tokens: usize = trace.records.iter().map(|r| r.decode_tokens).sum();
+        assert!(a.tokens_per_s > 0.0 && tokens > 0);
     }
 }

@@ -16,9 +16,17 @@
 //! [`crate::scenario::journal`]); a serve resume on a train journal — or
 //! vice versa — is rejected up front naming both kinds.
 //!
-//! The headline artifact is the **throughput-under-SLO frontier**: per
+//! The sweepable keys live in one table-driven registry
+//! ([`SERVE_PARAM_KEYS`], a [`crate::sweep::ParamKey`] slice): the
+//! realism axes — speculative `accept`, paged-KV `block`, chunked-prefill
+//! `chunk`, prefix-cache `prefix`, heavy-tail `dist`, replayable `trace`
+//! — register there instead of being spliced into hand-synced match arms.
+//!
+//! Two headline artifacts: the **throughput-under-SLO frontier** (per
 //! machine, the feasible row with the highest aggregate tokens/s among
-//! those whose simulated p99 meets the spec's `slo_p99_ms`.
+//! those whose simulated p99 meets `slo_p99_ms`) and the **cost-aware
+//! frontier** (same filter, ranked by `tokens_per_s_per_watt` from the
+//! machine's power model).
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -27,123 +35,208 @@ use crate::collectives::CollectiveModel;
 use crate::hw::power::PowerModel;
 use crate::scenario::journal::{GridFingerprint, Journal, JournalRow};
 use crate::scenario::presets;
-use crate::scenario::spec::ScenarioSpec;
+use crate::scenario::spec::{DraftSpec, ScenarioSpec, ServingSpec};
 use crate::scenario::sweep::{expand, ParamAxis};
 use crate::serve::decode::DecodeTimeline;
 use crate::serve::kv;
-use crate::serve::queue::simulate_replica;
-use crate::sweep::{Point, SweepOptions};
+use crate::serve::queue::{simulate_replica, QueueStats};
+use crate::serve::trace::Trace;
+use crate::sweep::{ParamKey, Point, SweepOptions};
 use crate::topology::Topology;
 use crate::util::error::{BoosterError, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Scenario fields a serve sweep may vary. Narrower than the training
-/// set by design: serving never pipelines or shards optimizer state, and
-/// expression axes (runexp variables) are a training-sweep feature.
-pub const SERVE_KEYS: [&str; 9] = [
-    "machine",
-    "workload",
-    "replicas",
-    "tensor",
-    "batch",
-    "precision",
-    "prompt",
-    "decode",
-    "rate",
+fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value.parse().map_err(|_| {
+        BoosterError::Config(format!("serve-sweep key '{key}': invalid value '{value}'"))
+    })
+}
+
+fn serving_mut<'a>(spec: &'a mut ScenarioSpec, key: &str) -> Result<&'a mut ServingSpec> {
+    spec.serving.as_mut().ok_or_else(|| {
+        BoosterError::Config(format!(
+            "serve-sweep key '{key}' needs a base scenario with a serving block"
+        ))
+    })
+}
+
+fn k_machine(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.machine = presets::machine(v)?;
+    Ok(())
+}
+
+fn k_workload(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.workload = presets::workload(v)?;
+    Ok(())
+}
+
+fn k_precision(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.precision = v.to_string();
+    Ok(())
+}
+
+fn k_tensor(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    spec.parallelism.tensor_parallel = num("tensor", v)?;
+    Ok(())
+}
+
+fn k_replicas(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "replicas")?.replicas = num("replicas", v)?;
+    Ok(())
+}
+
+fn k_batch(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "batch")?.max_batch = num("batch", v)?;
+    Ok(())
+}
+
+fn k_prompt(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "prompt")?.prompt_tokens = num("prompt", v)?;
+    Ok(())
+}
+
+fn k_decode(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "decode")?.decode_tokens = num("decode", v)?;
+    Ok(())
+}
+
+fn k_rate(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "rate")?.requests_per_s = num("rate", v)?;
+    Ok(())
+}
+
+fn k_accept(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    // A bare acceptance axis rides on the free-draft defaults, whose
+    // accept=1.0 point is the bit-exact non-speculative identity.
+    let a: f64 = num("accept", v)?;
+    serving_mut(spec, "accept")?
+        .draft
+        .get_or_insert_with(DraftSpec::defaults)
+        .acceptance = a;
+    Ok(())
+}
+
+fn k_block(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "block")?.kv_block_tokens = num("block", v)?;
+    Ok(())
+}
+
+fn k_chunk(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "chunk")?.chunk_tokens = num("chunk", v)?;
+    Ok(())
+}
+
+fn k_prefix(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "prefix")?.prefix_tokens = num("prefix", v)?;
+    Ok(())
+}
+
+fn k_dist(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "dist")?.length_dist = v.to_string();
+    Ok(())
+}
+
+fn k_trace(spec: &mut ScenarioSpec, v: &str) -> Result<()> {
+    serving_mut(spec, "trace")?.trace = Some(v.to_string());
+    Ok(())
+}
+
+/// The serve sweep's key registry — every scenario field a serve grid
+/// may vary, one table row each. Narrower than the training set by
+/// design (serving never pipelines or shards optimizer state, and
+/// expression variables are a training-sweep feature), wider on the
+/// serving realism axes. The `--param` parser, the apply step, the CLI
+/// listings and the unknown-key error all render from this table.
+pub static SERVE_PARAM_KEYS: &[ParamKey] = &[
+    ParamKey {
+        name: "machine",
+        kind: "preset",
+        apply: k_machine,
+    },
+    ParamKey {
+        name: "workload",
+        kind: "preset",
+        apply: k_workload,
+    },
+    ParamKey {
+        name: "replicas",
+        kind: "int",
+        apply: k_replicas,
+    },
+    ParamKey {
+        name: "tensor",
+        kind: "int",
+        apply: k_tensor,
+    },
+    ParamKey {
+        name: "batch",
+        kind: "int",
+        apply: k_batch,
+    },
+    ParamKey {
+        name: "precision",
+        kind: "string",
+        apply: k_precision,
+    },
+    ParamKey {
+        name: "prompt",
+        kind: "int",
+        apply: k_prompt,
+    },
+    ParamKey {
+        name: "decode",
+        kind: "int",
+        apply: k_decode,
+    },
+    ParamKey {
+        name: "rate",
+        kind: "float",
+        apply: k_rate,
+    },
+    ParamKey {
+        name: "accept",
+        kind: "float",
+        apply: k_accept,
+    },
+    ParamKey {
+        name: "block",
+        kind: "int",
+        apply: k_block,
+    },
+    ParamKey {
+        name: "chunk",
+        kind: "int",
+        apply: k_chunk,
+    },
+    ParamKey {
+        name: "prefix",
+        kind: "int",
+        apply: k_prefix,
+    },
+    ParamKey {
+        name: "dist",
+        kind: "string",
+        apply: k_dist,
+    },
+    ParamKey {
+        name: "trace",
+        kind: "path",
+        apply: k_trace,
+    },
 ];
 
-/// Group comma-split `--param` entries into axes, exactly as the
-/// training sweep's parser does — but against [`SERVE_KEYS`], with no
-/// expression variables. Unknown keys are rejected up front with the
-/// full serve key set in the error, so `--param replicaz=2` can never
-/// flow into a half-priced grid.
+/// Group comma-split `--param` entries into axes against
+/// [`SERVE_PARAM_KEYS`] (no expression variables). Unknown keys are
+/// rejected up front with the full serve registry in the error, so
+/// `--param replicaz=2` can never flow into a half-priced grid.
 pub fn parse_serve_params(entries: &[String]) -> Result<Vec<ParamAxis>> {
-    let mut axes: Vec<ParamAxis> = Vec::new();
-    for e in entries {
-        match e.split_once('=') {
-            Some((key, first)) => {
-                let key = key.trim().to_ascii_lowercase();
-                if !SERVE_KEYS.contains(&key.as_str()) {
-                    return Err(BoosterError::Config(format!(
-                        "unknown serve-sweep key '{key}' (sweepable: {})",
-                        SERVE_KEYS.join(", ")
-                    )));
-                }
-                if axes.iter().any(|a| a.key == key) {
-                    return Err(BoosterError::Config(format!(
-                        "duplicate serve-sweep key '{key}'"
-                    )));
-                }
-                axes.push(ParamAxis {
-                    key,
-                    values: vec![first.trim().to_string()],
-                });
-            }
-            None => match axes.last_mut() {
-                Some(axis) => axis.values.push(e.trim().to_string()),
-                None => {
-                    return Err(BoosterError::Config(format!(
-                        "serve-sweep value '{e}' has no key (use --param key=v1,v2)"
-                    )))
-                }
-            },
-        }
-    }
-    for a in &axes {
-        if a.values.iter().any(|v| v.is_empty()) {
-            return Err(BoosterError::Config(format!(
-                "serve-sweep key '{}' has an empty value",
-                a.key
-            )));
-        }
-    }
-    Ok(axes)
+    crate::sweep::parse_params_table("serve-sweep", SERVE_PARAM_KEYS, false, entries)
 }
 
 /// Apply one `key=value` assignment to a serving scenario.
 pub fn apply_serve_param(spec: &mut ScenarioSpec, key: &str, value: &str) -> Result<()> {
-    let bad_num =
-        || BoosterError::Config(format!("serve-sweep key '{key}': invalid value '{value}'"));
-    if matches!(key, "replicas" | "batch" | "prompt" | "decode" | "rate") && spec.serving.is_none()
-    {
-        return Err(BoosterError::Config(format!(
-            "serve-sweep key '{key}' needs a base scenario with a serving block"
-        )));
-    }
-    match key {
-        "machine" => spec.machine = presets::machine(value)?,
-        "workload" => spec.workload = presets::workload(value)?,
-        "precision" => spec.precision = value.to_string(),
-        "tensor" => spec.parallelism.tensor_parallel = value.parse().map_err(|_| bad_num())?,
-        "replicas" => {
-            spec.serving.as_mut().expect("checked above").replicas =
-                value.parse().map_err(|_| bad_num())?
-        }
-        "batch" => {
-            spec.serving.as_mut().expect("checked above").max_batch =
-                value.parse().map_err(|_| bad_num())?
-        }
-        "prompt" => {
-            spec.serving.as_mut().expect("checked above").prompt_tokens =
-                value.parse().map_err(|_| bad_num())?
-        }
-        "decode" => {
-            spec.serving.as_mut().expect("checked above").decode_tokens =
-                value.parse().map_err(|_| bad_num())?
-        }
-        "rate" => {
-            spec.serving.as_mut().expect("checked above").requests_per_s =
-                value.parse().map_err(|_| bad_num())?
-        }
-        _ => {
-            return Err(BoosterError::Config(format!(
-                "unknown serve-sweep key '{key}' (sweepable: {})",
-                SERVE_KEYS.join(", ")
-            )))
-        }
-    }
-    Ok(())
+    crate::sweep::apply_param_table("serve-sweep", SERVE_PARAM_KEYS, spec, key, value)
 }
 
 /// Materialize and validate the serve grid. After the axes are applied,
@@ -201,26 +294,26 @@ pub struct ServeRow {
     pub decode_tokens: usize,
     /// Offered load, requests/s across all replicas.
     pub rate: f64,
+    /// Speculative acceptance rate (1.0 when no draft block).
+    pub accept: f64,
     /// Per-request KV-cache block per rank, GB.
     pub kv_gb: f64,
     /// One-prompt prefill time, ms.
     pub prefill_ms: f64,
     /// Batch-1 decode token time, ms.
     pub token_ms: f64,
-    /// Median request latency from the queue simulation, ms.
-    pub p50_ms: f64,
-    /// 99th-percentile request latency, ms.
-    pub p99_ms: f64,
     /// The p99 latency SLO this point was judged against, ms.
     pub slo_ms: f64,
-    /// Whether `p99_ms <= slo_ms` — the frontier filter.
+    /// Whether `p99_ms() <= slo_ms` — the frontier filter.
     pub slo_ok: bool,
-    /// Mean resident batch across decode steps.
-    pub mean_batch: f64,
-    /// Decoded tokens/s, one replica.
-    pub tokens_per_s: f64,
+    /// Sustained job power for the allocation, watts.
+    pub watts: f64,
+    /// Steady-state queue statistics for one replica.
+    pub stats: QueueStats,
     /// Decoded tokens/s, all replicas.
     pub total_tokens_per_s: f64,
+    /// `total_tokens_per_s / watts` — the cost-aware frontier metric.
+    pub tokens_per_s_per_watt: f64,
     /// The grid assignment that produced this row.
     pub assignment: Vec<(String, String)>,
 }
@@ -245,12 +338,29 @@ fn jint(j: &Json, k: &str) -> Result<usize> {
 }
 
 impl ServeRow {
+    /// Median request latency from the queue simulation, ms.
+    pub fn p50_ms(&self) -> f64 {
+        self.stats.p50 * 1e3
+    }
+
+    /// 99th-percentile request latency, ms.
+    pub fn p99_ms(&self) -> f64 {
+        self.stats.p99 * 1e3
+    }
+
+    /// Decoded tokens/s, one replica.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.stats.tokens_per_s
+    }
+
     /// Full row serialization — the `BENCH_serve.json` row shape and the
     /// journal `row` payload. f64s print in shortest round-trip form, so
     /// `from_json(to_json(r))` is bit-exact and a resumed sweep's CSV is
-    /// byte-identical.
+    /// byte-identical. Queue statistics serialize through
+    /// [`QueueStats::json_fields`], the same single source the CSV stat
+    /// columns derive from.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("scenario", Json::Str(self.scenario.clone())),
             ("machine", Json::Str(self.machine.clone())),
             ("workload", Json::Str(self.workload.clone())),
@@ -263,31 +373,32 @@ impl ServeRow {
             ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
             ("decode_tokens", Json::Num(self.decode_tokens as f64)),
             ("rate", Json::Num(self.rate)),
+            ("accept", Json::Num(self.accept)),
             ("kv_gb", Json::Num(self.kv_gb)),
             ("prefill_ms", Json::Num(self.prefill_ms)),
             ("token_ms", Json::Num(self.token_ms)),
-            ("p50_ms", Json::Num(self.p50_ms)),
-            ("p99_ms", Json::Num(self.p99_ms)),
             ("slo_ms", Json::Num(self.slo_ms)),
             ("slo_ok", Json::Bool(self.slo_ok)),
-            ("mean_batch", Json::Num(self.mean_batch)),
-            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("watts", Json::Num(self.watts)),
             ("total_tokens_per_s", Json::Num(self.total_tokens_per_s)),
-            (
-                "assignment",
-                Json::Arr(
-                    self.assignment
-                        .iter()
-                        .map(|(k, v)| {
-                            Json::obj(vec![
-                                ("key", Json::Str(k.clone())),
-                                ("value", Json::Str(v.clone())),
-                            ])
-                        })
-                        .collect(),
-                ),
+            ("tokens_per_s_per_watt", Json::Num(self.tokens_per_s_per_watt)),
+        ];
+        fields.extend(self.stats.json_fields());
+        fields.push((
+            "assignment",
+            Json::Arr(
+                self.assignment
+                    .iter()
+                    .map(|(k, v)| {
+                        Json::obj(vec![
+                            ("key", Json::Str(k.clone())),
+                            ("value", Json::Str(v.clone())),
+                        ])
+                    })
+                    .collect(),
             ),
-        ])
+        ));
+        Json::obj(fields)
     }
 
     /// Inverse of [`ServeRow::to_json`] (journal replay).
@@ -313,19 +424,18 @@ impl ServeRow {
             prompt_tokens: jint(j, "prompt_tokens")?,
             decode_tokens: jint(j, "decode_tokens")?,
             rate: jnum(j, "rate")?,
+            accept: jnum(j, "accept")?,
             kv_gb: jnum(j, "kv_gb")?,
             prefill_ms: jnum(j, "prefill_ms")?,
             token_ms: jnum(j, "token_ms")?,
-            p50_ms: jnum(j, "p50_ms")?,
-            p99_ms: jnum(j, "p99_ms")?,
             slo_ms: jnum(j, "slo_ms")?,
-            slo_ok: j
-                .req("slo_ok")?
-                .as_bool()
-                .ok_or_else(|| BoosterError::Artifact("serve row field 'slo_ok' is not a bool".into()))?,
-            mean_batch: jnum(j, "mean_batch")?,
-            tokens_per_s: jnum(j, "tokens_per_s")?,
+            slo_ok: j.req("slo_ok")?.as_bool().ok_or_else(|| {
+                BoosterError::Artifact("serve row field 'slo_ok' is not a bool".into())
+            })?,
+            watts: jnum(j, "watts")?,
+            stats: QueueStats::from_json_fields(j)?,
             total_tokens_per_s: jnum(j, "total_tokens_per_s")?,
+            tokens_per_s_per_watt: jnum(j, "tokens_per_s_per_watt")?,
             assignment,
         })
     }
@@ -348,11 +458,11 @@ impl JournalRow for ServeRow {
 /// sibling is [`crate::scenario::sweep::SweepOutcome`].
 pub type ServeOutcome = crate::sweep::EngineOutcome<ServeRow>;
 
-/// Indices of the best feasible row per machine: highest
-/// `total_tokens_per_s` among rows with `slo_ok`, machines in
-/// first-appearance (expansion) order. A machine none of whose rows meet
-/// the SLO is absent — that absence *is* the finding.
-pub fn serve_frontier(rows: &[ServeRow]) -> Vec<usize> {
+/// Indices of the best feasible row per machine under `metric`: the
+/// highest-scoring row with `slo_ok`, machines in first-appearance
+/// (expansion) order. A machine none of whose rows meet the SLO is
+/// absent — that absence *is* the finding.
+fn frontier_by(rows: &[ServeRow], metric: fn(&ServeRow) -> f64) -> Vec<usize> {
     let mut best: Vec<(&str, usize)> = Vec::new();
     for (i, r) in rows.iter().enumerate() {
         if !r.slo_ok {
@@ -360,7 +470,7 @@ pub fn serve_frontier(rows: &[ServeRow]) -> Vec<usize> {
         }
         match best.iter_mut().find(|(m, _)| *m == r.machine.as_str()) {
             Some((_, j)) => {
-                if r.total_tokens_per_s > rows[*j].total_tokens_per_s {
+                if metric(r) > metric(&rows[*j]) {
                     *j = i;
                 }
             }
@@ -370,18 +480,42 @@ pub fn serve_frontier(rows: &[ServeRow]) -> Vec<usize> {
     best.into_iter().map(|(_, i)| i).collect()
 }
 
+fn metric_tokens(r: &ServeRow) -> f64 {
+    r.total_tokens_per_s
+}
+
+fn metric_per_watt(r: &ServeRow) -> f64 {
+    r.tokens_per_s_per_watt
+}
+
+/// Throughput frontier: best feasible `total_tokens_per_s` per machine.
+pub fn serve_frontier(rows: &[ServeRow]) -> Vec<usize> {
+    frontier_by(rows, metric_tokens)
+}
+
+/// Cost-aware frontier: best feasible `tokens_per_s_per_watt` per
+/// machine. A machine's throughput and cost champions can differ — a
+/// wider allocation often buys tokens/s at a worse tokens/s/W.
+pub fn serve_cost_frontier(rows: &[ServeRow]) -> Vec<usize> {
+    frontier_by(rows, metric_per_watt)
+}
+
 impl ServeOutcome {
-    /// CSV with a header, one line per grid point, expansion order.
+    /// CSV with a header, one line per grid point, expansion order. The
+    /// queue-statistic columns come from [`QueueStats::CSV_COLUMNS`] /
+    /// [`QueueStats::csv_cells`] so the header and the cells cannot
+    /// drift apart.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
+        let mut out = format!(
             "scenario,machine,workload,nodes,gpus,replicas,tensor,batch_cap,precision,\
-             prompt_tokens,decode_tokens,rate,kv_gb,prefill_ms,token_ms,p50_ms,p99_ms,\
-             slo_ms,slo_ok,mean_batch,tokens_per_s,total_tokens_per_s\n",
+             prompt_tokens,decode_tokens,rate,accept,kv_gb,prefill_ms,token_ms,\
+             slo_ms,slo_ok,watts,{},total_tokens_per_s,tokens_per_s_per_watt\n",
+            QueueStats::CSV_COLUMNS
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.2},{:.2},{:.0},{},\
-                 {:.2},{:.1},{:.1}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.0},{},{:.1},{},\
+                 {:.1},{:.4}\n",
                 r.scenario,
                 r.machine,
                 r.workload,
@@ -394,16 +528,16 @@ impl ServeOutcome {
                 r.prompt_tokens,
                 r.decode_tokens,
                 r.rate,
+                r.accept,
                 r.kv_gb,
                 r.prefill_ms,
                 r.token_ms,
-                r.p50_ms,
-                r.p99_ms,
                 r.slo_ms,
                 r.slo_ok,
-                r.mean_batch,
-                r.tokens_per_s,
+                r.watts,
+                r.stats.csv_cells(),
                 r.total_tokens_per_s,
+                r.tokens_per_s_per_watt,
             ));
         }
         out
@@ -470,8 +604,26 @@ impl ServeOutcome {
                         ("replicas", Json::Num(r.replicas as f64)),
                         ("tensor", Json::Num(r.tensor as f64)),
                         ("batch_cap", Json::Num(r.batch_cap as f64)),
-                        ("p99_ms", Json::Num(r.p99_ms)),
+                        ("p99_ms", Json::Num(r.p99_ms())),
                         ("total_tokens_per_s", Json::Num(r.total_tokens_per_s)),
+                    ])
+                })
+                .collect(),
+        );
+        let cost_frontier = Json::Arr(
+            serve_cost_frontier(&self.rows)
+                .into_iter()
+                .map(|i| {
+                    let r = &self.rows[i];
+                    Json::obj(vec![
+                        ("machine", Json::Str(r.machine.clone())),
+                        ("scenario", Json::Str(r.scenario.clone())),
+                        ("replicas", Json::Num(r.replicas as f64)),
+                        ("tensor", Json::Num(r.tensor as f64)),
+                        ("batch_cap", Json::Num(r.batch_cap as f64)),
+                        ("watts", Json::Num(r.watts)),
+                        ("total_tokens_per_s", Json::Num(r.total_tokens_per_s)),
+                        ("tokens_per_s_per_watt", Json::Num(r.tokens_per_s_per_watt)),
                     ])
                 })
                 .collect(),
@@ -484,6 +636,7 @@ impl ServeOutcome {
             ("failed", failed),
             ("groups", groups),
             ("frontier", frontier),
+            ("cost_frontier", cost_frontier),
             ("interrupted", Json::Bool(self.interrupted)),
             ("pending", Json::Num(self.pending as f64)),
             (
@@ -549,7 +702,7 @@ impl crate::sweep::SweepFamily for ServeFamily {
         spec: &ScenarioSpec,
         asg: &[(String, String)],
         topo: &'t Topology,
-        _power: &PowerModel,
+        power: &PowerModel,
     ) -> Result<Self::Row> {
         let tl = worker;
         tl.configure_from(spec)?;
@@ -563,10 +716,19 @@ impl crate::sweep::SweepFamily for ServeFamily {
             kv::kv_bytes_per_request(&serving, &tl.model, tl.timeline.precision, tl.tensor);
         let prefill = tl.prefill_time(gpus, 1)?;
         let token = tl.token_time(gpus, 1)?;
+        // An unreadable trace is a property of the point, not the run:
+        // Config → recorded infeasible, the sweep continues.
+        let trace = match serving.trace.as_deref() {
+            Some(p) => Some(Trace::load(Path::new(p))?),
+            None => None,
+        };
         let rate_per_replica = serving.requests_per_s / serving.replicas.max(1) as f64;
         let mut rng = Rng::seed_from(7);
-        let stats = simulate_replica(tl, gpus, rate_per_replica, cap, &mut rng)?;
+        let stats = simulate_replica(tl, gpus, rate_per_replica, cap, &mut rng, trace.as_ref())?;
         let p99_ms = stats.p99 * 1e3;
+        // Sustained joules over one second at decode utilization = watts.
+        let watts = power.job_energy(spec.parallelism.nodes, 1.0, 0.9)?;
+        let total = stats.tokens_per_s * serving.replicas as f64;
         Ok(ServeRow {
             scenario: spec.name.clone(),
             machine: spec.machine.name.clone(),
@@ -580,16 +742,16 @@ impl crate::sweep::SweepFamily for ServeFamily {
             prompt_tokens: serving.prompt_tokens,
             decode_tokens: serving.decode_tokens,
             rate: serving.requests_per_s,
+            accept: serving.draft.as_ref().map_or(1.0, |d| d.acceptance),
             kv_gb: kv_bytes / 1e9,
             prefill_ms: prefill * 1e3,
             token_ms: token * 1e3,
-            p50_ms: stats.p50 * 1e3,
-            p99_ms,
             slo_ms: serving.slo_p99_ms,
             slo_ok: p99_ms <= serving.slo_p99_ms,
-            mean_batch: stats.mean_batch,
-            tokens_per_s: stats.tokens_per_s,
-            total_tokens_per_s: stats.tokens_per_s * serving.replicas as f64,
+            watts,
+            stats,
+            total_tokens_per_s: total,
+            tokens_per_s_per_watt: total / watts.max(f64::MIN_POSITIVE),
             assignment: asg.to_vec(),
         })
     }
@@ -674,8 +836,8 @@ mod tests {
         // error teaches every serve-sweepable key.
         let err = parse_serve_params(&s(&["replicaz=2"])).unwrap_err().to_string();
         assert!(err.contains("unknown serve-sweep key 'replicaz'"), "{err}");
-        for key in SERVE_KEYS {
-            assert!(err.contains(key), "error must list '{key}': {err}");
+        for key in SERVE_PARAM_KEYS {
+            assert!(err.contains(key.name), "error must list '{}': {err}", key.name);
         }
         // Training-only keys are not serveable; single-letter expression
         // variables are a training-sweep feature.
@@ -715,10 +877,14 @@ mod tests {
         for r in &out.rows {
             assert_eq!(r.gpus, r.replicas * r.tensor);
             assert!(r.batch_cap >= 1 && r.batch_cap <= 8, "{r:?}");
-            assert!(r.p99_ms >= r.p50_ms && r.p50_ms > 0.0, "{r:?}");
-            assert!(r.tokens_per_s > 0.0, "{r:?}");
-            assert_eq!(r.total_tokens_per_s, r.tokens_per_s * r.replicas as f64);
+            assert!(r.p99_ms() >= r.p50_ms() && r.p50_ms() > 0.0, "{r:?}");
+            assert!(r.tokens_per_s() > 0.0, "{r:?}");
+            assert_eq!(r.total_tokens_per_s, r.tokens_per_s() * r.replicas as f64);
             assert!(r.kv_gb > 0.0 && r.prefill_ms > 0.0 && r.token_ms > 0.0, "{r:?}");
+            assert_eq!(r.accept, 1.0, "no draft block on this grid");
+            assert!(r.watts > 0.0, "{r:?}");
+            let tppw = r.total_tokens_per_s / r.watts;
+            assert_eq!(r.tokens_per_s_per_watt, tppw, "{r:?}");
         }
         // Expansion order: first axis (machine) outermost.
         assert_eq!(out.rows[0].machine, "juwels_booster");
@@ -749,10 +915,27 @@ mod tests {
         let csv = out.to_csv();
         assert_eq!(csv.lines().count(), 9);
         assert!(csv.starts_with("scenario,machine,"));
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains(QueueStats::CSV_COLUMNS), "{header}");
+        assert!(header.ends_with("tokens_per_s_per_watt"), "{header}");
         let j = out.to_json(&frontier_axes());
         assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "serve");
         assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 8);
         assert_eq!(j.req("frontier").unwrap().as_arr().unwrap().len(), 2);
+
+        // The cost-aware frontier also fields one winner per machine,
+        // ranked by tokens/s/W instead of raw tokens/s.
+        let cf = serve_cost_frontier(&out.rows);
+        let cf_machines: Vec<&str> = cf.iter().map(|&i| out.rows[i].machine.as_str()).collect();
+        assert_eq!(cf_machines, vec!["juwels_booster", "isambard_ai"]);
+        for &i in &cf {
+            let r = &out.rows[i];
+            assert!(r.slo_ok);
+            for other in out.rows.iter().filter(|o| o.machine == r.machine && o.slo_ok) {
+                assert!(r.tokens_per_s_per_watt >= other.tokens_per_s_per_watt);
+            }
+        }
+        assert_eq!(j.req("cost_frontier").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]
@@ -777,8 +960,11 @@ mod tests {
         for r in &out.rows {
             let back = ServeRow::from_json(&r.to_json()).unwrap();
             assert_eq!(back.to_json().to_string(), r.to_json().to_string());
-            assert_eq!(back.p99_ms, r.p99_ms);
+            assert_eq!(back.stats, r.stats);
+            assert_eq!(back.p99_ms(), r.p99_ms());
             assert_eq!(back.slo_ok, r.slo_ok);
+            assert_eq!(back.watts, r.watts);
+            assert_eq!(back.tokens_per_s_per_watt, r.tokens_per_s_per_watt);
             assert_eq!(back.assignment, r.assignment);
         }
     }
@@ -907,5 +1093,148 @@ mod tests {
         assert!(dynamic.total_queries > 0, "pipeline must record the warm multiset");
         assert!(dynamic.dedup_ratio() <= 1.0 && dynamic.dedup_ratio() > 0.0);
         assert_eq!(seq.total_queries, 0, "the oracle path records nothing");
+    }
+
+    fn machines_axes(extra: &[String]) -> Vec<ParamAxis> {
+        let mut xs = s(&["machine=juwels_booster", "isambard_ai"]);
+        xs.extend(extra.iter().cloned());
+        parse_serve_params(&xs).unwrap()
+    }
+
+    #[test]
+    fn accept_one_with_a_free_draft_is_the_csv_identity() {
+        // Tentpole degeneracy, both machine presets: an `accept=1.0`
+        // axis rides the free-draft defaults, `auto_name` carries no
+        // accept suffix, and the accept column prints `1` either way —
+        // the whole CSV must be byte-identical to the non-speculative
+        // control.
+        let control = run_serve(&base(), &machines_axes(&[])).unwrap();
+        let spec = run_serve(&base(), &machines_axes(&["accept=1.0".into()])).unwrap();
+        assert_eq!(spec.to_csv(), control.to_csv(), "accept=1.0 must be the identity");
+
+        // A lossy draft rejects tokens: same scenarios, strictly less
+        // throughput, and the accept column records the axis value.
+        let lossy = run_serve(&base(), &machines_axes(&["accept=0.6".into()])).unwrap();
+        assert_eq!(lossy.rows.len(), control.rows.len());
+        for (l, c) in lossy.rows.iter().zip(control.rows.iter()) {
+            assert_eq!(l.scenario, c.scenario);
+            assert_eq!(l.accept, 0.6);
+            assert!(
+                l.tokens_per_s() < c.tokens_per_s(),
+                "{}: lossy {} must fall below control {}",
+                l.scenario,
+                l.tokens_per_s(),
+                c.tokens_per_s()
+            );
+        }
+    }
+
+    #[test]
+    fn a_recorded_poisson_trace_sweeps_to_a_byte_identical_csv() {
+        // Trace degeneracy at the sweep surface: record the exact seeded
+        // Poisson stream price() would generate (seed 7, the defaults'
+        // rate/lengths), point a `trace=` axis at the file, and the CSV
+        // must match the Poisson control byte for byte on both machines.
+        let path = tmp("trace.jsonl");
+        let d = ServingSpec::defaults();
+        let trace = Trace::from_poisson(
+            &mut Rng::seed_from(7),
+            d.sim_requests,
+            d.requests_per_s,
+            d.prompt_tokens,
+            d.decode_tokens,
+        );
+        std::fs::write(&path, trace.to_jsonl()).unwrap();
+
+        let control = run_serve(&base(), &machines_axes(&[])).unwrap();
+        let replayed =
+            run_serve(&base(), &machines_axes(&[format!("trace={}", path.display())])).unwrap();
+        assert_eq!(replayed.to_csv(), control.to_csv(), "trace replay must be the identity");
+        let _ = std::fs::remove_file(&path);
+
+        // An unreadable trace is that point's problem, not the grid's.
+        let missing = run_serve(
+            &base(),
+            &machines_axes(&[format!("trace={}", tmp("missing.jsonl").display())]),
+        )
+        .unwrap();
+        assert!(missing.rows.is_empty());
+        assert_eq!(missing.infeasible.len(), 2, "{:?}", missing.infeasible);
+        for (_, reason) in &missing.infeasible {
+            assert!(reason.contains("unreadable"), "{reason}");
+        }
+    }
+
+    #[test]
+    fn paged_block_eq_seq_len_matches_the_unpaged_rows_field_wise() {
+        // Paged-KV degeneracy: one block = one request's closed-form
+        // reservation, so every queue statistic except the (differently
+        // normalized) occupancy matches the unpaged control bit for bit.
+        let control = run_serve(&base(), &machines_axes(&[])).unwrap();
+        let block = ServingSpec::defaults().seq_len();
+        let paged = run_serve(&base(), &machines_axes(&[format!("block={block}")])).unwrap();
+        assert_eq!(paged.rows.len(), control.rows.len());
+        for (p, c) in paged.rows.iter().zip(control.rows.iter()) {
+            assert_eq!(p.scenario, c.scenario);
+            assert_eq!(p.batch_cap, c.batch_cap);
+            assert_eq!(p.stats.p50, c.stats.p50, "{}", p.scenario);
+            assert_eq!(p.stats.p99, c.stats.p99, "{}", p.scenario);
+            assert_eq!(p.stats.tokens_per_s, c.stats.tokens_per_s, "{}", p.scenario);
+            assert_eq!(p.stats.mean_batch, c.stats.mean_batch, "{}", p.scenario);
+            assert_eq!(p.stats.completed, c.stats.completed, "{}", p.scenario);
+            assert_eq!(p.stats.preempted, 0, "{}", p.scenario);
+            assert_eq!(p.total_tokens_per_s, c.total_tokens_per_s, "{}", p.scenario);
+        }
+    }
+
+    #[test]
+    fn realism_axes_parse_apply_and_journal_through_the_registry() {
+        // Every new axis lands on its ServingSpec field through the key
+        // table, and a journaled speculative + heavy-tail grid still
+        // resumes to a byte-identical CSV.
+        let mut spec = base();
+        for kv in [
+            "accept=0.8",
+            "block=64",
+            "chunk=128",
+            "prefix=256",
+            "dist=zipf",
+            "trace=/tmp/t.jsonl",
+        ] {
+            let (k, v) = kv.split_once('=').unwrap();
+            apply_serve_param(&mut spec, k, v).unwrap();
+        }
+        let sv = spec.serving.as_ref().unwrap();
+        assert_eq!(sv.draft.as_ref().unwrap().acceptance, 0.8);
+        assert!(sv.draft.as_ref().unwrap().is_free(), "axis rides the free draft");
+        assert_eq!(sv.kv_block_tokens, 64);
+        assert_eq!(sv.chunk_tokens, 128);
+        assert_eq!(sv.prefix_tokens, 256);
+        assert_eq!(sv.length_dist, "zipf");
+        assert_eq!(sv.trace.as_deref(), Some("/tmp/t.jsonl"));
+
+        // Bad values name the key and the value.
+        let err = apply_serve_param(&mut spec, "accept", "often").unwrap_err().to_string();
+        assert!(err.contains("serve-sweep key 'accept'") && err.contains("'often'"), "{err}");
+        // Serving keys demand a serving block.
+        let mut train = presets::default_scenario("juwels_booster").unwrap();
+        let err = apply_serve_param(&mut train, "accept", "0.9").unwrap_err().to_string();
+        assert!(err.contains("needs a base scenario with a serving block"), "{err}");
+
+        let path = tmp("spec_resume.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let axes = machines_axes(&["accept=0.7".into(), "1.0".into()]);
+        let full = run_serve(&base(), &axes).unwrap();
+        let opts = SweepOptions {
+            sequential: true,
+            interrupt_after: Some(2),
+            ..SweepOptions::default()
+        };
+        let partial = run_serve_journaled(&base(), &axes, &path, false, &opts).unwrap();
+        assert!(partial.interrupted);
+        let resumed =
+            run_serve_journaled(&base(), &axes, &path, true, &SweepOptions::default()).unwrap();
+        assert_eq!(resumed.to_csv(), full.to_csv(), "speculative rows must journal/resume");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,267 @@
+//! Replayable request traces — arrival/length streams for the queue sim.
+//!
+//! A trace is a JSON-lines file, one request per line:
+//!
+//! ```text
+//! {"arrival_s":0.031,"prompt_tokens":512,"decode_tokens":64}
+//! {"arrival_s":0.207,"prompt_tokens":2048,"decode_tokens":128}
+//! ```
+//!
+//! Traces make serving experiments *replayable*: a production arrival
+//! log (or a recorded synthetic stream) drives the continuous-batching
+//! queue instead of the seeded-Poisson default, so two sweeps — or a
+//! sweep and a resume — see byte-identical load. The contract mirrors
+//! the sweep journal's:
+//!
+//! * floats are written with Rust's shortest-round-trip `Display` and
+//!   read back through `str::parse::<f64>` — **bit-exact** record/replay,
+//!   pinned by [`Trace::from_poisson`]'s property test: a recorded
+//!   Poisson stream replayed through trace mode reproduces the
+//!   seeded-Poisson queue stats to the bit;
+//! * a torn **final** line (the writer died mid-append) is tolerated and
+//!   dropped, exactly like the journal's torn tail; a malformed line
+//!   anywhere else is real corruption and fails the parse naming the
+//!   line;
+//! * arrivals must be non-decreasing (a queue cannot admit backwards in
+//!   time) — violations name the offending line — and an empty trace is
+//!   rejected rather than simulating nothing.
+
+use std::path::Path;
+
+use crate::util::error::{BoosterError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One request in a trace: when it arrives and how long it is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival time, seconds from the start of the trace.
+    pub arrival_s: f64,
+    /// Prompt length to prefill.
+    pub prompt_tokens: usize,
+    /// Tokens to decode before the request completes.
+    pub decode_tokens: usize,
+}
+
+/// A parsed, validated request trace (non-empty, arrivals sorted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// The requests, in arrival order.
+    pub records: Vec<TraceRecord>,
+}
+
+fn field_usize(j: &Json, key: &str, origin: &str, lineno: usize) -> Result<usize> {
+    j.req(key)
+        .ok()
+        .and_then(|v| v.as_usize())
+        .filter(|&v| v > 0)
+        .ok_or_else(|| {
+            BoosterError::Config(format!(
+                "trace {origin} line {lineno}: '{key}' must be a positive integer"
+            ))
+        })
+}
+
+impl Trace {
+    /// Parse trace text. `origin` names the source (a path, or a label
+    /// like `<inline>`) in error messages. A torn final line is dropped;
+    /// see the module docs for the full contract.
+    pub fn parse(text: &str, origin: &str) -> Result<Trace> {
+        let lines: Vec<&str> = text.lines().collect();
+        let last = lines.len().saturating_sub(1);
+        let mut records: Vec<TraceRecord> = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            let lineno = i + 1;
+            let parsed = Json::parse(line).ok().and_then(|j| {
+                let arrival_s = j.get("arrival_s")?.as_f64()?;
+                Some((j, arrival_s))
+            });
+            let (j, arrival_s) = match parsed {
+                Some(p) => p,
+                // Only the final line can be torn by a crash mid-append.
+                None if i == last => break,
+                None => {
+                    return Err(BoosterError::Config(format!(
+                        "trace {origin} line {lineno} is malformed (not a torn tail \
+                         — the trace is corrupt)"
+                    )))
+                }
+            };
+            if !arrival_s.is_finite() || arrival_s < 0.0 {
+                return Err(BoosterError::Config(format!(
+                    "trace {origin} line {lineno}: arrival_s {arrival_s} must be \
+                     finite and non-negative"
+                )));
+            }
+            if let Some(prev) = records.last() {
+                if arrival_s < prev.arrival_s {
+                    return Err(BoosterError::Config(format!(
+                        "trace {origin} line {lineno}: arrival_s {arrival_s} precedes \
+                         the previous arrival {} — arrivals must be sorted",
+                        prev.arrival_s
+                    )));
+                }
+            }
+            records.push(TraceRecord {
+                arrival_s,
+                prompt_tokens: field_usize(&j, "prompt_tokens", origin, lineno)?,
+                decode_tokens: field_usize(&j, "decode_tokens", origin, lineno)?,
+            });
+        }
+        if records.is_empty() {
+            return Err(BoosterError::Config(format!(
+                "trace {origin} is empty — a queue needs at least one request"
+            )));
+        }
+        Ok(Trace { records })
+    }
+
+    /// Read and parse a trace file.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            BoosterError::Config(format!("trace {} is unreadable: {e}", path.display()))
+        })?;
+        Self::parse(&text, &path.display().to_string())
+    }
+
+    /// Serialize as JSON lines. Floats use Rust's `{}` Display — the
+    /// shortest string that parses back to the identical bits — so
+    /// `parse(to_jsonl(t))` reproduces `t` exactly.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&format!(
+                "{{\"arrival_s\":{},\"prompt_tokens\":{},\"decode_tokens\":{}}}\n",
+                r.arrival_s, r.prompt_tokens, r.decode_tokens
+            ));
+        }
+        out
+    }
+
+    /// Record the queue sim's seeded-Poisson arrival stream as a trace:
+    /// `n` cumulative `Exp(rate)` gaps drawn in exactly the order
+    /// [`crate::serve::queue`] draws them, with fixed lengths. Replaying
+    /// the result through trace mode reproduces the Poisson run's stats
+    /// bit-for-bit (the degeneracy property test).
+    pub fn from_poisson(
+        rng: &mut Rng,
+        n: usize,
+        rate: f64,
+        prompt_tokens: usize,
+        decode_tokens: usize,
+    ) -> Trace {
+        let mut t = 0.0f64;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.exponential(rate);
+            records.push(TraceRecord {
+                arrival_s: t,
+                prompt_tokens,
+                decode_tokens,
+            });
+        }
+        Trace { records }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival_s: f64, prompt: usize, decode: usize) -> TraceRecord {
+        TraceRecord {
+            arrival_s,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_every_arrival_bit() {
+        // Awkward floats — accumulated sums, thirds, raw rng output —
+        // must survive serialize → parse with identical bits.
+        let mut rng = Rng::seed_from(41);
+        let mut t = 0.0f64;
+        let records: Vec<TraceRecord> = (0..64)
+            .map(|i| {
+                t += rng.exponential(3.0) + 1.0 / 3.0;
+                rec(t, 512 + i, 64)
+            })
+            .collect();
+        let trace = Trace { records };
+        let back = Trace::parse(&trace.to_jsonl(), "<inline>").unwrap();
+        assert_eq!(back.records.len(), trace.records.len());
+        for (a, b) in trace.records.iter().zip(&back.records) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "{a:?} vs {b:?}");
+            assert_eq!((a.prompt_tokens, a.decode_tokens), (b.prompt_tokens, b.decode_tokens));
+        }
+    }
+
+    #[test]
+    fn a_torn_final_line_is_dropped_like_the_journal_tail() {
+        let full = Trace {
+            records: vec![rec(0.5, 512, 64), rec(1.25, 512, 64)],
+        };
+        let text = full.to_jsonl();
+        // Tear the last line mid-JSON, as a crash mid-append would.
+        let torn = &text[..text.len() - 20];
+        let trace = Trace::parse(torn, "<inline>").unwrap();
+        assert_eq!(trace.records, vec![rec(0.5, 512, 64)], "intact prefix survives");
+    }
+
+    #[test]
+    fn midfile_corruption_fails_naming_the_line() {
+        let text = "{\"arrival_s\":0.5,\"prompt_tokens\":512,\"decode_tokens\":64}\n\
+                    { not json\n\
+                    {\"arrival_s\":1.5,\"prompt_tokens\":512,\"decode_tokens\":64}\n";
+        let err = Trace::parse(text, "<inline>").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn unsorted_arrivals_are_rejected_naming_the_line() {
+        let trace = Trace {
+            records: vec![rec(2.0, 512, 64), rec(3.0, 512, 64), rec(1.0, 512, 64)],
+        };
+        let err = Trace::parse(&trace.to_jsonl(), "<inline>").unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains("sorted"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_traces_are_rejected() {
+        let err = Trace::parse("", "<inline>").unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+        // A single torn line leaves nothing — still empty.
+        let err = Trace::parse("{\"arrival_s\":0.", "<inline>").unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+        // Zero-length requests cannot be simulated.
+        let err = Trace::parse(
+            "{\"arrival_s\":0.5,\"prompt_tokens\":0,\"decode_tokens\":64}\nx\n",
+            "<inline>",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("prompt_tokens") && err.contains("positive"), "{err}");
+        let err = Trace::parse(
+            "{\"arrival_s\":0.5,\"prompt_tokens\":8,\"decode_tokens\":-3}\nx\n",
+            "<inline>",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("decode_tokens"), "{err}");
+    }
+
+    #[test]
+    fn from_poisson_reproduces_the_queue_draw_order() {
+        // Must match the queue sim's arrival loop exactly: cumulative
+        // exponential gaps, drawn first, nothing else consumed.
+        let trace = Trace::from_poisson(&mut Rng::seed_from(7), 32, 4.0, 512, 64);
+        let mut rng = Rng::seed_from(7);
+        let mut t = 0.0f64;
+        for (i, r) in trace.records.iter().enumerate() {
+            t += rng.exponential(4.0);
+            assert_eq!(r.arrival_s.to_bits(), t.to_bits(), "record {i}");
+            assert_eq!((r.prompt_tokens, r.decode_tokens), (512, 64));
+        }
+    }
+}

@@ -51,7 +51,9 @@ use crate::collectives::{CollectiveModel, CurveRecord, COST_CACHE_SCHEMA_VERSION
 use crate::hw::power::PowerModel;
 use crate::scenario::journal::{Journal, JournalRow};
 use crate::scenario::spec::ScenarioSpec;
+use crate::scenario::sweep::ParamAxis;
 use crate::topology::Topology;
+use crate::util::cli::Flags;
 use crate::util::error::{BoosterError, Result};
 use crate::util::json::Json;
 
@@ -200,6 +202,283 @@ pub struct SweepOptions {
 /// `None`: fsync every 32 rows (or 100 ms), amortizing the per-row fsync
 /// tax ~32× on large grids while bounding kill-window loss to one batch.
 pub const AUTO_JOURNAL_BATCH: usize = 32;
+
+/// One sweepable scenario field in a family's key registry: the `--param`
+/// key name, a short kind tag for help text, and the function writing a
+/// parsed value into the spec. Each sweep family declares one
+/// `&[ParamKey]` table ([`crate::scenario::sweep::SWEEP_PARAM_KEYS`],
+/// [`crate::serve::sweep::SERVE_PARAM_KEYS`]); the `--param` parser, the
+/// apply step and every "sweepable keys:" listing render from that one
+/// table, so adding an axis is one table row instead of three hand-synced
+/// match arms and key lists.
+pub struct ParamKey {
+    /// CLI key (`--param name=v1,v2`), lowercase.
+    pub name: &'static str,
+    /// Human kind tag for docs/help (`preset`, `int`, `float`, `string`,
+    /// `path`).
+    pub kind: &'static str,
+    /// Apply one value to a spec. Named `fn` items (not closures) so the
+    /// tables are plain statics.
+    pub apply: fn(&mut ScenarioSpec, &str) -> Result<()>,
+}
+
+/// The comma-joined key names of a registry — the `(sweepable: ...)`
+/// error tail and the CLI `sweepable keys:` listings.
+pub fn render_param_keys(keys: &[ParamKey]) -> String {
+    keys.iter().map(|k| k.name).collect::<Vec<_>>().join(", ")
+}
+
+/// Group comma-split `--param` entries into axes against a key registry.
+/// The flag parser hands `["nodes=48", "96", "precision=bf16"]` for
+/// `--param nodes=48,96 --param precision=bf16`: an entry containing `=`
+/// opens a new axis, bare entries extend the previous one. Unknown keys
+/// are rejected **here, up front** — before any spec is built or
+/// simulation run — with the full registry in the error, so a typo'd
+/// axis can never flow into a half-priced grid. `noun` names the family
+/// in errors (`sweep` / `serve-sweep`); `allow_vars` additionally admits
+/// single-letter expression variables (a training-sweep feature).
+pub fn parse_params_table(
+    noun: &str,
+    keys: &[ParamKey],
+    allow_vars: bool,
+    entries: &[String],
+) -> Result<Vec<ParamAxis>> {
+    let mut axes: Vec<ParamAxis> = Vec::new();
+    for e in entries {
+        match e.split_once('=') {
+            Some((key, first)) => {
+                let key = key.trim().to_ascii_lowercase();
+                let known = keys.iter().any(|k| k.name == key)
+                    || (allow_vars && crate::scenario::sweep::is_var_key(&key));
+                if !known {
+                    let hint = if allow_vars {
+                        "; single-letter keys like n=1,2 define expression variables"
+                    } else {
+                        ""
+                    };
+                    return Err(BoosterError::Config(format!(
+                        "unknown {noun} key '{key}' (sweepable: {}{hint})",
+                        render_param_keys(keys)
+                    )));
+                }
+                if axes.iter().any(|a| a.key == key) {
+                    return Err(BoosterError::Config(format!("duplicate {noun} key '{key}'")));
+                }
+                axes.push(ParamAxis {
+                    key,
+                    values: vec![first.trim().to_string()],
+                });
+            }
+            None => match axes.last_mut() {
+                Some(axis) => axis.values.push(e.trim().to_string()),
+                None => {
+                    return Err(BoosterError::Config(format!(
+                        "{noun} value '{e}' has no key (use --param key=v1,v2)"
+                    )))
+                }
+            },
+        }
+    }
+    for a in &axes {
+        if a.values.iter().any(|v| v.is_empty()) {
+            return Err(BoosterError::Config(format!(
+                "{noun} key '{}' has an empty value",
+                a.key
+            )));
+        }
+    }
+    Ok(axes)
+}
+
+/// Apply one `key=value` assignment through a key registry.
+pub fn apply_param_table(
+    noun: &str,
+    keys: &[ParamKey],
+    spec: &mut ScenarioSpec,
+    key: &str,
+    value: &str,
+) -> Result<()> {
+    match keys.iter().find(|k| k.name == key) {
+        Some(k) => (k.apply)(spec, value),
+        None => Err(BoosterError::Config(format!(
+            "unknown {noun} key '{key}' (sweepable: {})",
+            render_param_keys(keys)
+        ))),
+    }
+}
+
+/// Resolve `--scheduler` for the sweep drivers: `dynamic` (the
+/// work-stealing default) or `static` (the chunked dispatcher kept for
+/// differential byte-identity checks). Returns `static_scheduler`.
+pub fn parse_scheduler(s: &str) -> Result<bool> {
+    match s {
+        "dynamic" => Ok(false),
+        "static" => Ok(true),
+        other => Err(BoosterError::Config(format!(
+            "unknown --scheduler '{other}' (expected dynamic|static)"
+        ))),
+    }
+}
+
+/// Fault injection for the CI failed-path fixtures: `BOOSTER_SWEEP_FAULT`
+/// holds a grid point index whose evaluation panics on every attempt, so
+/// the sweep records a `failed` row for it (after the bounded retry)
+/// instead of dying. Shared verbatim by every sweep driver.
+pub fn fault_from_env() -> Result<Option<FaultHook>> {
+    match std::env::var("BOOSTER_SWEEP_FAULT") {
+        Ok(v) => {
+            let idx: usize = v.trim().parse().map_err(|_| {
+                BoosterError::Config(format!(
+                    "BOOSTER_SWEEP_FAULT must be a grid point index, got '{v}'"
+                ))
+            })?;
+            Ok(Some(Arc::new(move |i, _attempt| i == idx)))
+        }
+        Err(_) => Ok(None),
+    }
+}
+
+/// Journal wiring parsed from the CLI
+/// (`--journal`/`--resume`/`--no-journal`).
+#[derive(Debug, Clone)]
+pub struct JournalCli {
+    /// Row-checkpoint journal path.
+    pub path: PathBuf,
+    /// Resume from the journal, skipping completed points.
+    pub resume: bool,
+    /// Disable row checkpointing entirely.
+    pub no_journal: bool,
+}
+
+/// The engine flag surface shared by every sweep driver — one
+/// declaration and one parse for the worker/scheduler/cache/journal
+/// flags, so `booster sweep`, `booster serve-sweep` and
+/// `booster crossover` can never skew on names, defaults or help text.
+/// Drivers call [`EngineCliArgs::declare`] (full surface) or
+/// [`EngineCliArgs::declare_eval`] (no journal — the crossover subset)
+/// while building their [`Flags`], then the matching `from_*` parser,
+/// then [`EngineCliArgs::sweep_options`].
+#[derive(Debug, Clone)]
+pub struct EngineCliArgs {
+    /// Evaluation workers per machine group (`0` = auto).
+    pub workers: usize,
+    /// Warm-simulation workers (`0` = match `workers`).
+    pub warm_workers: usize,
+    /// Use the static chunked scheduler instead of work stealing.
+    pub static_scheduler: bool,
+    /// Persistent cost-cache path (`None` = disabled).
+    pub cache_file: Option<PathBuf>,
+    /// Surrogate-fit acceptance bound override.
+    pub surrogate_bound: Option<f64>,
+    /// Journal group-commit batch (`None` = auto).
+    pub journal_batch: Option<usize>,
+    /// Cancel after this many evaluated points (tests/CI).
+    pub interrupt_after: Option<usize>,
+    /// Print a progress line to stderr while sweeping.
+    pub progress: bool,
+    /// Journal wiring (`None` on the eval-only surface).
+    pub journal: Option<JournalCli>,
+}
+
+impl EngineCliArgs {
+    /// Declare the evaluation-only engine flags (no journal group) —
+    /// the `booster crossover` subset.
+    pub fn declare_eval(spec: Flags) -> Flags {
+        spec.str_flag(
+            "cache-file",
+            "results/cost_cache.json",
+            "persistent cost-cache path (cross-process warm starts)",
+        )
+        .bool_flag("no-cache-file", false, "disable the persistent cost cache")
+        .float_flag(
+            "surrogate-bound",
+            -1.0,
+            "max α–β surrogate rel. error before interpolation fallback (negative = default 1%)",
+        )
+        .int_flag("workers", 0, "evaluation workers per machine group (0 = auto)")
+        .int_flag("warm-workers", 0, "warm-simulation workers (0 = match --workers)")
+        .str_flag("scheduler", "dynamic", "point scheduler (dynamic = work stealing | static)")
+        .bool_flag("progress", false, "print done/total, points/s, ETA to stderr while sweeping")
+    }
+
+    /// Declare the full engine flag surface: the evaluation flags plus
+    /// the journal/resume group. `journal_default` is the per-command
+    /// journal path (`results/sweep.journal`, `results/serve.journal`).
+    pub fn declare(spec: Flags, journal_default: &str) -> Flags {
+        Self::declare_eval(spec)
+            .str_flag("journal", journal_default, "row-checkpoint journal path")
+            .bool_flag("resume", false, "resume from the journal, skipping completed points")
+            .bool_flag("no-journal", false, "disable row checkpointing")
+            .int_flag(
+                "journal-batch",
+                0,
+                "journal group-commit batch: fsync every N rows or 100 ms (0 = auto)",
+            )
+            .int_flag(
+                "interrupt-after",
+                0,
+                "cancel after this many evaluated points (deterministic Ctrl-C for tests; 0 = off)",
+            )
+    }
+
+    /// Parse the [`EngineCliArgs::declare_eval`] subset.
+    pub fn from_eval_flags(flags: &Flags) -> Result<EngineCliArgs> {
+        let bound = flags.get_f64("surrogate-bound");
+        Ok(EngineCliArgs {
+            workers: flags.get_usize("workers"),
+            warm_workers: flags.get_usize("warm-workers"),
+            static_scheduler: parse_scheduler(flags.get_str("scheduler"))?,
+            cache_file: (!flags.get_bool("no-cache-file"))
+                .then(|| PathBuf::from(flags.get_str("cache-file"))),
+            surrogate_bound: (bound >= 0.0).then_some(bound),
+            journal_batch: None,
+            interrupt_after: None,
+            progress: flags.get_bool("progress"),
+            journal: None,
+        })
+    }
+
+    /// Parse the full [`EngineCliArgs::declare`] surface, including the
+    /// resume/no-journal contradiction check.
+    pub fn from_flags(flags: &Flags) -> Result<EngineCliArgs> {
+        let mut args = Self::from_eval_flags(flags)?;
+        let resume = flags.get_bool("resume");
+        let no_journal = flags.get_bool("no-journal");
+        if resume && no_journal {
+            return Err(BoosterError::Config(
+                "--resume reads the journal; it cannot be combined with --no-journal".into(),
+            ));
+        }
+        let journal_batch = flags.get_usize("journal-batch");
+        let interrupt_after = flags.get_usize("interrupt-after");
+        args.journal_batch = (journal_batch > 0).then_some(journal_batch);
+        args.interrupt_after = (interrupt_after > 0).then_some(interrupt_after);
+        args.journal = Some(JournalCli {
+            path: PathBuf::from(flags.get_str("journal")),
+            resume,
+            no_journal,
+        });
+        Ok(args)
+    }
+
+    /// Assemble the engine [`SweepOptions`] (callers install the SIGINT
+    /// handler via [`sigint::install`]; the cancel token observes it).
+    pub fn sweep_options(&self, fault: Option<FaultHook>) -> SweepOptions {
+        SweepOptions {
+            workers: self.workers,
+            sequential: false,
+            cancel: Cancel::with_sigint(),
+            interrupt_after: self.interrupt_after,
+            fault,
+            cache_file: self.cache_file.clone(),
+            surrogate_bound: self.surrogate_bound,
+            warm_workers: self.warm_workers,
+            journal_batch: self.journal_batch,
+            static_scheduler: self.static_scheduler,
+            progress: self.progress,
+        }
+    }
+}
 
 /// The recorded fate of one grid point — what the journal persists and
 /// what a resumed run restores. Generic over the row type so the
@@ -1385,5 +1664,81 @@ mod tests {
         assert!(load_cache_file(&path).machines.is_empty());
         assert!(load_cache_file(&dir.join("missing.json")).machines.is_empty());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn engine_cli_args_parse_the_shared_flag_surface() {
+        let spec = EngineCliArgs::declare(Flags::new(), "results/x.journal");
+        let flags = spec
+            .clone()
+            .parse(&args(&[
+                "--workers",
+                "4",
+                "--scheduler",
+                "static",
+                "--surrogate-bound",
+                "0.02",
+                "--journal-batch",
+                "8",
+                "--interrupt-after",
+                "3",
+                "--no-cache-file",
+                "--resume",
+            ]))
+            .unwrap();
+        let a = EngineCliArgs::from_flags(&flags).unwrap();
+        assert_eq!(a.workers, 4);
+        assert!(a.static_scheduler);
+        assert_eq!(a.surrogate_bound, Some(0.02));
+        assert_eq!(a.journal_batch, Some(8));
+        assert_eq!(a.interrupt_after, Some(3));
+        assert!(a.cache_file.is_none(), "--no-cache-file disables persistence");
+        let journal = a.journal.expect("full surface parses journal wiring");
+        assert!(journal.resume && !journal.no_journal);
+        assert_eq!(journal.path, PathBuf::from("results/x.journal"));
+        let opts = a.sweep_options(None);
+        assert_eq!(opts.workers, 4);
+        assert!(opts.static_scheduler && !opts.sequential);
+
+        // Defaults: auto everything, journal on, persistent cache on.
+        let a = EngineCliArgs::from_flags(&spec.clone().parse(&[]).unwrap()).unwrap();
+        assert_eq!((a.workers, a.warm_workers), (0, 0));
+        assert_eq!(a.cache_file, Some(PathBuf::from("results/cost_cache.json")));
+        assert!(a.surrogate_bound.is_none() && a.journal_batch.is_none());
+        assert!(!a.journal.unwrap().no_journal);
+
+        // The resume/no-journal contradiction is caught at parse time.
+        let flags = spec.clone().parse(&args(&["--resume", "--no-journal"])).unwrap();
+        let err = EngineCliArgs::from_flags(&flags).unwrap_err().to_string();
+        assert!(err.contains("--no-journal"), "{err}");
+
+        // A bad scheduler fails with the expected wording.
+        let flags = spec.parse(&args(&["--scheduler", "chaotic"])).unwrap();
+        let err = EngineCliArgs::from_flags(&flags).unwrap_err().to_string();
+        assert!(err.contains("unknown --scheduler 'chaotic'"), "{err}");
+
+        // The eval-only surface has no journal group at all.
+        let eval = EngineCliArgs::declare_eval(Flags::new());
+        let a = EngineCliArgs::from_eval_flags(&eval.parse(&[]).unwrap()).unwrap();
+        assert!(a.journal.is_none() && a.interrupt_after.is_none());
+    }
+
+    #[test]
+    fn fault_from_env_requires_an_index() {
+        // The env var itself is process-global, so only exercise the
+        // pure parse paths through a scoped set/remove.
+        std::env::remove_var("BOOSTER_SWEEP_FAULT");
+        assert!(fault_from_env().unwrap().is_none());
+        std::env::set_var("BOOSTER_SWEEP_FAULT", "2");
+        let hook = fault_from_env().unwrap().expect("index parses");
+        assert!(hook(2, 0) && !hook(1, 0));
+        std::env::set_var("BOOSTER_SWEEP_FAULT", "two");
+        let err = fault_from_env().unwrap_err().to_string();
+        assert!(err.contains("grid point index"), "{err}");
+        std::env::remove_var("BOOSTER_SWEEP_FAULT");
     }
 }
